@@ -1,0 +1,341 @@
+"""AOT driver: lower the L2 model (with L1 Pallas kernels) to HLO text.
+
+Run once at build time (`make artifacts`); rust loads the outputs via
+PJRT and python never appears on the request path again.
+
+Interchange format is HLO *text*, not `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (to --out-dir, default ../artifacts):
+  denoiser_h{h}.hlo.txt   one per patch height h in MODEL.patch_heights
+  ddim_update.hlo.txt     full-latent DDIM step (Pallas kernel)
+  features.hlo.txt        random-feature extractor for LPIPS/FID proxy
+  params.bin              flat f32 denoiser weights (seeded)
+  manifest.json           the ABI: shapes, packing order, schedule params
+  golden/*.json           cross-layer golden vectors for cargo tests
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import features, model, pcg, schedule
+from .config import MODEL, PARAMS_SEED, SCHEDULE
+from .kernels import ddim as ddim_k
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True; the
+    rust side unwraps with to_tuple{1,2}())."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default elides big literals as
+    # "{...}", which the rust-side HLO parser silently reads as zeros —
+    # the feature net's conv weights are baked as constants and must
+    # survive the text round-trip.
+    text = comp.as_hlo_text(True)
+    assert "{...}" not in text, "elided constants would round-trip as zeros"
+    return text
+
+
+def _write(path: str, text: str) -> dict:
+    with open(path, "w") as f:
+        f.write(text)
+    digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+    print(f"  wrote {path} ({len(text)} bytes, sha256:{digest})")
+    return {"bytes": len(text), "sha256_16": digest}
+
+
+def lower_denoiser(h: int):
+    cfg = MODEL
+    t_own = cfg.tokens_for_rows(h)
+    sig = dict(
+        inputs=[
+            {"name": "params", "shape": [model.param_count(cfg)], "dtype": "f32"},
+            {"name": "x_patch", "shape": [h, cfg.latent_w, cfg.latent_c], "dtype": "f32"},
+            {"name": "kv_stale", "shape": [cfg.layers, cfg.tokens_full, 2 * cfg.dim], "dtype": "f32"},
+            {"name": "row_off", "shape": [], "dtype": "i32"},
+            {"name": "t", "shape": [], "dtype": "f32"},
+            {"name": "cond", "shape": [cfg.dim], "dtype": "f32"},
+        ],
+        outputs=[
+            {"name": "eps_patch", "shape": [h, cfg.latent_w, cfg.latent_c], "dtype": "f32"},
+            {"name": "kv_fresh", "shape": [cfg.layers, t_own, 2 * cfg.dim], "dtype": "f32"},
+        ],
+    )
+    shapes = [
+        jax.ShapeDtypeStruct(tuple(i["shape"]), jnp.float32 if i["dtype"] == "f32" else jnp.int32)
+        for i in sig["inputs"]
+    ]
+    fn = lambda p, x, kv, ro, t, c: model.denoiser_patch(  # noqa: E731
+        p, x, kv, ro, t, c, MODEL, use_pallas=True
+    )
+    lowered = jax.jit(fn).lower(*shapes)
+    return to_hlo_text(lowered), sig
+
+
+def lower_ddim():
+    cfg = MODEL
+    shp = (cfg.latent_h, cfg.latent_w, cfg.latent_c)
+    sig = dict(
+        inputs=[
+            {"name": "x", "shape": list(shp), "dtype": "f32"},
+            {"name": "eps", "shape": list(shp), "dtype": "f32"},
+            {"name": "coef_x", "shape": [], "dtype": "f32"},
+            {"name": "coef_eps", "shape": [], "dtype": "f32"},
+        ],
+        outputs=[{"name": "x_next", "shape": list(shp), "dtype": "f32"}],
+    )
+    fn = lambda x, e, cx, ce: (ddim_k.ddim_update(x, e, cx, ce),)  # noqa: E731
+    xs = jax.ShapeDtypeStruct(shp, jnp.float32)
+    sc = jax.ShapeDtypeStruct((), jnp.float32)
+    lowered = jax.jit(fn).lower(xs, xs, sc, sc)
+    return to_hlo_text(lowered), sig
+
+
+def lower_features():
+    cfg = MODEL
+    shp = (cfg.latent_h, cfg.latent_w, cfg.latent_c)
+    sig = dict(
+        inputs=[{"name": "x", "shape": list(shp), "dtype": "f32"}],
+        outputs=[
+            {"name": f"f{i+1}", "shape": [c], "dtype": "f32"}
+            for i, c in enumerate(features.FEATURES.channels)
+        ],
+    )
+    lowered = jax.jit(features.extract).lower(
+        jax.ShapeDtypeStruct(shp, jnp.float32)
+    )
+    return to_hlo_text(lowered), sig
+
+
+# --------------------------------------------------------------------------
+# Golden vectors: computed with jax here, re-checked bit-close by cargo
+# tests against both the rust-native implementations and the loaded
+# artifacts. Inputs are all derived from seeded numpy so both sides can
+# regenerate them.
+# --------------------------------------------------------------------------
+
+def golden_schedule():
+    ab = schedule.alpha_bars()
+    sample_ts = [0, 1, 10, 100, 250, 500, 750, 998, 999]
+    fast = schedule.ddim_grid(100)
+    slow = schedule.stadi_slow_grid(fast, 4)
+    return {
+        "train_steps": SCHEDULE.train_steps,
+        "beta_start": SCHEDULE.beta_start,
+        "beta_end": SCHEDULE.beta_end,
+        "alpha_bar_samples": {str(t): float(ab[t]) for t in sample_ts},
+        "grid_m100": fast,
+        "grid_m50": schedule.ddim_grid(50),
+        "grid_slow_m100_w4": slow,
+        "coeffs_m100_first8": [
+            list(c) for c in schedule.grid_coefficients(fast)[:8]
+        ],
+        "coeffs_m100_last2": [
+            list(c) for c in schedule.grid_coefficients(fast)[-2:]
+        ],
+    }
+
+
+def golden_denoiser(params_flat):
+    # Inputs from the cross-language PCG stream (compile.pcg mirrors
+    # rust util::rng exactly), draw order: x, kv, cond.
+    cfg = MODEL
+    gen = pcg.NormalGen(1)
+    h = 8
+    x = gen.vec_f32(h * cfg.latent_w * cfg.latent_c).reshape(
+        h, cfg.latent_w, cfg.latent_c
+    )
+    kv = gen.vec_f32(cfg.layers * cfg.tokens_full * 2 * cfg.dim).reshape(
+        cfg.layers, cfg.tokens_full, 2 * cfg.dim
+    )
+    cond = gen.vec_f32(cfg.dim)
+    eps, kvf = model.denoiser_patch(
+        jnp.asarray(params_flat), jnp.asarray(x), jnp.asarray(kv),
+        8, 500.0, jnp.asarray(cond), cfg, use_pallas=True,
+    )
+    eps = np.asarray(eps)
+    kvf = np.asarray(kvf)
+    return {
+        "seed": 1,
+        "h": h,
+        "row_off": 8,
+        "t": 500.0,
+        "eps_first16": eps.reshape(-1)[:16].tolist(),
+        "eps_sum": float(eps.sum()),
+        "eps_abs_sum": float(np.abs(eps).sum()),
+        "kv_first16": kvf.reshape(-1)[:16].tolist(),
+        "kv_sum": float(kvf.sum()),
+    }
+
+
+def golden_trajectory(params_flat):
+    """Sequential (Origin) DDIM trajectory, M=6 steps on the full latent.
+
+    The rust integration test replays this with the h=32 artifact + the
+    rust-native DDIM update and must match each step.
+    """
+    cfg = MODEL
+    gen = pcg.NormalGen(11)
+    x = gen.vec_f32(cfg.latent_h * cfg.latent_w * cfg.latent_c).reshape(
+        cfg.latent_h, cfg.latent_w, cfg.latent_c
+    )
+    cond = gen.vec_f32(cfg.dim)
+    grid = schedule.ddim_grid(6)
+    coefs = schedule.grid_coefficients(grid)
+    pf = jnp.asarray(params_flat)
+    kv = jnp.zeros((cfg.layers, cfg.tokens_full, 2 * cfg.dim), jnp.float32)
+    xs = jnp.asarray(x)
+    steps = []
+    for (t, (cx, ce)) in zip(grid, coefs):
+        eps, kv = model.denoiser_patch(
+            pf, xs, kv, 0, float(t), jnp.asarray(cond), cfg, use_pallas=True
+        )
+        xs = cx * xs + ce * eps
+        arr = np.asarray(xs)
+        steps.append({
+            "t": t,
+            "coef_x": cx,
+            "coef_eps": ce,
+            "x_first8": arr.reshape(-1)[:8].tolist(),
+            "x_sum": float(arr.sum()),
+        })
+    return {"seed": 11, "grid": grid, "steps": steps}
+
+
+def golden_features():
+    cfg = MODEL
+    gen = pcg.NormalGen(13)
+    x = gen.vec_f32(cfg.latent_h * cfg.latent_w * cfg.latent_c).reshape(
+        cfg.latent_h, cfg.latent_w, cfg.latent_c
+    )
+    f1, f2, f3 = features.extract(jnp.asarray(x))
+    return {
+        "seed": 13,
+        "f1": np.asarray(f1).tolist(),
+        "f2": np.asarray(f2).tolist(),
+        "f3": np.asarray(f3).tolist(),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--heights", default=None,
+        help="comma-separated patch heights (default: all from config)",
+    )
+    ap.add_argument(
+        "--skip-hlo", action="store_true",
+        help="regenerate only params.bin + goldens + manifest, reusing "
+             "the existing HLO files (weights are runtime inputs, so "
+             "they do not affect the lowered programs)",
+    )
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    os.makedirs(os.path.join(out, "golden"), exist_ok=True)
+
+    cfg = MODEL
+    heights = (
+        [int(x) for x in args.heights.split(",")]
+        if args.heights
+        else list(cfg.patch_heights)
+    )
+
+    manifest = {
+        "version": 1,
+        "model": {
+            "latent_h": cfg.latent_h,
+            "latent_w": cfg.latent_w,
+            "latent_c": cfg.latent_c,
+            "patch": cfg.patch,
+            "dim": cfg.dim,
+            "heads": cfg.heads,
+            "layers": cfg.layers,
+            "mlp_ratio": cfg.mlp_ratio,
+            "temb_dim": cfg.temb_dim,
+            "row_granularity": cfg.row_granularity,
+            "tokens_full": cfg.tokens_full,
+            "param_count": model.param_count(cfg),
+            "params_seed": PARAMS_SEED,
+        },
+        "schedule": {
+            "train_steps": SCHEDULE.train_steps,
+            "beta_start": SCHEDULE.beta_start,
+            "beta_end": SCHEDULE.beta_end,
+        },
+        "param_spec": [
+            {"name": n, "shape": list(s)} for n, s in model.param_spec(cfg)
+        ],
+        "artifacts": {},
+    }
+
+    print("[aot] writing params.bin")
+    params_flat = model.init_params_flat(cfg)
+    params_flat.tofile(os.path.join(out, "params.bin"))
+
+    if args.skip_hlo:
+        # Weights are runtime inputs: the lowered HLO is unchanged.
+        # Reuse the existing artifact entries (and verify presence).
+        print("[aot] --skip-hlo: reusing existing HLO artifacts")
+        with open(os.path.join(out, "manifest.json")) as f:
+            old = json.load(f)
+        manifest["artifacts"] = old["artifacts"]
+        for meta in manifest["artifacts"].values():
+            path = os.path.join(out, meta["file"])
+            assert os.path.getsize(path) == meta["bytes"], path
+    else:
+        for h in heights:
+            print(f"[aot] lowering denoiser h={h}")
+            text, sig = lower_denoiser(h)
+            name = f"denoiser_h{h}.hlo.txt"
+            meta = _write(os.path.join(out, name), text)
+            manifest["artifacts"][f"denoiser_h{h}"] = {
+                "file": name, **sig, **meta,
+            }
+
+        print("[aot] lowering ddim_update")
+        text, sig = lower_ddim()
+        meta = _write(os.path.join(out, "ddim_update.hlo.txt"), text)
+        manifest["artifacts"]["ddim_update"] = {
+            "file": "ddim_update.hlo.txt", **sig, **meta,
+        }
+
+        print("[aot] lowering features")
+        text, sig = lower_features()
+        meta = _write(os.path.join(out, "features.hlo.txt"), text)
+        manifest["artifacts"]["features"] = {
+            "file": "features.hlo.txt", **sig, **meta,
+        }
+
+    print("[aot] writing golden vectors")
+    goldens = {
+        "schedule.json": golden_schedule(),
+        "denoiser.json": golden_denoiser(params_flat),
+        "trajectory.json": golden_trajectory(params_flat),
+        "features.json": golden_features(),
+    }
+    for name, data in goldens.items():
+        with open(os.path.join(out, "golden", name), "w") as f:
+            json.dump(data, f, indent=1)
+        print(f"  wrote golden/{name}")
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("[aot] wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Shared model / schedule configuration for the STADI reproduction.
+
+Single source of truth for every dimension that crosses the
+python (build-time) <-> rust (run-time) boundary. `aot.py` serializes
+this into `artifacts/manifest.json`; the rust `runtime::artifacts`
+module re-reads it so the two sides can never disagree silently.
+
+The model is a miniature DiT-style denoiser standing in for SDXL
+(see DESIGN.md §3 for the substitution argument): what matters for the
+paper's scheduler is that (a) compute scales with patch rows, and
+(b) attention layers need the *full* (possibly stale) KV buffer, which
+is exactly the activation DistriFusion/STADI exchange between GPUs.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # Latent geometry ("1024x1024 image" <-> 32x32x4 latent, paper §V:
+    # P_total = 32 spatial rows).
+    latent_h: int = 32
+    latent_w: int = 32
+    latent_c: int = 4
+    # DiT patchify size (2x2 latent pixels per token).
+    patch: int = 2
+    # Transformer width / depth.
+    dim: int = 96
+    heads: int = 4
+    layers: int = 3
+    mlp_ratio: int = 4
+    # Sinusoidal timestep embedding width (pre-MLP).
+    temb_dim: int = 64
+    # Patch-height granularity for AOT variants. Spatial adaptation may
+    # only pick row counts that are multiples of this (paper §III-D:
+    # "P_total must also satisfy hardware/operator constraints").
+    # 2 latent rows = 1 token row, the finest the 2x2 patchify allows;
+    # coarser granularity measurably blunts SA at mild imbalance
+    # (EXPERIMENTS.md Fig. 8 notes).
+    row_granularity: int = 2
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.heads
+
+    @property
+    def tokens_per_row_block(self) -> int:
+        """Tokens contributed by `patch` latent rows (one token row)."""
+        return self.latent_w // self.patch
+
+    @property
+    def token_rows(self) -> int:
+        return self.latent_h // self.patch
+
+    @property
+    def tokens_full(self) -> int:
+        return self.token_rows * self.tokens_per_row_block
+
+    def tokens_for_rows(self, rows: int) -> int:
+        assert rows % self.patch == 0, rows
+        return (rows // self.patch) * self.tokens_per_row_block
+
+    @property
+    def patch_heights(self) -> tuple:
+        """All AOT'd patch heights (latent rows)."""
+        g = self.row_granularity
+        return tuple(range(g, self.latent_h + 1, g))
+
+
+@dataclass(frozen=True)
+class ScheduleConfig:
+    """SD-style scaled-linear beta schedule (matches rust model/schedule.rs)."""
+
+    train_steps: int = 1000
+    beta_start: float = 0.00085
+    beta_end: float = 0.012
+
+
+@dataclass(frozen=True)
+class FeatureNetConfig:
+    """Fixed random conv net used for LPIPS/FID proxy metrics (DESIGN.md §3)."""
+
+    channels: tuple = (16, 32, 64)
+    kernel: int = 3
+    seed: int = 1234
+
+
+MODEL = ModelConfig()
+SCHEDULE = ScheduleConfig()
+FEATURES = FeatureNetConfig()
+
+# Seed for the denoiser weights baked into artifacts/params.bin.
+PARAMS_SEED = 42

@@ -1,0 +1,55 @@
+"""Fixed random conv feature net for the LPIPS/FID proxy metrics.
+
+Substitution (DESIGN.md §3): the paper scores images with pretrained
+perceptual nets (LPIPS-VGG, InceptionV3 for FID). Those are unavailable
+offline, so we use a *fixed random* 3-stage strided conv net — random
+projections preserve the ordering of perturbation magnitudes, which is
+what Table II's relative comparisons need. Weights are baked into the
+HLO as constants (a few KiB) with a pinned seed so rust and python can
+never disagree.
+
+Output: per-stage global-average-pooled features
+  f1 [16], f2 [32], f3 [64]  (LPIPS proxy uses all three stages,
+  FID proxy uses f3 over an image set).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import FEATURES, MODEL
+from .kernels.ref import gelu
+
+
+def _init_convs(cfg=FEATURES, model=MODEL):
+    rng = np.random.default_rng(cfg.seed)
+    chans = (model.latent_c,) + tuple(cfg.channels)
+    ws = []
+    for cin, cout in zip(chans[:-1], chans[1:]):
+        # He-style scaling keeps activations O(1) through the stages.
+        std = (2.0 / (cfg.kernel * cfg.kernel * cin)) ** 0.5
+        ws.append(
+            rng.normal(0.0, std, size=(cfg.kernel, cfg.kernel, cin, cout))
+            .astype(np.float32)
+        )
+    return ws
+
+
+_WEIGHTS = _init_convs()
+
+
+def extract(x):
+    """x: [H, W, C] latent -> (f1, f2, f3) pooled feature vectors."""
+    h = x[None]  # NHWC
+    feats = []
+    for w in _WEIGHTS:
+        h = jax.lax.conv_general_dilated(
+            h,
+            jnp.asarray(w),
+            window_strides=(2, 2),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        h = gelu(h)
+        feats.append(jnp.mean(h, axis=(0, 1, 2)))
+    return tuple(feats)

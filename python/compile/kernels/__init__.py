@@ -1,0 +1,3 @@
+"""L1 Pallas kernels + pure-jnp reference oracles (ref.py)."""
+
+from . import attention, ddim, layernorm, mlp, ref  # noqa: F401

@@ -1,0 +1,53 @@
+"""Pallas multi-head attention kernel (L1 hot-spot).
+
+TPU adaptation of the paper's CUDA attention (DESIGN.md §7): the grid
+iterates over heads; each program instance holds one head's full
+Q [Tq, dh] and KV [Tk, dh] tiles resident in VMEM (Tq <= 256, Tk = 256,
+dh = 24 -> ~150 KiB, far under the ~16 MiB VMEM budget), and drives the
+MXU with two dense matmuls around a numerically-stable softmax. The
+HBM<->VMEM schedule DistriFusion expressed with threadblocks is expressed
+here with the per-head BlockSpec index maps.
+
+Lowered with interpret=True (CPU-PJRT cannot execute Mosaic custom
+calls); see DESIGN.md §7 for the real-TPU VMEM/MXU estimates.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    # One head per program instance. Block shapes carry a leading
+    # singleton head axis; index [0] to get [T, dh] tiles.
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.named_call, name="pallas_attention")
+def attention(q, k, v):
+    """Multi-head attention. q: [H, Tq, dh]; k, v: [H, Tk, dh]."""
+    h, tq, dh = q.shape
+    _, tk, _ = k.shape
+    scale = 1.0 / (dh ** 0.5)
+    kernel = functools.partial(_attn_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, tq, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, tk, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, tk, dh), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, tq, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,35 @@
+"""Pallas DDIM / DPM-Solver-1 update kernel (L1, paper Eq. 3).
+
+x_next = coef_x * x + coef_eps * eps, with the two scalar coefficients
+precomputed from the noise schedule (compile.schedule.ddim_coefficients)
+and passed as (1, 1) SMEM-style operands. A pure fused-multiply-add over
+the latent; tiled over rows so it streams through VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ddim_kernel(x_ref, eps_ref, cx_ref, ce_ref, o_ref):
+    o_ref[...] = cx_ref[0, 0] * x_ref[...] + ce_ref[0, 0] * eps_ref[...]
+
+
+def ddim_update(x, eps, coef_x, coef_eps):
+    """x, eps: [H, W, C]; coef_x, coef_eps: scalars (python float or 0-d)."""
+    h, w, c = x.shape
+    cx = jnp.asarray(coef_x, jnp.float32).reshape(1, 1)
+    ce = jnp.asarray(coef_eps, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _ddim_kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, w, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, w, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, w, c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w, c), jnp.float32),
+        interpret=True,
+    )(x, eps, cx, ce)

@@ -1,0 +1,43 @@
+"""Pallas fused LayerNorm + adaLN modulation kernel (L1).
+
+Computes normalize(x) * (1 + scale) + shift in one VMEM-resident pass.
+Token rows are tiled across the grid so arbitrarily tall patches stream
+through a fixed-size VMEM tile (TILE_T tokens x D floats).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_T = 16
+
+
+def _ln_kernel(x_ref, scale_ref, shift_ref, o_ref, *, eps):
+    x = x_ref[...]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    xn = (x - mean) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = xn * (1.0 + scale_ref[...]) + shift_ref[...]
+
+
+def layernorm_modulate(x, scale, shift, eps: float = 1e-6):
+    """x: [T, D]; scale, shift: [D]. T must be a multiple of TILE_T or
+    smaller than it (single tile)."""
+    t, d = x.shape
+    tile = min(TILE_T, t)
+    assert t % tile == 0, (t, tile)
+    kernel = functools.partial(_ln_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(t // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+        interpret=True,
+    )(x, scale, shift)

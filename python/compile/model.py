@@ -1,0 +1,301 @@
+"""L2: patch-parallel mini-DiT denoiser eps_theta(x_patch, t, cond).
+
+Stands in for SDXL (DESIGN.md §3). The forward pass is written exactly
+the way DistriFusion/STADI need it for patch parallelism:
+
+  * each device only computes tokens for its own latent rows
+    (compute scales with patch height h), and
+  * every attention layer reads K/V for the *full* image from a
+    stale buffer input, with the device's own token slice replaced by
+    the freshly-computed K/V (jax.lax.dynamic_update_slice at a
+    *runtime* token offset, so one AOT artifact per patch height works
+    for any placement), and
+  * the fresh own-token K/V of every layer is returned so the rust
+    coordinator can scatter it into its full buffer and ship it to
+    peers (the paper's "update buffer asynchronously").
+
+Weights are NOT baked into the HLO: they are a single flat f32 input
+(artifacts/params.bin) unpacked by static slicing, so all patch-height
+variants share one parameter file and artifacts stay small.
+
+`use_pallas=True` routes LN / attention / MLP through the L1 Pallas
+kernels; `False` uses the pure-jnp oracles — pytest asserts both paths
+agree, and AOT lowers the Pallas path.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import MODEL, PARAMS_SEED
+from .kernels import attention as attn_k
+from .kernels import layernorm as ln_k
+from .kernels import mlp as mlp_k
+from .kernels import ref
+
+
+# --------------------------------------------------------------------------
+# Parameter spec: explicit (name, shape) list; the flat packing order is
+# part of the artifact ABI and is recorded in manifest.json.
+# --------------------------------------------------------------------------
+
+def param_spec(cfg=MODEL):
+    d = cfg.dim
+    f = cfg.mlp_ratio * d
+    pp = cfg.patch * cfg.patch * cfg.latent_c  # pixels per token
+    spec = [
+        ("embed_w", (pp, d)),
+        ("embed_b", (d,)),
+        ("pos_emb", (cfg.tokens_full, d)),
+        ("temb_w1", (cfg.temb_dim, d)),
+        ("temb_b1", (d,)),
+        ("temb_w2", (d, d)),
+        ("temb_b2", (d,)),
+    ]
+    for i in range(cfg.layers):
+        spec += [
+            (f"blk{i}_mod_w", (d, 6 * d)),
+            (f"blk{i}_mod_b", (6 * d,)),
+            (f"blk{i}_qkv_w", (d, 3 * d)),
+            (f"blk{i}_qkv_b", (3 * d,)),
+            (f"blk{i}_o_w", (d, d)),
+            (f"blk{i}_o_b", (d,)),
+            (f"blk{i}_mlp_w1", (d, f)),
+            (f"blk{i}_mlp_b1", (f,)),
+            (f"blk{i}_mlp_w2", (f, d)),
+            (f"blk{i}_mlp_b2", (d,)),
+        ]
+    spec += [
+        ("final_mod_w", (d, 2 * d)),
+        ("final_mod_b", (2 * d,)),
+        ("final_w", (d, pp)),
+        ("final_b", (pp,)),
+    ]
+    return spec
+
+
+def param_count(cfg=MODEL):
+    return sum(int(np.prod(s)) for _, s in param_spec(cfg))
+
+
+def init_params_flat(cfg=MODEL, seed=PARAMS_SEED):
+    """Seeded flat f32 parameter vector (written to params.bin).
+
+    Weight matrices use fan-in (Xavier-ish) scaling so activations and
+    residual contributions are O(1) — a *trained* denoiser's effective
+    sensitivity. Tiny-init weights (e.g. std 0.02 everywhere) would
+    mute cross-patch attention so much that stale peer buffers cost
+    nothing and Table II's quality comparison degenerates (PSNR w/Orig
+    ≈ 75 dB instead of the paper's ≈ 24 dB band).
+    """
+    rng = np.random.default_rng(seed)
+    parts = []
+    for name, shape in param_spec(cfg):
+        if name.endswith("_b"):
+            parts.append(np.zeros(shape, np.float32))
+        elif name == "pos_emb":
+            parts.append(
+                rng.normal(0.0, 0.02, size=shape).astype(np.float32)
+            )
+        else:
+            fan_in = shape[0] if len(shape) == 2 else shape[-1]
+            std = (1.0 / fan_in) ** 0.5
+            parts.append(
+                rng.normal(0.0, std, size=shape).astype(np.float32)
+            )
+    return np.concatenate([p.reshape(-1) for p in parts])
+
+
+def unpack_params(flat, cfg=MODEL):
+    """Flat vector -> dict of named arrays via static slices."""
+    out = {}
+    off = 0
+    for name, shape in param_spec(cfg):
+        n = int(np.prod(shape))
+        out[name] = jax.lax.slice(flat, (off,), (off + n,)).reshape(shape)
+        off += n
+    return out
+
+
+# --------------------------------------------------------------------------
+# Forward pass pieces
+# --------------------------------------------------------------------------
+
+TRAIN_STEPS_F = 1000.0
+
+def timestep_embedding(t, dim):
+    """Band-limited sinusoidal embedding of a scalar timestep, [dim].
+
+    Frequencies are log-spaced between 0.5 and 8 cycles over the full
+    [0, train_steps] range (min period = 125 t-units). Rationale: with
+    *random* weights, the classic max-frequency-1 embedding makes
+    eps_theta oscillate arbitrarily fast in t, violating the
+    smoothness-in-t premise behind DPM-Solver/DDIM convergence (and
+    paper Thm. 2) that *trained* denoisers satisfy; band-limiting
+    restores the property the substitution must preserve (DESIGN.md
+    §3). Grid spacings up to ~60 t-units then sit comfortably inside
+    the first-order regime.
+    """
+    half = dim // 2
+    lo, hi = 0.5, 8.0
+    freqs = (
+        2.0
+        * math.pi
+        * lo
+        * jnp.exp(
+            math.log(hi / lo)
+            * jnp.arange(half, dtype=jnp.float32)
+            / half
+        )
+    )
+    ang = (t / TRAIN_STEPS_F) * freqs
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)])
+
+
+def patchify(x_patch, cfg=MODEL):
+    """[h, W, C] latent rows -> [T_own, patch*patch*C] tokens."""
+    h, w, c = x_patch.shape
+    p = cfg.patch
+    x = x_patch.reshape(h // p, p, w // p, p, c)
+    x = jnp.transpose(x, (0, 2, 1, 3, 4))  # [h/p, w/p, p, p, c]
+    return x.reshape((h // p) * (w // p), p * p * c)
+
+
+def unpatchify(tokens, h, cfg=MODEL):
+    """[T_own, patch*patch*C] -> [h, W, C]."""
+    p = cfg.patch
+    w = cfg.latent_w
+    x = tokens.reshape(h // p, w // p, p, p, cfg.latent_c)
+    x = jnp.transpose(x, (0, 2, 1, 3, 4))
+    return x.reshape(h, w, cfg.latent_c)
+
+
+def _ln_mod(x, scale, shift, use_pallas):
+    if use_pallas:
+        return ln_k.layernorm_modulate(x, scale, shift)
+    return ref.layernorm_modulate(x, scale, shift)
+
+
+def _attn(q, k, v, use_pallas):
+    if use_pallas:
+        return attn_k.attention(q, k, v)
+    return ref.attention(q, k, v)
+
+
+def _mlp(x, w1, b1, w2, b2, use_pallas):
+    if use_pallas:
+        return mlp_k.mlp(x, w1, b1, w2, b2)
+    return ref.mlp(x, w1, b1, w2, b2)
+
+
+def _split_heads(x, cfg):
+    """[T, D] -> [H, T, dh]"""
+    t = x.shape[0]
+    return jnp.transpose(
+        x.reshape(t, cfg.heads, cfg.head_dim), (1, 0, 2)
+    )
+
+
+def _merge_heads(x):
+    """[H, T, dh] -> [T, D]"""
+    h, t, dh = x.shape
+    return jnp.transpose(x, (1, 0, 2)).reshape(t, h * dh)
+
+
+def denoiser_patch(params_flat, x_patch, kv_stale, row_off, t, cond,
+                   cfg=MODEL, use_pallas=True):
+    """One denoiser forward over a device's patch.
+
+    Args:
+      params_flat: [param_count] f32 — weights (artifacts/params.bin).
+      x_patch:     [h, W, C] — this device's latent rows (fresh).
+      kv_stale:    [L, T_full, 2D] — per-layer full-image K/V buffers,
+                   fresh for this device's own slice of the *previous*
+                   step, stale (peer-supplied) elsewhere.
+      row_off:     scalar i32 — first latent row of the patch.
+      t:           scalar f32 — diffusion timestep index.
+      cond:        [D] — conditioning vector (prompt-embedding stand-in).
+
+    Returns:
+      (eps_patch [h, W, C], kv_fresh [L, T_own, 2D])
+    """
+    p = unpack_params(params_flat, cfg)
+    h = x_patch.shape[0]
+    t_own = cfg.tokens_for_rows(h)
+    tok_off = (row_off // cfg.patch) * cfg.tokens_per_row_block
+
+    tok = patchify(x_patch, cfg) @ p["embed_w"] + p["embed_b"]
+    pos = jax.lax.dynamic_slice(
+        p["pos_emb"], (tok_off, 0), (t_own, cfg.dim)
+    )
+    tok = tok + pos
+
+    temb = timestep_embedding(t, cfg.temb_dim)
+    c = ref.gelu(temb @ p["temb_w1"] + p["temb_b1"])
+    c = c @ p["temb_w2"] + p["temb_b2"]
+    c = c + cond
+
+    kv_fresh = []
+    for i in range(cfg.layers):
+        mod = c @ p[f"blk{i}_mod_w"] + p[f"blk{i}_mod_b"]
+        s1, sh1, g1, s2, sh2, g2 = jnp.split(mod, 6)
+
+        xn = _ln_mod(tok, s1, sh1, use_pallas)
+        qkv = xn @ p[f"blk{i}_qkv_w"] + p[f"blk{i}_qkv_b"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        kv_own = jnp.concatenate([k, v], axis=-1)  # [T_own, 2D]
+        kv_fresh.append(kv_own)
+
+        kv_full = jax.lax.dynamic_update_slice(
+            kv_stale[i], kv_own, (tok_off, 0)
+        )
+        k_full, v_full = kv_full[:, : cfg.dim], kv_full[:, cfg.dim :]
+
+        o = _attn(
+            _split_heads(q, cfg),
+            _split_heads(k_full, cfg),
+            _split_heads(v_full, cfg),
+            use_pallas,
+        )
+        # Residual gates at 1 + g: with random weights the raw adaLN
+        # gates are ~N(0, 0.02), which would dampen cross-patch
+        # attention to noise level and make patch parallelism trivially
+        # exact (stale peer KV would cost nothing). Trained diffusion
+        # models have O(1) effective residual coupling — the property
+        # the substitution must preserve for Table II to be meaningful.
+        tok = tok + (1.0 + g1) * (
+            _merge_heads(o) @ p[f"blk{i}_o_w"] + p[f"blk{i}_o_b"]
+        )
+
+        xn2 = _ln_mod(tok, s2, sh2, use_pallas)
+        tok = tok + (1.0 + g2) * _mlp(
+            xn2,
+            p[f"blk{i}_mlp_w1"],
+            p[f"blk{i}_mlp_b1"],
+            p[f"blk{i}_mlp_w2"],
+            p[f"blk{i}_mlp_b2"],
+            use_pallas,
+        )
+
+    fmod = c @ p["final_mod_w"] + p["final_mod_b"]
+    sf, shf = jnp.split(fmod, 2)
+    xn = _ln_mod(tok, sf, shf, use_pallas)
+    out = xn @ p["final_w"] + p["final_b"]
+    return unpatchify(out, h, cfg), jnp.stack(kv_fresh)
+
+
+def fresh_kv_for_full(params_flat, x_full, t, cond, cfg=MODEL,
+                      use_pallas=False):
+    """Fully-fresh KV buffers for a full-image forward (no staleness).
+
+    Convenience for tests and for initializing warmup: run the full
+    image as one patch with a zero stale buffer; the returned kv_fresh
+    covers all tokens.
+    """
+    kv0 = jnp.zeros((cfg.layers, cfg.tokens_full, 2 * cfg.dim), jnp.float32)
+    eps, kv = denoiser_patch(
+        params_flat, x_full, kv0, 0, t, cond, cfg, use_pallas
+    )
+    return eps, kv

@@ -1,0 +1,64 @@
+"""PCG32 + Box-Muller normals, bit-identical to rust `util::rng`.
+
+The cross-layer golden vectors (artifacts/golden/*.json) need inputs
+that BOTH sides can regenerate exactly. numpy's Philox/PCG streams are
+not practical to mirror in no-dependency rust, so the repo pins this
+tiny PCG32 implementation on both sides; `python/tests/test_pcg.py` and
+rust `util::rng` tests both check the same hardcoded vectors.
+"""
+
+import math
+
+M64 = (1 << 64) - 1
+MULT = 6364136223846793005
+DEFAULT_STREAM = 0xDA3E39CB94B95BDB
+
+
+class Pcg32:
+    def __init__(self, seed: int, stream: int = DEFAULT_STREAM):
+        self.inc = ((stream << 1) | 1) & M64
+        self.state = 0
+        self.next_u32()
+        self.state = (self.state + seed) & M64
+        self.next_u32()
+
+    def next_u32(self) -> int:
+        old = self.state
+        self.state = (old * MULT + self.inc) & M64
+        xorshifted = (((old >> 18) ^ old) >> 27) & 0xFFFFFFFF
+        rot = old >> 59
+        return ((xorshifted >> rot) | (xorshifted << ((-rot) & 31))) & 0xFFFFFFFF
+
+    def next_u64(self) -> int:
+        return (self.next_u32() << 32) | self.next_u32()
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+    def next_f32(self) -> float:
+        # f32 rounding applied by the caller when needed.
+        return (self.next_u32() >> 8) / float(1 << 24)
+
+
+class NormalGen:
+    """Box-Muller over Pcg32, mirroring rust NormalGen exactly."""
+
+    def __init__(self, seed: int):
+        self.rng = Pcg32(seed)
+        self.spare = None
+
+    def next(self) -> float:
+        if self.spare is not None:
+            s, self.spare = self.spare, None
+            return s
+        u1 = 1.0 - self.rng.next_f64()
+        u2 = self.rng.next_f64()
+        r = math.sqrt(-2.0 * math.log(u1))
+        th = 2.0 * math.pi * u2
+        self.spare = r * math.sin(th)
+        return r * math.cos(th)
+
+    def vec_f32(self, n: int):
+        import numpy as np
+
+        return np.array([self.next() for _ in range(n)], dtype=np.float32)

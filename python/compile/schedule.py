@@ -1,0 +1,88 @@
+"""Diffusion noise schedule + DDIM timestep grids (build-time mirror).
+
+This module is the python twin of rust `model/schedule.rs`; `aot.py`
+dumps golden vectors from here and cargo tests assert the rust
+implementation matches to f32 tolerance, so the two sides can never
+drift. All math is float64 internally, surfaced as float32 (matching
+rust, which computes in f64 and stores f32).
+
+Conventions (paper §II-A):
+  beta_t: scaled-linear (Stable-Diffusion style) over `train_steps`.
+  alpha_bar_t = prod_{s<=t}(1 - beta_s)            (cumulative)
+  alpha_t (paper) = sqrt(alpha_bar_t),  sigma_t = sqrt(1 - alpha_bar_t)
+  DDIM (eta=0) step t -> s (s < t):
+    x_s = sqrt(ab_s/ab_t) * x_t
+        + (sqrt(1-ab_s) - sqrt(ab_s/ab_t) * sqrt(1-ab_t)) * eps
+  which is Eq. 3 with coefficients precomputed (coef_x, coef_eps).
+"""
+
+import numpy as np
+
+from .config import SCHEDULE
+
+
+def betas(cfg=SCHEDULE):
+    """Scaled-linear betas: linspace in sqrt-space, squared."""
+    return (
+        np.linspace(
+            cfg.beta_start ** 0.5,
+            cfg.beta_end ** 0.5,
+            cfg.train_steps,
+            dtype=np.float64,
+        )
+        ** 2
+    )
+
+
+def alpha_bars(cfg=SCHEDULE):
+    """alpha_bar indexed by t in [0, train_steps); ab[t] = prod(1-beta)."""
+    return np.cumprod(1.0 - betas(cfg))
+
+
+def ddim_grid(m: int, cfg=SCHEDULE):
+    """Leading-spaced DDIM grid of m timesteps, decreasing.
+
+    grid[k] = floor(k * T / m) for k = m-1 .. 0, i.e. the standard
+    `leading` spacing. The final update goes grid[-1] -> "clean" (t=-1,
+    alpha_bar=1).
+    """
+    t = cfg.train_steps
+    return [(k * t) // m for k in range(m - 1, -1, -1)]
+
+
+def stadi_slow_grid(fast_grid, warmup: int):
+    """Slow-device grid per STADI temporal adaptation (paper §III-C).
+
+    Shares the first `warmup` timesteps with the fast grid, then takes
+    every 2nd point of the remainder — the LCM-minimizing 2:1
+    quantization of Eq. 4 (M_slow = warmup + (M_fast - warmup)/2). The
+    tail is kept aligned so both grids terminate at fast_grid[-1]:
+    we take the *odd* offsets of the remainder when its length is even,
+    which always includes the last point.
+    """
+    rest = fast_grid[warmup:]
+    assert len(rest) % 2 == 0, "M_base - M_warmup must be even"
+    return list(fast_grid[:warmup]) + list(rest[1::2])
+
+
+def ddim_coefficients(t_from: int, t_to: int, cfg=SCHEDULE):
+    """(coef_x, coef_eps) for one DDIM step t_from -> t_to.
+
+    t_to == -1 denotes the final step to the clean sample
+    (alpha_bar = 1, sigma = 0).
+    """
+    ab = alpha_bars(cfg)
+    ab_t = ab[t_from]
+    ab_s = 1.0 if t_to < 0 else ab[t_to]
+    coef_x = np.sqrt(ab_s / ab_t)
+    coef_eps = np.sqrt(1.0 - ab_s) - coef_x * np.sqrt(1.0 - ab_t)
+    return float(coef_x), float(coef_eps)
+
+
+def grid_coefficients(grid, cfg=SCHEDULE):
+    """Coefficient pairs for a full decreasing grid, ending at clean."""
+    pairs = []
+    for i, t in enumerate(grid):
+        t_to = grid[i + 1] if i + 1 < len(grid) else -1
+        pairs.append(ddim_coefficients(t, t_to, cfg))
+    return pairs

@@ -1,0 +1,10 @@
+fn main() {
+    let m = stadi::runtime::Manifest::load("artifacts").unwrap();
+    let rt = stadi::runtime::Runtime::new(m).unwrap();
+    let mut g = stadi::util::rng::NormalGen::new(13);
+    let x = stadi::runtime::Tensor::new(vec![32,32,4], g.vec_f32(4096)).unwrap();
+    let (f1,f2,f3) = rt.features(&x).unwrap();
+    println!("f1[..4]={:?}", &f1[..4]);
+    println!("f2[..4]={:?}", &f2[..4]);
+    println!("f3[..4]={:?}", &f3[..4]);
+}

@@ -1,0 +1,102 @@
+"""AOT manifest / artifact consistency tests.
+
+These run against the artifacts/ directory if it exists (skip
+otherwise so `pytest` works pre-`make artifacts`).
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.config import MODEL
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_model_matches_config(manifest):
+    m = manifest["model"]
+    assert m["latent_h"] == MODEL.latent_h
+    assert m["dim"] == MODEL.dim
+    assert m["layers"] == MODEL.layers
+    assert m["param_count"] == M.param_count(MODEL)
+    assert m["tokens_full"] == MODEL.tokens_full
+
+
+def test_params_bin_matches_seeded_init(manifest):
+    flat = np.fromfile(os.path.join(ART, "params.bin"), dtype=np.float32)
+    assert flat.shape == (manifest["model"]["param_count"],)
+    ref = M.init_params_flat(MODEL, manifest["model"]["params_seed"])
+    np.testing.assert_allclose(flat, ref, atol=0)
+
+
+def test_all_patch_heights_present(manifest):
+    for h in MODEL.patch_heights:
+        key = f"denoiser_h{h}"
+        assert key in manifest["artifacts"], key
+        art = manifest["artifacts"][key]
+        path = os.path.join(ART, art["file"])
+        assert os.path.getsize(path) == art["bytes"]
+        # input signature sanity
+        shapes = {i["name"]: i["shape"] for i in art["inputs"]}
+        assert shapes["x_patch"] == [h, MODEL.latent_w, MODEL.latent_c]
+        assert shapes["kv_stale"] == [
+            MODEL.layers, MODEL.tokens_full, 2 * MODEL.dim,
+        ]
+
+
+def test_param_spec_recorded_in_order(manifest):
+    spec = [(e["name"], tuple(e["shape"])) for e in manifest["param_spec"]]
+    assert spec == [(n, tuple(s)) for n, s in M.param_spec(MODEL)]
+
+
+def test_golden_files_exist(manifest):
+    for name in ("schedule.json", "denoiser.json", "trajectory.json",
+                 "features.json"):
+        p = os.path.join(ART, "golden", name)
+        assert os.path.exists(p), name
+        with open(p) as f:
+            json.load(f)  # valid json
+
+
+def test_golden_denoiser_reproducible(manifest):
+    """Recompute the golden denoiser output from the recorded seed and
+    compare — guards against silent weight or model drift."""
+    import jax.numpy as jnp
+
+    from compile import pcg
+
+    with open(os.path.join(ART, "golden", "denoiser.json")) as f:
+        g = json.load(f)
+    gen = pcg.NormalGen(g["seed"])
+    h = g["h"]
+    x = gen.vec_f32(h * MODEL.latent_w * MODEL.latent_c).reshape(
+        h, MODEL.latent_w, MODEL.latent_c
+    )
+    kv = gen.vec_f32(MODEL.layers * MODEL.tokens_full * 2 * MODEL.dim).reshape(
+        MODEL.layers, MODEL.tokens_full, 2 * MODEL.dim
+    )
+    cond = gen.vec_f32(MODEL.dim)
+    flat = np.fromfile(os.path.join(ART, "params.bin"), dtype=np.float32)
+    eps, _ = M.denoiser_patch(
+        jnp.asarray(flat), jnp.asarray(x), jnp.asarray(kv),
+        g["row_off"], g["t"], jnp.asarray(cond), MODEL, use_pallas=True,
+    )
+    eps = np.asarray(eps)
+    np.testing.assert_allclose(
+        eps.reshape(-1)[:16], np.array(g["eps_first16"]), rtol=1e-5
+    )
+    np.testing.assert_allclose(eps.sum(), g["eps_sum"], rtol=1e-4)

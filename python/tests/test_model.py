@@ -1,0 +1,147 @@
+"""L2 model tests: pallas/ref path agreement, patch-composition
+exactness, staleness semantics, parameter packing."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from compile.config import MODEL
+
+CFG = MODEL
+
+
+@pytest.fixture(scope="module")
+def params():
+    return jnp.asarray(M.init_params_flat(CFG))
+
+
+def _rand_inputs(seed, h):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((h, CFG.latent_w, CFG.latent_c)).astype(np.float32)
+    kv = rng.standard_normal(
+        (CFG.layers, CFG.tokens_full, 2 * CFG.dim)
+    ).astype(np.float32)
+    cond = rng.standard_normal((CFG.dim,)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(kv), jnp.asarray(cond)
+
+
+def test_param_spec_matches_flat_len(params):
+    assert params.shape == (M.param_count(CFG),)
+
+
+def test_param_unpack_roundtrip(params):
+    p = M.unpack_params(params, CFG)
+    total = sum(int(np.prod(v.shape)) for v in p.values())
+    assert total == M.param_count(CFG)
+    # First spec entry starts at offset 0.
+    name0, shape0 = M.param_spec(CFG)[0]
+    n0 = int(np.prod(shape0))
+    assert_allclose(
+        np.asarray(p[name0]).reshape(-1), np.asarray(params[:n0])
+    )
+
+
+def test_patchify_unpatchify_roundtrip():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(
+        rng.standard_normal((16, CFG.latent_w, CFG.latent_c)).astype(np.float32)
+    )
+    tok = M.patchify(x, CFG)
+    assert tok.shape == (CFG.tokens_for_rows(16), CFG.patch ** 2 * CFG.latent_c)
+    back = M.unpatchify(tok, 16, CFG)
+    assert_allclose(np.asarray(back), np.asarray(x), atol=0)
+
+
+@pytest.mark.parametrize("h,row_off", [(8, 0), (8, 24), (16, 8), (4, 28)])
+def test_pallas_matches_ref_path(params, h, row_off):
+    x, kv, cond = _rand_inputs(5, h)
+    e1, k1 = M.denoiser_patch(params, x, kv, row_off, 321.0, cond,
+                              CFG, use_pallas=False)
+    e2, k2 = M.denoiser_patch(params, x, kv, row_off, 321.0, cond,
+                              CFG, use_pallas=True)
+    assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-4, atol=1e-5)
+    assert_allclose(np.asarray(k1), np.asarray(k2), rtol=1e-4, atol=1e-5)
+
+
+def test_patches_with_fresh_buffers_compose_to_full(params):
+    """Patch parallelism exactness property: when every device gets
+    *fresh* peer KV (no staleness), splitting the image into patches
+    must reproduce the full-image forward bit-close. This is the
+    correctness foundation the paper's warmup phase relies on."""
+    rng = np.random.default_rng(9)
+    x_full = jnp.asarray(
+        rng.standard_normal(
+            (CFG.latent_h, CFG.latent_w, CFG.latent_c)
+        ).astype(np.float32)
+    )
+    cond = jnp.asarray(rng.standard_normal((CFG.dim,)).astype(np.float32))
+    t = 700.0
+
+    eps_full, kv_full = M.fresh_kv_for_full(params, x_full, t, cond, CFG)
+
+    # Device 0 gets rows [0, 12), device 1 rows [12, 32); both attend
+    # over the *fresh* kv_full buffer (own slice is recomputed inside,
+    # which must equal the full-forward slice).
+    splits = [(0, 12), (12, 20)]
+    outs = []
+    for row0, h in splits:
+        xp = x_full[row0 : row0 + h]
+        eps_p, kv_p = M.denoiser_patch(
+            params, xp, kv_full, row0, t, cond, CFG, use_pallas=False
+        )
+        outs.append((row0, h, eps_p, kv_p))
+
+    recomposed = np.concatenate([np.asarray(o[2]) for o in outs], axis=0)
+    assert_allclose(recomposed, np.asarray(eps_full), rtol=1e-4, atol=1e-5)
+
+    # The fresh KV each patch returns equals the full forward's slice.
+    for row0, h, _, kv_p in outs:
+        t0 = CFG.tokens_for_rows(row0)
+        t1 = t0 + CFG.tokens_for_rows(h)
+        assert_allclose(
+            np.asarray(kv_p),
+            np.asarray(kv_full[:, t0:t1]),
+            rtol=1e-4, atol=1e-5,
+        )
+
+
+def test_stale_buffer_changes_output(params):
+    """Sanity: attention really reads the peer region of the KV buffer
+    (if it didn't, patch parallelism would be trivially exact and the
+    paper's buffer exchange pointless)."""
+    x, kv, cond = _rand_inputs(6, 8)
+    e1, _ = M.denoiser_patch(params, x, kv, 0, 100.0, cond, CFG, False)
+    kv2 = kv.at[:, CFG.tokens_full // 2 :].add(1.0)  # perturb peer region
+    e2, _ = M.denoiser_patch(params, x, kv2, 0, 100.0, cond, CFG, False)
+    assert float(jnp.abs(e1 - e2).max()) > 1e-4
+
+
+def test_own_region_of_stale_buffer_is_ignored(params):
+    """The device's own slice of kv_stale is overwritten with fresh KV
+    before attention, so perturbing it must NOT change the output."""
+    x, kv, cond = _rand_inputs(8, 8)
+    row_off = 16
+    t0 = CFG.tokens_for_rows(row_off)
+    t1 = t0 + CFG.tokens_for_rows(8)
+    e1, _ = M.denoiser_patch(params, x, kv, row_off, 100.0, cond, CFG, False)
+    kv2 = kv.at[:, t0:t1].add(123.0)
+    e2, _ = M.denoiser_patch(params, x, kv2, row_off, 100.0, cond, CFG, False)
+    assert_allclose(np.asarray(e1), np.asarray(e2), atol=0)
+
+
+def test_timestep_and_cond_affect_output(params):
+    x, kv, cond = _rand_inputs(10, 8)
+    e1, _ = M.denoiser_patch(params, x, kv, 0, 100.0, cond, CFG, False)
+    e2, _ = M.denoiser_patch(params, x, kv, 0, 900.0, cond, CFG, False)
+    e3, _ = M.denoiser_patch(params, x, kv, 0, 100.0, cond + 1.0, CFG, False)
+    assert float(jnp.abs(e1 - e2).max()) > 1e-4
+    assert float(jnp.abs(e1 - e3).max()) > 1e-4
+
+
+def test_timestep_embedding_range():
+    emb = M.timestep_embedding(jnp.float32(500.0), 64)
+    e = np.asarray(emb)
+    assert e.shape == (64,)
+    assert np.all(np.abs(e) <= 1.0 + 1e-6)  # cos/sin bounded

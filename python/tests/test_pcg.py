@@ -1,0 +1,42 @@
+"""Cross-language PRNG pinning: these exact vectors are also asserted
+by rust `util::rng` tests (rust/src/util/rng.rs) — if either side
+drifts, the golden-vector scheme breaks loudly here."""
+
+import math
+
+from compile.pcg import NormalGen, Pcg32
+
+# Pinned outputs (generated once; both languages must match these).
+U32_SEED7 = [3536637593, 1154887489, 2902756104, 1443040102]
+U32_SEED42 = [1898997482, 1014631766, 4096008554, 633901381]
+NORM_SEED1 = [
+    2.322744198748,
+    -0.446543482722,
+    0.586928137232,
+    0.618352916784,
+]
+
+
+def test_pcg32_pinned_vectors():
+    r = Pcg32(7)
+    assert [r.next_u32() for _ in range(4)] == U32_SEED7
+    r = Pcg32(42)
+    assert [r.next_u32() for _ in range(4)] == U32_SEED42
+
+
+def test_normal_pinned_vectors():
+    g = NormalGen(1)
+    for want in NORM_SEED1:
+        assert math.isclose(g.next(), want, rel_tol=0, abs_tol=1e-9)
+
+
+def test_f64_in_unit_interval():
+    r = Pcg32(123)
+    for _ in range(1000):
+        x = r.next_f64()
+        assert 0.0 <= x < 1.0
+
+
+def test_streams_deterministic():
+    a, b = Pcg32(5), Pcg32(5)
+    assert [a.next_u64() for _ in range(10)] == [b.next_u64() for _ in range(10)]

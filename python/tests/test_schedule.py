@@ -1,0 +1,79 @@
+"""Noise schedule + DDIM grid unit tests (mirrored by rust tests)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import schedule
+from compile.config import SCHEDULE
+
+
+def test_betas_monotone_and_bounded():
+    b = schedule.betas()
+    assert b.shape == (SCHEDULE.train_steps,)
+    assert np.all(np.diff(b) > 0)
+    assert b[0] == pytest.approx(SCHEDULE.beta_start, rel=1e-9)
+    assert b[-1] == pytest.approx(SCHEDULE.beta_end, rel=1e-9)
+
+
+def test_alpha_bars_decreasing_in_unit_interval():
+    ab = schedule.alpha_bars()
+    assert np.all(np.diff(ab) < 0)
+    assert 0.0 < ab[-1] < ab[0] < 1.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(2, 500))
+def test_ddim_grid_properties(m):
+    g = schedule.ddim_grid(m)
+    assert len(g) == m
+    assert g[-1] == 0
+    assert g[0] == ((m - 1) * SCHEDULE.train_steps) // m
+    assert all(a > b for a, b in zip(g, g[1:]))  # strictly decreasing
+    assert all(0 <= t < SCHEDULE.train_steps for t in g)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.sampled_from([20, 52, 100, 200]),
+    warmup=st.sampled_from([0, 2, 4, 8]),
+)
+def test_stadi_slow_grid_alignment(m, warmup):
+    """The slow grid must (a) share the warmup prefix, (b) be a subset of
+    the fast grid (so sync points exist), (c) have the Eq. 4 length
+    warmup + (m - warmup)/2, and (d) end at the same final timestep."""
+    if (m - warmup) % 2 != 0:
+        return
+    fast = schedule.ddim_grid(m)
+    slow = schedule.stadi_slow_grid(fast, warmup)
+    assert slow[:warmup] == fast[:warmup]
+    assert set(slow) <= set(fast)
+    assert len(slow) == warmup + (m - warmup) // 2
+    assert slow[-1] == fast[-1] == 0
+    assert all(a > b for a, b in zip(slow, slow[1:]))
+
+
+def test_ddim_coefficients_final_step_denoises_fully():
+    # t_to = -1: alpha_bar_s = 1 => x0_hat = (x - sigma_t*eps)/alpha_t.
+    ab = schedule.alpha_bars()
+    t = 100
+    cx, ce = schedule.ddim_coefficients(t, -1)
+    assert cx == pytest.approx(1.0 / np.sqrt(ab[t]), rel=1e-9)
+    assert ce == pytest.approx(-np.sqrt(1 - ab[t]) / np.sqrt(ab[t]), rel=1e-9)
+
+
+def test_ddim_coefficients_noop_for_same_t():
+    cx, ce = schedule.ddim_coefficients(500, 500)
+    assert cx == pytest.approx(1.0)
+    assert ce == pytest.approx(0.0, abs=1e-12)
+
+
+def test_grid_coefficients_cover_grid():
+    g = schedule.ddim_grid(10)
+    pairs = schedule.grid_coefficients(g)
+    assert len(pairs) == 10
+    # Composing all coef_x factors telescopes to 1/alpha_{t0} =
+    # 1/sqrt(alpha_bar at first grid point).
+    ab = schedule.alpha_bars()
+    prod = np.prod([p[0] for p in pairs])
+    assert prod == pytest.approx(1.0 / np.sqrt(ab[g[0]]), rel=1e-6)

@@ -1,0 +1,110 @@
+//! EXTENSION ablation: Eq. 5 patch mending vs cost-aware mending.
+//!
+//! The paper's Fig. 9 discussion concedes that "patch allocation based
+//! on effective speed may not yield optimal results" under large load
+//! gaps because of the fixed per-step overhead. This bench quantifies
+//! how much the affine-cost allocator (`spatial::cost_aware_sizes`)
+//! recovers, sweeping occupancy gaps on the 2-GPU testbed with TA both
+//! off (isolating the spatial axis) and on (full STADI).
+
+use stadi::coordinator::timeline;
+use stadi::expt;
+use stadi::model::schedule::Schedule;
+use stadi::runtime::ExecService;
+use stadi::sched::plan::Plan;
+use stadi::util::benchkit::Table;
+use stadi::util::plot::{render, Series};
+
+fn main() -> stadi::Result<()> {
+    if !expt::artifacts_available() {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return Ok(());
+    }
+    let svc = ExecService::spawn(expt::artifacts_dir())?;
+    let model = svc.handle().manifest().model.clone();
+    let schedule = Schedule::from_info(&svc.handle().manifest().schedule);
+    let cost = expt::calibrated_cost(&svc)?;
+    let comm = expt::paper_comm();
+
+    for ta in [false, true] {
+        let mut params = expt::paper_params();
+        params.temporal = ta;
+        println!(
+            "\n# cost-aware vs Eq. 5 patch mending (TA {})",
+            if ta { "on — full STADI" } else { "off — spatial only" }
+        );
+        let mut table = Table::new(&[
+            "occupancy", "Eq.5 rows", "Eq.5 (s)", "cost-aware rows",
+            "cost-aware (s)", "gain",
+        ]);
+        let mut s_eq5 = Series::new("eq5", 'o');
+        let mut s_ca = Series::new("cost-aware", '#');
+        let mut dat = String::new();
+        for occ1 in [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7] {
+            let occ = [0.0, occ1];
+            let cluster = expt::cluster_with_occ(&occ, cost);
+            let speeds = expt::speeds_for_occ(&occ);
+
+            let p_eq5 = Plan::build(
+                &schedule,
+                &speeds,
+                &expt::names(2),
+                &params,
+                model.latent_h,
+                model.row_granularity,
+            )?;
+            let t_eq5 =
+                timeline::simulate(&p_eq5, &cluster, &comm, &model)?;
+
+            let p_ca = Plan::build_cost_aware(
+                &schedule,
+                &speeds,
+                &expt::names(2),
+                &params,
+                &cost,
+                model.latent_h,
+                model.row_granularity,
+            )?;
+            let t_ca = timeline::simulate(&p_ca, &cluster, &comm, &model)?;
+
+            let gain = (1.0 - t_ca.total_s / t_eq5.total_s) * 100.0;
+            table.row(&[
+                format!("[0%,{:.0}%]", occ1 * 100.0),
+                format!(
+                    "{}:{}",
+                    p_eq5.devices[0].rows.rows, p_eq5.devices[1].rows.rows
+                ),
+                format!("{:.3}", t_eq5.total_s),
+                format!(
+                    "{}:{}",
+                    p_ca.devices[0].rows.rows, p_ca.devices[1].rows.rows
+                ),
+                format!("{:.3}", t_ca.total_s),
+                format!("{gain:+.1}%"),
+            ]);
+            s_eq5.push(occ1, t_eq5.total_s);
+            s_ca.push(occ1, t_ca.total_s);
+            dat.push_str(&format!(
+                "{ta} {occ1} {} {}\n",
+                t_eq5.total_s, t_ca.total_s
+            ));
+
+            // The extension must never lose to Eq. 5 (it optimizes the
+            // same objective with a strictly better cost model).
+            assert!(
+                t_ca.total_s <= t_eq5.total_s + 1e-9,
+                "cost-aware lost at occ {occ1}: {} vs {}",
+                t_ca.total_s,
+                t_eq5.total_s
+            );
+        }
+        table.print();
+        println!("\nlatency vs straggler occupancy:");
+        print!("{}", render(&[s_eq5, s_ca], 60, 12));
+        expt::save_results(
+            &format!("ext_cost_aware_ta{ta}.dat"),
+            &dat,
+        )?;
+    }
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! EXTENSION: scaling beyond the paper's 2-GPU testbed (its stated
+//! future work: "experiments with large-scale GPU clusters").
+//!
+//! Clusters of N ∈ {2, 3, 4, 6, 8} simulated GPUs with a mixed
+//! occupancy profile; STADI vs patch parallelism latency and
+//! utilization. Expectations: PP's latency is pinned to the worst
+//! straggler regardless of N; STADI's advantage grows with cluster
+//! heterogeneity; with N=8 on a 16-granule latent, spatial headroom
+//! tightens (every device must keep ≥1 granule).
+
+use stadi::baselines::patch_parallel;
+use stadi::config::DeviceConfig;
+use stadi::coordinator::timeline;
+use stadi::device::build_cluster;
+use stadi::expt;
+use stadi::model::schedule::Schedule;
+use stadi::runtime::ExecService;
+use stadi::sched::plan::Plan;
+use stadi::util::benchkit::Table;
+
+/// Deterministic mixed occupancy profile: device i of n gets
+/// rho_i = 0.6 * i / (n - 1) (fastest idle, slowest at 60%).
+fn occupancies(n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| if n == 1 { 0.0 } else { 0.6 * i as f64 / (n - 1) as f64 })
+        .collect()
+}
+
+fn main() -> stadi::Result<()> {
+    if !expt::artifacts_available() {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return Ok(());
+    }
+    let svc = ExecService::spawn(expt::artifacts_dir())?;
+    let model = svc.handle().manifest().model.clone();
+    let schedule = Schedule::from_info(&svc.handle().manifest().schedule);
+    let cost = expt::calibrated_cost(&svc)?;
+    let comm = expt::paper_comm();
+    let params = expt::paper_params();
+
+    println!(
+        "# cluster scaling, mixed occupancy 0..60% (M_base={})",
+        params.m_base
+    );
+    let mut table = Table::new(&[
+        "N", "PP (s)", "PP util", "STADI (s)", "STADI util",
+        "STADI vs PP", "classes",
+    ]);
+    let mut dat = String::new();
+    for n in [2usize, 3, 4, 6, 8] {
+        let occ = occupancies(n);
+        let devices: Vec<DeviceConfig> = occ
+            .iter()
+            .enumerate()
+            .map(|(i, &o)| DeviceConfig::new(format!("gpu{i}"), 1.0, o))
+            .collect();
+        let cluster = build_cluster(&devices, cost);
+        let speeds = expt::speeds_for_occ(&occ);
+
+        let pp = patch_parallel::plan(
+            &schedule, n, &params, model.latent_h, model.row_granularity,
+        )?;
+        let t_pp = timeline::simulate(&pp, &cluster, &comm, &model)?;
+
+        let stadi = Plan::build(
+            &schedule,
+            &speeds,
+            &expt::names(n),
+            &params,
+            model.latent_h,
+            model.row_granularity,
+        )?;
+        let t_st = timeline::simulate(&stadi, &cluster, &comm, &model)?;
+
+        let classes: String = stadi
+            .devices
+            .iter()
+            .map(|d| match d.class {
+                stadi::sched::StepClass::Full => 'F',
+                stadi::sched::StepClass::Half => 'H',
+                stadi::sched::StepClass::Excluded => 'X',
+            })
+            .collect();
+        table.row(&[
+            format!("{n}"),
+            format!("{:.3}", t_pp.total_s),
+            format!("{:.0}%", t_pp.utilization * 100.0),
+            format!("{:.3}", t_st.total_s),
+            format!("{:.0}%", t_st.utilization * 100.0),
+            format!("-{:.1}%", (1.0 - t_st.total_s / t_pp.total_s) * 100.0),
+            classes,
+        ]);
+        dat.push_str(&format!("{n} {} {}\n", t_pp.total_s, t_st.total_s));
+
+        assert!(t_st.total_s <= t_pp.total_s + 1e-9);
+        assert!(t_st.utilization >= t_pp.utilization - 1e-9);
+    }
+    table.print();
+    println!(
+        "\nPP stays pinned to the 60% straggler at every N; STADI \
+         reassigns steps (H) and rows instead."
+    );
+    expt::save_results("ext_scale.dat", &dat)?;
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! EXTENSION: serving-level impact — how the scheduler's single-
+//! request gains compound under load (M/G/1 queueing on the DES
+//! substrate; see `serve::sim`).
+//!
+//! Service times come from the calibrated timeline simulation of each
+//! scheduler on the [0%, 50%] 2-GPU cluster; arrivals are Poisson at a
+//! sweep of rates. Near saturation the sojourn-time gap between STADI
+//! and patch parallelism far exceeds the raw service-time gap — the
+//! classic rho/(1-rho) amplification.
+
+use stadi::baselines::patch_parallel;
+use stadi::coordinator::timeline;
+use stadi::expt;
+use stadi::model::schedule::Schedule;
+use stadi::runtime::ExecService;
+use stadi::sched::plan::Plan;
+use stadi::serve::sim::simulate_open_loop;
+use stadi::util::benchkit::Table;
+use stadi::util::plot::{render, Series};
+
+fn main() -> stadi::Result<()> {
+    if !expt::artifacts_available() {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return Ok(());
+    }
+    let svc = ExecService::spawn(expt::artifacts_dir())?;
+    let model = svc.handle().manifest().model.clone();
+    let schedule = Schedule::from_info(&svc.handle().manifest().schedule);
+    let cost = expt::calibrated_cost(&svc)?;
+    let comm = expt::paper_comm();
+    let params = expt::paper_params();
+
+    let occ = [0.0, 0.5];
+    let cluster = expt::cluster_with_occ(&occ, cost);
+    let speeds = expt::speeds_for_occ(&occ);
+
+    let pp_plan = patch_parallel::plan(
+        &schedule, 2, &params, model.latent_h, model.row_granularity,
+    )?;
+    let s_pp = timeline::simulate(&pp_plan, &cluster, &comm, &model)?
+        .total_s;
+    let stadi_plan = Plan::build(
+        &schedule,
+        &speeds,
+        &expt::names(2),
+        &params,
+        model.latent_h,
+        model.row_granularity,
+    )?;
+    let s_st = timeline::simulate(&stadi_plan, &cluster, &comm, &model)?
+        .total_s;
+    println!(
+        "# serving under load, occ [0%,50%]: service PP={s_pp:.3}s \
+         STADI={s_st:.3}s ({:.1}% faster)",
+        (1.0 - s_st / s_pp) * 100.0
+    );
+
+    let n_requests = 600;
+    let mut table = Table::new(&[
+        "arrival rps", "rho(PP)", "PP p95 sojourn", "rho(STADI)",
+        "STADI p95 sojourn", "p95 gain",
+    ]);
+    let mut series_pp = Series::new("PP", 'o');
+    let mut series_st = Series::new("STADI", '#');
+    let mut dat = String::new();
+    // Sweep up to just under STADI's saturation point.
+    let max_rate = 0.95 / s_st;
+    for i in 1..=6 {
+        let rate = max_rate * i as f64 / 6.0;
+        let q_pp = simulate_open_loop(rate, n_requests, &[s_pp], 11);
+        let q_st = simulate_open_loop(rate, n_requests, &[s_st], 11);
+        let gain = (1.0 - q_st.p95_sojourn_s / q_pp.p95_sojourn_s) * 100.0;
+        table.row(&[
+            format!("{rate:.2}"),
+            format!("{:.2}", rate * s_pp),
+            format!("{:.2}s", q_pp.p95_sojourn_s),
+            format!("{:.2}", rate * s_st),
+            format!("{:.2}s", q_st.p95_sojourn_s),
+            format!("-{gain:.0}%"),
+        ]);
+        series_pp.push(rate, q_pp.p95_sojourn_s);
+        series_st.push(rate, q_st.p95_sojourn_s);
+        dat.push_str(&format!(
+            "{rate} {} {}\n",
+            q_pp.p95_sojourn_s, q_st.p95_sojourn_s
+        ));
+        // STADI must dominate; the gap must exceed the raw service
+        // gap once PP nears saturation.
+        assert!(q_st.p95_sojourn_s <= q_pp.p95_sojourn_s + 1e-9);
+        if rate * s_pp > 0.9 {
+            assert!(
+                gain / 100.0 > (1.0 - s_st / s_pp),
+                "queueing should amplify the service-time gap"
+            );
+        }
+    }
+    table.print();
+    println!("\np95 sojourn vs arrival rate:");
+    print!("{}", render(&[series_pp, series_st], 60, 12));
+    expt::save_results("ext_serving.dat", &dat)?;
+    Ok(())
+}

@@ -1,0 +1,143 @@
+//! Fig. 9 reproduction: inference latency as a function of the patch
+//! ratio, per occupancy setting, with the ratio STADI actually picks
+//! marked.
+//!
+//! Paper setup: uniform steps (TA off — this figure isolates spatial
+//! behaviour), patch rows of GPU0 swept 4..28 (GPU1 gets the rest),
+//! occupancies [0,20], [0,40], [0,60]. Expectations (shape): each
+//! curve is U-shaped with the optimum shifting toward larger GPU0
+//! patches as GPU1's occupancy grows; the dashed 16:16 latency (pure
+//! PP) sits above the optimum; STADI's chosen ratio lands at or next
+//! to the minimum — except under extreme imbalance where the fixed
+//! per-step overhead breaks linearity (the paper's own caveat).
+
+use stadi::baselines::patch_parallel;
+use stadi::coordinator::timeline;
+use stadi::expt;
+use stadi::model::schedule::Schedule;
+use stadi::runtime::ExecService;
+use stadi::sched::plan::Plan;
+use stadi::util::benchkit::Table;
+
+fn main() -> stadi::Result<()> {
+    if !expt::artifacts_available() {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return Ok(());
+    }
+    let svc = ExecService::spawn(expt::artifacts_dir())?;
+    let model = svc.handle().manifest().model.clone();
+    let schedule = Schedule::from_info(&svc.handle().manifest().schedule);
+    let cost = expt::calibrated_cost(&svc)?;
+    let comm = expt::paper_comm();
+    // TA off: Fig. 9 isolates the spatial axis.
+    let mut params = expt::paper_params();
+    params.temporal = false;
+
+    let ratios: Vec<[usize; 2]> = (1..8).map(|g| [4 * g, 32 - 4 * g]).collect();
+
+    println!(
+        "# Fig. 9 — latency vs patch ratio (uniform steps, M={})",
+        params.m_base
+    );
+    let mut dat = String::new();
+    for occ in [[0.0, 0.2], [0.0, 0.4], [0.0, 0.6]] {
+        let cluster = expt::cluster_with_occ(&occ, cost);
+        let speeds = expt::speeds_for_occ(&occ);
+
+        // STADI's spatial choice for this setting (SA only).
+        let stadi_plan = Plan::build(
+            &schedule,
+            &speeds,
+            &expt::names(2),
+            &params,
+            model.latent_h,
+            model.row_granularity,
+        )?;
+        let chosen = stadi_plan.devices[0].rows.rows;
+
+        let mut table = Table::new(&[
+            "ratio g0:g1", "latency(s)", "marker",
+        ]);
+        let mut best = (0usize, f64::INFINITY);
+        let mut lat = Vec::new();
+        for r in &ratios {
+            let plan =
+                patch_parallel::plan_with_sizes(&schedule, r, &params)?;
+            let tl = timeline::simulate(&plan, &cluster, &comm, &model)?;
+            lat.push((r[0], tl.total_s));
+            if tl.total_s < best.1 {
+                best = (r[0], tl.total_s);
+            }
+        }
+        for &(rows, t) in &lat {
+            let mut marker = String::new();
+            if rows == 16 {
+                marker.push_str("-- pure PP");
+            }
+            if rows == chosen {
+                marker.push_str(" ▲ STADI pick");
+            }
+            if rows == best.0 {
+                marker.push_str(" (min)");
+            }
+            table.row(&[
+                format!("{rows}:{}", 32 - rows),
+                format!("{t:.3}"),
+                marker,
+            ]);
+            dat.push_str(&format!(
+                "{} {} {rows} {t}\n",
+                occ[0], occ[1]
+            ));
+        }
+        println!(
+            "\n## occupancy [{:.0}%, {:.0}%] — STADI picks {chosen}:{}",
+            occ[0] * 100.0,
+            occ[1] * 100.0,
+            32 - chosen
+        );
+        table.print();
+
+        // Shape assertions. At mild/moderate imbalance the Eq. 5 pick
+        // lands at (or next to) the sweep optimum. Under a heavy load
+        // gap the paper itself observes the divergence we see here:
+        // "patch allocation based on effective speed may not yield
+        // optimal results, as the single-step delay no longer
+        // maintains a linear relationship with the patch size due to
+        // some fixed overhead" — so there we only require the pick to
+        // strictly beat pure PP.
+        let chosen_latency = lat
+            .iter()
+            .find(|&&(r, _)| r == chosen)
+            .map(|&(_, t)| t)
+            .unwrap_or_else(|| {
+                // Chosen size off the 4-row sweep lattice (granularity
+                // is 2): simulate it directly.
+                let plan = patch_parallel::plan_with_sizes(
+                    &schedule,
+                    &[chosen, 32 - chosen],
+                    &params,
+                )
+                .unwrap();
+                timeline::simulate(&plan, &cluster, &comm, &model)
+                    .unwrap()
+                    .total_s
+            });
+        let pp_latency =
+            lat.iter().find(|&&(r, _)| r == 16).unwrap().1;
+        if occ[1] - occ[0] <= 0.41 {
+            assert!(
+                (chosen as i64 - best.0 as i64).unsigned_abs() <= 4,
+                "STADI pick {chosen} far from sweep optimum {}",
+                best.0
+            );
+        }
+        assert!(
+            chosen_latency < pp_latency,
+            "STADI's ratio must beat pure PP: {chosen_latency} vs \
+             {pp_latency}"
+        );
+    }
+    expt::save_results("fig9_patch_sweep.dat", &dat)?;
+    Ok(())
+}

@@ -1,0 +1,173 @@
+//! Table II + Fig. 7 reproduction: image quality of Origin, patch
+//! parallelism and STADI (three patch splits) at M_base ∈ {100, 50},
+//! with REAL end-to-end generation through the AOT'd model.
+//!
+//! Substitutions (DESIGN.md §3): "ground truth" images are Origin
+//! generations at disjoint seeds (standing in for COCO val images);
+//! LPIPS/FID use the fixed random feature net ("-proxy"). What must
+//! reproduce (shape, per the paper):
+//!   * PSNR w/ G.T. ≈ flat low band for every method (unrelated
+//!     images), differences < 0.1 dB-scale;
+//!   * PSNR w/ Orig.: PP > STADI (step reduction costs fidelity),
+//!     both far above the G.T. band;
+//!   * FID-proxy w/ G.T.: method-to-method gap small (paper: < 1);
+//!   * quality degrades slightly as M_base halves.
+//!
+//! Fig. 7 artifacts: per-config PGM mosaics under bench_out/fig7_*.pgm
+//! and the per-split FID rows.
+
+use stadi::baselines::{origin, patch_parallel};
+use stadi::coordinator::dataflow;
+use stadi::expt;
+use stadi::metrics::{fid, lpips, psnr};
+use stadi::model::latents::{seeded_cond, seeded_noise};
+use stadi::model::schedule::Schedule;
+use stadi::runtime::{ExecService, Tensor};
+use stadi::sched::plan::Plan;
+use stadi::util::benchkit::Table;
+use stadi::util::stats;
+
+const N_IMAGES: usize = 10;
+const GT_SEED_BASE: u64 = 5000;
+
+fn main() -> stadi::Result<()> {
+    if !expt::artifacts_available() {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return Ok(());
+    }
+    let svc = ExecService::spawn(expt::artifacts_dir())?;
+    let exec = svc.handle();
+    let model = exec.manifest().model.clone();
+    let schedule = Schedule::from_info(&exec.manifest().schedule);
+
+    let run = |plan: &Plan, seed: u64| -> stadi::Result<Tensor> {
+        let noise = seeded_noise(&model, seed);
+        let cond = seeded_cond(&model, seed);
+        Ok(dataflow::execute(&exec, plan, &noise, &cond)?.latent)
+    };
+
+    // "Ground truth" set: Origin generations at disjoint seeds
+    // (COCO-val stand-in; full M=100 quality).
+    let mut params_gt = expt::paper_params();
+    params_gt.m_base = 100;
+    let gt_plan = origin::plan(
+        &schedule, &params_gt, model.latent_h, model.row_granularity,
+    )?;
+    eprintln!("generating {N_IMAGES} ground-truth images (Origin M=100)...");
+    let gt_set: Vec<Tensor> = (0..N_IMAGES)
+        .map(|i| run(&gt_plan, GT_SEED_BASE + i as u64))
+        .collect::<stadi::Result<_>>()?;
+
+    for m_base in [100usize, 50] {
+        let mut params = expt::paper_params();
+        params.m_base = m_base;
+        println!("\n# Table II — M_base = {m_base} ({N_IMAGES} images)");
+
+        // Method plans. STADI: device 1 in the Half band (speeds
+        // [1.0, 0.5]) with the three forced splits of the paper.
+        let origin_plan = origin::plan(
+            &schedule, &params, model.latent_h, model.row_granularity,
+        )?;
+        let pp_plan = patch_parallel::plan(
+            &schedule, 2, &params, model.latent_h, model.row_granularity,
+        )?;
+        let stadi_speeds = [1.0, 0.5];
+        let splits: [[usize; 2]; 3] = [[24, 8], [16, 16], [8, 24]];
+
+        let mut methods: Vec<(String, Plan)> = vec![
+            ("Origin".into(), origin_plan.clone()),
+            ("PatchPar 16:16".into(), pp_plan),
+        ];
+        for s in splits {
+            methods.push((
+                format!("STADI {}:{}", s[0], s[1]),
+                Plan::build_with_sizes(
+                    &schedule,
+                    &stadi_speeds,
+                    &expt::names(2),
+                    &params,
+                    &s,
+                )?,
+            ));
+        }
+
+        // Origin set for "w/ Orig." references (same seeds as methods).
+        eprintln!("  generating Origin references...");
+        let orig_set: Vec<Tensor> = (0..N_IMAGES)
+            .map(|i| run(&origin_plan, i as u64))
+            .collect::<stadi::Result<_>>()?;
+
+        let mut table = Table::new(&[
+            "method", "PSNR w/GT", "PSNR w/Orig", "LPIPSp w/GT",
+            "LPIPSp w/Orig", "FIDp w/GT", "FIDp w/Orig",
+        ]);
+        let mut dat = String::new();
+        for (name, plan) in &methods {
+            eprintln!("  running {name}...");
+            let set: Vec<Tensor> = (0..N_IMAGES)
+                .map(|i| run(plan, i as u64))
+                .collect::<stadi::Result<_>>()?;
+
+            let mut p_gt = Vec::new();
+            let mut p_or = Vec::new();
+            let mut l_gt = Vec::new();
+            let mut l_or = Vec::new();
+            for i in 0..N_IMAGES {
+                p_gt.push(psnr::psnr(&set[i], &gt_set[i]));
+                l_gt.push(lpips::lpips(&exec, &set[i], &gt_set[i])?);
+                if name != "Origin" {
+                    p_or.push(psnr::psnr(&set[i], &orig_set[i]));
+                    l_or.push(lpips::lpips(&exec, &set[i], &orig_set[i])?);
+                }
+            }
+            let f_gt = fid::fid(&exec, &set, &gt_set)?;
+            let f_or = if name == "Origin" {
+                f64::NAN
+            } else {
+                fid::fid(&exec, &set, &orig_set)?
+            };
+            let fmt_opt = |v: &Vec<f64>, prec: usize| {
+                if v.is_empty() {
+                    "-".to_string()
+                } else {
+                    format!("{:.*}", prec, stats::mean(v))
+                }
+            };
+            table.row(&[
+                name.clone(),
+                format!("{:.2}", stats::mean(&p_gt)),
+                fmt_opt(&p_or, 2),
+                format!("{:.3}", stats::mean(&l_gt)),
+                fmt_opt(&l_or, 5),
+                format!("{f_gt:.2}"),
+                if f_or.is_nan() {
+                    "-".into()
+                } else {
+                    format!("{f_or:.2}")
+                },
+            ]);
+            dat.push_str(&format!(
+                "{m_base} {name:?} {} {} {} {f_gt} {f_or}\n",
+                stats::mean(&p_gt),
+                fmt_opt(&p_or, 6),
+                fmt_opt(&l_or, 8),
+            ));
+
+            // Fig. 7 visual artifact for the first image.
+            let pgm = expt::latent_to_pgm(&set[0]);
+            let fname = format!(
+                "fig7_m{m_base}_{}.pgm",
+                name.replace([' ', ':'], "_")
+            );
+            std::fs::create_dir_all("bench_out")?;
+            std::fs::write(format!("bench_out/{fname}"), pgm)?;
+        }
+        table.print();
+        expt::save_results(&format!("table2_m{m_base}.dat"), &dat)?;
+    }
+    println!(
+        "\npaper shape: PSNR w/Orig: PP ≈ 24.7 > STADI ≈ 22-23; \
+         PSNR w/GT flat ≈ 9.5 band; FID(GT) method gap < 1."
+    );
+    Ok(())
+}

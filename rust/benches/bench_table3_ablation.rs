@@ -1,0 +1,103 @@
+//! Table III reproduction: ablation of STADI's two mechanisms at
+//! occupancies [0,20], [0,40], [0,60] on the 2-GPU testbed.
+//!
+//!   None    — patch parallelism (uniform patches, uniform steps)
+//!   +SA     — spatial adaptation only
+//!   +TA     — temporal adaptation only
+//!   +TA+SA  — full STADI
+//!
+//! Paper values (shape to match): speedups over None grow with
+//! imbalance — ~1.13/1.32/1.37x at [0,20] up to ~1.34/1.82/1.83x at
+//! [0,60]; +TA dominates +SA under heavy imbalance; +TA+SA is best
+//! everywhere.
+
+use stadi::coordinator::timeline;
+use stadi::expt;
+use stadi::model::schedule::Schedule;
+use stadi::runtime::ExecService;
+use stadi::sched::plan::Plan;
+use stadi::util::benchkit::Table;
+
+fn main() -> stadi::Result<()> {
+    if !expt::artifacts_available() {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return Ok(());
+    }
+    let svc = ExecService::spawn(expt::artifacts_dir())?;
+    let model = svc.handle().manifest().model.clone();
+    let schedule = Schedule::from_info(&svc.handle().manifest().schedule);
+    let cost = expt::calibrated_cost(&svc)?;
+    let comm = expt::paper_comm();
+
+    let variants: [(&str, bool, bool); 4] = [
+        ("None", false, false),
+        ("+SA", false, true),
+        ("+TA", true, false),
+        ("+TA+SA", true, true),
+    ];
+
+    println!("# Table III — ablation (M_base=100, warmup=4)");
+    let mut table = Table::new(&[
+        "occupancy", "None(s)", "+SA", "+TA", "+TA+SA",
+    ]);
+    let mut dat = String::new();
+    for occ in [[0.0, 0.2], [0.0, 0.4], [0.0, 0.6]] {
+        let cluster = expt::cluster_with_occ(&occ, cost);
+        let speeds = expt::speeds_for_occ(&occ);
+        let mut lat = Vec::new();
+        for (_, ta, sa) in variants {
+            let mut params = expt::paper_params();
+            params.temporal = ta;
+            params.spatial = sa;
+            // "None"/"+TA" use uniform patches; the plan builder does
+            // that when spatial=false. "None" with uniform steps is
+            // exactly DistriFusion.
+            let plan = Plan::build(
+                &schedule,
+                &speeds,
+                &expt::names(2),
+                &params,
+                model.latent_h,
+                model.row_granularity,
+            )?;
+            let tl = timeline::simulate(&plan, &cluster, &comm, &model)?;
+            lat.push(tl.total_s);
+        }
+        let base = lat[0];
+        let fmt = |t: f64| format!("{t:.3} ({:.2}x)", base / t);
+        table.row(&[
+            format!("[{:.0}%,{:.0}%]", occ[0] * 100.0, occ[1] * 100.0),
+            format!("{base:.3}"),
+            fmt(lat[1]),
+            fmt(lat[2]),
+            fmt(lat[3]),
+        ]);
+        dat.push_str(&format!(
+            "{} {} {} {} {} {}\n",
+            occ[0], occ[1], lat[0], lat[1], lat[2], lat[3]
+        ));
+
+        // Shape assertions per the paper.
+        assert!(lat[1] <= base && lat[3] <= base, "adaptations must help");
+        assert!(
+            lat[3] <= lat[1] + 1e-9 && lat[3] <= lat[2] + 1e-9,
+            "+TA+SA must be the best"
+        );
+        if occ[1] >= 0.4 {
+            assert!(
+                lat[2] < lat[1],
+                "+TA should beat +SA under heavy imbalance \
+                 ({} vs {} at {occ:?})",
+                lat[2],
+                lat[1]
+            );
+        }
+    }
+    table.print();
+    println!(
+        "\npaper bands: 1.13/1.32/1.37x at [0,20] ... \
+         1.34/1.82/1.83x at [0,60] (SA/TA/TA+SA over None)."
+    );
+    expt::save_results("table3_ablation.dat", &dat)?;
+    Ok(())
+}

@@ -1,0 +1,226 @@
+//! Theorems 1-2 empirical validation: temporal redundancy is O(1/M).
+//!
+//! Thm 1 (DistriFusion): the per-step state difference |x_{t_m} -
+//! x_{t_{m+1}}| of a DDIM trajectory is bounded by C·T/M. We run real
+//! sequential trajectories for a sweep of M and fit log-log slope of
+//! mean per-step drift vs M — expect ≈ -1.
+//!
+//! Thm 2 (STADI): two devices running grids with 2:1 step counts stay
+//! O(1/M)-consistent at aligned timesteps. We run the fast grid and
+//! the STADI slow grid (same model, same seed) and measure the state
+//! difference at every common timestep — again expect slope ≈ -1 in M.
+
+use stadi::expt;
+use stadi::model::sampler;
+use stadi::model::latents::{seeded_cond, seeded_noise};
+use stadi::model::schedule::Schedule;
+use stadi::runtime::{ExecService, Tensor};
+use stadi::util::benchkit::Table;
+use stadi::util::stats;
+
+fn main() -> stadi::Result<()> {
+    if !expt::artifacts_available() {
+        eprintln!("artifacts not built — run `make artifacts`");
+        return Ok(());
+    }
+    let svc = ExecService::spawn(expt::artifacts_dir())?;
+    let exec = svc.handle();
+    let model = exec.manifest().model.clone();
+    let schedule = Schedule::from_info(&exec.manifest().schedule);
+    let h = model.latent_h;
+
+    // Sequential full-image trajectory over a grid; returns states
+    // after each step, keyed by post timestep.
+    let mut run_grid = |grid: &[usize], seed: u64| -> stadi::Result<Vec<(Option<usize>, Tensor)>> {
+        let mut x = seeded_noise(&model, seed);
+        let cond = seeded_cond(&model, seed);
+        let mut kv = Tensor::zeros(&model.kv_shape());
+        let coefs = schedule.grid_coefficients(grid);
+        let mut out = Vec::new();
+        for (k, (&t, c)) in grid.iter().zip(&coefs).enumerate() {
+            let o = exec.denoise(h, &x, &kv, 0, t as f64, &cond)?;
+            kv = {
+                // Full-image forward returns all tokens fresh.
+                let mut full = Tensor::zeros(&model.kv_shape());
+                full.data.copy_from_slice(&o.kv_fresh.data);
+                full
+            };
+            sampler::ddim_update_rows(&mut x, &o.eps_patch, 0, *c);
+            out.push((grid.get(k + 1).copied(), x.clone()));
+        }
+        Ok(out)
+    };
+
+    // ---------------------------------------------------- Theorem 1
+    println!("# Thm 1 — per-step drift |x_m - x_{{m+1}}| vs M (expect O(1/M))");
+    let ms = [8usize, 16, 32, 64, 128];
+    let mut t1 = Table::new(&["M", "mean per-step |Δx|", "M·drift (≈const)"]);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    let mut dat = String::new();
+    for &m in &ms {
+        let grid = schedule.ddim_grid(m);
+        let traj = run_grid(&grid, 3)?;
+        let mut drifts = Vec::new();
+        // Skip the last step (to clean) — it is a jump to x0_hat, not
+        // a small increment; the theorem's bound is about interior
+        // steps.
+        for w in traj.windows(2).take(traj.len().saturating_sub(2)) {
+            let d: f64 = w[0]
+                .1
+                .data
+                .iter()
+                .zip(&w[1].1.data)
+                .map(|(a, b)| ((a - b).abs()) as f64)
+                .sum::<f64>()
+                / w[0].1.data.len() as f64;
+            drifts.push(d);
+        }
+        let mean = stats::mean(&drifts);
+        t1.row(&[
+            format!("{m}"),
+            format!("{mean:.5}"),
+            format!("{:.3}", mean * m as f64),
+        ]);
+        xs.push((m as f64).ln());
+        ys.push(mean.ln());
+        dat.push_str(&format!("{m} {mean}\n"));
+    }
+    t1.print();
+    let (_, slope, r2) = stats::linear_fit(&xs, &ys);
+    println!("log-log slope = {slope:.3} (R² {r2:.3}); O(1/M) ⇒ ≈ -1");
+    assert!(
+        (-1.35..=-0.65).contains(&slope),
+        "Thm 1 drift slope {slope} not ≈ -1"
+    );
+    expt::save_results("theory_thm1.dat", &dat)?;
+
+    // ------------------------------------------------- Theorem 2 (a)
+    // First-order consistency: the local error of one doubled step
+    // (fast[ k ] -> fast[k+2]) against two single steps must scale as
+    // h² — the mechanism behind Thm 2's O(n²/M²) local bound.
+    println!(
+        "\n# Thm 2a — local double-step vs two-single-steps error at \
+         t≈600 (expect O(h²))"
+    );
+    let mut t2a = Table::new(&["M", "h", "local |Δx|", "local/h²·1e6"]);
+    let mut xs2 = Vec::new();
+    let mut ys2 = Vec::new();
+    let mut dat2 = String::new();
+    let cond7 = seeded_cond(&model, 7);
+    let mut g7 = stadi::util::rng::NormalGen::new(7);
+    let n_el: usize = model.latent_shape().iter().product();
+    let x_probe = Tensor::new(model.latent_shape(), g7.vec_f32(n_el))?;
+    let kv0 = Tensor::zeros(&model.kv_shape());
+    for &m in &[32usize, 64, 128, 256] {
+        let grid = schedule.ddim_grid(m);
+        let k = (0..grid.len() - 2)
+            .min_by_key(|&i| (grid[i] as i64 - 600).unsigned_abs())
+            .unwrap();
+        let (t0, t1, t2) = (grid[k], grid[k + 1], grid[k + 2]);
+        let c0 = schedule.ddim_coefficients(t0, Some(t1));
+        let c1 = schedule.ddim_coefficients(t1, Some(t2));
+        let cd = schedule.ddim_coefficients(t0, Some(t2));
+        let e0 = exec.denoise(h, &x_probe, &kv0, 0, t0 as f64, &cond7)?;
+        let x1 = sampler::ddim_update(&x_probe, &e0.eps_patch, c0);
+        let e1 = exec.denoise(h, &x1, &kv0, 0, t1 as f64, &cond7)?;
+        let x2 = sampler::ddim_update(&x1, &e1.eps_patch, c1);
+        let x2d = sampler::ddim_update(&x_probe, &e0.eps_patch, cd);
+        let local: f64 = x2
+            .data
+            .iter()
+            .zip(&x2d.data)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum::<f64>()
+            / x2.data.len() as f64;
+        let hstep = (t0 - t2) as f64 / 2.0;
+        t2a.row(&[
+            format!("{m}"),
+            format!("{hstep:.0}"),
+            format!("{local:.3e}"),
+            format!("{:.2}", local / (hstep * hstep) * 1e6),
+        ]);
+        xs2.push(hstep.ln());
+        ys2.push(local.ln());
+        dat2.push_str(&format!("{m} {hstep} {local}\n"));
+    }
+    t2a.print();
+    let (_, slope2, r22) = stats::linear_fit(&xs2, &ys2);
+    println!("log-log slope in h = {slope2:.3} (R² {r22:.3}); expect ≈ 2");
+    assert!(
+        (1.5..=2.5).contains(&slope2),
+        "Thm 2 local error slope {slope2} not ≈ 2"
+    );
+    expt::save_results("theory_thm2_local.dat", &dat2)?;
+
+    // ------------------------------------------------- Theorem 2 (b)
+    // Operational claim: the end-to-end mixed-grid (2:1) divergence at
+    // aligned timesteps stays BELOW the per-step temporal redundancy
+    // the *slow device itself* tolerates (its steps span 2·T/M — that
+    // is the staleness scale its buffer reuse is built on, and what
+    // Thm 2 compares against via n=2).
+    println!(
+        "\n# Thm 2b — mixed-grid end gap vs the slow grid's per-step \
+         redundancy (gap/drift must stay < 1)"
+    );
+    let warmup = 4usize;
+    let mut t2b = Table::new(&[
+        "M (fast)", "end gap", "slow per-step drift", "ratio",
+    ]);
+    let mut dat2b = String::new();
+    for &m in &[16usize, 32, 64, 128] {
+        let fast = schedule.ddim_grid(m);
+        let slow = Schedule::stadi_slow_grid(&fast, warmup);
+        let tf = run_grid(&fast, 7)?;
+        let ts = run_grid(&slow, 7)?;
+        // Gap at the final aligned state (pre-clean).
+        let (_, x_f_end) = &tf[tf.len() - 2];
+        let (_, x_s_end) = &ts[ts.len() - 2];
+        let gap: f64 = x_f_end
+            .data
+            .iter()
+            .zip(&x_s_end.data)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum::<f64>()
+            / x_f_end.data.len() as f64;
+        // Per-step drift of the SLOW trajectory (the doubled-step
+        // redundancy the slow device reuses buffers across).
+        let mut drifts = Vec::new();
+        for w in ts.windows(2).take(ts.len().saturating_sub(2)) {
+            let d: f64 = w[0]
+                .1
+                .data
+                .iter()
+                .zip(&w[1].1.data)
+                .map(|(a, b)| (a - b).abs() as f64)
+                .sum::<f64>()
+                / w[0].1.data.len() as f64;
+            drifts.push(d);
+        }
+        let drift = stats::mean(&drifts);
+        let ratio = gap / drift;
+        t2b.row(&[
+            format!("{m}"),
+            format!("{gap:.4}"),
+            format!("{drift:.4}"),
+            format!("{ratio:.3}"),
+        ]);
+        dat2b.push_str(&format!("{m} {gap} {drift}\n"));
+        assert!(
+            ratio < 1.0,
+            "mixed-grid gap {gap} exceeds tolerated redundancy {drift} \
+             at M={m}"
+        );
+    }
+    t2b.print();
+    expt::save_results("theory_thm2_gap.dat", &dat2b)?;
+
+    println!(
+        "\nconclusion: doubled steps are first-order consistent (2a) \
+         and the resulting cross-device divergence stays within the \
+         staleness budget patch parallelism already tolerates (2b) — \
+         the property that lets STADI cut slow-GPU steps without \
+         breaking buffer alignment."
+    );
+    Ok(())
+}

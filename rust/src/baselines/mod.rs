@@ -1,0 +1,6 @@
+//! Baselines from the paper's evaluation (§V): non-distributed Origin,
+//! DistriFusion-style patch parallelism, and tensor parallelism.
+
+pub mod origin;
+pub mod patch_parallel;
+pub mod tensor_parallel;

@@ -1,0 +1,46 @@
+//! Origin baseline: non-distributed inference on one device
+//! (paper Table II "Origin"). The reference images for PSNR "w/ Orig."
+//! come from here.
+
+use crate::config::StadiParams;
+use crate::error::Result;
+use crate::model::schedule::Schedule;
+use crate::sched::plan::Plan;
+
+/// Single-device plan running all M_base steps on the full latent.
+pub fn plan(
+    schedule: &Schedule,
+    params: &StadiParams,
+    total_rows: usize,
+    granularity: usize,
+) -> Result<Plan> {
+    let p = StadiParams {
+        temporal: false,
+        spatial: false,
+        ..params.clone()
+    };
+    Plan::build(
+        schedule,
+        &[1.0],
+        &["origin".to_string()],
+        &p,
+        total_rows,
+        granularity,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn origin_owns_everything() {
+        let s = Schedule::scaled_linear(1000, 0.00085, 0.012);
+        let p = plan(&s, &StadiParams::default(), 32, 4).unwrap();
+        assert_eq!(p.devices.len(), 1);
+        assert_eq!(p.devices[0].rows.rows, 32);
+        assert_eq!(p.devices[0].steps.len(), 100);
+        // Every step syncs trivially (single participant).
+        assert!(p.devices[0].steps.iter().all(|st| st.sync));
+    }
+}

@@ -1,0 +1,67 @@
+//! DistriFusion-style patch parallelism (paper §II-B, the primary
+//! baseline): uniform patches, uniform step counts, per-step
+//! synchronization, asynchronous stale-activation reuse. Exactly
+//! STADI with both adaptations disabled — which is how the paper
+//! frames it (Table III "None").
+
+use crate::config::StadiParams;
+use crate::error::Result;
+use crate::model::schedule::Schedule;
+use crate::sched::plan::Plan;
+
+/// Uniform patch-parallel plan over `n` devices. DistriFusion assumes
+/// homogeneous devices, so speeds are forced to 1.0 (no exclusion, no
+/// adaptation) regardless of actual cluster state — that blindness is
+/// precisely the straggler effect of Figs. 2-3.
+pub fn plan(
+    schedule: &Schedule,
+    n: usize,
+    params: &StadiParams,
+    total_rows: usize,
+    granularity: usize,
+) -> Result<Plan> {
+    let p = StadiParams { temporal: false, spatial: false, ..params.clone() };
+    let speeds = vec![1.0; n];
+    let names: Vec<String> = (0..n).map(|i| format!("pp{i}")).collect();
+    Plan::build(schedule, &speeds, &names, &p, total_rows, granularity)
+}
+
+/// Patch-parallel plan with an explicit row split (Fig. 9's patch-size
+/// sweep: uniform steps, custom ratio).
+pub fn plan_with_sizes(
+    schedule: &Schedule,
+    sizes: &[usize],
+    params: &StadiParams,
+) -> Result<Plan> {
+    let p = StadiParams { temporal: false, spatial: false, ..params.clone() };
+    let speeds = vec![1.0; sizes.len()];
+    let names: Vec<String> =
+        (0..sizes.len()).map(|i| format!("pp{i}")).collect();
+    Plan::build_with_sizes(schedule, &speeds, &names, &p, sizes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_two_device_plan() {
+        let s = Schedule::scaled_linear(1000, 0.00085, 0.012);
+        let p = plan(&s, 2, &StadiParams::default(), 32, 4).unwrap();
+        assert_eq!(p.devices[0].rows.rows, 16);
+        assert_eq!(p.devices[1].rows.rows, 16);
+        assert_eq!(p.devices[0].steps.len(), 100);
+        assert_eq!(p.devices[1].steps.len(), 100);
+        assert_eq!(p.sync_points.len(), 100);
+    }
+
+    #[test]
+    fn custom_ratio_plan() {
+        let s = Schedule::scaled_linear(1000, 0.00085, 0.012);
+        let p =
+            plan_with_sizes(&s, &[24, 8], &StadiParams::default()).unwrap();
+        assert_eq!(p.devices[0].rows.rows, 24);
+        assert_eq!(p.devices[1].rows.rows, 8);
+        assert_eq!(p.total_rows(), 32);
+    }
+}

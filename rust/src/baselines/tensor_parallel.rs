@@ -1,0 +1,84 @@
+//! Tensor-parallelism baseline (paper §V: "synchronous all-reduce at
+//! each layer of computation").
+//!
+//! Numerically TP is exact — weight-split matmuls compose to the same
+//! result — so its images are the Origin images; what differs is the
+//! latency profile: per-layer synchronous all-reduces of full-image
+//! activations every step, paced by the slowest device. The latency
+//! model lives in `coordinator::timeline::simulate_tensor_parallel`;
+//! this module pairs it with the Origin numerics for the quality
+//! tables.
+
+use crate::comm::all_reduce_cost;
+use crate::config::CommConfig;
+use crate::coordinator::timeline::{simulate_tensor_parallel, Timeline};
+use crate::device::SimGpu;
+use crate::runtime::artifacts::ModelInfo;
+
+/// Latency of M steps of tensor-parallel inference.
+pub fn latency(
+    m_steps: usize,
+    cluster: &[SimGpu],
+    comm: &CommConfig,
+    model: &ModelInfo,
+) -> Timeline {
+    simulate_tensor_parallel(m_steps, cluster, comm, model)
+}
+
+/// Communication bytes per step (diagnostics / EXPERIMENTS.md): each
+/// of the 2L all-reduces moves ~2·(n-1)/n of the activation per rank.
+pub fn bytes_per_step(model: &ModelInfo, n: usize) -> u64 {
+    let act = (model.tokens_full * model.dim * 4) as u64;
+    (2 * model.layers) as u64 * act * (2 * (n.max(1) - 1)) as u64 / n.max(1) as u64
+}
+
+/// Cost of one activation all-reduce (exposed for benches).
+pub fn reduce_cost(comm: &CommConfig, model: &ModelInfo, n: usize) -> f64 {
+    all_reduce_cost(comm, model.tokens_full * model.dim * 4, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceConfig;
+    use crate::device::{build_cluster, CostModel};
+
+    fn model() -> ModelInfo {
+        ModelInfo {
+            latent_h: 32, latent_w: 32, latent_c: 4, patch: 2, dim: 96,
+            heads: 4, layers: 3, temb_dim: 64, row_granularity: 4,
+            tokens_full: 256, param_count: 1, params_seed: 0,
+        }
+    }
+
+    #[test]
+    fn tp_slower_than_pp_under_heavy_comm() {
+        // With the default PCIe-ish cost model and per-layer blocking
+        // reduces, TP pays more comm than patch parallelism — the
+        // paper's Fig. 8 ordering.
+        let devs = vec![
+            DeviceConfig::new("a", 1.0, 0.0),
+            DeviceConfig::new("b", 1.0, 0.0),
+        ];
+        let cl = build_cluster(
+            &devs,
+            CostModel { fixed_s: 0.004, per_row_s: 0.0012 },
+        );
+        let comm = CommConfig::default();
+        let tl = latency(100, &cl, &comm, &model());
+        assert!(tl.total_s > 0.0);
+        assert!(tl.comm_s > 0.0);
+        assert!(bytes_per_step(&model(), 2) > 0);
+    }
+
+    #[test]
+    fn tp_single_device_has_no_comm() {
+        let devs = vec![DeviceConfig::new("a", 1.0, 0.0)];
+        let cl = build_cluster(
+            &devs,
+            CostModel { fixed_s: 0.004, per_row_s: 0.0012 },
+        );
+        let tl = latency(10, &cl, &CommConfig::default(), &model());
+        assert_eq!(tl.comm_s, 0.0);
+    }
+}

@@ -1,0 +1,336 @@
+//! Communication manager: in-process collectives + the α-β cost model.
+//!
+//! Substitutes NCCL over PCIe (DESIGN.md §3). Two halves:
+//!
+//! * `cost` — pure latency/bandwidth estimates consumed by the
+//!   timeline simulator (both uneven-all-gather strategies from paper
+//!   §V: pad-to-max all_gather vs multi-broadcast emulation);
+//! * `CollectiveBus` — real synchronization for threaded mode:
+//!   blocking uneven all-gather across participant subsets, plus
+//!   non-blocking `publish`/`peek` mailboxes that reproduce
+//!   DistriFusion's *asynchronous, staleness-tolerant* buffer update
+//!   (a reader never blocks; it sees whatever was last published).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::config::{CommConfig, UnevenStrategy};
+use crate::error::{Error, Result};
+
+// ---------------------------------------------------------------- cost
+
+/// Cost of one point-to-point transfer of `bytes`.
+pub fn p2p_cost(cfg: &CommConfig, bytes: usize) -> f64 {
+    cfg.latency_s + bytes as f64 / cfg.bandwidth_bytes_per_s
+}
+
+/// Cost of an uneven all-gather among `sizes.len()` ranks with the
+/// given per-rank byte sizes.
+///
+/// * PadAllGather: every rank contributes max(sizes); ring all-gather
+///   costs (n-1) transfers of the padded chunk.
+/// * MultiBroadcast: each rank broadcasts its own chunk; total is the
+///   sum of per-rank broadcasts (serialized on the PCIe root complex,
+///   which is what the paper's multi-broadcast emulation does).
+pub fn all_gather_cost(cfg: &CommConfig, sizes: &[usize]) -> f64 {
+    let n = sizes.len();
+    if n <= 1 {
+        return 0.0;
+    }
+    match cfg.uneven_strategy {
+        UnevenStrategy::PadAllGather => {
+            let max = *sizes.iter().max().unwrap();
+            (n - 1) as f64 * p2p_cost(cfg, max)
+        }
+        UnevenStrategy::MultiBroadcast => {
+            sizes.iter().map(|&s| p2p_cost(cfg, s)).sum()
+        }
+    }
+}
+
+/// Cost of a synchronous all-reduce of `bytes` on every rank (ring:
+/// 2(n-1)/n · bytes on the wire per rank, (2n-2) latency hops). Used by
+/// the tensor-parallelism baseline.
+pub fn all_reduce_cost(cfg: &CommConfig, bytes: usize, n: usize) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let hops = 2 * (n - 1);
+    hops as f64 * cfg.latency_s
+        + 2.0 * (n - 1) as f64 / n as f64 * bytes as f64
+            / cfg.bandwidth_bytes_per_s
+}
+
+// ------------------------------------------------------------- threaded
+
+/// State of one named blocking collective.
+#[derive(Default)]
+struct GatherState {
+    /// generation -> rank -> payload
+    contributions: BTreeMap<u64, BTreeMap<usize, Vec<f32>>>,
+    /// per-rank generation counters
+    generations: BTreeMap<usize, u64>,
+}
+
+/// Mailbox slot for async publish/peek.
+#[derive(Default, Clone)]
+struct MailSlot {
+    data: Option<Arc<Vec<f32>>>,
+    version: u64,
+}
+
+struct BusInner {
+    gathers: Mutex<BTreeMap<String, GatherState>>,
+    gather_cv: Condvar,
+    mail: Mutex<BTreeMap<(usize, String), MailSlot>>,
+    /// Wire-byte counters for accounting (gathered, published).
+    bytes_gathered: Mutex<u64>,
+    bytes_published: Mutex<u64>,
+}
+
+/// In-process collective bus shared by worker threads.
+#[derive(Clone)]
+pub struct CollectiveBus {
+    inner: Arc<BusInner>,
+}
+
+impl CollectiveBus {
+    pub fn new() -> Self {
+        CollectiveBus {
+            inner: Arc::new(BusInner {
+                gathers: Mutex::new(BTreeMap::new()),
+                gather_cv: Condvar::new(),
+                mail: Mutex::new(BTreeMap::new()),
+                bytes_gathered: Mutex::new(0),
+                bytes_published: Mutex::new(0),
+            }),
+        }
+    }
+
+    /// Blocking uneven all-gather on channel `name` among the ranks in
+    /// `participants` (must be identical across callers). Returns every
+    /// participant's payload keyed by rank. Generation-counted so the
+    /// same channel can be reused across steps.
+    pub fn all_gather(
+        &self,
+        name: &str,
+        rank: usize,
+        participants: &[usize],
+        payload: Vec<f32>,
+    ) -> Result<BTreeMap<usize, Vec<f32>>> {
+        if !participants.contains(&rank) {
+            return Err(Error::Comm(format!(
+                "rank {rank} not in participants {participants:?}"
+            )));
+        }
+        *self.inner.bytes_gathered.lock().unwrap() +=
+            (payload.len() * 4) as u64;
+        let mut g = self.inner.gathers.lock().unwrap();
+        let state = g.entry(name.to_string()).or_default();
+        let gen = {
+            let c = state.generations.entry(rank).or_insert(0);
+            let gen = *c;
+            *c += 1;
+            gen
+        };
+        state
+            .contributions
+            .entry(gen)
+            .or_default()
+            .insert(rank, payload);
+        self.inner.gather_cv.notify_all();
+        loop {
+            let ready = g
+                .get(name)
+                .and_then(|s| s.contributions.get(&gen))
+                .map(|m| participants.iter().all(|r| m.contains_key(r)))
+                .unwrap_or(false);
+            if ready {
+                break;
+            }
+            g = self.inner.gather_cv.wait(g).unwrap();
+        }
+        let state = g.get_mut(name).unwrap();
+        // Last participant to observe readiness cleans up; others clone.
+        let m = state.contributions.get(&gen).unwrap().clone();
+        // Cleanup once everyone has a chance to read: track reads.
+        // Simpler: keep at most 2 generations alive.
+        let stale: Vec<u64> = state
+            .contributions
+            .keys()
+            .cloned()
+            .filter(|&k| k + 2 <= gen)
+            .collect();
+        for k in stale {
+            state.contributions.remove(&k);
+        }
+        Ok(m)
+    }
+
+    /// Non-blocking publish to (rank, channel) — the async buffer
+    /// update of Alg. 1 line 17/23. Overwrites the previous version.
+    pub fn publish(&self, rank: usize, channel: &str, data: Vec<f32>) {
+        *self.inner.bytes_published.lock().unwrap() +=
+            (data.len() * 4) as u64;
+        let mut mail = self.inner.mail.lock().unwrap();
+        let slot = mail
+            .entry((rank, channel.to_string()))
+            .or_default();
+        slot.version += 1;
+        slot.data = Some(Arc::new(data));
+    }
+
+    /// Non-blocking read of another rank's latest published buffer
+    /// (None until the first publish). Staleness is allowed by design.
+    pub fn peek(&self, rank: usize, channel: &str) -> Option<Arc<Vec<f32>>> {
+        self.inner
+            .mail
+            .lock()
+            .unwrap()
+            .get(&(rank, channel.to_string()))
+            .and_then(|s| s.data.clone())
+    }
+
+    /// Version counter for staleness diagnostics.
+    pub fn peek_version(&self, rank: usize, channel: &str) -> u64 {
+        self.inner
+            .mail
+            .lock()
+            .unwrap()
+            .get(&(rank, channel.to_string()))
+            .map(|s| s.version)
+            .unwrap_or(0)
+    }
+
+    pub fn bytes_gathered(&self) -> u64 {
+        *self.inner.bytes_gathered.lock().unwrap()
+    }
+
+    pub fn bytes_published(&self) -> u64 {
+        *self.inner.bytes_published.lock().unwrap()
+    }
+}
+
+impl Default for CollectiveBus {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn cfg(strategy: UnevenStrategy) -> CommConfig {
+        CommConfig {
+            latency_s: 1e-5,
+            bandwidth_bytes_per_s: 1e9,
+            uneven_strategy: strategy,
+        }
+    }
+
+    #[test]
+    fn p2p_cost_is_alpha_beta() {
+        let c = cfg(UnevenStrategy::PadAllGather);
+        let t = p2p_cost(&c, 1_000_000);
+        assert!((t - (1e-5 + 1e-3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pad_vs_broadcast_cost_tradeoff() {
+        // Even sizes: pad(ring) beats serialized broadcasts for n=2?
+        // pad: 1 transfer of max; bcast: 2 transfers (sum). With equal
+        // sizes bcast = 2x pad's bytes.
+        let sizes = [1000, 1000];
+        let pad = all_gather_cost(&cfg(UnevenStrategy::PadAllGather), &sizes);
+        let bc = all_gather_cost(&cfg(UnevenStrategy::MultiBroadcast), &sizes);
+        assert!(pad < bc);
+        // Skewed sizes with several small ranks: each padded round
+        // moves the max chunk, so padding wastes and broadcast wins.
+        let sizes = [4_000_000, 4, 4, 4];
+        let pad = all_gather_cost(&cfg(UnevenStrategy::PadAllGather), &sizes);
+        let bc = all_gather_cost(&cfg(UnevenStrategy::MultiBroadcast), &sizes);
+        assert!(bc < pad);
+    }
+
+    #[test]
+    fn all_reduce_scales_with_ranks() {
+        let c = cfg(UnevenStrategy::PadAllGather);
+        let t2 = all_reduce_cost(&c, 1_000_000, 2);
+        let t4 = all_reduce_cost(&c, 1_000_000, 4);
+        assert!(t4 > t2);
+        assert_eq!(all_reduce_cost(&c, 123, 1), 0.0);
+    }
+
+    #[test]
+    fn threaded_all_gather_uneven() {
+        let bus = CollectiveBus::new();
+        let parts = vec![0usize, 1, 2];
+        let mut handles = Vec::new();
+        for rank in 0..3usize {
+            let bus = bus.clone();
+            let parts = parts.clone();
+            handles.push(thread::spawn(move || {
+                // Uneven payloads: rank r sends r+1 elements of value r.
+                let payload = vec![rank as f32; rank + 1];
+                bus.all_gather("x", rank, &parts, payload).unwrap()
+            }));
+        }
+        for h in handles {
+            let m = h.join().unwrap();
+            for r in 0..3usize {
+                assert_eq!(m[&r], vec![r as f32; r + 1]);
+            }
+        }
+        assert_eq!(bus.bytes_gathered(), ((1 + 2 + 3) * 4) as u64);
+    }
+
+    #[test]
+    fn repeated_gathers_use_generations() {
+        let bus = CollectiveBus::new();
+        let parts = vec![0usize, 1];
+        for step in 0..5 {
+            let mut handles = Vec::new();
+            for rank in 0..2usize {
+                let bus = bus.clone();
+                let parts = parts.clone();
+                handles.push(thread::spawn(move || {
+                    bus.all_gather(
+                        "x",
+                        rank,
+                        &parts,
+                        vec![(step * 10 + rank) as f32],
+                    )
+                    .unwrap()
+                }));
+            }
+            for h in handles {
+                let m = h.join().unwrap();
+                assert_eq!(m[&0], vec![(step * 10) as f32]);
+                assert_eq!(m[&1], vec![(step * 10 + 1) as f32]);
+            }
+        }
+    }
+
+    #[test]
+    fn publish_peek_is_nonblocking_and_stale_tolerant() {
+        let bus = CollectiveBus::new();
+        assert!(bus.peek(0, "kv").is_none());
+        bus.publish(0, "kv", vec![1.0, 2.0]);
+        assert_eq!(*bus.peek(0, "kv").unwrap(), vec![1.0, 2.0]);
+        // Reader keeps seeing the old version until a new publish —
+        // staleness by design.
+        assert_eq!(bus.peek_version(0, "kv"), 1);
+        bus.publish(0, "kv", vec![3.0]);
+        assert_eq!(*bus.peek(0, "kv").unwrap(), vec![3.0]);
+        assert_eq!(bus.peek_version(0, "kv"), 2);
+        assert_eq!(bus.bytes_published(), 12);
+    }
+
+    #[test]
+    fn gather_rejects_non_participant() {
+        let bus = CollectiveBus::new();
+        assert!(bus.all_gather("x", 5, &[0, 1], vec![]).is_err());
+    }
+}

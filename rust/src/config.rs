@@ -1,0 +1,338 @@
+//! Typed configuration for the STADI engine, loadable from JSON files
+//! (`--config cluster.json`) or built programmatically. Mirrors the
+//! paper's experimental knobs: M_base, M_warmup, a, b (§V
+//! "Implementation Details"), per-device capability c_i and occupancy
+//! rho_i (§III-B), and the communication cost model.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+/// One (simulated) GPU: relative capability `c_i` (fastest = 1.0) and
+/// background occupancy `rho_i` in [0, 1] (paper §III-B).
+#[derive(Debug, Clone)]
+pub struct DeviceConfig {
+    pub name: String,
+    pub capability: f64,
+    pub occupancy: f64,
+}
+
+impl DeviceConfig {
+    pub fn new(name: impl Into<String>, capability: f64, occupancy: f64) -> Self {
+        DeviceConfig { name: name.into(), capability, occupancy }
+    }
+
+    /// Effective speed v_i = c_i * (1 - rho_i) — the quantity Eq. 4 and
+    /// Eq. 5 consume. The profiler refines this with measured history.
+    pub fn effective_speed(&self) -> f64 {
+        self.capability * (1.0 - self.occupancy)
+    }
+}
+
+/// STADI scheduling hyperparameters (paper Eq. 4 and §V defaults).
+#[derive(Debug, Clone)]
+pub struct StadiParams {
+    /// Base step count assigned to the fastest GPU (paper: 100).
+    pub m_base: usize,
+    /// Shared warmup steps (paper: 4).
+    pub m_warmup: usize,
+    /// Temporal-adaptation threshold `a` (paper: 0.75): devices with
+    /// v_i > a*v_max keep M_base steps.
+    pub a: f64,
+    /// Exclusion threshold `b` (paper: 0.25): devices with
+    /// v_i <= b*v_max are excluded from the cluster.
+    pub b: f64,
+    /// Ablation toggles (Table III): temporal adaptation (+TA) and
+    /// spatial adaptation (+SA).
+    pub temporal: bool,
+    pub spatial: bool,
+    /// EXTENSION: cost-aware patch mending (affine step-cost model
+    /// instead of Eq. 5's linear assumption — fixes the paper's
+    /// Fig. 9 caveat under heavy load gaps). Off by default for
+    /// paper fidelity.
+    pub cost_aware: bool,
+}
+
+impl Default for StadiParams {
+    fn default() -> Self {
+        StadiParams {
+            m_base: 100,
+            m_warmup: 4,
+            a: 0.75,
+            b: 0.25,
+            temporal: true,
+            spatial: true,
+            cost_aware: false,
+        }
+    }
+}
+
+/// Strategy for the uneven-size all-gather (paper §V "All-Gather for
+/// uneven sized tensors"): pad to max then regular all-gather, or
+/// emulate with per-rank broadcasts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnevenStrategy {
+    PadAllGather,
+    MultiBroadcast,
+}
+
+impl UnevenStrategy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "pad" | "pad_all_gather" => Ok(UnevenStrategy::PadAllGather),
+            "broadcast" | "multi_broadcast" => Ok(UnevenStrategy::MultiBroadcast),
+            _ => Err(Error::Config(format!("unknown uneven strategy {s:?}"))),
+        }
+    }
+}
+
+/// alpha-beta communication cost model standing in for NCCL/PCIe
+/// (DESIGN.md §3): transfer(n bytes) = latency + n / bandwidth.
+#[derive(Debug, Clone)]
+pub struct CommConfig {
+    pub latency_s: f64,
+    pub bandwidth_bytes_per_s: f64,
+    pub uneven_strategy: UnevenStrategy,
+}
+
+impl Default for CommConfig {
+    fn default() -> Self {
+        // PCIe 4.0 x16-ish: ~20 GB/s effective, ~20 µs per collective
+        // hop (matches the 2x RTX 4090 PCIe testbed of Table I).
+        CommConfig {
+            latency_s: 20e-6,
+            bandwidth_bytes_per_s: 20e9,
+            uneven_strategy: UnevenStrategy::PadAllGather,
+        }
+    }
+}
+
+/// How the engine executes a request (DESIGN.md §4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Deterministic single-threaded dataflow execution (exact
+    /// numerics; timing from the calibrated virtual clock).
+    Dataflow,
+    /// Real `std::thread` workers with channel-based collectives;
+    /// heterogeneity imposed by stretching step durations.
+    Threaded,
+}
+
+/// Top-level engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub artifacts_dir: PathBuf,
+    pub devices: Vec<DeviceConfig>,
+    pub stadi: StadiParams,
+    pub comm: CommConfig,
+    pub mode: ExecMode,
+}
+
+impl EngineConfig {
+    /// The paper's 2-GPU testbed with given occupancies, all defaults.
+    pub fn two_gpu_default(artifacts: impl AsRef<Path>, occ: &[f64]) -> Self {
+        let devices = occ
+            .iter()
+            .enumerate()
+            .map(|(i, &o)| DeviceConfig::new(format!("gpu{i}"), 1.0, o))
+            .collect();
+        EngineConfig {
+            artifacts_dir: artifacts.as_ref().to_path_buf(),
+            devices,
+            stadi: StadiParams::default(),
+            comm: CommConfig::default(),
+            mode: ExecMode::Dataflow,
+        }
+    }
+
+    /// Validate ranges and cross-field constraints.
+    pub fn validate(&self) -> Result<()> {
+        if self.devices.is_empty() {
+            return Err(Error::Config("no devices configured".into()));
+        }
+        for d in &self.devices {
+            if d.capability <= 0.0 || d.capability > 1.0 + 1e-9 {
+                return Err(Error::Config(format!(
+                    "{}: capability {} outside (0, 1]",
+                    d.name, d.capability
+                )));
+            }
+            if !(0.0..=1.0).contains(&d.occupancy) {
+                return Err(Error::Config(format!(
+                    "{}: occupancy {} outside [0, 1]",
+                    d.name, d.occupancy
+                )));
+            }
+            if d.occupancy >= 1.0 {
+                return Err(Error::Config(format!(
+                    "{}: occupancy 1.0 leaves no compute",
+                    d.name
+                )));
+            }
+        }
+        let s = &self.stadi;
+        if !(0.0 < s.b && s.b < s.a && s.a < 1.0) {
+            return Err(Error::Config(format!(
+                "need 0 < b < a < 1 (got a={}, b={})",
+                s.a, s.b
+            )));
+        }
+        if s.m_warmup >= s.m_base {
+            return Err(Error::Config(format!(
+                "M_warmup {} must be < M_base {}",
+                s.m_warmup, s.m_base
+            )));
+        }
+        if (s.m_base - s.m_warmup) % 2 != 0 {
+            return Err(Error::Config(format!(
+                "M_base - M_warmup must be even for the 2:1 LCM \
+                 quantization (got {} - {})",
+                s.m_base, s.m_warmup
+            )));
+        }
+        if self.comm.bandwidth_bytes_per_s <= 0.0 || self.comm.latency_s < 0.0 {
+            return Err(Error::Config("bad comm cost model".into()));
+        }
+        Ok(())
+    }
+
+    /// Load from a JSON config file (see `examples/cluster.json` shape
+    /// in README).
+    pub fn from_json_file(path: &Path) -> Result<Self> {
+        let v = json::from_file(path)?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let artifacts_dir = PathBuf::from(
+            v.get_opt("artifacts_dir")
+                .map(|x| x.as_str())
+                .transpose()?
+                .unwrap_or("artifacts"),
+        );
+        let mut devices = Vec::new();
+        for (i, d) in v.get("devices")?.as_arr()?.iter().enumerate() {
+            devices.push(DeviceConfig {
+                name: d
+                    .get_opt("name")
+                    .map(|x| x.as_str().map(String::from))
+                    .transpose()?
+                    .unwrap_or_else(|| format!("gpu{i}")),
+                capability: d
+                    .get_opt("capability")
+                    .map(|x| x.as_f64())
+                    .transpose()?
+                    .unwrap_or(1.0),
+                occupancy: d
+                    .get_opt("occupancy")
+                    .map(|x| x.as_f64())
+                    .transpose()?
+                    .unwrap_or(0.0),
+            });
+        }
+        let mut stadi = StadiParams::default();
+        if let Some(s) = v.get_opt("stadi") {
+            if let Some(x) = s.get_opt("m_base") {
+                stadi.m_base = x.as_usize()?;
+            }
+            if let Some(x) = s.get_opt("m_warmup") {
+                stadi.m_warmup = x.as_usize()?;
+            }
+            if let Some(x) = s.get_opt("a") {
+                stadi.a = x.as_f64()?;
+            }
+            if let Some(x) = s.get_opt("b") {
+                stadi.b = x.as_f64()?;
+            }
+            if let Some(x) = s.get_opt("temporal") {
+                stadi.temporal = x.as_bool()?;
+            }
+            if let Some(x) = s.get_opt("spatial") {
+                stadi.spatial = x.as_bool()?;
+            }
+            if let Some(x) = s.get_opt("cost_aware") {
+                stadi.cost_aware = x.as_bool()?;
+            }
+        }
+        let mut comm = CommConfig::default();
+        if let Some(c) = v.get_opt("comm") {
+            if let Some(x) = c.get_opt("latency_s") {
+                comm.latency_s = x.as_f64()?;
+            }
+            if let Some(x) = c.get_opt("bandwidth_bytes_per_s") {
+                comm.bandwidth_bytes_per_s = x.as_f64()?;
+            }
+            if let Some(x) = c.get_opt("uneven_strategy") {
+                comm.uneven_strategy = UnevenStrategy::parse(x.as_str()?)?;
+            }
+        }
+        let mode = match v.get_opt("mode").map(|x| x.as_str()).transpose()? {
+            Some("threaded") => ExecMode::Threaded,
+            _ => ExecMode::Dataflow,
+        };
+        let cfg = EngineConfig { artifacts_dir, devices, stadi, comm, mode };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_two_gpu_validates() {
+        let cfg = EngineConfig::two_gpu_default("artifacts", &[0.0, 0.4]);
+        cfg.validate().unwrap();
+        assert_eq!(cfg.devices.len(), 2);
+        assert!((cfg.devices[1].effective_speed() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_thresholds() {
+        let mut cfg = EngineConfig::two_gpu_default("artifacts", &[0.0]);
+        cfg.stadi.a = 0.2;
+        cfg.stadi.b = 0.5;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_odd_step_gap() {
+        let mut cfg = EngineConfig::two_gpu_default("artifacts", &[0.0]);
+        cfg.stadi.m_base = 101;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_full_occupancy() {
+        let cfg = EngineConfig::two_gpu_default("artifacts", &[0.0, 1.0]);
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn parses_json_config() {
+        let text = r#"{
+            "artifacts_dir": "artifacts",
+            "devices": [
+                {"name": "fast", "capability": 1.0, "occupancy": 0.0},
+                {"capability": 0.8, "occupancy": 0.5}
+            ],
+            "stadi": {"m_base": 50, "m_warmup": 4, "a": 0.8, "b": 0.2},
+            "comm": {"latency_s": 1e-05, "uneven_strategy": "broadcast"},
+            "mode": "threaded"
+        }"#;
+        let cfg = EngineConfig::from_json(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.devices[0].name, "fast");
+        assert_eq!(cfg.devices[1].name, "gpu1");
+        assert_eq!(cfg.stadi.m_base, 50);
+        assert_eq!(cfg.comm.uneven_strategy, UnevenStrategy::MultiBroadcast);
+        assert_eq!(cfg.mode, ExecMode::Threaded);
+        assert!((cfg.comm.latency_s - 1e-5).abs() < 1e-18);
+    }
+
+    #[test]
+    fn json_missing_devices_errors() {
+        assert!(EngineConfig::from_json(&json::parse("{}").unwrap()).is_err());
+    }
+}

@@ -1,0 +1,120 @@
+//! Per-device state buffers: the full latent copy and the per-layer
+//! stale-KV stack that patch parallelism exchanges between devices
+//! (DistriFusion's "activation buffer", paper §II-B / Alg. 1).
+
+use crate::runtime::artifacts::ModelInfo;
+use crate::runtime::tensor::Tensor;
+
+/// One device's view of the request state.
+#[derive(Debug, Clone)]
+pub struct DeviceBuffers {
+    /// Full latent [H, W, C]: own rows always fresh, peer rows as of
+    /// the last sync.
+    pub x: Tensor,
+    /// Full per-layer KV stack [L, T_full, 2D]: own token slice fresh,
+    /// peer slices as of their last publish (stale in between).
+    pub kv: Tensor,
+    layers: usize,
+    tokens_full: usize,
+    kv_width: usize,
+}
+
+impl DeviceBuffers {
+    pub fn new(model: &ModelInfo, init_x: &Tensor) -> Self {
+        DeviceBuffers {
+            x: init_x.clone(),
+            kv: Tensor::zeros(&model.kv_shape()),
+            layers: model.layers,
+            tokens_full: model.tokens_full,
+            kv_width: 2 * model.dim,
+        }
+    }
+
+    /// Scatter a fresh KV block [L, T_own, 2D] into the full stack at
+    /// token offset `t0`.
+    pub fn scatter_kv(&mut self, t0: usize, kv_block: &Tensor) {
+        assert_eq!(kv_block.shape.len(), 3);
+        assert_eq!(kv_block.shape[0], self.layers);
+        assert_eq!(kv_block.shape[2], self.kv_width);
+        let t_own = kv_block.shape[1];
+        assert!(t0 + t_own <= self.tokens_full);
+        let layer_stride = self.tokens_full * self.kv_width;
+        let block_stride = t_own * self.kv_width;
+        for l in 0..self.layers {
+            let dst0 = l * layer_stride + t0 * self.kv_width;
+            let src0 = l * block_stride;
+            self.kv.data[dst0..dst0 + block_stride]
+                .copy_from_slice(&kv_block.data[src0..src0 + block_stride]);
+        }
+    }
+
+    /// Extract the KV block [L, T_own, 2D] for tokens [t0, t0+t_own).
+    pub fn gather_kv(&self, t0: usize, t_own: usize) -> Tensor {
+        let layer_stride = self.tokens_full * self.kv_width;
+        let block_stride = t_own * self.kv_width;
+        let mut out = Tensor::zeros(&[self.layers, t_own, self.kv_width]);
+        for l in 0..self.layers {
+            let src0 = l * layer_stride + t0 * self.kv_width;
+            out.data[l * block_stride..(l + 1) * block_stride]
+                .copy_from_slice(&self.kv.data[src0..src0 + block_stride]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::NormalGen;
+
+    fn model() -> ModelInfo {
+        ModelInfo {
+            latent_h: 8, latent_w: 8, latent_c: 2, patch: 2, dim: 4,
+            heads: 2, layers: 2, temb_dim: 8, row_granularity: 2,
+            tokens_full: 16, param_count: 1, params_seed: 0,
+        }
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip() {
+        let m = model();
+        let x0 = Tensor::zeros(&m.latent_shape());
+        let mut b = DeviceBuffers::new(&m, &x0);
+        let mut g = NormalGen::new(1);
+        let block = Tensor::new(vec![2, 4, 8], g.vec_f32(64)).unwrap();
+        b.scatter_kv(8, &block);
+        assert_eq!(b.gather_kv(8, 4), block);
+        // Other regions untouched (still zero).
+        let other = b.gather_kv(0, 8);
+        assert!(other.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn scatter_respects_layer_strides() {
+        let m = model();
+        let x0 = Tensor::zeros(&m.latent_shape());
+        let mut b = DeviceBuffers::new(&m, &x0);
+        // Distinct values per layer.
+        let mut block = Tensor::zeros(&[2, 2, 8]);
+        for i in 0..16 {
+            block.data[i] = 1.0; // layer 0
+            block.data[16 + i] = 2.0; // layer 1
+        }
+        b.scatter_kv(0, &block);
+        // Layer 0 tokens 0..2 are 1.0; layer 1 tokens 0..2 are 2.0.
+        let l0 = &b.kv.data[0..16];
+        let l1 = &b.kv.data[16 * 8..16 * 8 + 16];
+        assert!(l0.iter().all(|&v| v == 1.0));
+        assert!(l1.iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn scatter_out_of_range_panics() {
+        let m = model();
+        let x0 = Tensor::zeros(&m.latent_shape());
+        let mut b = DeviceBuffers::new(&m, &x0);
+        let block = Tensor::zeros(&[2, 10, 8]);
+        b.scatter_kv(8, &block); // 8 + 10 > 16 tokens
+    }
+}

@@ -1,0 +1,17 @@
+//! Request coordination: Algorithm 1 end to end.
+//!
+//! * `buffers` — per-device latent + stale-KV state;
+//! * `dataflow` — deterministic single-threaded executor (quality
+//!   experiments, golden tests);
+//! * `threaded` — real worker threads over the collective bus
+//!   (serving runtime; bit-equal numerics to dataflow);
+//! * `timeline` — virtual-clock latency simulation (latency figures);
+//! * `engine` — the public API tying it all together.
+
+pub mod buffers;
+pub mod dataflow;
+pub mod engine;
+pub mod threaded;
+pub mod timeline;
+
+pub use engine::{Engine, Generation, Request};

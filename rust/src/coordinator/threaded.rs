@@ -1,0 +1,230 @@
+//! Threaded execution of Algorithm 1: one worker thread per included
+//! device, blocking x all-gathers and async KV publishes over the
+//! `CollectiveBus`, with per-device heterogeneity imposed by stretching
+//! step durations (`SimGpu::stretch_step`).
+//!
+//! Numerics are identical to the dataflow executor by construction —
+//! a device may only consume peer KV published at the preceding sync
+//! point, which the gather barrier enforces (integration tests assert
+//! bit-equality). This path exists to exercise the *real* serving
+//! runtime: thread lifecycle, collective synchronization, staleness-
+//! tolerant mailboxes, backpressure on the shared PJRT substrate.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+use crate::comm::CollectiveBus;
+use crate::device::SimGpu;
+use crate::error::{Error, Result};
+use crate::model::latents::token_range;
+use crate::model::sampler;
+use crate::runtime::tensor::Tensor;
+use crate::runtime::ExecHandle;
+use crate::sched::plan::Plan;
+
+use super::buffers::DeviceBuffers;
+use super::dataflow::{ExecStats, RequestOutput};
+
+/// Run one request with real worker threads.
+pub fn execute(
+    exec: &ExecHandle,
+    plan: &Plan,
+    cluster: &[SimGpu],
+    noise: &Tensor,
+    cond: &[f32],
+    stretch: bool,
+) -> Result<RequestOutput> {
+    let model = exec.manifest().model.clone();
+    let included: Vec<usize> = plan
+        .devices
+        .iter()
+        .filter(|d| d.included())
+        .map(|d| d.device)
+        .collect();
+    if included.is_empty() {
+        return Err(Error::Sched("no included devices".into()));
+    }
+    let bus = CollectiveBus::new();
+    let cond: Arc<Vec<f32>> = Arc::new(cond.to_vec());
+
+    let mut handles = Vec::new();
+    for &di in &included {
+        let exec = exec.clone();
+        let cond = Arc::clone(&cond);
+        let bus = bus.clone();
+        let plan_dev = plan.devices[di].clone();
+        let all_devices: Vec<_> = plan.devices.clone();
+        let included = included.clone();
+        let gpu = cluster[di].clone();
+        let model = model.clone();
+        let noise = noise.clone();
+        handles.push(thread::spawn(move || -> Result<(usize, DeviceBuffers, f64, usize)> {
+            let mut bufs = DeviceBuffers::new(&model, &noise);
+            let (t0, t1) = token_range(&model, plan_dev.rows);
+            let mut compute_s = 0.0f64;
+            let mut steps_run = 0usize;
+            for step in &plan_dev.steps {
+                let x_patch =
+                    bufs.x.slice_rows(plan_dev.rows.row0, plan_dev.rows.rows);
+                let t_start = Instant::now();
+                let out = exec.denoise(
+                    plan_dev.rows.rows,
+                    &x_patch,
+                    &bufs.kv,
+                    plan_dev.rows.row0,
+                    step.t_from as f64,
+                    &cond,
+                )?;
+                let real = t_start.elapsed().as_secs_f64();
+                compute_s += real;
+                steps_run += 1;
+                if stretch {
+                    gpu.stretch_step(plan_dev.rows.rows, real);
+                }
+
+                bufs.scatter_kv(t0, &out.kv_fresh);
+                sampler::ddim_update_rows(
+                    &mut bufs.x,
+                    &out.eps_patch,
+                    plan_dev.rows.row0,
+                    step.coef,
+                );
+
+                if step.sync {
+                    // One uneven all-gather carries [x_patch || kv
+                    // block]: the x half is the synchronous output
+                    // gather of Alg. 1, the kv half is the buffer
+                    // update. Bundling them in the barrier pins the
+                    // staleness semantics to the *sync point* (a peer
+                    // racing ahead can never leak a fresher buffer
+                    // into this interval), which is what makes
+                    // threaded numerics bit-equal to the dataflow
+                    // executor. Transfer-cost-wise the kv half is
+                    // still modeled as maskable-async by the timeline
+                    // simulator.
+                    let own = bufs
+                        .x
+                        .slice_rows(plan_dev.rows.row0, plan_dev.rows.rows);
+                    let mut payload = own.data;
+                    payload
+                        .extend_from_slice(&bufs.gather_kv(t0, t1 - t0).data);
+                    let gathered = bus.all_gather(
+                        "sync",
+                        plan_dev.device,
+                        &included,
+                        payload,
+                    )?;
+                    for (&peer, data) in &gathered {
+                        if peer == plan_dev.device {
+                            continue;
+                        }
+                        let pr = all_devices[peer].rows;
+                        let x_len =
+                            pr.rows * model.latent_w * model.latent_c;
+                        let patch = Tensor::new(
+                            vec![pr.rows, model.latent_w, model.latent_c],
+                            data[..x_len].to_vec(),
+                        )?;
+                        bufs.x.scatter_rows(pr.row0, &patch);
+                        let (p0, p1) = token_range(&model, pr);
+                        let block = Tensor::new(
+                            vec![model.layers, p1 - p0, 2 * model.dim],
+                            data[x_len..].to_vec(),
+                        )?;
+                        bufs.scatter_kv(p0, &block);
+                    }
+                }
+            }
+            Ok((plan_dev.device, bufs, compute_s, steps_run))
+        }));
+    }
+
+    let mut stats = ExecStats {
+        compute_s: vec![0.0; plan.devices.len()],
+        steps_run: vec![0; plan.devices.len()],
+        ..Default::default()
+    };
+    let mut result: Option<Tensor> = None;
+    for h in handles {
+        let (di, bufs, compute_s, steps_run) = h
+            .join()
+            .map_err(|_| Error::msg("worker thread panicked"))??;
+        stats.compute_s[di] = compute_s;
+        stats.steps_run[di] = steps_run;
+        if result.is_none() || di == included[0] {
+            result = Some(bufs.x);
+        }
+    }
+    stats.syncs = plan.sync_points.len();
+    // The bundled barrier moves x+kv together; split accounting
+    // analytically (every sync, every included device contributes its
+    // x patch and kv block).
+    let syncs = plan.sync_points.len() as u64;
+    for &di in &included {
+        let d = &plan.devices[di];
+        let x = (d.rows.rows * model.latent_w * model.latent_c * 4) as u64;
+        let kv = (model.layers
+            * model.tokens_for_rows(d.rows.rows)
+            * 2
+            * model.dim
+            * 4) as u64;
+        stats.x_bytes += syncs * x;
+        stats.kv_bytes += syncs * kv;
+    }
+    debug_assert_eq!(stats.x_bytes + stats.kv_bytes, bus.bytes_gathered());
+    Ok(RequestOutput { latent: result.unwrap(), stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DeviceConfig, StadiParams};
+    use crate::device::{build_cluster, CostModel};
+    use crate::model::latents::{seeded_cond, seeded_noise};
+    use crate::model::schedule::Schedule;
+    use crate::runtime::ExecService;
+    use std::path::PathBuf;
+
+    fn runtime() -> Option<ExecService> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(ExecService::spawn(dir).unwrap())
+    }
+
+    #[test]
+    fn threaded_matches_dataflow_bit_exactly() {
+        let Some(svc) = runtime() else { return };
+        let rt = svc.handle();
+        let p = StadiParams {
+            m_base: 8,
+            m_warmup: 2,
+            ..StadiParams::default()
+        };
+        let sched = Schedule::from_info(&rt.manifest().schedule);
+        let speeds = [1.0, 0.5];
+        let names = vec!["g0".into(), "g1".into()];
+        let plan = Plan::build(&sched, &speeds, &names, &p, 32, 4).unwrap();
+        let model = rt.manifest().model.clone();
+        let noise = seeded_noise(&model, 21);
+        let cond = seeded_cond(&model, 21);
+
+        let df = super::super::dataflow::execute(&rt, &plan, &noise, &cond)
+            .unwrap();
+        let devs = vec![
+            DeviceConfig::new("g0", 1.0, 0.0),
+            DeviceConfig::new("g1", 1.0, 0.5),
+        ];
+        let cluster = build_cluster(&devs, CostModel::uncalibrated());
+        let th = execute(&rt, &plan, &cluster, &noise, &cond, false)
+            .unwrap();
+        assert_eq!(
+            df.latent, th.latent,
+            "threaded and dataflow numerics diverge"
+        );
+        assert_eq!(df.stats.steps_run, th.stats.steps_run);
+    }
+}

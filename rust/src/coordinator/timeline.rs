@@ -1,0 +1,365 @@
+//! Timeline simulation: latency of a plan on a heterogeneous cluster.
+//!
+//! Replays the plan's sync-interval structure on a virtual clock with
+//! calibrated per-step costs (DESIGN.md §4 "sim" mode) — single-core-
+//! safe and deterministic, used for Figs. 2/8/9 and Table III.
+//!
+//! Model per sync interval (the span between consecutive sync points):
+//! every included device runs its interval steps back-to-back
+//! (1 for slow/warmup devices, up to 2 for fast devices); the sync
+//! point completes when the last device arrives, then pays the
+//! synchronous x all-gather. Warmup intervals also pay the KV exchange
+//! synchronously (Alg. 1 line 11 "Update buffer synchronously");
+//! afterwards KV publishes are asynchronous and overlap with the next
+//! interval's compute, charging only their unmasked remainder — the
+//! paper's "mask communication latency within computation".
+
+use crate::comm::{all_gather_cost, all_reduce_cost};
+use crate::config::CommConfig;
+use crate::device::SimGpu;
+use crate::error::{Error, Result};
+use crate::runtime::artifacts::ModelInfo;
+use crate::sched::plan::Plan;
+
+/// Simulated latency breakdown.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    /// End-to-end request latency (seconds, virtual).
+    pub total_s: f64,
+    /// Per-device compute-busy seconds.
+    pub busy_s: Vec<f64>,
+    /// Per-device idle seconds (waiting at sync points).
+    pub idle_s: Vec<f64>,
+    /// Blocking communication seconds on the critical path.
+    pub comm_s: f64,
+    /// Mean utilization of included devices: busy / total.
+    pub utilization: f64,
+}
+
+/// Simulate a STADI/patch-parallel plan.
+pub fn simulate(
+    plan: &Plan,
+    cluster: &[SimGpu],
+    comm: &CommConfig,
+    model: &ModelInfo,
+) -> Result<Timeline> {
+    let n = plan.devices.len();
+    if cluster.len() != n {
+        return Err(Error::Sched("cluster/plan size mismatch".into()));
+    }
+    let included: Vec<usize> = plan
+        .devices
+        .iter()
+        .filter(|d| d.included())
+        .map(|d| d.device)
+        .collect();
+
+    // Per-device byte sizes exchanged at syncs.
+    let x_bytes: Vec<usize> = plan
+        .devices
+        .iter()
+        .map(|d| d.rows.rows * model.latent_w * model.latent_c * 4)
+        .collect();
+    let kv_bytes: Vec<usize> = plan
+        .devices
+        .iter()
+        .map(|d| {
+            model.layers
+                * model.tokens_for_rows(d.rows.rows)
+                * 2
+                * model.dim
+                * 4
+        })
+        .collect();
+    let x_sizes: Vec<usize> =
+        included.iter().map(|&i| x_bytes[i]).collect();
+    let kv_sizes: Vec<usize> =
+        included.iter().map(|&i| kv_bytes[i]).collect();
+
+    let mut cursor = vec![0usize; n];
+    let mut busy = vec![0.0f64; n];
+    let mut now = 0.0f64;
+    let mut comm_total = 0.0f64;
+    // Unmasked async-KV debt carried into the next interval.
+    let mut kv_debt = 0.0f64;
+
+    for (si, _sync) in plan.sync_points.iter().enumerate() {
+        let mut arrivals = Vec::with_capacity(included.len());
+        let mut min_compute = f64::INFINITY;
+        let mut is_warmup_interval = false;
+        for &di in &included {
+            let dp = &plan.devices[di];
+            let mut t_dev = 0.0;
+            loop {
+                let step = dp.steps.get(cursor[di]).ok_or_else(|| {
+                    Error::Sched("step underrun in timeline".into())
+                })?;
+                t_dev += cluster[di].step_time(dp.rows.rows);
+                cursor[di] += 1;
+                if step.is_warmup {
+                    is_warmup_interval = true;
+                }
+                if step.sync {
+                    break;
+                }
+            }
+            busy[di] += t_dev;
+            min_compute = min_compute.min(t_dev);
+            arrivals.push(t_dev);
+        }
+        // Async KV debt from the previous interval masks under this
+        // interval's *minimum* compute (the first device to finish is
+        // the one that could be blocked by unfinished transfers).
+        let unmasked = (kv_debt - min_compute).max(0.0);
+        comm_total += unmasked;
+
+        let barrier = arrivals.iter().cloned().fold(0.0, f64::max);
+        let x_cost = all_gather_cost(comm, &x_sizes);
+        comm_total += x_cost;
+        let mut t_interval = barrier + unmasked + x_cost;
+        if is_warmup_interval || si == plan.sync_points.len() - 1 {
+            // Warmup: synchronous KV exchange (blocking). The final
+            // interval cannot mask trailing publishes either.
+            let kv_cost = all_gather_cost(comm, &kv_sizes);
+            comm_total += kv_cost;
+            t_interval += kv_cost;
+            kv_debt = 0.0;
+        } else {
+            kv_debt = all_gather_cost(comm, &kv_sizes);
+        }
+        now += t_interval;
+    }
+
+    let idle: Vec<f64> = (0..n)
+        .map(|i| {
+            if plan.devices[i].included() {
+                (now - busy[i]).max(0.0)
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let util = if included.is_empty() || now <= 0.0 {
+        0.0
+    } else {
+        included.iter().map(|&i| busy[i] / now).sum::<f64>()
+            / included.len() as f64
+    };
+    Ok(Timeline {
+        total_s: now,
+        busy_s: busy,
+        idle_s: idle,
+        comm_s: comm_total,
+        utilization: util,
+    })
+}
+
+/// Latency of the tensor-parallelism baseline (paper §V baselines):
+/// every device computes 1/n of every layer's FLOPs, bounded by the
+/// slowest device, with a synchronous all-reduce per layer (2 per
+/// block: attention output + MLP output) every step.
+pub fn simulate_tensor_parallel(
+    m_steps: usize,
+    cluster: &[SimGpu],
+    comm: &CommConfig,
+    model: &ModelInfo,
+) -> Timeline {
+    let n = cluster.len();
+    let act_bytes = model.tokens_full * model.dim * 4;
+    let reduces_per_step = 2 * model.layers;
+    // Weight-split compute: the row-proportional FLOPs divide n ways,
+    // but the *fixed* per-step cost (kernel dispatch, small-GEMM
+    // inefficiency) stays per-device — splitting a layer does not
+    // shrink its launch overhead, which is a big part of why TP
+    // underperforms on diffusion models (paper §II-B "inefficient ...
+    // due to large activations overhead" + per-layer sync).
+    let slowest: f64 = cluster
+        .iter()
+        .map(|g| {
+            (g.cost.fixed_s
+                + g.cost.per_row_s * model.latent_h as f64 / n as f64)
+                / g.effective_speed()
+        })
+        .fold(0.0, f64::max);
+    let comm_per_step =
+        reduces_per_step as f64 * all_reduce_cost(comm, act_bytes, n);
+    let step = slowest + comm_per_step;
+    let total = m_steps as f64 * step;
+    let busy: Vec<f64> = cluster
+        .iter()
+        .map(|g| {
+            m_steps as f64
+                * (g.cost.fixed_s
+                    + g.cost.per_row_s * model.latent_h as f64 / n as f64)
+                / g.effective_speed()
+        })
+        .collect();
+    let idle: Vec<f64> = busy.iter().map(|b| (total - b).max(0.0)).collect();
+    let util =
+        busy.iter().map(|b| b / total).sum::<f64>() / n.max(1) as f64;
+    Timeline {
+        total_s: total,
+        busy_s: busy,
+        idle_s: idle,
+        comm_s: m_steps as f64 * comm_per_step,
+        utilization: util,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CommConfig, DeviceConfig, StadiParams};
+    use crate::device::{build_cluster, CostModel};
+    use crate::model::schedule::Schedule;
+
+    fn model() -> ModelInfo {
+        ModelInfo {
+            latent_h: 32, latent_w: 32, latent_c: 4, patch: 2, dim: 96,
+            heads: 4, layers: 3, temb_dim: 64, row_granularity: 4,
+            tokens_full: 256, param_count: 1, params_seed: 0,
+        }
+    }
+
+    fn cluster(occ: &[f64]) -> Vec<SimGpu> {
+        let devs: Vec<DeviceConfig> = occ
+            .iter()
+            .enumerate()
+            .map(|(i, &o)| DeviceConfig::new(format!("g{i}"), 1.0, o))
+            .collect();
+        build_cluster(&devs, CostModel { fixed_s: 0.004, per_row_s: 0.0012 })
+    }
+
+    fn build_plan(speeds: &[f64], p: &StadiParams) -> Plan {
+        let s = Schedule::scaled_linear(1000, 0.00085, 0.012);
+        let names: Vec<String> =
+            (0..speeds.len()).map(|i| format!("g{i}")).collect();
+        Plan::build(&s, speeds, &names, p, 32, 4).unwrap()
+    }
+
+    #[test]
+    fn homogeneous_cluster_has_high_utilization() {
+        let p = StadiParams::default();
+        let plan = build_plan(&[1.0, 1.0], &p);
+        let tl = simulate(&plan, &cluster(&[0.0, 0.0]),
+                          &CommConfig::default(), &model()).unwrap();
+        assert!(tl.utilization > 0.9, "util {}", tl.utilization);
+        assert!(tl.total_s > 0.0);
+    }
+
+    #[test]
+    fn straggler_hurts_patch_parallelism_more_than_stadi() {
+        // The paper's core claim in miniature.
+        let speeds = [1.0, 0.4];
+        let cl = cluster(&[0.0, 0.6]);
+        let m = model();
+        let comm = CommConfig::default();
+
+        let mut pp = StadiParams::default();
+        pp.temporal = false;
+        pp.spatial = false;
+        let t_pp =
+            simulate(&build_plan(&speeds, &pp), &cl, &comm, &m).unwrap();
+
+        let stadi = StadiParams::default();
+        let t_st =
+            simulate(&build_plan(&speeds, &stadi), &cl, &comm, &m).unwrap();
+
+        assert!(
+            t_st.total_s < t_pp.total_s * 0.8,
+            "stadi {} vs pp {}",
+            t_st.total_s,
+            t_pp.total_s
+        );
+        assert!(t_st.utilization > t_pp.utilization);
+    }
+
+    #[test]
+    fn idle_plus_busy_equals_total_for_included() {
+        let p = StadiParams::default();
+        let plan = build_plan(&[1.0, 0.5], &p);
+        let tl = simulate(&plan, &cluster(&[0.0, 0.5]),
+                          &CommConfig::default(), &model()).unwrap();
+        for i in 0..2 {
+            assert!(
+                (tl.busy_s[i] + tl.idle_s[i] - tl.total_s).abs() < 1e-9
+            );
+        }
+    }
+
+    #[test]
+    fn tensor_parallel_pays_per_layer_reduces() {
+        let m = model();
+        let cl = cluster(&[0.0, 0.0]);
+        let comm = CommConfig::default();
+        let tl = simulate_tensor_parallel(100, &cl, &comm, &m);
+        assert!(tl.comm_s > 0.0);
+        // 100 steps, 6 reduces each.
+        let per_reduce = all_reduce_cost(&comm, 256 * 96 * 4, 2);
+        assert!((tl.comm_s - 600.0 * per_reduce).abs() < 1e-9);
+    }
+
+    #[test]
+    fn property_latency_monotone_in_occupancy_and_stadi_dominates() {
+        use crate::util::proptest::{ensure, forall};
+        let m = model();
+        let comm = CommConfig::default();
+        forall(
+            41,
+            150,
+            |rng| (rng.next_f64() * 0.7, rng.next_f64() * 0.7),
+            |&(o1, o2)| {
+                let (lo, hi) = if o1 <= o2 { (o1, o2) } else { (o2, o1) };
+                let p = StadiParams::default();
+                // PP latency must not decrease when the straggler gets
+                // busier.
+                let mut pp = p.clone();
+                pp.temporal = false;
+                pp.spatial = false;
+                let plan = build_plan(&[1.0, 1.0], &pp);
+                let t_lo = simulate(&plan, &cluster(&[0.0, lo]), &comm, &m)
+                    .map_err(|e| e.to_string())?;
+                let t_hi = simulate(&plan, &cluster(&[0.0, hi]), &comm, &m)
+                    .map_err(|e| e.to_string())?;
+                ensure(
+                    t_hi.total_s >= t_lo.total_s - 1e-9,
+                    format!("monotonicity: {} < {}", t_hi.total_s, t_lo.total_s),
+                )?;
+                // STADI never loses to PP on the same cluster.
+                let speeds = [1.0, 1.0 - hi];
+                let stadi = match Plan::build(
+                    &Schedule::scaled_linear(1000, 0.00085, 0.012),
+                    &speeds,
+                    &["g0".into(), "g1".into()],
+                    &p,
+                    32,
+                    4,
+                ) {
+                    Ok(pl) => pl,
+                    Err(_) => return Ok(()),
+                };
+                let t_st =
+                    simulate(&stadi, &cluster(&[0.0, hi]), &comm, &m)
+                        .map_err(|e| e.to_string())?;
+                ensure(
+                    t_st.total_s <= t_hi.total_s + 1e-9,
+                    format!("stadi {} > pp {}", t_st.total_s, t_hi.total_s),
+                )?;
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let p = StadiParams::default();
+        let plan = build_plan(&[1.0, 0.33], &p);
+        let cl = cluster(&[0.0, 0.67]);
+        let a = simulate(&plan, &cl, &CommConfig::default(), &model())
+            .unwrap();
+        let b = simulate(&plan, &cl, &CommConfig::default(), &model())
+            .unwrap();
+        assert_eq!(a.total_s, b.total_s);
+        assert_eq!(a.busy_s, b.busy_s);
+    }
+}

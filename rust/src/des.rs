@@ -1,0 +1,204 @@
+//! Discrete-event simulation substrate.
+//!
+//! Single-core-safe timing: the latency figures (Figs. 2, 8, 9 and
+//! Table III) are produced by replaying the scheduler's exact event
+//! structure (step completions, sync barriers, async comm completions)
+//! on a virtual clock with per-step costs calibrated from real PJRT
+//! measurements (see `device::CostModel`). This module provides the
+//! deterministic event queue; the replay logic lives in
+//! `coordinator::timeline`.
+//!
+//! Determinism: ties in time break by insertion sequence number, so a
+//! simulation is a pure function of its inputs.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event scheduled at a virtual time.
+#[derive(Debug, Clone)]
+struct Scheduled<E> {
+    time: f64,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl<E> Eq for Scheduled<E> {}
+
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first. NaN-free
+        // by construction (schedule() asserts).
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap()
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic discrete-event simulator.
+#[derive(Debug)]
+pub struct Sim<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    now: f64,
+    seq: u64,
+    processed: u64,
+}
+
+impl<E> Default for Sim<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> Sim<E> {
+    pub fn new() -> Self {
+        Sim { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
+    }
+
+    /// Current virtual time (the timestamp of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn events_processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule `event` at absolute virtual time `at` (>= now).
+    pub fn schedule(&mut self, at: f64, event: E) {
+        assert!(at.is_finite(), "non-finite event time");
+        debug_assert!(
+            at >= self.now - 1e-12,
+            "scheduling into the past: {at} < {}",
+            self.now
+        );
+        self.heap.push(Scheduled { time: at, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    /// Schedule `event` `delay` seconds from now.
+    pub fn schedule_in(&mut self, delay: f64, event: E) {
+        let now = self.now;
+        self.schedule(now + delay.max(0.0), event);
+    }
+
+    /// Pop the earliest event, advancing the clock.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        let s = self.heap.pop()?;
+        self.now = s.time;
+        self.processed += 1;
+        Some((s.time, s.event))
+    }
+
+    /// Peek at the next event time without advancing.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|s| s.time)
+    }
+
+    /// Drain events while `f` keeps returning true; returns on empty
+    /// queue or when `f` stops the run.
+    pub fn run<F: FnMut(&mut Sim<E>, f64, E) -> bool>(&mut self, mut f: F) {
+        while let Some((t, e)) = self.pop() {
+            if !f(self, t, e) {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut sim = Sim::new();
+        sim.schedule(3.0, "c");
+        sim.schedule(1.0, "a");
+        sim.schedule(2.0, "b");
+        let order: Vec<_> = std::iter::from_fn(|| sim.pop())
+            .map(|(_, e)| e)
+            .collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+        assert_eq!(sim.now(), 3.0);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut sim = Sim::new();
+        sim.schedule(1.0, 1);
+        sim.schedule(1.0, 2);
+        sim.schedule(1.0, 3);
+        let order: Vec<_> = std::iter::from_fn(|| sim.pop())
+            .map(|(_, e)| e)
+            .collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn schedule_in_accumulates() {
+        let mut sim = Sim::new();
+        sim.schedule_in(1.0, "a");
+        let (t, _) = sim.pop().unwrap();
+        assert_eq!(t, 1.0);
+        sim.schedule_in(0.5, "b");
+        let (t, _) = sim.pop().unwrap();
+        assert_eq!(t, 1.5);
+    }
+
+    #[test]
+    fn cascading_events_deterministic() {
+        // An event chain where each event schedules the next; two runs
+        // must produce identical traces.
+        fn run() -> Vec<(f64, u32)> {
+            let mut sim: Sim<u32> = Sim::new();
+            sim.schedule(0.0, 0);
+            let mut trace = Vec::new();
+            sim.run(|sim, t, e| {
+                trace.push((t, e));
+                if e < 20 {
+                    sim.schedule_in(0.1 * ((e % 3) as f64 + 1.0), e + 1);
+                }
+                true
+            });
+            trace
+        }
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn run_can_stop_early() {
+        let mut sim = Sim::new();
+        for i in 0..10 {
+            sim.schedule(i as f64, i);
+        }
+        let mut seen = 0;
+        sim.run(|_, _, e| {
+            seen += 1;
+            e < 4 // e == 4 returns false and stops the run
+        });
+        assert_eq!(seen, 5);
+        assert_eq!(sim.events_processed(), 5);
+    }
+}

@@ -1,0 +1,93 @@
+//! Crate-wide error type.
+//!
+//! The offline registry carries no `thiserror`/`anyhow` usable here, so
+//! this is a plain hand-rolled enum. Every layer converts into it via
+//! `From` so `?` composes across the runtime / scheduler / serving
+//! boundaries.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All the ways the STADI stack can fail.
+#[derive(Debug)]
+pub enum Error {
+    /// PJRT / XLA failures (compile, execute, literal conversion).
+    Xla(xla::Error),
+    /// Filesystem / socket errors.
+    Io(std::io::Error),
+    /// JSON parse errors from `util::json` (offset + message).
+    Json { offset: usize, msg: String },
+    /// Artifact manifest problems (missing file, shape mismatch...).
+    Artifact(String),
+    /// Configuration validation failures.
+    Config(String),
+    /// Scheduling infeasibility (e.g. all devices excluded by Eq. 4).
+    Sched(String),
+    /// Communication layer failures (peer gone, size mismatch).
+    Comm(String),
+    /// Serving protocol violations.
+    Protocol(String),
+    /// Anything else.
+    Other(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(e) => write!(f, "xla: {e}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Json { offset, msg } => {
+                write!(f, "json parse error at byte {offset}: {msg}")
+            }
+            Error::Artifact(m) => write!(f, "artifact: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Sched(m) => write!(f, "sched: {m}"),
+            Error::Comm(m) => write!(f, "comm: {m}"),
+            Error::Protocol(m) => write!(f, "protocol: {m}"),
+            Error::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl Error {
+    /// Convenience constructor for ad-hoc errors.
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error::Other(m.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = Error::Sched("no eligible devices".into());
+        assert_eq!(e.to_string(), "sched: no eligible devices");
+        let e = Error::Json { offset: 12, msg: "bad token".into() };
+        assert!(e.to_string().contains("byte 12"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "x");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,125 @@
+//! Experiment support shared by the bench harness (one bench per paper
+//! table/figure — see DESIGN.md §6) and the examples.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::{CommConfig, DeviceConfig, StadiParams};
+use crate::device::{build_cluster, CostModel, SimGpu};
+use crate::error::Result;
+use crate::runtime::ExecService;
+use crate::util::json;
+
+/// Artifacts directory relative to the crate root (benches run there).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("STADI_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// True when `make artifacts` has been run.
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// Load the calibrated cost model, calibrating once and caching to
+/// `artifacts/calib.json` so every bench shares identical grounded
+/// timings.
+pub fn calibrated_cost(svc: &ExecService) -> Result<CostModel> {
+    let path = artifacts_dir().join("calib.json");
+    if path.exists() {
+        if let Ok(v) = json::from_file(&path) {
+            if let Ok(c) = CostModel::from_json(&v) {
+                return Ok(c);
+            }
+        }
+    }
+    let cost = svc.handle().calibrate(5)?;
+    let _ = std::fs::write(&path, json::to_string_pretty(&cost.to_json()));
+    Ok(cost)
+}
+
+/// The paper's 2-GPU testbed at given occupancies, with a cost model.
+pub fn cluster_with_occ(occ: &[f64], cost: CostModel) -> Vec<SimGpu> {
+    let devs: Vec<DeviceConfig> = occ
+        .iter()
+        .enumerate()
+        .map(|(i, &o)| DeviceConfig::new(format!("gpu{i}"), 1.0, o))
+        .collect();
+    build_cluster(&devs, cost)
+}
+
+/// Normalized effective speeds for an occupancy vector (the static
+/// profiler path; benches bypass online profiling for determinism).
+pub fn speeds_for_occ(occ: &[f64]) -> Vec<f64> {
+    let v: Vec<f64> = occ.iter().map(|&o| 1.0 - o).collect();
+    let max = v.iter().cloned().fold(0.0, f64::max);
+    v.iter().map(|x| x / max).collect()
+}
+
+/// Paper §V defaults (M_base=100, warmup=4, a=0.75, b=0.25).
+pub fn paper_params() -> StadiParams {
+    StadiParams::default()
+}
+
+/// Default comm model (PCIe-ish, Table I testbed).
+pub fn paper_comm() -> CommConfig {
+    CommConfig::default()
+}
+
+/// Device names for n GPUs.
+pub fn names(n: usize) -> Vec<String> {
+    (0..n).map(|i| format!("gpu{i}")).collect()
+}
+
+/// Write a results file under bench_out/ (created on demand) and echo
+/// the path — EXPERIMENTS.md links these.
+pub fn save_results(name: &str, content: &str) -> Result<PathBuf> {
+    let dir = Path::new("bench_out");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, content)?;
+    println!("[saved {}]", path.display());
+    Ok(path)
+}
+
+/// Dump a latent as an 8-bit PGM (per-channel mosaic) for the Fig. 7
+/// visual-quality artifacts.
+pub fn latent_to_pgm(latent: &crate::runtime::Tensor) -> Vec<u8> {
+    let (h, w, c) = (latent.shape[0], latent.shape[1], latent.shape[2]);
+    let lo = latent.data.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = latent.data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let scale = if hi > lo { 255.0 / (hi - lo) } else { 1.0 };
+    // Mosaic: channels side by side.
+    let mut out = format!("P5\n{} {}\n255\n", w * c, h).into_bytes();
+    for y in 0..h {
+        for ch in 0..c {
+            for x in 0..w {
+                let v = latent.data[(y * w + x) * c + ch];
+                out.push(((v - lo) * scale) as u8);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speeds_normalized() {
+        let v = speeds_for_occ(&[0.0, 0.4]);
+        assert_eq!(v, vec![1.0, 0.6]);
+        let v = speeds_for_occ(&[0.5, 0.25]);
+        assert!((v[0] - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(v[1], 1.0);
+    }
+
+    #[test]
+    fn pgm_has_header_and_size() {
+        let t = crate::runtime::Tensor::zeros(&[4, 4, 2]);
+        let pgm = latent_to_pgm(&t);
+        assert!(pgm.starts_with(b"P5\n8 4\n255\n"));
+        assert_eq!(pgm.len(), 11 + 32);
+    }
+}

@@ -1,0 +1,44 @@
+//! # STADI — Spatio-Temporal Adaptive Diffusion Inference
+//!
+//! Rust + JAX + Pallas reproduction of *"STADI: Fine-Grained Step-Patch
+//! Diffusion Parallelism for Heterogeneous GPUs"* (CS.DC 2025).
+//!
+//! Three layers (see DESIGN.md):
+//! * **L1** — Pallas kernels (attention / LN / MLP / DDIM update) in
+//!   `python/compile/kernels/`, lowered once at build time.
+//! * **L2** — the mini-DiT denoiser in `python/compile/model.py`,
+//!   AOT-compiled to HLO text per patch height.
+//! * **L3** — this crate: the paper's contribution. Temporal step
+//!   adaptation (Eq. 4), spatial patch-size mending (Eq. 5), the
+//!   Algorithm-1 worker loop, communication manager, heterogeneous
+//!   device simulation, serving front-end, baselines, metrics and the
+//!   benches that regenerate every table/figure of the evaluation.
+//!
+//! Quickstart (after `make artifacts`):
+//! ```no_run
+//! use stadi::config::EngineConfig;
+//! use stadi::coordinator::engine::Engine;
+//!
+//! let cfg = EngineConfig::two_gpu_default("artifacts", &[0.0, 0.4]);
+//! let mut engine = Engine::new(cfg).unwrap();
+//! let out = engine.generate_seeded(1234).unwrap();
+//! println!("latent sum = {}", out.latent.data.iter().sum::<f32>());
+//! ```
+
+pub mod baselines;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod des;
+pub mod device;
+pub mod error;
+pub mod expt;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod sched;
+pub mod serve;
+pub mod util;
+
+pub use error::{Error, Result};

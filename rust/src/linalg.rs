@@ -1,0 +1,322 @@
+//! Small dense linear algebra (substrate for the FID-proxy metric).
+//!
+//! Row-major `Mat` with just enough operations for the Fréchet
+//! distance: covariance, symmetric eigendecomposition (cyclic Jacobi),
+//! and the symmetric-product matrix square root
+//! `tr((Σ₁ Σ₂)^{1/2})` computed as `tr((Σ₁^{1/2} Σ₂ Σ₁^{1/2})^{1/2})`.
+
+/// Row-major dense matrix of f64.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c);
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out[(i, j)] += a * other[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        out
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        let mut out = self.clone();
+        for a in out.data.iter_mut() {
+            *a *= s;
+        }
+        out
+    }
+
+    pub fn trace(&self) -> f64 {
+        assert_eq!(self.rows, self.cols);
+        (0..self.rows).map(|i| self[(i, i)]).sum()
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Force exact symmetry (average with transpose).
+    pub fn symmetrize(&self) -> Mat {
+        self.add(&self.transpose()).scale(0.5)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Column means of a sample matrix [n, d].
+pub fn col_means(samples: &Mat) -> Vec<f64> {
+    let n = samples.rows.max(1) as f64;
+    let mut mu = vec![0.0; samples.cols];
+    for i in 0..samples.rows {
+        for j in 0..samples.cols {
+            mu[j] += samples[(i, j)];
+        }
+    }
+    for m in mu.iter_mut() {
+        *m /= n;
+    }
+    mu
+}
+
+/// Sample covariance (unbiased, /(n-1)) of [n, d] samples.
+pub fn covariance(samples: &Mat) -> Mat {
+    let n = samples.rows;
+    let d = samples.cols;
+    let mu = col_means(samples);
+    let mut cov = Mat::zeros(d, d);
+    if n < 2 {
+        return cov;
+    }
+    for i in 0..n {
+        for a in 0..d {
+            let xa = samples[(i, a)] - mu[a];
+            for b in a..d {
+                cov[(a, b)] += xa * (samples[(i, b)] - mu[b]);
+            }
+        }
+    }
+    let denom = (n - 1) as f64;
+    for a in 0..d {
+        for b in a..d {
+            let v = cov[(a, b)] / denom;
+            cov[(a, b)] = v;
+            cov[(b, a)] = v;
+        }
+    }
+    cov
+}
+
+/// Symmetric eigendecomposition via cyclic Jacobi rotations.
+/// Returns (eigenvalues, eigenvectors as columns of V) with A = V Λ Vᵀ.
+pub fn sym_eigen(a: &Mat) -> (Vec<f64>, Mat) {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut m = a.symmetrize();
+    let mut v = Mat::eye(n);
+    for _sweep in 0..100 {
+        // Off-diagonal Frobenius norm.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Apply rotation J(p,q,θ): M = Jᵀ M J, V = V J.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let vals = (0..n).map(|i| m[(i, i)]).collect();
+    (vals, v)
+}
+
+/// Matrix square root of a symmetric PSD matrix via eigendecomposition.
+/// Negative eigenvalues (numerical noise) are clamped to zero.
+pub fn sqrtm_psd(a: &Mat) -> Mat {
+    let (vals, v) = sym_eigen(a);
+    let n = a.rows;
+    let mut lam = Mat::zeros(n, n);
+    for i in 0..n {
+        lam[(i, i)] = vals[i].max(0.0).sqrt();
+    }
+    v.matmul(&lam).matmul(&v.transpose())
+}
+
+/// tr((Σ₁ Σ₂)^{1/2}) for symmetric PSD Σ₁, Σ₂, computed stably as
+/// tr((S Σ₂ S)^{1/2}) with S = Σ₁^{1/2}.
+pub fn trace_sqrt_product(sigma1: &Mat, sigma2: &Mat) -> f64 {
+    let s = sqrtm_psd(sigma1);
+    let inner = s.matmul(sigma2).matmul(&s).symmetrize();
+    let (vals, _) = sym_eigen(&inner);
+    vals.iter().map(|&l| l.max(0.0).sqrt()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::NormalGen;
+
+    fn random_psd(n: usize, seed: u64) -> Mat {
+        let mut g = NormalGen::new(seed);
+        let mut b = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                b[(i, j)] = g.next();
+            }
+        }
+        b.matmul(&b.transpose()).scale(1.0 / n as f64)
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = random_psd(5, 1);
+        let i = Mat::eye(5);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-12);
+        assert!(i.matmul(&a).max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn eigen_reconstructs() {
+        for seed in 0..5 {
+            let a = random_psd(8, seed);
+            let (vals, v) = sym_eigen(&a);
+            let mut lam = Mat::zeros(8, 8);
+            for i in 0..8 {
+                lam[(i, i)] = vals[i];
+            }
+            let rec = v.matmul(&lam).matmul(&v.transpose());
+            assert!(
+                rec.max_abs_diff(&a) < 1e-8,
+                "seed {seed}: {}",
+                rec.max_abs_diff(&a)
+            );
+        }
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let a = random_psd(6, 9);
+        let (_, v) = sym_eigen(&a);
+        let vtv = v.transpose().matmul(&v);
+        assert!(vtv.max_abs_diff(&Mat::eye(6)) < 1e-9);
+    }
+
+    #[test]
+    fn sqrtm_squares_back() {
+        for seed in 0..5 {
+            let a = random_psd(7, 100 + seed);
+            let s = sqrtm_psd(&a);
+            assert!(s.matmul(&s).max_abs_diff(&a) < 1e-8);
+        }
+    }
+
+    #[test]
+    fn trace_sqrt_product_of_identical_is_trace() {
+        // tr((ΣΣ)^{1/2}) = tr(Σ) for PSD Σ.
+        let a = random_psd(6, 42);
+        let t = trace_sqrt_product(&a, &a);
+        assert!((t - a.trace()).abs() < 1e-8, "{t} vs {}", a.trace());
+    }
+
+    #[test]
+    fn covariance_of_known_samples() {
+        // Two perfectly correlated columns.
+        let s = Mat::from_rows(&[
+            vec![1.0, 2.0],
+            vec![2.0, 4.0],
+            vec![3.0, 6.0],
+        ]);
+        let c = covariance(&s);
+        assert!((c[(0, 0)] - 1.0).abs() < 1e-12);
+        assert!((c[(0, 1)] - 2.0).abs() < 1e-12);
+        assert!((c[(1, 1)] - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn col_means_correct() {
+        let s = Mat::from_rows(&[vec![1.0, 10.0], vec![3.0, 20.0]]);
+        assert_eq!(col_means(&s), vec![2.0, 15.0]);
+    }
+}

@@ -1,0 +1,224 @@
+//! `stadi` CLI: leader entrypoint.
+//!
+//! Subcommands:
+//!   generate  — run one request, print plan + latency + image summary
+//!   plan      — print the (M_i, P_i) plan for a cluster state
+//!   profile   — calibrate the per-step cost model, optionally save
+//!   serve     — TCP JSON-lines serving front-end
+//!   compare   — STADI vs patch/tensor parallelism on one setting
+
+use std::net::TcpListener;
+use std::process::ExitCode;
+
+use stadi::baselines::{patch_parallel, tensor_parallel};
+use stadi::config::{EngineConfig, ExecMode};
+use stadi::coordinator::Engine;
+use stadi::error::Result;
+use stadi::util::cli::Command;
+use stadi::util::json;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().collect();
+    let sub = args.get(1).map(String::as_str).unwrap_or("help");
+    let rest = args.iter().skip(2).cloned();
+    let out = match sub {
+        "generate" => cmd_generate(rest),
+        "plan" => cmd_plan(rest),
+        "profile" => cmd_profile(rest),
+        "serve" => cmd_serve(rest),
+        "compare" => cmd_compare(rest),
+        _ => {
+            println!(
+                "stadi — Spatio-Temporal Adaptive Diffusion Inference\n\n\
+                 usage: stadi <generate|plan|profile|serve|compare> \
+                 [flags]\n\
+                 run `stadi <subcommand> --help` for flags"
+            );
+            Ok(())
+        }
+    };
+    match out {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("{e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn base_flags(cmd: Command) -> Command {
+    cmd.flag("artifacts", "artifacts directory", Some("artifacts"))
+        .flag("config", "JSON cluster config file (overrides --occ)", None)
+        .flag("occ", "per-device occupancies, comma-separated", Some("0.0,0.0"))
+        .flag("steps", "M_base", Some("100"))
+        .flag("warmup", "M_warmup", Some("4"))
+        .flag("a", "temporal threshold a", Some("0.75"))
+        .flag("b", "exclusion threshold b", Some("0.25"))
+        .switch("no-temporal", "disable temporal adaptation (+TA off)")
+        .switch("no-spatial", "disable spatial adaptation (+SA off)")
+        .switch("cost-aware", "EXTENSION: affine-cost patch mending")
+        .switch("threaded", "real worker threads instead of dataflow")
+}
+
+fn build_config(
+    p: &stadi::util::cli::Parsed,
+) -> Result<EngineConfig> {
+    let mut cfg = if let Some(path) = p.get("config") {
+        EngineConfig::from_json_file(std::path::Path::new(path))?
+    } else {
+        let occ: Vec<f64> = p.get_list("occ")?;
+        EngineConfig::two_gpu_default(p.get("artifacts").unwrap(), &occ)
+    };
+    cfg.stadi.m_base = p.get_parsed("steps")?;
+    cfg.stadi.m_warmup = p.get_parsed("warmup")?;
+    cfg.stadi.a = p.get_parsed("a")?;
+    cfg.stadi.b = p.get_parsed("b")?;
+    cfg.stadi.temporal = !p.get_bool("no-temporal");
+    cfg.stadi.spatial = !p.get_bool("no-spatial");
+    cfg.stadi.cost_aware = p.get_bool("cost-aware");
+    if p.get_bool("threaded") {
+        cfg.mode = ExecMode::Threaded;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_generate(args: impl Iterator<Item = String>) -> Result<()> {
+    let cmd = base_flags(Command::new("generate", "run one request"))
+        .flag("seed", "request seed", Some("1234"))
+        .switch("calibrate", "calibrate the cost model first");
+    let p = cmd.parse(args)?;
+    let cfg = build_config(&p)?;
+    let mut engine = Engine::new(cfg)?;
+    if p.get_bool("calibrate") {
+        let c = engine.calibrate(3)?;
+        println!(
+            "calibrated cost model: fixed={:.4}ms per_row={:.4}ms",
+            c.fixed_s * 1e3,
+            c.per_row_s * 1e3
+        );
+    }
+    let seed: u64 = p.get_parsed("seed")?;
+    let t0 = std::time::Instant::now();
+    let g = engine.generate_seeded(seed)?;
+    let wall = t0.elapsed().as_secs_f64();
+    print!("{}", g.plan.describe());
+    println!(
+        "wall={:.3}s sim_cluster_latency={:.3}s utilization={:.1}% \
+         syncs={} x_bytes={} kv_bytes={}",
+        wall,
+        g.timeline.total_s,
+        g.timeline.utilization * 100.0,
+        g.stats.syncs,
+        g.stats.x_bytes,
+        g.stats.kv_bytes
+    );
+    println!(
+        "latent: sum={:.4} first4={:?}",
+        g.latent.sum(),
+        &g.latent.data[..4]
+    );
+    Ok(())
+}
+
+fn cmd_plan(args: impl Iterator<Item = String>) -> Result<()> {
+    let cmd = base_flags(Command::new("plan", "print the schedule plan"));
+    let p = cmd.parse(args)?;
+    let cfg = build_config(&p)?;
+    let engine = Engine::new(cfg)?;
+    let plan = engine.plan()?;
+    print!("{}", plan.describe());
+    let tl = engine.simulate_latency(&plan)?;
+    println!(
+        "simulated latency: {:.3}s (utilization {:.1}%)",
+        tl.total_s,
+        tl.utilization * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_profile(args: impl Iterator<Item = String>) -> Result<()> {
+    let cmd = base_flags(Command::new(
+        "profile",
+        "calibrate per-step cost from real PJRT timings",
+    ))
+    .flag("reps", "timed repetitions per height", Some("5"))
+    .flag("save", "write calibration JSON to this path", None);
+    let p = cmd.parse(args)?;
+    let cfg = build_config(&p)?;
+    let mut engine = Engine::new(cfg)?;
+    let cost = engine.calibrate(p.get_parsed("reps")?)?;
+    println!(
+        "cost model: fixed={:.4}ms per_row={:.4}ms",
+        cost.fixed_s * 1e3,
+        cost.per_row_s * 1e3
+    );
+    if let Some(path) = p.get("save") {
+        std::fs::write(path, json::to_string_pretty(&cost.to_json()))?;
+        println!("saved to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: impl Iterator<Item = String>) -> Result<()> {
+    let cmd = base_flags(Command::new("serve", "TCP JSON-lines server"))
+        .flag("addr", "listen address", Some("127.0.0.1:7878"))
+        .flag("queue", "router queue capacity", Some("64"))
+        .flag("max-requests", "stop after N requests (0 = run forever)", Some("0"));
+    let p = cmd.parse(args)?;
+    let cfg = build_config(&p)?;
+    let mut engine = Engine::new(cfg)?;
+    let listener = TcpListener::bind(p.get("addr").unwrap())?;
+    stadi::serve::server::serve(
+        &mut engine,
+        listener,
+        p.get_parsed("queue")?,
+        p.get_parsed("max-requests")?,
+        None,
+    )?;
+    Ok(())
+}
+
+fn cmd_compare(args: impl Iterator<Item = String>) -> Result<()> {
+    let cmd = base_flags(Command::new(
+        "compare",
+        "STADI vs patch/tensor parallelism (simulated latency)",
+    ));
+    let p = cmd.parse(args)?;
+    let cfg = build_config(&p)?;
+    let mut engine = Engine::new(cfg)?;
+    engine.calibrate(3)?;
+    let model = engine.exec().manifest().model.clone();
+
+    let stadi_plan = engine.plan()?;
+    let t_stadi = engine.simulate_latency(&stadi_plan)?;
+
+    let pp_plan = patch_parallel::plan(
+        engine.schedule(),
+        engine.cluster().len(),
+        &engine.config().stadi,
+        model.latent_h,
+        model.row_granularity,
+    )?;
+    let t_pp = engine.simulate_latency(&pp_plan)?;
+    let t_tp = tensor_parallel::latency(
+        engine.config().stadi.m_base,
+        engine.cluster(),
+        &engine.config().comm,
+        &model,
+    );
+
+    println!("method            latency     vs PP    utilization");
+    let row = |name: &str, t: &stadi::coordinator::timeline::Timeline| {
+        println!(
+            "{name:<16}  {:>8.3}s   {:>5.2}x   {:>6.1}%",
+            t.total_s,
+            t_pp.total_s / t.total_s,
+            t.utilization * 100.0
+        );
+    };
+    row("tensor-parallel", &t_tp);
+    row("patch-parallel", &t_pp);
+    row("STADI", &t_stadi);
+    Ok(())
+}

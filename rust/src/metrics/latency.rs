@@ -1,0 +1,111 @@
+//! Latency / throughput accounting for the serving layer and benches.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Running latency statistics (per request class).
+#[derive(Debug, Default, Clone)]
+pub struct LatencyTracker {
+    samples_s: Vec<f64>,
+}
+
+impl LatencyTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        self.samples_s.push(seconds);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_s.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples_s)
+    }
+
+    pub fn p50(&self) -> f64 {
+        stats::percentile(&self.samples_s, 50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        stats::percentile(&self.samples_s, 95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        stats::percentile(&self.samples_s, 99.0)
+    }
+
+    pub fn max(&self) -> f64 {
+        stats::max(&self.samples_s)
+    }
+
+    /// Requests per second over a window of `wall_s`.
+    pub fn throughput(&self, wall_s: f64) -> f64 {
+        if wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.count() as f64 / wall_s
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.3}s p50={:.3}s p95={:.3}s max={:.3}s",
+            self.count(),
+            self.mean(),
+            self.p50(),
+            self.p95(),
+            self.max()
+        )
+    }
+}
+
+/// RAII timer feeding a tracker.
+pub struct Timed<'a> {
+    tracker: &'a mut LatencyTracker,
+    start: Instant,
+}
+
+impl<'a> Timed<'a> {
+    pub fn new(tracker: &'a mut LatencyTracker) -> Self {
+        Timed { tracker, start: Instant::now() }
+    }
+}
+
+impl Drop for Timed<'_> {
+    fn drop(&mut self) {
+        self.tracker.record(self.start.elapsed().as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_percentiles() {
+        let mut t = LatencyTracker::new();
+        for i in 1..=100 {
+            t.record(i as f64 / 100.0);
+        }
+        assert_eq!(t.count(), 100);
+        assert!((t.p50() - 0.505).abs() < 0.01);
+        assert!((t.p95() - 0.955).abs() < 0.01);
+        assert_eq!(t.max(), 1.0);
+        assert!((t.throughput(10.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timed_records_on_drop() {
+        let mut t = LatencyTracker::new();
+        {
+            let _timer = Timed::new(&mut t);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(t.count(), 1);
+        assert!(t.mean() >= 0.002);
+    }
+}

@@ -1,0 +1,75 @@
+//! LPIPS-proxy: perceptual distance under the fixed random conv net
+//! (`features.hlo.txt`). Per stage, features are L2-normalized and the
+//! squared distance is averaged across stages — LPIPS' structure with
+//! a random (not learned) backbone; see DESIGN.md §3.
+
+use crate::error::Result;
+use crate::runtime::tensor::Tensor;
+use crate::runtime::ExecHandle;
+
+fn normalized(v: &[f32]) -> Vec<f64> {
+    let norm = v
+        .iter()
+        .map(|&x| (x as f64) * (x as f64))
+        .sum::<f64>()
+        .sqrt()
+        .max(1e-12);
+    v.iter().map(|&x| x as f64 / norm).collect()
+}
+
+fn stage_dist(a: &[f32], b: &[f32]) -> f64 {
+    let na = normalized(a);
+    let nb = normalized(b);
+    na.iter()
+        .zip(&nb)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+}
+
+/// LPIPS-proxy distance between two latents (lower = more similar).
+pub fn lpips(rt: &ExecHandle, a: &Tensor, b: &Tensor) -> Result<f64> {
+    let fa = rt.features(a)?;
+    let fb = rt.features(b)?;
+    let d = stage_dist(&fa.0, &fb.0)
+        + stage_dist(&fa.1, &fb.1)
+        + stage_dist(&fa.2, &fb.2);
+    Ok(d / 3.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ExecService;
+    use crate::util::rng::NormalGen;
+    use std::path::PathBuf;
+
+    fn runtime() -> Option<ExecService> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(ExecService::spawn(dir).unwrap())
+    }
+
+    #[test]
+    fn zero_for_identical_and_orders_perturbations() {
+        let Some(svc) = runtime() else { return };
+        let rt = svc.handle();
+        let mut g = NormalGen::new(4);
+        let a = Tensor::new(vec![32, 32, 4], g.vec_f32(4096)).unwrap();
+        assert!(lpips(&rt, &a, &a).unwrap() < 1e-12);
+
+        let mut small = a.clone();
+        for x in small.data.iter_mut() {
+            *x += 0.01;
+        }
+        let mut big = a.clone();
+        for x in big.data.iter_mut() {
+            *x += 0.5;
+        }
+        let d_small = lpips(&rt, &a, &small).unwrap();
+        let d_big = lpips(&rt, &a, &big).unwrap();
+        assert!(d_small < d_big, "{d_small} vs {d_big}");
+    }
+}

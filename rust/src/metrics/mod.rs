@@ -1,0 +1,13 @@
+//! Quality + performance metrics for the evaluation (paper §V).
+//!
+//! PSNR is exact; LPIPS and FID are *proxies* built on the fixed
+//! random feature net AOT'd in `features.hlo.txt` (DESIGN.md §3
+//! documents why the substitution preserves Table II's relative
+//! comparisons). They are reported as "LPIPS-proxy"/"FID-proxy"
+//! throughout EXPERIMENTS.md.
+
+pub mod fid;
+pub mod latency;
+pub mod lpips;
+pub mod psnr;
+pub mod ssim;

@@ -1,0 +1,130 @@
+//! SSIM (structural similarity) between two latents — an extra quality
+//! metric beyond the paper's PSNR/LPIPS/FID, useful because it is
+//! sensitive to the *local structure* changes that patch-boundary
+//! staleness introduces (the artifacts Fig. 7 highlights with red
+//! boxes tend to be local).
+//!
+//! Windowed SSIM with an 8x8 uniform window per channel, averaged over
+//! windows and channels. The dynamic range L is taken from the joint
+//! data range (latents are not [0,255] images).
+
+use crate::runtime::tensor::Tensor;
+
+const WIN: usize = 8;
+
+/// Mean SSIM over all 8x8 windows and channels. Inputs must share
+/// shape [H, W, C] with H, W multiples of 8.
+pub fn ssim(a: &Tensor, b: &Tensor) -> f64 {
+    assert_eq!(a.shape, b.shape);
+    assert_eq!(a.shape.len(), 3);
+    let (h, w, c) = (a.shape[0], a.shape[1], a.shape[2]);
+    assert!(h % WIN == 0 && w % WIN == 0, "H,W must be multiples of 8");
+
+    let lo = a
+        .data
+        .iter()
+        .chain(b.data.iter())
+        .cloned()
+        .fold(f32::INFINITY, f32::min) as f64;
+    let hi = a
+        .data
+        .iter()
+        .chain(b.data.iter())
+        .cloned()
+        .fold(f32::NEG_INFINITY, f32::max) as f64;
+    let l = (hi - lo).max(1e-12);
+    let c1 = (0.01 * l) * (0.01 * l);
+    let c2 = (0.03 * l) * (0.03 * l);
+
+    let at = |t: &Tensor, y: usize, x: usize, ch: usize| -> f64 {
+        t.data[(y * w + x) * c + ch] as f64
+    };
+
+    let mut total = 0.0;
+    let mut windows = 0usize;
+    for ch in 0..c {
+        for wy in (0..h).step_by(WIN) {
+            for wx in (0..w).step_by(WIN) {
+                let n = (WIN * WIN) as f64;
+                let (mut ma, mut mb) = (0.0, 0.0);
+                for y in wy..wy + WIN {
+                    for x in wx..wx + WIN {
+                        ma += at(a, y, x, ch);
+                        mb += at(b, y, x, ch);
+                    }
+                }
+                ma /= n;
+                mb /= n;
+                let (mut va, mut vb, mut cov) = (0.0, 0.0, 0.0);
+                for y in wy..wy + WIN {
+                    for x in wx..wx + WIN {
+                        let da = at(a, y, x, ch) - ma;
+                        let db = at(b, y, x, ch) - mb;
+                        va += da * da;
+                        vb += db * db;
+                        cov += da * db;
+                    }
+                }
+                va /= n - 1.0;
+                vb /= n - 1.0;
+                cov /= n - 1.0;
+                let s = ((2.0 * ma * mb + c1) * (2.0 * cov + c2))
+                    / ((ma * ma + mb * mb + c1) * (va + vb + c2));
+                total += s;
+                windows += 1;
+            }
+        }
+    }
+    total / windows as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::NormalGen;
+
+    #[test]
+    fn identical_scores_one() {
+        let mut g = NormalGen::new(1);
+        let a = Tensor::new(vec![32, 32, 4], g.vec_f32(4096)).unwrap();
+        assert!((ssim(&a, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn independent_scores_near_zero() {
+        let mut g = NormalGen::new(2);
+        let a = Tensor::new(vec![32, 32, 4], g.vec_f32(4096)).unwrap();
+        let b = Tensor::new(vec![32, 32, 4], g.vec_f32(4096)).unwrap();
+        let s = ssim(&a, &b);
+        assert!(s.abs() < 0.25, "ssim {s}");
+    }
+
+    #[test]
+    fn ordering_by_perturbation() {
+        let mut g = NormalGen::new(3);
+        let a = Tensor::new(vec![32, 32, 4], g.vec_f32(4096)).unwrap();
+        let mut near = a.clone();
+        let mut far = a.clone();
+        let mut gn = NormalGen::new(4);
+        for (x, y) in near.data.iter_mut().zip(far.data.iter_mut()) {
+            let e = gn.next() as f32;
+            *x += 0.05 * e;
+            *y += 0.8 * e;
+        }
+        let s_near = ssim(&a, &near);
+        let s_far = ssim(&a, &far);
+        assert!(s_near > s_far, "{s_near} vs {s_far}");
+        assert!(s_near > 0.9);
+    }
+
+    #[test]
+    fn symmetric() {
+        let mut g = NormalGen::new(5);
+        let a = Tensor::new(vec![32, 32, 4], g.vec_f32(4096)).unwrap();
+        let mut b = a.clone();
+        for x in b.data.iter_mut() {
+            *x *= 1.1;
+        }
+        assert!((ssim(&a, &b) - ssim(&b, &a)).abs() < 1e-12);
+    }
+}

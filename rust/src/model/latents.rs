@@ -1,0 +1,106 @@
+//! Latent partitioning: contiguous row ranges per device, seeded
+//! initial noise, and request conditioning vectors.
+
+use crate::runtime::artifacts::ModelInfo;
+use crate::runtime::tensor::Tensor;
+use crate::util::rng::NormalGen;
+
+/// A device's spatial assignment: latent rows [row0, row0 + rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RowRange {
+    pub row0: usize,
+    pub rows: usize,
+}
+
+impl RowRange {
+    pub fn end(&self) -> usize {
+        self.row0 + self.rows
+    }
+}
+
+/// Turn per-device patch sizes (rows) into contiguous ranges covering
+/// the latent top-to-bottom in device order.
+pub fn partition_rows(sizes: &[usize]) -> Vec<RowRange> {
+    let mut out = Vec::with_capacity(sizes.len());
+    let mut row0 = 0;
+    for &rows in sizes {
+        out.push(RowRange { row0, rows });
+        row0 += rows;
+    }
+    out
+}
+
+/// Token range corresponding to a row range.
+pub fn token_range(model: &ModelInfo, r: RowRange) -> (usize, usize) {
+    let t0 = model.tokens_for_rows(r.row0);
+    let t1 = t0 + model.tokens_for_rows(r.rows);
+    (t0, t1)
+}
+
+/// Seeded N(0,1) initial latent for a request (the paper's "initial
+/// noise x_{t_0}"). Draw order matches `compile/pcg.py` consumers.
+pub fn seeded_noise(model: &ModelInfo, seed: u64) -> Tensor {
+    let mut g = NormalGen::new(seed);
+    let shape = model.latent_shape();
+    let n = shape.iter().product();
+    Tensor::new(shape, g.vec_f32(n)).unwrap()
+}
+
+/// Seeded conditioning vector (prompt-embedding stand-in, DESIGN.md §3).
+/// Uses a distinct stream from the noise so requests with equal seeds
+/// still decouple the two draws.
+pub fn seeded_cond(model: &ModelInfo, seed: u64) -> Vec<f32> {
+    let mut g = NormalGen::new(seed ^ 0x9e3779b97f4a7c15);
+    g.vec_f32(model.dim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ModelInfo {
+        ModelInfo {
+            latent_h: 32, latent_w: 32, latent_c: 4, patch: 2, dim: 96,
+            heads: 4, layers: 3, temb_dim: 64, row_granularity: 4,
+            tokens_full: 256, param_count: 1, params_seed: 0,
+        }
+    }
+
+    #[test]
+    fn partition_covers_contiguously() {
+        let parts = partition_rows(&[24, 8]);
+        assert_eq!(parts[0], RowRange { row0: 0, rows: 24 });
+        assert_eq!(parts[1], RowRange { row0: 24, rows: 8 });
+        assert_eq!(parts[1].end(), 32);
+    }
+
+    #[test]
+    fn token_ranges_tile_the_tokens() {
+        let m = model();
+        let parts = partition_rows(&[12, 20]);
+        let (a0, a1) = token_range(&m, parts[0]);
+        let (b0, b1) = token_range(&m, parts[1]);
+        assert_eq!((a0, a1), (0, 96));
+        assert_eq!((b0, b1), (96, 256));
+    }
+
+    #[test]
+    fn noise_is_seed_deterministic() {
+        let m = model();
+        let a = seeded_noise(&m, 5);
+        let b = seeded_noise(&m, 5);
+        let c = seeded_noise(&m, 6);
+        assert_eq!(a, b);
+        assert!(a.max_abs_diff(&c) > 0.1);
+        assert_eq!(a.shape, vec![32, 32, 4]);
+    }
+
+    #[test]
+    fn cond_differs_from_noise_stream() {
+        let m = model();
+        let cond = seeded_cond(&m, 5);
+        let noise = seeded_noise(&m, 5);
+        assert_eq!(cond.len(), 96);
+        assert!((cond[0] - noise.data[0]).abs() > 1e-6);
+    }
+}

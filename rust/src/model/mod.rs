@@ -1,0 +1,9 @@
+//! Diffusion model runtime pieces: noise schedule, DDIM sampler and
+//! latent partitioning (rust twins of `python/compile/schedule.py` and
+//! the request-side helpers).
+
+pub mod latents;
+pub mod sampler;
+pub mod schedule;
+
+pub use schedule::{DdimCoef, Schedule};

@@ -1,0 +1,211 @@
+//! Noise schedule + DDIM timestep grids (runtime twin of
+//! `python/compile/schedule.py`; golden-tested against it).
+//!
+//! Conventions (paper §II-A): scaled-linear betas, alpha_bar_t =
+//! prod(1 - beta); the paper's alpha_t = sqrt(alpha_bar_t) and
+//! sigma_t = sqrt(1 - alpha_bar_t). DDIM (eta = 0) steps are fused
+//! multiply-adds with precomputed (coef_x, coef_eps) — Eq. 3.
+
+use crate::runtime::artifacts::ScheduleInfo;
+
+/// Precomputed schedule tables.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub train_steps: usize,
+    /// alpha_bar indexed by t, length train_steps.
+    pub alpha_bar: Vec<f64>,
+}
+
+/// Coefficients of one DDIM update x_next = coef_x * x + coef_eps * eps.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DdimCoef {
+    pub coef_x: f64,
+    pub coef_eps: f64,
+}
+
+impl Schedule {
+    /// Scaled-linear (SD-style): linspace in sqrt space, squared.
+    pub fn scaled_linear(train_steps: usize, beta_start: f64, beta_end: f64) -> Self {
+        assert!(train_steps >= 2);
+        let s0 = beta_start.sqrt();
+        let s1 = beta_end.sqrt();
+        let mut alpha_bar = Vec::with_capacity(train_steps);
+        let mut prod = 1.0f64;
+        for i in 0..train_steps {
+            let frac = i as f64 / (train_steps - 1) as f64;
+            let beta = {
+                let s = s0 + (s1 - s0) * frac;
+                s * s
+            };
+            prod *= 1.0 - beta;
+            alpha_bar.push(prod);
+        }
+        Schedule { train_steps, alpha_bar }
+    }
+
+    pub fn from_info(info: &ScheduleInfo) -> Self {
+        Self::scaled_linear(info.train_steps, info.beta_start, info.beta_end)
+    }
+
+    /// Leading-spaced DDIM grid of `m` timesteps, strictly decreasing,
+    /// ending at 0: grid[k] = floor(k*T/m) for k = m-1 .. 0.
+    pub fn ddim_grid(&self, m: usize) -> Vec<usize> {
+        assert!(m >= 1);
+        (0..m)
+            .rev()
+            .map(|k| (k * self.train_steps) / m)
+            .collect()
+    }
+
+    /// Slow-device grid per STADI temporal adaptation (paper §III-C):
+    /// shared warmup prefix, then every 2nd point of the remainder
+    /// (always including the final point).
+    pub fn stadi_slow_grid(fast: &[usize], warmup: usize) -> Vec<usize> {
+        let rest = &fast[warmup..];
+        assert!(
+            rest.len() % 2 == 0,
+            "M_base - M_warmup must be even (got {})",
+            rest.len()
+        );
+        let mut g: Vec<usize> = fast[..warmup].to_vec();
+        g.extend(rest.iter().skip(1).step_by(2));
+        g
+    }
+
+    /// Coefficients of one DDIM step t_from -> t_to; t_to = None means
+    /// the final step to the clean sample (alpha_bar = 1).
+    pub fn ddim_coefficients(&self, t_from: usize, t_to: Option<usize>) -> DdimCoef {
+        let ab_t = self.alpha_bar[t_from];
+        let ab_s = match t_to {
+            None => 1.0,
+            Some(s) => self.alpha_bar[s],
+        };
+        let coef_x = (ab_s / ab_t).sqrt();
+        let coef_eps = (1.0 - ab_s).sqrt() - coef_x * (1.0 - ab_t).sqrt();
+        DdimCoef { coef_x, coef_eps }
+    }
+
+    /// Coefficient sequence for a decreasing grid, final step -> clean.
+    pub fn grid_coefficients(&self, grid: &[usize]) -> Vec<DdimCoef> {
+        (0..grid.len())
+            .map(|i| {
+                let to = grid.get(i + 1).copied();
+                self.ddim_coefficients(grid[i], to)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched() -> Schedule {
+        Schedule::scaled_linear(1000, 0.00085, 0.012)
+    }
+
+    #[test]
+    fn alpha_bar_monotone_decreasing() {
+        let s = sched();
+        assert_eq!(s.alpha_bar.len(), 1000);
+        for w in s.alpha_bar.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+        assert!(s.alpha_bar[0] < 1.0 && s.alpha_bar[999] > 0.0);
+    }
+
+    #[test]
+    fn grid_shape_and_bounds() {
+        let s = sched();
+        let g = s.ddim_grid(100);
+        assert_eq!(g.len(), 100);
+        assert_eq!(g[0], 990);
+        assert_eq!(g[99], 0);
+        for w in g.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+    }
+
+    #[test]
+    fn slow_grid_subset_and_aligned() {
+        let s = sched();
+        let fast = s.ddim_grid(100);
+        let slow = Schedule::stadi_slow_grid(&fast, 4);
+        assert_eq!(slow.len(), 52); // 4 + 96/2 — Eq. 4's ½M+½W
+        assert_eq!(&slow[..4], &fast[..4]);
+        assert_eq!(*slow.last().unwrap(), 0);
+        for t in &slow {
+            assert!(fast.contains(t));
+        }
+    }
+
+    #[test]
+    fn identity_coefficient() {
+        let s = sched();
+        let c = s.ddim_coefficients(500, Some(500));
+        assert!((c.coef_x - 1.0).abs() < 1e-12);
+        assert!(c.coef_eps.abs() < 1e-12);
+    }
+
+    #[test]
+    fn coefficients_telescope() {
+        // Product of coef_x over a grid = 1/sqrt(alpha_bar[grid[0]]).
+        let s = sched();
+        let g = s.ddim_grid(10);
+        let prod: f64 = s
+            .grid_coefficients(&g)
+            .iter()
+            .map(|c| c.coef_x)
+            .product();
+        let want = 1.0 / s.alpha_bar[g[0]].sqrt();
+        assert!((prod - want).abs() / want < 1e-9);
+    }
+
+    #[test]
+    fn matches_python_golden_if_built() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/golden/schedule.json");
+        if !dir.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let g = crate::util::json::from_file(&dir).unwrap();
+        let s = Schedule::scaled_linear(
+            g.get("train_steps").unwrap().as_usize().unwrap(),
+            g.get("beta_start").unwrap().as_f64().unwrap(),
+            g.get("beta_end").unwrap().as_f64().unwrap(),
+        );
+        // alpha_bar samples
+        for (k, v) in g.get("alpha_bar_samples").unwrap().as_obj().unwrap().iter() {
+            let t: usize = k.parse().unwrap();
+            let want = v.as_f64().unwrap();
+            let got = s.alpha_bar[t];
+            assert!(
+                (got - want).abs() < 1e-12 * want.abs().max(1.0),
+                "alpha_bar[{t}]: {got} vs {want}"
+            );
+        }
+        // grids
+        let want_g100 = g.get("grid_m100").unwrap().usizes().unwrap();
+        assert_eq!(s.ddim_grid(100), want_g100);
+        let want_g50 = g.get("grid_m50").unwrap().usizes().unwrap();
+        assert_eq!(s.ddim_grid(50), want_g50);
+        let want_slow = g.get("grid_slow_m100_w4").unwrap().usizes().unwrap();
+        assert_eq!(Schedule::stadi_slow_grid(&s.ddim_grid(100), 4), want_slow);
+        // first coefficients
+        let coeffs = s.grid_coefficients(&s.ddim_grid(100));
+        let want8 = g.get("coeffs_m100_first8").unwrap().as_arr().unwrap();
+        for (i, pair) in want8.iter().enumerate() {
+            let p = pair.f64s().unwrap();
+            assert!((coeffs[i].coef_x - p[0]).abs() < 1e-12);
+            assert!((coeffs[i].coef_eps - p[1]).abs() < 1e-12);
+        }
+        let want_last = g.get("coeffs_m100_last2").unwrap().as_arr().unwrap();
+        for (i, pair) in want_last.iter().enumerate() {
+            let p = pair.f64s().unwrap();
+            let c = coeffs[coeffs.len() - 2 + i];
+            assert!((c.coef_x - p[0]).abs() < 1e-9);
+            assert!((c.coef_eps - p[1]).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,256 @@
+//! Artifact manifest: the ABI between `python/compile/aot.py` and this
+//! runtime. Parses `artifacts/manifest.json`, validates file presence
+//! and sizes, and loads `params.bin`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+/// Model geometry as recorded by the AOT step (mirror of
+/// `python/compile/config.py::ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub latent_h: usize,
+    pub latent_w: usize,
+    pub latent_c: usize,
+    pub patch: usize,
+    pub dim: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub temb_dim: usize,
+    pub row_granularity: usize,
+    pub tokens_full: usize,
+    pub param_count: usize,
+    pub params_seed: u64,
+}
+
+impl ModelInfo {
+    pub fn tokens_for_rows(&self, rows: usize) -> usize {
+        assert_eq!(rows % self.patch, 0);
+        (rows / self.patch) * (self.latent_w / self.patch)
+    }
+
+    /// Shape of one latent image.
+    pub fn latent_shape(&self) -> Vec<usize> {
+        vec![self.latent_h, self.latent_w, self.latent_c]
+    }
+
+    /// Shape of the full per-layer KV buffer stack [L, T_full, 2D].
+    pub fn kv_shape(&self) -> Vec<usize> {
+        vec![self.layers, self.tokens_full, 2 * self.dim]
+    }
+}
+
+/// Schedule parameters recorded by AOT (mirror of ScheduleConfig).
+#[derive(Debug, Clone)]
+pub struct ScheduleInfo {
+    pub train_steps: usize,
+    pub beta_start: f64,
+    pub beta_end: f64,
+}
+
+/// One input/output slot of an artifact.
+#[derive(Debug, Clone)]
+pub struct Slot {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT'd HLO-text artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub key: String,
+    pub file: PathBuf,
+    pub inputs: Vec<Slot>,
+    pub outputs: Vec<Slot>,
+    pub bytes: usize,
+}
+
+/// Parsed manifest + resolved paths.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelInfo,
+    pub schedule: ScheduleInfo,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    /// Patch heights with a denoiser artifact, ascending.
+    pub patch_heights: Vec<usize>,
+}
+
+fn parse_slots(v: &Value) -> Result<Vec<Slot>> {
+    v.as_arr()?
+        .iter()
+        .map(|s| {
+            Ok(Slot {
+                name: s.get("name")?.as_str()?.to_string(),
+                shape: s.get("shape")?.usizes()?,
+                dtype: s.get("dtype")?.as_str()?.to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        if !path.exists() {
+            return Err(Error::Artifact(format!(
+                "{} not found — run `make artifacts` first",
+                path.display()
+            )));
+        }
+        let v = json::from_file(&path)?;
+
+        let m = v.get("model")?;
+        let model = ModelInfo {
+            latent_h: m.get("latent_h")?.as_usize()?,
+            latent_w: m.get("latent_w")?.as_usize()?,
+            latent_c: m.get("latent_c")?.as_usize()?,
+            patch: m.get("patch")?.as_usize()?,
+            dim: m.get("dim")?.as_usize()?,
+            heads: m.get("heads")?.as_usize()?,
+            layers: m.get("layers")?.as_usize()?,
+            temb_dim: m.get("temb_dim")?.as_usize()?,
+            row_granularity: m.get("row_granularity")?.as_usize()?,
+            tokens_full: m.get("tokens_full")?.as_usize()?,
+            param_count: m.get("param_count")?.as_usize()?,
+            params_seed: m.get("params_seed")?.as_i64()? as u64,
+        };
+        let s = v.get("schedule")?;
+        let schedule = ScheduleInfo {
+            train_steps: s.get("train_steps")?.as_usize()?,
+            beta_start: s.get("beta_start")?.as_f64()?,
+            beta_end: s.get("beta_end")?.as_f64()?,
+        };
+
+        let mut artifacts = BTreeMap::new();
+        let mut patch_heights = Vec::new();
+        for (key, a) in v.get("artifacts")?.as_obj()?.iter() {
+            let file = dir.join(a.get("file")?.as_str()?);
+            let bytes = a.get("bytes")?.as_usize()?;
+            if !file.exists() {
+                return Err(Error::Artifact(format!(
+                    "artifact file missing: {}",
+                    file.display()
+                )));
+            }
+            let actual = std::fs::metadata(&file)?.len() as usize;
+            if actual != bytes {
+                return Err(Error::Artifact(format!(
+                    "{}: size {actual} != manifest {bytes} (stale \
+                     artifacts? re-run `make artifacts`)",
+                    file.display()
+                )));
+            }
+            if let Some(hs) = key.strip_prefix("denoiser_h") {
+                patch_heights.push(hs.parse::<usize>().map_err(|_| {
+                    Error::Artifact(format!("bad artifact key {key}"))
+                })?);
+            }
+            artifacts.insert(
+                key.clone(),
+                ArtifactInfo {
+                    key: key.clone(),
+                    file,
+                    inputs: parse_slots(a.get("inputs")?)?,
+                    outputs: parse_slots(a.get("outputs")?)?,
+                    bytes,
+                },
+            );
+        }
+        patch_heights.sort_unstable();
+        if patch_heights.is_empty() {
+            return Err(Error::Artifact("no denoiser artifacts".into()));
+        }
+
+        Ok(Manifest { dir, model, schedule, artifacts, patch_heights })
+    }
+
+    pub fn artifact(&self, key: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(key)
+            .ok_or_else(|| Error::Artifact(format!("no artifact {key:?}")))
+    }
+
+    pub fn denoiser(&self, h: usize) -> Result<&ArtifactInfo> {
+        self.artifact(&format!("denoiser_h{h}"))
+    }
+
+    /// Load the flat f32 weight vector, validating its length.
+    pub fn load_params(&self) -> Result<Vec<f32>> {
+        let path = self.dir.join("params.bin");
+        let bytes = std::fs::read(&path)?;
+        if bytes.len() != self.model.param_count * 4 {
+            return Err(Error::Artifact(format!(
+                "params.bin: {} bytes, expected {}",
+                bytes.len(),
+                self.model.param_count * 4
+            )));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Read a golden JSON file dumped by aot.py.
+    pub fn golden(&self, name: &str) -> Result<Value> {
+        json::from_file(&self.dir.join("golden").join(name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // Tests run from the crate root.
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_manifest_and_params() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        assert_eq!(m.model.latent_h, 32);
+        assert!(m.patch_heights.contains(&32));
+        assert!(m.patch_heights.contains(&8));
+        let params = m.load_params().unwrap();
+        assert_eq!(params.len(), m.model.param_count);
+        // Non-degenerate weights.
+        assert!(params.iter().any(|&x| x != 0.0));
+        // Denoiser signature sanity.
+        let d = m.denoiser(8).unwrap();
+        assert_eq!(d.inputs[1].shape, vec![8, 32, 4]);
+        assert_eq!(d.outputs[0].shape, vec![8, 32, 4]);
+    }
+
+    #[test]
+    fn missing_dir_is_friendly_error() {
+        let err = Manifest::load("/nonexistent-dir").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn tokens_for_rows_math() {
+        let m = ModelInfo {
+            latent_h: 32, latent_w: 32, latent_c: 4, patch: 2, dim: 96,
+            heads: 4, layers: 3, temb_dim: 64, row_granularity: 4,
+            tokens_full: 256, param_count: 1, params_seed: 0,
+        };
+        assert_eq!(m.tokens_for_rows(8), 64);
+        assert_eq!(m.tokens_for_rows(32), 256);
+        assert_eq!(m.kv_shape(), vec![3, 256, 192]);
+    }
+}

@@ -1,0 +1,371 @@
+//! PJRT execution: load HLO-text artifacts, compile once, execute many.
+//!
+//! Wraps the `xla` crate (PjRtClient -> HloModuleProto::from_text_file
+//! -> compile -> execute). One `Runtime` is shared by all simulated
+//! devices — the physical CPU is the single execution substrate and
+//! heterogeneity is imposed by the device layer (DESIGN.md §3), so a
+//! shared executable cache both matches reality (one binary per model
+//! variant) and avoids recompiling per device.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::runtime::artifacts::{ArtifactInfo, Manifest};
+use crate::runtime::tensor::Tensor;
+
+/// Typed inputs for one denoiser step.
+#[derive(Debug, Clone)]
+pub struct DenoiserInputs<'a> {
+    /// Flat weights (shared, fed by reference each call).
+    pub params: &'a [f32],
+    /// This device's latent rows [h, W, C].
+    pub x_patch: &'a Tensor,
+    /// Full stale KV stack [L, T_full, 2D].
+    pub kv_stale: &'a Tensor,
+    /// First latent row of the patch.
+    pub row_off: usize,
+    /// Diffusion timestep index (as trained, 0..train_steps).
+    pub t: f64,
+    /// Conditioning vector [D].
+    pub cond: &'a [f32],
+}
+
+/// Outputs of one denoiser step.
+#[derive(Debug, Clone)]
+pub struct DenoiserOutputs {
+    /// Predicted noise for the patch [h, W, C].
+    pub eps_patch: Tensor,
+    /// Fresh own-token KV per layer [L, T_own, 2D].
+    pub kv_fresh: Tensor,
+}
+
+/// A compiled artifact ready to execute.
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    /// Retained for diagnostics (artifact identity in error paths).
+    #[allow(dead_code)]
+    info: ArtifactInfo,
+}
+
+/// PJRT CPU runtime with a compiled-executable cache.
+///
+/// Execution goes through `execute_b` with explicitly-managed device
+/// buffers: the literal-taking `execute` of xla 0.1.6 leaks the
+/// transient input device buffers it creates internally (~3 MB per
+/// denoiser step — enough to OOM a quality sweep), while
+/// `PjRtBuffer`'s Drop frees properly. This also lets us upload the
+/// 2.2 MB weight vector once and reuse the device buffer across every
+/// step (see `params_buffer`).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<BTreeMap<String, std::sync::Arc<Compiled>>>,
+    /// Cached device buffer for the flat weights, keyed by the host
+    /// pointer + length of the slice it was uploaded from (the exec
+    /// service owns one stable params vec for the process lifetime).
+    params_buffer: Mutex<Option<(usize, usize, xla::PjRtBuffer)>>,
+}
+
+impl Runtime {
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(BTreeMap::new()),
+            params_buffer: Mutex::new(None),
+        })
+    }
+
+    /// Host-to-device upload with proper ownership (freed on drop).
+    fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    fn upload_scalar_f32(&self, v: f32) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
+    }
+
+    fn upload_scalar_i32(&self, v: i32) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch cached) an artifact by key.
+    fn compiled(&self, key: &str) -> Result<std::sync::Arc<Compiled>> {
+        if let Some(c) = self.cache.lock().unwrap().get(key) {
+            return Ok(c.clone());
+        }
+        let info = self.manifest.artifact(key)?.clone();
+        crate::log_debug!("runtime", "compiling artifact {key}");
+        let proto = xla::HloModuleProto::from_text_file(
+            info.file.to_str().ok_or_else(|| Error::msg("bad path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let arc = std::sync::Arc::new(Compiled { exe, info });
+        self.cache.lock().unwrap().insert(key.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Pre-compile a set of artifacts (leader does this before serving
+    /// so compilation never lands on the request path).
+    pub fn warm(&self, keys: &[String]) -> Result<()> {
+        for k in keys {
+            self.compiled(k)?;
+        }
+        Ok(())
+    }
+
+    /// Number of artifacts currently compiled.
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Execute a denoiser artifact for patch height `h`.
+    pub fn denoise(&self, h: usize, inp: &DenoiserInputs<'_>) -> Result<DenoiserOutputs> {
+        let key = format!("denoiser_h{h}");
+        let c = self.compiled(&key)?;
+        let m = &self.manifest.model;
+        // Shape checks against the manifest ABI.
+        if inp.x_patch.shape != vec![h, m.latent_w, m.latent_c] {
+            return Err(Error::Artifact(format!(
+                "x_patch shape {:?} != [{h}, {}, {}]",
+                inp.x_patch.shape, m.latent_w, m.latent_c
+            )));
+        }
+        if inp.kv_stale.shape != m.kv_shape() {
+            return Err(Error::Artifact(format!(
+                "kv_stale shape {:?} != {:?}",
+                inp.kv_stale.shape,
+                m.kv_shape()
+            )));
+        }
+        if inp.params.len() != m.param_count || inp.cond.len() != m.dim {
+            return Err(Error::Artifact("params/cond length mismatch".into()));
+        }
+        if inp.row_off % m.patch != 0 || inp.row_off + h > m.latent_h {
+            return Err(Error::Artifact(format!(
+                "bad row_off {} for h {h}",
+                inp.row_off
+            )));
+        }
+
+        // Weights upload amortized across calls (same host slice).
+        let key = (inp.params.as_ptr() as usize, inp.params.len());
+        {
+            let mut pb = self.params_buffer.lock().unwrap();
+            let stale = match &*pb {
+                Some((p, l, _)) => (*p, *l) != key,
+                None => true,
+            };
+            if stale {
+                *pb = Some((
+                    key.0,
+                    key.1,
+                    self.upload(inp.params, &[inp.params.len()])?,
+                ));
+            }
+        }
+        let x_buf = self.upload(&inp.x_patch.data, &inp.x_patch.shape)?;
+        let kv_buf = self.upload(&inp.kv_stale.data, &inp.kv_stale.shape)?;
+        let ro_buf = self.upload_scalar_i32(inp.row_off as i32)?;
+        let t_buf = self.upload_scalar_f32(inp.t as f32)?;
+        let cond_buf = self.upload(inp.cond, &[inp.cond.len()])?;
+
+        let pb = self.params_buffer.lock().unwrap();
+        let params_buf = &pb.as_ref().unwrap().2;
+        let result = c
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&[
+                params_buf, &x_buf, &kv_buf, &ro_buf, &t_buf, &cond_buf,
+            ])?[0][0]
+            .to_literal_sync()?;
+        drop(pb);
+        let (eps_lit, kv_lit) = result.to_tuple2()?;
+
+        let t_own = m.tokens_for_rows(h);
+        Ok(DenoiserOutputs {
+            eps_patch: Tensor::from_literal(
+                &eps_lit,
+                vec![h, m.latent_w, m.latent_c],
+            )?,
+            kv_fresh: Tensor::from_literal(
+                &kv_lit,
+                vec![m.layers, t_own, 2 * m.dim],
+            )?,
+        })
+    }
+
+    /// Execute the AOT'd DDIM update artifact (full latent).
+    /// The hot path uses the rust-native `model::sampler` instead; this
+    /// exists to cross-validate the two (see tests/integration).
+    pub fn ddim_update(
+        &self,
+        x: &Tensor,
+        eps: &Tensor,
+        coef_x: f64,
+        coef_eps: f64,
+    ) -> Result<Tensor> {
+        let c = self.compiled("ddim_update")?;
+        let bufs = [
+            self.upload(&x.data, &x.shape)?,
+            self.upload(&eps.data, &eps.shape)?,
+            self.upload_scalar_f32(coef_x as f32)?,
+            self.upload_scalar_f32(coef_eps as f32)?,
+        ];
+        let result = c
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&[
+                &bufs[0], &bufs[1], &bufs[2], &bufs[3],
+            ])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Tensor::from_literal(&out, x.shape.clone())
+    }
+
+    /// Run the feature extractor (LPIPS/FID proxy).
+    /// Returns the per-stage pooled features (f1, f2, f3).
+    pub fn features(&self, x: &Tensor) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let c = self.compiled("features")?;
+        let x_buf = self.upload(&x.data, &x.shape)?;
+        let result = c
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&[&x_buf])?[0][0]
+            .to_literal_sync()?;
+        let (f1, f2, f3) = result.to_tuple3()?;
+        Ok((f1.to_vec::<f32>()?, f2.to_vec::<f32>()?, f3.to_vec::<f32>()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::NormalGen;
+    use std::path::PathBuf;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(dir).unwrap())
+        } else {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
+    }
+
+    #[test]
+    fn denoiser_matches_golden() {
+        let Some(m) = manifest() else { return };
+        // Inputs regenerated through the cross-language PCG stream
+        // (compile/pcg.py == util::rng), draw order: x, kv, cond —
+        // exactly how aot.py::golden_denoiser produced them.
+        let golden = m.golden("denoiser.json").unwrap();
+        let rt = Runtime::new(m).unwrap();
+        let model = rt.manifest().model.clone();
+        let params = rt.manifest().load_params().unwrap();
+
+        let h = golden.get("h").unwrap().as_usize().unwrap();
+        let seed = golden.get("seed").unwrap().as_i64().unwrap() as u64;
+        let mut gen = NormalGen::new(seed);
+        let x = Tensor::new(
+            vec![h, model.latent_w, model.latent_c],
+            gen.vec_f32(h * model.latent_w * model.latent_c),
+        )
+        .unwrap();
+        let kv = Tensor::new(
+            model.kv_shape(),
+            gen.vec_f32(model.kv_shape().iter().product()),
+        )
+        .unwrap();
+        let cond = gen.vec_f32(model.dim);
+        let inp = DenoiserInputs {
+            params: &params,
+            x_patch: &x,
+            kv_stale: &kv,
+            row_off: golden.get("row_off").unwrap().as_usize().unwrap(),
+            t: golden.get("t").unwrap().as_f64().unwrap(),
+            cond: &cond,
+        };
+        let out1 = rt.denoise(h, &inp).unwrap();
+        let out2 = rt.denoise(h, &inp).unwrap();
+        assert_eq!(out1.eps_patch, out2.eps_patch, "non-deterministic");
+        assert_eq!(out1.kv_fresh.shape, vec![3, 64, 192]);
+        assert_eq!(rt.cache_len(), 1);
+
+        // Python-vs-rust equality on the recorded values.
+        let want_first16 = golden.get("eps_first16").unwrap().f32s().unwrap();
+        for (i, w) in want_first16.iter().enumerate() {
+            assert!(
+                (out1.eps_patch.data[i] - w).abs() < 1e-4,
+                "eps[{i}]: {} vs {w}",
+                out1.eps_patch.data[i]
+            );
+        }
+        let want_sum = golden.get("eps_sum").unwrap().as_f64().unwrap();
+        assert!(
+            (out1.eps_patch.sum() - want_sum).abs()
+                < 1e-3 * want_sum.abs().max(1.0),
+            "eps sum {} vs {want_sum}",
+            out1.eps_patch.sum()
+        );
+        let want_kv16 = golden.get("kv_first16").unwrap().f32s().unwrap();
+        for (i, w) in want_kv16.iter().enumerate() {
+            assert!((out1.kv_fresh.data[i] - w).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn ddim_artifact_is_fma() {
+        let Some(m) = manifest() else { return };
+        let rt = Runtime::new(m).unwrap();
+        let shape = rt.manifest().model.latent_shape();
+        let mut gen = NormalGen::new(2);
+        let n: usize = shape.iter().product();
+        let x = Tensor::new(shape.clone(), gen.vec_f32(n)).unwrap();
+        let eps = Tensor::new(shape.clone(), gen.vec_f32(n)).unwrap();
+        let out = rt.ddim_update(&x, &eps, 0.5, -0.25).unwrap();
+        for i in 0..n {
+            let want = 0.5 * x.data[i] - 0.25 * eps.data[i];
+            assert!((out.data[i] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn features_shapes() {
+        let Some(m) = manifest() else { return };
+        let rt = Runtime::new(m).unwrap();
+        let shape = rt.manifest().model.latent_shape();
+        let n: usize = shape.iter().product();
+        let x = Tensor::new(shape, NormalGen::new(3).vec_f32(n)).unwrap();
+        let (f1, f2, f3) = rt.features(&x).unwrap();
+        assert_eq!((f1.len(), f2.len(), f3.len()), (16, 32, 64));
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let Some(m) = manifest() else { return };
+        let rt = Runtime::new(m).unwrap();
+        let params = rt.manifest().load_params().unwrap();
+        let model = rt.manifest().model.clone();
+        let x = Tensor::zeros(&[8, 32, 4]);
+        let kv = Tensor::zeros(&[3, 256, 192]);
+        let cond = vec![0.0f32; model.dim];
+        // row_off not a multiple of patch
+        let inp = DenoiserInputs {
+            params: &params, x_patch: &x, kv_stale: &kv,
+            row_off: 3, t: 0.0, cond: &cond,
+        };
+        assert!(rt.denoise(8, &inp).is_err());
+        // patch overruns the latent
+        let inp = DenoiserInputs {
+            params: &params, x_patch: &x, kv_stale: &kv,
+            row_off: 28, t: 0.0, cond: &cond,
+        };
+        assert!(rt.denoise(8, &inp).is_err());
+    }
+}

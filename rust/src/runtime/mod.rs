@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from the
+//! rust request path (python is build-time only).
+
+pub mod artifacts;
+pub mod client;
+pub mod service;
+pub mod tensor;
+
+pub use artifacts::Manifest;
+pub use client::{DenoiserInputs, DenoiserOutputs, Runtime};
+pub use service::{ExecHandle, ExecService};
+pub use tensor::Tensor;

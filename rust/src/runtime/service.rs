@@ -1,0 +1,264 @@
+//! Execution service: a dedicated thread owning the (non-Send) PJRT
+//! client, fronted by a cloneable, thread-safe `ExecHandle`.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based, so it cannot cross
+//! threads. All execution therefore funnels through one service thread
+//! — which is also faithful to the substrate: a single physical CPU
+//! "hosts" every simulated GPU, and the coordinator's heterogeneity
+//! model (stretching / virtual clocks) lives *outside* the compute
+//! call. Workers hold clones of the handle; each request carries its
+//! own reply channel.
+//!
+//! Weights are loaded once inside the service, so per-step messages
+//! carry only the step inputs (x patch, stale KV, scalars).
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use crate::device::CostModel;
+use crate::error::{Error, Result};
+use crate::runtime::artifacts::Manifest;
+use crate::runtime::client::{DenoiserInputs, DenoiserOutputs, Runtime};
+use crate::runtime::tensor::Tensor;
+
+enum Msg {
+    Denoise {
+        h: usize,
+        x_patch: Tensor,
+        kv_stale: Tensor,
+        row_off: usize,
+        t: f64,
+        cond: Vec<f32>,
+        reply: mpsc::Sender<Result<DenoiserOutputs>>,
+    },
+    DdimArtifact {
+        x: Tensor,
+        eps: Tensor,
+        coef_x: f64,
+        coef_eps: f64,
+        reply: mpsc::Sender<Result<Tensor>>,
+    },
+    Features {
+        x: Tensor,
+        reply: mpsc::Sender<Result<(Vec<f32>, Vec<f32>, Vec<f32>)>>,
+    },
+    Calibrate {
+        reps: usize,
+        reply: mpsc::Sender<Result<CostModel>>,
+    },
+    Warm {
+        keys: Vec<String>,
+        reply: mpsc::Sender<Result<()>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, Send handle to the execution service.
+#[derive(Clone)]
+pub struct ExecHandle {
+    tx: mpsc::Sender<Msg>,
+    manifest: Manifest,
+}
+
+/// Owns the service thread; dropping shuts it down.
+pub struct ExecService {
+    handle: ExecHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ExecService {
+    /// Spawn the service: loads the manifest eagerly (errors early),
+    /// builds the PJRT client + params inside the thread.
+    pub fn spawn(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let m2 = manifest.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-exec".into())
+            .spawn(move || {
+                let rt = match Runtime::new(m2) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let params = match rt.manifest().load_params() {
+                    Ok(p) => p,
+                    Err(e) => {
+                        crate::log_error!("exec", "params load failed: {e}");
+                        return;
+                    }
+                };
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Denoise {
+                            h, x_patch, kv_stale, row_off, t, cond, reply,
+                        } => {
+                            let out = rt.denoise(
+                                h,
+                                &DenoiserInputs {
+                                    params: &params,
+                                    x_patch: &x_patch,
+                                    kv_stale: &kv_stale,
+                                    row_off,
+                                    t,
+                                    cond: &cond,
+                                },
+                            );
+                            let _ = reply.send(out);
+                        }
+                        Msg::DdimArtifact { x, eps, coef_x, coef_eps, reply } => {
+                            let _ = reply
+                                .send(rt.ddim_update(&x, &eps, coef_x, coef_eps));
+                        }
+                        Msg::Features { x, reply } => {
+                            let _ = reply.send(rt.features(&x));
+                        }
+                        Msg::Calibrate { reps, reply } => {
+                            let _ = reply.send(CostModel::calibrate(&rt, reps));
+                        }
+                        Msg::Warm { keys, reply } => {
+                            let _ = reply.send(rt.warm(&keys));
+                        }
+                        Msg::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::msg("exec service died during startup"))??;
+        Ok(ExecService { handle: ExecHandle { tx, manifest }, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> ExecHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for ExecService {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl ExecHandle {
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn rpc<T>(
+        &self,
+        build: impl FnOnce(mpsc::Sender<Result<T>>) -> Msg,
+    ) -> Result<T> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(build(reply))
+            .map_err(|_| Error::msg("exec service gone"))?;
+        rx.recv().map_err(|_| Error::msg("exec service dropped reply"))?
+    }
+
+    /// Execute one denoiser step (inputs are copied into the message).
+    pub fn denoise(
+        &self,
+        h: usize,
+        x_patch: &Tensor,
+        kv_stale: &Tensor,
+        row_off: usize,
+        t: f64,
+        cond: &[f32],
+    ) -> Result<DenoiserOutputs> {
+        self.rpc(|reply| Msg::Denoise {
+            h,
+            x_patch: x_patch.clone(),
+            kv_stale: kv_stale.clone(),
+            row_off,
+            t,
+            cond: cond.to_vec(),
+            reply,
+        })
+    }
+
+    /// AOT'd DDIM-update artifact (cross-validation path).
+    pub fn ddim_artifact(
+        &self,
+        x: &Tensor,
+        eps: &Tensor,
+        coef_x: f64,
+        coef_eps: f64,
+    ) -> Result<Tensor> {
+        self.rpc(|reply| Msg::DdimArtifact {
+            x: x.clone(),
+            eps: eps.clone(),
+            coef_x,
+            coef_eps,
+            reply,
+        })
+    }
+
+    /// Feature extractor (LPIPS/FID proxies).
+    pub fn features(&self, x: &Tensor) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        self.rpc(|reply| Msg::Features { x: x.clone(), reply })
+    }
+
+    /// Calibrate the per-step cost model on the real substrate.
+    pub fn calibrate(&self, reps: usize) -> Result<CostModel> {
+        self.rpc(|reply| Msg::Calibrate { reps, reply })
+    }
+
+    /// Pre-compile artifacts off the request path.
+    pub fn warm(&self, keys: &[String]) -> Result<()> {
+        self.rpc(|reply| Msg::Warm { keys: keys.to_vec(), reply })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(dir)
+        } else {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
+    }
+
+    #[test]
+    fn handle_works_across_threads() {
+        let Some(dir) = artifacts() else { return };
+        let svc = ExecService::spawn(dir).unwrap();
+        let h = svc.handle();
+        let model = h.manifest().model.clone();
+        let mut handles = Vec::new();
+        for i in 0..3 {
+            let h = h.clone();
+            let model = model.clone();
+            handles.push(std::thread::spawn(move || {
+                let x = Tensor::zeros(&[8, model.latent_w, model.latent_c]);
+                let kv = Tensor::zeros(&model.kv_shape());
+                let cond = vec![0.1f32 * i as f32; model.dim];
+                h.denoise(8, &x, &kv, 0, 100.0, &cond).unwrap()
+            }));
+        }
+        for th in handles {
+            let out = th.join().unwrap();
+            assert_eq!(out.eps_patch.shape, vec![8, 32, 4]);
+        }
+    }
+
+    #[test]
+    fn spawn_fails_cleanly_on_missing_artifacts() {
+        assert!(ExecService::spawn("/nonexistent").is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! Host tensor type crossing the rust <-> PJRT boundary.
+
+use crate::error::{Error, Result};
+
+/// A dense f32 host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::msg(format!(
+                "shape {shape:?} wants {n} elems, got {}",
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Bytes on the wire (for comm accounting).
+    pub fn byte_len(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Convert to an xla literal with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    /// Build from an xla literal (f32 only).
+    pub fn from_literal(lit: &xla::Literal, shape: Vec<usize>) -> Result<Self> {
+        let data = lit.to_vec::<f32>()?;
+        Tensor::new(shape, data)
+    }
+
+    /// Slice rows [r0, r0+h) of a [H, W, C] tensor.
+    pub fn slice_rows(&self, r0: usize, h: usize) -> Tensor {
+        assert_eq!(self.shape.len(), 3, "slice_rows wants [H,W,C]");
+        let (hh, w, c) = (self.shape[0], self.shape[1], self.shape[2]);
+        assert!(r0 + h <= hh, "rows {r0}+{h} > {hh}");
+        let stride = w * c;
+        let data = self.data[r0 * stride..(r0 + h) * stride].to_vec();
+        Tensor { shape: vec![h, w, c], data }
+    }
+
+    /// Scatter `patch` rows into self at row offset `r0` ([H,W,C]).
+    pub fn scatter_rows(&mut self, r0: usize, patch: &Tensor) {
+        assert_eq!(self.shape.len(), 3);
+        assert_eq!(patch.shape.len(), 3);
+        assert_eq!(self.shape[1..], patch.shape[1..]);
+        let stride = self.shape[1] * self.shape[2];
+        let h = patch.shape[0];
+        assert!(r0 + h <= self.shape[0]);
+        self.data[r0 * stride..(r0 + h) * stride]
+            .copy_from_slice(&patch.data);
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn abs_sum(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64).abs()).sum()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Mean squared error vs another tensor.
+    pub fn mse(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / self.data.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape.to_vec(), (0..n).map(|i| i as f32).collect()).unwrap()
+    }
+
+    #[test]
+    fn new_validates_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn slice_scatter_roundtrip() {
+        let full = seq(&[8, 4, 2]);
+        let patch = full.slice_rows(2, 3);
+        assert_eq!(patch.shape, vec![3, 4, 2]);
+        assert_eq!(patch.data[0], (2 * 8) as f32);
+        let mut out = Tensor::zeros(&[8, 4, 2]);
+        out.scatter_rows(2, &patch);
+        assert_eq!(out.slice_rows(2, 3), patch);
+        assert_eq!(out.data[0], 0.0);
+    }
+
+    #[test]
+    fn mse_and_diff() {
+        let a = seq(&[2, 2, 1]);
+        let mut b = a.clone();
+        b.data[3] += 2.0;
+        assert_eq!(a.max_abs_diff(&b), 2.0);
+        assert!((a.mse(&b) - 1.0).abs() < 1e-12);
+    }
+}

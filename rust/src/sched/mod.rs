@@ -1,0 +1,12 @@
+//! The paper's scheduling contribution: computation-aware step
+//! allocation (temporal, Eq. 4), elastic patch-size mending (spatial,
+//! Eq. 5), effective-speed profiling, and the joint Algorithm-1 plan.
+
+pub mod plan;
+pub mod profiler;
+pub mod spatial;
+pub mod temporal;
+
+pub use plan::{DevicePlan, Plan, StepSpec};
+pub use profiler::Profiler;
+pub use temporal::{StepClass, StepAssignment};

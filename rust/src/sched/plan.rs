@@ -1,0 +1,434 @@
+//! Joint spatio-temporal plan: what Algorithm 1 executes.
+//!
+//! `Plan::build` composes the profiler's effective speeds, Eq. 4
+//! temporal assignment, and Eq. 5 patch mending into per-device step
+//! programs with an aligned synchronization schedule:
+//!
+//! * every device's step list carries (t_from -> t_to) and precomputed
+//!   DDIM coefficients from its own grid;
+//! * a step is a **sync step** when its post-state timestep is shared
+//!   by *all* included devices (the intersection of grids). The shared
+//!   warmup prefix syncs every step (Alg. 1 lines 9-12); afterwards
+//!   slow devices sync every step and fast devices every other step
+//!   (lines 13-24) — exactly what the intersection rule yields for the
+//!   2:1 LCM-minimizing quantization. (Grid convention: the warmup
+//!   phase is the first M_warmup grid points; the M_warmup-th
+//!   *transition* is the slow device's first doubled step, which keeps
+//!   M_half = ½M_base + ½M_warmup exact and the final timesteps
+//!   aligned.)
+//! * the final step (to the clean sample) always syncs, producing the
+//!   gathered output image.
+
+use std::collections::BTreeSet;
+
+use crate::config::StadiParams;
+use crate::error::{Error, Result};
+use crate::model::latents::{partition_rows, RowRange};
+use crate::model::schedule::{DdimCoef, Schedule};
+use crate::sched::spatial::{mend_patch_sizes, uniform_patch_sizes};
+use crate::sched::temporal::{assign_steps, StepClass};
+
+/// One local denoising step of a device's program.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepSpec {
+    /// Local step index (0-based).
+    pub index: usize,
+    /// Timestep consumed by the model (eps_theta(x, t_from)).
+    pub t_from: usize,
+    /// Post-state timestep; None = clean sample (final step).
+    pub t_to: Option<usize>,
+    /// DDIM coefficients for this transition.
+    pub coef: DdimCoef,
+    /// Inside the shared warmup phase?
+    pub is_warmup: bool,
+    /// Publish fresh buffers + participate in the x all-gather after
+    /// this step.
+    pub sync: bool,
+}
+
+/// Per-device program.
+#[derive(Debug, Clone)]
+pub struct DevicePlan {
+    pub device: usize,
+    pub name: String,
+    pub speed: f64,
+    pub class: StepClass,
+    pub rows: RowRange,
+    pub steps: Vec<StepSpec>,
+}
+
+impl DevicePlan {
+    pub fn included(&self) -> bool {
+        self.class != StepClass::Excluded
+    }
+
+    /// Post-state timesteps of this device's sync steps, in order.
+    pub fn sync_states(&self) -> Vec<Option<usize>> {
+        self.steps.iter().filter(|s| s.sync).map(|s| s.t_to).collect()
+    }
+}
+
+/// The joint plan for one request.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub devices: Vec<DevicePlan>,
+    /// Shared ordered sync schedule (post-state timesteps; final None).
+    pub sync_points: Vec<Option<usize>>,
+    pub params: StadiParams,
+}
+
+impl Plan {
+    /// Build the plan from normalized effective speeds.
+    pub fn build(
+        schedule: &Schedule,
+        speeds: &[f64],
+        names: &[String],
+        params: &StadiParams,
+        total_rows: usize,
+        granularity: usize,
+    ) -> Result<Plan> {
+        if speeds.len() != names.len() {
+            return Err(Error::Sched("speeds/names length mismatch".into()));
+        }
+        let assign = assign_steps(speeds, params)?;
+        let sizes = if params.spatial {
+            mend_patch_sizes(speeds, &assign, total_rows, granularity)?
+        } else {
+            uniform_patch_sizes(&assign, total_rows, granularity)?
+        };
+        Self::assemble(schedule, speeds, names, params, &assign, &sizes)
+    }
+
+    /// Build with the EXTENSION cost-aware allocator (affine step-cost
+    /// model) in place of Eq. 5. See `spatial::cost_aware_sizes`.
+    pub fn build_cost_aware(
+        schedule: &Schedule,
+        speeds: &[f64],
+        names: &[String],
+        params: &StadiParams,
+        cost: &crate::device::CostModel,
+        total_rows: usize,
+        granularity: usize,
+    ) -> Result<Plan> {
+        let assign = assign_steps(speeds, params)?;
+        let sizes = crate::sched::spatial::cost_aware_sizes(
+            speeds, &assign, cost, total_rows, granularity,
+        )?;
+        Self::assemble(schedule, speeds, names, params, &assign, &sizes)
+    }
+
+    /// Build with explicit patch sizes (Fig. 9's patch-ratio sweep and
+    /// custom baselines). Temporal assignment still follows Eq. 4 /
+    /// the `params.temporal` toggle; excluded devices must have size 0.
+    pub fn build_with_sizes(
+        schedule: &Schedule,
+        speeds: &[f64],
+        names: &[String],
+        params: &StadiParams,
+        sizes: &[usize],
+    ) -> Result<Plan> {
+        let assign = assign_steps(speeds, params)?;
+        for (a, &s) in assign.iter().zip(sizes) {
+            if (a.class == StepClass::Excluded) != (s == 0) {
+                return Err(Error::Sched(
+                    "size must be 0 exactly for excluded devices".into(),
+                ));
+            }
+        }
+        Self::assemble(schedule, speeds, names, params, &assign, sizes)
+    }
+
+    fn assemble(
+        schedule: &Schedule,
+        speeds: &[f64],
+        names: &[String],
+        params: &StadiParams,
+        assign: &[crate::sched::temporal::StepAssignment],
+        sizes: &[usize],
+    ) -> Result<Plan> {
+        let ranges = partition_rows(sizes);
+
+        let fast_grid = schedule.ddim_grid(params.m_base);
+        let slow_grid = Schedule::stadi_slow_grid(&fast_grid, params.m_warmup);
+
+        // Post-state sets per included device, for the sync intersection.
+        let grids: Vec<Option<&[usize]>> = assign
+            .iter()
+            .map(|a| match a.class {
+                StepClass::Full => Some(fast_grid.as_slice()),
+                StepClass::Half => Some(slow_grid.as_slice()),
+                StepClass::Excluded => None,
+            })
+            .collect();
+        let mut common: Option<BTreeSet<usize>> = None;
+        for g in grids.iter().flatten() {
+            // Post-states of a grid are all points except the first.
+            let states: BTreeSet<usize> = g[1..].iter().cloned().collect();
+            common = Some(match common {
+                None => states,
+                Some(c) => c.intersection(&states).cloned().collect(),
+            });
+        }
+        let common = common
+            .ok_or_else(|| Error::Sched("no included devices".into()))?;
+
+        let mut devices = Vec::with_capacity(speeds.len());
+        for (i, a) in assign.iter().enumerate() {
+            let grid: &[usize] = match a.class {
+                StepClass::Full => &fast_grid,
+                StepClass::Half => &slow_grid,
+                StepClass::Excluded => &[],
+            };
+            let coefs = schedule.grid_coefficients(grid);
+            let steps: Vec<StepSpec> = grid
+                .iter()
+                .enumerate()
+                .map(|(k, &t_from)| {
+                    let t_to = grid.get(k + 1).copied();
+                    StepSpec {
+                        index: k,
+                        t_from,
+                        t_to,
+                        coef: coefs[k],
+                        is_warmup: k < params.m_warmup,
+                        // Final step (None) always syncs; otherwise the
+                        // post-state must be common to all devices.
+                        sync: match t_to {
+                            None => true,
+                            Some(t) => common.contains(&t),
+                        },
+                    }
+                })
+                .collect();
+            devices.push(DevicePlan {
+                device: i,
+                name: names[i].clone(),
+                speed: speeds[i],
+                class: a.class,
+                rows: ranges[i],
+                steps,
+            });
+        }
+
+        // The shared sync schedule, from any included device.
+        let sync_points = devices
+            .iter()
+            .find(|d| d.included())
+            .unwrap()
+            .sync_states();
+
+        let plan = Plan { devices, sync_points, params: params.clone() };
+        plan.check_alignment()?;
+        Ok(plan)
+    }
+
+    /// Invariant: every included device sees the identical ordered
+    /// sequence of sync post-states.
+    fn check_alignment(&self) -> Result<()> {
+        for d in self.devices.iter().filter(|d| d.included()) {
+            let s = d.sync_states();
+            if s != self.sync_points {
+                return Err(Error::Sched(format!(
+                    "device {} sync schedule diverges: {:?} vs {:?}",
+                    d.name,
+                    &s[..s.len().min(5)],
+                    &self.sync_points[..self.sync_points.len().min(5)]
+                )));
+            }
+        }
+        if self.sync_points.last() != Some(&None) {
+            return Err(Error::Sched("final sync must be the clean state".into()));
+        }
+        Ok(())
+    }
+
+    pub fn included_devices(&self) -> impl Iterator<Item = &DevicePlan> {
+        self.devices.iter().filter(|d| d.included())
+    }
+
+    /// Total latent rows (for sanity checks).
+    pub fn total_rows(&self) -> usize {
+        self.devices.iter().map(|d| d.rows.rows).sum()
+    }
+
+    /// Human-readable summary (used by `stadi plan`).
+    pub fn describe(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "plan: M_base={} M_warmup={} a={} b={} TA={} SA={} syncs={}\n",
+            self.params.m_base,
+            self.params.m_warmup,
+            self.params.a,
+            self.params.b,
+            self.params.temporal,
+            self.params.spatial,
+            self.sync_points.len()
+        ));
+        for d in &self.devices {
+            s.push_str(&format!(
+                "  {}: v={:.3} class={:?} steps={} rows=[{}..{})\n",
+                d.name,
+                d.speed,
+                d.class,
+                d.steps.len(),
+                d.rows.row0,
+                d.rows.end()
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{ensure, forall};
+
+    fn sched() -> Schedule {
+        Schedule::scaled_linear(1000, 0.00085, 0.012)
+    }
+
+    fn build(speeds: &[f64], params: &StadiParams) -> Result<Plan> {
+        let names: Vec<String> =
+            (0..speeds.len()).map(|i| format!("g{i}")).collect();
+        Plan::build(&sched(), speeds, &names, params, 32, 4)
+    }
+
+    #[test]
+    fn homogeneous_two_gpu_plan() {
+        let p = StadiParams::default();
+        let plan = build(&[1.0, 1.0], &p).unwrap();
+        assert_eq!(plan.total_rows(), 32);
+        assert_eq!(plan.devices[0].rows.rows, 16);
+        // Same grid => every step syncs.
+        assert_eq!(plan.sync_points.len(), 100);
+        for d in &plan.devices {
+            assert!(d.steps.iter().all(|s| s.sync));
+        }
+    }
+
+    #[test]
+    fn heterogeneous_plan_alternates_fast_syncs() {
+        let p = StadiParams::default();
+        let plan = build(&[1.0, 0.5], &p).unwrap();
+        let fast = &plan.devices[0];
+        let slow = &plan.devices[1];
+        assert_eq!(fast.steps.len(), 100);
+        assert_eq!(slow.steps.len(), 52);
+        // Slow device syncs every step (its states are the common set).
+        assert!(slow.steps.iter().all(|s| s.sync));
+        // Fast device: the shared warmup prefix syncs (the M_warmup-th
+        // transition is the slow device's first doubled step, so the
+        // fast device's step 3 post-state fast[4] is NOT common); then
+        // every other step starting at step 4; the final step (clean)
+        // always syncs.
+        for s in &fast.steps[..3] {
+            assert!(s.sync && s.is_warmup);
+        }
+        assert!(!fast.steps[3].sync);
+        for (k, s) in fast.steps[4..99].iter().enumerate() {
+            assert_eq!(s.sync, k % 2 == 0, "step {}", k + 4);
+        }
+        assert!(fast.steps[99].sync && fast.steps[99].t_to.is_none());
+        // Shared schedule length equals the slow device's step count.
+        assert_eq!(plan.sync_points.len(), 52);
+        assert_eq!(*plan.sync_points.last().unwrap(), None);
+    }
+
+    #[test]
+    fn excluded_device_has_no_steps_or_rows() {
+        let p = StadiParams::default();
+        let plan = build(&[1.0, 0.2], &p).unwrap();
+        assert_eq!(plan.devices[1].steps.len(), 0);
+        assert_eq!(plan.devices[1].rows.rows, 0);
+        assert_eq!(plan.devices[0].rows.rows, 32);
+    }
+
+    #[test]
+    fn ta_disabled_gives_uniform_grids() {
+        let mut p = StadiParams::default();
+        p.temporal = false;
+        let plan = build(&[1.0, 0.5], &p).unwrap();
+        assert_eq!(plan.devices[0].steps.len(), 100);
+        assert_eq!(plan.devices[1].steps.len(), 100);
+        assert_eq!(plan.sync_points.len(), 100);
+        // SA still balances rows.
+        assert!(plan.devices[0].rows.rows > plan.devices[1].rows.rows);
+    }
+
+    #[test]
+    fn sa_disabled_gives_uniform_rows() {
+        let mut p = StadiParams::default();
+        p.spatial = false;
+        let plan = build(&[1.0, 0.5], &p).unwrap();
+        assert_eq!(plan.devices[0].rows.rows, 16);
+        assert_eq!(plan.devices[1].rows.rows, 16);
+        // TA still halves steps.
+        assert_eq!(plan.devices[1].steps.len(), 52);
+    }
+
+    #[test]
+    fn coefficients_match_grid_transitions() {
+        let p = StadiParams::default();
+        let plan = build(&[1.0, 0.5], &p).unwrap();
+        let s = sched();
+        for d in plan.included_devices() {
+            for st in &d.steps {
+                let want = s.ddim_coefficients(st.t_from, st.t_to);
+                assert_eq!(st.coef, want);
+            }
+        }
+    }
+
+    #[test]
+    fn property_plan_invariants() {
+        let p = StadiParams::default();
+        forall(
+            31,
+            200,
+            |rng| {
+                let n = 1 + rng.below(6) as usize;
+                (0..n)
+                    .map(|_| 0.05 + 0.95 * rng.next_f64())
+                    .collect::<Vec<f64>>()
+            },
+            |speeds| {
+                let plan = match build(speeds, &p) {
+                    Ok(pl) => pl,
+                    Err(_) => return Ok(()), // infeasible configs skip
+                };
+                ensure(plan.total_rows() == 32, "rows != 32")?;
+                // Aligned sync schedules (check_alignment ran, but
+                // re-verify the public invariant).
+                for d in plan.included_devices() {
+                    ensure(
+                        d.sync_states() == plan.sync_points,
+                        "sync misalignment",
+                    )?;
+                    // Between consecutive syncs a device runs at most 2
+                    // steps (Alg. 1's fast-device alternation bound).
+                    let mut run = 0;
+                    for s in &d.steps {
+                        run += 1;
+                        if s.sync {
+                            ensure(
+                                run <= 2,
+                                format!("{run} steps without sync"),
+                            )?;
+                            run = 0;
+                        }
+                    }
+                    ensure(run == 0, "program must end on a sync")?;
+                    // Grid timesteps strictly decrease.
+                    for w in d.steps.windows(2) {
+                        ensure(
+                            w[1].t_from < w[0].t_from,
+                            "non-decreasing grid",
+                        )?;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,130 @@
+//! Effective-speed estimation (paper §III-B, §V).
+//!
+//! `v_i = c_i * (1 - rho_i)` from static config, refined online from
+//! "historical inference time profiles" (paper §V): per-device EWMAs of
+//! measured seconds-per-row, normalized so the fastest device is 1.0.
+
+use crate::config::DeviceConfig;
+use crate::util::stats::Ewma;
+
+/// Online estimator of per-device effective speeds.
+#[derive(Debug)]
+pub struct Profiler {
+    /// Static priors from config.
+    priors: Vec<f64>,
+    /// Measured seconds-per-row EWMAs (None until first sample).
+    measured: Vec<Ewma>,
+    names: Vec<String>,
+}
+
+impl Profiler {
+    pub fn new(devices: &[DeviceConfig]) -> Self {
+        Profiler {
+            priors: devices.iter().map(|d| d.effective_speed()).collect(),
+            measured: devices.iter().map(|_| Ewma::new(0.3)).collect(),
+            names: devices.iter().map(|d| d.name.clone()).collect(),
+        }
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.priors.len()
+    }
+
+    pub fn name(&self, i: usize) -> &str {
+        &self.names[i]
+    }
+
+    /// Record a measured step: `rows` processed in `seconds`.
+    pub fn record_step(&mut self, device: usize, rows: usize, seconds: f64) {
+        if rows == 0 || seconds <= 0.0 {
+            return;
+        }
+        self.measured[device].update(seconds / rows as f64);
+    }
+
+    /// Current effective speeds, normalized to max = 1.0.
+    ///
+    /// Devices with measured history use 1/(s-per-row) relative to the
+    /// fastest measured device; unmeasured devices fall back to their
+    /// static prior. (Before any measurement this returns exactly the
+    /// priors — the paper's offline-benchmark + occupancy-API path.)
+    pub fn effective_speeds(&self) -> Vec<f64> {
+        let spr: Vec<Option<f64>> =
+            self.measured.iter().map(|e| e.get()).collect();
+        let any_measured = spr.iter().any(Option::is_some);
+        let mut v: Vec<f64> = if any_measured {
+            // Fastest measured device anchors the scale.
+            let best = spr
+                .iter()
+                .flatten()
+                .cloned()
+                .fold(f64::INFINITY, f64::min);
+            spr.iter()
+                .enumerate()
+                .map(|(i, s)| match s {
+                    Some(s) => best / s,
+                    None => self.priors[i],
+                })
+                .collect()
+        } else {
+            self.priors.clone()
+        };
+        let max = v.iter().cloned().fold(0.0, f64::max);
+        if max > 0.0 {
+            for x in v.iter_mut() {
+                *x /= max;
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn devs(occ: &[f64]) -> Vec<DeviceConfig> {
+        occ.iter()
+            .enumerate()
+            .map(|(i, &o)| DeviceConfig::new(format!("g{i}"), 1.0, o))
+            .collect()
+    }
+
+    #[test]
+    fn priors_before_measurement() {
+        let p = Profiler::new(&devs(&[0.0, 0.4]));
+        let v = p.effective_speeds();
+        assert!((v[0] - 1.0).abs() < 1e-12);
+        assert!((v[1] - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measurements_override_priors() {
+        let mut p = Profiler::new(&devs(&[0.0, 0.0]));
+        // Device 1 measured 2x slower despite equal priors.
+        for _ in 0..10 {
+            p.record_step(0, 16, 0.10);
+            p.record_step(1, 16, 0.20);
+        }
+        let v = p.effective_speeds();
+        assert!((v[0] - 1.0).abs() < 1e-9);
+        assert!((v[1] - 0.5).abs() < 0.05, "v1 = {}", v[1]);
+    }
+
+    #[test]
+    fn normalization_to_unit_max() {
+        let mut p = Profiler::new(&devs(&[0.2, 0.2]));
+        p.record_step(0, 8, 0.4);
+        p.record_step(1, 8, 0.8);
+        let v = p.effective_speeds();
+        assert!((v.iter().cloned().fold(0.0, f64::max) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ignores_degenerate_samples() {
+        let mut p = Profiler::new(&devs(&[0.0, 0.3]));
+        p.record_step(0, 0, 1.0);
+        p.record_step(1, 8, 0.0);
+        assert_eq!(p.effective_speeds(), vec![1.0, 0.7]);
+    }
+}

@@ -1,0 +1,420 @@
+//! Spatial adaptation: patch size mending, Eq. 5 (paper §III-D).
+//!
+//! Allocates P_i ∝ v_i / M_i (effective processing rate) subject to
+//! Σ P_i = P_total, then rounds to the hardware/operator granularity
+//! (paper §III-D "P_total must also satisfy hardware/operator
+//! constraints"; here: latent rows in multiples of
+//! `row_granularity`, matching the AOT'd patch-height variants) with a
+//! largest-remainder scheme that preserves the total and keeps every
+//! included device at least one granule.
+
+use crate::error::{Error, Result};
+use crate::sched::temporal::{StepAssignment, StepClass};
+
+/// Ideal (unrounded) Eq. 5 shares P_i = (v_i/M_i) / Σ(v_j/M_j) · total.
+pub fn ideal_shares(
+    speeds: &[f64],
+    assign: &[StepAssignment],
+    total: f64,
+) -> Vec<f64> {
+    let rates: Vec<f64> = speeds
+        .iter()
+        .zip(assign)
+        .map(|(&v, a)| match a.class {
+            StepClass::Excluded => 0.0,
+            _ => v / a.steps as f64,
+        })
+        .collect();
+    let sum: f64 = rates.iter().sum();
+    rates
+        .iter()
+        .map(|r| if sum > 0.0 { r / sum * total } else { 0.0 })
+        .collect()
+}
+
+/// Round Eq. 5 shares to row counts: multiples of `granularity`,
+/// summing to `total_rows`, ≥ granularity for every included device.
+/// Uses largest-remainder apportionment on granules.
+pub fn mend_patch_sizes(
+    speeds: &[f64],
+    assign: &[StepAssignment],
+    total_rows: usize,
+    granularity: usize,
+) -> Result<Vec<usize>> {
+    assert_eq!(speeds.len(), assign.len());
+    if total_rows % granularity != 0 {
+        return Err(Error::Sched(format!(
+            "total rows {total_rows} not a multiple of granularity \
+             {granularity}"
+        )));
+    }
+    let granules_total = total_rows / granularity;
+    let included: Vec<usize> = assign
+        .iter()
+        .enumerate()
+        .filter(|(_, a)| a.class != StepClass::Excluded)
+        .map(|(i, _)| i)
+        .collect();
+    if included.is_empty() {
+        return Err(Error::Sched("no included devices".into()));
+    }
+    if included.len() > granules_total {
+        return Err(Error::Sched(format!(
+            "{} devices but only {granules_total} granules",
+            included.len()
+        )));
+    }
+
+    let ideal = ideal_shares(speeds, assign, granules_total as f64);
+
+    // Floor to granules with a 1-granule floor for included devices.
+    let mut granules: Vec<usize> = vec![0; speeds.len()];
+    let mut remainders: Vec<(f64, usize)> = Vec::new();
+    let mut used = 0usize;
+    for &i in &included {
+        let g = (ideal[i].floor() as usize).max(1);
+        granules[i] = g;
+        used += g;
+        remainders.push((ideal[i] - ideal[i].floor(), i));
+    }
+    // Distribute leftovers by largest remainder; take back from the
+    // smallest-remainder donors if the floors overshot (possible when
+    // the 1-granule floor kicked in).
+    if used < granules_total {
+        remainders.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
+        let mut k = 0;
+        while used < granules_total {
+            let (_, i) = remainders[k % remainders.len()];
+            granules[i] += 1;
+            used += 1;
+            k += 1;
+        }
+    } else if used > granules_total {
+        // Donors: largest current allocation first (take from the
+        // biggest to keep everyone ≥ 1 granule).
+        while used > granules_total {
+            let &max_i = included
+                .iter()
+                .max_by_key(|&&i| granules[i])
+                .unwrap();
+            if granules[max_i] <= 1 {
+                return Err(Error::Sched("cannot satisfy granule floors".into()));
+            }
+            granules[max_i] -= 1;
+            used -= 1;
+        }
+    }
+
+    Ok(granules.iter().map(|&g| g * granularity).collect())
+}
+
+/// EXTENSION (beyond the paper): cost-aware patch mending.
+///
+/// Eq. 5 assumes per-step latency is *linear* in patch rows, which the
+/// paper itself notes breaks under large load gaps ("the single-step
+/// delay no longer maintains a linear relationship with the patch
+/// size due to some fixed overhead", Fig. 9 discussion). This
+/// allocator minimizes the actual bottleneck under the calibrated
+/// affine cost model instead:
+///
+///   minimize  max_i  (fixed + per_row · P_i) · (M_i/M_sync) / v_i
+///   s.t.      Σ P_i = total, P_i ≥ g, P_i ≡ 0 (mod g)
+///
+/// where M_i/M_sync is the steps the device runs per sync interval
+/// (2 for Full devices when Half devices exist, else 1). Solved
+/// exactly by greedy granule descent: repeatedly move one granule from
+/// the current bottleneck's complement... equivalently, start from the
+/// floor assignment and hand each remaining granule to the device
+/// whose interval time is currently *smallest* after the hypothetical
+/// add — a classic makespan-balancing argument; with a single shared
+/// affine cost the greedy is optimal on this lattice.
+pub fn cost_aware_sizes(
+    speeds: &[f64],
+    assign: &[StepAssignment],
+    cost: &crate::device::CostModel,
+    total_rows: usize,
+    granularity: usize,
+) -> Result<Vec<usize>> {
+    assert_eq!(speeds.len(), assign.len());
+    if total_rows % granularity != 0 {
+        return Err(Error::Sched(format!(
+            "total rows {total_rows} not a multiple of granularity \
+             {granularity}"
+        )));
+    }
+    let included: Vec<usize> = assign
+        .iter()
+        .enumerate()
+        .filter(|(_, a)| a.class != StepClass::Excluded)
+        .map(|(i, _)| i)
+        .collect();
+    if included.is_empty() {
+        return Err(Error::Sched("no included devices".into()));
+    }
+    let granules_total = total_rows / granularity;
+    if included.len() > granules_total {
+        return Err(Error::Sched(format!(
+            "{} devices but only {granules_total} granules",
+            included.len()
+        )));
+    }
+    // Steps per sync interval: Full devices run 2 steps between syncs
+    // when any Half device exists (Alg. 1's alternation), 1 otherwise.
+    let any_half = assign.iter().any(|a| a.class == StepClass::Half);
+    let steps_per_sync = |i: usize| -> f64 {
+        match assign[i].class {
+            StepClass::Full if any_half => 2.0,
+            _ => 1.0,
+        }
+    };
+    let interval_time = |i: usize, granules: usize| -> f64 {
+        let rows = granules * granularity;
+        cost.step_time(rows, speeds[i]) * steps_per_sync(i)
+    };
+
+    // Floor of one granule each, then greedily place the rest on the
+    // device that stays cheapest after receiving it.
+    let mut granules = vec![0usize; speeds.len()];
+    for &i in &included {
+        granules[i] = 1;
+    }
+    let mut remaining = granules_total - included.len();
+    while remaining > 0 {
+        let &best = included
+            .iter()
+            .min_by(|&&a, &&b| {
+                interval_time(a, granules[a] + 1)
+                    .partial_cmp(&interval_time(b, granules[b] + 1))
+                    .unwrap()
+            })
+            .unwrap();
+        granules[best] += 1;
+        remaining -= 1;
+    }
+    Ok(granules.iter().map(|&g| g * granularity).collect())
+}
+
+/// Uniform split (spatial adaptation disabled — ablation "None"/"+TA",
+/// and the DistriFusion baseline). Remainder granules go to the first
+/// devices, matching DistriFusion's equal-patch assumption as closely
+/// as the granularity allows.
+pub fn uniform_patch_sizes(
+    assign: &[StepAssignment],
+    total_rows: usize,
+    granularity: usize,
+) -> Result<Vec<usize>> {
+    let speeds: Vec<f64> = assign
+        .iter()
+        .map(|a| if a.class == StepClass::Excluded { 0.0 } else { 1.0 })
+        .collect();
+    // Equal speeds + equal steps => equal shares through the same
+    // rounding path.
+    let eq: Vec<StepAssignment> = assign
+        .iter()
+        .map(|a| StepAssignment {
+            class: a.class,
+            steps: if a.class == StepClass::Excluded { 0 } else { 1 },
+        })
+        .collect();
+    mend_patch_sizes(&speeds, &eq, total_rows, granularity)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StadiParams;
+    use crate::sched::temporal::assign_steps;
+    use crate::util::proptest::{ensure, forall};
+
+    fn full(steps: usize) -> StepAssignment {
+        StepAssignment { class: StepClass::Full, steps }
+    }
+
+    #[test]
+    fn equal_speeds_split_evenly() {
+        let sizes =
+            mend_patch_sizes(&[1.0, 1.0], &[full(100), full(100)], 32, 4)
+                .unwrap();
+        assert_eq!(sizes, vec![16, 16]);
+    }
+
+    #[test]
+    fn faster_device_gets_larger_patch() {
+        let sizes =
+            mend_patch_sizes(&[1.0, 0.5], &[full(100), full(100)], 32, 4)
+                .unwrap();
+        assert_eq!(sizes.iter().sum::<usize>(), 32);
+        assert!(sizes[0] > sizes[1]);
+        // Ideal: 21.33 / 10.67 -> 20/12 or 24/8 after rounding.
+        assert_eq!(sizes[0] % 4, 0);
+    }
+
+    #[test]
+    fn step_reduction_shifts_rows_to_slow_device() {
+        // Paper Table II's 24:8 case: slow device at half steps has
+        // rate v/M doubled relative to naive v, earning more rows than
+        // its raw speed alone would.
+        let p = StadiParams::default();
+        let speeds = [1.0, 0.4];
+        let assign = assign_steps(&speeds, &p).unwrap();
+        assert_eq!(assign[1].class, StepClass::Half);
+        let stadi =
+            mend_patch_sizes(&speeds, &assign, 32, 4).unwrap();
+        let no_ta = mend_patch_sizes(
+            &speeds,
+            &[full(100), full(100)],
+            32,
+            4,
+        )
+        .unwrap();
+        assert!(stadi[1] > no_ta[1], "{stadi:?} vs {no_ta:?}");
+    }
+
+    #[test]
+    fn excluded_devices_get_zero_rows() {
+        let assign = [
+            full(100),
+            StepAssignment { class: StepClass::Excluded, steps: 0 },
+        ];
+        let sizes = mend_patch_sizes(&[1.0, 0.1], &assign, 32, 4).unwrap();
+        assert_eq!(sizes, vec![32, 0]);
+    }
+
+    #[test]
+    fn uniform_split_ignores_speeds() {
+        let assign = [full(100), full(100)];
+        assert_eq!(uniform_patch_sizes(&assign, 32, 4).unwrap(), vec![16, 16]);
+        // Non-power-of-two device counts leave a remainder granule.
+        let assign3 = [full(100), full(100), full(100)];
+        let sizes = uniform_patch_sizes(&assign3, 32, 4).unwrap();
+        assert_eq!(sizes.iter().sum::<usize>(), 32);
+        let min = *sizes.iter().min().unwrap();
+        let max = *sizes.iter().max().unwrap();
+        assert!(max - min <= 4, "{sizes:?}");
+    }
+
+    #[test]
+    fn rejects_impossible_granularity() {
+        assert!(mend_patch_sizes(&[1.0], &[full(10)], 30, 4).is_err());
+        let nine: Vec<f64> = vec![1.0; 9];
+        let assign: Vec<_> = (0..9).map(|_| full(10)).collect();
+        assert!(mend_patch_sizes(&nine, &assign, 32, 4).is_err());
+    }
+
+    #[test]
+    fn cost_aware_accounts_for_fixed_overhead() {
+        use crate::device::CostModel;
+        // Heavy imbalance: Eq. 5 (linear) gives the slow device more
+        // rows than the affine-cost optimum; the cost-aware allocator
+        // must shrink the slow device's patch.
+        let cost = CostModel { fixed_s: 0.0034, per_row_s: 0.00024 };
+        let speeds = [1.0, 0.4];
+        let assign = [full(100), full(100)];
+        let eq5 = mend_patch_sizes(&speeds, &assign, 32, 2).unwrap();
+        let ca = cost_aware_sizes(&speeds, &assign, &cost, 32, 2).unwrap();
+        assert_eq!(ca.iter().sum::<usize>(), 32);
+        assert!(ca[1] < eq5[1], "cost-aware {ca:?} vs eq5 {eq5:?}");
+        // And it actually reduces the bottleneck interval time.
+        let t = |sizes: &[usize]| {
+            (0..2)
+                .map(|i| cost.step_time(sizes[i], speeds[i]))
+                .fold(0.0, f64::max)
+        };
+        assert!(t(&ca) <= t(&eq5) + 1e-12);
+    }
+
+    #[test]
+    fn cost_aware_equals_eq5_when_fixed_cost_vanishes() {
+        use crate::device::CostModel;
+        // With no fixed term the linear assumption is exact, so both
+        // allocators agree (up to rounding ties).
+        let cost = CostModel { fixed_s: 0.0, per_row_s: 0.001 };
+        let speeds = [1.0, 0.5];
+        let assign = [full(100), full(100)];
+        let eq5 = mend_patch_sizes(&speeds, &assign, 32, 2).unwrap();
+        let ca = cost_aware_sizes(&speeds, &assign, &cost, 32, 2).unwrap();
+        assert!(
+            (eq5[0] as i64 - ca[0] as i64).abs() <= 2,
+            "{eq5:?} vs {ca:?}"
+        );
+    }
+
+    #[test]
+    fn cost_aware_respects_interval_steps_of_half_devices() {
+        use crate::device::CostModel;
+        use crate::config::StadiParams;
+        // A Half device runs 1 step per interval vs the fast device's
+        // 2 — the allocator must weigh that (a fast device's granule
+        // costs double per interval).
+        let cost = CostModel { fixed_s: 0.002, per_row_s: 0.0003 };
+        let p = StadiParams::default();
+        let speeds = [1.0, 0.5];
+        let assign = assign_steps(&speeds, &p).unwrap();
+        assert_eq!(assign[1].class, StepClass::Half);
+        let ca = cost_aware_sizes(&speeds, &assign, &cost, 32, 2).unwrap();
+        assert_eq!(ca.iter().sum::<usize>(), 32);
+        // Fast device pays 2 steps per interval; slow pays 1 at half
+        // speed — the slow device can afford a sizeable share.
+        assert!(ca[1] >= 8, "{ca:?}");
+    }
+
+    #[test]
+    fn property_sum_granularity_floor_proportionality() {
+        let p = StadiParams::default();
+        forall(
+            23,
+            300,
+            |rng| {
+                let n = 1 + rng.below(7) as usize;
+                (0..n)
+                    .map(|_| 0.05 + 0.95 * rng.next_f64())
+                    .collect::<Vec<f64>>()
+            },
+            |speeds| {
+                let Ok(assign) = assign_steps(speeds, &p) else {
+                    return Ok(());
+                };
+                let included =
+                    assign.iter().filter(|a| a.steps > 0).count();
+                if included > 8 {
+                    return Ok(()); // more devices than granules
+                }
+                let sizes = mend_patch_sizes(speeds, &assign, 32, 4)
+                    .map_err(|e| e.to_string())?;
+                ensure(
+                    sizes.iter().sum::<usize>() == 32,
+                    format!("sum {:?} != 32", sizes),
+                )?;
+                for (i, &s) in sizes.iter().enumerate() {
+                    ensure(s % 4 == 0, "granularity violated")?;
+                    let excluded = assign[i].class == StepClass::Excluded;
+                    ensure(
+                        (s == 0) == excluded,
+                        "zero rows iff excluded",
+                    )?;
+                }
+                // Rounded sizes stay near the ideal shares: within one
+                // granule normally; within two when the 1-granule floor
+                // forces redistribution (tiny ideal shares).
+                let ideal = ideal_shares(speeds, &assign, 32.0);
+                let floor_active = ideal
+                    .iter()
+                    .zip(&assign)
+                    .any(|(&id, a)| a.steps > 0 && id < 4.0);
+                let tol = if floor_active { 8.0 } else { 4.0 };
+                for (i, &s) in sizes.iter().enumerate() {
+                    if assign[i].class != StepClass::Excluded {
+                        ensure(
+                            (s as f64 - ideal[i]).abs() <= tol + 1e-9,
+                            format!(
+                                "size {s} too far from ideal {}",
+                                ideal[i]
+                            ),
+                        )?;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

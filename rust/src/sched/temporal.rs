@@ -1,0 +1,185 @@
+//! Temporal adaptation: the Eq. 4 step allocator (paper §III-C).
+//!
+//! Given normalized effective speeds v_i (v_max = 1 after the
+//! profiler's normalization) and thresholds 0 < b < a < 1:
+//!
+//!   M_i = M_base                     if a·v_max < v_i ≤ v_max
+//!   M_i = ½·M_base + ½·M_warmup      if b·v_max < v_i ≤ a·v_max
+//!   excluded                         if v_i ≤ b·v_max
+//!
+//! The ½ quantization is the paper's least-common-multiple-minimizing
+//! choice: with step counts in ratio 2:1 past the warmup, every slow
+//! step lands on a fast timestep, so sync points stay aligned and
+//! communication intervals never stretch (§III-C "minimizes the lowest
+//! common multiple of inference step sizes").
+
+use crate::config::StadiParams;
+use crate::error::{Error, Result};
+
+/// Step class assigned to a device by Eq. 4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepClass {
+    /// Runs all M_base steps.
+    Full,
+    /// Runs M_warmup + (M_base - M_warmup)/2 steps.
+    Half,
+    /// v_i ≤ b·v_max: dropped from the cluster for this request.
+    Excluded,
+}
+
+/// Result of temporal adaptation for one device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepAssignment {
+    pub class: StepClass,
+    /// Total local steps M_i (0 when excluded).
+    pub steps: usize,
+}
+
+/// Number of steps in the Half class: ½·M_base + ½·M_warmup. With
+/// M_base - M_warmup even this is exact integer math.
+pub fn half_steps(p: &StadiParams) -> usize {
+    p.m_warmup + (p.m_base - p.m_warmup) / 2
+}
+
+/// Apply Eq. 4 to every device. `speeds` need not be normalized; the
+/// max in the slice is v_max. When `p.temporal` is false (ablation
+/// "None"/"+SA"), every non-excluded device gets M_base.
+pub fn assign_steps(speeds: &[f64], p: &StadiParams) -> Result<Vec<StepAssignment>> {
+    if speeds.is_empty() {
+        return Err(Error::Sched("no devices".into()));
+    }
+    let v_max = speeds.iter().cloned().fold(0.0, f64::max);
+    if v_max <= 0.0 {
+        return Err(Error::Sched("all devices have zero speed".into()));
+    }
+    let out: Vec<StepAssignment> = speeds
+        .iter()
+        .map(|&v| {
+            if v <= p.b * v_max {
+                StepAssignment { class: StepClass::Excluded, steps: 0 }
+            } else if v <= p.a * v_max && p.temporal {
+                StepAssignment { class: StepClass::Half, steps: half_steps(p) }
+            } else {
+                StepAssignment { class: StepClass::Full, steps: p.m_base }
+            }
+        })
+        .collect();
+    if out.iter().all(|a| a.class == StepClass::Excluded) {
+        return Err(Error::Sched(
+            "temporal adaptation excluded every device".into(),
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{ensure, forall};
+
+    fn params() -> StadiParams {
+        StadiParams::default() // m_base 100, warmup 4, a .75, b .25
+    }
+
+    #[test]
+    fn fast_devices_keep_base_steps() {
+        let a = assign_steps(&[1.0, 0.8], &params()).unwrap();
+        assert_eq!(a[0], StepAssignment { class: StepClass::Full, steps: 100 });
+        assert_eq!(a[1].class, StepClass::Full); // 0.8 > 0.75
+    }
+
+    #[test]
+    fn middle_band_gets_half() {
+        let a = assign_steps(&[1.0, 0.6], &params()).unwrap();
+        assert_eq!(a[1].class, StepClass::Half);
+        assert_eq!(a[1].steps, 52); // ½·100 + ½·4
+    }
+
+    #[test]
+    fn slow_devices_excluded() {
+        let a = assign_steps(&[1.0, 0.2], &params()).unwrap();
+        assert_eq!(a[1].class, StepClass::Excluded);
+        assert_eq!(a[1].steps, 0);
+    }
+
+    #[test]
+    fn boundaries_are_paper_exact() {
+        // v = a·v_max belongs to the Half band (strict a·v_max < v for
+        // Full); v = b·v_max is excluded (strict b·v_max < v for Half).
+        let p = params();
+        let a = assign_steps(&[1.0, 0.75], &p).unwrap();
+        assert_eq!(a[1].class, StepClass::Half);
+        let a = assign_steps(&[1.0, 0.25], &p).unwrap();
+        assert_eq!(a[1].class, StepClass::Excluded);
+    }
+
+    #[test]
+    fn temporal_disabled_keeps_uniform_steps() {
+        let mut p = params();
+        p.temporal = false;
+        let a = assign_steps(&[1.0, 0.5], &p).unwrap();
+        assert_eq!(a[1].class, StepClass::Full);
+        assert_eq!(a[1].steps, 100);
+        // Exclusion still applies (GPU usage threshold b, §V).
+        let a = assign_steps(&[1.0, 0.1], &p).unwrap();
+        assert_eq!(a[1].class, StepClass::Excluded);
+    }
+
+    #[test]
+    fn all_excluded_is_error() {
+        // Single zero-speed device: error out rather than hang.
+        assert!(assign_steps(&[0.0], &params()).is_err());
+        assert!(assign_steps(&[], &params()).is_err());
+    }
+
+    #[test]
+    fn property_sync_alignment_and_monotonicity() {
+        // For arbitrary speed vectors: (1) the fastest device is never
+        // excluded; (2) step counts are monotone in speed; (3) Half
+        // count satisfies the LCM alignment M_full - W = 2·(M_half - W).
+        let p = params();
+        forall(
+            17,
+            300,
+            |rng| {
+                let n = 1 + rng.below(6) as usize;
+                (0..n).map(|_| rng.next_f64()).collect::<Vec<f64>>()
+            },
+            |speeds| {
+                let Ok(assign) = assign_steps(speeds, &p) else {
+                    return Ok(()); // all-excluded handled elsewhere
+                };
+                let vmax = speeds.iter().cloned().fold(0.0, f64::max);
+                let fastest = speeds.iter().position(|&v| v == vmax).unwrap();
+                ensure(
+                    assign[fastest].class == StepClass::Full,
+                    "fastest device not Full",
+                )?;
+                for i in 0..speeds.len() {
+                    for j in 0..speeds.len() {
+                        if speeds[i] >= speeds[j] {
+                            ensure(
+                                assign[i].steps >= assign[j].steps,
+                                format!(
+                                    "monotonicity: v{i}={} v{j}={} but \
+                                     M{i}={} < M{j}={}",
+                                    speeds[i], speeds[j],
+                                    assign[i].steps, assign[j].steps
+                                ),
+                            )?;
+                        }
+                    }
+                }
+                for a in assign {
+                    if a.class == StepClass::Half {
+                        ensure(
+                            p.m_base - p.m_warmup == 2 * (a.steps - p.m_warmup),
+                            "LCM alignment broken",
+                        )?;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,6 @@
+//! Serving front-end: JSON-lines protocol, bounded router, TCP server.
+
+pub mod protocol;
+pub mod router;
+pub mod sim;
+pub mod server;

@@ -1,0 +1,104 @@
+//! JSON-lines wire protocol for the serving front-end.
+//!
+//! One request per line:
+//!   {"id": "r1", "seed": 1234}
+//! One response per line:
+//!   {"id": "r1", "ok": true, "latency_s": ..., "sim_latency_s": ...,
+//!    "latent_sum": ..., "latent_first8": [...], "plan": {...}}
+//!
+//! The latent itself is summarized (sum + first values) rather than
+//! shipped — clients needing pixels use the library API; the server
+//! exists to exercise routing/queueing on the request path.
+
+use crate::coordinator::Generation;
+use crate::error::{Error, Result};
+use crate::util::json::{self, Object, Value};
+
+/// A parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRequest {
+    pub id: String,
+    pub seed: u64,
+}
+
+impl WireRequest {
+    pub fn parse(line: &str) -> Result<Self> {
+        let v = json::parse(line)?;
+        Ok(WireRequest {
+            id: v.get("id")?.as_str()?.to_string(),
+            seed: v.get("seed")?.as_i64().map(|x| x as u64)?,
+        })
+    }
+
+    pub fn to_line(&self) -> String {
+        let mut o = Object::new();
+        o.insert("id", Value::Str(self.id.clone()));
+        o.insert("seed", Value::Num(self.seed as f64));
+        json::to_string(&Value::Obj(o))
+    }
+}
+
+/// Serialize a successful generation.
+pub fn response_line(
+    id: &str,
+    gen: &Generation,
+    wall_latency_s: f64,
+) -> String {
+    let mut plan = Object::new();
+    for d in &gen.plan.devices {
+        let mut dd = Object::new();
+        dd.insert("steps", Value::Num(d.steps.len() as f64));
+        dd.insert("rows", Value::Num(d.rows.rows as f64));
+        dd.insert("speed", Value::Num(d.speed));
+        plan.insert(d.name.clone(), Value::Obj(dd));
+    }
+    let mut o = Object::new();
+    o.insert("id", Value::Str(id.to_string()));
+    o.insert("ok", Value::Bool(true));
+    o.insert("latency_s", Value::Num(wall_latency_s));
+    o.insert("sim_latency_s", Value::Num(gen.timeline.total_s));
+    o.insert("utilization", Value::Num(gen.timeline.utilization));
+    o.insert("latent_sum", Value::Num(gen.latent.sum()));
+    o.insert(
+        "latent_first8",
+        Value::from_f32_slice(&gen.latent.data[..8.min(gen.latent.len())]),
+    );
+    o.insert("plan", Value::Obj(plan));
+    json::to_string(&Value::Obj(o))
+}
+
+/// Serialize an error response.
+pub fn error_line(id: &str, err: &Error) -> String {
+    let mut o = Object::new();
+    o.insert("id", Value::Str(id.to_string()));
+    o.insert("ok", Value::Bool(false));
+    o.insert("error", Value::Str(err.to_string()));
+    json::to_string(&Value::Obj(o))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let r = WireRequest { id: "r7".into(), seed: 99 };
+        let back = WireRequest::parse(&r.to_line()).unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(WireRequest::parse("{}").is_err());
+        assert!(WireRequest::parse("{\"id\": 3, \"seed\": 1}").is_err());
+        assert!(WireRequest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn error_line_is_json() {
+        let line = error_line("x", &Error::msg("boom"));
+        let v = json::parse(&line).unwrap();
+        assert!(!v.get("ok").unwrap().as_bool().unwrap());
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("boom"));
+    }
+}

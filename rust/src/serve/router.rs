@@ -1,0 +1,184 @@
+//! Request router: bounded FIFO queue with backpressure + per-request
+//! metrics, decoupling protocol handling from the engine.
+//!
+//! The engine executes one request at a time (the whole cluster
+//! cooperates on each image — the paper targets single-request
+//! latency, §II-C), so the router's job is admission control and
+//! ordering: reject when the queue is full (backpressure), serve in
+//! arrival order, and keep latency statistics per outcome.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::{Engine, Generation, Request};
+use crate::error::{Error, Result};
+use crate::metrics::latency::LatencyTracker;
+
+/// A queued unit of work.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: String,
+    pub seed: u64,
+}
+
+/// Router statistics snapshot.
+#[derive(Debug, Clone)]
+pub struct RouterStats {
+    pub admitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub queue_len: usize,
+    pub latency_summary: String,
+}
+
+/// FIFO router with a bounded queue.
+pub struct Router {
+    queue: VecDeque<Job>,
+    capacity: usize,
+    admitted: u64,
+    rejected: u64,
+    completed: u64,
+    failed: u64,
+    latency: LatencyTracker,
+}
+
+impl Router {
+    pub fn new(capacity: usize) -> Self {
+        Router {
+            queue: VecDeque::new(),
+            capacity: capacity.max(1),
+            admitted: 0,
+            rejected: 0,
+            completed: 0,
+            failed: 0,
+            latency: LatencyTracker::new(),
+        }
+    }
+
+    /// Admit a job, or reject with backpressure when full.
+    pub fn submit(&mut self, job: Job) -> Result<()> {
+        if self.queue.len() >= self.capacity {
+            self.rejected += 1;
+            return Err(Error::Protocol(format!(
+                "queue full ({} jobs), request {} rejected",
+                self.queue.len(),
+                job.id
+            )));
+        }
+        self.admitted += 1;
+        self.queue.push_back(job);
+        Ok(())
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Pop and execute the next job on the engine.
+    /// Returns None when idle.
+    pub fn serve_next(
+        &mut self,
+        engine: &mut Engine,
+    ) -> Option<(Job, Result<(Generation, f64)>)> {
+        let job = self.queue.pop_front()?;
+        let t0 = std::time::Instant::now();
+        let res = engine.generate(&Request { seed: job.seed });
+        let wall = t0.elapsed().as_secs_f64();
+        let out = match res {
+            Ok(g) => {
+                self.completed += 1;
+                self.latency.record(wall);
+                Ok((g, wall))
+            }
+            Err(e) => {
+                self.failed += 1;
+                Err(e)
+            }
+        };
+        Some((job, out))
+    }
+
+    /// Drain the whole queue.
+    pub fn serve_all(
+        &mut self,
+        engine: &mut Engine,
+    ) -> Vec<(Job, Result<(Generation, f64)>)> {
+        let mut out = Vec::new();
+        while let Some(r) = self.serve_next(engine) {
+            out.push(r);
+        }
+        out
+    }
+
+    pub fn stats(&self) -> RouterStats {
+        RouterStats {
+            admitted: self.admitted,
+            rejected: self.rejected,
+            completed: self.completed,
+            failed: self.failed,
+            queue_len: self.queue.len(),
+            latency_summary: self.latency.summary(),
+        }
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        self.latency.mean()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_backpressure() {
+        let mut r = Router::new(2);
+        r.submit(Job { id: "a".into(), seed: 1 }).unwrap();
+        r.submit(Job { id: "b".into(), seed: 2 }).unwrap();
+        let err = r.submit(Job { id: "c".into(), seed: 3 }).unwrap_err();
+        assert!(err.to_string().contains("rejected"));
+        assert_eq!(r.queue_len(), 2);
+        let s = r.stats();
+        assert_eq!(s.admitted, 2);
+        assert_eq!(s.rejected, 1);
+        // FIFO: front is "a".
+        assert_eq!(r.queue.front().unwrap().id, "a");
+    }
+
+    #[test]
+    fn property_queue_never_exceeds_capacity() {
+        use crate::util::proptest::{ensure, forall};
+        forall(
+            7,
+            100,
+            |rng| {
+                (0..rng.below(40))
+                    .map(|_| rng.below(2) as usize)
+                    .collect::<Vec<usize>>()
+            },
+            |ops| {
+                // op 0 = submit, op 1 = pop (without engine).
+                let mut r = Router::new(4);
+                let mut next = 0u64;
+                for &op in ops {
+                    if op == 0 {
+                        next += 1;
+                        let _ = r.submit(Job {
+                            id: format!("j{next}"),
+                            seed: next,
+                        });
+                    } else {
+                        r.queue.pop_front();
+                    }
+                    ensure(r.queue_len() <= 4, "capacity exceeded")?;
+                }
+                let s = r.stats();
+                ensure(
+                    s.admitted + s.rejected == next,
+                    "admission accounting broken",
+                )?;
+                Ok(())
+            },
+        );
+    }
+}

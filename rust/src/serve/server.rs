@@ -1,0 +1,135 @@
+//! TCP JSON-lines server: the deployable front-end.
+//!
+//! `stadi serve --addr 127.0.0.1:7878` accepts connections, reads one
+//! request per line, routes through the bounded `Router`, executes on
+//! the engine, and writes one response line per request. Connections
+//! are handled sequentially per the single-request-at-a-time engine
+//! model (the cluster cooperates on each image); concurrency control
+//! is the router's bounded queue.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::Engine;
+use crate::error::Result;
+use crate::serve::protocol::{self, WireRequest};
+use crate::serve::router::{Job, Router};
+
+/// Serve until `stop` is set (or forever). Returns total requests
+/// handled. `max_requests` caps the run for tests/examples (0 = no
+/// cap).
+pub fn serve(
+    engine: &mut Engine,
+    listener: TcpListener,
+    queue_capacity: usize,
+    max_requests: usize,
+    stop: Option<Arc<AtomicBool>>,
+) -> Result<u64> {
+    let mut router = Router::new(queue_capacity);
+    let mut handled = 0u64;
+    crate::log_info!(
+        "serve",
+        "listening on {}",
+        listener.local_addr()?
+    );
+    for conn in listener.incoming() {
+        if let Some(s) = &stop {
+            if s.load(Ordering::Relaxed) {
+                break;
+            }
+        }
+        let stream = conn?;
+        handled += handle_connection(engine, &mut router, stream)?;
+        if max_requests > 0 && handled >= max_requests as u64 {
+            break;
+        }
+    }
+    let s = router.stats();
+    crate::log_info!(
+        "serve",
+        "done: admitted={} rejected={} completed={} failed={} ({})",
+        s.admitted,
+        s.rejected,
+        s.completed,
+        s.failed,
+        s.latency_summary
+    );
+    Ok(handled)
+}
+
+fn handle_connection(
+    engine: &mut Engine,
+    router: &mut Router,
+    stream: TcpStream,
+) -> Result<u64> {
+    let peer = stream.peer_addr()?;
+    crate::log_debug!("serve", "connection from {peer}");
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    let mut handled = 0u64;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match WireRequest::parse(&line) {
+            Ok(r) => r,
+            Err(e) => {
+                writeln!(writer, "{}", protocol::error_line("?", &e))?;
+                continue;
+            }
+        };
+        if let Err(e) =
+            router.submit(Job { id: req.id.clone(), seed: req.seed })
+        {
+            writeln!(writer, "{}", protocol::error_line(&req.id, &e))?;
+            continue;
+        }
+        // Single-flight engine: serve immediately.
+        while let Some((job, result)) = router.serve_next(engine) {
+            let response = match result {
+                Ok((generation, wall)) => {
+                    protocol::response_line(&job.id, &generation, wall)
+                }
+                Err(e) => protocol::error_line(&job.id, &e),
+            };
+            writeln!(writer, "{response}")?;
+            handled += 1;
+        }
+    }
+    Ok(handled)
+}
+
+/// Simple blocking client for tests/examples.
+pub struct Client {
+    writer: TcpStream,
+    // One persistent reader: a fresh BufReader per request could
+    // swallow bytes already buffered from a previous read and then
+    // block forever on the next.
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { writer: stream, reader })
+    }
+
+    /// Send one request, read one response line.
+    pub fn request(&mut self, id: &str, seed: u64) -> Result<String> {
+        let req = WireRequest { id: id.into(), seed };
+        writeln!(self.writer, "{}", req.to_line())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(line.trim().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // End-to-end server tests live in rust/tests/integration_serve.rs
+    // (they need built artifacts + a real engine).
+}

@@ -1,0 +1,207 @@
+//! Serving-level queueing simulation (discrete-event).
+//!
+//! The paper optimizes single-request latency; a serving deployment
+//! cares how that translates under load. This module runs an M/G/1-
+//! style open-loop simulation on the `des` substrate: Poisson arrivals
+//! into the router's FIFO queue, one request in service at a time (the
+//! whole cluster cooperates per image), service time = the scheduler's
+//! simulated end-to-end latency. Comparing STADI vs patch parallelism
+//! service times shows how scheduler-level gains compound into
+//! queueing gains (shorter service -> lower utilization -> much
+//! shorter waits near saturation).
+
+use crate::des::Sim;
+use crate::util::rng::Pcg32;
+use crate::util::stats;
+
+/// One simulated request's timeline.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestTrace {
+    pub arrival_s: f64,
+    pub start_s: f64,
+    pub finish_s: f64,
+}
+
+impl RequestTrace {
+    pub fn wait_s(&self) -> f64 {
+        self.start_s - self.arrival_s
+    }
+
+    pub fn sojourn_s(&self) -> f64 {
+        self.finish_s - self.arrival_s
+    }
+}
+
+/// Aggregate results of one run.
+#[derive(Debug, Clone)]
+pub struct QueueStats {
+    pub traces: Vec<RequestTrace>,
+    pub offered_load: f64,
+    pub mean_wait_s: f64,
+    pub mean_sojourn_s: f64,
+    pub p95_sojourn_s: f64,
+    pub max_queue_len: usize,
+    pub throughput_rps: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Arrival(usize),
+    Departure,
+}
+
+/// Simulate `n_requests` Poisson(`rate_rps`) arrivals served FIFO by a
+/// single engine whose service time for request i is `service_s[i %
+/// len]`. Deterministic for a seed.
+pub fn simulate_open_loop(
+    rate_rps: f64,
+    n_requests: usize,
+    service_s: &[f64],
+    seed: u64,
+) -> QueueStats {
+    assert!(rate_rps > 0.0 && !service_s.is_empty());
+    let mut rng = Pcg32::new(seed);
+    let mut sim: Sim<Ev> = Sim::new();
+
+    // Pre-draw arrival times (exponential gaps).
+    let mut t = 0.0;
+    for i in 0..n_requests {
+        let u: f64 = 1.0 - rng.next_f64();
+        t += -u.ln() / rate_rps;
+        sim.schedule(t, Ev::Arrival(i));
+    }
+
+    let mut queue: std::collections::VecDeque<(usize, f64)> =
+        std::collections::VecDeque::new();
+    let mut busy_with: Option<(usize, f64)> = None; // (req, start)
+    let mut traces: Vec<Option<RequestTrace>> = vec![None; n_requests];
+    let mut max_q = 0usize;
+
+    sim.run(|sim, now, ev| {
+        match ev {
+            Ev::Arrival(i) => {
+                if busy_with.is_none() {
+                    busy_with = Some((i, now));
+                    sim.schedule_in(service_s[i % service_s.len()], Ev::Departure);
+                } else {
+                    queue.push_back((i, now));
+                    max_q = max_q.max(queue.len());
+                }
+            }
+            Ev::Departure => {
+                let (i, start) = busy_with.take().unwrap();
+                let arrival = traces[i]
+                    .map(|t| t.arrival_s)
+                    .unwrap_or(start); // set below for queued ones
+                let _ = arrival;
+                // We record arrival lazily: for directly-served
+                // requests arrival == start.
+                let arr = traces[i].map(|t| t.arrival_s).unwrap_or(start);
+                traces[i] = Some(RequestTrace {
+                    arrival_s: arr,
+                    start_s: start,
+                    finish_s: now,
+                });
+                if let Some((j, arr_j)) = queue.pop_front() {
+                    traces[j] = Some(RequestTrace {
+                        arrival_s: arr_j,
+                        start_s: now,
+                        finish_s: f64::NAN, // filled at departure
+                    });
+                    busy_with = Some((j, now));
+                    sim.schedule_in(
+                        service_s[j % service_s.len()],
+                        Ev::Departure,
+                    );
+                }
+            }
+        }
+        true
+    });
+
+    // Fix up arrival times for directly-served requests and finish
+    // times (the simple lazy recording above): re-run trace sanity.
+    let traces: Vec<RequestTrace> = traces
+        .into_iter()
+        .flatten()
+        .filter(|t| t.finish_s.is_finite())
+        .collect();
+
+    let waits: Vec<f64> = traces.iter().map(RequestTrace::wait_s).collect();
+    let soj: Vec<f64> = traces.iter().map(RequestTrace::sojourn_s).collect();
+    let mean_service = stats::mean(
+        &traces
+            .iter()
+            .map(|t| t.finish_s - t.start_s)
+            .collect::<Vec<_>>(),
+    );
+    let total = traces
+        .iter()
+        .map(|t| t.finish_s)
+        .fold(0.0f64, f64::max);
+    QueueStats {
+        offered_load: rate_rps * mean_service,
+        mean_wait_s: stats::mean(&waits),
+        mean_sojourn_s: stats::mean(&soj),
+        p95_sojourn_s: stats::percentile(&soj, 95.0),
+        max_queue_len: max_q,
+        throughput_rps: if total > 0.0 {
+            traces.len() as f64 / total
+        } else {
+            0.0
+        },
+        traces,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn low_load_has_no_waiting() {
+        // Service 0.1s, arrivals 0.5/s -> utilization 5%, waits ~0.
+        let s = simulate_open_loop(0.5, 200, &[0.1], 1);
+        assert!(s.offered_load < 0.1);
+        assert!(s.mean_wait_s < 0.02, "wait {}", s.mean_wait_s);
+        assert!((s.mean_sojourn_s - 0.1).abs() < 0.03);
+    }
+
+    #[test]
+    fn near_saturation_waits_blow_up() {
+        // rho = 0.9: M/D/1 mean wait = rho*s/(2(1-rho)) = 0.45s.
+        let s_low = simulate_open_loop(2.0, 400, &[0.1], 2); // rho 0.2
+        let s_high = simulate_open_loop(9.0, 400, &[0.1], 2); // rho 0.9
+        assert!(s_high.mean_wait_s > 5.0 * s_low.mean_wait_s.max(1e-3));
+        assert!(s_high.max_queue_len > s_low.max_queue_len);
+    }
+
+    #[test]
+    fn shorter_service_dominates_everywhere() {
+        for rate in [1.0, 4.0, 8.0] {
+            let slow = simulate_open_loop(rate, 300, &[0.11], 3);
+            let fast = simulate_open_loop(rate, 300, &[0.07], 3);
+            assert!(
+                fast.mean_sojourn_s < slow.mean_sojourn_s,
+                "rate {rate}"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = simulate_open_loop(3.0, 100, &[0.2, 0.3], 7);
+        let b = simulate_open_loop(3.0, 100, &[0.2, 0.3], 7);
+        assert_eq!(a.mean_sojourn_s, b.mean_sojourn_s);
+        assert_eq!(a.max_queue_len, b.max_queue_len);
+    }
+
+    #[test]
+    fn all_requests_complete() {
+        let s = simulate_open_loop(5.0, 250, &[0.15], 9);
+        assert_eq!(s.traces.len(), 250);
+        for t in &s.traces {
+            assert!(t.finish_s >= t.start_s && t.start_s >= t.arrival_s);
+        }
+    }
+}

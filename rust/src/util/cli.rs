@@ -1,0 +1,263 @@
+//! Declarative CLI argument parser (substrate; no `clap` offline).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean
+//! switches, defaults, required flags, and auto-generated `--help`.
+//!
+//! ```no_run
+//! use stadi::util::cli::{Command, Parsed};
+//! let cmd = Command::new("generate", "run one diffusion request")
+//!     .flag("steps", "M_base step count", Some("100"))
+//!     .switch("sim", "use the discrete-event clock");
+//! let parsed = cmd.parse(std::env::args().skip(2)).unwrap();
+//! let steps: usize = parsed.get_parsed("steps").unwrap();
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// One flag specification.
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_switch: bool,
+    required: bool,
+}
+
+/// A (sub)command with its flag table.
+#[derive(Debug, Clone)]
+pub struct Command {
+    pub name: String,
+    pub about: String,
+    flags: Vec<FlagSpec>,
+}
+
+/// Parse result: flag name -> raw string value.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    /// Leftover positional arguments.
+    pub positional: Vec<String>,
+}
+
+impl Command {
+    pub fn new(name: impl Into<String>, about: impl Into<String>) -> Self {
+        Command { name: name.into(), about: about.into(), flags: Vec::new() }
+    }
+
+    /// A value flag with an optional default (None => optional flag
+    /// with no default; use `require` for mandatory ones).
+    pub fn flag(
+        mut self,
+        name: &str,
+        help: &str,
+        default: Option<&str>,
+    ) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.into(),
+            help: help.into(),
+            default: default.map(String::from),
+            is_switch: false,
+            required: false,
+        });
+        self
+    }
+
+    /// A mandatory value flag.
+    pub fn require(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_switch: false,
+            required: true,
+        });
+        self
+    }
+
+    /// A boolean switch (present => "true").
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.into(),
+            help: help.into(),
+            default: Some("false".into()),
+            is_switch: true,
+            required: false,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nflags:\n", self.name, self.about);
+        for f in &self.flags {
+            let kind = if f.is_switch {
+                String::new()
+            } else if let Some(d) = &f.default {
+                format!(" <value> (default {d})")
+            } else if f.required {
+                " <value> (required)".into()
+            } else {
+                " <value>".into()
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", f.name, kind, f.help));
+        }
+        s.push_str("  --help\n      show this message\n");
+        s
+    }
+
+    fn spec(&self, name: &str) -> Option<&FlagSpec> {
+        self.flags.iter().find(|f| f.name == name)
+    }
+
+    /// Parse an argument iterator (excluding program + subcommand).
+    pub fn parse<I: IntoIterator<Item = String>>(&self, args: I) -> Result<Parsed> {
+        let mut values = BTreeMap::new();
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                values.insert(f.name.clone(), d.clone());
+            }
+        }
+        let mut positional = Vec::new();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(Error::msg(self.usage()));
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self.spec(&name).ok_or_else(|| {
+                    Error::Config(format!(
+                        "unknown flag --{name}\n\n{}",
+                        self.usage()
+                    ))
+                })?;
+                let value = if spec.is_switch {
+                    inline.unwrap_or_else(|| "true".into())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    it.next().ok_or_else(|| {
+                        Error::Config(format!("--{name} needs a value"))
+                    })?
+                };
+                values.insert(name, value);
+            } else {
+                positional.push(arg);
+            }
+        }
+        for f in &self.flags {
+            if f.required && !values.contains_key(&f.name) {
+                return Err(Error::Config(format!(
+                    "missing required flag --{}",
+                    f.name
+                )));
+            }
+        }
+        Ok(Parsed { values, positional })
+    }
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    /// Get + parse into any FromStr type with a good error message.
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<T> {
+        let raw = self.get(name).ok_or_else(|| {
+            Error::Config(format!("flag --{name} not provided"))
+        })?;
+        raw.parse::<T>().map_err(|_| {
+            Error::Config(format!(
+                "flag --{name}: cannot parse {raw:?} as {}",
+                std::any::type_name::<T>()
+            ))
+        })
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Parse a comma-separated list, e.g. `--occ 0.0,0.4`.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str) -> Result<Vec<T>> {
+        let raw = self.get(name).ok_or_else(|| {
+            Error::Config(format!("flag --{name} not provided"))
+        })?;
+        raw.split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim().parse::<T>().map_err(|_| {
+                    Error::Config(format!("--{name}: bad element {s:?}"))
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("test", "testing")
+            .flag("steps", "step count", Some("100"))
+            .switch("sim", "simulate")
+            .require("model", "model path")
+            .flag("occ", "occupancies", Some("0.0,0.0"))
+    }
+
+    fn parse(args: &[&str]) -> Result<Parsed> {
+        cmd().parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let p = parse(&["--model", "m.hlo"]).unwrap();
+        assert_eq!(p.get("steps"), Some("100"));
+        assert!(!p.get_bool("sim"));
+        assert_eq!(p.get("model"), Some("m.hlo"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(parse(&[]).is_err());
+    }
+
+    #[test]
+    fn switch_and_equals_syntax() {
+        let p = parse(&["--model=m", "--sim", "--steps=50"]).unwrap();
+        assert!(p.get_bool("sim"));
+        assert_eq!(p.get_parsed::<usize>("steps").unwrap(), 50);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(parse(&["--model", "m", "--bogus", "1"]).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let p = parse(&["--model", "m", "--occ", "0.35, 0.45"]).unwrap();
+        let occ: Vec<f64> = p.get_list("occ").unwrap();
+        assert_eq!(occ, vec![0.35, 0.45]);
+    }
+
+    #[test]
+    fn positional_collected() {
+        let p = parse(&["--model", "m", "prompt-one"]).unwrap();
+        assert_eq!(p.positional, vec!["prompt-one"]);
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let err = parse(&["--help"]).unwrap_err().to_string();
+        assert!(err.contains("--steps"));
+        assert!(err.contains("testing"));
+    }
+}

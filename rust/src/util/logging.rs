@@ -1,0 +1,128 @@
+//! Tiny leveled logger (substrate; no `log`/`tracing` offline).
+//!
+//! Level picked from `STADI_LOG` (error|warn|info|debug|trace), default
+//! `info`. Messages go to stderr so bench stdout stays machine-parsable.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Once;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2);
+static INIT: Once = Once::new();
+static mut START: Option<Instant> = None;
+
+fn init() {
+    INIT.call_once(|| {
+        let lvl = match std::env::var("STADI_LOG").as_deref() {
+            Ok("error") => Level::Error,
+            Ok("warn") => Level::Warn,
+            Ok("debug") => Level::Debug,
+            Ok("trace") => Level::Trace,
+            _ => Level::Info,
+        };
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+        unsafe {
+            START = Some(Instant::now());
+        }
+    });
+}
+
+pub fn set_level(lvl: Level) {
+    init();
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(lvl: Level) -> bool {
+    init();
+    (lvl as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+#[doc(hidden)]
+pub fn log(lvl: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(lvl) {
+        return;
+    }
+    let elapsed = unsafe {
+        #[allow(static_mut_refs)]
+        START.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0)
+    };
+    let tag = match lvl {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{elapsed:9.4}s {tag} {target}] {msg}");
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Error, $target,
+            format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn, $target,
+            format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info, $target,
+            format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug, $target,
+            format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_trace {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Trace, $target,
+            format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+}

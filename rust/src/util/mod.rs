@@ -1,0 +1,11 @@
+//! Support substrates built from scratch (the offline registry carries
+//! no serde/clap/rand/criterion/proptest — see DESIGN.md §2).
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod plot;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,132 @@
+//! ASCII line/scatter plots for bench output (the "figures" of the
+//! reproduction render directly in the terminal and in
+//! test_output/bench logs).
+
+/// One named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub marker: char,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>, marker: char) -> Self {
+        Series { name: name.into(), marker, points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    pub fn from_points(
+        name: impl Into<String>,
+        marker: char,
+        points: &[(f64, f64)],
+    ) -> Self {
+        Series { name: name.into(), marker, points: points.to_vec() }
+    }
+}
+
+/// Render series into a `width` x `height` character grid with axis
+/// labels and a legend. Y grows upward; points are clipped to range.
+pub fn render(series: &[Series], width: usize, height: usize) -> String {
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.points.iter().cloned())
+        .collect();
+    if pts.is_empty() {
+        return "(no data)\n".into();
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < 1e-300 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-300 {
+        y1 = y0 + 1.0;
+    }
+    // Pad the y range slightly so extremes don't sit on the frame.
+    let ypad = (y1 - y0) * 0.05;
+    y0 -= ypad;
+    y1 += ypad;
+
+    let mut grid = vec![vec![' '; width]; height];
+    for s in series {
+        for &(x, y) in &s.points {
+            let cx = ((x - x0) / (x1 - x0) * (width - 1) as f64).round();
+            let cy = ((y - y0) / (y1 - y0) * (height - 1) as f64).round();
+            let (cx, cy) = (cx as usize, cy as usize);
+            if cx < width && cy < height {
+                grid[height - 1 - cy][cx] = s.marker;
+            }
+        }
+    }
+
+    let mut out = String::new();
+    for (i, row) in grid.iter().enumerate() {
+        let yv = y1 - (y1 - y0) * i as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yv:>9.3} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>9} +{}\n", "", "-".repeat(width)));
+    out.push_str(&format!(
+        "{:>10} {:<w$.3}{:>.3}\n",
+        "",
+        x0,
+        x1,
+        w = width.saturating_sub(5)
+    ));
+    out.push_str("           ");
+    for s in series {
+        out.push_str(&format!("[{}] {}   ", s.marker, s.name));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_points_in_bounds() {
+        let s = Series::from_points(
+            "lat",
+            '*',
+            &[(0.0, 1.0), (1.0, 2.0), (2.0, 4.0)],
+        );
+        let out = render(&[s], 40, 10);
+        assert!(out.contains('*'));
+        assert!(out.contains("[*] lat"));
+        // 10 grid rows + axis + labels + legend
+        assert!(out.lines().count() >= 12);
+    }
+
+    #[test]
+    fn empty_series_is_harmless() {
+        assert_eq!(render(&[], 10, 5), "(no data)\n");
+    }
+
+    #[test]
+    fn constant_series_does_not_divide_by_zero() {
+        let s = Series::from_points("c", 'o', &[(1.0, 5.0), (2.0, 5.0)]);
+        let out = render(&[s], 20, 5);
+        assert!(out.contains('o'));
+    }
+
+    #[test]
+    fn two_series_distinct_markers() {
+        let a = Series::from_points("a", 'a', &[(0.0, 0.0)]);
+        let b = Series::from_points("b", 'b', &[(1.0, 1.0)]);
+        let out = render(&[a, b], 30, 8);
+        assert!(out.contains('a') && out.contains('b'));
+    }
+}

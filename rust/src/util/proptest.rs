@@ -1,0 +1,195 @@
+//! Mini property-testing framework (substrate; no `proptest` offline).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` on `cases` generated
+//! inputs; on failure it greedily shrinks via the input's `Shrink`
+//! implementation and panics with the minimal counterexample. Used for
+//! the coordinator invariants (routing, batching, scheduling state) as
+//! the brief requires.
+
+use crate::util::rng::Pcg32;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    /// Candidate shrinks, roughly ordered most-aggressive first.
+    fn shrinks(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for u64 {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for f64 {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0.0 {
+            out.push(0.0);
+            out.push(self / 2.0);
+        }
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // Remove halves, then single elements, then shrink elements.
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        if self.len() > 1 {
+            for i in 0..self.len() {
+                let mut v = self.clone();
+                v.remove(i);
+                out.push(v);
+            }
+        }
+        for i in 0..self.len() {
+            for candidate in self[i].shrinks() {
+                let mut v = self.clone();
+                v[i] = candidate;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrinks()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrinks().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Outcome of a property check.
+pub type Check = Result<(), String>;
+
+/// Assert-style helper for properties.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Check {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `prop` on `cases` inputs from `gen`; shrink on failure.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Pcg32) -> T,
+    P: Fn(&T) -> Check,
+{
+    let mut rng = Pcg32::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (min_input, min_msg) = shrink_loop(input, msg, &prop);
+            panic!(
+                "property failed (case {case}/{cases}, seed {seed}):\n  \
+                 counterexample: {min_input:?}\n  reason: {min_msg}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Shrink, P: Fn(&T) -> Check>(
+    mut input: T,
+    mut msg: String,
+    prop: &P,
+) -> (T, String) {
+    // Greedy descent: keep taking the first failing shrink, bounded.
+    'outer: for _ in 0..1000 {
+        for candidate in input.shrinks() {
+            if let Err(m) = prop(&candidate) {
+                input = candidate;
+                msg = m;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (input, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            1,
+            50,
+            |rng| rng.below(100) as usize,
+            |_| {
+                // side channel not available inside Fn; count via gen
+                Ok(())
+            },
+        );
+        // count generator calls instead
+        forall(
+            1,
+            50,
+            |rng| {
+                count += 1;
+                rng.below(100) as usize
+            },
+            |_| Ok(()),
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "counterexample: 10")]
+    fn shrinks_to_minimal_failing() {
+        // Fails for x >= 10; minimal counterexample should be exactly 10.
+        forall(
+            3,
+            200,
+            |rng| rng.below(1000) as usize,
+            |&x| ensure(x < 10, format!("{x} >= 10")),
+        );
+    }
+
+    #[test]
+    fn vec_shrink_produces_smaller() {
+        let v = vec![3usize, 4, 5];
+        let shrinks = v.shrinks();
+        assert!(shrinks.iter().any(|s| s.len() < 3));
+        assert!(shrinks.iter().all(|s| s.len() <= 3));
+    }
+}

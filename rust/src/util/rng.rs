@@ -1,0 +1,229 @@
+//! Deterministic PRNG substrate (no `rand` crate offline).
+//!
+//! `Pcg32` (PCG-XSH-RR 64/32) for fast uniform streams and `NormalGen`
+//! (Box-Muller) for Gaussians. Seeded explicitly everywhere so every
+//! experiment in EXPERIMENTS.md is bit-reproducible.
+
+/// PCG-XSH-RR 64/32 — O'Neill's minimal PCG.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    pub const MULT: u64 = 6364136223846793005;
+
+    /// Seed with the default stream.
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    /// Seed with an explicit stream id (distinct streams are
+    /// statistically independent).
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(Self::MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 random bits / 2^53.
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [0, 1) as f32.
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 / (1u32 << 24) as f32
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire-ish
+    /// rejection).
+    pub fn below(&mut self, n: u32) -> u32 {
+        assert!(n > 0);
+        let threshold = n.wrapping_neg() % n;
+        loop {
+            let r = self.next_u32();
+            if r >= threshold {
+                return r % n;
+            }
+        }
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick one element uniformly.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u32) as usize]
+    }
+}
+
+/// Box-Muller standard-normal generator over a Pcg32 stream.
+#[derive(Debug, Clone)]
+pub struct NormalGen {
+    rng: Pcg32,
+    spare: Option<f64>,
+}
+
+impl NormalGen {
+    pub fn new(seed: u64) -> Self {
+        NormalGen { rng: Pcg32::new(seed), spare: None }
+    }
+
+    pub fn from_rng(rng: Pcg32) -> Self {
+        NormalGen { rng, spare: None }
+    }
+
+    /// One standard-normal sample.
+    pub fn next(&mut self) -> f64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        // Box-Muller on (0,1] uniforms (avoid ln(0)).
+        let u1 = 1.0 - self.rng.next_f64();
+        let u2 = self.rng.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let th = 2.0 * std::f64::consts::PI * u2;
+        self.spare = Some(r * th.sin());
+        r * th.cos()
+    }
+
+    /// Fill a f32 buffer with N(0,1) samples.
+    pub fn fill_f32(&mut self, out: &mut [f32]) {
+        for x in out {
+            *x = self.next() as f32;
+        }
+    }
+
+    /// Allocate a standard-normal f32 vector.
+    pub fn vec_f32(&mut self, n: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        self.fill_f32(&mut v);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pinned_cross_language_vectors() {
+        // Must match python/tests/test_pcg.py (compile/pcg.py mirrors
+        // this generator for the golden-vector scheme).
+        let mut r = Pcg32::new(7);
+        assert_eq!(
+            [r.next_u32(), r.next_u32(), r.next_u32(), r.next_u32()],
+            [3536637593, 1154887489, 2902756104, 1443040102]
+        );
+        let mut r = Pcg32::new(42);
+        assert_eq!(
+            [r.next_u32(), r.next_u32(), r.next_u32(), r.next_u32()],
+            [1898997482, 1014631766, 4096008554, 633901381]
+        );
+        let mut g = NormalGen::new(1);
+        let want = [
+            2.322744198748,
+            -0.446543482722,
+            0.586928137232,
+            0.618352916784,
+        ];
+        for w in want {
+            assert!((g.next() - w).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg32::new(7);
+        let mut b = Pcg32::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_differ() {
+        let mut a = Pcg32::new(1);
+        let mut b = Pcg32::new(2);
+        let same = (0..32).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Pcg32::new(99);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Pcg32::new(3);
+        let mut seen = [false; 7];
+        for _ in 0..500 {
+            seen[r.below(7) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut g = NormalGen::new(11);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = g.next();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::new(5);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(xs, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+}

@@ -1,0 +1,129 @@
+//! Cross-layer golden tests: replay python-computed references through
+//! the rust runtime + sampler and demand agreement.
+//!
+//! These are the strongest end-to-end correctness signals in the repo:
+//! they cover the HLO text round-trip, the PJRT execution, the
+//! cross-language PRNG, the noise schedule, and the rust-native DDIM
+//! update — all at once.
+
+use stadi::model::sampler;
+use stadi::model::schedule::Schedule;
+use stadi::runtime::{ExecService, Tensor};
+use stadi::util::rng::NormalGen;
+
+fn service() -> Option<ExecService> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(ExecService::spawn(dir).unwrap())
+}
+
+#[test]
+fn trajectory_golden_replays_bit_close() {
+    let Some(svc) = service() else { return };
+    let exec = svc.handle();
+    let model = exec.manifest().model.clone();
+    let schedule = Schedule::from_info(&exec.manifest().schedule);
+    let golden = exec.manifest().golden("trajectory.json").unwrap();
+
+    let seed = golden.get("seed").unwrap().as_i64().unwrap() as u64;
+    let grid = golden.get("grid").unwrap().usizes().unwrap();
+    assert_eq!(grid, schedule.ddim_grid(grid.len()));
+
+    // Inputs via the shared PCG stream: x then cond (aot.py order).
+    let mut gen = NormalGen::new(seed);
+    let n: usize = model.latent_shape().iter().product();
+    let mut x = Tensor::new(model.latent_shape(), gen.vec_f32(n)).unwrap();
+    let cond = gen.vec_f32(model.dim);
+
+    let mut kv = Tensor::zeros(&model.kv_shape());
+    let coefs = schedule.grid_coefficients(&grid);
+    let steps = golden.get("steps").unwrap().as_arr().unwrap().to_vec();
+    assert_eq!(steps.len(), grid.len());
+
+    for (k, step_g) in steps.iter().enumerate() {
+        let t = step_g.get("t").unwrap().as_usize().unwrap();
+        assert_eq!(t, grid[k]);
+        // Python recomputed the same coefficients.
+        let cx = step_g.get("coef_x").unwrap().as_f64().unwrap();
+        let ce = step_g.get("coef_eps").unwrap().as_f64().unwrap();
+        assert!((coefs[k].coef_x - cx).abs() < 1e-9, "coef_x step {k}");
+        assert!((coefs[k].coef_eps - ce).abs() < 1e-9, "coef_eps step {k}");
+
+        let out = exec
+            .denoise(model.latent_h, &x, &kv, 0, t as f64, &cond)
+            .unwrap();
+        // Full-image forward: fresh KV covers all tokens.
+        kv = Tensor::new(model.kv_shape(), out.kv_fresh.data.clone())
+            .unwrap();
+        sampler::ddim_update_rows(&mut x, &out.eps_patch, 0, coefs[k]);
+
+        let want8 = step_g.get("x_first8").unwrap().f32s().unwrap();
+        for (i, w) in want8.iter().enumerate() {
+            assert!(
+                (x.data[i] - w).abs() < 2e-3 * w.abs().max(1.0),
+                "step {k} x[{i}]: {} vs {w}",
+                x.data[i]
+            );
+        }
+        let want_sum = step_g.get("x_sum").unwrap().as_f64().unwrap();
+        assert!(
+            (x.sum() - want_sum).abs() < 2e-2 * want_sum.abs().max(1.0),
+            "step {k} sum: {} vs {want_sum}",
+            x.sum()
+        );
+    }
+}
+
+#[test]
+fn features_golden_matches() {
+    let Some(svc) = service() else { return };
+    let exec = svc.handle();
+    let model = exec.manifest().model.clone();
+    let golden = exec.manifest().golden("features.json").unwrap();
+    let seed = golden.get("seed").unwrap().as_i64().unwrap() as u64;
+    let mut gen = NormalGen::new(seed);
+    let n: usize = model.latent_shape().iter().product();
+    let x = Tensor::new(model.latent_shape(), gen.vec_f32(n)).unwrap();
+    let (f1, f2, f3) = exec.features(&x).unwrap();
+    for (name, got, key) in
+        [("f1", f1, "f1"), ("f2", f2, "f2"), ("f3", f3, "f3")]
+    {
+        let want = golden.get(key).unwrap().f32s().unwrap();
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() < 1e-4 * w.abs().max(1.0),
+                "{name}[{i}]: {g} vs {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn rust_native_ddim_matches_pallas_artifact() {
+    // The hot path uses the rust-native FMA; the AOT'd Pallas kernel
+    // must agree bit-close for arbitrary coefficients.
+    let Some(svc) = service() else { return };
+    let exec = svc.handle();
+    let model = exec.manifest().model.clone();
+    let mut gen = NormalGen::new(99);
+    let n: usize = model.latent_shape().iter().product();
+    let x = Tensor::new(model.latent_shape(), gen.vec_f32(n)).unwrap();
+    let eps = Tensor::new(model.latent_shape(), gen.vec_f32(n)).unwrap();
+    for (cx, ce) in [(0.99, -0.05), (0.5, 0.5), (1.0, 0.0), (0.1234, -0.876)]
+    {
+        let art = exec.ddim_artifact(&x, &eps, cx, ce).unwrap();
+        let native = sampler::ddim_update(
+            &x,
+            &eps,
+            stadi::model::schedule::DdimCoef { coef_x: cx, coef_eps: ce },
+        );
+        assert_eq!(art.shape, native.shape);
+        let d = art.max_abs_diff(&native);
+        assert!(d < 1e-5, "ddim mismatch {d} at ({cx},{ce})");
+    }
+}
