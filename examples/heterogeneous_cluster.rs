@@ -8,7 +8,7 @@
 
 use stadi::baselines::{patch_parallel, tensor_parallel};
 use stadi::config::{DeviceConfig, EngineConfig};
-use stadi::coordinator::Engine;
+use stadi::coordinator::EngineCore;
 use stadi::util::benchkit::Table;
 
 fn main() -> stadi::Result<()> {
@@ -24,37 +24,39 @@ fn main() -> stadi::Result<()> {
         DeviceConfig::new("overloaded", 1.0, 0.85),
     ];
     cfg.stadi.m_base = 40;
-    let mut engine = Engine::new(cfg)?;
+    let core = EngineCore::new(cfg)?;
     // Calibrate per-step costs from real PJRT timings so simulated
-    // latencies are grounded.
-    let cost = engine.calibrate(2)?;
+    // latencies are grounded (swaps the shared cluster in place).
+    let cost = core.calibrate(2)?;
     println!(
         "calibrated: fixed={:.2}ms per_row={:.3}ms\n",
         cost.fixed_s * 1e3,
         cost.per_row_s * 1e3
     );
 
-    let plan = engine.plan()?;
-    print!("{}", plan.describe());
+    // A session pins the plan + cluster snapshot for one request.
+    let session = core.session()?;
+    print!("{}", session.plan().describe());
     println!();
 
     // Run a real request through the plan.
-    let gen = engine.generate_seeded(7)?;
+    let gen = session.execute_seeded(7)?;
 
     // Compare scheduling policies on this cluster (simulated latency).
-    let model = engine.exec().manifest().model.clone();
+    let model = core.exec().manifest().model.clone();
+    let cluster = core.cluster();
     let pp = patch_parallel::plan(
-        engine.schedule(),
-        engine.cluster().len(),
-        &engine.config().stadi,
+        core.schedule(),
+        cluster.len(),
+        &core.config().stadi,
         model.latent_h,
         model.row_granularity,
     )?;
-    let t_pp = engine.simulate_latency(&pp)?;
+    let t_pp = core.simulate_latency(&pp)?;
     let t_tp = tensor_parallel::latency(
-        engine.config().stadi.m_base,
-        engine.cluster(),
-        &engine.config().comm,
+        core.config().stadi.m_base,
+        &cluster,
+        &core.config().comm,
         &model,
     );
 

@@ -10,7 +10,7 @@
 
 use stadi::baselines::origin;
 use stadi::config::EngineConfig;
-use stadi::coordinator::{dataflow, Engine};
+use stadi::coordinator::{dataflow, EngineCore};
 use stadi::metrics::psnr::psnr;
 use stadi::model::latents::{seeded_cond, seeded_noise};
 
@@ -20,15 +20,17 @@ fn main() -> stadi::Result<()> {
     let mut cfg = EngineConfig::two_gpu_default("artifacts", &[0.0, 0.4]);
     // Keep the example fast: 20 steps instead of the paper's 100.
     cfg.stadi.m_base = 20;
-    let mut engine = Engine::new(cfg)?;
+    // The core is the shared half of the engine (planner, profiler,
+    // cluster); per-request execution happens in sessions it opens.
+    let core = EngineCore::new(cfg)?;
 
     // The plan shows what STADI decided: fewer steps and/or a smaller
     // patch for the occupied GPU.
-    let plan = engine.plan()?;
-    print!("{}", plan.describe());
+    let session = core.session()?;
+    print!("{}", session.plan().describe());
 
     let seed = 1234u64;
-    let gen = engine.generate_seeded(seed)?;
+    let gen = session.execute_seeded(seed)?;
     println!(
         "generated {}x{}x{} latent; simulated cluster latency {:.3}s \
          (utilization {:.0}%)",
@@ -40,17 +42,17 @@ fn main() -> stadi::Result<()> {
     );
 
     // How close is the distributed result to non-distributed Origin?
-    let model = engine.exec().manifest().model.clone();
+    let model = core.exec().manifest().model.clone();
     let origin_plan = origin::plan(
-        engine.schedule(),
-        &engine.config().stadi,
+        core.schedule(),
+        &core.config().stadi,
         model.latent_h,
         model.row_granularity,
     )?;
     let noise = seeded_noise(&model, seed);
     let cond = seeded_cond(&model, seed);
     let origin_out =
-        dataflow::execute(engine.exec(), &origin_plan, &noise, &cond)?;
+        dataflow::execute(core.exec(), &origin_plan, &noise, &cond)?;
     println!(
         "PSNR vs Origin: {:.2} dB (max|diff| {:.4})",
         psnr(&gen.latent, &origin_out.latent),

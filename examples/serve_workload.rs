@@ -1,21 +1,22 @@
-//! Serving workload: start the TCP front-end, drive it with a client
-//! workload, and report latency/throughput — the end-to-end serving
-//! driver recorded in EXPERIMENTS.md (real model, real sockets, real
-//! batched request stream; python nowhere on the path).
+//! Serving workload: start the concurrent TCP front-end, drive it with
+//! sequential and then concurrent client workloads, and report
+//! latency/throughput — the end-to-end serving driver recorded in
+//! EXPERIMENTS.md (real model, real sockets, real batched request
+//! stream; python nowhere on the path).
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve_workload
+//! make artifacts && cargo run --release --features xla-backend \
+//!     --example serve_workload
 //! ```
 
 use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::thread;
-use std::time::Instant;
 
 use stadi::config::EngineConfig;
-use stadi::coordinator::Engine;
-use stadi::metrics::latency::LatencyTracker;
-use stadi::serve::server::{serve, Client};
-use stadi::util::json;
+use stadi::coordinator::EngineCore;
+use stadi::serve::server::{drive_workload, serve, ServeOptions};
 
 const N_REQUESTS: usize = 8;
 
@@ -23,42 +24,55 @@ fn main() -> stadi::Result<()> {
     let mut cfg = EngineConfig::two_gpu_default("artifacts", &[0.0, 0.3]);
     cfg.stadi.m_base = 12; // keep the demo snappy
     cfg.stadi.m_warmup = 2;
-    let mut engine = Engine::new(cfg)?;
+    let core = EngineCore::new(cfg)?;
 
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?.to_string();
     println!("serving on {addr}");
 
-    let server = thread::spawn(move || {
-        serve(&mut engine, listener, 16, N_REQUESTS, None)
-    });
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let stop = Arc::clone(&stop);
+        thread::spawn(move || {
+            serve(
+                core,
+                listener,
+                ServeOptions {
+                    queue_capacity: 16,
+                    workers: 2,
+                    max_requests: 0,
+                    ..ServeOptions::default()
+                },
+                Some(stop),
+            )
+        })
+    };
 
-    // Client side: sequential requests with per-request latency.
-    let mut client = Client::connect(&addr)?;
-    let mut tracker = LatencyTracker::new();
-    let t0 = Instant::now();
-    for i in 0..N_REQUESTS {
-        let t = Instant::now();
-        let line = client.request(&format!("req-{i}"), 1000 + i as u64)?;
-        tracker.record(t.elapsed().as_secs_f64());
-        let v = json::parse(&line)?;
-        println!(
-            "  {} ok={} wall={:.3}s sim_cluster={:.3}s latent_sum={:.2}",
-            v.get("id")?.as_str()?,
-            v.get("ok")?.as_bool()?,
-            v.get("latency_s")?.as_f64()?,
-            v.get("sim_latency_s")?.as_f64()?,
-            v.get("latent_sum")?.as_f64()?,
-        );
-    }
-    let wall = t0.elapsed().as_secs_f64();
-    drop(client);
-    server.join().expect("server thread")?;
-
+    // Phase 1: one connection, sequential requests.
+    let (wall_seq, mean_seq) = drive_workload(&addr, 1, N_REQUESTS, 1000)?;
     println!(
-        "\nworkload done: {} | throughput {:.2} req/s",
-        tracker.summary(),
-        tracker.throughput(wall)
+        "sequential: {N_REQUESTS} reqs in {wall_seq:.2}s \
+         (mean latency {mean_seq:.3}s, {:.2} req/s)",
+        N_REQUESTS as f64 / wall_seq
     );
+
+    // Phase 2: two connections in flight at once — the worker pool
+    // overlaps their sampler/halo/serialization work around the
+    // single PJRT service thread.
+    let (wall_conc, mean_conc) =
+        drive_workload(&addr, 2, N_REQUESTS / 2, 2000)?;
+    println!(
+        "2 in flight: {N_REQUESTS} reqs in {wall_conc:.2}s \
+         (mean latency {mean_conc:.3}s, {:.2} req/s)",
+        N_REQUESTS as f64 / wall_conc
+    );
+    println!(
+        "concurrency speedup: {:.2}x",
+        wall_seq / wall_conc
+    );
+
+    stop.store(true, Ordering::SeqCst);
+    let handled = server.join().expect("server thread")?;
+    println!("\nworkload done: server handled {handled} requests");
     Ok(())
 }

@@ -26,8 +26,8 @@ use stadi::util::benchkit::Table;
 use stadi::util::plot::{render, Series};
 
 fn main() -> stadi::Result<()> {
-    if !expt::artifacts_available() {
-        eprintln!("artifacts not built — run `make artifacts`");
+    if let Some(reason) = expt::skip_reason() {
+        eprintln!("skipping: {reason}");
         return Ok(());
     }
     let svc = ExecService::spawn(expt::artifacts_dir())?;

@@ -27,8 +27,8 @@ fn occupancies(n: usize) -> Vec<f64> {
 }
 
 fn main() -> stadi::Result<()> {
-    if !expt::artifacts_available() {
-        eprintln!("artifacts not built — run `make artifacts`");
+    if let Some(reason) = expt::skip_reason() {
+        eprintln!("skipping: {reason}");
         return Ok(());
     }
     let svc = ExecService::spawn(expt::artifacts_dir())?;

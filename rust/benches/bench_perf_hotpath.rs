@@ -23,8 +23,8 @@ use stadi::util::benchkit::{self, banner, fmt_secs, Table};
 use stadi::util::rng::NormalGen;
 
 fn main() -> stadi::Result<()> {
-    if !expt::artifacts_available() {
-        eprintln!("artifacts not built — run `make artifacts`");
+    if let Some(reason) = expt::skip_reason() {
+        eprintln!("skipping: {reason}");
         return Ok(());
     }
     let svc = ExecService::spawn(expt::artifacts_dir())?;

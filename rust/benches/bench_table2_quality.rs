@@ -31,8 +31,8 @@ const N_IMAGES: usize = 10;
 const GT_SEED_BASE: u64 = 5000;
 
 fn main() -> stadi::Result<()> {
-    if !expt::artifacts_available() {
-        eprintln!("artifacts not built — run `make artifacts`");
+    if let Some(reason) = expt::skip_reason() {
+        eprintln!("skipping: {reason}");
         return Ok(());
     }
     let svc = ExecService::spawn(expt::artifacts_dir())?;

@@ -19,8 +19,8 @@ use stadi::util::benchkit::Table;
 use stadi::util::stats;
 
 fn main() -> stadi::Result<()> {
-    if !expt::artifacts_available() {
-        eprintln!("artifacts not built — run `make artifacts`");
+    if let Some(reason) = expt::skip_reason() {
+        eprintln!("skipping: {reason}");
         return Ok(());
     }
     let svc = ExecService::spawn(expt::artifacts_dir())?;

@@ -6,12 +6,19 @@
 //! * `threaded` — real worker threads over the collective bus
 //!   (serving runtime; bit-equal numerics to dataflow);
 //! * `timeline` — virtual-clock latency simulation (latency figures);
-//! * `engine` — the public API tying it all together.
+//! * `core` — the shared planner core (`EngineCore`): artifacts,
+//!   cluster, cost model, profiler, schedule, behind fine-grained
+//!   locks;
+//! * `session` — per-request execution (`Session`): snapshots a plan
+//!   from the core, executes it, feeds timings back.
 
 pub mod buffers;
+pub mod core;
 pub mod dataflow;
-pub mod engine;
+pub mod session;
 pub mod threaded;
 pub mod timeline;
 
-pub use engine::{Engine, Generation, Request};
+// `self::` disambiguates from the built-in `core` crate (E0659).
+pub use self::core::{EngineCore, Generation, Request};
+pub use self::session::Session;

@@ -1,0 +1,109 @@
+//! Per-request execution sessions.
+//!
+//! A `Session` is the unit of request execution: it holds an `Arc` to
+//! the shared [`EngineCore`], a pinned [`Plan`] and a cluster
+//! snapshot, and nothing else — so any number of sessions can execute
+//! concurrently. All PJRT work funnels through the core's single
+//! execution-service thread (the physical substrate), but everything
+//! around it — sampler updates, halo scatter/gather, serialization —
+//! runs on the session's own thread, which is exactly the overlap a
+//! concurrent serving front-end exploits.
+//!
+//! Locking rules (see rust/DESIGN_SERVE.md): a session takes no core
+//! lock while executing; it touches the shared profiler only in
+//! `execute`'s epilogue, via [`EngineCore::record_step`].
+
+use std::sync::Arc;
+
+use crate::config::ExecMode;
+use crate::coordinator::core::{EngineCore, Generation, Request};
+use crate::coordinator::{dataflow, threaded, timeline};
+use crate::device::SimGpu;
+use crate::error::Result;
+use crate::model::latents::{seeded_cond, seeded_noise};
+use crate::sched::plan::Plan;
+
+/// A lightweight execution session: plan snapshot + cluster snapshot.
+pub struct Session {
+    core: Arc<EngineCore>,
+    plan: Plan,
+    cluster: Vec<SimGpu>,
+}
+
+impl Session {
+    pub(crate) fn new(
+        core: Arc<EngineCore>,
+        plan: Plan,
+        cluster: Vec<SimGpu>,
+    ) -> Self {
+        Session { core, plan, cluster }
+    }
+
+    /// The plan this session executes (pinned at session creation).
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// Execute one request through the pinned plan: Algorithm 1 via
+    /// the dataflow or threaded executor (per config), then feed
+    /// measured per-step compute back into the shared profiler and
+    /// simulate the heterogeneous-cluster timeline.
+    pub fn execute(&self, req: &Request) -> Result<Generation> {
+        let exec = self.core.exec();
+        let model = exec.manifest().model.clone();
+        // Pre-compile every artifact the plan needs so compilation
+        // never lands inside measured step times (it would poison the
+        // profiler's effective-speed estimates — a freshly-compiling
+        // device would look 100x slower and get itself excluded).
+        let keys: Vec<String> = self
+            .plan
+            .included_devices()
+            .map(|d| format!("denoiser_h{}", d.rows.rows))
+            .collect();
+        exec.warm(&keys)?;
+        let noise = seeded_noise(&model, req.seed);
+        let cond = seeded_cond(&model, req.seed);
+        let out = match self.core.mode() {
+            ExecMode::Dataflow => {
+                dataflow::execute(exec, &self.plan, &noise, &cond)?
+            }
+            ExecMode::Threaded => threaded::execute(
+                exec,
+                &self.plan,
+                &self.cluster,
+                &noise,
+                &cond,
+                true,
+            )?,
+        };
+        // Feed measured per-step compute back into the shared profiler
+        // ("historical inference time profiles", paper §V) so
+        // concurrent requests keep refining effective speeds.
+        for d in self.plan.included_devices() {
+            if out.stats.steps_run[d.device] > 0 {
+                self.core.record_step(
+                    d.device,
+                    d.rows.rows * out.stats.steps_run[d.device],
+                    out.stats.compute_s[d.device],
+                );
+            }
+        }
+        let tl = timeline::simulate(
+            &self.plan,
+            &self.cluster,
+            &self.core.config().comm,
+            &model,
+        )?;
+        Ok(Generation {
+            latent: out.latent,
+            plan: self.plan.clone(),
+            stats: out.stats,
+            timeline: tl,
+        })
+    }
+
+    /// Execute from a bare seed.
+    pub fn execute_seeded(&self, seed: u64) -> Result<Generation> {
+        self.execute(&Request { seed })
+    }
+}

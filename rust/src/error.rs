@@ -14,6 +14,7 @@ pub type Result<T> = std::result::Result<T, Error>;
 #[derive(Debug)]
 pub enum Error {
     /// PJRT / XLA failures (compile, execute, literal conversion).
+    #[cfg(feature = "xla-backend")]
     Xla(xla::Error),
     /// Filesystem / socket errors.
     Io(std::io::Error),
@@ -29,6 +30,10 @@ pub enum Error {
     Comm(String),
     /// Serving protocol violations.
     Protocol(String),
+    /// Admission control: the router queue is full. Carries the queue
+    /// depth observed at rejection so the wire protocol can report it
+    /// as a structured field rather than leaking it into the message.
+    Busy { queue_depth: usize },
     /// Anything else.
     Other(String),
 }
@@ -36,6 +41,7 @@ pub enum Error {
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
+            #[cfg(feature = "xla-backend")]
             Error::Xla(e) => write!(f, "xla: {e}"),
             Error::Io(e) => write!(f, "io: {e}"),
             Error::Json { offset, msg } => {
@@ -46,6 +52,9 @@ impl fmt::Display for Error {
             Error::Sched(m) => write!(f, "sched: {m}"),
             Error::Comm(m) => write!(f, "comm: {m}"),
             Error::Protocol(m) => write!(f, "protocol: {m}"),
+            Error::Busy { queue_depth } => {
+                write!(f, "busy: queue full (depth {queue_depth})")
+            }
             Error::Other(m) => write!(f, "{m}"),
         }
     }
@@ -53,6 +62,7 @@ impl fmt::Display for Error {
 
 impl std::error::Error for Error {}
 
+#[cfg(feature = "xla-backend")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e)
@@ -82,6 +92,13 @@ mod tests {
         assert_eq!(e.to_string(), "sched: no eligible devices");
         let e = Error::Json { offset: 12, msg: "bad token".into() };
         assert!(e.to_string().contains("byte 12"));
+    }
+
+    #[test]
+    fn busy_carries_depth() {
+        let e = Error::Busy { queue_depth: 7 };
+        assert!(e.to_string().contains("depth 7"));
+        assert!(matches!(e, Error::Busy { queue_depth: 7 }));
     }
 
     #[test]

@@ -16,9 +16,27 @@ pub fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
-/// True when `make artifacts` has been run.
+/// True when `make artifacts` has been run *and* this build can
+/// execute them (benches early-return otherwise).
 pub fn artifacts_available() -> bool {
-    artifacts_dir().join("manifest.json").exists()
+    skip_reason().is_none()
+}
+
+/// Why a bench must skip, distinguishing the missing feature from
+/// missing artifacts (so nobody re-runs `make artifacts` forever when
+/// the real problem is the build flag). `None` = good to go.
+pub fn skip_reason() -> Option<&'static str> {
+    if !cfg!(feature = "xla-backend") {
+        return Some(
+            "built without the xla-backend feature — uncomment the \
+             `xla` dep in rust/Cargo.toml and build with \
+             `--features xla-backend`",
+        );
+    }
+    if !artifacts_dir().join("manifest.json").exists() {
+        return Some("artifacts not built — run `make artifacts`");
+    }
+    None
 }
 
 /// Load the calibrated cost model, calibrating once and caching to

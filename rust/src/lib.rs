@@ -14,14 +14,17 @@
 //!   device simulation, serving front-end, baselines, metrics and the
 //!   benches that regenerate every table/figure of the evaluation.
 //!
-//! Quickstart (after `make artifacts`):
+//! Quickstart (after `make artifacts`, built with `--features
+//! xla-backend`):
 //! ```no_run
 //! use stadi::config::EngineConfig;
-//! use stadi::coordinator::engine::Engine;
+//! use stadi::coordinator::EngineCore;
 //!
 //! let cfg = EngineConfig::two_gpu_default("artifacts", &[0.0, 0.4]);
-//! let mut engine = Engine::new(cfg).unwrap();
-//! let out = engine.generate_seeded(1234).unwrap();
+//! let core = EngineCore::new(cfg).unwrap();
+//! // One-shot: plan + execute. For serving, open one `Session` per
+//! // in-flight request — sessions share the core and run concurrently.
+//! let out = core.generate_seeded(1234).unwrap();
 //! println!("latent sum = {}", out.latent.data.iter().sum::<f32>());
 //! ```
 

@@ -12,8 +12,9 @@ use std::process::ExitCode;
 
 use stadi::baselines::{patch_parallel, tensor_parallel};
 use stadi::config::{EngineConfig, ExecMode};
-use stadi::coordinator::Engine;
+use stadi::coordinator::EngineCore;
 use stadi::error::Result;
+use stadi::serve::server::ServeOptions;
 use stadi::util::cli::Command;
 use stadi::util::json;
 
@@ -89,9 +90,9 @@ fn cmd_generate(args: impl Iterator<Item = String>) -> Result<()> {
         .switch("calibrate", "calibrate the cost model first");
     let p = cmd.parse(args)?;
     let cfg = build_config(&p)?;
-    let mut engine = Engine::new(cfg)?;
+    let core = EngineCore::new(cfg)?;
     if p.get_bool("calibrate") {
-        let c = engine.calibrate(3)?;
+        let c = core.calibrate(3)?;
         println!(
             "calibrated cost model: fixed={:.4}ms per_row={:.4}ms",
             c.fixed_s * 1e3,
@@ -100,7 +101,7 @@ fn cmd_generate(args: impl Iterator<Item = String>) -> Result<()> {
     }
     let seed: u64 = p.get_parsed("seed")?;
     let t0 = std::time::Instant::now();
-    let g = engine.generate_seeded(seed)?;
+    let g = core.generate_seeded(seed)?;
     let wall = t0.elapsed().as_secs_f64();
     print!("{}", g.plan.describe());
     println!(
@@ -125,10 +126,10 @@ fn cmd_plan(args: impl Iterator<Item = String>) -> Result<()> {
     let cmd = base_flags(Command::new("plan", "print the schedule plan"));
     let p = cmd.parse(args)?;
     let cfg = build_config(&p)?;
-    let engine = Engine::new(cfg)?;
-    let plan = engine.plan()?;
+    let core = EngineCore::new(cfg)?;
+    let plan = core.plan()?;
     print!("{}", plan.describe());
-    let tl = engine.simulate_latency(&plan)?;
+    let tl = core.simulate_latency(&plan)?;
     println!(
         "simulated latency: {:.3}s (utilization {:.1}%)",
         tl.total_s,
@@ -146,8 +147,8 @@ fn cmd_profile(args: impl Iterator<Item = String>) -> Result<()> {
     .flag("save", "write calibration JSON to this path", None);
     let p = cmd.parse(args)?;
     let cfg = build_config(&p)?;
-    let mut engine = Engine::new(cfg)?;
-    let cost = engine.calibrate(p.get_parsed("reps")?)?;
+    let core = EngineCore::new(cfg)?;
+    let cost = core.calibrate(p.get_parsed("reps")?)?;
     println!(
         "cost model: fixed={:.4}ms per_row={:.4}ms",
         cost.fixed_s * 1e3,
@@ -164,16 +165,21 @@ fn cmd_serve(args: impl Iterator<Item = String>) -> Result<()> {
     let cmd = base_flags(Command::new("serve", "TCP JSON-lines server"))
         .flag("addr", "listen address", Some("127.0.0.1:7878"))
         .flag("queue", "router queue capacity", Some("64"))
+        .flag("workers", "concurrent in-flight requests", Some("2"))
         .flag("max-requests", "stop after N requests (0 = run forever)", Some("0"));
     let p = cmd.parse(args)?;
     let cfg = build_config(&p)?;
-    let mut engine = Engine::new(cfg)?;
+    let core = EngineCore::new(cfg)?;
     let listener = TcpListener::bind(p.get("addr").unwrap())?;
     stadi::serve::server::serve(
-        &mut engine,
+        core,
         listener,
-        p.get_parsed("queue")?,
-        p.get_parsed("max-requests")?,
+        ServeOptions {
+            queue_capacity: p.get_parsed("queue")?,
+            workers: p.get_parsed("workers")?,
+            max_requests: p.get_parsed("max-requests")?,
+            ..ServeOptions::default()
+        },
         None,
     )?;
     Ok(())
@@ -186,25 +192,26 @@ fn cmd_compare(args: impl Iterator<Item = String>) -> Result<()> {
     ));
     let p = cmd.parse(args)?;
     let cfg = build_config(&p)?;
-    let mut engine = Engine::new(cfg)?;
-    engine.calibrate(3)?;
-    let model = engine.exec().manifest().model.clone();
+    let core = EngineCore::new(cfg)?;
+    core.calibrate(3)?;
+    let model = core.exec().manifest().model.clone();
+    let cluster = core.cluster();
 
-    let stadi_plan = engine.plan()?;
-    let t_stadi = engine.simulate_latency(&stadi_plan)?;
+    let stadi_plan = core.plan()?;
+    let t_stadi = core.simulate_latency(&stadi_plan)?;
 
     let pp_plan = patch_parallel::plan(
-        engine.schedule(),
-        engine.cluster().len(),
-        &engine.config().stadi,
+        core.schedule(),
+        cluster.len(),
+        &core.config().stadi,
         model.latent_h,
         model.row_granularity,
     )?;
-    let t_pp = engine.simulate_latency(&pp_plan)?;
+    let t_pp = core.simulate_latency(&pp_plan)?;
     let t_tp = tensor_parallel::latency(
-        engine.config().stadi.m_base,
-        engine.cluster(),
-        &engine.config().comm,
+        core.config().stadi.m_base,
+        &cluster,
+        &core.config().comm,
         &model,
     );
 

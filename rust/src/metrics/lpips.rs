@@ -44,6 +44,10 @@ mod tests {
     use std::path::PathBuf;
 
     fn runtime() -> Option<ExecService> {
+        if !cfg!(feature = "xla-backend") {
+            eprintln!("skipping: built without xla-backend");
+            return None;
+        }
         let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !dir.join("manifest.json").exists() {
             eprintln!("skipping: artifacts not built");

@@ -6,12 +6,13 @@
 //! heterogeneity is imposed by the device layer (DESIGN.md §3), so a
 //! shared executable cache both matches reality (one binary per model
 //! variant) and avoids recompiling per device.
+//!
+//! The real PJRT path lives behind the `xla-backend` feature; the
+//! default build substitutes a stub whose constructor fails with a
+//! clear message, so the rest of the stack (planner, router, server,
+//! DES, benches' simulated paths) builds and tests on a bare
+//! toolchain with no registry access.
 
-use std::collections::BTreeMap;
-use std::sync::Mutex;
-
-use crate::error::{Error, Result};
-use crate::runtime::artifacts::{ArtifactInfo, Manifest};
 use crate::runtime::tensor::Tensor;
 
 /// Typed inputs for one denoiser step.
@@ -40,211 +41,320 @@ pub struct DenoiserOutputs {
     pub kv_fresh: Tensor,
 }
 
-/// A compiled artifact ready to execute.
-struct Compiled {
-    exe: xla::PjRtLoadedExecutable,
-    /// Retained for diagnostics (artifact identity in error paths).
-    #[allow(dead_code)]
-    info: ArtifactInfo,
-}
+/// Error text for builds without the `xla-backend` feature. Referenced
+/// by the stub runtime below and by `ExecService::spawn` (which checks
+/// the feature *before* the artifacts directory, so a stub build
+/// reports the actual problem instead of "artifacts not found").
+pub(crate) const NO_BACKEND: &str = "stadi was built without the \
+     `xla-backend` feature; real PJRT execution is unavailable. To \
+     enable it, uncomment the `xla` dependency in rust/Cargo.toml \
+     (kept commented so the default build resolves offline), then \
+     rebuild with `cargo build --features xla-backend`";
 
-/// PJRT CPU runtime with a compiled-executable cache.
-///
-/// Execution goes through `execute_b` with explicitly-managed device
-/// buffers: the literal-taking `execute` of xla 0.1.6 leaks the
-/// transient input device buffers it creates internally (~3 MB per
-/// denoiser step — enough to OOM a quality sweep), while
-/// `PjRtBuffer`'s Drop frees properly. This also lets us upload the
-/// 2.2 MB weight vector once and reuse the device buffer across every
-/// step (see `params_buffer`).
-pub struct Runtime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: Mutex<BTreeMap<String, std::sync::Arc<Compiled>>>,
-    /// Cached device buffer for the flat weights, keyed by the host
-    /// pointer + length of the slice it was uploaded from (the exec
-    /// service owns one stable params vec for the process lifetime).
-    params_buffer: Mutex<Option<(usize, usize, xla::PjRtBuffer)>>,
-}
+pub use backend::Runtime;
 
-impl Runtime {
-    pub fn new(manifest: Manifest) -> Result<Self> {
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime {
-            client,
-            manifest,
-            cache: Mutex::new(BTreeMap::new()),
-            params_buffer: Mutex::new(None),
-        })
+#[cfg(feature = "xla-backend")]
+mod backend {
+    use std::collections::BTreeMap;
+    use std::sync::Mutex;
+
+    use crate::error::{Error, Result};
+    use crate::runtime::artifacts::{ArtifactInfo, Manifest};
+    use crate::runtime::tensor::Tensor;
+
+    use super::{DenoiserInputs, DenoiserOutputs};
+
+    /// A compiled artifact ready to execute.
+    struct Compiled {
+        exe: xla::PjRtLoadedExecutable,
+        /// Retained for diagnostics (artifact identity in error paths).
+        #[allow(dead_code)]
+        info: ArtifactInfo,
     }
 
-    /// Host-to-device upload with proper ownership (freed on drop).
-    fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    /// PJRT CPU runtime with a compiled-executable cache.
+    ///
+    /// Execution goes through `execute_b` with explicitly-managed device
+    /// buffers: the literal-taking `execute` of xla 0.1.6 leaks the
+    /// transient input device buffers it creates internally (~3 MB per
+    /// denoiser step — enough to OOM a quality sweep), while
+    /// `PjRtBuffer`'s Drop frees properly. This also lets us upload the
+    /// 2.2 MB weight vector once and reuse the device buffer across every
+    /// step (see `params_buffer`).
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: Mutex<BTreeMap<String, std::sync::Arc<Compiled>>>,
+        /// Cached device buffer for the flat weights, keyed by the host
+        /// pointer + length of the slice it was uploaded from (the exec
+        /// service owns one stable params vec for the process lifetime).
+        params_buffer: Mutex<Option<(usize, usize, xla::PjRtBuffer)>>,
     }
 
-    fn upload_scalar_f32(&self, v: f32) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
-    }
-
-    fn upload_scalar_i32(&self, v: i32) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// Compile (or fetch cached) an artifact by key.
-    fn compiled(&self, key: &str) -> Result<std::sync::Arc<Compiled>> {
-        if let Some(c) = self.cache.lock().unwrap().get(key) {
-            return Ok(c.clone());
-        }
-        let info = self.manifest.artifact(key)?.clone();
-        crate::log_debug!("runtime", "compiling artifact {key}");
-        let proto = xla::HloModuleProto::from_text_file(
-            info.file.to_str().ok_or_else(|| Error::msg("bad path"))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        let arc = std::sync::Arc::new(Compiled { exe, info });
-        self.cache.lock().unwrap().insert(key.to_string(), arc.clone());
-        Ok(arc)
-    }
-
-    /// Pre-compile a set of artifacts (leader does this before serving
-    /// so compilation never lands on the request path).
-    pub fn warm(&self, keys: &[String]) -> Result<()> {
-        for k in keys {
-            self.compiled(k)?;
-        }
-        Ok(())
-    }
-
-    /// Number of artifacts currently compiled.
-    pub fn cache_len(&self) -> usize {
-        self.cache.lock().unwrap().len()
-    }
-
-    /// Execute a denoiser artifact for patch height `h`.
-    pub fn denoise(&self, h: usize, inp: &DenoiserInputs<'_>) -> Result<DenoiserOutputs> {
-        let key = format!("denoiser_h{h}");
-        let c = self.compiled(&key)?;
-        let m = &self.manifest.model;
-        // Shape checks against the manifest ABI.
-        if inp.x_patch.shape != vec![h, m.latent_w, m.latent_c] {
-            return Err(Error::Artifact(format!(
-                "x_patch shape {:?} != [{h}, {}, {}]",
-                inp.x_patch.shape, m.latent_w, m.latent_c
-            )));
-        }
-        if inp.kv_stale.shape != m.kv_shape() {
-            return Err(Error::Artifact(format!(
-                "kv_stale shape {:?} != {:?}",
-                inp.kv_stale.shape,
-                m.kv_shape()
-            )));
-        }
-        if inp.params.len() != m.param_count || inp.cond.len() != m.dim {
-            return Err(Error::Artifact("params/cond length mismatch".into()));
-        }
-        if inp.row_off % m.patch != 0 || inp.row_off + h > m.latent_h {
-            return Err(Error::Artifact(format!(
-                "bad row_off {} for h {h}",
-                inp.row_off
-            )));
+    impl Runtime {
+        pub fn new(manifest: Manifest) -> Result<Self> {
+            let client = xla::PjRtClient::cpu()?;
+            Ok(Runtime {
+                client,
+                manifest,
+                cache: Mutex::new(BTreeMap::new()),
+                params_buffer: Mutex::new(None),
+            })
         }
 
-        // Weights upload amortized across calls (same host slice).
-        let key = (inp.params.as_ptr() as usize, inp.params.len());
-        {
-            let mut pb = self.params_buffer.lock().unwrap();
-            let stale = match &*pb {
-                Some((p, l, _)) => (*p, *l) != key,
-                None => true,
-            };
-            if stale {
-                *pb = Some((
-                    key.0,
-                    key.1,
-                    self.upload(inp.params, &[inp.params.len()])?,
+        /// Host-to-device upload with proper ownership (freed on drop).
+        fn upload(
+            &self,
+            data: &[f32],
+            dims: &[usize],
+        ) -> Result<xla::PjRtBuffer> {
+            Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+        }
+
+        fn upload_scalar_f32(&self, v: f32) -> Result<xla::PjRtBuffer> {
+            Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
+        }
+
+        fn upload_scalar_i32(&self, v: i32) -> Result<xla::PjRtBuffer> {
+            Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// Compile (or fetch cached) an artifact by key.
+        fn compiled(&self, key: &str) -> Result<std::sync::Arc<Compiled>> {
+            if let Some(c) = self.cache.lock().unwrap().get(key) {
+                return Ok(c.clone());
+            }
+            let info = self.manifest.artifact(key)?.clone();
+            crate::log_debug!("runtime", "compiling artifact {key}");
+            let proto = xla::HloModuleProto::from_text_file(
+                info.file.to_str().ok_or_else(|| Error::msg("bad path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            let arc = std::sync::Arc::new(Compiled { exe, info });
+            self.cache.lock().unwrap().insert(key.to_string(), arc.clone());
+            Ok(arc)
+        }
+
+        /// Pre-compile a set of artifacts (leader does this before serving
+        /// so compilation never lands on the request path).
+        pub fn warm(&self, keys: &[String]) -> Result<()> {
+            for k in keys {
+                self.compiled(k)?;
+            }
+            Ok(())
+        }
+
+        /// Number of artifacts currently compiled.
+        pub fn cache_len(&self) -> usize {
+            self.cache.lock().unwrap().len()
+        }
+
+        /// Execute a denoiser artifact for patch height `h`.
+        pub fn denoise(
+            &self,
+            h: usize,
+            inp: &DenoiserInputs<'_>,
+        ) -> Result<DenoiserOutputs> {
+            let key = format!("denoiser_h{h}");
+            let c = self.compiled(&key)?;
+            let m = &self.manifest.model;
+            // Shape checks against the manifest ABI.
+            if inp.x_patch.shape != vec![h, m.latent_w, m.latent_c] {
+                return Err(Error::Artifact(format!(
+                    "x_patch shape {:?} != [{h}, {}, {}]",
+                    inp.x_patch.shape, m.latent_w, m.latent_c
+                )));
+            }
+            if inp.kv_stale.shape != m.kv_shape() {
+                return Err(Error::Artifact(format!(
+                    "kv_stale shape {:?} != {:?}",
+                    inp.kv_stale.shape,
+                    m.kv_shape()
+                )));
+            }
+            if inp.params.len() != m.param_count || inp.cond.len() != m.dim {
+                return Err(Error::Artifact(
+                    "params/cond length mismatch".into(),
                 ));
             }
+            if inp.row_off % m.patch != 0 || inp.row_off + h > m.latent_h {
+                return Err(Error::Artifact(format!(
+                    "bad row_off {} for h {h}",
+                    inp.row_off
+                )));
+            }
+
+            // Weights upload amortized across calls (same host slice).
+            let key = (inp.params.as_ptr() as usize, inp.params.len());
+            {
+                let mut pb = self.params_buffer.lock().unwrap();
+                let stale = match &*pb {
+                    Some((p, l, _)) => (*p, *l) != key,
+                    None => true,
+                };
+                if stale {
+                    *pb = Some((
+                        key.0,
+                        key.1,
+                        self.upload(inp.params, &[inp.params.len()])?,
+                    ));
+                }
+            }
+            let x_buf = self.upload(&inp.x_patch.data, &inp.x_patch.shape)?;
+            let kv_buf =
+                self.upload(&inp.kv_stale.data, &inp.kv_stale.shape)?;
+            let ro_buf = self.upload_scalar_i32(inp.row_off as i32)?;
+            let t_buf = self.upload_scalar_f32(inp.t as f32)?;
+            let cond_buf = self.upload(inp.cond, &[inp.cond.len()])?;
+
+            let pb = self.params_buffer.lock().unwrap();
+            let params_buf = &pb.as_ref().unwrap().2;
+            let result = c
+                .exe
+                .execute_b::<&xla::PjRtBuffer>(&[
+                    params_buf, &x_buf, &kv_buf, &ro_buf, &t_buf, &cond_buf,
+                ])?[0][0]
+                .to_literal_sync()?;
+            drop(pb);
+            let (eps_lit, kv_lit) = result.to_tuple2()?;
+
+            let t_own = m.tokens_for_rows(h);
+            Ok(DenoiserOutputs {
+                eps_patch: Tensor::from_literal(
+                    &eps_lit,
+                    vec![h, m.latent_w, m.latent_c],
+                )?,
+                kv_fresh: Tensor::from_literal(
+                    &kv_lit,
+                    vec![m.layers, t_own, 2 * m.dim],
+                )?,
+            })
         }
-        let x_buf = self.upload(&inp.x_patch.data, &inp.x_patch.shape)?;
-        let kv_buf = self.upload(&inp.kv_stale.data, &inp.kv_stale.shape)?;
-        let ro_buf = self.upload_scalar_i32(inp.row_off as i32)?;
-        let t_buf = self.upload_scalar_f32(inp.t as f32)?;
-        let cond_buf = self.upload(inp.cond, &[inp.cond.len()])?;
 
-        let pb = self.params_buffer.lock().unwrap();
-        let params_buf = &pb.as_ref().unwrap().2;
-        let result = c
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(&[
-                params_buf, &x_buf, &kv_buf, &ro_buf, &t_buf, &cond_buf,
-            ])?[0][0]
-            .to_literal_sync()?;
-        drop(pb);
-        let (eps_lit, kv_lit) = result.to_tuple2()?;
+        /// Execute the AOT'd DDIM update artifact (full latent).
+        /// The hot path uses the rust-native `model::sampler` instead; this
+        /// exists to cross-validate the two (see tests/integration).
+        pub fn ddim_update(
+            &self,
+            x: &Tensor,
+            eps: &Tensor,
+            coef_x: f64,
+            coef_eps: f64,
+        ) -> Result<Tensor> {
+            let c = self.compiled("ddim_update")?;
+            let bufs = [
+                self.upload(&x.data, &x.shape)?,
+                self.upload(&eps.data, &eps.shape)?,
+                self.upload_scalar_f32(coef_x as f32)?,
+                self.upload_scalar_f32(coef_eps as f32)?,
+            ];
+            let result = c
+                .exe
+                .execute_b::<&xla::PjRtBuffer>(&[
+                    &bufs[0], &bufs[1], &bufs[2], &bufs[3],
+                ])?[0][0]
+                .to_literal_sync()?;
+            let out = result.to_tuple1()?;
+            Tensor::from_literal(&out, x.shape.clone())
+        }
 
-        let t_own = m.tokens_for_rows(h);
-        Ok(DenoiserOutputs {
-            eps_patch: Tensor::from_literal(
-                &eps_lit,
-                vec![h, m.latent_w, m.latent_c],
-            )?,
-            kv_fresh: Tensor::from_literal(
-                &kv_lit,
-                vec![m.layers, t_own, 2 * m.dim],
-            )?,
-        })
-    }
-
-    /// Execute the AOT'd DDIM update artifact (full latent).
-    /// The hot path uses the rust-native `model::sampler` instead; this
-    /// exists to cross-validate the two (see tests/integration).
-    pub fn ddim_update(
-        &self,
-        x: &Tensor,
-        eps: &Tensor,
-        coef_x: f64,
-        coef_eps: f64,
-    ) -> Result<Tensor> {
-        let c = self.compiled("ddim_update")?;
-        let bufs = [
-            self.upload(&x.data, &x.shape)?,
-            self.upload(&eps.data, &eps.shape)?,
-            self.upload_scalar_f32(coef_x as f32)?,
-            self.upload_scalar_f32(coef_eps as f32)?,
-        ];
-        let result = c
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(&[
-                &bufs[0], &bufs[1], &bufs[2], &bufs[3],
-            ])?[0][0]
-            .to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Tensor::from_literal(&out, x.shape.clone())
-    }
-
-    /// Run the feature extractor (LPIPS/FID proxy).
-    /// Returns the per-stage pooled features (f1, f2, f3).
-    pub fn features(&self, x: &Tensor) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
-        let c = self.compiled("features")?;
-        let x_buf = self.upload(&x.data, &x.shape)?;
-        let result = c
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(&[&x_buf])?[0][0]
-            .to_literal_sync()?;
-        let (f1, f2, f3) = result.to_tuple3()?;
-        Ok((f1.to_vec::<f32>()?, f2.to_vec::<f32>()?, f3.to_vec::<f32>()?))
+        /// Run the feature extractor (LPIPS/FID proxy).
+        /// Returns the per-stage pooled features (f1, f2, f3).
+        pub fn features(
+            &self,
+            x: &Tensor,
+        ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+            let c = self.compiled("features")?;
+            let x_buf = self.upload(&x.data, &x.shape)?;
+            let result = c
+                .exe
+                .execute_b::<&xla::PjRtBuffer>(&[&x_buf])?[0][0]
+                .to_literal_sync()?;
+            let (f1, f2, f3) = result.to_tuple3()?;
+            Ok((
+                f1.to_vec::<f32>()?,
+                f2.to_vec::<f32>()?,
+                f3.to_vec::<f32>()?,
+            ))
+        }
     }
 }
 
-#[cfg(test)]
+#[cfg(not(feature = "xla-backend"))]
+mod backend {
+    //! Stub runtime for builds without the `xla-backend` feature.
+    //!
+    //! `Runtime::new` fails immediately (so `ExecService::spawn`
+    //! reports a clear error instead of failing on the first denoise),
+    //! and every execution method exists only to keep the callers
+    //! type-checking.
+
+    use crate::error::{Error, Result};
+    use crate::runtime::artifacts::Manifest;
+    use crate::runtime::tensor::Tensor;
+
+    use super::{DenoiserInputs, DenoiserOutputs, NO_BACKEND};
+
+    /// Placeholder with the same API surface as the real PJRT runtime.
+    pub struct Runtime {
+        manifest: Manifest,
+    }
+
+    impl Runtime {
+        pub fn new(_manifest: Manifest) -> Result<Self> {
+            // Fail early: constructing a runtime that cannot execute
+            // anything would only defer this error to the request path.
+            Err(Error::msg(NO_BACKEND))
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn warm(&self, _keys: &[String]) -> Result<()> {
+            Err(Error::msg(NO_BACKEND))
+        }
+
+        pub fn cache_len(&self) -> usize {
+            0
+        }
+
+        pub fn denoise(
+            &self,
+            _h: usize,
+            _inp: &DenoiserInputs<'_>,
+        ) -> Result<DenoiserOutputs> {
+            Err(Error::msg(NO_BACKEND))
+        }
+
+        pub fn ddim_update(
+            &self,
+            _x: &Tensor,
+            _eps: &Tensor,
+            _coef_x: f64,
+            _coef_eps: f64,
+        ) -> Result<Tensor> {
+            Err(Error::msg(NO_BACKEND))
+        }
+
+        pub fn features(
+            &self,
+            _x: &Tensor,
+        ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+            Err(Error::msg(NO_BACKEND))
+        }
+    }
+}
+
+#[cfg(all(test, feature = "xla-backend"))]
 mod tests {
     use super::*;
+    use crate::runtime::artifacts::Manifest;
     use crate::util::rng::NormalGen;
     use std::path::PathBuf;
 

@@ -70,6 +70,12 @@ impl ExecService {
     /// Spawn the service: loads the manifest eagerly (errors early),
     /// builds the PJRT client + params inside the thread.
     pub fn spawn(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        // Feature check before the artifacts check: on a stub build the
+        // missing backend is the real problem, whether or not
+        // `make artifacts` has been run.
+        if !cfg!(feature = "xla-backend") {
+            return Err(Error::msg(crate::runtime::client::NO_BACKEND));
+        }
         let manifest = Manifest::load(artifacts_dir)?;
         let (tx, rx) = mpsc::channel::<Msg>();
         let m2 = manifest.clone();
@@ -225,6 +231,10 @@ mod tests {
     use std::path::PathBuf;
 
     fn artifacts() -> Option<PathBuf> {
+        if !cfg!(feature = "xla-backend") {
+            eprintln!("skipping: built without xla-backend");
+            return None;
+        }
         let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if dir.join("manifest.json").exists() {
             Some(dir)

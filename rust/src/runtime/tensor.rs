@@ -40,12 +40,14 @@ impl Tensor {
     }
 
     /// Convert to an xla literal with this tensor's shape.
+    #[cfg(feature = "xla-backend")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
     }
 
     /// Build from an xla literal (f32 only).
+    #[cfg(feature = "xla-backend")]
     pub fn from_literal(lit: &xla::Literal, shape: Vec<usize>) -> Result<Self> {
         let data = lit.to_vec::<f32>()?;
         Tensor::new(shape, data)

@@ -1,6 +1,11 @@
-//! Serving front-end: JSON-lines protocol, bounded router, TCP server.
+//! Serving front-end: JSON-lines protocol, thread-safe bounded router,
+//! concurrent TCP server (accept loop + worker pool over per-request
+//! sessions), and the M/G/c queueing simulation.
+//!
+//! See rust/DESIGN_SERVE.md for the architecture diagram and locking
+//! rules.
 
 pub mod protocol;
 pub mod router;
-pub mod sim;
 pub mod server;
+pub mod sim;

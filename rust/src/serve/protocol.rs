@@ -67,12 +67,31 @@ pub fn response_line(
     json::to_string(&Value::Obj(o))
 }
 
-/// Serialize an error response.
+/// Serialize an error response. Every error line carries a stable
+/// machine-readable `code`; backpressure rejections get the dedicated
+/// `busy` shape (queue depth as its own field, never leaked into the
+/// message string).
 pub fn error_line(id: &str, err: &Error) -> String {
+    if let Error::Busy { queue_depth } = err {
+        return busy_line(id, *queue_depth);
+    }
     let mut o = Object::new();
     o.insert("id", Value::Str(id.to_string()));
     o.insert("ok", Value::Bool(false));
+    o.insert("code", Value::Str("error".into()));
     o.insert("error", Value::Str(err.to_string()));
+    json::to_string(&Value::Obj(o))
+}
+
+/// Serialize a backpressure rejection: `code: "busy"` plus the queue
+/// depth observed at rejection as a structured field.
+pub fn busy_line(id: &str, queue_depth: usize) -> String {
+    let mut o = Object::new();
+    o.insert("id", Value::Str(id.to_string()));
+    o.insert("ok", Value::Bool(false));
+    o.insert("code", Value::Str("busy".into()));
+    o.insert("error", Value::Str("queue full, retry later".into()));
+    o.insert("queue_depth", Value::Num(queue_depth as f64));
     json::to_string(&Value::Obj(o))
 }
 
@@ -99,6 +118,29 @@ mod tests {
         let line = error_line("x", &Error::msg("boom"));
         let v = json::parse(&line).unwrap();
         assert!(!v.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(v.get("code").unwrap().as_str().unwrap(), "error");
         assert!(v.get("error").unwrap().as_str().unwrap().contains("boom"));
+    }
+
+    #[test]
+    fn busy_line_is_structured() {
+        // Both the direct constructor and the Error::Busy route must
+        // produce code=busy with the depth as a separate field — and
+        // must NOT serialize internal state into the message.
+        for line in [
+            busy_line("r1", 5),
+            error_line("r1", &Error::Busy { queue_depth: 5 }),
+        ] {
+            let v = json::parse(&line).unwrap();
+            assert!(!v.get("ok").unwrap().as_bool().unwrap());
+            assert_eq!(v.get("code").unwrap().as_str().unwrap(), "busy");
+            assert_eq!(v.get("queue_depth").unwrap().as_usize().unwrap(), 5);
+            assert!(!v
+                .get("error")
+                .unwrap()
+                .as_str()
+                .unwrap()
+                .contains('5'));
+        }
     }
 }

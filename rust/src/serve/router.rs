@@ -1,15 +1,20 @@
-//! Request router: bounded FIFO queue with backpressure + per-request
-//! metrics, decoupling protocol handling from the engine.
+//! Request router: a thread-safe bounded FIFO queue with backpressure
+//! and per-outcome latency metrics, decoupling admission control from
+//! execution.
 //!
-//! The engine executes one request at a time (the whole cluster
-//! cooperates on each image — the paper targets single-request
-//! latency, §II-C), so the router's job is admission control and
-//! ordering: reject when the queue is full (backpressure), serve in
-//! arrival order, and keep latency statistics per outcome.
+//! Connection handlers `submit` from their own threads; the worker
+//! pool blocks in `pop` until work (or shutdown) arrives. Rejection is
+//! a structured [`Error::Busy`] carrying the observed queue depth —
+//! the wire protocol reports it as a `busy` code plus a `queue_depth`
+//! field instead of leaking internal state into the message string.
+//!
+//! The router is generic over the queued payload so the serving layer
+//! can enqueue jobs bundled with their reply route while unit tests
+//! use bare [`Job`]s (the default payload type).
 
 use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
 
-use crate::coordinator::{Engine, Generation, Request};
 use crate::error::{Error, Result};
 use crate::metrics::latency::LatencyTracker;
 
@@ -31,10 +36,9 @@ pub struct RouterStats {
     pub latency_summary: String,
 }
 
-/// FIFO router with a bounded queue.
-pub struct Router {
-    queue: VecDeque<Job>,
-    capacity: usize,
+struct Inner<T> {
+    queue: VecDeque<T>,
+    closed: bool,
     admitted: u64,
     rejected: u64,
     completed: u64,
@@ -42,107 +46,236 @@ pub struct Router {
     latency: LatencyTracker,
 }
 
-impl Router {
+/// Thread-safe FIFO router with a bounded queue.
+pub struct Router<T = Job> {
+    capacity: usize,
+    inner: Mutex<Inner<T>>,
+    /// Signalled on submit (work available) and close (shutdown).
+    available: Condvar,
+}
+
+impl<T> Router<T> {
     pub fn new(capacity: usize) -> Self {
         Router {
-            queue: VecDeque::new(),
             capacity: capacity.max(1),
-            admitted: 0,
-            rejected: 0,
-            completed: 0,
-            failed: 0,
-            latency: LatencyTracker::new(),
+            inner: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                closed: false,
+                admitted: 0,
+                rejected: 0,
+                completed: 0,
+                failed: 0,
+                latency: LatencyTracker::new(),
+            }),
+            available: Condvar::new(),
         }
     }
 
-    /// Admit a job, or reject with backpressure when full.
-    pub fn submit(&mut self, job: Job) -> Result<()> {
-        if self.queue.len() >= self.capacity {
-            self.rejected += 1;
-            return Err(Error::Protocol(format!(
-                "queue full ({} jobs), request {} rejected",
-                self.queue.len(),
-                job.id
-            )));
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Admit an item, or reject with backpressure when full / closed.
+    pub fn submit(&self, item: T) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            g.rejected += 1;
+            return Err(Error::Protocol("router is shut down".into()));
         }
-        self.admitted += 1;
-        self.queue.push_back(job);
+        if g.queue.len() >= self.capacity {
+            g.rejected += 1;
+            return Err(Error::Busy { queue_depth: g.queue.len() });
+        }
+        g.admitted += 1;
+        g.queue.push_back(item);
+        self.available.notify_one();
         Ok(())
     }
 
-    pub fn queue_len(&self) -> usize {
-        self.queue.len()
-    }
-
-    /// Pop and execute the next job on the engine.
-    /// Returns None when idle.
-    pub fn serve_next(
-        &mut self,
-        engine: &mut Engine,
-    ) -> Option<(Job, Result<(Generation, f64)>)> {
-        let job = self.queue.pop_front()?;
-        let t0 = std::time::Instant::now();
-        let res = engine.generate(&Request { seed: job.seed });
-        let wall = t0.elapsed().as_secs_f64();
-        let out = match res {
-            Ok(g) => {
-                self.completed += 1;
-                self.latency.record(wall);
-                Ok((g, wall))
+    /// Block until an item is available (FIFO) or the router closes.
+    /// Returns `None` only after `close()`.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(x) = g.queue.pop_front() {
+                return Some(x);
             }
-            Err(e) => {
-                self.failed += 1;
-                Err(e)
+            if g.closed {
+                return None;
             }
-        };
-        Some((job, out))
-    }
-
-    /// Drain the whole queue.
-    pub fn serve_all(
-        &mut self,
-        engine: &mut Engine,
-    ) -> Vec<(Job, Result<(Generation, f64)>)> {
-        let mut out = Vec::new();
-        while let Some(r) = self.serve_next(engine) {
-            out.push(r);
+            g = self.available.wait(g).unwrap();
         }
-        out
+    }
+
+    /// Non-blocking pop (tests / drain loops).
+    pub fn try_pop(&self) -> Option<T> {
+        self.inner.lock().unwrap().queue.pop_front()
+    }
+
+    /// Close the router: wake every blocked `pop`, reject future
+    /// submits, and hand back the still-queued items so the caller can
+    /// answer their submitters (the server sends shutdown error lines
+    /// rather than leaving clients waiting on a response that will
+    /// never come).
+    pub fn drain_close(&self) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        let drained: Vec<T> = g.queue.drain(..).collect();
+        self.available.notify_all();
+        drained
+    }
+
+    /// Close and discard queued items; returns how many were dropped.
+    pub fn close(&self) -> usize {
+        self.drain_close().len()
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    /// Record the outcome of one executed item (workers call this).
+    pub fn record_outcome(&self, ok: bool, latency_s: f64) {
+        let mut g = self.inner.lock().unwrap();
+        if ok {
+            g.completed += 1;
+            g.latency.record(latency_s);
+        } else {
+            g.failed += 1;
+        }
     }
 
     pub fn stats(&self) -> RouterStats {
+        let g = self.inner.lock().unwrap();
         RouterStats {
-            admitted: self.admitted,
-            rejected: self.rejected,
-            completed: self.completed,
-            failed: self.failed,
-            queue_len: self.queue.len(),
-            latency_summary: self.latency.summary(),
+            admitted: g.admitted,
+            rejected: g.rejected,
+            completed: g.completed,
+            failed: g.failed,
+            queue_len: g.queue.len(),
+            latency_summary: g.latency.summary(),
         }
     }
 
     pub fn mean_latency_s(&self) -> f64 {
-        self.latency.mean()
+        self.inner.lock().unwrap().latency.mean()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
 
     #[test]
     fn fifo_order_and_backpressure() {
-        let mut r = Router::new(2);
+        let r: Router<Job> = Router::new(2);
         r.submit(Job { id: "a".into(), seed: 1 }).unwrap();
         r.submit(Job { id: "b".into(), seed: 2 }).unwrap();
         let err = r.submit(Job { id: "c".into(), seed: 3 }).unwrap_err();
-        assert!(err.to_string().contains("rejected"));
+        match err {
+            Error::Busy { queue_depth } => assert_eq!(queue_depth, 2),
+            other => panic!("expected Busy, got {other}"),
+        }
         assert_eq!(r.queue_len(), 2);
         let s = r.stats();
         assert_eq!(s.admitted, 2);
         assert_eq!(s.rejected, 1);
         // FIFO: front is "a".
-        assert_eq!(r.queue.front().unwrap().id, "a");
+        assert_eq!(r.pop().unwrap().id, "a");
+        assert_eq!(r.pop().unwrap().id, "b");
+    }
+
+    #[test]
+    fn close_wakes_blocked_pop_and_discards_queue() {
+        let r: Arc<Router<Job>> = Arc::new(Router::new(4));
+        let waiter = {
+            let r = Arc::clone(&r);
+            std::thread::spawn(move || r.pop())
+        };
+        r.submit(Job { id: "x".into(), seed: 1 }).unwrap();
+        // `pop` blocks until work or close, so the waiter is
+        // guaranteed to drain the item eventually; spin (no timing
+        // assumptions) until it has.
+        while r.queue_len() > 0 {
+            std::thread::yield_now();
+        }
+        assert!(waiter.join().unwrap().is_some());
+        // A second waiter blocks on the now-empty queue: close() must
+        // wake it (no item will ever arrive) and make it return None.
+        let blocked = {
+            let r = Arc::clone(&r);
+            std::thread::spawn(move || r.pop())
+        };
+        // Best-effort pause so the waiter actually blocks in `wait`
+        // (the assertion holds either way: pop on a closed empty
+        // router returns None immediately).
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert_eq!(r.close(), 0, "queue already drained");
+        assert!(blocked.join().unwrap().is_none());
+        // After close: pops return None, submits are rejected.
+        assert!(r.is_closed());
+        assert!(r.pop().is_none());
+        assert!(r.submit(Job { id: "y".into(), seed: 2 }).is_err());
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_account_exactly() {
+        let r: Arc<Router<u64>> = Arc::new(Router::new(8));
+        let n_producers = 4;
+        let per_producer = 50u64;
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    let mut got = 0u64;
+                    while r.pop().is_some() {
+                        got += 1;
+                    }
+                    got
+                })
+            })
+            .collect();
+        let producers: Vec<_> = (0..n_producers)
+            .map(|p| {
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    let mut accepted = 0u64;
+                    for i in 0..per_producer {
+                        loop {
+                            match r.submit(p * 1000 + i) {
+                                Ok(()) => break,
+                                Err(Error::Busy { .. }) => {
+                                    std::thread::yield_now()
+                                }
+                                Err(_) => return accepted,
+                            }
+                        }
+                        accepted += 1;
+                    }
+                    accepted
+                })
+            })
+            .collect();
+        let sent: u64 =
+            producers.into_iter().map(|h| h.join().unwrap()).sum();
+        // All producers retried until accepted.
+        assert_eq!(sent, n_producers * per_producer);
+        // Let consumers drain before closing — close() discards
+        // whatever is still queued.
+        while r.queue_len() > 0 {
+            std::thread::yield_now();
+        }
+        r.close();
+        let got: u64 = consumers.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(got, sent);
+        let s = r.stats();
+        assert_eq!(s.admitted, sent);
+        assert_eq!(s.queue_len, 0);
     }
 
     #[test]
@@ -157,18 +290,15 @@ mod tests {
                     .collect::<Vec<usize>>()
             },
             |ops| {
-                // op 0 = submit, op 1 = pop (without engine).
-                let mut r = Router::new(4);
+                // op 0 = submit, op 1 = pop.
+                let r: Router<u64> = Router::new(4);
                 let mut next = 0u64;
                 for &op in ops {
                     if op == 0 {
                         next += 1;
-                        let _ = r.submit(Job {
-                            id: format!("j{next}"),
-                            seed: next,
-                        });
+                        let _ = r.submit(next);
                     } else {
-                        r.queue.pop_front();
+                        r.try_pop();
                     }
                     ensure(r.queue_len() <= 4, "capacity exceeded")?;
                 }

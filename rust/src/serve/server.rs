@@ -1,50 +1,254 @@
-//! TCP JSON-lines server: the deployable front-end.
+//! TCP JSON-lines server: the deployable front-end, truly concurrent.
 //!
-//! `stadi serve --addr 127.0.0.1:7878` accepts connections, reads one
-//! request per line, routes through the bounded `Router`, executes on
-//! the engine, and writes one response line per request. Connections
-//! are handled sequentially per the single-request-at-a-time engine
-//! model (the cluster cooperates on each image); concurrency control
-//! is the router's bounded queue.
+//! `stadi serve --addr 127.0.0.1:7878 --workers 4` runs three kinds of
+//! threads around the thread-safe bounded [`Router`]:
+//!
+//! * the **accept loop** (caller's thread) — nonblocking listener
+//!   polled every few ms so a set `stop` flag interrupts it even when
+//!   no connection ever arrives;
+//! * one **connection handler** per client — a reader that parses one
+//!   request per line and enqueues it (busy rejections answered
+//!   immediately with the structured `busy` code), plus a writer that
+//!   reorders responses by per-connection sequence number so every
+//!   client sees answers in the order it sent requests (FIFO fairness
+//!   per connection) no matter which worker finished first;
+//! * a **worker pool** draining the queue into per-request
+//!   [`Session`](crate::coordinator::Session)s on the shared
+//!   [`EngineCore`] — N in-flight requests overlap their sampler /
+//!   halo / serialization work around the single PJRT service thread.
+//!
+//! Execution is abstracted behind [`JobRunner`] so the serving
+//! machinery is testable without artifacts (integration tests drive it
+//! with a stub runner; production uses [`SessionRunner`]).
 
-use std::io::{BufRead, BufReader, Write};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
 
-use crate::coordinator::Engine;
-use crate::error::Result;
+use crate::coordinator::{EngineCore, Request};
+use crate::error::{Error, Result};
 use crate::serve::protocol::{self, WireRequest};
 use crate::serve::router::{Job, Router};
+use crate::util::json;
 
-/// Serve until `stop` is set (or forever). Returns total requests
-/// handled. `max_requests` caps the run for tests/examples (0 = no
-/// cap).
+/// How often blocked accept/read calls re-check shutdown flags.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+const READ_POLL: Duration = Duration::from_millis(100);
+/// Cap on how long a response write may block: a client that stops
+/// reading (full TCP send buffer) must not wedge its writer thread —
+/// and with it `serve`'s final join — indefinitely.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Serving knobs.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Router queue capacity (admission control).
+    pub queue_capacity: usize,
+    /// Worker threads draining the queue — the number of requests in
+    /// flight concurrently.
+    pub workers: usize,
+    /// Stop after this many executed requests (0 = no cap). With more
+    /// than one worker this is a low-water mark, not an exact count:
+    /// jobs already in flight on other workers when the Nth completes
+    /// still drain (their clients are owed responses) and are counted.
+    pub max_requests: usize,
+    /// Cap on simultaneously-open client connections (each costs a
+    /// reader + writer thread). At the cap the accept loop pauses, so
+    /// further connections wait in the OS accept backlog — the job
+    /// queue bounds work, this bounds threads.
+    pub max_connections: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            queue_capacity: 64,
+            workers: 2,
+            max_requests: 0,
+            max_connections: 256,
+        }
+    }
+}
+
+/// Executes one job into one wire response line. Implemented by
+/// [`SessionRunner`] for real generation; tests substitute stubs so
+/// the queueing/ordering/shutdown machinery runs without artifacts.
+pub trait JobRunner: Send + Sync + 'static {
+    /// Returns `(ok, response line)`; `ok` feeds the router's
+    /// per-outcome stats.
+    fn run(&self, job: &Job) -> (bool, String);
+}
+
+/// Production runner: one fresh [`Session`](crate::coordinator::Session)
+/// per job on the shared core.
+pub struct SessionRunner {
+    core: Arc<EngineCore>,
+}
+
+impl SessionRunner {
+    pub fn new(core: Arc<EngineCore>) -> Self {
+        SessionRunner { core }
+    }
+}
+
+impl JobRunner for SessionRunner {
+    fn run(&self, job: &Job) -> (bool, String) {
+        let t0 = Instant::now();
+        match self.core.generate(&Request { seed: job.seed }) {
+            Ok(g) => {
+                let wall = t0.elapsed().as_secs_f64();
+                (true, protocol::response_line(&job.id, &g, wall))
+            }
+            Err(e) => (false, protocol::error_line(&job.id, &e)),
+        }
+    }
+}
+
+/// A job bundled with its reply route: which connection (the channel)
+/// and where in that connection's response order (the sequence number).
+struct Ticket {
+    job: Job,
+    seq: u64,
+    reply: mpsc::Sender<(u64, String)>,
+}
+
+/// Serve with real sessions on the shared core. Returns total requests
+/// executed. See [`serve_with`] for the machinery.
 pub fn serve(
-    engine: &mut Engine,
+    core: Arc<EngineCore>,
     listener: TcpListener,
-    queue_capacity: usize,
-    max_requests: usize,
+    opts: ServeOptions,
     stop: Option<Arc<AtomicBool>>,
 ) -> Result<u64> {
-    let mut router = Router::new(queue_capacity);
-    let mut handled = 0u64;
+    serve_with(Arc::new(SessionRunner::new(core)), listener, opts, stop)
+}
+
+/// Serve until `stop` is set, `max_requests` is reached, or forever.
+///
+/// The listener is switched to nonblocking and polled, so a set `stop`
+/// flag interrupts the accept loop even if no connection ever arrives
+/// (the old blocking accept only noticed the flag on the *next*
+/// connection). Shutdown drains in-flight jobs, discards queued ones,
+/// and joins every thread before returning.
+pub fn serve_with(
+    runner: Arc<dyn JobRunner>,
+    listener: TcpListener,
+    opts: ServeOptions,
+    stop: Option<Arc<AtomicBool>>,
+) -> Result<u64> {
+    let n_workers = opts.workers.max(1);
+    let router: Arc<Router<Ticket>> =
+        Arc::new(Router::new(opts.queue_capacity));
+    // Internal shutdown latch: set by the accept loop (stop flag) or by
+    // the worker that executes the final counted request.
+    let done = Arc::new(AtomicBool::new(false));
+    let handled = Arc::new(AtomicU64::new(0));
+    listener.set_nonblocking(true)?;
     crate::log_info!(
         "serve",
-        "listening on {}",
-        listener.local_addr()?
+        "listening on {} ({} workers, queue {})",
+        listener.local_addr()?,
+        n_workers,
+        router.capacity()
     );
-    for conn in listener.incoming() {
+
+    let workers: Vec<_> = (0..n_workers)
+        .map(|_| {
+            let router = Arc::clone(&router);
+            let runner = Arc::clone(&runner);
+            let done = Arc::clone(&done);
+            let handled = Arc::clone(&handled);
+            let max = opts.max_requests as u64;
+            thread::spawn(move || {
+                while let Some(t) = router.pop() {
+                    let t0 = Instant::now();
+                    // A panicking runner must not shrink the pool (with
+                    // one worker it would wedge the whole server) nor
+                    // leave a sequence gap in the reply stream.
+                    let (ok, line) = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| runner.run(&t.job)),
+                    )
+                    .unwrap_or_else(|_| {
+                        (
+                            false,
+                            protocol::error_line(
+                                &t.job.id,
+                                &Error::msg("internal error: job panicked"),
+                            ),
+                        )
+                    });
+                    router.record_outcome(ok, t0.elapsed().as_secs_f64());
+                    // Deliver before counting so the final client gets
+                    // its response before shutdown begins.
+                    let _ = t.reply.send((t.seq, line));
+                    let n = handled.fetch_add(1, Ordering::SeqCst) + 1;
+                    if max > 0 && n >= max {
+                        done.store(true, Ordering::SeqCst);
+                        close_and_answer(&router);
+                    }
+                }
+            })
+        })
+        .collect();
+
+    let mut conns = Vec::new();
+    let mut accept_err = None;
+    loop {
+        if done.load(Ordering::SeqCst) {
+            break;
+        }
         if let Some(s) = &stop {
             if s.load(Ordering::Relaxed) {
                 break;
             }
         }
-        let stream = conn?;
-        handled += handle_connection(engine, &mut router, stream)?;
-        if max_requests > 0 && handled >= max_requests as u64 {
-            break;
+        // Reap finished connection handlers every iteration (not just
+        // when idle — under sustained connection churn the accept call
+        // below may never report WouldBlock) so a long-lived server
+        // doesn't hold one JoinHandle per connection ever accepted.
+        conns.retain(|c| !c.is_finished());
+        // At the connection cap, let new connections queue in the OS
+        // accept backlog instead of spawning unbounded thread pairs.
+        if conns.len() >= opts.max_connections.max(1) {
+            thread::sleep(ACCEPT_POLL);
+            continue;
         }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let router = Arc::clone(&router);
+                let done = Arc::clone(&done);
+                conns.push(thread::spawn(move || {
+                    handle_connection(stream, &router, &done);
+                }));
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => {
+                accept_err = Some(e);
+                break;
+            }
+        }
+    }
+
+    // Shutdown: wake workers (in-flight jobs drain; queued ones are
+    // answered with shutdown errors), unblock connection readers, join
+    // everything.
+    done.store(true, Ordering::SeqCst);
+    let dropped = close_and_answer(&router);
+    if dropped > 0 {
+        crate::log_info!("serve", "shutdown dropped {dropped} queued jobs");
+    }
+    for w in workers {
+        let _ = w.join();
+    }
+    for c in conns {
+        let _ = c.join();
     }
     let s = router.stats();
     crate::log_info!(
@@ -56,50 +260,164 @@ pub fn serve(
         s.failed,
         s.latency_summary
     );
-    Ok(handled)
+    match accept_err {
+        Some(e) => Err(e.into()),
+        None => Ok(handled.load(Ordering::SeqCst)),
+    }
 }
 
+/// Close the router and answer every still-queued ticket with a
+/// shutdown error line, so (a) its client isn't left waiting on a
+/// response that will never come and (b) the writer's per-connection
+/// FIFO reorder isn't blocked forever on the dropped sequence number.
+fn close_and_answer(router: &Router<Ticket>) -> usize {
+    let dropped = router.drain_close();
+    let n = dropped.len();
+    for t in dropped {
+        // Count the outcome so admitted always reconciles against
+        // completed + failed in the final stats line.
+        router.record_outcome(false, 0.0);
+        let _ = t.reply.send((
+            t.seq,
+            protocol::error_line(
+                &t.job.id,
+                &Error::Protocol("server shutting down".into()),
+            ),
+        ));
+    }
+    n
+}
+
+/// Reader half of one connection: parse lines, assign each a sequence
+/// number, enqueue (or answer immediately on parse error / busy).
+/// Spawns the writer half that restores per-connection FIFO order.
 fn handle_connection(
-    engine: &mut Engine,
-    router: &mut Router,
     stream: TcpStream,
-) -> Result<u64> {
-    let peer = stream.peer_addr()?;
+    router: &Router<Ticket>,
+    done: &AtomicBool,
+) {
+    let peer = stream
+        .peer_addr()
+        .map(|p| p.to_string())
+        .unwrap_or_else(|_| "?".into());
     crate::log_debug!("serve", "connection from {peer}");
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    let mut handled = 0u64;
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+    // BSD-derived platforms (macOS) make accepted sockets inherit the
+    // listener's O_NONBLOCK; we want blocking-with-timeout semantics,
+    // so reset explicitly (no-op on Linux).
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    // Timeouts make the reader re-check `done` so server shutdown is
+    // never blocked on an idle client holding its connection open.
+    if stream.set_read_timeout(Some(READ_POLL)).is_err() {
+        return;
+    }
+    let writer_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    // A write that blocks past this (client not reading) errors out and
+    // tears the connection down instead of hanging shutdown's join.
+    if writer_stream.set_write_timeout(Some(WRITE_TIMEOUT)).is_err() {
+        return;
+    }
+    let (tx, rx) = mpsc::channel::<(u64, String)>();
+    let writer = thread::spawn(move || write_in_order(writer_stream, rx));
+
+    let mut reader = BufReader::new(stream);
+    let mut seq = 0u64;
+    let mut line = String::new();
+    loop {
+        // Checked between lines too (not just on read timeouts) so a
+        // client that keeps sending can't stall server shutdown. A dead
+        // writer (client stopped reading; write timed out) also ends
+        // the reader — otherwise a misbehaving client could keep
+        // workers computing responses nobody will ever receive.
+        if done.load(Ordering::SeqCst) || writer.is_finished() {
+            break;
         }
-        let req = match WireRequest::parse(&line) {
-            Ok(r) => r,
-            Err(e) => {
-                writeln!(writer, "{}", protocol::error_line("?", &e))?;
-                continue;
-            }
-        };
-        if let Err(e) =
-            router.submit(Job { id: req.id.clone(), seed: req.seed })
-        {
-            writeln!(writer, "{}", protocol::error_line(&req.id, &e))?;
-            continue;
-        }
-        // Single-flight engine: serve immediately.
-        while let Some((job, result)) = router.serve_next(engine) {
-            let response = match result {
-                Ok((generation, wall)) => {
-                    protocol::response_line(&job.id, &generation, wall)
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF: client closed.
+            Ok(_) => {
+                let text = line.trim();
+                if !text.is_empty() {
+                    let this_seq = seq;
+                    seq += 1;
+                    match WireRequest::parse(text) {
+                        Ok(req) => {
+                            let ticket = Ticket {
+                                job: Job {
+                                    id: req.id.clone(),
+                                    seed: req.seed,
+                                },
+                                seq: this_seq,
+                                reply: tx.clone(),
+                            };
+                            if let Err(e) = router.submit(ticket) {
+                                let _ = tx.send((
+                                    this_seq,
+                                    protocol::error_line(&req.id, &e),
+                                ));
+                            }
+                        }
+                        Err(e) => {
+                            let _ = tx.send((
+                                this_seq,
+                                protocol::error_line("?", &e),
+                            ));
+                        }
+                    }
                 }
-                Err(e) => protocol::error_line(&job.id, &e),
-            };
-            writeln!(writer, "{response}")?;
-            handled += 1;
+                line.clear();
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut
+                ) =>
+            {
+                // Read timeout. A partially-read line stays in `line`
+                // (read_line appends) and completes on a later call.
+                if done.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            Err(_) => break,
         }
     }
-    Ok(handled)
+    crate::log_debug!("serve", "connection from {peer} closing");
+    // Dropping our sender lets the writer drain in-flight responses
+    // and exit once every outstanding ticket's clone is gone too.
+    drop(tx);
+    let _ = writer.join();
+}
+
+/// Writer half of one connection: responses arrive tagged with their
+/// per-connection sequence number in completion order; buffer
+/// out-of-order ones and write strictly in submission order.
+fn write_in_order(
+    mut stream: TcpStream,
+    rx: mpsc::Receiver<(u64, String)>,
+) {
+    let mut next = 0u64;
+    let mut pending: BTreeMap<u64, String> = BTreeMap::new();
+    while let Ok((seq, line)) = rx.recv() {
+        pending.insert(seq, line);
+        while let Some(l) = pending.remove(&next) {
+            // Errors include the WRITE_TIMEOUT expiring on a client
+            // that stopped reading; either way the connection is dead.
+            if writeln!(stream, "{l}").is_err() {
+                return; // client gone; nothing left to deliver
+            }
+            next += 1;
+        }
+    }
+    // Channel closed with gaps: defensive only — every current path
+    // sends exactly one line per assigned seq (success, catch_unwind'd
+    // runner panic, busy/parse rejection, and shutdown drain via
+    // `close_and_answer`). Should a future path drop a ticket without
+    // responding, the remaining out-of-order responses are
+    // undeliverable in FIFO order and die with the connection.
 }
 
 /// Simple blocking client for tests/examples.
@@ -122,14 +440,72 @@ impl Client {
     pub fn request(&mut self, id: &str, seed: u64) -> Result<String> {
         let req = WireRequest { id: id.into(), seed };
         writeln!(self.writer, "{}", req.to_line())?;
+        self.read_line()
+    }
+
+    /// Send one request without waiting for the response (pipelining;
+    /// pair with [`Client::read_line`]).
+    pub fn send(&mut self, id: &str, seed: u64) -> Result<()> {
+        let req = WireRequest { id: id.into(), seed };
+        writeln!(self.writer, "{}", req.to_line())?;
+        Ok(())
+    }
+
+    /// Read the next response line.
+    pub fn read_line(&mut self) -> Result<String> {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         Ok(line.trim().to_string())
     }
 }
 
+/// Drive `clients` concurrent connections with `per_client` sequential
+/// requests each (seeds counting up from `seed0`) — the shared load
+/// harness for benches and examples. Returns `(total wall seconds,
+/// mean per-request latency)`; fails if any response is not `ok`.
+pub fn drive_workload(
+    addr: &str,
+    clients: usize,
+    per_client: usize,
+    seed0: u64,
+) -> Result<(f64, f64)> {
+    let t0 = Instant::now();
+    let mut threads = Vec::new();
+    for c in 0..clients {
+        let addr = addr.to_string();
+        threads.push(thread::spawn(move || -> Result<f64> {
+            let mut client = Client::connect(&addr)?;
+            let mut latency_sum = 0.0;
+            for i in 0..per_client {
+                let t = Instant::now();
+                let line = client.request(
+                    &format!("c{c}-r{i}"),
+                    seed0 + (c * per_client + i) as u64,
+                )?;
+                latency_sum += t.elapsed().as_secs_f64();
+                let v = json::parse(&line)?;
+                if !v.get("ok")?.as_bool()? {
+                    return Err(Error::Protocol(format!(
+                        "request c{c}-r{i} failed: {line}"
+                    )));
+                }
+            }
+            Ok(latency_sum / per_client.max(1) as f64)
+        }));
+    }
+    let mut mean_sum = 0.0;
+    for t in threads {
+        mean_sum += t
+            .join()
+            .map_err(|_| Error::msg("client thread panicked"))??;
+    }
+    Ok((t0.elapsed().as_secs_f64(), mean_sum / clients.max(1) as f64))
+}
+
 #[cfg(test)]
 mod tests {
-    // End-to-end server tests live in rust/tests/integration_serve.rs
-    // (they need built artifacts + a real engine).
+    // End-to-end server tests live in rust/tests/integration_serve.rs:
+    // the queueing/ordering/shutdown machinery runs there against a
+    // stub JobRunner (no artifacts needed), real-generation paths
+    // against built artifacts.
 }

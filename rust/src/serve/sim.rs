@@ -1,14 +1,18 @@
 //! Serving-level queueing simulation (discrete-event).
 //!
 //! The paper optimizes single-request latency; a serving deployment
-//! cares how that translates under load. This module runs an M/G/1-
-//! style open-loop simulation on the `des` substrate: Poisson arrivals
-//! into the router's FIFO queue, one request in service at a time (the
-//! whole cluster cooperates per image), service time = the scheduler's
-//! simulated end-to-end latency. Comparing STADI vs patch parallelism
-//! service times shows how scheduler-level gains compound into
-//! queueing gains (shorter service -> lower utilization -> much
-//! shorter waits near saturation).
+//! cares how that translates under load. This module runs an M/G/c
+//! open-loop simulation on the `des` substrate: Poisson arrivals into
+//! the router's FIFO queue, up to `servers` requests in service at
+//! once (the server's worker pool; `servers = 1` is the classic
+//! single-flight M/G/1), service time = the scheduler's simulated
+//! end-to-end latency. Comparing STADI vs patch parallelism service
+//! times shows how scheduler-level gains compound into queueing gains
+//! (shorter service -> lower utilization -> much shorter waits near
+//! saturation), and sweeping `servers` shows what the concurrent
+//! serve stack buys once requests can overlap.
+
+use std::collections::VecDeque;
 
 use crate::des::Sim;
 use crate::util::rng::Pcg32;
@@ -36,6 +40,7 @@ impl RequestTrace {
 #[derive(Debug, Clone)]
 pub struct QueueStats {
     pub traces: Vec<RequestTrace>,
+    /// rho = lambda * E[S] / c.
     pub offered_load: f64,
     pub mean_wait_s: f64,
     pub mean_sojourn_s: f64,
@@ -47,19 +52,30 @@ pub struct QueueStats {
 #[derive(Debug, Clone, Copy)]
 enum Ev {
     Arrival(usize),
-    Departure,
+    Departure(usize),
 }
 
-/// Simulate `n_requests` Poisson(`rate_rps`) arrivals served FIFO by a
-/// single engine whose service time for request i is `service_s[i %
-/// len]`. Deterministic for a seed.
+/// Single-flight convenience: M/G/1 (`servers = 1`).
 pub fn simulate_open_loop(
     rate_rps: f64,
     n_requests: usize,
     service_s: &[f64],
     seed: u64,
 ) -> QueueStats {
-    assert!(rate_rps > 0.0 && !service_s.is_empty());
+    simulate_open_loop_servers(rate_rps, n_requests, service_s, 1, seed)
+}
+
+/// Simulate `n_requests` Poisson(`rate_rps`) arrivals served FIFO by
+/// `servers` parallel workers; request i's service time is
+/// `service_s[i % len]`. Deterministic for a seed.
+pub fn simulate_open_loop_servers(
+    rate_rps: f64,
+    n_requests: usize,
+    service_s: &[f64],
+    servers: usize,
+    seed: u64,
+) -> QueueStats {
+    assert!(rate_rps > 0.0 && !service_s.is_empty() && servers > 0);
     let mut rng = Pcg32::new(seed);
     let mut sim: Sim<Ev> = Sim::new();
 
@@ -71,60 +87,47 @@ pub fn simulate_open_loop(
         sim.schedule(t, Ev::Arrival(i));
     }
 
-    let mut queue: std::collections::VecDeque<(usize, f64)> =
-        std::collections::VecDeque::new();
-    let mut busy_with: Option<(usize, f64)> = None; // (req, start)
-    let mut traces: Vec<Option<RequestTrace>> = vec![None; n_requests];
+    let svc = |i: usize| service_s[i % service_s.len()];
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    let mut in_service = 0usize;
+    let mut arrival = vec![f64::NAN; n_requests];
+    let mut start = vec![f64::NAN; n_requests];
+    let mut finish = vec![f64::NAN; n_requests];
     let mut max_q = 0usize;
 
     sim.run(|sim, now, ev| {
         match ev {
             Ev::Arrival(i) => {
-                if busy_with.is_none() {
-                    busy_with = Some((i, now));
-                    sim.schedule_in(service_s[i % service_s.len()], Ev::Departure);
+                arrival[i] = now;
+                if in_service < servers {
+                    in_service += 1;
+                    start[i] = now;
+                    sim.schedule_in(svc(i), Ev::Departure(i));
                 } else {
-                    queue.push_back((i, now));
+                    queue.push_back(i);
                     max_q = max_q.max(queue.len());
                 }
             }
-            Ev::Departure => {
-                let (i, start) = busy_with.take().unwrap();
-                let arrival = traces[i]
-                    .map(|t| t.arrival_s)
-                    .unwrap_or(start); // set below for queued ones
-                let _ = arrival;
-                // We record arrival lazily: for directly-served
-                // requests arrival == start.
-                let arr = traces[i].map(|t| t.arrival_s).unwrap_or(start);
-                traces[i] = Some(RequestTrace {
-                    arrival_s: arr,
-                    start_s: start,
-                    finish_s: now,
-                });
-                if let Some((j, arr_j)) = queue.pop_front() {
-                    traces[j] = Some(RequestTrace {
-                        arrival_s: arr_j,
-                        start_s: now,
-                        finish_s: f64::NAN, // filled at departure
-                    });
-                    busy_with = Some((j, now));
-                    sim.schedule_in(
-                        service_s[j % service_s.len()],
-                        Ev::Departure,
-                    );
+            Ev::Departure(i) => {
+                finish[i] = now;
+                if let Some(j) = queue.pop_front() {
+                    start[j] = now;
+                    sim.schedule_in(svc(j), Ev::Departure(j));
+                } else {
+                    in_service -= 1;
                 }
             }
         }
         true
     });
 
-    // Fix up arrival times for directly-served requests and finish
-    // times (the simple lazy recording above): re-run trace sanity.
-    let traces: Vec<RequestTrace> = traces
-        .into_iter()
-        .flatten()
-        .filter(|t| t.finish_s.is_finite())
+    let traces: Vec<RequestTrace> = (0..n_requests)
+        .filter(|&i| finish[i].is_finite())
+        .map(|i| RequestTrace {
+            arrival_s: arrival[i],
+            start_s: start[i],
+            finish_s: finish[i],
+        })
         .collect();
 
     let waits: Vec<f64> = traces.iter().map(RequestTrace::wait_s).collect();
@@ -140,7 +143,7 @@ pub fn simulate_open_loop(
         .map(|t| t.finish_s)
         .fold(0.0f64, f64::max);
     QueueStats {
-        offered_load: rate_rps * mean_service,
+        offered_load: rate_rps * mean_service / servers as f64,
         mean_wait_s: stats::mean(&waits),
         mean_sojourn_s: stats::mean(&soj),
         p95_sojourn_s: stats::percentile(&soj, 95.0),
@@ -202,6 +205,47 @@ mod tests {
         assert_eq!(s.traces.len(), 250);
         for t in &s.traces {
             assert!(t.finish_s >= t.start_s && t.start_s >= t.arrival_s);
+        }
+    }
+
+    #[test]
+    fn second_server_cuts_waits_near_saturation() {
+        // rho(c=1) = 0.9 -> heavy queueing; the same load on 2 workers
+        // is rho = 0.45 -> waits collapse.
+        let one = simulate_open_loop_servers(9.0, 400, &[0.1], 1, 4);
+        let two = simulate_open_loop_servers(9.0, 400, &[0.1], 2, 4);
+        assert!((one.offered_load - 2.0 * two.offered_load).abs() < 1e-9);
+        assert!(
+            two.mean_wait_s < 0.25 * one.mean_wait_s,
+            "2 servers {} vs 1 server {}",
+            two.mean_wait_s,
+            one.mean_wait_s
+        );
+        assert!(two.max_queue_len <= one.max_queue_len);
+    }
+
+    #[test]
+    fn servers_lift_the_capacity_ceiling() {
+        // Arrivals at 2x a single server's capacity: c=1 diverges (waits
+        // grow with n), c=4 is stable at rho = 0.5.
+        let overloaded = simulate_open_loop_servers(20.0, 400, &[0.1], 1, 5);
+        let pooled = simulate_open_loop_servers(20.0, 400, &[0.1], 4, 5);
+        assert!(overloaded.offered_load > 1.5);
+        assert!(pooled.offered_load < 0.6);
+        assert!(pooled.mean_wait_s < 0.05);
+        assert!(overloaded.mean_wait_s > 10.0 * pooled.mean_wait_s.max(1e-3));
+        // Pooling also moves throughput toward the offered rate.
+        assert!(pooled.throughput_rps > 1.8 * overloaded.throughput_rps);
+    }
+
+    #[test]
+    fn all_complete_with_servers() {
+        for c in [1usize, 2, 3, 8] {
+            let s = simulate_open_loop_servers(6.0, 200, &[0.12, 0.2], c, 11);
+            assert_eq!(s.traces.len(), 200, "c={c}");
+            for t in &s.traces {
+                assert!(t.finish_s >= t.start_s && t.start_s >= t.arrival_s);
+            }
         }
     }
 }

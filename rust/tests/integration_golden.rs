@@ -12,6 +12,10 @@ use stadi::runtime::{ExecService, Tensor};
 use stadi::util::rng::NormalGen;
 
 fn service() -> Option<ExecService> {
+    if !cfg!(feature = "xla-backend") {
+        eprintln!("skipping: built without xla-backend");
+        return None;
+    }
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .join("artifacts");
     if !dir.join("manifest.json").exists() {

@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# CI gate: formatting, lints, tests. Run from the repo root (or
+# anywhere — the script cd's to the rust crate).
+#
+#   scripts/check.sh            # default (offline, stub runtime)
+#   scripts/check.sh --xla      # also check the real-PJRT feature
+#                               # (requires the xla crate; see
+#                               # rust/Cargo.toml)
+
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+FEATURES=()
+if [[ "${1:-}" == "--xla" ]]; then
+    FEATURES=(--features xla-backend)
+fi
+
+echo "== cargo fmt --check"
+cargo fmt --check
+
+echo "== cargo clippy --all-targets -- -D warnings"
+cargo clippy --all-targets "${FEATURES[@]}" -- -D warnings
+
+echo "== cargo test -q"
+cargo test -q "${FEATURES[@]}"
+
+echo "ok"
