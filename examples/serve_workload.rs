@@ -6,8 +6,12 @@
 //!
 //! ```bash
 //! make artifacts && cargo run --release --features xla-backend \
-//!     --example serve_workload
+//!     --example serve_workload -- --gang-policy adaptive
 //! ```
+//!
+//! `--gang-policy all|fixed:K|adaptive` turns on fleet partitioning:
+//! each request leases a policy-chosen GPU gang instead of planning
+//! over the whole cluster (default: no fleet, PR 1 behavior).
 
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -16,12 +20,30 @@ use std::thread;
 
 use stadi::config::EngineConfig;
 use stadi::coordinator::EngineCore;
-use stadi::serve::server::{drive_workload, serve, ServeOptions};
+use stadi::fleet::parse_policy;
+use stadi::serve::server::{
+    drive_workload, serve, serve_fleet, ServeOptions,
+};
+use stadi::util::cli::Command;
 
 const N_REQUESTS: usize = 8;
 
 fn main() -> stadi::Result<()> {
-    let mut cfg = EngineConfig::two_gpu_default("artifacts", &[0.0, 0.3]);
+    let cmd = Command::new("serve_workload", "end-to-end serving driver")
+        .flag("artifacts", "artifacts directory", Some("artifacts"))
+        .flag(
+            "gang-policy",
+            "fleet partitioning policy: all | fixed:K | adaptive \
+             (empty = whole-cluster sessions)",
+            Some(""),
+        )
+        .flag("workers", "worker pool size", Some("2"));
+    let p = cmd.parse(std::env::args().skip(1))?;
+
+    let mut cfg = EngineConfig::two_gpu_default(
+        p.get("artifacts").unwrap(),
+        &[0.0, 0.3],
+    );
     cfg.stadi.m_base = 12; // keep the demo snappy
     cfg.stadi.m_warmup = 2;
     let core = EngineCore::new(cfg)?;
@@ -31,44 +53,60 @@ fn main() -> stadi::Result<()> {
     println!("serving on {addr}");
 
     let stop = Arc::new(AtomicBool::new(false));
+    let opts = ServeOptions {
+        queue_capacity: 16,
+        workers: p.get_parsed("workers")?,
+        max_requests: 0,
+        ..ServeOptions::default()
+    };
+    let policy_spec = p.get("gang-policy").unwrap_or("").to_string();
+    if !policy_spec.is_empty() {
+        println!("fleet partitioning: --gang-policy {policy_spec}");
+    }
     let server = {
         let stop = Arc::clone(&stop);
-        thread::spawn(move || {
-            serve(
-                core,
-                listener,
-                ServeOptions {
-                    queue_capacity: 16,
-                    workers: 2,
-                    max_requests: 0,
-                    ..ServeOptions::default()
-                },
-                Some(stop),
-            )
+        thread::spawn(move || -> stadi::Result<u64> {
+            if policy_spec.is_empty() {
+                serve(core, listener, opts, Some(stop))
+            } else {
+                let policy = parse_policy(&policy_spec)?;
+                serve_fleet(
+                    core,
+                    Arc::from(policy),
+                    listener,
+                    opts,
+                    Some(stop),
+                )
+            }
         })
     };
 
     // Phase 1: one connection, sequential requests.
-    let (wall_seq, mean_seq) = drive_workload(&addr, 1, N_REQUESTS, 1000)?;
+    let w_seq = drive_workload(&addr, 1, N_REQUESTS, 1000)?;
     println!(
-        "sequential: {N_REQUESTS} reqs in {wall_seq:.2}s \
-         (mean latency {mean_seq:.3}s, {:.2} req/s)",
-        N_REQUESTS as f64 / wall_seq
+        "sequential: {N_REQUESTS} reqs in {:.2}s \
+         (mean latency {:.3}s, p95 {:.3}s, {:.2} req/s)",
+        w_seq.wall_s,
+        w_seq.mean_latency_s,
+        w_seq.p95_latency_s,
+        w_seq.throughput_rps(N_REQUESTS)
     );
 
-    // Phase 2: two connections in flight at once — the worker pool
-    // overlaps their sampler/halo/serialization work around the
-    // single PJRT service thread.
-    let (wall_conc, mean_conc) =
-        drive_workload(&addr, 2, N_REQUESTS / 2, 2000)?;
+    // Phase 2: two connections in flight at once — whole-cluster
+    // sessions overlap their sampler/halo/serialization work; gang
+    // policies additionally run disjoint GPU subsets concurrently.
+    let w_conc = drive_workload(&addr, 2, N_REQUESTS / 2, 2000)?;
     println!(
-        "2 in flight: {N_REQUESTS} reqs in {wall_conc:.2}s \
-         (mean latency {mean_conc:.3}s, {:.2} req/s)",
-        N_REQUESTS as f64 / wall_conc
+        "2 in flight: {N_REQUESTS} reqs in {:.2}s \
+         (mean latency {:.3}s, p95 {:.3}s, {:.2} req/s)",
+        w_conc.wall_s,
+        w_conc.mean_latency_s,
+        w_conc.p95_latency_s,
+        w_conc.throughput_rps(N_REQUESTS)
     );
     println!(
         "concurrency speedup: {:.2}x",
-        wall_seq / wall_conc
+        w_seq.wall_s / w_conc.wall_s
     );
 
     stop.store(true, Ordering::SeqCst);

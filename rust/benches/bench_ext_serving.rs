@@ -2,15 +2,19 @@
 //! request gains compound under load, and what the concurrent serve
 //! stack buys on top.
 //!
-//! Three measurements:
+//! Four measurements:
 //! 1. M/G/1 queueing (DES): STADI vs patch-parallel service times
 //!    under Poisson load — near saturation the sojourn-time gap far
 //!    exceeds the raw service-time gap (rho/(1-rho) amplification).
 //! 2. M/G/c queueing (DES): the same STADI service time with a worker
 //!    pool of 1/2/4 — concurrency lifts the capacity ceiling.
-//! 3. Real TCP concurrency sweep: the actual server (accept loop +
+//! 3. Gang-policy sweep (DES over the real FleetManager + planner):
+//!    all/fixed:2/adaptive on a 4-GPU heterogeneous fleet — the
+//!    latency-vs-throughput frontier of fleet partitioning.
+//! 4. Real TCP concurrency sweep: the actual server (accept loop +
 //!    worker pool + sessions on one shared core) driven by 1/2/4
-//!    concurrent client connections, measuring end-to-end throughput.
+//!    concurrent client connections, measuring end-to-end throughput
+//!    and client-side p50/p95 latency.
 
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -21,11 +25,15 @@ use stadi::baselines::patch_parallel;
 use stadi::config::EngineConfig;
 use stadi::coordinator::{timeline, EngineCore};
 use stadi::expt;
+use stadi::fleet::{Adaptive, AllGpus, FixedGang, GangPolicy};
 use stadi::model::schedule::Schedule;
 use stadi::runtime::ExecService;
 use stadi::sched::plan::Plan;
 use stadi::serve::server::{drive_workload, serve, ServeOptions};
-use stadi::serve::sim::{simulate_open_loop, simulate_open_loop_servers};
+use stadi::serve::sim::{
+    assert_leases_disjoint, simulate_gang_policy, simulate_open_loop,
+    simulate_open_loop_servers,
+};
 use stadi::util::benchkit::Table;
 use stadi::util::plot::{render, Series};
 
@@ -143,6 +151,80 @@ fn main() -> stadi::Result<()> {
         "2 sim workers should beat 1 under overload"
     );
 
+    // --- Gang-policy sweep: fleet partitioning (DES) ----------------
+    println!("\n# gang-policy sweep: 4-GPU heterogeneous fleet (DES)");
+    let occ4 = [0.0, 0.1, 0.2, 0.5];
+    let cluster4 = expt::cluster_with_occ(&occ4, cost);
+    let speeds4 = expt::speeds_for_occ(&occ4);
+    // Per-gang latency from the real Eq. 4/5 planner + timeline —
+    // admission decisions and reported numbers share one model.
+    let latency_of = |gang: &[usize]| -> Option<f64> {
+        let sp: Vec<f64> = gang.iter().map(|&d| speeds4[d]).collect();
+        let nm: Vec<String> =
+            gang.iter().map(|&d| format!("gpu{d}")).collect();
+        let plan = Plan::build(
+            &schedule, &sp, &nm, &params, model.latent_h,
+            model.row_granularity,
+        )
+        .ok()?;
+        let sub: Vec<_> =
+            gang.iter().map(|&d| cluster4[d].clone()).collect();
+        timeline::simulate(&plan, &sub, &comm, &model)
+            .ok()
+            .map(|t| t.total_s)
+    };
+    let policies: Vec<Box<dyn GangPolicy>> = vec![
+        Box::new(AllGpus),
+        Box::new(FixedGang(2)),
+        Box::new(Adaptive::default()),
+    ];
+    let single_all =
+        simulate_gang_policy(1.0, 1, &speeds4, &AllGpus, &latency_of, 21)
+            .mean_service_s;
+    let rate4 = 2.0 / single_all; // 2x the whole-fleet capacity
+    let mut gtable = Table::new(&[
+        "policy", "1-req latency", "loaded thr rps", "p95 sojourn",
+        "mean gang",
+    ]);
+    let mut gdat = String::new();
+    let mut thr_by_policy = Vec::new();
+    for p in &policies {
+        let single = simulate_gang_policy(
+            1.0, 1, &speeds4, p.as_ref(), &latency_of, 21,
+        )
+        .mean_service_s;
+        let loaded = simulate_gang_policy(
+            rate4, 200, &speeds4, p.as_ref(), &latency_of, 23,
+        );
+        // Partitioning must never double-book a GPU.
+        assert_leases_disjoint(&loaded.leases);
+        gtable.row(&[
+            loaded.policy.clone(),
+            format!("{single:.3}s"),
+            format!("{:.3}", loaded.throughput_rps),
+            format!("{:.2}s", loaded.p95_sojourn_s),
+            format!("{:.2}", loaded.mean_gang_size),
+        ]);
+        gdat.push_str(&format!(
+            "{} {single} {} {} {}\n",
+            loaded.policy,
+            loaded.throughput_rps,
+            loaded.p95_sojourn_s,
+            loaded.mean_gang_size
+        ));
+        thr_by_policy.push((loaded.policy.clone(), loaded.throughput_rps));
+    }
+    gtable.print();
+    expt::save_results("ext_serving_gang_policies.dat", &gdat)?;
+    // The adaptive policy must convert partitioning into throughput.
+    let thr_all = thr_by_policy[0].1;
+    let thr_adaptive = thr_by_policy[2].1;
+    assert!(
+        thr_adaptive > thr_all,
+        "adaptive {thr_adaptive} rps should beat AllGpus {thr_all} rps \
+         under 2x load"
+    );
+
     // --- Real TCP sweep: 1/2/4 in-flight requests end to end --------
     println!("\n# real server: throughput vs in-flight requests");
     let mut cfg =
@@ -171,23 +253,28 @@ fn main() -> stadi::Result<()> {
     };
 
     let total = 24usize;
-    let mut rtable =
-        Table::new(&["in-flight", "requests", "wall (s)", "req/s"]);
+    let mut rtable = Table::new(&[
+        "in-flight", "requests", "wall (s)", "req/s", "p50 lat", "p95 lat",
+    ]);
     let mut rdat = String::new();
     let mut throughput = Vec::new();
     // Warm the artifact cache off the measured path.
     drive_workload(&addr, 1, 2, 1)?;
     for clients in [1usize, 2, 4] {
-        let (wall, _mean) =
-            drive_workload(&addr, clients, total / clients, 7000)?;
-        let thr = total as f64 / wall;
+        let w = drive_workload(&addr, clients, total / clients, 7000)?;
+        let thr = w.throughput_rps(total);
         rtable.row(&[
             format!("{clients}"),
             format!("{total}"),
-            format!("{wall:.2}"),
+            format!("{:.2}", w.wall_s),
             format!("{thr:.2}"),
+            format!("{:.3}s", w.p50_latency_s),
+            format!("{:.3}s", w.p95_latency_s),
         ]);
-        rdat.push_str(&format!("{clients} {wall} {thr}\n"));
+        rdat.push_str(&format!(
+            "{clients} {} {thr} {} {}\n",
+            w.wall_s, w.p50_latency_s, w.p95_latency_s
+        ));
         throughput.push(thr);
     }
     rtable.print();

@@ -23,7 +23,8 @@ use std::sync::{Arc, Mutex, RwLock, Weak};
 use crate::config::{EngineConfig, ExecMode};
 use crate::coordinator::{dataflow, timeline, Session};
 use crate::device::{build_cluster, CostModel, SimGpu};
-use crate::error::Result;
+use crate::error::{Error, Result};
+use crate::fleet::{FleetManager, GpuLease};
 use crate::model::schedule::Schedule;
 use crate::runtime::tensor::Tensor;
 use crate::runtime::{ExecHandle, ExecService};
@@ -144,12 +145,26 @@ impl EngineCore {
         let speeds = self.effective_speeds();
         let names: Vec<String> =
             self.config.devices.iter().map(|d| d.name.clone()).collect();
+        self.plan_parts(cluster, &speeds, &names)
+    }
+
+    /// Plan over explicit (cluster, speeds, names) triples — the
+    /// subset-agnostic core both whole-cluster and gang sessions use.
+    /// Eq. 4 normalizes to the slice's own v_max and Eq. 5 mends
+    /// patches over whatever devices it is given, so a gang plans
+    /// exactly like a small cluster.
+    fn plan_parts(
+        &self,
+        cluster: &[SimGpu],
+        speeds: &[f64],
+        names: &[String],
+    ) -> Result<Plan> {
         let m = &self.exec.manifest().model;
         if self.config.stadi.cost_aware && self.config.stadi.spatial {
             return Plan::build_cost_aware(
                 &self.schedule,
-                &speeds,
-                &names,
+                speeds,
+                names,
                 &self.config.stadi,
                 &cluster[0].cost,
                 m.latent_h,
@@ -158,12 +173,42 @@ impl EngineCore {
         }
         Plan::build(
             &self.schedule,
-            &speeds,
-            &names,
+            speeds,
+            names,
             &self.config.stadi,
             m.latent_h,
             m.row_granularity,
         )
+    }
+
+    /// Select the (cluster, speeds, names) restriction for a device
+    /// subset, from one consistent snapshot.
+    fn subset_parts(
+        &self,
+        devices: &[usize],
+    ) -> Result<(Vec<SimGpu>, Vec<f64>, Vec<String>)> {
+        let cluster = self.cluster();
+        if devices.is_empty() {
+            return Err(Error::Sched("empty device subset".into()));
+        }
+        for &d in devices {
+            if d >= cluster.len() {
+                return Err(Error::Sched(format!(
+                    "leased device {d} out of range (cluster has {})",
+                    cluster.len()
+                )));
+            }
+        }
+        let all_speeds = self.effective_speeds();
+        let sub_cluster: Vec<SimGpu> =
+            devices.iter().map(|&d| cluster[d].clone()).collect();
+        let speeds: Vec<f64> =
+            devices.iter().map(|&d| all_speeds[d]).collect();
+        let names: Vec<String> = devices
+            .iter()
+            .map(|&d| self.config.devices[d].name.clone())
+            .collect();
+        Ok((sub_cluster, speeds, names))
     }
 
     fn owned(&self) -> Arc<EngineCore> {
@@ -186,6 +231,44 @@ impl EngineCore {
     /// it: every request plans freshly via [`Self::session`].
     pub fn session_with_plan(&self, plan: Plan) -> Session {
         Session::new(self.owned(), plan, self.cluster())
+    }
+
+    /// Open a session restricted to a leased device subset: Eq. 4 /
+    /// Eq. 5 allocate over the gang only, so disjoint leases execute
+    /// truly concurrently. Plan, sub-cluster and speeds derive from
+    /// one snapshot; measured timings feed back under *global* device
+    /// ids via the session's device map.
+    pub fn session_on(&self, lease: &GpuLease) -> Result<Session> {
+        let (sub, speeds, names) = self.subset_parts(lease.devices())?;
+        let plan = self.plan_parts(&sub, &speeds, &names)?;
+        Ok(Session::with_map(
+            self.owned(),
+            plan,
+            sub,
+            lease.devices().to_vec(),
+        ))
+    }
+
+    /// A fresh fleet ledger sized to this core's cluster.
+    pub fn fleet(&self) -> FleetManager {
+        FleetManager::new(self.config.devices.len())
+    }
+
+    /// Predicted end-to-end latency of one request on a device subset:
+    /// plan the gang at current effective speeds and replay it on the
+    /// simulated timeline. This is the gang-policy predictor — the
+    /// same model the latency figures use, so admission decisions and
+    /// reported numbers can't drift apart.
+    pub fn predict_latency(&self, devices: &[usize]) -> Result<f64> {
+        let (sub, speeds, names) = self.subset_parts(devices)?;
+        let plan = self.plan_parts(&sub, &speeds, &names)?;
+        let tl = timeline::simulate(
+            &plan,
+            &sub,
+            &self.config.comm,
+            &self.exec.manifest().model,
+        )?;
+        Ok(tl.total_s)
     }
 
     /// Plan + execute one request (one-shot convenience).
@@ -280,6 +363,33 @@ mod tests {
         // the point is just that history flows through.
         assert_eq!(v.len(), 2);
         assert!(v.iter().all(|&x| x > 0.0 && x <= 1.0));
+    }
+
+    #[test]
+    fn gang_session_plans_and_executes_on_leased_subset() {
+        let Some(cfg) = config(&[0.0, 0.4]) else { return };
+        let core = EngineCore::new(cfg).unwrap();
+        let fleet = core.fleet();
+        let lease = fleet.try_acquire(&[1]).unwrap().unwrap();
+        let session = core.session_on(&lease).unwrap();
+        // The plan is restricted to the gang: one device carrying the
+        // whole latent, reported under its global identity.
+        assert_eq!(session.devices(), &[1]);
+        assert_eq!(session.plan().devices.len(), 1);
+        assert_eq!(session.plan().total_rows(), 32);
+        assert_eq!(session.plan().devices[0].name, "gpu1");
+        let g = session.execute(&Request { seed: 9 }).unwrap();
+        assert_eq!(g.latent.shape, vec![32, 32, 4]);
+        assert!(g.timeline.total_s > 0.0);
+        // Profiler feedback lands under global ids: the full-cluster
+        // speed vector is intact and a whole-cluster plan still works.
+        assert_eq!(core.effective_speeds().len(), 2);
+        core.session().unwrap();
+        // Prediction agrees in shape: a 1-device gang must not be
+        // faster than the full cluster on an idle testbed.
+        let full = core.predict_latency(&[0, 1]).unwrap();
+        let solo = core.predict_latency(&[1]).unwrap();
+        assert!(full > 0.0 && solo > full);
     }
 
     #[test]

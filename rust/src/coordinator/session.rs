@@ -28,6 +28,10 @@ pub struct Session {
     core: Arc<EngineCore>,
     plan: Plan,
     cluster: Vec<SimGpu>,
+    /// Local plan/cluster index -> global device id, for profiler
+    /// feedback. Identity for whole-cluster sessions; the leased
+    /// subset for gang sessions opened via `EngineCore::session_on`.
+    device_map: Vec<usize>,
 }
 
 impl Session {
@@ -36,12 +40,30 @@ impl Session {
         plan: Plan,
         cluster: Vec<SimGpu>,
     ) -> Self {
-        Session { core, plan, cluster }
+        let device_map = (0..cluster.len()).collect();
+        Session { core, plan, cluster, device_map }
+    }
+
+    /// A session over a device subset: `plan`/`cluster` are indexed
+    /// locally (0..k), `device_map[local]` names the global device.
+    pub(crate) fn with_map(
+        core: Arc<EngineCore>,
+        plan: Plan,
+        cluster: Vec<SimGpu>,
+        device_map: Vec<usize>,
+    ) -> Self {
+        debug_assert_eq!(cluster.len(), device_map.len());
+        Session { core, plan, cluster, device_map }
     }
 
     /// The plan this session executes (pinned at session creation).
     pub fn plan(&self) -> &Plan {
         &self.plan
+    }
+
+    /// Global device ids this session runs on, in local index order.
+    pub fn devices(&self) -> &[usize] {
+        &self.device_map
     }
 
     /// Execute one request through the pinned plan: Algorithm 1 via
@@ -78,11 +100,14 @@ impl Session {
         };
         // Feed measured per-step compute back into the shared profiler
         // ("historical inference time profiles", paper §V) so
-        // concurrent requests keep refining effective speeds.
+        // concurrent requests keep refining effective speeds. Plan
+        // indices are session-local; the device map names the global
+        // device (identity for whole-cluster sessions, the leased
+        // subset for gang sessions).
         for d in self.plan.included_devices() {
             if out.stats.steps_run[d.device] > 0 {
                 self.core.record_step(
-                    d.device,
+                    self.device_map[d.device],
                     d.rows.rows * out.stats.steps_run[d.device],
                     out.stats.compute_s[d.device],
                 );

@@ -1,0 +1,36 @@
+//! Fleet allocation: which GPUs does each request run on?
+//!
+//! PR 1 made the serve stack concurrent, but every session still
+//! planned over the *whole* cluster, so N in-flight requests contended
+//! for the same simulated GPUs and throughput could not scale with
+//! load. This subsystem partitions the fleet instead:
+//!
+//! * [`FleetManager`] — grants disjoint RAII [`GpuLease`]s over device
+//!   subsets. A lease releases its devices on `Drop`, which makes the
+//!   worker pool's `catch_unwind` path automatically lease-safe: a
+//!   panicking job unwinds through the lease and frees its GPUs.
+//! * [`GangPolicy`] — the admission-control brain: given the free
+//!   devices, current load, per-device effective speeds, and
+//!   (optionally) a latency predictor, choose the gang for the next
+//!   request. Baselines [`AllGpus`] and [`FixedGang`]; the
+//!   [`Adaptive`] policy picks the min-predicted-latency gang at low
+//!   load and shards the fleet into small heterogeneity-balanced
+//!   gangs under queueing pressure (the granularity shift DistriFusion
+//!   and hybrid data/pipeline-parallel serving systems observe).
+//! * [`EngineCore::session_on`](crate::coordinator::EngineCore::session_on)
+//!   — opens a session whose Eq. 4 / Eq. 5 plan is restricted to the
+//!   leased subset, so gangs execute truly concurrently.
+//!
+//! The STADI allocators (paper §III-B/C) are subset-agnostic — Eq. 4
+//! normalizes speeds to the gang's own v_max and Eq. 5 mends patches
+//! over whatever devices it is given — which is exactly what makes
+//! gang partitioning viable on heterogeneous clusters.
+//!
+//! See rust/DESIGN_SERVE.md §"Fleet allocation" for the lease
+//! lifecycle and lock-ordering rules.
+
+pub mod manager;
+pub mod policy;
+
+pub use manager::{FleetManager, GpuLease};
+pub use policy::{parse_policy, Adaptive, AllGpus, FixedGang, GangPolicy, PolicyCtx};

@@ -1,0 +1,289 @@
+//! Gang-size policies: how much of the fleet does one request get?
+//!
+//! The tradeoff is classic: a bigger gang finishes one request sooner
+//! (until sync overhead wins), while many small gangs serve more
+//! requests at once. The right granularity shifts with load — the
+//! observation behind DistriFusion-style patch parallelism and hybrid
+//! data/pipeline parallel serving — so the policy sees the live queue
+//! depth and, optionally, a latency predictor (the scheduler's own
+//! `simulate_latency` timeline) and decides per request.
+
+use crate::error::{Error, Result};
+
+/// Everything a policy may consult when choosing a gang.
+pub struct PolicyCtx<'a> {
+    /// Per-device effective speeds, indexed by *global* device id
+    /// (the profiler's normalized estimates).
+    pub speeds: &'a [f64],
+    /// Requests waiting behind the one being placed.
+    pub queue_depth: usize,
+    /// Leases currently outstanding.
+    pub in_flight: usize,
+    /// Predicted end-to-end latency of running one request on a
+    /// candidate gang (global device ids); `None` entries mean the
+    /// subset is unplannable. Policies must tolerate a missing
+    /// predictor (offline / degraded mode).
+    pub predict: Option<&'a dyn Fn(&[usize]) -> Option<f64>>,
+}
+
+impl PolicyCtx<'_> {
+    fn predict_gang(&self, gang: &[usize]) -> Option<f64> {
+        self.predict.and_then(|p| p(gang))
+    }
+}
+
+/// Chooses the device gang for the next request.
+///
+/// Contract: `choose` is a pure function of `(free, ctx)`; it must
+/// return a duplicate-free subset of `free` (the manager validates and
+/// errors otherwise), or `None` to wait for the next lease release.
+/// It must never block and never assume it will be called again with
+/// the same snapshot.
+pub trait GangPolicy: Send + Sync {
+    /// Display name ("all", "fixed:2", "adaptive").
+    fn name(&self) -> String;
+
+    /// Pick a gang from `free`, or `None` to wait.
+    fn choose(&self, free: &[usize], ctx: &PolicyCtx) -> Option<Vec<usize>>;
+}
+
+/// Baseline: every request takes the whole cluster (PR 1 behavior).
+/// Minimizes single-request latency; serializes the fleet.
+pub struct AllGpus;
+
+impl GangPolicy for AllGpus {
+    fn name(&self) -> String {
+        "all".into()
+    }
+
+    fn choose(&self, free: &[usize], ctx: &PolicyCtx) -> Option<Vec<usize>> {
+        if free.len() == ctx.speeds.len() {
+            Some(free.to_vec())
+        } else {
+            None
+        }
+    }
+}
+
+/// Baseline: every request gets the `k` fastest free devices.
+pub struct FixedGang(pub usize);
+
+impl GangPolicy for FixedGang {
+    fn name(&self) -> String {
+        format!("fixed:{}", self.0)
+    }
+
+    fn choose(&self, free: &[usize], ctx: &PolicyCtx) -> Option<Vec<usize>> {
+        let k = self.0.max(1);
+        if free.len() < k {
+            return None;
+        }
+        let sorted = by_speed_desc(free, ctx.speeds);
+        Some(sorted[..k].to_vec())
+    }
+}
+
+/// Adaptive gang sizing: min-predicted-latency gangs when the queue is
+/// empty, many small heterogeneity-balanced gangs under load.
+///
+/// * Low load (`queue_depth < load_threshold`): evaluate the latency
+///   predictor on every fastest-first prefix of the free set and take
+///   the cheapest — adding a straggler to a gang is only worth it
+///   while Eq. 4/5 can absorb it, and the predictor (the scheduler's
+///   own simulated timeline) knows exactly where that stops. Without a
+///   predictor it falls back to the whole free set.
+/// * High load: split the free devices across the waiting demand
+///   (`queue_depth + 1` requests), picking gang members fast/slow
+///   alternately so each gang gets a balanced speed mix instead of one
+///   all-fast and one all-straggler gang.
+pub struct Adaptive {
+    /// Queue depth at which the policy switches from min-latency to
+    /// fleet-sharding mode.
+    pub load_threshold: usize,
+}
+
+impl Default for Adaptive {
+    fn default() -> Self {
+        Adaptive { load_threshold: 1 }
+    }
+}
+
+impl GangPolicy for Adaptive {
+    fn name(&self) -> String {
+        "adaptive".into()
+    }
+
+    fn choose(&self, free: &[usize], ctx: &PolicyCtx) -> Option<Vec<usize>> {
+        if free.is_empty() {
+            return None;
+        }
+        let sorted = by_speed_desc(free, ctx.speeds);
+        if ctx.queue_depth < self.load_threshold {
+            // Min-latency prefix search (fastest-first prefixes are
+            // the natural candidates: a slower device only ever joins
+            // after every faster one).
+            let mut best: Option<(f64, usize)> = None;
+            for k in 1..=sorted.len() {
+                if let Some(t) = ctx.predict_gang(&sorted[..k]) {
+                    let better = match best {
+                        None => true,
+                        Some((bt, _)) => t < bt,
+                    };
+                    if better {
+                        best = Some((t, k));
+                    }
+                }
+            }
+            let k = match best {
+                Some((_, k)) => k,
+                None => sorted.len(), // no predictor: take everything
+            };
+            return Some(sorted[..k].to_vec());
+        }
+        // Shard mode: give this request ceil(free / demand) devices so
+        // the waiting requests behind it can gang up on the rest.
+        let demand = ctx.queue_depth + 1;
+        let k = sorted.len().div_ceil(demand).max(1);
+        Some(balanced_pick(&sorted, k))
+    }
+}
+
+/// Free devices sorted fastest-first (stable: ties keep id order).
+fn by_speed_desc(free: &[usize], speeds: &[f64]) -> Vec<usize> {
+    let mut v = free.to_vec();
+    v.sort_by(|&a, &b| {
+        speeds[b]
+            .partial_cmp(&speeds[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    v
+}
+
+/// Take `k` devices from a fastest-first list, alternating ends, so
+/// the gang's speed mix mirrors the fleet's (heterogeneity-balanced):
+/// the leftovers are equally balanced for the next gang.
+fn balanced_pick(sorted_desc: &[usize], k: usize) -> Vec<usize> {
+    let mut gang = Vec::with_capacity(k);
+    let (mut lo, mut hi) = (0usize, sorted_desc.len());
+    while gang.len() < k && lo < hi {
+        gang.push(sorted_desc[lo]);
+        lo += 1;
+        if gang.len() < k && lo < hi {
+            hi -= 1;
+            gang.push(sorted_desc[hi]);
+        }
+    }
+    gang
+}
+
+/// Parse a `--gang-policy` spec: `all`, `fixed:K`, or `adaptive`.
+pub fn parse_policy(spec: &str) -> Result<Box<dyn GangPolicy>> {
+    if spec == "all" {
+        return Ok(Box::new(AllGpus));
+    }
+    if spec == "adaptive" {
+        return Ok(Box::new(Adaptive::default()));
+    }
+    if let Some(k) = spec.strip_prefix("fixed:") {
+        let k: usize = k.parse().map_err(|_| {
+            Error::Config(format!("bad gang size in {spec:?}"))
+        })?;
+        if k == 0 {
+            return Err(Error::Config("fixed gang size must be >= 1".into()));
+        }
+        return Ok(Box::new(FixedGang(k)));
+    }
+    Err(Error::Config(format!(
+        "unknown gang policy {spec:?} (expected all | fixed:K | adaptive)"
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx<'a>(
+        speeds: &'a [f64],
+        queue_depth: usize,
+        predict: Option<&'a dyn Fn(&[usize]) -> Option<f64>>,
+    ) -> PolicyCtx<'a> {
+        PolicyCtx { speeds, queue_depth, in_flight: 0, predict }
+    }
+
+    #[test]
+    fn all_gpus_waits_unless_fleet_is_whole() {
+        let speeds = [1.0, 0.8, 0.6];
+        assert_eq!(
+            AllGpus.choose(&[0, 1, 2], &ctx(&speeds, 0, None)),
+            Some(vec![0, 1, 2])
+        );
+        assert_eq!(AllGpus.choose(&[0, 2], &ctx(&speeds, 5, None)), None);
+    }
+
+    #[test]
+    fn fixed_gang_takes_fastest_free() {
+        let speeds = [0.5, 1.0, 0.9, 0.2];
+        let got = FixedGang(2)
+            .choose(&[0, 1, 2, 3], &ctx(&speeds, 0, None))
+            .unwrap();
+        assert_eq!(got, vec![1, 2]);
+        // Not enough free devices -> wait.
+        assert_eq!(FixedGang(3).choose(&[0, 3], &ctx(&speeds, 0, None)), None);
+    }
+
+    #[test]
+    fn adaptive_low_load_minimizes_predicted_latency() {
+        let speeds = [1.0, 0.9, 0.3];
+        // Predictor: the straggler (device 2) makes any gang slower.
+        let predict = |gang: &[usize]| -> Option<f64> {
+            Some(if gang.contains(&2) {
+                1.0
+            } else {
+                0.5 / gang.len() as f64
+            })
+        };
+        let got = Adaptive::default()
+            .choose(&[0, 1, 2], &ctx(&speeds, 0, Some(&predict)))
+            .unwrap();
+        assert_eq!(got, vec![0, 1], "should stop before the straggler");
+        // No predictor -> whole free set.
+        let got = Adaptive::default()
+            .choose(&[0, 1, 2], &ctx(&speeds, 0, None))
+            .unwrap();
+        assert_eq!(got, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn adaptive_high_load_shards_balanced() {
+        let speeds = [1.0, 0.9, 0.8, 0.5];
+        // One request waiting behind us: split 4 free devices 2+2,
+        // pairing fastest with slowest.
+        let got = Adaptive::default()
+            .choose(&[0, 1, 2, 3], &ctx(&speeds, 1, None))
+            .unwrap();
+        assert_eq!(got, vec![0, 3]);
+        // Three waiting: 4/4 -> singleton gangs, fastest first.
+        let got = Adaptive::default()
+            .choose(&[0, 1, 2, 3], &ctx(&speeds, 3, None))
+            .unwrap();
+        assert_eq!(got, vec![0]);
+    }
+
+    #[test]
+    fn balanced_pick_alternates_ends() {
+        assert_eq!(balanced_pick(&[10, 11, 12, 13], 2), vec![10, 13]);
+        assert_eq!(balanced_pick(&[10, 11, 12, 13], 3), vec![10, 13, 11]);
+        assert_eq!(balanced_pick(&[10], 3), vec![10]);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(parse_policy("all").unwrap().name(), "all");
+        assert_eq!(parse_policy("fixed:3").unwrap().name(), "fixed:3");
+        assert_eq!(parse_policy("adaptive").unwrap().name(), "adaptive");
+        assert!(parse_policy("fixed:0").is_err());
+        assert!(parse_policy("fixed:x").is_err());
+        assert!(parse_policy("bogus").is_err());
+    }
+}

@@ -166,22 +166,38 @@ fn cmd_serve(args: impl Iterator<Item = String>) -> Result<()> {
         .flag("addr", "listen address", Some("127.0.0.1:7878"))
         .flag("queue", "router queue capacity", Some("64"))
         .flag("workers", "concurrent in-flight requests", Some("2"))
-        .flag("max-requests", "stop after N requests (0 = run forever)", Some("0"));
+        .flag("max-requests", "stop after N requests (0 = run forever)", Some("0"))
+        .flag(
+            "gang-policy",
+            "fleet partitioning: all | fixed:K | adaptive \
+             (empty = whole-cluster sessions)",
+            Some(""),
+        );
     let p = cmd.parse(args)?;
     let cfg = build_config(&p)?;
     let core = EngineCore::new(cfg)?;
     let listener = TcpListener::bind(p.get("addr").unwrap())?;
-    stadi::serve::server::serve(
-        core,
-        listener,
-        ServeOptions {
-            queue_capacity: p.get_parsed("queue")?,
-            workers: p.get_parsed("workers")?,
-            max_requests: p.get_parsed("max-requests")?,
-            ..ServeOptions::default()
-        },
-        None,
-    )?;
+    let opts = ServeOptions {
+        queue_capacity: p.get_parsed("queue")?,
+        workers: p.get_parsed("workers")?,
+        max_requests: p.get_parsed("max-requests")?,
+        ..ServeOptions::default()
+    };
+    match p.get("gang-policy").filter(|s| !s.is_empty()) {
+        None => {
+            stadi::serve::server::serve(core, listener, opts, None)?;
+        }
+        Some(spec) => {
+            let policy = stadi::fleet::parse_policy(spec)?;
+            stadi::serve::server::serve_fleet(
+                core,
+                std::sync::Arc::from(policy),
+                listener,
+                opts,
+                None,
+            )?;
+        }
+    }
     Ok(())
 }
 

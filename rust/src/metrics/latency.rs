@@ -2,12 +2,34 @@
 
 use std::time::Instant;
 
+use crate::util::rng::Pcg32;
 use crate::util::stats;
 
+/// Default reservoir size: plenty for stable p95/p99 estimates, small
+/// enough that a server running for days holds O(1) memory per class.
+const DEFAULT_RESERVOIR: usize = 4096;
+
 /// Running latency statistics (per request class).
-#[derive(Debug, Default, Clone)]
+///
+/// Count / mean / max are exact over every recorded sample; the
+/// percentiles come from a bounded uniform reservoir (Vitter's
+/// Algorithm R over a deterministic PCG stream), so memory stays flat
+/// no matter how long the server runs.
+#[derive(Debug, Clone)]
 pub struct LatencyTracker {
-    samples_s: Vec<f64>,
+    reservoir: Vec<f64>,
+    capacity: usize,
+    /// Total samples ever recorded (not just those retained).
+    seen: u64,
+    sum_s: f64,
+    max_s: f64,
+    rng: Pcg32,
+}
+
+impl Default for LatencyTracker {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_RESERVOIR)
+    }
 }
 
 impl LatencyTracker {
@@ -15,32 +37,65 @@ impl LatencyTracker {
         Self::default()
     }
 
+    /// Tracker with an explicit reservoir bound (>= 1).
+    pub fn with_capacity(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        LatencyTracker {
+            reservoir: Vec::with_capacity(capacity.min(1024)),
+            capacity,
+            seen: 0,
+            sum_s: 0.0,
+            max_s: f64::NEG_INFINITY,
+            rng: Pcg32::new(0x1a7e9c),
+        }
+    }
+
     pub fn record(&mut self, seconds: f64) {
-        self.samples_s.push(seconds);
+        self.seen += 1;
+        self.sum_s += seconds;
+        self.max_s = self.max_s.max(seconds);
+        if self.reservoir.len() < self.capacity {
+            self.reservoir.push(seconds);
+        } else {
+            // Algorithm R: keep each of the `seen` samples with equal
+            // probability capacity/seen.
+            let j = (self.rng.next_u64() % self.seen) as usize;
+            if j < self.capacity {
+                self.reservoir[j] = seconds;
+            }
+        }
     }
 
     pub fn count(&self) -> usize {
-        self.samples_s.len()
+        self.seen as usize
     }
 
     pub fn mean(&self) -> f64 {
-        stats::mean(&self.samples_s)
+        if self.seen == 0 {
+            0.0
+        } else {
+            self.sum_s / self.seen as f64
+        }
     }
 
     pub fn p50(&self) -> f64 {
-        stats::percentile(&self.samples_s, 50.0)
+        stats::percentile(&self.reservoir, 50.0)
     }
 
     pub fn p95(&self) -> f64 {
-        stats::percentile(&self.samples_s, 95.0)
+        stats::percentile(&self.reservoir, 95.0)
     }
 
     pub fn p99(&self) -> f64 {
-        stats::percentile(&self.samples_s, 99.0)
+        stats::percentile(&self.reservoir, 99.0)
     }
 
     pub fn max(&self) -> f64 {
-        stats::max(&self.samples_s)
+        if self.seen == 0 {
+            f64::NEG_INFINITY
+        } else {
+            self.max_s
+        }
     }
 
     /// Requests per second over a window of `wall_s`.
@@ -96,6 +151,24 @@ mod tests {
         assert!((t.p95() - 0.955).abs() < 0.01);
         assert_eq!(t.max(), 1.0);
         assert!((t.throughput(10.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reservoir_stays_bounded_with_faithful_stats() {
+        let mut t = LatencyTracker::with_capacity(64);
+        for i in 0..10_000 {
+            // Uniform ramp 0..1s.
+            t.record((i % 1000) as f64 / 1000.0);
+        }
+        // Exact aggregates survive eviction...
+        assert_eq!(t.count(), 10_000);
+        assert!((t.mean() - 0.4995).abs() < 1e-9);
+        assert!((t.max() - 0.999).abs() < 1e-12);
+        // ...while memory stays at the reservoir bound and the
+        // percentile estimates stay in the right neighborhood.
+        assert!(t.reservoir.len() == 64);
+        assert!((t.p50() - 0.5).abs() < 0.15, "p50 {}", t.p50());
+        assert!(t.p95() > 0.7, "p95 {}", t.p95());
     }
 
     #[test]

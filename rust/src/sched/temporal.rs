@@ -133,6 +133,76 @@ mod tests {
     }
 
     #[test]
+    fn property_half_class_grids_align_past_warmup() {
+        use crate::model::schedule::Schedule;
+        // For random valid (M_base, M_warmup) and speed vectors: every
+        // Half-class device's timestep grid shares the warmup prefix
+        // with the Full-class grid and lands only on Full-class
+        // timesteps afterwards — the §III-C alignment that keeps sync
+        // points from stretching — and grid lengths equal the Eq. 4
+        // step counts.
+        let schedule = Schedule::scaled_linear(1000, 0.00085, 0.012);
+        forall(
+            29,
+            200,
+            |rng| {
+                let m_warmup = 1 + rng.below(6) as usize;
+                let m_base = m_warmup + 2 * (1 + rng.below(24) as usize);
+                let n = 2 + rng.below(5) as usize;
+                let speeds: Vec<f64> =
+                    (0..n).map(|_| 0.05 + 0.95 * rng.next_f64()).collect();
+                ((m_base, m_warmup), speeds)
+            },
+            |((m_base, m_warmup), speeds)| {
+                // Shrink candidates may break the M invariants the
+                // config layer normally enforces; skip those.
+                if *m_warmup == 0
+                    || m_warmup >= m_base
+                    || (m_base - m_warmup) % 2 != 0
+                {
+                    return Ok(());
+                }
+                let p = StadiParams {
+                    m_base: *m_base,
+                    m_warmup: *m_warmup,
+                    ..StadiParams::default()
+                };
+                let Ok(assign) = assign_steps(speeds, &p) else {
+                    return Ok(());
+                };
+                let fast = schedule.ddim_grid(*m_base);
+                let slow = Schedule::stadi_slow_grid(&fast, *m_warmup);
+                ensure(
+                    slow[..*m_warmup] == fast[..*m_warmup],
+                    "warmup prefix diverges",
+                )?;
+                for t in &slow[*m_warmup..] {
+                    ensure(
+                        fast.contains(t),
+                        format!("slow timestep {t} not on the fast grid"),
+                    )?;
+                }
+                for a in assign {
+                    match a.class {
+                        StepClass::Full => ensure(
+                            a.steps == fast.len(),
+                            "Full step count != fast grid length",
+                        )?,
+                        StepClass::Half => ensure(
+                            a.steps == slow.len(),
+                            "Half step count != slow grid length",
+                        )?,
+                        StepClass::Excluded => {
+                            ensure(a.steps == 0, "excluded ran steps")?
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
     fn property_sync_alignment_and_monotonicity() {
         // For arbitrary speed vectors: (1) the fastest device is never
         // excluded; (2) step counts are monotone in speed; (3) Half

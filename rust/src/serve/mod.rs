@@ -1,9 +1,10 @@
 //! Serving front-end: JSON-lines protocol, thread-safe bounded router,
 //! concurrent TCP server (accept loop + worker pool over per-request
-//! sessions), and the M/G/c queueing simulation.
+//! sessions, optionally fleet-partitioned via gang policies), and the
+//! M/G/c + gang-policy queueing simulations.
 //!
-//! See rust/DESIGN_SERVE.md for the architecture diagram and locking
-//! rules.
+//! See rust/DESIGN_SERVE.md for the architecture diagram, the fleet
+//! lease lifecycle, and locking rules.
 
 pub mod protocol;
 pub mod router;

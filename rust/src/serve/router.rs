@@ -33,6 +33,11 @@ pub struct RouterStats {
     pub completed: u64,
     pub failed: u64,
     pub queue_len: usize,
+    /// Mean completed-job latency (exact over all samples).
+    pub latency_mean_s: f64,
+    /// Median / tail latency from the tracker's bounded reservoir.
+    pub latency_p50_s: f64,
+    pub latency_p95_s: f64,
     pub latency_summary: String,
 }
 
@@ -157,6 +162,9 @@ impl<T> Router<T> {
             completed: g.completed,
             failed: g.failed,
             queue_len: g.queue.len(),
+            latency_mean_s: g.latency.mean(),
+            latency_p50_s: g.latency.p50(),
+            latency_p95_s: g.latency.p95(),
             latency_summary: g.latency.summary(),
         }
     }
@@ -276,6 +284,23 @@ mod tests {
         let s = r.stats();
         assert_eq!(s.admitted, sent);
         assert_eq!(s.queue_len, 0);
+    }
+
+    #[test]
+    fn stats_expose_latency_percentiles() {
+        let r: Router<u64> = Router::new(4);
+        for i in 1..=100 {
+            r.record_outcome(true, i as f64 / 100.0);
+        }
+        // Failures count, but never pollute the latency distribution.
+        r.record_outcome(false, 9.9);
+        let s = r.stats();
+        assert_eq!(s.completed, 100);
+        assert_eq!(s.failed, 1);
+        assert!((s.latency_mean_s - 0.505).abs() < 1e-9);
+        assert!((s.latency_p50_s - 0.505).abs() < 0.02);
+        assert!((s.latency_p95_s - 0.955).abs() < 0.02);
+        assert!(s.latency_p95_s < 2.0, "failure latency leaked in");
     }
 
     #[test]

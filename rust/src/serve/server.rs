@@ -29,11 +29,12 @@ use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{EngineCore, Request};
+use crate::coordinator::{EngineCore, Generation, Request};
 use crate::error::{Error, Result};
+use crate::fleet::{FleetManager, GangPolicy};
 use crate::serve::protocol::{self, WireRequest};
-use crate::serve::router::{Job, Router};
-use crate::util::json;
+use crate::serve::router::{Job, Router, RouterStats};
+use crate::util::{json, stats};
 
 /// How often blocked accept/read calls re-check shutdown flags.
 const ACCEPT_POLL: Duration = Duration::from_millis(10);
@@ -81,24 +82,81 @@ pub trait JobRunner: Send + Sync + 'static {
     /// Returns `(ok, response line)`; `ok` feeds the router's
     /// per-outcome stats.
     fn run(&self, job: &Job) -> (bool, String);
+
+    /// Like [`JobRunner::run`], with the number of jobs still queued
+    /// behind this one — the live demand signal load-adaptive runners
+    /// (gang policies) act on. Workers call this; the default ignores
+    /// the load, so plain runners only implement `run`.
+    fn run_with_load(&self, job: &Job, queued: usize) -> (bool, String) {
+        let _ = queued;
+        self.run(job)
+    }
 }
 
 /// Production runner: one fresh [`Session`](crate::coordinator::Session)
-/// per job on the shared core.
+/// per job on the shared core. With a fleet configured, each job first
+/// acquires a [`GpuLease`](crate::fleet::GpuLease) per the gang policy
+/// and plans/executes on that subset only — disjoint gangs run truly
+/// concurrently. The lease is scoped to the job, so it releases on
+/// success, on error, and on panic (the worker's `catch_unwind`
+/// unwinds through it).
 pub struct SessionRunner {
     core: Arc<EngineCore>,
+    fleet: Option<(FleetManager, Arc<dyn GangPolicy>)>,
 }
 
 impl SessionRunner {
+    /// Whole-cluster sessions (PR 1 behavior — equivalent to a fleet
+    /// under the `AllGpus` policy, without the ledger).
     pub fn new(core: Arc<EngineCore>) -> Self {
-        SessionRunner { core }
+        SessionRunner { core, fleet: None }
+    }
+
+    /// Gang-partitioned sessions: acquire a policy-chosen lease per
+    /// job. The policy sees live queue depth (blocked acquirers) and
+    /// the scheduler's own `simulate_latency` as its predictor.
+    pub fn with_fleet(
+        core: Arc<EngineCore>,
+        fleet: FleetManager,
+        policy: Arc<dyn GangPolicy>,
+    ) -> Self {
+        SessionRunner { core, fleet: Some((fleet, policy)) }
+    }
+
+    fn generate(&self, seed: u64, queued: usize) -> Result<Generation> {
+        let req = Request { seed };
+        match &self.fleet {
+            None => self.core.generate(&req),
+            Some((fleet, policy)) => {
+                let core = Arc::clone(&self.core);
+                let predict =
+                    move |gang: &[usize]| core.predict_latency(gang).ok();
+                // `queued` (jobs still in the router behind this one)
+                // is the demand the policy shards the fleet for —
+                // blocked co-workers alone cap at workers-1 and would
+                // never push an adaptive policy past its threshold.
+                let lease = fleet.acquire(
+                    policy.as_ref(),
+                    &self.core.effective_speeds(),
+                    Some(&predict),
+                    queued,
+                )?;
+                // Lease drops (devices return to the pool) when this
+                // scope exits — normally or by unwind.
+                self.core.session_on(&lease)?.execute(&req)
+            }
+        }
     }
 }
 
 impl JobRunner for SessionRunner {
     fn run(&self, job: &Job) -> (bool, String) {
+        self.run_with_load(job, 0)
+    }
+
+    fn run_with_load(&self, job: &Job, queued: usize) -> (bool, String) {
         let t0 = Instant::now();
-        match self.core.generate(&Request { seed: job.seed }) {
+        match self.generate(job.seed, queued) {
             Ok(g) => {
                 let wall = t0.elapsed().as_secs_f64();
                 (true, protocol::response_line(&job.id, &g, wall))
@@ -127,6 +185,33 @@ pub fn serve(
     serve_with(Arc::new(SessionRunner::new(core)), listener, opts, stop)
 }
 
+/// Serve with fleet partitioning: every job leases a policy-chosen
+/// GPU gang and plans/executes on it alone, so the worker pool runs
+/// disjoint gangs concurrently instead of contending for the whole
+/// cluster. `workers` should be at least the number of gangs the
+/// policy can carve out, or the extra parallelism goes unused.
+pub fn serve_fleet(
+    core: Arc<EngineCore>,
+    policy: Arc<dyn GangPolicy>,
+    listener: TcpListener,
+    opts: ServeOptions,
+    stop: Option<Arc<AtomicBool>>,
+) -> Result<u64> {
+    let fleet = core.fleet();
+    crate::log_info!(
+        "serve",
+        "fleet partitioning on: {} devices, policy {}",
+        fleet.num_devices(),
+        policy.name()
+    );
+    serve_with(
+        Arc::new(SessionRunner::with_fleet(core, fleet, policy)),
+        listener,
+        opts,
+        stop,
+    )
+}
+
 /// Serve until `stop` is set, `max_requests` is reached, or forever.
 ///
 /// The listener is switched to nonblocking and polled, so a set `stop`
@@ -140,6 +225,18 @@ pub fn serve_with(
     opts: ServeOptions,
     stop: Option<Arc<AtomicBool>>,
 ) -> Result<u64> {
+    serve_with_stats(runner, listener, opts, stop).map(|(n, _)| n)
+}
+
+/// [`serve_with`], additionally returning the router's final stats
+/// snapshot (admission/outcome counters, latency percentiles) so
+/// harnesses can assert on served traffic, not just the count.
+pub fn serve_with_stats(
+    runner: Arc<dyn JobRunner>,
+    listener: TcpListener,
+    opts: ServeOptions,
+    stop: Option<Arc<AtomicBool>>,
+) -> Result<(u64, RouterStats)> {
     let n_workers = opts.workers.max(1);
     let router: Arc<Router<Ticket>> =
         Arc::new(Router::new(opts.queue_capacity));
@@ -170,7 +267,9 @@ pub fn serve_with(
                     // one worker it would wedge the whole server) nor
                     // leave a sequence gap in the reply stream.
                     let (ok, line) = std::panic::catch_unwind(
-                        std::panic::AssertUnwindSafe(|| runner.run(&t.job)),
+                        std::panic::AssertUnwindSafe(|| {
+                            runner.run_with_load(&t.job, router.queue_len())
+                        }),
                     )
                     .unwrap_or_else(|_| {
                         (
@@ -251,6 +350,8 @@ pub fn serve_with(
         let _ = c.join();
     }
     let s = router.stats();
+    // latency_summary already carries n/mean/p50/p95/max; the same
+    // figures are available structured on the returned RouterStats.
     crate::log_info!(
         "serve",
         "done: admitted={} rejected={} completed={} failed={} ({})",
@@ -262,7 +363,7 @@ pub fn serve_with(
     );
     match accept_err {
         Some(e) => Err(e.into()),
-        None => Ok(handled.load(Ordering::SeqCst)),
+        None => Ok((handled.load(Ordering::SeqCst), s)),
     }
 }
 
@@ -459,30 +560,50 @@ impl Client {
     }
 }
 
+/// Client-side view of one [`drive_workload`] run.
+#[derive(Debug, Clone)]
+pub struct WorkloadStats {
+    pub wall_s: f64,
+    pub mean_latency_s: f64,
+    pub p50_latency_s: f64,
+    pub p95_latency_s: f64,
+}
+
+impl WorkloadStats {
+    pub fn throughput_rps(&self, requests: usize) -> f64 {
+        if self.wall_s > 0.0 {
+            requests as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+}
+
 /// Drive `clients` concurrent connections with `per_client` sequential
 /// requests each (seeds counting up from `seed0`) — the shared load
-/// harness for benches and examples. Returns `(total wall seconds,
-/// mean per-request latency)`; fails if any response is not `ok`.
+/// harness for benches and examples. Returns wall time plus the
+/// mean/p50/p95 of per-request latencies across every client; fails if
+/// any response is not `ok`.
 pub fn drive_workload(
     addr: &str,
     clients: usize,
     per_client: usize,
     seed0: u64,
-) -> Result<(f64, f64)> {
+) -> Result<WorkloadStats> {
     let t0 = Instant::now();
     let mut threads = Vec::new();
     for c in 0..clients {
         let addr = addr.to_string();
-        threads.push(thread::spawn(move || -> Result<f64> {
+        threads.push(thread::spawn(move || -> Result<Vec<f64>> {
             let mut client = Client::connect(&addr)?;
-            let mut latency_sum = 0.0;
+            let mut latencies = Vec::with_capacity(per_client);
             for i in 0..per_client {
                 let t = Instant::now();
                 let line = client.request(
                     &format!("c{c}-r{i}"),
                     seed0 + (c * per_client + i) as u64,
                 )?;
-                latency_sum += t.elapsed().as_secs_f64();
+                latencies.push(t.elapsed().as_secs_f64());
                 let v = json::parse(&line)?;
                 if !v.get("ok")?.as_bool()? {
                     return Err(Error::Protocol(format!(
@@ -490,16 +611,22 @@ pub fn drive_workload(
                     )));
                 }
             }
-            Ok(latency_sum / per_client.max(1) as f64)
+            Ok(latencies)
         }));
     }
-    let mut mean_sum = 0.0;
+    let mut all = Vec::new();
     for t in threads {
-        mean_sum += t
-            .join()
-            .map_err(|_| Error::msg("client thread panicked"))??;
+        all.extend(
+            t.join()
+                .map_err(|_| Error::msg("client thread panicked"))??,
+        );
     }
-    Ok((t0.elapsed().as_secs_f64(), mean_sum / clients.max(1) as f64))
+    Ok(WorkloadStats {
+        wall_s: t0.elapsed().as_secs_f64(),
+        mean_latency_s: stats::mean(&all),
+        p50_latency_s: stats::percentile(&all, 50.0),
+        p95_latency_s: stats::percentile(&all, 95.0),
+    })
 }
 
 #[cfg(test)]

@@ -12,9 +12,10 @@
 //! saturation), and sweeping `servers` shows what the concurrent
 //! serve stack buys once requests can overlap.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use crate::des::Sim;
+use crate::fleet::{FleetManager, GangPolicy, GpuLease, PolicyCtx};
 use crate::util::rng::Pcg32;
 use crate::util::stats;
 
@@ -157,6 +158,210 @@ pub fn simulate_open_loop_servers(
     }
 }
 
+// --- Gang-policy fleet simulation -----------------------------------
+
+/// One granted lease in simulated time (for disjointness audits and
+/// utilization plots).
+#[derive(Debug, Clone)]
+pub struct LeaseTrace {
+    pub start_s: f64,
+    pub finish_s: f64,
+    pub devices: Vec<usize>,
+}
+
+/// Aggregate results of one gang-policy serving simulation.
+#[derive(Debug, Clone)]
+pub struct GangSimStats {
+    pub policy: String,
+    pub completed: usize,
+    /// Requests the policy granted a gang the planner rejected.
+    pub failed: usize,
+    pub throughput_rps: f64,
+    pub mean_service_s: f64,
+    pub mean_sojourn_s: f64,
+    pub p95_sojourn_s: f64,
+    pub mean_gang_size: f64,
+    pub max_in_flight: usize,
+    /// Every granted lease with its lifetime (completed requests).
+    pub leases: Vec<LeaseTrace>,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum FleetEv {
+    Arrival(usize),
+    Departure(usize),
+}
+
+/// Simulate `n_requests` Poisson(`rate_rps`) arrivals served FIFO on a
+/// partitioned fleet: each request leases a gang chosen by `policy`
+/// (through the real [`FleetManager`] ledger, so grants are disjoint
+/// by construction) and holds it for `latency_of(gang)` simulated
+/// seconds. This is how the latency-vs-throughput tradeoff of a gang
+/// policy is measured offline before a deploy: `latency_of` is
+/// typically `Plan::build` + `timeline::simulate` over the candidate
+/// subset. Deterministic per seed.
+pub fn simulate_gang_policy(
+    rate_rps: f64,
+    n_requests: usize,
+    speeds: &[f64],
+    policy: &dyn GangPolicy,
+    latency_of: &dyn Fn(&[usize]) -> Option<f64>,
+    seed: u64,
+) -> GangSimStats {
+    assert!(rate_rps > 0.0 && !speeds.is_empty());
+    let mut rng = Pcg32::new(seed);
+    let mut sim: Sim<FleetEv> = Sim::new();
+    let mut t = 0.0;
+    for i in 0..n_requests {
+        let u: f64 = 1.0 - rng.next_f64();
+        t += -u.ln() / rate_rps;
+        sim.schedule(t, FleetEv::Arrival(i));
+    }
+
+    let mut st = FleetSimState {
+        fleet: FleetManager::new(speeds.len()),
+        policy,
+        speeds,
+        latency_of,
+        pending: VecDeque::new(),
+        held: HashMap::new(),
+        start: vec![f64::NAN; n_requests],
+        gangs: vec![Vec::new(); n_requests],
+        failed: 0,
+    };
+    let mut arrival = vec![f64::NAN; n_requests];
+    let mut finish = vec![f64::NAN; n_requests];
+    let mut max_in_flight = 0usize;
+
+    sim.run(|sim, now, ev| {
+        match ev {
+            FleetEv::Arrival(i) => {
+                arrival[i] = now;
+                st.pending.push_back(i);
+            }
+            FleetEv::Departure(i) => {
+                finish[i] = now;
+                st.held.remove(&i); // lease drops: devices freed
+            }
+        }
+        st.admit(sim, now);
+        max_in_flight = max_in_flight.max(st.held.len());
+        true
+    });
+
+    let done: Vec<usize> =
+        (0..n_requests).filter(|&i| finish[i].is_finite()).collect();
+    let services: Vec<f64> =
+        done.iter().map(|&i| finish[i] - st.start[i]).collect();
+    let sojourns: Vec<f64> =
+        done.iter().map(|&i| finish[i] - arrival[i]).collect();
+    let sizes: Vec<f64> =
+        done.iter().map(|&i| st.gangs[i].len() as f64).collect();
+    let total = done
+        .iter()
+        .map(|&i| finish[i])
+        .fold(0.0f64, f64::max);
+    GangSimStats {
+        policy: policy.name(),
+        completed: done.len(),
+        failed: st.failed,
+        throughput_rps: if total > 0.0 {
+            done.len() as f64 / total
+        } else {
+            0.0
+        },
+        mean_service_s: stats::mean(&services),
+        mean_sojourn_s: stats::mean(&sojourns),
+        p95_sojourn_s: stats::percentile(&sojourns, 95.0),
+        mean_gang_size: stats::mean(&sizes),
+        max_in_flight,
+        leases: done
+            .iter()
+            .map(|&i| LeaseTrace {
+                start_s: st.start[i],
+                finish_s: finish[i],
+                devices: st.gangs[i].clone(),
+            })
+            .collect(),
+    }
+}
+
+/// Mutable state of one fleet simulation run (bundled so the admit
+/// loop is a method rather than a 10-argument function).
+struct FleetSimState<'a> {
+    fleet: FleetManager,
+    policy: &'a dyn GangPolicy,
+    speeds: &'a [f64],
+    latency_of: &'a dyn Fn(&[usize]) -> Option<f64>,
+    pending: VecDeque<usize>,
+    held: HashMap<usize, GpuLease>,
+    start: Vec<f64>,
+    gangs: Vec<Vec<usize>>,
+    failed: usize,
+}
+
+impl FleetSimState<'_> {
+    /// Admit as many queued requests (FIFO) as the policy + free set
+    /// allow right now.
+    fn admit(&mut self, sim: &mut Sim<FleetEv>, now: f64) {
+        while let Some(&head) = self.pending.front() {
+            let free = self.fleet.free_devices();
+            if free.is_empty() {
+                break;
+            }
+            let ctx = PolicyCtx {
+                speeds: self.speeds,
+                queue_depth: self.pending.len() - 1,
+                in_flight: self.fleet.in_flight(),
+                predict: Some(self.latency_of),
+            };
+            let Some(gang) = self.policy.choose(&free, &ctx) else {
+                break; // policy waits (e.g. AllGpus with gaps)
+            };
+            let Ok(Some(lease)) = self.fleet.try_acquire(&gang) else {
+                break; // defensive: policy chose a busy device
+            };
+            let Some(svc) = (self.latency_of)(lease.devices()) else {
+                // Unplannable gang: fail the request rather than wedge
+                // the FIFO head forever.
+                self.pending.pop_front();
+                self.failed += 1;
+                continue; // lease drops here, devices return
+            };
+            self.pending.pop_front();
+            self.start[head] = now;
+            self.gangs[head] = lease.devices().to_vec();
+            self.held.insert(head, lease);
+            sim.schedule_in(svc, FleetEv::Departure(head));
+        }
+    }
+}
+
+/// Audit a lease trace: no two leases that overlap in time may share a
+/// device. Returns the number of overlapping pairs checked.
+pub fn assert_leases_disjoint(leases: &[LeaseTrace]) -> usize {
+    let mut checked = 0;
+    for (a, b) in leases
+        .iter()
+        .enumerate()
+        .flat_map(|(i, a)| leases[i + 1..].iter().map(move |b| (a, b)))
+    {
+        // Half-open intervals: a lease ending exactly when another
+        // starts does not overlap (the DES frees devices before the
+        // next admit at the same timestamp).
+        let overlap_time =
+            a.start_s < b.finish_s && b.start_s < a.finish_s;
+        if overlap_time {
+            checked += 1;
+            assert!(
+                a.devices.iter().all(|d| !b.devices.contains(d)),
+                "overlapping leases share a device: {a:?} vs {b:?}"
+            );
+        }
+    }
+    checked
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -247,5 +452,97 @@ mod tests {
                 assert!(t.finish_s >= t.start_s && t.start_s >= t.arrival_s);
             }
         }
+    }
+
+    // --- gang-policy fleet simulation -------------------------------
+
+    use crate::fleet::{Adaptive, AllGpus, FixedGang};
+
+    /// Toy latency model: a fixed overhead plus work divided across
+    /// the gang's total speed — bigger gangs are faster per request,
+    /// with diminishing returns (the knob the policies trade on).
+    fn toy_latency(speeds: &'static [f64]) -> impl Fn(&[usize]) -> Option<f64>
+    {
+        move |gang: &[usize]| {
+            let cap: f64 = gang.iter().map(|&d| speeds[d]).sum();
+            if cap <= 0.0 {
+                return None;
+            }
+            Some(0.05 + 1.0 / cap)
+        }
+    }
+
+    const TOY_SPEEDS: &[f64] = &[1.0, 0.9, 0.8, 0.5];
+
+    #[test]
+    fn gang_sim_all_requests_complete_and_leases_disjoint() {
+        let lat = toy_latency(TOY_SPEEDS);
+        for policy in [
+            &AllGpus as &dyn crate::fleet::GangPolicy,
+            &FixedGang(2),
+            &Adaptive::default(),
+        ] {
+            let s = simulate_gang_policy(
+                2.0, 100, TOY_SPEEDS, policy, &lat, 17,
+            );
+            assert_eq!(s.completed, 100, "policy {}", s.policy);
+            assert_eq!(s.failed, 0);
+            assert!(s.mean_gang_size >= 1.0);
+            assert_leases_disjoint(&s.leases);
+        }
+    }
+
+    #[test]
+    fn gang_sim_deterministic_per_seed() {
+        let lat = toy_latency(TOY_SPEEDS);
+        let a = simulate_gang_policy(
+            3.0, 80, TOY_SPEEDS, &Adaptive::default(), &lat, 5,
+        );
+        let b = simulate_gang_policy(
+            3.0, 80, TOY_SPEEDS, &Adaptive::default(), &lat, 5,
+        );
+        assert_eq!(a.mean_sojourn_s, b.mean_sojourn_s);
+        assert_eq!(a.throughput_rps, b.throughput_rps);
+        assert_eq!(a.mean_gang_size, b.mean_gang_size);
+    }
+
+    #[test]
+    fn sharding_beats_whole_fleet_under_load() {
+        // Under heavy load, FixedGang(2) runs two requests at once;
+        // AllGpus serializes. With the toy model's strong fixed
+        // overhead, two half-fleet gangs clear the queue faster.
+        let lat = toy_latency(TOY_SPEEDS);
+        let rate = 6.0; // well past AllGpus capacity (~2.6 rps)
+        let all =
+            simulate_gang_policy(rate, 150, TOY_SPEEDS, &AllGpus, &lat, 9);
+        let duo = simulate_gang_policy(
+            rate, 150, TOY_SPEEDS, &FixedGang(2), &lat, 9,
+        );
+        assert!(
+            duo.throughput_rps > all.throughput_rps,
+            "fixed:2 {} <= all {}",
+            duo.throughput_rps,
+            all.throughput_rps
+        );
+        // But one request on the whole fleet is served faster.
+        assert!(all.mean_service_s < duo.mean_service_s);
+    }
+
+    #[test]
+    fn unplannable_gang_counts_as_failed_not_wedged() {
+        // A latency model that rejects singleton gangs: FixedGang(1)
+        // must fail every request (planner says no) yet terminate.
+        let lat = |gang: &[usize]| -> Option<f64> {
+            if gang.len() < 2 {
+                None
+            } else {
+                Some(0.1)
+            }
+        };
+        let s = simulate_gang_policy(
+            2.0, 40, TOY_SPEEDS, &FixedGang(1), &lat, 3,
+        );
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.failed, 40);
     }
 }

@@ -1,0 +1,200 @@
+//! Fleet-allocation integration tests — all offline (no artifacts):
+//! the gang-policy DES drives the *real* `FleetManager` ledger, and
+//! per-gang latencies come from the real Eq. 4/5 planner + timeline
+//! simulator, so the latency–throughput tradeoff measured here is the
+//! one the serving stack exhibits.
+
+use stadi::config::{CommConfig, DeviceConfig, StadiParams};
+use stadi::coordinator::timeline;
+use stadi::device::{build_cluster, CostModel, SimGpu};
+use stadi::fleet::{Adaptive, AllGpus, FixedGang, GangPolicy};
+use stadi::model::schedule::Schedule;
+use stadi::runtime::artifacts::ModelInfo;
+use stadi::sched::plan::Plan;
+use stadi::serve::sim::{
+    assert_leases_disjoint, simulate_gang_policy, GangSimStats,
+};
+
+/// The paper-shaped toy model geometry (same as the timeline tests).
+fn model() -> ModelInfo {
+    ModelInfo {
+        latent_h: 32,
+        latent_w: 32,
+        latent_c: 4,
+        patch: 2,
+        dim: 96,
+        heads: 4,
+        layers: 3,
+        temb_dim: 64,
+        row_granularity: 4,
+        tokens_full: 256,
+        param_count: 1,
+        params_seed: 0,
+    }
+}
+
+/// 4-GPU heterogeneous cluster: one idle flagship down to a 50%-busy
+/// straggler.
+const OCC: [f64; 4] = [0.0, 0.1, 0.2, 0.5];
+
+fn cluster() -> Vec<SimGpu> {
+    let devs: Vec<DeviceConfig> = OCC
+        .iter()
+        .enumerate()
+        .map(|(i, &o)| DeviceConfig::new(format!("gpu{i}"), 1.0, o))
+        .collect();
+    build_cluster(&devs, CostModel { fixed_s: 0.004, per_row_s: 0.0012 })
+}
+
+fn speeds() -> Vec<f64> {
+    OCC.iter().map(|&o| 1.0 - o).collect()
+}
+
+/// Gang latency = plan the subset with the real allocators, replay it
+/// on the simulated timeline. The cluster/speeds/schedule are built
+/// once — this runs per candidate prefix per admission attempt.
+fn latency_of(gang: &[usize]) -> Option<f64> {
+    use std::sync::OnceLock;
+    static CTX: OnceLock<(Vec<SimGpu>, Vec<f64>, Schedule)> =
+        OnceLock::new();
+    let (cl, all, schedule) = CTX.get_or_init(|| {
+        (cluster(), speeds(), Schedule::scaled_linear(1000, 0.00085, 0.012))
+    });
+    let sub_speeds: Vec<f64> = gang.iter().map(|&d| all[d]).collect();
+    let names: Vec<String> =
+        gang.iter().map(|&d| format!("gpu{d}")).collect();
+    let m = model();
+    let plan = Plan::build(
+        schedule,
+        &sub_speeds,
+        &names,
+        &StadiParams::default(),
+        m.latent_h,
+        m.row_granularity,
+    )
+    .ok()?;
+    let sub: Vec<SimGpu> = gang.iter().map(|&d| cl[d].clone()).collect();
+    timeline::simulate(&plan, &sub, &CommConfig::default(), &m)
+        .ok()
+        .map(|t| t.total_s)
+}
+
+fn run(policy: &dyn GangPolicy, rate: f64, n: usize) -> GangSimStats {
+    simulate_gang_policy(rate, n, &speeds(), policy, &latency_of, 42)
+}
+
+/// The acceptance criterion: on a 4-GPU heterogeneous cluster under
+/// load (>= 2 requests in flight), the adaptive gang policy clears
+/// strictly more throughput than the whole-cluster baseline, while
+/// AllGpus keeps the lowest single-request latency — and every lease
+/// granted along the way is pairwise disjoint.
+#[test]
+fn adaptive_beats_allgpus_on_throughput_not_single_latency() {
+    // Single-request latency per policy: one request on an idle fleet.
+    let single_all = run(&AllGpus, 1.0, 1).mean_service_s;
+    let single_adaptive = run(&Adaptive::default(), 1.0, 1).mean_service_s;
+    let single_fixed = run(&FixedGang(2), 1.0, 1).mean_service_s;
+    assert!(single_all > 0.0);
+    // STADI absorbs the stragglers, so the full gang is the fastest
+    // way to serve one request; the adaptive policy's min-latency
+    // search finds the same gang (tie), fixed:2 is strictly slower.
+    assert!(
+        single_all <= single_adaptive + 1e-9,
+        "AllGpus {single_all} vs adaptive {single_adaptive}"
+    );
+    assert!(
+        single_all < single_fixed - 1e-9,
+        "AllGpus {single_all} vs fixed:2 {single_fixed}"
+    );
+
+    // Under ~2x AllGpus capacity, the queue builds and the adaptive
+    // policy shards the fleet into concurrent gangs.
+    let rate = 2.0 / single_all;
+    let n = 120;
+    let all = run(&AllGpus, rate, n);
+    let adaptive = run(&Adaptive::default(), rate, n);
+    assert_eq!(all.completed, n);
+    assert_eq!(adaptive.completed, n);
+    assert!(
+        adaptive.max_in_flight >= 2,
+        "adaptive never overlapped requests (max_in_flight {})",
+        adaptive.max_in_flight
+    );
+    assert!(all.max_in_flight == 1, "AllGpus must serialize the fleet");
+    assert!(
+        adaptive.throughput_rps > all.throughput_rps,
+        "adaptive {} rps <= AllGpus {} rps",
+        adaptive.throughput_rps,
+        all.throughput_rps
+    );
+    // Per-request service time is the price of sharding: AllGpus stays
+    // the latency king even under load.
+    assert!(all.mean_service_s <= adaptive.mean_service_s + 1e-9);
+
+    // Disjointness audit over every granted lease, and the adaptive
+    // run must actually have had time-overlapping leases to audit.
+    let all_checked = assert_leases_disjoint(&all.leases);
+    assert_eq!(all_checked, 0, "whole-cluster leases cannot overlap");
+    let adaptive_checked = assert_leases_disjoint(&adaptive.leases);
+    assert!(
+        adaptive_checked > 0,
+        "adaptive run produced no concurrent leases to audit"
+    );
+}
+
+/// Sharding helps because smaller gangs pay less sync/straggler
+/// overhead per request than their share of the fleet: two disjoint
+/// 2-gangs outrun one serialized 4-gang.
+#[test]
+fn fixed_small_gangs_raise_throughput_under_load() {
+    let single_all = run(&AllGpus, 1.0, 1).mean_service_s;
+    let rate = 2.0 / single_all;
+    let all = run(&AllGpus, rate, 100);
+    let duo = run(&FixedGang(2), rate, 100);
+    assert!(
+        duo.throughput_rps > all.throughput_rps,
+        "fixed:2 {} <= all {}",
+        duo.throughput_rps,
+        all.throughput_rps
+    );
+    assert!(duo.max_in_flight >= 2);
+    assert_leases_disjoint(&duo.leases);
+}
+
+/// Low arrival rate: the adaptive policy behaves like AllGpus (same
+/// min-latency gang), so it never pays the sharding latency tax when
+/// there is no queue to clear.
+#[test]
+fn adaptive_matches_allgpus_when_idle() {
+    let all = run(&AllGpus, 0.1, 20);
+    let adaptive = run(&Adaptive::default(), 0.1, 20);
+    assert!(
+        (adaptive.mean_service_s - all.mean_service_s).abs() < 1e-9,
+        "idle adaptive {} vs all {}",
+        adaptive.mean_service_s,
+        all.mean_service_s
+    );
+    assert!((adaptive.mean_gang_size - 4.0).abs() < 1e-9);
+}
+
+/// More devices help a single request on this cluster (the premise
+/// behind AllGpus being the latency-optimal policy above) — pin it so
+/// a cost-model change that silently breaks the premise fails here,
+/// not in the throughput assertions.
+#[test]
+fn full_gang_is_single_request_latency_optimal() {
+    let full = latency_of(&[0, 1, 2, 3]).unwrap();
+    for gang in [
+        vec![0],
+        vec![0, 1],
+        vec![0, 1, 2],
+        vec![0, 3],
+        vec![1, 2],
+    ] {
+        let t = latency_of(&gang).unwrap();
+        assert!(
+            full <= t + 1e-9,
+            "gang {gang:?} ({t}s) beat the full fleet ({full}s)"
+        );
+    }
+}

@@ -24,9 +24,10 @@ use std::time::Duration;
 
 use stadi::config::{EngineConfig, StadiParams};
 use stadi::coordinator::EngineCore;
+use stadi::fleet::FleetManager;
 use stadi::serve::router::Job;
 use stadi::serve::server::{
-    serve, serve_with, Client, JobRunner, ServeOptions,
+    serve, serve_with, serve_with_stats, Client, JobRunner, ServeOptions,
 };
 use stadi::util::json;
 
@@ -245,6 +246,96 @@ fn malformed_requests_get_error_responses() {
     drop(stream);
     stop.store(true, Ordering::SeqCst);
     server.join().unwrap().unwrap();
+}
+
+/// Stub runner that leases a GPU per job, then panics on a poison
+/// seed *while holding the lease* — the end-to-end shape of the
+/// lease-leak bug this PR guards against.
+struct LeasingPanicRunner {
+    fleet: FleetManager,
+}
+
+impl JobRunner for LeasingPanicRunner {
+    fn run(&self, job: &Job) -> (bool, String) {
+        // Non-blocking on purpose: if a previous panic leaked its
+        // lease, this returns a failure line instead of hanging the
+        // test forever.
+        match self.fleet.try_acquire(&[0]) {
+            Ok(Some(_lease)) => {
+                if job.seed == 666 {
+                    panic!("poisoned job");
+                }
+                (
+                    true,
+                    format!("{{\"id\": \"{}\", \"ok\": true}}", job.id),
+                )
+                // _lease drops here — and during the panic unwind.
+            }
+            _ => (
+                false,
+                format!(
+                    "{{\"id\": \"{}\", \"ok\": false, \
+                     \"error\": \"device still leased — leak!\"}}",
+                    job.id
+                ),
+            ),
+        }
+    }
+}
+
+/// Regression test: a panicking job must (a) release its GPU lease via
+/// the unwind through `catch_unwind`, so the very next job can lease
+/// the same device, and (b) be counted as failed in `RouterStats`.
+#[test]
+fn panicking_job_releases_lease_and_counts_failed() {
+    let fleet = FleetManager::new(1);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let stop = Arc::clone(&stop);
+        let fleet = fleet.clone();
+        thread::spawn(move || {
+            serve_with_stats(
+                Arc::new(LeasingPanicRunner { fleet }),
+                listener,
+                opts(8, 1, 0), // one worker: a swallowed panic or a
+                // leaked lease would wedge every later job
+                Some(stop),
+            )
+        })
+    };
+
+    let mut client = Client::connect(&addr).unwrap();
+    // Poison job first, then two healthy ones on the same device.
+    let line = client.request("bad", 666).unwrap();
+    let v = json::parse(&line).unwrap();
+    assert!(!v.get("ok").unwrap().as_bool().unwrap());
+    assert!(v
+        .get("error")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .contains("panicked"));
+    for i in 0..2 {
+        let line = client.request(&format!("good{i}"), i).unwrap();
+        let v = json::parse(&line).unwrap();
+        assert!(
+            v.get("ok").unwrap().as_bool().unwrap(),
+            "job after panic failed (leaked lease?): {line}"
+        );
+    }
+    drop(client);
+
+    stop.store(true, Ordering::SeqCst);
+    let (handled, stats) = server.join().unwrap().unwrap();
+    assert_eq!(handled, 3);
+    assert_eq!(stats.admitted, 3);
+    assert_eq!(stats.completed, 2);
+    assert_eq!(stats.failed, 1, "panic not counted as failed");
+    // The fleet is whole again after shutdown.
+    assert_eq!(fleet.free_devices(), vec![0]);
+    assert_eq!(fleet.in_flight(), 0);
 }
 
 // --- Real-engine path (needs artifacts + xla backend) ---------------

@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
-# CI gate: formatting, lints, tests. Run from the repo root (or
-# anywhere — the script cd's to the rust crate).
+# CI gate: formatting, lints, build, tests — exits nonzero on the
+# first failure (set -e). Run from the repo root (or anywhere — the
+# script cd's to the rust crate). .github/workflows/ci.yml runs this
+# on every push/PR.
 #
 #   scripts/check.sh            # default (offline, stub runtime)
 #   scripts/check.sh --xla      # also check the real-PJRT feature
@@ -20,6 +22,9 @@ cargo fmt --check
 
 echo "== cargo clippy --all-targets -- -D warnings"
 cargo clippy --all-targets "${FEATURES[@]}" -- -D warnings
+
+echo "== cargo build --release"
+cargo build --release "${FEATURES[@]}"
 
 echo "== cargo test -q"
 cargo test -q "${FEATURES[@]}"
