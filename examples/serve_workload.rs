@@ -22,9 +22,11 @@ use stadi::config::EngineConfig;
 use stadi::coordinator::EngineCore;
 use stadi::fleet::parse_policy;
 use stadi::serve::server::{
-    drive_workload, serve, serve_fleet, ServeOptions,
+    drive_workload, serve, serve_fleet, Client, ServeOptions,
 };
+use stadi::spec::{GenerationSpec, Priority, Quality};
 use stadi::util::cli::Command;
+use stadi::util::json;
 
 const N_REQUESTS: usize = 8;
 
@@ -108,6 +110,44 @@ fn main() -> stadi::Result<()> {
         "concurrency speedup: {:.2}x",
         w_seq.wall_s / w_conc.wall_s
     );
+
+    // Phase 3: protocol v2 — request-shaped specs. A draft-quality
+    // high-priority request with a deadline rides the same wire as a
+    // default (v1-equivalent) request; the response echoes the
+    // resolved spec and the plan shows the smaller step budget.
+    println!("\nprotocol v2: per-request specs");
+    let mut client = Client::connect(&addr)?;
+    let shapes = [
+        (
+            "draft-urgent",
+            GenerationSpec::new()
+                .seed(31)
+                .quality(Quality::Draft)
+                .priority(Priority::High)
+                .deadline_s(30.0),
+        ),
+        ("default", GenerationSpec::new().seed(32)),
+    ];
+    for (name, spec) in &shapes {
+        let t = std::time::Instant::now();
+        let line = client.request_spec(name, spec)?;
+        let v = json::parse(&line)?;
+        if !v.get("ok")?.as_bool()? {
+            return Err(stadi::Error::Protocol(format!(
+                "v2 request {name} failed: {line}"
+            )));
+        }
+        let echoed = v.get("spec")?;
+        println!(
+            "  {name}: {:.3}s wall, quality={} priority={} \
+             sim_latency={:.3}s",
+            t.elapsed().as_secs_f64(),
+            echoed.get("quality")?.as_str()?,
+            echoed.get("priority")?.as_str()?,
+            v.get("sim_latency_s")?.as_f64()?,
+        );
+    }
+    drop(client);
 
     stop.store(true, Ordering::SeqCst);
     let handled = server.join().expect("server thread")?;

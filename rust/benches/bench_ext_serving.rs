@@ -2,7 +2,7 @@
 //! request gains compound under load, and what the concurrent serve
 //! stack buys on top.
 //!
-//! Four measurements:
+//! Five measurements:
 //! 1. M/G/1 queueing (DES): STADI vs patch-parallel service times
 //!    under Poisson load — near saturation the sojourn-time gap far
 //!    exceeds the raw service-time gap (rho/(1-rho) amplification).
@@ -11,7 +11,14 @@
 //! 3. Gang-policy sweep (DES over the real FleetManager + planner):
 //!    all/fixed:2/adaptive on a 4-GPU heterogeneous fleet — the
 //!    latency-vs-throughput frontier of fleet partitioning.
-//! 4. Real TCP concurrency sweep: the actual server (accept loop +
+//! 4. Mixed-size / mixed-priority workload sweep (DES): small urgent
+//!    draft requests (per-spec planner pricing: fewer steps, fewer
+//!    latent rows) sharing the fleet with heavy batch requests, FIFO
+//!    vs the v2 priority/deadline router — emitted as
+//!    bench_out/BENCH_serving.json to start the perf trajectory, and
+//!    asserted: the priority router meets strictly more deadlines at
+//!    2x load.
+//! 5. Real TCP concurrency sweep: the actual server (accept loop +
 //!    worker pool + sessions on one shared core) driven by 1/2/4
 //!    concurrent client connections, measuring end-to-end throughput
 //!    and client-side p50/p95 latency.
@@ -31,10 +38,13 @@ use stadi::runtime::ExecService;
 use stadi::sched::plan::Plan;
 use stadi::serve::server::{drive_workload, serve, ServeOptions};
 use stadi::serve::sim::{
-    assert_leases_disjoint, simulate_gang_policy, simulate_open_loop,
-    simulate_open_loop_servers,
+    assert_leases_disjoint, simulate_gang_policy, simulate_mixed_workload,
+    simulate_open_loop, simulate_open_loop_servers, Discipline,
+    WorkloadClass,
 };
+use stadi::spec::Priority;
 use stadi::util::benchkit::Table;
+use stadi::util::json::{self, Object, Value};
 use stadi::util::plot::{render, Series};
 
 fn main() -> stadi::Result<()> {
@@ -223,6 +233,123 @@ fn main() -> stadi::Result<()> {
         thr_adaptive > thr_all,
         "adaptive {thr_adaptive} rps should beat AllGpus {thr_all} rps \
          under 2x load"
+    );
+
+    // --- Mixed-size / mixed-priority sweep: FIFO vs priority/EDF ----
+    println!("\n# mixed workload: FIFO vs priority/deadline router (DES)");
+    // Two request shapes priced by the real planner: a draft-quality
+    // half-height interactive request vs a full native batch request —
+    // per-spec planning is what makes their costs differ.
+    let service_of = |steps: usize, rows: usize| -> stadi::Result<f64> {
+        let p = params.for_steps(steps);
+        let plan = Plan::build(
+            &schedule, &speeds, &expt::names(2), &p, rows,
+            model.row_granularity,
+        )?;
+        Ok(timeline::simulate(&plan, &cluster, &comm, &model)?.total_s)
+    };
+    let s_small = service_of(50, model.latent_h / 2)?;
+    let s_large = service_of(params.m_base, model.latent_h)?;
+    println!(
+        "# per-spec pricing: interactive (50 steps, {} rows) = \
+         {s_small:.3}s, batch ({} steps, {} rows) = {s_large:.3}s",
+        model.latent_h / 2,
+        params.m_base,
+        model.latent_h
+    );
+    assert!(
+        s_small < 0.75 * s_large,
+        "spec-shaped planning should price the small request well \
+         below the native one ({s_small} vs {s_large})"
+    );
+    let classes = vec![
+        WorkloadClass {
+            name: "interactive".into(),
+            weight: 0.5,
+            service_s: s_small,
+            priority: Priority::High.rank(),
+            deadline_s: Some(4.0 * s_small),
+        },
+        WorkloadClass {
+            name: "batch".into(),
+            weight: 0.5,
+            service_s: s_large,
+            priority: Priority::Low.rank(),
+            deadline_s: None,
+        },
+    ];
+    let servers = 2usize;
+    let mean_service = 0.5 * s_small + 0.5 * s_large;
+    let mut mtable = Table::new(&[
+        "load", "fifo met", "prio met", "fifo hi p95", "prio hi p95",
+        "prio shed",
+    ]);
+    let mut sweep = Vec::new();
+    let mut at_2x = None;
+    for load_x in [0.5f64, 1.0, 2.0] {
+        let rate = load_x * servers as f64 / mean_service;
+        let fifo = simulate_mixed_workload(
+            rate, 400, &classes, Discipline::Fifo, servers, 29,
+        );
+        let prio = simulate_mixed_workload(
+            rate, 400, &classes, Discipline::PriorityEdf, servers, 29,
+        );
+        mtable.row(&[
+            format!("{load_x:.1}x"),
+            format!("{}/{}", fifo.deadlines_met, fifo.deadlines_total),
+            format!("{}/{}", prio.deadlines_met, prio.deadlines_total),
+            format!("{:.2}s", fifo.class("interactive").p95_sojourn_s),
+            format!("{:.2}s", prio.class("interactive").p95_sojourn_s),
+            format!("{}", prio.shed),
+        ]);
+        let mut entry = Object::new();
+        entry.insert("load_x", Value::Num(load_x));
+        entry.insert("rate_rps", Value::Num(rate));
+        for (key, s) in [("fifo", &fifo), ("priority", &prio)] {
+            let mut d = Object::new();
+            d.insert("deadlines_met", Value::Num(s.deadlines_met as f64));
+            d.insert(
+                "deadlines_total",
+                Value::Num(s.deadlines_total as f64),
+            );
+            d.insert("shed", Value::Num(s.shed as f64));
+            d.insert(
+                "hi_p95_sojourn_s",
+                Value::Num(s.class("interactive").p95_sojourn_s),
+            );
+            d.insert("throughput_rps", Value::Num(s.throughput_rps));
+            entry.insert(key, Value::Obj(d));
+        }
+        sweep.push(Value::Obj(entry));
+        if load_x == 2.0 {
+            at_2x = Some((fifo, prio));
+        }
+    }
+    mtable.print();
+    let mut bench = Object::new();
+    bench.insert("bench", Value::Str("serving_mixed_workload".into()));
+    bench.insert("service_interactive_s", Value::Num(s_small));
+    bench.insert("service_batch_s", Value::Num(s_large));
+    bench.insert("servers", Value::Num(servers as f64));
+    bench.insert("sweep", Value::Arr(sweep));
+    expt::save_results(
+        "BENCH_serving.json",
+        &json::to_string_pretty(&Value::Obj(bench)),
+    )?;
+    // Acceptance criterion: at 2x load the v2 priority/deadline router
+    // meets strictly more deadlines than FIFO and wins high-priority
+    // p95.
+    let (fifo2, prio2) = at_2x.expect("2x point swept");
+    assert!(
+        prio2.deadlines_met > fifo2.deadlines_met,
+        "priority router met {} vs FIFO {} at 2x load",
+        prio2.deadlines_met,
+        fifo2.deadlines_met
+    );
+    assert!(
+        prio2.class("interactive").p95_sojourn_s
+            < fifo2.class("interactive").p95_sojourn_s,
+        "priority router must win high-priority p95 at 2x load"
     );
 
     // --- Real TCP sweep: 1/2/4 in-flight requests end to end --------

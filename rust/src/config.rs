@@ -68,6 +68,24 @@ impl Default for StadiParams {
     }
 }
 
+impl StadiParams {
+    /// These params re-based onto a per-request step budget: M_base
+    /// becomes `steps` and M_warmup is normalized to keep the grid
+    /// invariants (warmup < steps, even remainder) — the bridge from
+    /// a `GenerationSpec` step budget to a plannable parameter set.
+    pub fn for_steps(&self, steps: usize) -> StadiParams {
+        let steps = steps.max(2);
+        StadiParams {
+            m_base: steps,
+            m_warmup: crate::sched::temporal::normalize_warmup(
+                steps,
+                self.m_warmup,
+            ),
+            ..self.clone()
+        }
+    }
+}
+
 /// Strategy for the uneven-size all-gather (paper §V "All-Gather for
 /// uneven sized tensors"): pad to max then regular all-gather, or
 /// emulate with per-rank broadcasts.
@@ -295,6 +313,23 @@ mod tests {
         cfg.stadi.a = 0.2;
         cfg.stadi.b = 0.5;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn for_steps_rebases_and_stays_valid() {
+        let base = StadiParams::default(); // m_base 100, warmup 4
+        for steps in [2usize, 3, 5, 7, 8, 50, 101, 150] {
+            let p = base.for_steps(steps);
+            assert_eq!(p.m_base, steps);
+            let mut cfg = EngineConfig::two_gpu_default("a", &[0.0]);
+            cfg.stadi = p;
+            cfg.validate().unwrap_or_else(|e| {
+                panic!("for_steps({steps}) produced invalid params: {e}")
+            });
+        }
+        // The default budget is untouched.
+        let p = base.for_steps(100);
+        assert_eq!((p.m_base, p.m_warmup), (100, 4));
     }
 
     #[test]

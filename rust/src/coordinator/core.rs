@@ -20,7 +20,7 @@
 
 use std::sync::{Arc, Mutex, RwLock, Weak};
 
-use crate::config::{EngineConfig, ExecMode};
+use crate::config::{EngineConfig, ExecMode, StadiParams};
 use crate::coordinator::{dataflow, timeline, Session};
 use crate::device::{build_cluster, CostModel, SimGpu};
 use crate::error::{Error, Result};
@@ -28,16 +28,13 @@ use crate::fleet::{FleetManager, GpuLease};
 use crate::model::schedule::Schedule;
 use crate::runtime::tensor::Tensor;
 use crate::runtime::{ExecHandle, ExecService};
-use crate::sched::plan::Plan;
-use crate::sched::Profiler;
+use crate::sched::plan::{Plan, PlanCache, PlanCacheStats, PlanKey};
+use crate::sched::{spatial, Profiler};
+use crate::spec::{GenerationSpec, VAE_FACTOR};
 
-/// One generation request.
-#[derive(Debug, Clone)]
-pub struct Request {
-    /// Seeds the initial noise and the conditioning vector (the
-    /// prompt-embedding stand-in, DESIGN.md §3).
-    pub seed: u64,
-}
+/// Bound on cached plans: the working set is "request shapes currently
+/// in the traffic mix" per device subset — far below this.
+const PLAN_CACHE_CAPACITY: usize = 128;
 
 /// Full result of one request.
 #[derive(Debug)]
@@ -49,6 +46,18 @@ pub struct Generation {
     pub timeline: timeline::Timeline,
 }
 
+/// One consistent set of planning inputs: the cache epoch (read
+/// first, to fence stale plans out of the cache if `calibrate` races
+/// the build), the (sub-)cluster, the global ids of its devices, and
+/// their effective speeds/names in the same local order.
+struct PlanSnapshot {
+    epoch: u64,
+    cluster: Vec<SimGpu>,
+    devices: Vec<usize>,
+    speeds: Vec<f64>,
+    names: Vec<String>,
+}
+
 /// Shared planning/profiling state of the STADI engine.
 pub struct EngineCore {
     config: EngineConfig,
@@ -58,6 +67,9 @@ pub struct EngineCore {
     schedule: Schedule,
     cluster: RwLock<Vec<SimGpu>>,
     profiler: Mutex<Profiler>,
+    /// Request-shape keyed plan cache: repeated (steps, rows, gang,
+    /// quantized speeds) shapes skip Eq. 4/5. Cleared on `calibrate`.
+    plans: PlanCache,
     /// Handle to our own `Arc` (constructors only hand out `Arc`s), so
     /// `&self` methods can mint owned clones for sessions without the
     /// unstable `self: &Arc<Self>` receiver.
@@ -89,17 +101,21 @@ impl EngineCore {
             schedule,
             cluster: RwLock::new(cluster),
             profiler: Mutex::new(profiler),
+            plans: PlanCache::new(PLAN_CACHE_CAPACITY),
             self_ref: self_ref.clone(),
         }))
     }
 
     /// Re-calibrate the per-step cost model from real PJRT timings and
     /// swap in a rebuilt cluster. Sessions opened before this keep
-    /// their snapshot (mid-flight requests are never re-planned).
+    /// their snapshot (mid-flight requests are never re-planned);
+    /// cached plans are dropped (the cost-aware allocator depends on
+    /// the cost model).
     pub fn calibrate(&self, reps: usize) -> Result<CostModel> {
         let cost = self.exec.calibrate(reps)?;
         *self.cluster.write().unwrap() =
             build_cluster(&self.config.devices, cost);
+        self.plans.clear();
         Ok(cost)
     }
 
@@ -133,60 +149,136 @@ impl EngineCore {
         self.profiler.lock().unwrap().record_step(device, rows, seconds);
     }
 
-    /// Build the joint plan for current effective speeds.
+    /// Build the joint plan for current effective speeds under the
+    /// default spec (the engine's global configuration).
     pub fn plan(&self) -> Result<Plan> {
-        self.plan_for(&self.cluster())
+        self.plan_for(&GenerationSpec::default())
     }
 
-    /// Plan against an explicit cluster snapshot, so a session's plan
-    /// and cluster stay mutually consistent even if [`Self::calibrate`]
-    /// swaps the shared cluster between the two reads.
-    fn plan_for(&self, cluster: &[SimGpu]) -> Result<Plan> {
+    /// Request-shaped planning: M_base / warmup derive from the spec's
+    /// step budget (quality tier included) and the spatial row split
+    /// from the spec's height — not from the engine's global schedule.
+    /// Cached by [`PlanKey`], so repeated shapes skip Eq. 4/5.
+    pub fn plan_for(&self, spec: &GenerationSpec) -> Result<Plan> {
+        let snap = self.whole_cluster_parts();
+        self.plan_snapshot(spec, &snap)
+    }
+
+    /// One consistent whole-cluster planning snapshot. The cache epoch
+    /// is read *first*: if `calibrate` swaps the cost model (and
+    /// clears the cache) after this snapshot, plans built from it are
+    /// returned to their caller but fenced out of the cache.
+    fn whole_cluster_parts(&self) -> PlanSnapshot {
+        let epoch = self.plans.epoch();
+        let cluster = self.cluster();
+        let devices: Vec<usize> = (0..cluster.len()).collect();
         let speeds = self.effective_speeds();
         let names: Vec<String> =
             self.config.devices.iter().map(|d| d.name.clone()).collect();
-        self.plan_parts(cluster, &speeds, &names)
+        PlanSnapshot { epoch, cluster, devices, speeds, names }
     }
 
-    /// Plan over explicit (cluster, speeds, names) triples — the
-    /// subset-agnostic core both whole-cluster and gang sessions use.
-    /// Eq. 4 normalizes to the slice's own v_max and Eq. 5 mends
-    /// patches over whatever devices it is given, so a gang plans
-    /// exactly like a small cluster.
-    fn plan_parts(
+    /// Resolve a spec against this engine: re-based STADI params
+    /// (normalized warmup) and the latent rows the request plans over.
+    fn spec_params(
         &self,
-        cluster: &[SimGpu],
-        speeds: &[f64],
-        names: &[String],
-    ) -> Result<Plan> {
+        spec: &GenerationSpec,
+    ) -> Result<(StadiParams, usize)> {
+        spec.validate()?;
         let m = &self.exec.manifest().model;
-        if self.config.stadi.cost_aware && self.config.stadi.spatial {
-            return Plan::build_cost_aware(
-                &self.schedule,
-                speeds,
-                names,
-                &self.config.stadi,
-                &cluster[0].cost,
-                m.latent_h,
+        let params = self
+            .config
+            .stadi
+            .for_steps(spec.effective_steps(self.config.stadi.m_base));
+        let rows = spec.latent_rows(m.latent_h);
+        if rows == 0 || rows % m.row_granularity != 0 {
+            return Err(Error::Spec(format!(
+                "height {}px maps to {rows} latent rows — needs a \
+                 positive multiple of {} rows ({}px)",
+                spec.height_px.unwrap_or(m.latent_h * VAE_FACTOR),
                 m.row_granularity,
-            );
+                m.row_granularity * VAE_FACTOR,
+            )));
         }
-        Plan::build(
-            &self.schedule,
-            speeds,
-            names,
-            &self.config.stadi,
-            m.latent_h,
-            m.row_granularity,
-        )
+        Ok((params, rows))
     }
 
-    /// Select the (cluster, speeds, names) restriction for a device
-    /// subset, from one consistent snapshot.
-    fn subset_parts(
+    /// Plan a spec over one [`PlanSnapshot`] — the subset-agnostic
+    /// core both whole-cluster and gang planning use. Eq. 4 normalizes
+    /// to the slice's own v_max and Eq. 5 mends patches over whatever
+    /// devices it is given, so a gang plans exactly like a small
+    /// cluster. `snap.devices` are the global ids (the cache key
+    /// identity of the slice).
+    fn plan_snapshot(
         &self,
-        devices: &[usize],
-    ) -> Result<(Vec<SimGpu>, Vec<f64>, Vec<String>)> {
+        spec: &GenerationSpec,
+        snap: &PlanSnapshot,
+    ) -> Result<Plan> {
+        let (params, rows) = self.spec_params(spec)?;
+        let granularity = self.exec.manifest().model.row_granularity;
+        let key = PlanKey::new(&params, rows, &snap.devices, &snap.speeds);
+        self.plans.get_or_build_at(snap.epoch, key, || {
+            if params.cost_aware && params.spatial {
+                return Plan::build_cost_aware(
+                    &self.schedule,
+                    &snap.speeds,
+                    &snap.names,
+                    &params,
+                    &snap.cluster[0].cost,
+                    rows,
+                    granularity,
+                );
+            }
+            Plan::build(
+                &self.schedule,
+                &snap.speeds,
+                &snap.names,
+                &params,
+                rows,
+                granularity,
+            )
+        })
+    }
+
+    /// Plan-cache hit/miss counters (benches assert repeated shapes
+    /// stop re-running Eq. 4/5).
+    pub fn plan_cache_stats(&self) -> PlanCacheStats {
+        self.plans.stats()
+    }
+
+    /// Largest gang a spec's latent can feed (every device needs at
+    /// least one granule-aligned patch row range).
+    pub fn max_gang_for(&self, spec: &GenerationSpec) -> Result<usize> {
+        let (_, rows) = self.spec_params(spec)?;
+        Ok(spatial::max_gang(
+            rows,
+            self.exec.manifest().model.row_granularity,
+        ))
+    }
+
+    /// Execution (unlike planning/prediction) is bound to the
+    /// resolution the artifacts were AOT-compiled for.
+    fn check_executable(&self, spec: &GenerationSpec) -> Result<()> {
+        let m = &self.exec.manifest().model;
+        if !spec.is_native_size(m.latent_h, m.latent_w) {
+            return Err(Error::Spec(format!(
+                "resolution {}x{} is not executable: artifacts are \
+                 AOT'd for the native {}x{} only (non-native sizes are \
+                 plan/predict-only)",
+                spec.height_px.unwrap_or(m.latent_h * VAE_FACTOR),
+                spec.width_px.unwrap_or(m.latent_w * VAE_FACTOR),
+                m.latent_h * VAE_FACTOR,
+                m.latent_w * VAE_FACTOR,
+            )));
+        }
+        Ok(())
+    }
+
+    /// Select the planning snapshot restricted to a device subset,
+    /// from one consistent read (cache epoch first, as in
+    /// [`Self::whole_cluster_parts`]).
+    fn subset_parts(&self, devices: &[usize]) -> Result<PlanSnapshot> {
+        let epoch = self.plans.epoch();
         let cluster = self.cluster();
         if devices.is_empty() {
             return Err(Error::Sched("empty device subset".into()));
@@ -208,7 +300,13 @@ impl EngineCore {
             .iter()
             .map(|&d| self.config.devices[d].name.clone())
             .collect();
-        Ok((sub_cluster, speeds, names))
+        Ok(PlanSnapshot {
+            epoch,
+            cluster: sub_cluster,
+            devices: devices.to_vec(),
+            speeds,
+            names,
+        })
     }
 
     fn owned(&self) -> Arc<EngineCore> {
@@ -217,34 +315,52 @@ impl EngineCore {
             .expect("EngineCore is only constructed inside an Arc")
     }
 
-    /// Open an execution session on a freshly-built plan. The plan and
-    /// the session's cluster derive from one snapshot.
+    /// Open an execution session under the default spec.
     pub fn session(&self) -> Result<Session> {
-        let cluster = self.cluster();
-        let plan = self.plan_for(&cluster)?;
-        Ok(Session::new(self.owned(), plan, cluster))
+        self.session_for(&GenerationSpec::default())
+    }
+
+    /// Open an execution session on a freshly-built request-shaped
+    /// plan. The plan and the session's cluster derive from one
+    /// snapshot. Rejects specs the artifacts cannot execute
+    /// (non-native resolutions) with a typed [`Error::Spec`].
+    pub fn session_for(&self, spec: &GenerationSpec) -> Result<Session> {
+        self.check_executable(spec)?;
+        let snap = self.whole_cluster_parts();
+        let plan = self.plan_snapshot(spec, &snap)?;
+        Ok(Session::new(self.owned(), plan, snap.cluster))
     }
 
     /// Open an execution session on an explicit plan — the escape
     /// hatch for callers that build plans themselves (sweeping explicit
     /// plans, replaying a saved plan). The serving path does not use
-    /// it: every request plans freshly via [`Self::session`].
+    /// it: every request plans freshly via [`Self::session_for`].
     pub fn session_with_plan(&self, plan: Plan) -> Session {
         Session::new(self.owned(), plan, self.cluster())
     }
 
-    /// Open a session restricted to a leased device subset: Eq. 4 /
-    /// Eq. 5 allocate over the gang only, so disjoint leases execute
-    /// truly concurrently. Plan, sub-cluster and speeds derive from
-    /// one snapshot; measured timings feed back under *global* device
-    /// ids via the session's device map.
+    /// Open a default-spec session restricted to a leased subset.
     pub fn session_on(&self, lease: &GpuLease) -> Result<Session> {
-        let (sub, speeds, names) = self.subset_parts(lease.devices())?;
-        let plan = self.plan_parts(&sub, &speeds, &names)?;
+        self.session_for_on(&GenerationSpec::default(), lease)
+    }
+
+    /// The lease variant of [`Self::session_for`]: Eq. 4 / Eq. 5
+    /// allocate the spec's steps and rows over the gang only, so
+    /// disjoint leases execute truly concurrently. Plan, sub-cluster
+    /// and speeds derive from one snapshot; measured timings feed back
+    /// under *global* device ids via the session's device map.
+    pub fn session_for_on(
+        &self,
+        spec: &GenerationSpec,
+        lease: &GpuLease,
+    ) -> Result<Session> {
+        self.check_executable(spec)?;
+        let snap = self.subset_parts(lease.devices())?;
+        let plan = self.plan_snapshot(spec, &snap)?;
         Ok(Session::with_map(
             self.owned(),
             plan,
-            sub,
+            snap.cluster,
             lease.devices().to_vec(),
         ))
     }
@@ -254,31 +370,44 @@ impl EngineCore {
         FleetManager::new(self.config.devices.len())
     }
 
-    /// Predicted end-to-end latency of one request on a device subset:
-    /// plan the gang at current effective speeds and replay it on the
-    /// simulated timeline. This is the gang-policy predictor — the
-    /// same model the latency figures use, so admission decisions and
-    /// reported numbers can't drift apart.
+    /// Predicted default-spec latency on a device subset.
     pub fn predict_latency(&self, devices: &[usize]) -> Result<f64> {
-        let (sub, speeds, names) = self.subset_parts(devices)?;
-        let plan = self.plan_parts(&sub, &speeds, &names)?;
+        self.predict_latency_for(&GenerationSpec::default(), devices)
+    }
+
+    /// Predicted end-to-end latency of one *spec-shaped* request on a
+    /// device subset: plan the gang at current effective speeds and
+    /// replay it on the simulated timeline. This is the gang-policy
+    /// predictor — the same model the latency figures use, so
+    /// admission decisions and reported numbers can't drift apart, and
+    /// it prices the request's own steps and rows (a draft-quality
+    /// 128px request costs a fraction of a native one), which is what
+    /// lets policies size gangs per request.
+    pub fn predict_latency_for(
+        &self,
+        spec: &GenerationSpec,
+        devices: &[usize],
+    ) -> Result<f64> {
+        let snap = self.subset_parts(devices)?;
+        let plan = self.plan_snapshot(spec, &snap)?;
         let tl = timeline::simulate(
             &plan,
-            &sub,
+            &snap.cluster,
             &self.config.comm,
             &self.exec.manifest().model,
         )?;
         Ok(tl.total_s)
     }
 
-    /// Plan + execute one request (one-shot convenience).
-    pub fn generate(&self, req: &Request) -> Result<Generation> {
-        self.session()?.execute(req)
+    /// Plan + execute one spec-shaped request (one-shot convenience).
+    pub fn generate(&self, spec: &GenerationSpec) -> Result<Generation> {
+        self.session_for(spec)?.execute(spec)
     }
 
-    /// Convenience: generate from a bare seed.
+    /// Convenience: generate under the default spec from a bare seed
+    /// (the v1 request shape).
     pub fn generate_seeded(&self, seed: u64) -> Result<Generation> {
-        self.generate(&Request { seed })
+        self.generate(&GenerationSpec::new().seed(seed))
     }
 
     /// Latency-only simulation of a plan (no numerics) against the
@@ -345,10 +474,10 @@ mod tests {
         // explicit-plan escape hatch to exercise it.
         let plan = core.plan().unwrap();
         let session = core.session_with_plan(plan);
-        let a = session.execute(&Request { seed: 5 }).unwrap();
-        let b = session.execute(&Request { seed: 5 }).unwrap();
+        let a = session.execute_seeded(5).unwrap();
+        let b = session.execute_seeded(5).unwrap();
         assert_eq!(a.latent, b.latent);
-        let c = session.execute(&Request { seed: 6 }).unwrap();
+        let c = session.execute_seeded(6).unwrap();
         assert!(a.latent.max_abs_diff(&c.latent) > 1e-3);
     }
 
@@ -378,7 +507,7 @@ mod tests {
         assert_eq!(session.plan().devices.len(), 1);
         assert_eq!(session.plan().total_rows(), 32);
         assert_eq!(session.plan().devices[0].name, "gpu1");
-        let g = session.execute(&Request { seed: 9 }).unwrap();
+        let g = session.execute_seeded(9).unwrap();
         assert_eq!(g.latent.shape, vec![32, 32, 4]);
         assert!(g.timeline.total_s > 0.0);
         // Profiler feedback lands under global ids: the full-cluster
@@ -390,6 +519,96 @@ mod tests {
         let full = core.predict_latency(&[0, 1]).unwrap();
         let solo = core.predict_latency(&[1]).unwrap();
         assert!(full > 0.0 && solo > full);
+    }
+
+    #[test]
+    fn spec_shapes_the_plan_and_default_spec_matches_global() {
+        use crate::spec::Quality;
+        let Some(cfg) = config(&[0.0, 0.4]) else { return };
+        let core = EngineCore::new(cfg).unwrap();
+        // Default spec == the global schedule path, bit for bit.
+        let global = core.plan().unwrap();
+        let via_spec = core.plan_for(&GenerationSpec::default()).unwrap();
+        assert_eq!(global.params.m_base, via_spec.params.m_base);
+        assert_eq!(global.total_rows(), via_spec.total_rows());
+        assert_eq!(global.sync_points, via_spec.sync_points);
+        // An explicit step budget re-bases M_base; height re-shapes
+        // the row split (16 latent rows from 128px at VAE factor 8).
+        let spec = GenerationSpec::new().steps(6).size(128, 256);
+        let p = core.plan_for(&spec).unwrap();
+        assert_eq!(p.params.m_base, 6);
+        assert!(p.params.m_warmup < 6);
+        assert_eq!(p.total_rows(), 16);
+        // Quality tiers scale the configured budget (m_base is 8 in
+        // this fixture, so draft = 4).
+        let p = core
+            .plan_for(&GenerationSpec::new().quality(Quality::Draft))
+            .unwrap();
+        assert_eq!(p.params.m_base, 4);
+        // Misaligned height is a typed spec error.
+        let e = core
+            .plan_for(&GenerationSpec::new().size(8, 256))
+            .unwrap_err();
+        assert!(matches!(e, Error::Spec(_)), "{e}");
+    }
+
+    #[test]
+    fn repeated_spec_shapes_hit_the_plan_cache() {
+        let Some(cfg) = config(&[0.0, 0.4]) else { return };
+        let core = EngineCore::new(cfg).unwrap();
+        let spec = GenerationSpec::new().steps(6);
+        core.plan_for(&spec).unwrap();
+        let after_first = core.plan_cache_stats();
+        assert_eq!(after_first.misses, 1);
+        for _ in 0..3 {
+            core.plan_for(&spec).unwrap();
+        }
+        let s = core.plan_cache_stats();
+        assert_eq!(s.misses, 1, "repeated shape re-ran Eq. 4/5");
+        assert_eq!(s.hits, 3);
+        // A different shape misses; calibrate clears the cache.
+        core.plan_for(&GenerationSpec::new().steps(8)).unwrap();
+        assert_eq!(core.plan_cache_stats().misses, 2);
+        core.calibrate(1).unwrap();
+        core.plan_for(&spec).unwrap();
+        assert_eq!(core.plan_cache_stats().misses, 3);
+    }
+
+    #[test]
+    fn non_native_specs_predict_but_do_not_execute() {
+        let Some(cfg) = config(&[0.0, 0.4]) else { return };
+        let core = EngineCore::new(cfg).unwrap();
+        let small = GenerationSpec::new().steps(4).size(128, 256);
+        // Planning and prediction work — and price the smaller,
+        // shorter request below the native default.
+        let t_small = core.predict_latency_for(&small, &[0, 1]).unwrap();
+        let t_full = core.predict_latency(&[0, 1]).unwrap();
+        assert!(
+            t_small < t_full,
+            "small spec {t_small}s not cheaper than native {t_full}s"
+        );
+        // Execution is AOT-bound: typed rejection, not a wrong image.
+        let e = core.session_for(&small).unwrap_err();
+        assert!(matches!(e, Error::Spec(_)), "{e}");
+        let e = core.generate(&small).unwrap_err();
+        assert!(matches!(e, Error::Spec(_)), "{e}");
+        // max_gang_for reflects the small latent: 16 rows / 4 = 4.
+        assert_eq!(core.max_gang_for(&small).unwrap(), 4);
+    }
+
+    #[test]
+    fn spec_session_on_lease_plans_spec_steps() {
+        let Some(cfg) = config(&[0.0, 0.4]) else { return };
+        let core = EngineCore::new(cfg).unwrap();
+        let fleet = core.fleet();
+        let lease = fleet.try_acquire(&[1]).unwrap().unwrap();
+        let spec = GenerationSpec::new().seed(3).steps(4);
+        let session = core.session_for_on(&spec, &lease).unwrap();
+        assert_eq!(session.plan().params.m_base, 4);
+        assert_eq!(session.devices(), &[1]);
+        let g = session.execute(&spec).unwrap();
+        assert_eq!(g.latent.shape, vec![32, 32, 4]);
+        assert_eq!(g.plan.devices.len(), 1);
     }
 
     #[test]

@@ -20,5 +20,5 @@ pub mod threaded;
 pub mod timeline;
 
 // `self::` disambiguates from the built-in `core` crate (E0659).
-pub use self::core::{EngineCore, Generation, Request};
+pub use self::core::{EngineCore, Generation};
 pub use self::session::Session;

@@ -16,12 +16,13 @@
 use std::sync::Arc;
 
 use crate::config::ExecMode;
-use crate::coordinator::core::{EngineCore, Generation, Request};
+use crate::coordinator::core::{EngineCore, Generation};
 use crate::coordinator::{dataflow, threaded, timeline};
 use crate::device::SimGpu;
 use crate::error::Result;
 use crate::model::latents::{seeded_cond, seeded_noise};
 use crate::sched::plan::Plan;
+use crate::spec::GenerationSpec;
 
 /// A lightweight execution session: plan snapshot + cluster snapshot.
 pub struct Session {
@@ -70,7 +71,16 @@ impl Session {
     /// the dataflow or threaded executor (per config), then feed
     /// measured per-step compute back into the shared profiler and
     /// simulate the heterogeneous-cluster timeline.
-    pub fn execute(&self, req: &Request) -> Result<Generation> {
+    ///
+    /// Only the spec's `seed` matters here — the shape-determining
+    /// fields (steps, size) were consumed when the session's plan was
+    /// built by [`EngineCore::session_for`].
+    pub fn execute(&self, spec: &GenerationSpec) -> Result<Generation> {
+        self.execute_seeded(spec.seed)
+    }
+
+    /// Execute from a bare seed.
+    pub fn execute_seeded(&self, seed: u64) -> Result<Generation> {
         let exec = self.core.exec();
         let model = exec.manifest().model.clone();
         // Pre-compile every artifact the plan needs so compilation
@@ -83,8 +93,8 @@ impl Session {
             .map(|d| format!("denoiser_h{}", d.rows.rows))
             .collect();
         exec.warm(&keys)?;
-        let noise = seeded_noise(&model, req.seed);
-        let cond = seeded_cond(&model, req.seed);
+        let noise = seeded_noise(&model, seed);
+        let cond = seeded_cond(&model, seed);
         let out = match self.core.mode() {
             ExecMode::Dataflow => {
                 dataflow::execute(exec, &self.plan, &noise, &cond)?
@@ -125,10 +135,5 @@ impl Session {
             stats: out.stats,
             timeline: tl,
         })
-    }
-
-    /// Execute from a bare seed.
-    pub fn execute_seeded(&self, seed: u64) -> Result<Generation> {
-        self.execute(&Request { seed })
     }
 }

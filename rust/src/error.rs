@@ -28,8 +28,20 @@ pub enum Error {
     Sched(String),
     /// Communication layer failures (peer gone, size mismatch).
     Comm(String),
-    /// Serving protocol violations.
+    /// Serving protocol violations (malformed request lines, missing
+    /// fields — wire code `bad_request`).
     Protocol(String),
+    /// Invalid per-request [`GenerationSpec`](crate::spec::GenerationSpec)
+    /// — out-of-range fields, negative seeds, non-executable
+    /// resolutions (wire code `bad_spec`).
+    Spec(String),
+    /// The request's deadline passed before service started; the
+    /// router sheds it on dequeue (wire code `deadline`). Carries the
+    /// requested budget and how late dequeue was, as structured fields.
+    DeadlineExceeded { deadline_s: f64, late_by_s: f64 },
+    /// The server is shutting down / the router is closed (wire code
+    /// `shutdown`).
+    Shutdown,
     /// Admission control: the router queue is full. Carries the queue
     /// depth observed at rejection so the wire protocol can report it
     /// as a structured field rather than leaking it into the message.
@@ -52,6 +64,13 @@ impl fmt::Display for Error {
             Error::Sched(m) => write!(f, "sched: {m}"),
             Error::Comm(m) => write!(f, "comm: {m}"),
             Error::Protocol(m) => write!(f, "protocol: {m}"),
+            Error::Spec(m) => write!(f, "spec: {m}"),
+            Error::DeadlineExceeded { deadline_s, late_by_s } => write!(
+                f,
+                "deadline exceeded: {deadline_s}s budget missed by \
+                 {late_by_s:.3}s before service started"
+            ),
+            Error::Shutdown => write!(f, "server shutting down"),
             Error::Busy { queue_depth } => {
                 write!(f, "busy: queue full (depth {queue_depth})")
             }
@@ -80,6 +99,19 @@ impl Error {
     pub fn msg(m: impl Into<String>) -> Self {
         Error::Other(m.into())
     }
+
+    /// Stable machine-readable wire code for error response lines.
+    /// Clients dispatch on this, never on the message text.
+    pub fn wire_code(&self) -> &'static str {
+        match self {
+            Error::Busy { .. } => "busy",
+            Error::Spec(_) => "bad_spec",
+            Error::DeadlineExceeded { .. } => "deadline",
+            Error::Shutdown => "shutdown",
+            Error::Json { .. } | Error::Protocol(_) => "bad_request",
+            _ => "error",
+        }
+    }
 }
 
 #[cfg(test)]
@@ -99,6 +131,24 @@ mod tests {
         let e = Error::Busy { queue_depth: 7 };
         assert!(e.to_string().contains("depth 7"));
         assert!(matches!(e, Error::Busy { queue_depth: 7 }));
+    }
+
+    #[test]
+    fn wire_codes_are_stable() {
+        assert_eq!(Error::Busy { queue_depth: 1 }.wire_code(), "busy");
+        assert_eq!(Error::Spec("x".into()).wire_code(), "bad_spec");
+        assert_eq!(
+            Error::DeadlineExceeded { deadline_s: 1.0, late_by_s: 0.1 }
+                .wire_code(),
+            "deadline"
+        );
+        assert_eq!(Error::Shutdown.wire_code(), "shutdown");
+        assert_eq!(
+            Error::Json { offset: 0, msg: "x".into() }.wire_code(),
+            "bad_request"
+        );
+        assert_eq!(Error::Protocol("x".into()).wire_code(), "bad_request");
+        assert_eq!(Error::Sched("x".into()).wire_code(), "error");
     }
 
     #[test]

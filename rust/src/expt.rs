@@ -28,9 +28,9 @@ pub fn artifacts_available() -> bool {
 pub fn skip_reason() -> Option<&'static str> {
     if !cfg!(feature = "xla-backend") {
         return Some(
-            "built without the xla-backend feature — uncomment the \
-             `xla` dep in rust/Cargo.toml and build with \
-             `--features xla-backend`",
+            "built without the xla-backend feature — point the `xla` \
+             dep in rust/Cargo.toml at real xla-rs (default: the \
+             offline API stub) and build with `--features xla-backend`",
         );
     }
     if !artifacts_dir().join("manifest.json").exists() {

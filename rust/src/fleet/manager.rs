@@ -22,6 +22,7 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 
 use crate::error::{Error, Result};
 use crate::fleet::policy::{GangPolicy, PolicyCtx};
+use crate::spec::Priority;
 
 #[derive(Debug)]
 struct Ledger {
@@ -189,6 +190,33 @@ impl FleetManager {
         predict: Option<&dyn Fn(&[usize]) -> Option<f64>>,
         backlog: usize,
     ) -> Result<GpuLease> {
+        self.acquire_for(
+            policy,
+            speeds,
+            predict,
+            backlog,
+            Priority::Normal,
+            None,
+        )
+    }
+
+    /// [`Self::acquire`] with the request's shape attached: priority
+    /// tier and remaining deadline budget flow into the
+    /// [`PolicyCtx`], so SLO-aware policies (e.g.
+    /// [`Deadline`](crate::fleet::Deadline)) can size the gang against
+    /// *this* request rather than an average one. The deadline budget
+    /// is re-measured against the wall clock on every retry of the
+    /// snapshot loop — time spent blocked waiting for a lease counts
+    /// against the SLO.
+    pub fn acquire_for(
+        &self,
+        policy: &dyn GangPolicy,
+        speeds: &[f64],
+        predict: Option<&dyn Fn(&[usize]) -> Option<f64>>,
+        backlog: usize,
+        priority: Priority,
+        deadline: Option<std::time::Instant>,
+    ) -> Result<GpuLease> {
         if speeds.len() != self.inner.n {
             return Err(Error::Sched(format!(
                 "speeds length {} != fleet size {}",
@@ -216,8 +244,24 @@ impl FleetManager {
             let decision = if free.is_empty() {
                 None
             } else {
-                let ctx =
-                    PolicyCtx { speeds, queue_depth, in_flight, predict };
+                let now = std::time::Instant::now();
+                let ctx = PolicyCtx {
+                    speeds,
+                    queue_depth,
+                    in_flight,
+                    predict,
+                    priority,
+                    // Signed remaining budget: negative once blown, so
+                    // the policy sees "already late" rather than a
+                    // vanished SLO.
+                    deadline_s: deadline.map(|d| {
+                        if d >= now {
+                            (d - now).as_secs_f64()
+                        } else {
+                            -((now - d).as_secs_f64())
+                        }
+                    }),
+                };
                 policy.choose(&free, &ctx)
             };
             // ...revalidate and grant against fresh state.

@@ -33,4 +33,7 @@ pub mod manager;
 pub mod policy;
 
 pub use manager::{FleetManager, GpuLease};
-pub use policy::{parse_policy, Adaptive, AllGpus, FixedGang, GangPolicy, PolicyCtx};
+pub use policy::{
+    parse_policy, Adaptive, AllGpus, Deadline, FixedGang, GangPolicy,
+    PolicyCtx,
+};

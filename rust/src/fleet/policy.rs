@@ -9,6 +9,7 @@
 //! `simulate_latency` timeline) and decides per request.
 
 use crate::error::{Error, Result};
+use crate::spec::Priority;
 
 /// Everything a policy may consult when choosing a gang.
 pub struct PolicyCtx<'a> {
@@ -22,8 +23,16 @@ pub struct PolicyCtx<'a> {
     /// Predicted end-to-end latency of running one request on a
     /// candidate gang (global device ids); `None` entries mean the
     /// subset is unplannable. Policies must tolerate a missing
-    /// predictor (offline / degraded mode).
+    /// predictor (offline / degraded mode). The serving path binds
+    /// this per request (it closes over the request's
+    /// [`GenerationSpec`](crate::spec::GenerationSpec)), so the
+    /// prediction prices the request's own steps and rows.
     pub predict: Option<&'a dyn Fn(&[usize]) -> Option<f64>>,
+    /// Priority tier of the request being placed.
+    pub priority: Priority,
+    /// Seconds left until the request's deadline (`None` = no SLO;
+    /// may be ≤ 0 if it expired while waiting for a lease).
+    pub deadline_s: Option<f64>,
 }
 
 impl PolicyCtx<'_> {
@@ -119,26 +128,7 @@ impl GangPolicy for Adaptive {
         }
         let sorted = by_speed_desc(free, ctx.speeds);
         if ctx.queue_depth < self.load_threshold {
-            // Min-latency prefix search (fastest-first prefixes are
-            // the natural candidates: a slower device only ever joins
-            // after every faster one).
-            let mut best: Option<(f64, usize)> = None;
-            for k in 1..=sorted.len() {
-                if let Some(t) = ctx.predict_gang(&sorted[..k]) {
-                    let better = match best {
-                        None => true,
-                        Some((bt, _)) => t < bt,
-                    };
-                    if better {
-                        best = Some((t, k));
-                    }
-                }
-            }
-            let k = match best {
-                Some((_, k)) => k,
-                None => sorted.len(), // no predictor: take everything
-            };
-            return Some(sorted[..k].to_vec());
+            return Some(min_latency_prefix(&sorted, ctx));
         }
         // Shard mode: give this request ceil(free / demand) devices so
         // the waiting requests behind it can gang up on the rest.
@@ -146,6 +136,83 @@ impl GangPolicy for Adaptive {
         let k = sorted.len().div_ceil(demand).max(1);
         Some(balanced_pick(&sorted, k))
     }
+}
+
+/// SLO-driven gang sizing: give each request the *fewest* GPUs that
+/// still meet its deadline, and only fall back to latency-optimal
+/// gangs when no SLO is attached.
+///
+/// * With a deadline and a predictor: take the smallest fastest-first
+///   prefix whose predicted latency (scaled by `slack`) fits the
+///   remaining budget — a small/urgent request (tight deadline but a
+///   cheap spec) lands on one or two GPUs and leaves the rest free
+///   for concurrent requests. If nothing fits (deadline already blown
+///   or the request is simply too big), fall back to the
+///   min-predicted-latency prefix: best effort beats giving up.
+/// * Without a deadline: high-priority requests get the min-latency
+///   prefix; everything else defers to [`Adaptive`] (shard under
+///   load).
+pub struct Deadline {
+    /// Multiplicative safety margin on predicted latency (prediction
+    /// is a model, not a measurement).
+    pub slack: f64,
+    fallback: Adaptive,
+}
+
+impl Default for Deadline {
+    fn default() -> Self {
+        Deadline { slack: 1.2, fallback: Adaptive::default() }
+    }
+}
+
+impl GangPolicy for Deadline {
+    fn name(&self) -> String {
+        "deadline".into()
+    }
+
+    fn choose(&self, free: &[usize], ctx: &PolicyCtx) -> Option<Vec<usize>> {
+        if free.is_empty() {
+            return None;
+        }
+        let sorted = by_speed_desc(free, ctx.speeds);
+        if let Some(budget) = ctx.deadline_s {
+            for k in 1..=sorted.len() {
+                if let Some(t) = ctx.predict_gang(&sorted[..k]) {
+                    if t * self.slack <= budget {
+                        return Some(sorted[..k].to_vec());
+                    }
+                }
+            }
+            return Some(min_latency_prefix(&sorted, ctx));
+        }
+        if ctx.priority == Priority::High {
+            return Some(min_latency_prefix(&sorted, ctx));
+        }
+        self.fallback.choose(free, ctx)
+    }
+}
+
+/// Min-predicted-latency fastest-first prefix (fastest-first prefixes
+/// are the natural candidates: a slower device only ever joins after
+/// every faster one). Whole free set when no prefix can be priced.
+fn min_latency_prefix(sorted_desc: &[usize], ctx: &PolicyCtx) -> Vec<usize> {
+    let mut best: Option<(f64, usize)> = None;
+    for k in 1..=sorted_desc.len() {
+        if let Some(t) = ctx.predict_gang(&sorted_desc[..k]) {
+            let better = match best {
+                None => true,
+                Some((bt, _)) => t < bt,
+            };
+            if better {
+                best = Some((t, k));
+            }
+        }
+    }
+    let k = match best {
+        Some((_, k)) => k,
+        None => sorted_desc.len(), // no predictor: take everything
+    };
+    sorted_desc[..k].to_vec()
 }
 
 /// Free devices sorted fastest-first (stable: ties keep id order).
@@ -177,13 +244,17 @@ fn balanced_pick(sorted_desc: &[usize], k: usize) -> Vec<usize> {
     gang
 }
 
-/// Parse a `--gang-policy` spec: `all`, `fixed:K`, or `adaptive`.
+/// Parse a `--gang-policy` spec: `all`, `fixed:K`, `adaptive`, or
+/// `deadline`.
 pub fn parse_policy(spec: &str) -> Result<Box<dyn GangPolicy>> {
     if spec == "all" {
         return Ok(Box::new(AllGpus));
     }
     if spec == "adaptive" {
         return Ok(Box::new(Adaptive::default()));
+    }
+    if spec == "deadline" {
+        return Ok(Box::new(Deadline::default()));
     }
     if let Some(k) = spec.strip_prefix("fixed:") {
         let k: usize = k.parse().map_err(|_| {
@@ -195,7 +266,8 @@ pub fn parse_policy(spec: &str) -> Result<Box<dyn GangPolicy>> {
         return Ok(Box::new(FixedGang(k)));
     }
     Err(Error::Config(format!(
-        "unknown gang policy {spec:?} (expected all | fixed:K | adaptive)"
+        "unknown gang policy {spec:?} (expected all | fixed:K | adaptive \
+         | deadline)"
     )))
 }
 
@@ -208,7 +280,14 @@ mod tests {
         queue_depth: usize,
         predict: Option<&'a dyn Fn(&[usize]) -> Option<f64>>,
     ) -> PolicyCtx<'a> {
-        PolicyCtx { speeds, queue_depth, in_flight: 0, predict }
+        PolicyCtx {
+            speeds,
+            queue_depth,
+            in_flight: 0,
+            predict,
+            priority: Priority::Normal,
+            deadline_s: None,
+        }
     }
 
     #[test]
@@ -277,11 +356,61 @@ mod tests {
         assert_eq!(balanced_pick(&[10], 3), vec![10]);
     }
 
+    /// Toy predictor: gang latency = 1 / total speed (bigger = faster,
+    /// diminishing returns).
+    fn pooled_predict(speeds: &'static [f64]) -> impl Fn(&[usize]) -> Option<f64>
+    {
+        move |gang: &[usize]| {
+            let cap: f64 = gang.iter().map(|&d| speeds[d]).sum();
+            if cap <= 0.0 {
+                None
+            } else {
+                Some(1.0 / cap)
+            }
+        }
+    }
+
+    #[test]
+    fn deadline_policy_takes_fewest_gpus_meeting_the_slo() {
+        static SPEEDS: &[f64] = &[1.0, 0.9, 0.8, 0.5];
+        let predict = pooled_predict(SPEEDS);
+        let p = Deadline::default(); // slack 1.2
+        // One GPU predicts 1.0s; budget 2s fits with slack -> 1 GPU.
+        let mut c = ctx(SPEEDS, 0, Some(&predict));
+        c.deadline_s = Some(2.0);
+        assert_eq!(p.choose(&[0, 1, 2, 3], &c).unwrap(), vec![0]);
+        // Tighter budget: 1 GPU (1.2 > 0.7) fails, 2 GPUs predict
+        // 1/1.9 = 0.53, *1.2 = 0.63 <= 0.7 -> exactly 2.
+        c.deadline_s = Some(0.7);
+        assert_eq!(p.choose(&[0, 1, 2, 3], &c).unwrap(), vec![0, 1]);
+        // Impossible budget: best effort = min-latency prefix (all 4
+        // under this monotone toy predictor).
+        c.deadline_s = Some(0.01);
+        assert_eq!(p.choose(&[0, 1, 2, 3], &c).unwrap(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn deadline_policy_without_slo_uses_priority_and_fallback() {
+        static SPEEDS: &[f64] = &[1.0, 0.9, 0.8, 0.5];
+        let predict = pooled_predict(SPEEDS);
+        let p = Deadline::default();
+        // High priority, no deadline -> latency-optimal prefix.
+        let mut c = ctx(SPEEDS, 0, Some(&predict));
+        c.priority = Priority::High;
+        assert_eq!(p.choose(&[0, 1, 2, 3], &c).unwrap(), vec![0, 1, 2, 3]);
+        // Normal priority under load -> the adaptive shard fallback
+        // (2 waiting + this one over 4 free = 2-device gangs).
+        let c2 = ctx(SPEEDS, 2, None);
+        let got = p.choose(&[0, 1, 2, 3], &c2).unwrap();
+        assert_eq!(got.len(), 2);
+    }
+
     #[test]
     fn parse_roundtrip() {
         assert_eq!(parse_policy("all").unwrap().name(), "all");
         assert_eq!(parse_policy("fixed:3").unwrap().name(), "fixed:3");
         assert_eq!(parse_policy("adaptive").unwrap().name(), "adaptive");
+        assert_eq!(parse_policy("deadline").unwrap().name(), "deadline");
         assert!(parse_policy("fixed:0").is_err());
         assert!(parse_policy("fixed:x").is_err());
         assert!(parse_policy("bogus").is_err());

@@ -43,6 +43,7 @@ pub mod model;
 pub mod runtime;
 pub mod sched;
 pub mod serve;
+pub mod spec;
 pub mod util;
 
 pub use error::{Error, Result};

@@ -87,6 +87,12 @@ fn build_config(
 fn cmd_generate(args: impl Iterator<Item = String>) -> Result<()> {
     let cmd = base_flags(Command::new("generate", "run one request"))
         .flag("seed", "request seed", Some("1234"))
+        .flag(
+            "quality",
+            "request quality tier: draft | standard | high \
+             (scales --steps)",
+            Some("standard"),
+        )
         .switch("calibrate", "calibrate the cost model first");
     let p = cmd.parse(args)?;
     let cfg = build_config(&p)?;
@@ -99,9 +105,11 @@ fn cmd_generate(args: impl Iterator<Item = String>) -> Result<()> {
             c.per_row_s * 1e3
         );
     }
-    let seed: u64 = p.get_parsed("seed")?;
+    let spec = stadi::spec::GenerationSpec::new()
+        .seed(p.get_parsed("seed")?)
+        .quality(stadi::spec::Quality::parse(p.get("quality").unwrap())?);
     let t0 = std::time::Instant::now();
-    let g = core.generate_seeded(seed)?;
+    let g = core.generate(&spec)?;
     let wall = t0.elapsed().as_secs_f64();
     print!("{}", g.plan.describe());
     println!(
@@ -169,7 +177,7 @@ fn cmd_serve(args: impl Iterator<Item = String>) -> Result<()> {
         .flag("max-requests", "stop after N requests (0 = run forever)", Some("0"))
         .flag(
             "gang-policy",
-            "fleet partitioning: all | fixed:K | adaptive \
+            "fleet partitioning: all | fixed:K | adaptive | deadline \
              (empty = whole-cluster sessions)",
             Some(""),
         );

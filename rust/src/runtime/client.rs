@@ -47,9 +47,10 @@ pub struct DenoiserOutputs {
 /// reports the actual problem instead of "artifacts not found").
 pub(crate) const NO_BACKEND: &str = "stadi was built without the \
      `xla-backend` feature; real PJRT execution is unavailable. To \
-     enable it, uncomment the `xla` dependency in rust/Cargo.toml \
-     (kept commented so the default build resolves offline), then \
-     rebuild with `cargo build --features xla-backend`";
+     enable it, point the `xla` dependency in rust/Cargo.toml at the \
+     real xla-rs crate (the default is the offline API stub in \
+     rust/xla-stub), then rebuild with `cargo build --features \
+     xla-backend`";
 
 pub use backend::Runtime;
 

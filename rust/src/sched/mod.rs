@@ -7,6 +7,6 @@ pub mod profiler;
 pub mod spatial;
 pub mod temporal;
 
-pub use plan::{DevicePlan, Plan, StepSpec};
+pub use plan::{DevicePlan, Plan, PlanCache, PlanCacheStats, PlanKey, StepSpec};
 pub use profiler::Profiler;
-pub use temporal::{StepClass, StepAssignment};
+pub use temporal::{normalize_warmup, StepAssignment, StepClass};

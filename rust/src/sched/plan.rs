@@ -279,6 +279,176 @@ impl Plan {
     }
 }
 
+// --- Plan cache -----------------------------------------------------
+
+/// Cache key for one plan shape: request parameters + device subset +
+/// quantized speeds. Speeds are quantized (1/1024) so the profiler's
+/// per-request jitter doesn't defeat the cache; a hit may therefore
+/// return a plan computed from speeds up to one quantum away — well
+/// inside the noise of the estimates themselves. Thresholds are keyed
+/// by their f64 bits (they are config constants, never computed).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub m_base: usize,
+    pub m_warmup: usize,
+    pub a_bits: u64,
+    pub b_bits: u64,
+    pub temporal: bool,
+    pub spatial: bool,
+    pub cost_aware: bool,
+    pub rows: usize,
+    pub devices: Vec<usize>,
+    pub speeds_q: Vec<u32>,
+}
+
+impl PlanKey {
+    pub fn new(
+        params: &StadiParams,
+        rows: usize,
+        devices: &[usize],
+        speeds: &[f64],
+    ) -> PlanKey {
+        PlanKey {
+            m_base: params.m_base,
+            m_warmup: params.m_warmup,
+            a_bits: params.a.to_bits(),
+            b_bits: params.b.to_bits(),
+            temporal: params.temporal,
+            spatial: params.spatial,
+            cost_aware: params.cost_aware,
+            rows,
+            devices: devices.to_vec(),
+            speeds_q: speeds.iter().map(|&v| quantize_speed(v)).collect(),
+        }
+    }
+}
+
+/// Speed quantum for cache keys (see [`PlanKey`]).
+pub fn quantize_speed(v: f64) -> u32 {
+    (v.clamp(0.0, 4.0) * 1024.0).round() as u32
+}
+
+/// Cumulative hit/miss counters of a [`PlanCache`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+struct PlanCacheInner {
+    map: std::collections::HashMap<PlanKey, Plan>,
+    /// Insertion order, for bounded FIFO eviction.
+    order: std::collections::VecDeque<PlanKey>,
+    /// Bumped by `clear()`. A build started against inputs read before
+    /// a clear (e.g. the pre-calibrate cost model) must not be
+    /// inserted after it — the key wouldn't change, so the stale plan
+    /// would otherwise be served until eviction.
+    epoch: u64,
+    stats: PlanCacheStats,
+}
+
+/// Small keyed plan cache: repeated request shapes skip the Eq. 4/5
+/// pass (and the sync-schedule assembly) entirely. Bounded FIFO — the
+/// working set is "shapes currently in the traffic mix", tiny by
+/// construction. The planner runs *outside* the lock on a miss, so a
+/// slow cost-aware build never blocks concurrent lookups; two threads
+/// racing the same cold key just build twice (idempotent).
+pub struct PlanCache {
+    capacity: usize,
+    inner: std::sync::Mutex<PlanCacheInner>,
+}
+
+impl PlanCache {
+    pub fn new(capacity: usize) -> PlanCache {
+        PlanCache {
+            capacity: capacity.max(1),
+            inner: std::sync::Mutex::new(PlanCacheInner {
+                map: std::collections::HashMap::new(),
+                order: std::collections::VecDeque::new(),
+                epoch: 0,
+                stats: PlanCacheStats::default(),
+            }),
+        }
+    }
+
+    /// Current epoch. Callers snapshot this *before* reading the
+    /// inputs their plan derives from (cluster, cost model) and pass
+    /// it to [`Self::get_or_build_at`], so a concurrent `clear()`
+    /// between snapshot and insert fences the stale plan out.
+    pub fn epoch(&self) -> u64 {
+        self.inner.lock().unwrap().epoch
+    }
+
+    /// Fetch the plan for `key`, building and inserting it on a miss.
+    /// Convenience wrapper for callers whose build inputs are read
+    /// inside `build` itself (no snapshot taken earlier).
+    pub fn get_or_build(
+        &self,
+        key: PlanKey,
+        build: impl FnOnce() -> Result<Plan>,
+    ) -> Result<Plan> {
+        let epoch = self.epoch();
+        self.get_or_build_at(epoch, key, build)
+    }
+
+    /// Fetch the plan for `key`, building and inserting it on a miss.
+    ///
+    /// The build runs unlocked; the result is inserted only if no
+    /// `clear()` happened since `input_epoch` was captured — a plan
+    /// built from pre-clear inputs (e.g. the pre-calibrate cost model)
+    /// is still *returned* to its caller, whose snapshot it matches,
+    /// but never cached for later requests.
+    pub fn get_or_build_at(
+        &self,
+        input_epoch: u64,
+        key: PlanKey,
+        build: impl FnOnce() -> Result<Plan>,
+    ) -> Result<Plan> {
+        {
+            let mut g = self.inner.lock().unwrap();
+            if let Some(p) = g.map.get(&key) {
+                g.stats.hits += 1;
+                return Ok(p.clone());
+            }
+            g.stats.misses += 1;
+        }
+        let plan = build()?;
+        let mut g = self.inner.lock().unwrap();
+        if g.epoch == input_epoch && !g.map.contains_key(&key) {
+            if g.map.len() >= self.capacity {
+                if let Some(old) = g.order.pop_front() {
+                    g.map.remove(&old);
+                }
+            }
+            g.order.push_back(key.clone());
+            g.map.insert(key, plan.clone());
+        }
+        Ok(plan)
+    }
+
+    /// Drop every cached plan (after `calibrate` swaps the cost model
+    /// the cost-aware allocator depends on) and fence out in-flight
+    /// builds started before the clear.
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.map.clear();
+        g.order.clear();
+        g.epoch += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> PlanCacheStats {
+        self.inner.lock().unwrap().stats
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -378,6 +548,89 @@ mod tests {
                 assert_eq!(st.coef, want);
             }
         }
+    }
+
+    #[test]
+    fn plan_cache_hits_reuse_and_evictions_bound_memory() {
+        let p = StadiParams::default();
+        let cache = PlanCache::new(2);
+        let mut builds = 0usize;
+        let mut get = |speeds: &[f64], builds: &mut usize| {
+            let key = PlanKey::new(&p, 32, &[0, 1], speeds);
+            cache
+                .get_or_build(key, || {
+                    *builds += 1;
+                    build(speeds, &p)
+                })
+                .unwrap()
+        };
+        let a = get(&[1.0, 0.5], &mut builds);
+        let b = get(&[1.0, 0.5], &mut builds);
+        assert_eq!(builds, 1, "identical shape must hit");
+        assert_eq!(a.total_rows(), b.total_rows());
+        // Sub-quantum speed jitter still hits (the cache's point).
+        get(&[1.0, 0.5001], &mut builds);
+        assert_eq!(builds, 1);
+        // Distinct shapes miss; capacity 2 evicts the oldest.
+        get(&[1.0, 0.6], &mut builds);
+        get(&[1.0, 0.7], &mut builds);
+        assert_eq!(builds, 3);
+        assert_eq!(cache.len(), 2);
+        get(&[1.0, 0.5], &mut builds); // evicted above -> rebuild
+        assert_eq!(builds, 4);
+        let s = cache.stats();
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.misses, 4);
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn plan_cache_key_separates_request_shapes() {
+        let p = StadiParams::default();
+        let k = |params: &StadiParams, rows, devs: &[usize], sp: &[f64]| {
+            PlanKey::new(params, rows, devs, sp)
+        };
+        let base = k(&p, 32, &[0, 1], &[1.0, 0.5]);
+        assert_ne!(base, k(&p.for_steps(50), 32, &[0, 1], &[1.0, 0.5]));
+        assert_ne!(base, k(&p, 16, &[0, 1], &[1.0, 0.5]));
+        assert_ne!(base, k(&p, 32, &[0, 2], &[1.0, 0.5]));
+        assert_ne!(base, k(&p, 32, &[0, 1], &[1.0, 0.8]));
+        assert_eq!(base, k(&p, 32, &[0, 1], &[1.0, 0.5]));
+    }
+
+    #[test]
+    fn clear_fences_out_builds_started_before_it() {
+        // A build racing a clear(): epoch captured pre-clear must not
+        // insert its (stale-input) plan, but still returns it.
+        let cache = PlanCache::new(4);
+        let p = StadiParams::default();
+        let key = PlanKey::new(&p, 32, &[0], &[1.0]);
+        let epoch = cache.epoch();
+        cache.clear(); // concurrent calibrate between snapshot & build
+        let plan = cache
+            .get_or_build_at(epoch, key.clone(), || build(&[1.0], &p))
+            .unwrap();
+        assert_eq!(plan.total_rows(), 32);
+        assert!(cache.is_empty(), "stale-epoch plan was cached");
+        // A fresh-epoch build for the same key caches normally.
+        cache.get_or_build(key, || build(&[1.0], &p)).unwrap();
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn cache_build_errors_are_not_cached() {
+        let cache = PlanCache::new(4);
+        let p = StadiParams::default();
+        let key = PlanKey::new(&p, 32, &[0], &[1.0]);
+        let e = cache.get_or_build(key.clone(), || {
+            Err(crate::error::Error::Sched("boom".into()))
+        });
+        assert!(e.is_err());
+        assert!(cache.is_empty());
+        // The same key builds successfully afterwards.
+        cache.get_or_build(key, || build(&[1.0], &p)).unwrap();
+        assert_eq!(cache.len(), 1);
     }
 
     #[test]

@@ -194,6 +194,18 @@ pub fn cost_aware_sizes(
     Ok(granules.iter().map(|&g| g * granularity).collect())
 }
 
+/// Largest gang a latent of `total_rows` can feed: every included
+/// device needs at least one granule. Request-shaped planning uses
+/// this to bound gang size for small images (a 16-row draft spec on a
+/// granularity of 4 can spread over at most 4 GPUs) before the patch
+/// menders reject the split.
+pub fn max_gang(total_rows: usize, granularity: usize) -> usize {
+    if granularity == 0 {
+        return 0;
+    }
+    total_rows / granularity
+}
+
 /// Uniform split (spatial adaptation disabled — ablation "None"/"+TA",
 /// and the DistriFusion baseline). Remainder granules go to the first
 /// devices, matching DistriFusion's equal-patch assumption as closely
@@ -299,6 +311,22 @@ mod tests {
         let nine: Vec<f64> = vec![1.0; 9];
         let assign: Vec<_> = (0..9).map(|_| full(10)).collect();
         assert!(mend_patch_sizes(&nine, &assign, 32, 4).is_err());
+    }
+
+    #[test]
+    fn max_gang_matches_mender_feasibility() {
+        assert_eq!(max_gang(32, 4), 8);
+        assert_eq!(max_gang(16, 4), 4);
+        assert_eq!(max_gang(3, 4), 0);
+        assert_eq!(max_gang(32, 0), 0);
+        // Exactly max_gang devices is feasible; one more is not.
+        let k = max_gang(16, 4);
+        let speeds = vec![1.0; k];
+        let assign: Vec<_> = (0..k).map(|_| full(10)).collect();
+        assert!(mend_patch_sizes(&speeds, &assign, 16, 4).is_ok());
+        let speeds = vec![1.0; k + 1];
+        let assign: Vec<_> = (0..=k).map(|_| full(10)).collect();
+        assert!(mend_patch_sizes(&speeds, &assign, 16, 4).is_err());
     }
 
     #[test]

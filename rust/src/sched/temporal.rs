@@ -41,6 +41,27 @@ pub fn half_steps(p: &StadiParams) -> usize {
     p.m_warmup + (p.m_base - p.m_warmup) / 2
 }
 
+/// Largest warmup ≤ `preferred` that is valid for an `m_base`-step
+/// grid: warmup < m_base and m_base - warmup even (the 2:1 LCM
+/// quantization needs an even remainder to halve). This is how a
+/// per-request step budget (`GenerationSpec::steps`) reuses the
+/// engine's configured warmup without tripping the config invariants
+/// — e.g. warmup 4 against a 7-step request normalizes to 3.
+pub fn normalize_warmup(m_base: usize, preferred: usize) -> usize {
+    assert!(m_base >= 2, "step grids need at least 2 steps");
+    let mut w = preferred.min(m_base - 1);
+    if (m_base - w) % 2 != 0 {
+        // Parity fix: step down when possible (shrinking the shared
+        // prefix is always safe), otherwise up to 1 (m_base odd, w 0).
+        if w > 0 {
+            w -= 1;
+        } else {
+            w = 1;
+        }
+    }
+    w
+}
+
 /// Apply Eq. 4 to every device. `speeds` need not be normalized; the
 /// max in the slice is v_max. When `p.temporal` is false (ablation
 /// "None"/"+SA"), every non-excluded device gets M_base.
@@ -123,6 +144,31 @@ mod tests {
         // Exclusion still applies (GPU usage threshold b, §V).
         let a = assign_steps(&[1.0, 0.1], &p).unwrap();
         assert_eq!(a[1].class, StepClass::Excluded);
+    }
+
+    #[test]
+    fn normalize_warmup_respects_grid_invariants() {
+        // Even remainder preserved as-is.
+        assert_eq!(normalize_warmup(100, 4), 4);
+        // Warmup clamped below m_base (then parity-fixed: 4-3 is odd).
+        assert_eq!(normalize_warmup(4, 4), 2);
+        // Parity fixes: prefer stepping down...
+        assert_eq!(normalize_warmup(7, 4), 3);
+        assert_eq!(normalize_warmup(2, 4), 0);
+        // ...step up only from 0 on an odd grid.
+        assert_eq!(normalize_warmup(5, 0), 1);
+        // Exhaustive invariant check over the small lattice.
+        for m in 2..64usize {
+            for pref in 0..10usize {
+                let w = normalize_warmup(m, pref);
+                assert!(w < m, "w={w} m={m}");
+                assert_eq!((m - w) % 2, 0, "parity w={w} m={m}");
+                assert!(
+                    w <= pref + 1,
+                    "normalization moved warmup too far: {pref} -> {w}"
+                );
+            }
+        }
     }
 
     #[test]

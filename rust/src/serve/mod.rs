@@ -1,7 +1,10 @@
-//! Serving front-end: JSON-lines protocol, thread-safe bounded router,
-//! concurrent TCP server (accept loop + worker pool over per-request
-//! sessions, optionally fleet-partitioned via gang policies), and the
-//! M/G/c + gang-policy queueing simulations.
+//! Serving front-end: JSON-lines protocol (v2 `GenerationSpec`
+//! requests, v1 seed lines kept compatible), thread-safe bounded
+//! priority router (priority desc / earliest-deadline / FIFO, with
+//! dequeue-time deadline shedding), concurrent TCP server (accept
+//! loop + worker pool over per-request sessions, optionally
+//! fleet-partitioned via gang policies), and the M/G/c + gang-policy
+//! + mixed-priority queueing simulations.
 //!
 //! See rust/DESIGN_SERVE.md for the architecture diagram, the fleet
 //! lease lifecycle, and locking rules.

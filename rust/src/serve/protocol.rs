@@ -1,10 +1,26 @@
 //! JSON-lines wire protocol for the serving front-end.
 //!
-//! One request per line:
-//!   {"id": "r1", "seed": 1234}
-//! One response per line:
-//!   {"id": "r1", "ok": true, "latency_s": ..., "sim_latency_s": ...,
-//!    "latent_sum": ..., "latent_first8": [...], "plan": {...}}
+//! **v2** — one request per line, parameters in a typed spec object:
+//!   {"id": "r1", "spec": {"seed": 9, "steps": 50, "height": 256,
+//!    "width": 256, "quality": "standard", "priority": "high",
+//!    "deadline_s": 2.5}}
+//! Every spec field is optional; omitted fields take the engine's
+//! defaults. Responses echo the full resolved spec:
+//!   {"id": "r1", "ok": true, "spec": {...}, "latency_s": ...,
+//!    "sim_latency_s": ..., "latent_sum": ..., "latent_first8": [...],
+//!    "plan": {...}}
+//!
+//! **v1** — `{"id": "r1", "seed": 1234}` lines keep parsing as
+//! default-spec requests and produce byte-identical numeric results to
+//! the pre-spec engine (the backcompat golden test pins this).
+//!
+//! Error lines carry a stable machine-readable `code`
+//! ([`Error::wire_code`]): `busy` (backpressure, with `queue_depth`),
+//! `bad_request` (malformed line), `bad_spec` (invalid spec fields —
+//! including negative seeds, which v1 used to silently cast through
+//! `as u64`), `deadline` (shed after its deadline passed, with
+//! `deadline_s`/`late_by_s`), `shutdown`, and `error` (everything
+//! else). Clients dispatch on the code, never on the message text.
 //!
 //! The latent itself is summarized (sum + first values) rather than
 //! shipped — clients needing pixels use the library API; the server
@@ -12,35 +28,71 @@
 
 use crate::coordinator::Generation;
 use crate::error::{Error, Result};
+use crate::spec::{self, GenerationSpec};
 use crate::util::json::{self, Object, Value};
 
-/// A parsed client request.
+/// A parsed client request: id + typed generation spec.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WireRequest {
     pub id: String,
-    pub seed: u64,
+    pub spec: GenerationSpec,
 }
 
 impl WireRequest {
+    /// Parse one request line, v2 (`"spec"` object) or v1 (bare
+    /// `"seed"`). A line carrying *both* is rejected as ambiguous.
     pub fn parse(line: &str) -> Result<Self> {
         let v = json::parse(line)?;
-        Ok(WireRequest {
-            id: v.get("id")?.as_str()?.to_string(),
-            seed: v.get("seed")?.as_i64().map(|x| x as u64)?,
-        })
+        let id = v
+            .get_opt("id")
+            .ok_or_else(|| Error::Protocol("missing \"id\"".into()))?
+            .as_str()
+            .map_err(|_| Error::Protocol("\"id\" must be a string".into()))?
+            .to_string();
+        let spec = match (v.get_opt("spec"), v.get_opt("seed")) {
+            (Some(_), Some(_)) => {
+                return Err(Error::Protocol(
+                    "request has both \"spec\" (v2) and \"seed\" (v1)"
+                        .into(),
+                ))
+            }
+            (Some(s), None) => GenerationSpec::from_json(s)?,
+            (None, Some(seed)) => {
+                // v1 compat: a bare seed is a default-spec request.
+                GenerationSpec::new().seed(spec::parse_seed(seed)?)
+            }
+            (None, None) => {
+                return Err(Error::Protocol(
+                    "request needs \"spec\" (v2) or \"seed\" (v1)".into(),
+                ))
+            }
+        };
+        Ok(WireRequest { id, spec })
     }
 
+    /// Serialize as a v2 line (full spec object).
     pub fn to_line(&self) -> String {
         let mut o = Object::new();
         o.insert("id", Value::Str(self.id.clone()));
-        o.insert("seed", Value::Num(self.seed as f64));
+        o.insert("spec", self.spec.to_json());
+        json::to_string(&Value::Obj(o))
+    }
+
+    /// Serialize as a v1 line (`{"id", "seed"}`) — the backcompat
+    /// client shape. Only the seed survives; other spec fields are
+    /// not expressible in v1.
+    pub fn to_line_v1(&self) -> String {
+        let mut o = Object::new();
+        o.insert("id", Value::Str(self.id.clone()));
+        o.insert("seed", Value::Num(self.spec.seed as f64));
         json::to_string(&Value::Obj(o))
     }
 }
 
-/// Serialize a successful generation.
+/// Serialize a successful generation, echoing the resolved spec.
 pub fn response_line(
     id: &str,
+    spec: &GenerationSpec,
     gen: &Generation,
     wall_latency_s: f64,
 ) -> String {
@@ -55,6 +107,7 @@ pub fn response_line(
     let mut o = Object::new();
     o.insert("id", Value::Str(id.to_string()));
     o.insert("ok", Value::Bool(true));
+    o.insert("spec", spec.to_json());
     o.insert("latency_s", Value::Num(wall_latency_s));
     o.insert("sim_latency_s", Value::Num(gen.timeline.total_s));
     o.insert("utilization", Value::Num(gen.timeline.utilization));
@@ -68,9 +121,10 @@ pub fn response_line(
 }
 
 /// Serialize an error response. Every error line carries a stable
-/// machine-readable `code`; backpressure rejections get the dedicated
-/// `busy` shape (queue depth as its own field, never leaked into the
-/// message string).
+/// machine-readable `code` ([`Error::wire_code`]); structured variants
+/// additionally expose their payload as dedicated fields (never baked
+/// into the message string): `busy` carries `queue_depth`, `deadline`
+/// carries `deadline_s` and `late_by_s`.
 pub fn error_line(id: &str, err: &Error) -> String {
     if let Error::Busy { queue_depth } = err {
         return busy_line(id, *queue_depth);
@@ -78,8 +132,12 @@ pub fn error_line(id: &str, err: &Error) -> String {
     let mut o = Object::new();
     o.insert("id", Value::Str(id.to_string()));
     o.insert("ok", Value::Bool(false));
-    o.insert("code", Value::Str("error".into()));
+    o.insert("code", Value::Str(err.wire_code().into()));
     o.insert("error", Value::Str(err.to_string()));
+    if let Error::DeadlineExceeded { deadline_s, late_by_s } = err {
+        o.insert("deadline_s", Value::Num(*deadline_s));
+        o.insert("late_by_s", Value::Num(*late_by_s));
+    }
     json::to_string(&Value::Obj(o))
 }
 
@@ -98,28 +156,111 @@ pub fn busy_line(id: &str, queue_depth: usize) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::spec::{Priority, Quality};
+    use crate::util::proptest::{ensure, forall};
 
     #[test]
-    fn request_roundtrip() {
-        let r = WireRequest { id: "r7".into(), seed: 99 };
+    fn v1_request_parses_as_default_spec() {
+        let r = WireRequest::parse("{\"id\": \"r7\", \"seed\": 99}").unwrap();
+        assert_eq!(r.id, "r7");
+        assert_eq!(r.spec, GenerationSpec::new().seed(99));
+        // And the v1 serializer round-trips it.
+        let back = WireRequest::parse(&r.to_line_v1()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn v2_request_roundtrip() {
+        let r = WireRequest {
+            id: "r7".into(),
+            spec: GenerationSpec::new()
+                .seed(99)
+                .steps(50)
+                .size(128, 256)
+                .quality(Quality::Draft)
+                .priority(Priority::High)
+                .deadline_s(0.75),
+        };
         let back = WireRequest::parse(&r.to_line()).unwrap();
         assert_eq!(r, back);
     }
 
     #[test]
-    fn rejects_malformed() {
-        assert!(WireRequest::parse("{}").is_err());
-        assert!(WireRequest::parse("{\"id\": 3, \"seed\": 1}").is_err());
-        assert!(WireRequest::parse("not json").is_err());
+    fn negative_seed_is_a_typed_rejection_not_a_cast() {
+        // v1: `{"seed": -1}` used to become seed 2^64-1 via `as u64`.
+        for line in [
+            "{\"id\": \"x\", \"seed\": -1}",
+            "{\"id\": \"x\", \"spec\": {\"seed\": -7}}",
+        ] {
+            let e = WireRequest::parse(line).unwrap_err();
+            assert!(matches!(e, Error::Spec(_)), "{line} -> {e:?}");
+            assert_eq!(e.wire_code(), "bad_spec");
+            assert!(e.to_string().contains("non-negative"), "{e}");
+        }
     }
 
     #[test]
-    fn error_line_is_json() {
+    fn rejects_malformed() {
+        for line in [
+            "{}",
+            "{\"id\": 3, \"seed\": 1}",
+            "{\"id\": \"x\"}",
+            "{\"seed\": 4}",
+            "{\"id\": \"x\", \"seed\": 1, \"spec\": {}}",
+            "{\"id\": \"x\", \"spec\": 5}",
+        ] {
+            let e = WireRequest::parse(line).unwrap_err();
+            assert!(
+                matches!(e, Error::Protocol(_) | Error::Spec(_)),
+                "{line} -> {e:?}"
+            );
+        }
+        assert!(matches!(
+            WireRequest::parse("not json").unwrap_err(),
+            Error::Json { .. }
+        ));
+    }
+
+    #[test]
+    fn invalid_spec_fields_get_bad_spec_code() {
+        for line in [
+            "{\"id\": \"x\", \"spec\": {\"steps\": 1}}",
+            "{\"id\": \"x\", \"spec\": {\"quality\": \"ultra\"}}",
+            "{\"id\": \"x\", \"spec\": {\"height\": 100}}",
+            "{\"id\": \"x\", \"spec\": {\"deadline_s\": 0}}",
+        ] {
+            let e = WireRequest::parse(line).unwrap_err();
+            assert_eq!(e.wire_code(), "bad_spec", "{line} -> {e:?}");
+        }
+    }
+
+    #[test]
+    fn error_line_is_json_with_stable_codes() {
         let line = error_line("x", &Error::msg("boom"));
         let v = json::parse(&line).unwrap();
         assert!(!v.get("ok").unwrap().as_bool().unwrap());
         assert_eq!(v.get("code").unwrap().as_str().unwrap(), "error");
         assert!(v.get("error").unwrap().as_str().unwrap().contains("boom"));
+
+        let line = error_line("x", &Error::Spec("bad steps".into()));
+        let v = json::parse(&line).unwrap();
+        assert_eq!(v.get("code").unwrap().as_str().unwrap(), "bad_spec");
+
+        let line = error_line("x", &Error::Shutdown);
+        let v = json::parse(&line).unwrap();
+        assert_eq!(v.get("code").unwrap().as_str().unwrap(), "shutdown");
+    }
+
+    #[test]
+    fn deadline_line_carries_structured_fields() {
+        let line = error_line(
+            "r1",
+            &Error::DeadlineExceeded { deadline_s: 0.5, late_by_s: 0.125 },
+        );
+        let v = json::parse(&line).unwrap();
+        assert_eq!(v.get("code").unwrap().as_str().unwrap(), "deadline");
+        assert_eq!(v.get("deadline_s").unwrap().as_f64().unwrap(), 0.5);
+        assert_eq!(v.get("late_by_s").unwrap().as_f64().unwrap(), 0.125);
     }
 
     #[test]
@@ -142,5 +283,97 @@ mod tests {
                 .unwrap()
                 .contains('5'));
         }
+    }
+
+    /// One randomized round-trip case (no shrinking — the spec space
+    /// is flat enough that the raw counterexample is already minimal).
+    #[derive(Debug, Clone)]
+    struct Case {
+        spec: GenerationSpec,
+        corrupt: bool,
+        which: u8,
+    }
+
+    impl crate::util::proptest::Shrink for Case {}
+
+    /// Satellite: builder validation + wire round-trip over randomized
+    /// specs. Valid specs must survive `parse(to_line(spec))` exactly;
+    /// invalid ones must be rejected with the `bad_spec` code.
+    #[test]
+    fn property_spec_wire_roundtrip() {
+        forall(
+            41,
+            300,
+            |rng| {
+                // Seeds capped at MAX_SEED: JSON numbers are f64.
+                let mut spec = GenerationSpec::new()
+                    .seed(rng.next_u64() % (crate::spec::MAX_SEED + 1));
+                // Each optional field present with probability ~1/2.
+                if rng.below(2) == 0 {
+                    spec = spec.steps(2 + rng.below(200) as usize);
+                }
+                if rng.below(2) == 0 {
+                    let h = 8 * (1 + rng.below(64) as usize);
+                    let w = 8 * (1 + rng.below(64) as usize);
+                    spec = spec.size(h, w);
+                }
+                spec = spec.quality(match rng.below(3) {
+                    0 => Quality::Draft,
+                    1 => Quality::Standard,
+                    _ => Quality::High,
+                });
+                spec = spec.priority(match rng.below(3) {
+                    0 => Priority::Low,
+                    1 => Priority::Normal,
+                    _ => Priority::High,
+                });
+                if rng.below(2) == 0 {
+                    spec = spec.deadline_s(
+                        0.01 + 10.0 * rng.next_f64(),
+                    );
+                }
+                // Corrupt ~1/4 of the samples with one invalid field.
+                let corrupt = rng.below(4) == 0;
+                let which = rng.below(3) as u8;
+                Case { spec, corrupt, which }
+            },
+            |Case { spec, corrupt, which }| {
+                if *corrupt {
+                    let mut bad = spec.clone();
+                    match which {
+                        0 => bad.steps = Some(1),
+                        1 => bad.height_px = Some(12), // not 8-aligned
+                        _ => bad.deadline_s = Some(-1.0),
+                    }
+                    let req =
+                        WireRequest { id: "p".into(), spec: bad.clone() };
+                    let e = match WireRequest::parse(&req.to_line()) {
+                        Err(e) => e,
+                        Ok(_) => {
+                            return Err(format!(
+                                "invalid spec accepted: {bad:?}"
+                            ))
+                        }
+                    };
+                    ensure(
+                        e.wire_code() == "bad_spec",
+                        format!("wrong code {} for {bad:?}", e.wire_code()),
+                    )?;
+                    return Ok(());
+                }
+                ensure(
+                    spec.validate().is_ok(),
+                    format!("generator produced invalid spec {spec:?}"),
+                )?;
+                let req = WireRequest { id: "p".into(), spec: spec.clone() };
+                let back = WireRequest::parse(&req.to_line())
+                    .map_err(|e| format!("roundtrip failed: {e}"))?;
+                ensure(
+                    back.spec == *spec,
+                    format!("roundtrip drift: {spec:?} -> {:?}", back.spec),
+                )?;
+                Ok(())
+            },
+        );
     }
 }

@@ -1,6 +1,18 @@
-//! Request router: a thread-safe bounded FIFO queue with backpressure
-//! and per-outcome latency metrics, decoupling admission control from
-//! execution.
+//! Request router: a thread-safe bounded **priority queue** with
+//! backpressure, deadline shedding, and per-outcome latency metrics,
+//! decoupling admission control from execution.
+//!
+//! Ordering is (priority desc, earliest deadline, FIFO): higher
+//! [`Prioritized::priority_rank`] first; within a rank, requests with
+//! deadlines run earliest-deadline-first ahead of deadline-less ones;
+//! among equals, submission order. Payloads without priorities (the
+//! default trait impls) degrade to exactly the old FIFO behavior.
+//!
+//! Deadline shedding happens **on dequeue**: a request whose deadline
+//! already passed when a worker picks it up is handed back as
+//! [`Dequeued::Expired`] so the caller can answer it with a typed
+//! [`Error::DeadlineExceeded`] (wire code `deadline`) instead of
+//! burning GPU time on a response nobody is waiting for.
 //!
 //! Connection handlers `submit` from their own threads; the worker
 //! pool blocks in `pop` until work (or shutdown) arrives. Rejection is
@@ -12,17 +24,131 @@
 //! can enqueue jobs bundled with their reply route while unit tests
 //! use bare [`Job`]s (the default payload type).
 
-use std::collections::VecDeque;
+use std::collections::BTreeMap;
 use std::sync::{Condvar, Mutex};
+use std::time::Instant;
 
 use crate::error::{Error, Result};
 use crate::metrics::latency::LatencyTracker;
+use crate::spec::GenerationSpec;
 
-/// A queued unit of work.
+/// Queue-discipline hooks for router payloads. The defaults (constant
+/// rank, no deadline) give plain FIFO — payload types only override
+/// what they carry.
+pub trait Prioritized {
+    /// Higher = served first.
+    fn priority_rank(&self) -> u8 {
+        0
+    }
+
+    /// Absolute shed deadline; `None` = serve whenever.
+    fn deadline(&self) -> Option<Instant> {
+        None
+    }
+}
+
+/// Plain payloads used by unit tests / simple harnesses.
+impl Prioritized for u64 {}
+impl Prioritized for String {}
+
+/// A queued unit of work: request id + full generation spec, stamped
+/// with its admission time (deadlines are relative to admission).
 #[derive(Debug, Clone)]
 pub struct Job {
     pub id: String,
-    pub seed: u64,
+    pub spec: GenerationSpec,
+    /// Absolute deadline, fixed when the job was created at admission.
+    pub deadline: Option<Instant>,
+}
+
+impl Job {
+    /// Build a job from a parsed request, stamping `spec.deadline_s`
+    /// against the current time.
+    pub fn new(id: impl Into<String>, spec: GenerationSpec) -> Job {
+        let deadline = spec
+            .deadline_s
+            .map(|d| Instant::now() + std::time::Duration::from_secs_f64(d));
+        Job { id: id.into(), spec, deadline }
+    }
+
+    /// v1 shape: default spec around a bare seed.
+    pub fn seeded(id: impl Into<String>, seed: u64) -> Job {
+        Job::new(id, GenerationSpec::new().seed(seed))
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.spec.seed
+    }
+
+    /// Seconds until the deadline (negative = already expired).
+    pub fn deadline_slack_s(&self) -> Option<f64> {
+        self.deadline.map(|d| {
+            let now = Instant::now();
+            if d >= now {
+                (d - now).as_secs_f64()
+            } else {
+                -((now - d).as_secs_f64())
+            }
+        })
+    }
+}
+
+impl Prioritized for Job {
+    fn priority_rank(&self) -> u8 {
+        self.spec.priority.rank()
+    }
+
+    fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+}
+
+/// One dequeued item: ready to run, or already past its deadline (the
+/// caller owes its client a typed `deadline` error, not a result).
+#[derive(Debug)]
+pub enum Dequeued<T> {
+    Ready(T),
+    Expired(T),
+}
+
+impl<T> Dequeued<T> {
+    pub fn into_inner(self) -> T {
+        match self {
+            Dequeued::Ready(t) | Dequeued::Expired(t) => t,
+        }
+    }
+}
+
+/// Queue position: priority desc, then earliest deadline (deadline-less
+/// after every deadline at the same rank), then submission order.
+/// `Ord` is derived lexicographically over the inverted rank, the
+/// deadline key, and the sequence number.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct OrderKey {
+    rank_inv: u8,
+    deadline: DeadlineKey,
+    seq: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct DeadlineKey(Option<Instant>);
+
+impl Ord for DeadlineKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        use std::cmp::Ordering::*;
+        match (self.0, other.0) {
+            (Some(a), Some(b)) => a.cmp(&b),
+            (Some(_), None) => Less,
+            (None, Some(_)) => Greater,
+            (None, None) => Equal,
+        }
+    }
+}
+
+impl PartialOrd for DeadlineKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
 }
 
 /// Router statistics snapshot.
@@ -32,6 +158,10 @@ pub struct RouterStats {
     pub rejected: u64,
     pub completed: u64,
     pub failed: u64,
+    /// Dequeued after their deadline had already passed (subset of
+    /// whatever outcome the caller then records — the serve worker
+    /// records them as failed).
+    pub deadline_shed: u64,
     pub queue_len: usize,
     /// Mean completed-job latency (exact over all samples).
     pub latency_mean_s: f64,
@@ -42,16 +172,18 @@ pub struct RouterStats {
 }
 
 struct Inner<T> {
-    queue: VecDeque<T>,
+    queue: BTreeMap<OrderKey, T>,
+    next_seq: u64,
     closed: bool,
     admitted: u64,
     rejected: u64,
     completed: u64,
     failed: u64,
+    deadline_shed: u64,
     latency: LatencyTracker,
 }
 
-/// Thread-safe FIFO router with a bounded queue.
+/// Thread-safe bounded priority router.
 pub struct Router<T = Job> {
     capacity: usize,
     inner: Mutex<Inner<T>>,
@@ -59,17 +191,19 @@ pub struct Router<T = Job> {
     available: Condvar,
 }
 
-impl<T> Router<T> {
+impl<T: Prioritized> Router<T> {
     pub fn new(capacity: usize) -> Self {
         Router {
             capacity: capacity.max(1),
             inner: Mutex::new(Inner {
-                queue: VecDeque::new(),
+                queue: BTreeMap::new(),
+                next_seq: 0,
                 closed: false,
                 admitted: 0,
                 rejected: 0,
                 completed: 0,
                 failed: 0,
+                deadline_shed: 0,
                 latency: LatencyTracker::new(),
             }),
             available: Condvar::new(),
@@ -85,25 +219,37 @@ impl<T> Router<T> {
         let mut g = self.inner.lock().unwrap();
         if g.closed {
             g.rejected += 1;
-            return Err(Error::Protocol("router is shut down".into()));
+            return Err(Error::Shutdown);
         }
         if g.queue.len() >= self.capacity {
             g.rejected += 1;
             return Err(Error::Busy { queue_depth: g.queue.len() });
         }
         g.admitted += 1;
-        g.queue.push_back(item);
+        let key = OrderKey {
+            rank_inv: u8::MAX - item.priority_rank(),
+            deadline: DeadlineKey(item.deadline()),
+            seq: g.next_seq,
+        };
+        g.next_seq += 1;
+        g.queue.insert(key, item);
         self.available.notify_one();
         Ok(())
     }
 
-    /// Block until an item is available (FIFO) or the router closes.
-    /// Returns `None` only after `close()`.
-    pub fn pop(&self) -> Option<T> {
+    /// Block until an item is available (best order position first) or
+    /// the router closes. Returns `None` only after `close()`. An item
+    /// whose deadline passed while queued comes back as
+    /// [`Dequeued::Expired`] — shed it, don't run it.
+    pub fn pop(&self) -> Option<Dequeued<T>> {
         let mut g = self.inner.lock().unwrap();
         loop {
-            if let Some(x) = g.queue.pop_front() {
-                return Some(x);
+            if let Some((key, item)) = g.queue.pop_first() {
+                if key.deadline.0.is_some_and(|d| d < Instant::now()) {
+                    g.deadline_shed += 1;
+                    return Some(Dequeued::Expired(item));
+                }
+                return Some(Dequeued::Ready(item));
             }
             if g.closed {
                 return None;
@@ -112,20 +258,21 @@ impl<T> Router<T> {
         }
     }
 
-    /// Non-blocking pop (tests / drain loops).
+    /// Non-blocking pop (tests / drain loops); no deadline check.
     pub fn try_pop(&self) -> Option<T> {
-        self.inner.lock().unwrap().queue.pop_front()
+        self.inner.lock().unwrap().queue.pop_first().map(|(_, t)| t)
     }
 
     /// Close the router: wake every blocked `pop`, reject future
     /// submits, and hand back the still-queued items so the caller can
     /// answer their submitters (the server sends shutdown error lines
     /// rather than leaving clients waiting on a response that will
-    /// never come).
+    /// never come). Items come back in queue order.
     pub fn drain_close(&self) -> Vec<T> {
         let mut g = self.inner.lock().unwrap();
         g.closed = true;
-        let drained: Vec<T> = g.queue.drain(..).collect();
+        let drained: Vec<T> =
+            std::mem::take(&mut g.queue).into_values().collect();
         self.available.notify_all();
         drained
     }
@@ -161,6 +308,7 @@ impl<T> Router<T> {
             rejected: g.rejected,
             completed: g.completed,
             failed: g.failed,
+            deadline_shed: g.deadline_shed,
             queue_len: g.queue.len(),
             latency_mean_s: g.latency.mean(),
             latency_p50_s: g.latency.p50(),
@@ -177,14 +325,28 @@ impl<T> Router<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::spec::Priority;
     use std::sync::Arc;
+    use std::time::Duration;
+
+    fn job(id: &str, seed: u64) -> Job {
+        Job::seeded(id, seed)
+    }
+
+    /// `pop` for tests that expect a live item.
+    fn pop_ready<T: Prioritized>(r: &Router<T>) -> T {
+        match r.pop().expect("router closed") {
+            Dequeued::Ready(t) => t,
+            Dequeued::Expired(_) => panic!("unexpected expiry"),
+        }
+    }
 
     #[test]
     fn fifo_order_and_backpressure() {
         let r: Router<Job> = Router::new(2);
-        r.submit(Job { id: "a".into(), seed: 1 }).unwrap();
-        r.submit(Job { id: "b".into(), seed: 2 }).unwrap();
-        let err = r.submit(Job { id: "c".into(), seed: 3 }).unwrap_err();
+        r.submit(job("a", 1)).unwrap();
+        r.submit(job("b", 2)).unwrap();
+        let err = r.submit(job("c", 3)).unwrap_err();
         match err {
             Error::Busy { queue_depth } => assert_eq!(queue_depth, 2),
             other => panic!("expected Busy, got {other}"),
@@ -193,9 +355,88 @@ mod tests {
         let s = r.stats();
         assert_eq!(s.admitted, 2);
         assert_eq!(s.rejected, 1);
-        // FIFO: front is "a".
-        assert_eq!(r.pop().unwrap().id, "a");
-        assert_eq!(r.pop().unwrap().id, "b");
+        // Equal priority, no deadlines: FIFO, front is "a".
+        assert_eq!(pop_ready(&r).id, "a");
+        assert_eq!(pop_ready(&r).id, "b");
+    }
+
+    #[test]
+    fn higher_priority_jumps_the_queue() {
+        let r: Router<Job> = Router::new(8);
+        let mk = |id: &str, p: Priority| {
+            Job::new(id, GenerationSpec::new().priority(p))
+        };
+        r.submit(mk("lo1", Priority::Low)).unwrap();
+        r.submit(mk("n1", Priority::Normal)).unwrap();
+        r.submit(mk("hi1", Priority::High)).unwrap();
+        r.submit(mk("n2", Priority::Normal)).unwrap();
+        r.submit(mk("hi2", Priority::High)).unwrap();
+        let order: Vec<String> =
+            (0..5).map(|_| pop_ready(&r).id).collect();
+        assert_eq!(order, ["hi1", "hi2", "n1", "n2", "lo1"]);
+    }
+
+    #[test]
+    fn earliest_deadline_first_within_a_priority() {
+        let r: Router<Job> = Router::new(8);
+        let mk = |id: &str, deadline_s: Option<f64>| {
+            let mut spec = GenerationSpec::new();
+            if let Some(d) = deadline_s {
+                spec = spec.deadline_s(d);
+            }
+            Job::new(id, spec)
+        };
+        r.submit(mk("none1", None)).unwrap();
+        r.submit(mk("late", Some(60.0))).unwrap();
+        r.submit(mk("soon", Some(5.0))).unwrap();
+        r.submit(mk("none2", None)).unwrap();
+        let order: Vec<String> =
+            (0..4).map(|_| pop_ready(&r).id).collect();
+        // Deadlines first (earliest leading), then FIFO of the rest.
+        assert_eq!(order, ["soon", "late", "none1", "none2"]);
+    }
+
+    #[test]
+    fn priority_beats_deadline_beats_fifo() {
+        let r: Router<Job> = Router::new(8);
+        r.submit(Job::new("lo-soon", GenerationSpec::new()
+            .priority(Priority::Low)
+            .deadline_s(0.5)))
+            .unwrap();
+        r.submit(Job::new("hi-late", GenerationSpec::new()
+            .priority(Priority::High)
+            .deadline_s(60.0)))
+            .unwrap();
+        r.submit(Job::new("hi-none", GenerationSpec::new()
+            .priority(Priority::High)))
+            .unwrap();
+        let order: Vec<String> =
+            (0..3).map(|_| pop_ready(&r).id).collect();
+        assert_eq!(order, ["hi-late", "hi-none", "lo-soon"]);
+    }
+
+    #[test]
+    fn expired_jobs_are_shed_on_dequeue() {
+        let r: Router<Job> = Router::new(8);
+        r.submit(Job::new(
+            "gone",
+            GenerationSpec::new().deadline_s(0.005),
+        ))
+        .unwrap();
+        r.submit(job("fine", 1)).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        match r.pop().unwrap() {
+            Dequeued::Expired(j) => {
+                assert_eq!(j.id, "gone");
+                assert!(j.deadline_slack_s().unwrap() < 0.0);
+            }
+            Dequeued::Ready(j) => panic!("{} should have expired", j.id),
+        }
+        match r.pop().unwrap() {
+            Dequeued::Ready(j) => assert_eq!(j.id, "fine"),
+            Dequeued::Expired(j) => panic!("{} wrongly shed", j.id),
+        }
+        assert_eq!(r.stats().deadline_shed, 1);
     }
 
     #[test]
@@ -205,7 +446,7 @@ mod tests {
             let r = Arc::clone(&r);
             std::thread::spawn(move || r.pop())
         };
-        r.submit(Job { id: "x".into(), seed: 1 }).unwrap();
+        r.submit(job("x", 1)).unwrap();
         // `pop` blocks until work or close, so the waiter is
         // guaranteed to drain the item eventually; spin (no timing
         // assumptions) until it has.
@@ -225,10 +466,12 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(10));
         assert_eq!(r.close(), 0, "queue already drained");
         assert!(blocked.join().unwrap().is_none());
-        // After close: pops return None, submits are rejected.
+        // After close: pops return None, submits are rejected with the
+        // typed shutdown error (wire code `shutdown`).
         assert!(r.is_closed());
         assert!(r.pop().is_none());
-        assert!(r.submit(Job { id: "y".into(), seed: 2 }).is_err());
+        let e = r.submit(job("y", 2)).unwrap_err();
+        assert!(matches!(e, Error::Shutdown));
     }
 
     #[test]
@@ -332,6 +575,84 @@ mod tests {
                     s.admitted + s.rejected == next,
                     "admission accounting broken",
                 )?;
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_dequeue_order_matches_discipline() {
+        use crate::util::proptest::{ensure, forall};
+        // For random (rank, has_deadline, deadline_offset) batches,
+        // drain order must be sorted by (rank desc, deadline asc with
+        // None last, submission seq).
+        forall(
+            13,
+            150,
+            |rng| {
+                (0..1 + rng.below(12))
+                    .map(|_| {
+                        (
+                            rng.below(3) as usize, // rank
+                            (
+                                rng.below(2) as usize,          // has dl
+                                10 + rng.below(1000) as usize, // offset
+                            ),
+                        )
+                    })
+                    .collect::<Vec<(usize, (usize, usize))>>()
+            },
+            |items| {
+                let r: Router<Job> = Router::new(64);
+                for (i, &(rank, (has_dl, off_ms))) in
+                    items.iter().enumerate()
+                {
+                    let mut spec = GenerationSpec::new().priority(
+                        match rank {
+                            0 => Priority::Low,
+                            1 => Priority::Normal,
+                            _ => Priority::High,
+                        },
+                    );
+                    if has_dl == 1 {
+                        // Far-future deadlines: ordering only, no
+                        // accidental expiry during the test.
+                        spec = spec.deadline_s(3600.0 + off_ms as f64);
+                    }
+                    r.submit(Job::new(format!("j{i}"), spec)).unwrap();
+                }
+                let mut last: Option<(u8, Option<Instant>, usize)> = None;
+                for _ in 0..items.len() {
+                    let j = match r.pop().unwrap() {
+                        Dequeued::Ready(j) => j,
+                        Dequeued::Expired(j) => {
+                            return Err(format!(
+                                "{} expired with an hour of slack",
+                                j.id
+                            ))
+                        }
+                    };
+                    let idx: usize = j.id[1..].parse().unwrap();
+                    let cur =
+                        (j.priority_rank(), j.deadline(), idx);
+                    if let Some(prev) = last {
+                        ensure(
+                            prev.0 >= cur.0,
+                            "rank order violated",
+                        )?;
+                        if prev.0 == cur.0 {
+                            let ok = match (prev.1, cur.1) {
+                                (Some(a), Some(b)) => a <= b,
+                                (Some(_), None) => true,
+                                (None, Some(_)) => false,
+                                (None, None) => prev.2 < cur.2,
+                            };
+                            ensure(ok, "deadline/FIFO order violated")?;
+                        }
+                    }
+                    last = Some(cur);
+                }
+                ensure(r.queue_len() == 0, "items left behind")?;
                 Ok(())
             },
         );

@@ -1,7 +1,9 @@
 //! TCP JSON-lines server: the deployable front-end, truly concurrent.
 //!
 //! `stadi serve --addr 127.0.0.1:7878 --workers 4` runs three kinds of
-//! threads around the thread-safe bounded [`Router`]:
+//! threads around the thread-safe bounded priority [`Router`]
+//! (priority desc, earliest deadline, FIFO; expired requests shed on
+//! dequeue with the typed `deadline` wire code):
 //!
 //! * the **accept loop** (caller's thread) — nonblocking listener
 //!   polled every few ms so a set `stop` flag interrupts it even when
@@ -29,11 +31,12 @@ use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{EngineCore, Generation, Request};
+use crate::coordinator::{EngineCore, Generation};
 use crate::error::{Error, Result};
 use crate::fleet::{FleetManager, GangPolicy};
 use crate::serve::protocol::{self, WireRequest};
-use crate::serve::router::{Job, Router, RouterStats};
+use crate::serve::router::{Dequeued, Job, Prioritized, Router, RouterStats};
+use crate::spec::GenerationSpec;
 use crate::util::{json, stats};
 
 /// How often blocked accept/read calls re-check shutdown flags.
@@ -123,27 +126,43 @@ impl SessionRunner {
         SessionRunner { core, fleet: Some((fleet, policy)) }
     }
 
-    fn generate(&self, seed: u64, queued: usize) -> Result<Generation> {
-        let req = Request { seed };
+    fn generate(&self, job: &Job, queued: usize) -> Result<Generation> {
+        let spec = &job.spec;
         match &self.fleet {
-            None => self.core.generate(&req),
+            None => self.core.generate(spec),
             Some((fleet, policy)) => {
                 let core = Arc::clone(&self.core);
-                let predict =
-                    move |gang: &[usize]| core.predict_latency(gang).ok();
+                let spec_for_predict = spec.clone();
+                // Gangs larger than the spec's latent can feed (one
+                // granule per device) are unplannable; declining them
+                // up front costs an integer compare instead of a full
+                // failing planner pass per oversized prefix.
+                let max_gang = self.core.max_gang_for(spec)?;
+                // The predictor closes over the request's spec, so the
+                // policy prices *this* request's steps and rows — a
+                // draft-quality request is cheap to place on a small
+                // gang, a native high-quality one is not.
+                let predict = move |gang: &[usize]| {
+                    if gang.len() > max_gang {
+                        return None;
+                    }
+                    core.predict_latency_for(&spec_for_predict, gang).ok()
+                };
                 // `queued` (jobs still in the router behind this one)
                 // is the demand the policy shards the fleet for —
                 // blocked co-workers alone cap at workers-1 and would
                 // never push an adaptive policy past its threshold.
-                let lease = fleet.acquire(
+                let lease = fleet.acquire_for(
                     policy.as_ref(),
                     &self.core.effective_speeds(),
                     Some(&predict),
                     queued,
+                    spec.priority,
+                    job.deadline,
                 )?;
                 // Lease drops (devices return to the pool) when this
                 // scope exits — normally or by unwind.
-                self.core.session_on(&lease)?.execute(&req)
+                self.core.session_for_on(spec, &lease)?.execute(spec)
             }
         }
     }
@@ -156,10 +175,13 @@ impl JobRunner for SessionRunner {
 
     fn run_with_load(&self, job: &Job, queued: usize) -> (bool, String) {
         let t0 = Instant::now();
-        match self.generate(job.seed, queued) {
+        match self.generate(job, queued) {
             Ok(g) => {
                 let wall = t0.elapsed().as_secs_f64();
-                (true, protocol::response_line(&job.id, &g, wall))
+                (
+                    true,
+                    protocol::response_line(&job.id, &job.spec, &g, wall),
+                )
             }
             Err(e) => (false, protocol::error_line(&job.id, &e)),
         }
@@ -172,6 +194,18 @@ struct Ticket {
     job: Job,
     seq: u64,
     reply: mpsc::Sender<(u64, String)>,
+}
+
+/// Queue position comes from the request spec: priority tier, then
+/// earliest deadline, then FIFO (the router's discipline).
+impl Prioritized for Ticket {
+    fn priority_rank(&self) -> u8 {
+        self.job.priority_rank()
+    }
+
+    fn deadline(&self) -> Option<Instant> {
+        self.job.deadline()
+    }
 }
 
 /// Serve with real sessions on the shared core. Returns total requests
@@ -261,8 +295,41 @@ pub fn serve_with_stats(
             let handled = Arc::clone(&handled);
             let max = opts.max_requests as u64;
             thread::spawn(move || {
-                while let Some(t) = router.pop() {
+                while let Some(popped) = router.pop() {
                     let t0 = Instant::now();
+                    // Deadline shed: the router hands expired jobs
+                    // back instead of running them — answer with the
+                    // typed `deadline` code and count a failure.
+                    let t = match popped {
+                        Dequeued::Ready(t) => t,
+                        Dequeued::Expired(t) => {
+                            let late = t
+                                .job
+                                .deadline_slack_s()
+                                .map(|s| (-s).max(0.0))
+                                .unwrap_or(0.0);
+                            let line = protocol::error_line(
+                                &t.job.id,
+                                &Error::DeadlineExceeded {
+                                    deadline_s: t
+                                        .job
+                                        .spec
+                                        .deadline_s
+                                        .unwrap_or(0.0),
+                                    late_by_s: late,
+                                },
+                            );
+                            router.record_outcome(false, 0.0);
+                            let _ = t.reply.send((t.seq, line));
+                            let n =
+                                handled.fetch_add(1, Ordering::SeqCst) + 1;
+                            if max > 0 && n >= max {
+                                done.store(true, Ordering::SeqCst);
+                                close_and_answer(&router);
+                            }
+                            continue;
+                        }
+                    };
                     // A panicking runner must not shrink the pool (with
                     // one worker it would wedge the whole server) nor
                     // leave a sequence gap in the reply stream.
@@ -380,10 +447,7 @@ fn close_and_answer(router: &Router<Ticket>) -> usize {
         router.record_outcome(false, 0.0);
         let _ = t.reply.send((
             t.seq,
-            protocol::error_line(
-                &t.job.id,
-                &Error::Protocol("server shutting down".into()),
-            ),
+            protocol::error_line(&t.job.id, &Error::Shutdown),
         ));
     }
     n
@@ -446,11 +510,10 @@ fn handle_connection(
                     seq += 1;
                     match WireRequest::parse(text) {
                         Ok(req) => {
+                            // Deadlines are stamped here, at admission:
+                            // queueing time counts against the SLO.
                             let ticket = Ticket {
-                                job: Job {
-                                    id: req.id.clone(),
-                                    seed: req.seed,
-                                },
+                                job: Job::new(req.id.clone(), req.spec),
                                 seq: this_seq,
                                 reply: tx.clone(),
                             };
@@ -537,17 +600,41 @@ impl Client {
         Ok(Client { writer: stream, reader })
     }
 
-    /// Send one request, read one response line.
+    /// Send one v1 request (`{"id","seed"}` — the backcompat shape),
+    /// read one response line.
     pub fn request(&mut self, id: &str, seed: u64) -> Result<String> {
-        let req = WireRequest { id: id.into(), seed };
-        writeln!(self.writer, "{}", req.to_line())?;
+        self.send(id, seed)?;
         self.read_line()
     }
 
-    /// Send one request without waiting for the response (pipelining;
-    /// pair with [`Client::read_line`]).
+    /// Send one v2 request with a full spec, read one response line.
+    pub fn request_spec(
+        &mut self,
+        id: &str,
+        spec: &GenerationSpec,
+    ) -> Result<String> {
+        self.send_spec(id, spec)?;
+        self.read_line()
+    }
+
+    /// Send one v1 request without waiting for the response
+    /// (pipelining; pair with [`Client::read_line`]).
     pub fn send(&mut self, id: &str, seed: u64) -> Result<()> {
-        let req = WireRequest { id: id.into(), seed };
+        let req = WireRequest {
+            id: id.into(),
+            spec: GenerationSpec::new().seed(seed),
+        };
+        writeln!(self.writer, "{}", req.to_line_v1())?;
+        Ok(())
+    }
+
+    /// Send one v2 request without waiting for the response.
+    pub fn send_spec(
+        &mut self,
+        id: &str,
+        spec: &GenerationSpec,
+    ) -> Result<()> {
+        let req = WireRequest { id: id.into(), spec: spec.clone() };
         writeln!(self.writer, "{}", req.to_line())?;
         Ok(())
     }

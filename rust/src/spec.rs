@@ -1,0 +1,510 @@
+//! Per-request generation parameters: the typed [`GenerationSpec`].
+//!
+//! The paper's planner adapts step counts and patch sizes to the
+//! *cluster*; a serving deployment also has to adapt to the *request*
+//! — different image sizes, step budgets, quality tiers and SLOs
+//! (DistriFusion shows patch-parallel cost scales with resolution and
+//! steps; mixed-request scheduling is where serving throughput is
+//! won). `GenerationSpec` is the seam that carries those parameters
+//! from the wire, through the router's priority queue, into
+//! `EngineCore::plan_for` / `session_for` and the gang policies.
+//!
+//! Every field except `seed` is optional-with-a-default, and the
+//! default spec reproduces the engine's global configuration exactly:
+//! a v1 `{"id","seed"}` wire request maps to
+//! `GenerationSpec::new().seed(s)` and plans — and renders — exactly
+//! like the pre-spec engine did (covered by the backcompat golden
+//! test).
+//!
+//! Resolution note: latent rows = `height / VAE_FACTOR`. Planning and
+//! latency prediction accept any granularity-aligned row count, but
+//! *execution* is limited to the resolution the artifacts were AOT
+//! compiled for — `EngineCore::session_for` rejects non-native sizes
+//! with a typed [`Error::Spec`](crate::error::Error) (wire code
+//! `bad_spec`) instead of producing a wrong-shaped image.
+
+use crate::error::{Error, Result};
+use crate::util::json::{Object, Value};
+
+/// VAE downsampling factor: pixels per latent row/column.
+pub const VAE_FACTOR: usize = 8;
+
+/// Hard validation bounds (anti-abuse; generous beyond any real use).
+pub const MAX_STEPS: usize = 4096;
+pub const MAX_SIDE_PX: usize = 8192;
+
+/// Seeds travel as JSON numbers (f64 on the wire), so only integers
+/// strictly below 2^53 are unambiguous; 2^53 itself is rejected too,
+/// because 2^53 + 1 rounds *onto* it in f64 — accepting it would
+/// silently serve a different seed than the client sent.
+pub const MAX_SEED: u64 = (1 << 53) - 1;
+
+/// Deadline upper bound (a week): keeps `Instant + deadline`
+/// arithmetic safely inside `Duration` range and rejects nonsense
+/// SLOs instead of scheduling them.
+pub const MAX_DEADLINE_S: f64 = 604_800.0;
+
+/// Request quality tier: scales the step budget when `steps` is not
+/// set explicitly (an explicit `steps` always wins).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Quality {
+    /// Half the configured step budget.
+    Draft,
+    /// The configured step budget unchanged.
+    #[default]
+    Standard,
+    /// 1.5x the configured step budget.
+    High,
+}
+
+impl Quality {
+    pub fn factor(self) -> f64 {
+        match self {
+            Quality::Draft => 0.5,
+            Quality::Standard => 1.0,
+            Quality::High => 1.5,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Quality::Draft => "draft",
+            Quality::Standard => "standard",
+            Quality::High => "high",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "draft" => Ok(Quality::Draft),
+            "standard" => Ok(Quality::Standard),
+            "high" => Ok(Quality::High),
+            _ => Err(Error::Spec(format!(
+                "unknown quality {s:?} (expected draft | standard | high)"
+            ))),
+        }
+    }
+}
+
+/// Request priority tier. The router serves higher tiers first
+/// (earliest-deadline within a tier, FIFO among equals).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
+
+impl Priority {
+    /// Numeric rank: higher = served first.
+    pub fn rank(self) -> u8 {
+        match self {
+            Priority::Low => 0,
+            Priority::Normal => 1,
+            Priority::High => 2,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "low" => Ok(Priority::Low),
+            "normal" => Ok(Priority::Normal),
+            "high" => Ok(Priority::High),
+            _ => Err(Error::Spec(format!(
+                "unknown priority {s:?} (expected low | normal | high)"
+            ))),
+        }
+    }
+}
+
+/// Typed per-request generation parameters (builder API).
+///
+/// ```
+/// use stadi::spec::{GenerationSpec, Priority, Quality};
+/// let spec = GenerationSpec::new()
+///     .seed(42)
+///     .steps(50)
+///     .size(256, 256)
+///     .quality(Quality::Standard)
+///     .priority(Priority::High)
+///     .deadline_s(2.5);
+/// spec.validate().unwrap();
+/// ```
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct GenerationSpec {
+    /// Seeds the initial noise and the conditioning vector (the
+    /// prompt-embedding stand-in, DESIGN.md §3).
+    pub seed: u64,
+    /// Explicit step budget (M_base for this request). `None` = the
+    /// engine's configured M_base scaled by `quality`.
+    pub steps: Option<usize>,
+    /// Output height in pixels; `None` = the model's native height.
+    pub height_px: Option<usize>,
+    /// Output width in pixels; `None` = the model's native width.
+    pub width_px: Option<usize>,
+    pub quality: Quality,
+    pub priority: Priority,
+    /// Soft SLO: seconds from admission after which the request is
+    /// shed rather than served (wire code `deadline`).
+    pub deadline_s: Option<f64>,
+}
+
+impl GenerationSpec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.steps = Some(steps);
+        self
+    }
+
+    /// Output size in pixels (height, width).
+    pub fn size(mut self, height_px: usize, width_px: usize) -> Self {
+        self.height_px = Some(height_px);
+        self.width_px = Some(width_px);
+        self
+    }
+
+    pub fn quality(mut self, q: Quality) -> Self {
+        self.quality = q;
+        self
+    }
+
+    pub fn priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
+
+    pub fn deadline_s(mut self, s: f64) -> Self {
+        self.deadline_s = Some(s);
+        self
+    }
+
+    /// Validate field ranges (engine-independent; cross-checks against
+    /// model geometry happen in `EngineCore::plan_for`).
+    pub fn validate(&self) -> Result<()> {
+        if self.seed > MAX_SEED {
+            return Err(Error::Spec(format!(
+                "seed {} not exactly representable as a JSON number \
+                 (max {MAX_SEED})",
+                self.seed
+            )));
+        }
+        if let Some(s) = self.steps {
+            if s < 2 || s > MAX_STEPS {
+                return Err(Error::Spec(format!(
+                    "steps {s} outside [2, {MAX_STEPS}]"
+                )));
+            }
+        }
+        for (name, px) in
+            [("height", self.height_px), ("width", self.width_px)]
+        {
+            if let Some(px) = px {
+                if px == 0 || px > MAX_SIDE_PX {
+                    return Err(Error::Spec(format!(
+                        "{name} {px}px outside [{VAE_FACTOR}, \
+                         {MAX_SIDE_PX}]"
+                    )));
+                }
+                if px % VAE_FACTOR != 0 {
+                    return Err(Error::Spec(format!(
+                        "{name} {px}px not a multiple of the VAE \
+                         factor {VAE_FACTOR}"
+                    )));
+                }
+            }
+        }
+        if let Some(d) = self.deadline_s {
+            if !d.is_finite() || d <= 0.0 || d > MAX_DEADLINE_S {
+                return Err(Error::Spec(format!(
+                    "deadline_s {d} must be finite, > 0 and <= \
+                     {MAX_DEADLINE_S}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// The step budget this request plans with: an explicit `steps`
+    /// wins; otherwise the configured base scaled by the quality tier
+    /// (floored at 2 — parity against M_warmup is normalized by
+    /// [`crate::sched::temporal::normalize_warmup`]).
+    pub fn effective_steps(&self, base: usize) -> usize {
+        match self.steps {
+            Some(s) => s,
+            None => {
+                ((base as f64 * self.quality.factor()).round() as usize)
+                    .max(2)
+            }
+        }
+    }
+
+    /// Latent rows this request plans over (`height / VAE_FACTOR`;
+    /// native when unset).
+    pub fn latent_rows(&self, native_rows: usize) -> usize {
+        match self.height_px {
+            Some(h) => h / VAE_FACTOR,
+            None => native_rows,
+        }
+    }
+
+    /// True when the spec requests the model's native resolution (the
+    /// only resolution the AOT'd artifacts can *execute*).
+    pub fn is_native_size(&self, native_h: usize, native_w: usize) -> bool {
+        self.height_px.unwrap_or(native_h * VAE_FACTOR)
+            == native_h * VAE_FACTOR
+            && self.width_px.unwrap_or(native_w * VAE_FACTOR)
+                == native_w * VAE_FACTOR
+    }
+
+    /// Wire representation (the `"spec"` object of a v2 request line).
+    /// Unset optional fields are omitted, so parse(to_json(s)) == s.
+    pub fn to_json(&self) -> Value {
+        let mut o = Object::new();
+        o.insert("seed", Value::Num(self.seed as f64));
+        if let Some(s) = self.steps {
+            o.insert("steps", Value::Num(s as f64));
+        }
+        if let Some(h) = self.height_px {
+            o.insert("height", Value::Num(h as f64));
+        }
+        if let Some(w) = self.width_px {
+            o.insert("width", Value::Num(w as f64));
+        }
+        o.insert("quality", Value::Str(self.quality.as_str().into()));
+        o.insert("priority", Value::Str(self.priority.as_str().into()));
+        if let Some(d) = self.deadline_s {
+            o.insert("deadline_s", Value::Num(d));
+        }
+        Value::Obj(o)
+    }
+
+    /// Parse the `"spec"` object of a v2 request. Unknown keys are
+    /// ignored (forward compatibility); known keys are validated
+    /// strictly and the assembled spec is range-checked.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        v.as_obj().map_err(|_| {
+            Error::Spec("spec must be a JSON object".into())
+        })?;
+        let mut spec = GenerationSpec::new();
+        if let Some(x) = v.get_opt("seed") {
+            spec.seed = parse_seed(x)?;
+        }
+        if let Some(x) = v.get_opt("steps") {
+            spec.steps = Some(x.as_usize().map_err(spec_err("steps"))?);
+        }
+        if let Some(x) = v.get_opt("height") {
+            spec.height_px =
+                Some(x.as_usize().map_err(spec_err("height"))?);
+        }
+        if let Some(x) = v.get_opt("width") {
+            spec.width_px = Some(x.as_usize().map_err(spec_err("width"))?);
+        }
+        if let Some(x) = v.get_opt("quality") {
+            spec.quality =
+                Quality::parse(x.as_str().map_err(spec_err("quality"))?)?;
+        }
+        if let Some(x) = v.get_opt("priority") {
+            spec.priority =
+                Priority::parse(x.as_str().map_err(spec_err("priority"))?)?;
+        }
+        if let Some(x) = v.get_opt("deadline_s") {
+            spec.deadline_s =
+                Some(x.as_f64().map_err(spec_err("deadline_s"))?);
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// Seeds arrive as JSON numbers; a negative one used to be silently
+/// cast through `as u64` into a huge positive seed — now a typed
+/// rejection (wire code `bad_spec`). The upper bound is [`MAX_SEED`]
+/// (f64-exact integers only).
+pub fn parse_seed(v: &Value) -> Result<u64> {
+    let s = v.as_i64().map_err(spec_err("seed"))?;
+    let seed = u64::try_from(s).map_err(|_| {
+        Error::Spec(format!("seed {s} must be non-negative"))
+    })?;
+    if seed > MAX_SEED {
+        return Err(Error::Spec(format!(
+            "seed {seed} not exactly representable as a JSON number \
+             (max {MAX_SEED})"
+        )));
+    }
+    Ok(seed)
+}
+
+fn spec_err(field: &'static str) -> impl Fn(Error) -> Error {
+    move |e| Error::Spec(format!("bad {field}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn default_spec_is_neutral() {
+        let s = GenerationSpec::new();
+        s.validate().unwrap();
+        assert_eq!(s.effective_steps(100), 100);
+        assert_eq!(s.latent_rows(32), 32);
+        assert!(s.is_native_size(32, 32));
+        assert_eq!(s.priority, Priority::Normal);
+        assert_eq!(s.quality, Quality::Standard);
+        assert_eq!(s.deadline_s, None);
+    }
+
+    #[test]
+    fn builder_sets_every_field() {
+        let s = GenerationSpec::new()
+            .seed(7)
+            .steps(50)
+            .size(128, 256)
+            .quality(Quality::Draft)
+            .priority(Priority::High)
+            .deadline_s(1.5);
+        s.validate().unwrap();
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.effective_steps(100), 50, "explicit steps win");
+        assert_eq!(s.latent_rows(32), 16);
+        assert!(!s.is_native_size(32, 32));
+        assert_eq!(s.deadline_s, Some(1.5));
+    }
+
+    #[test]
+    fn quality_scales_steps_when_unset() {
+        let base = 100;
+        assert_eq!(
+            GenerationSpec::new()
+                .quality(Quality::Draft)
+                .effective_steps(base),
+            50
+        );
+        assert_eq!(
+            GenerationSpec::new()
+                .quality(Quality::High)
+                .effective_steps(base),
+            150
+        );
+        // Explicit steps override the tier.
+        assert_eq!(
+            GenerationSpec::new()
+                .steps(30)
+                .quality(Quality::High)
+                .effective_steps(base),
+            30
+        );
+        // Tiny bases floor at 2 steps.
+        assert_eq!(
+            GenerationSpec::new()
+                .quality(Quality::Draft)
+                .effective_steps(2),
+            2
+        );
+    }
+
+    #[test]
+    fn validation_rejects_bad_fields() {
+        assert!(GenerationSpec::new().steps(1).validate().is_err());
+        assert!(GenerationSpec::new()
+            .steps(MAX_STEPS + 1)
+            .validate()
+            .is_err());
+        assert!(GenerationSpec::new().size(100, 256).validate().is_err());
+        assert!(GenerationSpec::new().size(0, 256).validate().is_err());
+        assert!(GenerationSpec::new()
+            .size(256, MAX_SIDE_PX + 8)
+            .validate()
+            .is_err());
+        assert!(GenerationSpec::new().deadline_s(0.0).validate().is_err());
+        assert!(GenerationSpec::new()
+            .deadline_s(-1.0)
+            .validate()
+            .is_err());
+        assert!(GenerationSpec::new()
+            .deadline_s(f64::NAN)
+            .validate()
+            .is_err());
+        assert!(GenerationSpec::new()
+            .deadline_s(MAX_DEADLINE_S * 2.0)
+            .validate()
+            .is_err());
+        // Seeds beyond f64-exact range are rejected, not rounded.
+        assert!(GenerationSpec::new().seed(MAX_SEED).validate().is_ok());
+        assert!(GenerationSpec::new()
+            .seed(MAX_SEED + 1)
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_unset_fields() {
+        for spec in [
+            GenerationSpec::new().seed(5),
+            GenerationSpec::new()
+                .seed(9)
+                .steps(64)
+                .size(128, 128)
+                .quality(Quality::High)
+                .priority(Priority::Low)
+                .deadline_s(0.25),
+        ] {
+            let line = json::to_string(&spec.to_json());
+            let back =
+                GenerationSpec::from_json(&json::parse(&line).unwrap())
+                    .unwrap();
+            assert_eq!(back, spec, "{line}");
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_negative_seed_and_bad_enums() {
+        let bad = |s: &str| {
+            let v = json::parse(s).unwrap();
+            let e = GenerationSpec::from_json(&v).unwrap_err();
+            assert!(
+                matches!(e, Error::Spec(_)),
+                "expected Error::Spec for {s}, got {e:?}"
+            );
+        };
+        bad("{\"seed\": -1}");
+        bad("{\"quality\": \"ultra\"}");
+        bad("{\"priority\": \"urgent\"}");
+        bad("{\"steps\": 1}");
+        bad("{\"deadline_s\": -0.5}");
+        bad("{\"height\": 100}");
+        // Unknown keys are ignored, not rejected.
+        let v = json::parse("{\"seed\": 3, \"future_knob\": true}").unwrap();
+        assert_eq!(
+            GenerationSpec::from_json(&v).unwrap(),
+            GenerationSpec::new().seed(3)
+        );
+    }
+
+    #[test]
+    fn priority_ordering_and_ranks() {
+        assert!(Priority::High > Priority::Normal);
+        assert!(Priority::Normal > Priority::Low);
+        assert_eq!(Priority::High.rank(), 2);
+        assert_eq!(Priority::parse("high").unwrap(), Priority::High);
+        assert_eq!(Quality::parse("draft").unwrap(), Quality::Draft);
+    }
+}

@@ -29,6 +29,7 @@ use stadi::serve::router::Job;
 use stadi::serve::server::{
     serve, serve_with, serve_with_stats, Client, JobRunner, ServeOptions,
 };
+use stadi::spec::{GenerationSpec, Priority};
 use stadi::util::json;
 
 /// Stub executor: per-job delay varying with the seed so concurrent
@@ -41,14 +42,14 @@ struct StubRunner {
 impl JobRunner for StubRunner {
     fn run(&self, job: &Job) -> (bool, String) {
         if self.delay_ms > 0 {
-            let d = self.delay_ms + (job.seed % 3) * self.delay_ms;
+            let d = self.delay_ms + (job.seed() % 3) * self.delay_ms;
             thread::sleep(Duration::from_millis(d));
         }
         (
             true,
             format!(
                 "{{\"id\": \"{}\", \"ok\": true, \"seed\": {}}}",
-                job.id, job.seed
+                job.id, job.seed()
             ),
         )
     }
@@ -237,7 +238,7 @@ fn malformed_requests_get_error_responses() {
     reader.read_line(&mut line).unwrap();
     let v = json::parse(line.trim()).unwrap();
     assert!(!v.get("ok").unwrap().as_bool().unwrap());
-    assert_eq!(v.get("code").unwrap().as_str().unwrap(), "error");
+    assert_eq!(v.get("code").unwrap().as_str().unwrap(), "bad_request");
     line.clear();
     reader.read_line(&mut line).unwrap();
     let v = json::parse(line.trim()).unwrap();
@@ -262,7 +263,7 @@ impl JobRunner for LeasingPanicRunner {
         // test forever.
         match self.fleet.try_acquire(&[0]) {
             Ok(Some(_lease)) => {
-                if job.seed == 666 {
+                if job.seed() == 666 {
                     panic!("poisoned job");
                 }
                 (
@@ -336,6 +337,197 @@ fn panicking_job_releases_lease_and_counts_failed() {
     // The fleet is whole again after shutdown.
     assert_eq!(fleet.free_devices(), vec![0]);
     assert_eq!(fleet.in_flight(), 0);
+}
+
+/// Stub whose first job ("gate") blocks until released, recording
+/// execution order — deterministic scaffolding for queue-discipline
+/// tests (everything behind the gate is enqueued before any of it
+/// runs).
+struct GatedRunner {
+    release: Arc<(std::sync::Mutex<bool>, std::sync::Condvar)>,
+    order: Arc<std::sync::Mutex<Vec<String>>>,
+}
+
+impl JobRunner for GatedRunner {
+    fn run(&self, job: &Job) -> (bool, String) {
+        if job.id == "gate" {
+            let (lock, cv) = &*self.release;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+        }
+        self.order.lock().unwrap().push(job.id.clone());
+        (true, format!("{{\"id\": \"{}\", \"ok\": true}}", job.id))
+    }
+}
+
+/// v2 requests with priorities: while the single worker is held at the
+/// gate, a low→low→high pipeline reorders so the high-priority job
+/// executes first — and the client still sees responses in its own
+/// submission order (the per-connection reorder buffer).
+#[test]
+fn high_priority_requests_execute_before_queued_low_priority() {
+    let release = Arc::new((
+        std::sync::Mutex::new(false),
+        std::sync::Condvar::new(),
+    ));
+    let order = Arc::new(std::sync::Mutex::new(Vec::new()));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let stop = Arc::clone(&stop);
+        let runner = GatedRunner {
+            release: Arc::clone(&release),
+            order: Arc::clone(&order),
+        };
+        thread::spawn(move || {
+            serve_with(Arc::new(runner), listener, opts(8, 1, 0), Some(stop))
+        })
+    };
+
+    let mut client = Client::connect(&addr).unwrap();
+    client.send("gate", 0).unwrap();
+    // Give the (only) worker time to pick up the gate job, so the
+    // next three all queue behind it.
+    thread::sleep(Duration::from_millis(100));
+    let lo = GenerationSpec::new().priority(Priority::Low);
+    let hi = GenerationSpec::new().priority(Priority::High);
+    client.send_spec("low1", &lo).unwrap();
+    client.send_spec("low2", &lo).unwrap();
+    client.send_spec("high", &hi).unwrap();
+    thread::sleep(Duration::from_millis(100));
+    {
+        let (lock, cv) = &*release;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+    // Responses come back in submission order regardless of execution
+    // order (per-connection FIFO), all ok.
+    for want in ["gate", "low1", "low2", "high"] {
+        let line = client.read_line().unwrap();
+        let v = json::parse(&line).unwrap();
+        assert!(v.get("ok").unwrap().as_bool().unwrap(), "{line}");
+        assert_eq!(v.get("id").unwrap().as_str().unwrap(), want);
+    }
+    stop.store(true, Ordering::SeqCst);
+    server.join().unwrap().unwrap();
+    // Execution order: the high-priority job jumped both queued lows.
+    assert_eq!(
+        *order.lock().unwrap(),
+        vec!["gate", "high", "low1", "low2"],
+    );
+}
+
+/// A request whose deadline passes while it queues is shed on dequeue
+/// with the typed `deadline` code and structured lateness fields — and
+/// counted in `RouterStats::deadline_shed`.
+#[test]
+fn expired_deadline_is_shed_with_typed_code() {
+    let release = Arc::new((
+        std::sync::Mutex::new(false),
+        std::sync::Condvar::new(),
+    ));
+    let order = Arc::new(std::sync::Mutex::new(Vec::new()));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let stop = Arc::clone(&stop);
+        let runner = GatedRunner {
+            release: Arc::clone(&release),
+            order: Arc::clone(&order),
+        };
+        thread::spawn(move || {
+            serve_with_stats(
+                Arc::new(runner),
+                listener,
+                opts(8, 1, 0),
+                Some(stop),
+            )
+        })
+    };
+
+    let mut client = Client::connect(&addr).unwrap();
+    client.send("gate", 0).unwrap();
+    thread::sleep(Duration::from_millis(100));
+    // 10ms budget, but the worker is held at the gate for ~200ms more:
+    // guaranteed to expire in queue.
+    client
+        .send_spec("urgent", &GenerationSpec::new().deadline_s(0.01))
+        .unwrap();
+    thread::sleep(Duration::from_millis(200));
+    {
+        let (lock, cv) = &*release;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+    let line = client.read_line().unwrap();
+    let v = json::parse(&line).unwrap();
+    assert!(v.get("ok").unwrap().as_bool().unwrap(), "{line}");
+    let line = client.read_line().unwrap();
+    let v = json::parse(&line).unwrap();
+    assert!(!v.get("ok").unwrap().as_bool().unwrap(), "{line}");
+    assert_eq!(v.get("code").unwrap().as_str().unwrap(), "deadline");
+    assert_eq!(v.get("deadline_s").unwrap().as_f64().unwrap(), 0.01);
+    assert!(v.get("late_by_s").unwrap().as_f64().unwrap() > 0.0);
+    drop(client);
+
+    stop.store(true, Ordering::SeqCst);
+    let (handled, stats) = server.join().unwrap().unwrap();
+    assert_eq!(handled, 2, "shed requests still count as handled");
+    assert_eq!(stats.deadline_shed, 1);
+    assert_eq!(stats.failed, 1);
+    assert_eq!(stats.completed, 1);
+    // The shed job never reached the runner.
+    assert_eq!(*order.lock().unwrap(), vec!["gate"]);
+}
+
+/// Invalid v2 specs (negative seed, bad quality) get `bad_spec` error
+/// lines without killing the connection; v1 negative seeds too.
+#[test]
+fn invalid_specs_get_bad_spec_lines() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let stop = Arc::clone(&stop);
+        thread::spawn(move || {
+            serve_with(
+                Arc::new(StubRunner { delay_ms: 0 }),
+                listener,
+                opts(8, 2, 0),
+                Some(stop),
+            )
+        })
+    };
+
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    writeln!(stream, "{{\"id\": \"n1\", \"seed\": -5}}").unwrap();
+    writeln!(
+        stream,
+        "{{\"id\": \"n2\", \"spec\": {{\"quality\": \"ultra\"}}}}"
+    )
+    .unwrap();
+    writeln!(stream, "{{\"id\": \"ok\", \"seed\": 5}}").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    for _ in 0..2 {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let v = json::parse(line.trim()).unwrap();
+        assert!(!v.get("ok").unwrap().as_bool().unwrap(), "{line}");
+        assert_eq!(v.get("code").unwrap().as_str().unwrap(), "bad_spec");
+    }
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let v = json::parse(line.trim()).unwrap();
+    assert!(v.get("ok").unwrap().as_bool().unwrap(), "{line}");
+    drop(reader);
+    drop(stream);
+    stop.store(true, Ordering::SeqCst);
+    server.join().unwrap().unwrap();
 }
 
 // --- Real-engine path (needs artifacts + xla backend) ---------------

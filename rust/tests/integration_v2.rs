@@ -1,0 +1,141 @@
+//! Wire-protocol v2 / `GenerationSpec` backcompat goldens.
+//!
+//! The redesign's contract: a v1 `{"id","seed"}` line maps to the
+//! default spec, and the default spec plans exactly like the
+//! pre-redesign engine (global `Schedule`, config M_base/M_warmup,
+//! native latent rows). These tests pin that numerically — the v1
+//! serve path must reproduce, bit for bit, the latent the old
+//! `Plan::build`-from-globals path produces. Real execution needs
+//! artifacts + the xla backend and skips otherwise.
+
+use std::net::TcpListener;
+use std::thread;
+
+use stadi::config::{EngineConfig, StadiParams};
+use stadi::coordinator::EngineCore;
+use stadi::sched::plan::Plan;
+use stadi::serve::server::{serve, Client, ServeOptions};
+use stadi::spec::GenerationSpec;
+use stadi::util::json;
+
+fn config() -> Option<EngineConfig> {
+    if !cfg!(feature = "xla-backend") {
+        eprintln!("skipping: built without xla-backend");
+        return None;
+    }
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let mut cfg = EngineConfig::two_gpu_default(dir, &[0.0, 0.4]);
+    cfg.stadi = StadiParams { m_base: 6, m_warmup: 2, ..Default::default() };
+    Some(cfg)
+}
+
+/// The literal pre-redesign planning path: `Plan::build` straight from
+/// the engine's globals (schedule, config params, native model dims)
+/// at current effective speeds — what `EngineCore::plan` used to
+/// inline before specs existed.
+fn pre_redesign_plan(core: &EngineCore) -> Plan {
+    let m = core.exec().manifest().model.clone();
+    let names: Vec<String> = core
+        .config()
+        .devices
+        .iter()
+        .map(|d| d.name.clone())
+        .collect();
+    Plan::build(
+        core.schedule(),
+        &core.effective_speeds(),
+        &names,
+        &core.config().stadi,
+        m.latent_h,
+        m.row_granularity,
+    )
+    .unwrap()
+}
+
+/// Golden backcompat: one v1 wire request against a fresh server
+/// produces the exact `latent_sum`/`latent_first8` of the
+/// pre-redesign path on a fresh engine with the same config.
+#[test]
+fn v1_wire_line_reproduces_pre_redesign_numerics() {
+    let Some(cfg) = config() else { return };
+    let seed = 4242u64;
+
+    // Reference: fresh engine, old-style plan from globals, executed
+    // through the explicit-plan escape hatch (no spec involved).
+    let reference = {
+        let core = EngineCore::new(cfg.clone()).unwrap();
+        let plan = pre_redesign_plan(&core);
+        core.session_with_plan(plan).execute_seeded(seed).unwrap()
+    };
+    let want_sum = reference.latent.sum();
+    let want_first8: Vec<f64> = reference.latent.data[..8]
+        .iter()
+        .map(|&x| x as f64)
+        .collect();
+
+    // Candidate: the same request as a raw v1 line through the full
+    // serve stack (parse -> default spec -> plan_for -> execute).
+    let core = EngineCore::new(cfg).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let client_thread = thread::spawn(move || {
+        let mut client = Client::connect(&addr).unwrap();
+        client.request("golden", seed).unwrap()
+    });
+    let opts = ServeOptions {
+        queue_capacity: 4,
+        workers: 1,
+        max_requests: 1,
+        ..ServeOptions::default()
+    };
+    serve(core, listener, opts, None).unwrap();
+    let line = client_thread.join().unwrap();
+
+    let v = json::parse(&line).unwrap();
+    assert!(v.get("ok").unwrap().as_bool().unwrap(), "{line}");
+    // Exact equality: same f32 latents, f64-summed and round-trip
+    // serialized with shortest-exact formatting on both sides.
+    assert_eq!(
+        v.get("latent_sum").unwrap().as_f64().unwrap(),
+        want_sum,
+        "latent_sum drifted from the pre-redesign path: {line}"
+    );
+    let got_first8 = v.get("latent_first8").unwrap().f64s().unwrap();
+    assert_eq!(got_first8, want_first8, "latent_first8 drifted: {line}");
+    // The response also echoes the resolved (default) spec.
+    let spec = v.get("spec").unwrap();
+    assert_eq!(spec.get("seed").unwrap().as_usize().unwrap(), seed as usize);
+    assert_eq!(
+        spec.get("quality").unwrap().as_str().unwrap(),
+        "standard"
+    );
+    assert_eq!(
+        spec.get("priority").unwrap().as_str().unwrap(),
+        "normal"
+    );
+}
+
+/// The same equivalence at the library layer: `plan()` (default spec,
+/// cached) and the pre-redesign inline build agree on every
+/// plan-shaping output.
+#[test]
+fn default_spec_plan_equals_pre_redesign_plan() {
+    let Some(cfg) = config() else { return };
+    let core = EngineCore::new(cfg).unwrap();
+    let old = pre_redesign_plan(&core);
+    let new = core.plan_for(&GenerationSpec::default()).unwrap();
+    assert_eq!(old.params.m_base, new.params.m_base);
+    assert_eq!(old.params.m_warmup, new.params.m_warmup);
+    assert_eq!(old.sync_points, new.sync_points);
+    assert_eq!(old.devices.len(), new.devices.len());
+    for (a, b) in old.devices.iter().zip(&new.devices) {
+        assert_eq!(a.rows, b.rows);
+        assert_eq!(a.class, b.class);
+        assert_eq!(a.steps.len(), b.steps.len());
+    }
+}

@@ -1,0 +1,152 @@
+//! Offline API stub for `xla` (xla-rs 0.1.6) — see Cargo.toml.
+//!
+//! Mirrors the subset of the xla-rs API that `stadi`'s PJRT runtime
+//! uses, with every runtime entry point failing loudly. The point is
+//! to keep the `xla-backend` feature *compiling* in registry-less
+//! environments (CI gates the API surface with `cargo check
+//! --features xla-backend`); executing artifacts requires swapping
+//! this path dependency for the real crate.
+
+use std::fmt;
+
+/// Stub error: also what every runtime entry point returns.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err() -> Error {
+    Error(
+        "xla stub: built against rust/xla-stub (offline API placeholder). \
+         Point the `xla` dependency in rust/Cargo.toml at the real \
+         xla-rs crate to execute artifacts"
+            .into(),
+    )
+}
+
+/// Element types transferable to/from literals and device buffers.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// Host-side literal (stub: carries no data).
+#[derive(Debug)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(stub_err())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(stub_err())
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(stub_err())
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        Err(stub_err())
+    }
+
+    pub fn to_tuple3(&self) -> Result<(Literal, Literal, Literal)> {
+        Err(stub_err())
+    }
+}
+
+/// Parsed HLO module proto (stub).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(stub_err())
+    }
+}
+
+/// XLA computation handle (stub).
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device buffer handle (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(stub_err())
+    }
+}
+
+/// Compiled executable handle (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_err())
+    }
+}
+
+/// PJRT client (stub: construction fails, so no other entry point is
+/// ever reachable at runtime).
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(stub_err())
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(stub_err())
+    }
+
+    pub fn compile(
+        &self,
+        _computation: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        Err(stub_err())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_errors_with_the_stub_message() {
+        assert!(PjRtClient::cpu().unwrap_err().to_string().contains("stub"));
+        assert!(HloModuleProto::from_text_file("x").is_err());
+        assert!(Literal::vec1(&[1.0f32]).to_vec::<f32>().is_err());
+    }
+}

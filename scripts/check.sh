@@ -1,13 +1,19 @@
 #!/usr/bin/env bash
-# CI gate: formatting, lints, build, tests — exits nonzero on the
-# first failure (set -e). Run from the repo root (or anywhere — the
-# script cd's to the rust crate). .github/workflows/ci.yml runs this
-# on every push/PR.
+# CI gate: formatting, lints, build, tests, feature-surface and doc
+# checks — exits nonzero on the first failure (set -e). Run from the
+# repo root (or anywhere — the script cd's to the rust crate).
+# .github/workflows/ci.yml runs this on every push/PR.
 #
 #   scripts/check.sh            # default (offline, stub runtime)
-#   scripts/check.sh --xla      # also check the real-PJRT feature
-#                               # (requires the xla crate; see
-#                               # rust/Cargo.toml)
+#   scripts/check.sh --xla      # run the full suite under the
+#                               # real-PJRT feature (requires the real
+#                               # xla crate; see rust/Cargo.toml)
+#
+# The default run still *compile-gates* the xla-backend feature
+# against the offline API stub in rust/xla-stub — API-surface
+# regressions behind the feature fail fast without registry access —
+# and builds the docs (`cargo doc --no-deps` with warnings denied) so
+# broken intra-doc links fail the gate too.
 
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
@@ -28,5 +34,11 @@ cargo build --release "${FEATURES[@]}"
 
 echo "== cargo test -q"
 cargo test -q "${FEATURES[@]}"
+
+echo "== cargo check --features xla-backend (API-surface gate)"
+cargo check --features xla-backend
+
+echo "== cargo doc --no-deps"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 echo "ok"
