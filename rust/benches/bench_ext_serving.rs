@@ -269,6 +269,7 @@ fn main() -> stadi::Result<()> {
             service_s: s_small,
             priority: Priority::High.rank(),
             deadline_s: Some(4.0 * s_small),
+            resolution: Some((model.latent_h * 4, model.latent_w * 8)),
         },
         WorkloadClass {
             name: "batch".into(),
@@ -276,6 +277,7 @@ fn main() -> stadi::Result<()> {
             service_s: s_large,
             priority: Priority::Low.rank(),
             deadline_s: None,
+            resolution: Some((model.latent_h * 8, model.latent_w * 8)),
         },
     ];
     let servers = 2usize;
@@ -352,13 +354,94 @@ fn main() -> stadi::Result<()> {
         "priority router must win high-priority p95 at 2x load"
     );
 
-    // --- Real TCP sweep: 1/2/4 in-flight requests end to end --------
-    println!("\n# real server: throughput vs in-flight requests");
+    // --- Mixed-resolution sweep: planner-priced sizes (DES) ---------
+    println!("\n# mixed-resolution workload: per-size planner pricing");
     let mut cfg =
         EngineConfig::two_gpu_default(expt::artifacts_dir(), &[0.0, 0.5]);
     cfg.stadi.m_base = 8;
     cfg.stadi.m_warmup = 2;
     let core = EngineCore::new(cfg)?;
+    // Three request sizes priced by the engine's own predictor (the
+    // same tokens-ratio scaling the gang policies see): a half-height
+    // interactive size, the native size, and a 1.5x "high-res" size.
+    let native_px = (model.latent_h * 8, model.latent_w * 8);
+    let size_specs = [
+        ("interactive", native_px.0 / 2, native_px.1, 2u8, true),
+        ("native", native_px.0, native_px.1, 1u8, false),
+        ("hires", native_px.0 * 3 / 2, native_px.1, 0u8, false),
+    ];
+    let mut res_classes = Vec::new();
+    let mut priced = Vec::new();
+    for &(name, hpx, wpx, prio, with_deadline) in &size_specs {
+        let spec = stadi::spec::GenerationSpec::new().size(hpx, wpx);
+        let s = core.predict_latency_for(&spec, &[0, 1])?;
+        println!("#   {name} ({hpx}x{wpx}px): predicted {s:.3}s");
+        priced.push(s);
+        res_classes.push(WorkloadClass {
+            name: name.into(),
+            weight: 1.0 / size_specs.len() as f64,
+            service_s: s,
+            priority: prio,
+            deadline_s: if with_deadline { Some(4.0 * s) } else { None },
+            resolution: Some((hpx, wpx)),
+        });
+    }
+    // The predictor must price sizes monotonically: more rows (and
+    // more tokens per row) never gets cheaper.
+    assert!(
+        priced[0] < priced[1] && priced[1] < priced[2],
+        "resolution pricing not monotone: {priced:?}"
+    );
+    let mean_res_service = priced.iter().sum::<f64>() / priced.len() as f64;
+    let mut mr_sweep = Vec::new();
+    for load_x in [0.5f64, 1.0, 2.0] {
+        let rate = load_x * servers as f64 / mean_res_service;
+        let mut entry = Object::new();
+        entry.insert("load_x", Value::Num(load_x));
+        entry.insert("rate_rps", Value::Num(rate));
+        let mut at_load = Vec::new();
+        for d in [Discipline::Fifo, Discipline::PriorityEdf] {
+            let s = simulate_mixed_workload(
+                rate, 400, &res_classes, d, servers, 31,
+            );
+            at_load.push(s.clone());
+            let key = match d {
+                Discipline::Fifo => "fifo",
+                Discipline::PriorityEdf => "priority",
+            };
+            entry.insert(key, s.to_json());
+        }
+        // At overload the priority/EDF router must not lose deadlines
+        // to FIFO on the mixed-resolution mix either.
+        if load_x >= 2.0 {
+            assert!(
+                at_load[1].deadlines_met >= at_load[0].deadlines_met,
+                "priority router lost deadlines on the resolution mix"
+            );
+            assert!(
+                at_load[1].class("interactive").p95_sojourn_s
+                    <= at_load[0].class("interactive").p95_sojourn_s,
+                "priority router lost interactive p95 on the \
+                 resolution mix"
+            );
+        }
+        mr_sweep.push(Value::Obj(entry));
+    }
+    let mut mr_bench = Object::new();
+    mr_bench.insert("bench", Value::Str("serving_mixed_resolution".into()));
+    mr_bench.insert("servers", Value::Num(servers as f64));
+    mr_bench.insert(
+        "mean_service_s",
+        Value::Num(mean_res_service),
+    );
+    mr_bench.insert("sweep", Value::Arr(mr_sweep));
+    expt::save_results(
+        "BENCH_multires.json",
+        &json::to_string_pretty(&Value::Obj(mr_bench)),
+    )?;
+
+    // --- Real TCP sweep: 1/2/4 in-flight requests end to end --------
+    println!("\n# real server: throughput vs in-flight requests");
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?.to_string();
     let stop = Arc::new(AtomicBool::new(false));

@@ -26,6 +26,7 @@ use crate::device::{build_cluster, CostModel, SimGpu};
 use crate::error::{Error, Result};
 use crate::fleet::{FleetManager, GpuLease};
 use crate::model::schedule::Schedule;
+use crate::runtime::artifacts::ResKey;
 use crate::runtime::tensor::Tensor;
 use crate::runtime::{ExecHandle, ExecService};
 use crate::sched::plan::{Plan, PlanCache, PlanCacheStats, PlanKey};
@@ -128,6 +129,12 @@ impl EngineCore {
         &self.exec
     }
 
+    /// Registered execution resolutions (latent rows x cols), native
+    /// first — what `session_for` will accept.
+    pub fn resolutions(&self) -> Vec<ResKey> {
+        self.exec.registry().registered()
+    }
+
     /// Snapshot of the simulated cluster.
     pub fn cluster(&self) -> Vec<SimGpu> {
         self.cluster.read().unwrap().clone()
@@ -200,7 +207,30 @@ impl EngineCore {
                 m.row_granularity * VAE_FACTOR,
             )));
         }
+        // Width must tile into patch columns too — otherwise the
+        // token count truncates and the predictor would silently
+        // price a canvas the model cannot tile at all.
+        let cols = spec.latent_cols(m.latent_w);
+        if cols == 0 || cols % m.patch != 0 {
+            return Err(Error::Spec(format!(
+                "width {}px maps to {cols} latent columns — needs a \
+                 positive multiple of {} columns ({}px)",
+                spec.width_px.unwrap_or(m.latent_w * VAE_FACTOR),
+                m.patch,
+                m.patch * VAE_FACTOR,
+            )));
+        }
         Ok((params, rows))
+    }
+
+    /// The latent resolution a spec renders at (native dims for unset
+    /// fields).
+    fn spec_res(&self, spec: &GenerationSpec) -> ResKey {
+        let m = &self.exec.manifest().model;
+        ResKey {
+            h: spec.latent_rows(m.latent_h),
+            w: spec.latent_cols(m.latent_w),
+        }
     }
 
     /// Plan a spec over one [`PlanSnapshot`] — the subset-agnostic
@@ -215,8 +245,19 @@ impl EngineCore {
         snap: &PlanSnapshot,
     ) -> Result<Plan> {
         let (params, rows) = self.spec_params(spec)?;
-        let granularity = self.exec.manifest().model.row_granularity;
-        let key = PlanKey::new(&params, rows, &snap.devices, &snap.speeds);
+        let m = &self.exec.manifest().model;
+        let granularity = m.row_granularity;
+        // Native specs keep the pre-multi-resolution key (res: None),
+        // so the cache stays warm across the upgrade; other sizes get
+        // their own keyspace (two widths can share a row count).
+        let res = self.spec_res(spec);
+        let res_key = if res == ResKey::of_model(m) {
+            None
+        } else {
+            Some((res.h, res.w))
+        };
+        let key = PlanKey::new(&params, rows, &snap.devices, &snap.speeds)
+            .with_res(res_key);
         self.plans.get_or_build_at(snap.epoch, key, || {
             if params.cost_aware && params.spatial {
                 return Plan::build_cost_aware(
@@ -256,21 +297,36 @@ impl EngineCore {
         ))
     }
 
-    /// Execution (unlike planning/prediction) is bound to the
-    /// resolution the artifacts were AOT-compiled for.
-    fn check_executable(&self, spec: &GenerationSpec) -> Result<()> {
-        let m = &self.exec.manifest().model;
-        if !spec.is_native_size(m.latent_h, m.latent_w) {
-            return Err(Error::Spec(format!(
-                "resolution {}x{} is not executable: artifacts are \
-                 AOT'd for the native {}x{} only (non-native sizes are \
-                 plan/predict-only)",
-                spec.height_px.unwrap_or(m.latent_h * VAE_FACTOR),
-                spec.width_px.unwrap_or(m.latent_w * VAE_FACTOR),
-                m.latent_h * VAE_FACTOR,
-                m.latent_w * VAE_FACTOR,
-            )));
+    /// Execution (unlike planning/prediction) is bound to resolutions
+    /// with compiled artifacts: any registered size executes, anything
+    /// else is a typed spec rejection (wire code `bad_spec`).
+    fn check_executable(&self, spec: &GenerationSpec) -> Result<ResKey> {
+        let res = self.spec_res(spec);
+        let registry = self.exec.registry();
+        if registry.is_registered(res) {
+            return Ok(res);
         }
+        let registered: Vec<String> = registry
+            .registered()
+            .iter()
+            .map(|r| format!("{}x{}", r.h * VAE_FACTOR, r.w * VAE_FACTOR))
+            .collect();
+        Err(Error::Spec(format!(
+            "resolution {}x{} is not executable: no compiled artifacts \
+             for it (registered: {}; other sizes are plan/predict-only)",
+            res.h * VAE_FACTOR,
+            res.w * VAE_FACTOR,
+            registered.join(", "),
+        )))
+    }
+
+    /// Full admission-time validation of a spec: field ranges, model
+    /// alignment, and executability. The serve stack calls this when a
+    /// request is parsed, so an inexecutable request is shed with
+    /// `bad_spec` *before* it queues or acquires a fleet lease.
+    pub fn check_spec(&self, spec: &GenerationSpec) -> Result<()> {
+        self.spec_params(spec)?;
+        self.check_executable(spec)?;
         Ok(())
     }
 
@@ -322,21 +378,31 @@ impl EngineCore {
 
     /// Open an execution session on a freshly-built request-shaped
     /// plan. The plan and the session's cluster derive from one
-    /// snapshot. Rejects specs the artifacts cannot execute
-    /// (non-native resolutions) with a typed [`Error::Spec`].
+    /// snapshot. Any *registered* resolution executes (the registry
+    /// lazily loads its artifact set); specs without compiled
+    /// artifacts are rejected with a typed [`Error::Spec`].
     pub fn session_for(&self, spec: &GenerationSpec) -> Result<Session> {
-        self.check_executable(spec)?;
+        let res = self.check_executable(spec)?;
+        let model = self.exec.registry().get(res)?.model.clone();
         let snap = self.whole_cluster_parts();
         let plan = self.plan_snapshot(spec, &snap)?;
-        Ok(Session::new(self.owned(), plan, snap.cluster))
+        Ok(Session::new(self.owned(), plan, snap.cluster, res, model))
     }
 
     /// Open an execution session on an explicit plan — the escape
     /// hatch for callers that build plans themselves (sweeping explicit
     /// plans, replaying a saved plan). The serving path does not use
     /// it: every request plans freshly via [`Self::session_for`].
+    /// Explicit plans execute at the native resolution.
     pub fn session_with_plan(&self, plan: Plan) -> Session {
-        Session::new(self.owned(), plan, self.cluster())
+        let native = self.exec.registry().native();
+        Session::new(
+            self.owned(),
+            plan,
+            self.cluster(),
+            native.key,
+            native.model.clone(),
+        )
     }
 
     /// Open a default-spec session restricted to a leased subset.
@@ -354,7 +420,8 @@ impl EngineCore {
         spec: &GenerationSpec,
         lease: &GpuLease,
     ) -> Result<Session> {
-        self.check_executable(spec)?;
+        let res = self.check_executable(spec)?;
+        let model = self.exec.registry().get(res)?.model.clone();
         let snap = self.subset_parts(lease.devices())?;
         let plan = self.plan_snapshot(spec, &snap)?;
         Ok(Session::with_map(
@@ -362,6 +429,8 @@ impl EngineCore {
             plan,
             snap.cluster,
             lease.devices().to_vec(),
+            res,
+            model,
         ))
     }
 
@@ -380,9 +449,11 @@ impl EngineCore {
     /// replay it on the simulated timeline. This is the gang-policy
     /// predictor — the same model the latency figures use, so
     /// admission decisions and reported numbers can't drift apart, and
-    /// it prices the request's own steps and rows (a draft-quality
-    /// 128px request costs a fraction of a native one), which is what
-    /// lets policies size gangs per request.
+    /// it prices the request's own steps, rows and width (a
+    /// draft-quality 128px request costs a fraction of a native one),
+    /// which is what lets policies size gangs per request. Works for
+    /// any granularity-aligned size, registered or not — prediction
+    /// is how capacity planning asks "what if we compiled this size?".
     pub fn predict_latency_for(
         &self,
         spec: &GenerationSpec,
@@ -390,11 +461,31 @@ impl EngineCore {
     ) -> Result<f64> {
         let snap = self.subset_parts(devices)?;
         let plan = self.plan_snapshot(spec, &snap)?;
+        // Rows flow through the plan; width scales each step's
+        // row-proportional cost by the tokens-per-row ratio and
+        // reshapes the sync-exchange byte counts via the re-based
+        // model. Native specs hit the exact pre-upgrade path (ratio 1,
+        // same floats).
+        let native = &self.exec.manifest().model;
+        let res = self.spec_res(spec);
+        if res.w == native.latent_w {
+            let tl = timeline::simulate(
+                &plan,
+                &snap.cluster,
+                &self.config.comm,
+                native,
+            )?;
+            return Ok(tl.total_s);
+        }
+        let model = native.with_resolution(res.h, res.w);
+        let ratio = res.w as f64 / native.latent_w as f64;
+        let cluster =
+            crate::device::scale_cluster_per_row(&snap.cluster, ratio);
         let tl = timeline::simulate(
             &plan,
-            &snap.cluster,
+            &cluster,
             &self.config.comm,
-            &self.exec.manifest().model,
+            &model,
         )?;
         Ok(tl.total_s)
     }

@@ -18,6 +18,7 @@ use std::time::Instant;
 use crate::error::{Error, Result};
 use crate::model::latents::token_range;
 use crate::model::sampler;
+use crate::runtime::artifacts::{ModelInfo, ResKey};
 use crate::runtime::tensor::Tensor;
 use crate::runtime::ExecHandle;
 use crate::sched::plan::Plan;
@@ -47,7 +48,8 @@ pub struct RequestOutput {
     pub stats: ExecStats,
 }
 
-/// Run one request through the plan's dataflow.
+/// Run one request through the plan's dataflow at the native
+/// resolution (the legacy entry point).
 ///
 /// `noise` is the shared initial latent x_{t0}; `cond` the conditioning
 /// vector.
@@ -57,7 +59,22 @@ pub fn execute(
     noise: &Tensor,
     cond: &[f32],
 ) -> Result<RequestOutput> {
-    let model = exec.manifest().model.clone();
+    let native = exec.registry().native();
+    execute_at(exec, native.key, &native.model, plan, noise, cond)
+}
+
+/// Run one request through the plan's dataflow against a registered
+/// resolution's artifacts. `model` is that resolution's geometry (the
+/// session resolves it once from the registry).
+pub fn execute_at(
+    exec: &ExecHandle,
+    res: ResKey,
+    model: &ModelInfo,
+    plan: &Plan,
+    noise: &Tensor,
+    cond: &[f32],
+) -> Result<RequestOutput> {
+    let model = model.clone();
     let n_dev = plan.devices.len();
 
     let included: Vec<usize> = plan
@@ -104,7 +121,8 @@ pub fn execute(
                 })?;
                 let x_patch = bufs[di].x.slice_rows(dp.rows.row0, dp.rows.rows);
                 let t_start = Instant::now();
-                let out = exec.denoise(
+                let out = exec.denoise_at(
+                    res,
                     dp.rows.rows,
                     &x_patch,
                     &bufs[di].kv,

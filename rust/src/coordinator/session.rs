@@ -21,10 +21,12 @@ use crate::coordinator::{dataflow, threaded, timeline};
 use crate::device::SimGpu;
 use crate::error::Result;
 use crate::model::latents::{seeded_cond, seeded_noise};
+use crate::runtime::artifacts::{ModelInfo, ResKey};
 use crate::sched::plan::Plan;
 use crate::spec::GenerationSpec;
 
-/// A lightweight execution session: plan snapshot + cluster snapshot.
+/// A lightweight execution session: plan snapshot + cluster snapshot,
+/// bound to the resolution whose artifacts it executes.
 pub struct Session {
     core: Arc<EngineCore>,
     plan: Plan,
@@ -33,6 +35,11 @@ pub struct Session {
     /// feedback. Identity for whole-cluster sessions; the leased
     /// subset for gang sessions opened via `EngineCore::session_on`.
     device_map: Vec<usize>,
+    /// Which registered resolution this session executes against.
+    res: ResKey,
+    /// The model geometry re-based onto that resolution (native
+    /// sessions carry the base model unchanged).
+    model: ModelInfo,
 }
 
 impl Session {
@@ -40,9 +47,11 @@ impl Session {
         core: Arc<EngineCore>,
         plan: Plan,
         cluster: Vec<SimGpu>,
+        res: ResKey,
+        model: ModelInfo,
     ) -> Self {
         let device_map = (0..cluster.len()).collect();
-        Session { core, plan, cluster, device_map }
+        Session { core, plan, cluster, device_map, res, model }
     }
 
     /// A session over a device subset: `plan`/`cluster` are indexed
@@ -52,9 +61,11 @@ impl Session {
         plan: Plan,
         cluster: Vec<SimGpu>,
         device_map: Vec<usize>,
+        res: ResKey,
+        model: ModelInfo,
     ) -> Self {
         debug_assert_eq!(cluster.len(), device_map.len());
-        Session { core, plan, cluster, device_map }
+        Session { core, plan, cluster, device_map, res, model }
     }
 
     /// The plan this session executes (pinned at session creation).
@@ -65,6 +76,11 @@ impl Session {
     /// Global device ids this session runs on, in local index order.
     pub fn devices(&self) -> &[usize] {
         &self.device_map
+    }
+
+    /// The resolution this session executes (latent rows x cols).
+    pub fn resolution(&self) -> ResKey {
+        self.res
     }
 
     /// Execute one request through the pinned plan: Algorithm 1 via
@@ -82,25 +98,27 @@ impl Session {
     /// Execute from a bare seed.
     pub fn execute_seeded(&self, seed: u64) -> Result<Generation> {
         let exec = self.core.exec();
-        let model = exec.manifest().model.clone();
+        let model = self.model.clone();
         // Pre-compile every artifact the plan needs so compilation
         // never lands inside measured step times (it would poison the
         // profiler's effective-speed estimates — a freshly-compiling
         // device would look 100x slower and get itself excluded).
-        let keys: Vec<String> = self
+        let heights: Vec<usize> = self
             .plan
             .included_devices()
-            .map(|d| format!("denoiser_h{}", d.rows.rows))
+            .map(|d| d.rows.rows)
             .collect();
-        exec.warm(&keys)?;
+        exec.warm_res(self.res, &heights)?;
         let noise = seeded_noise(&model, seed);
         let cond = seeded_cond(&model, seed);
         let out = match self.core.mode() {
-            ExecMode::Dataflow => {
-                dataflow::execute(exec, &self.plan, &noise, &cond)?
-            }
-            ExecMode::Threaded => threaded::execute(
+            ExecMode::Dataflow => dataflow::execute_at(
+                exec, self.res, &model, &self.plan, &noise, &cond,
+            )?,
+            ExecMode::Threaded => threaded::execute_at(
                 exec,
+                self.res,
+                &model,
                 &self.plan,
                 &self.cluster,
                 &noise,
@@ -114,18 +132,41 @@ impl Session {
         // indices are session-local; the device map names the global
         // device (identity for whole-cluster sessions, the leased
         // subset for gang sessions).
+        //
+        // Rows are normalized to *native-width equivalents* first: the
+        // profiler's seconds-per-row estimate is native-calibrated,
+        // and a wider canvas does proportionally more work per row
+        // (tokens ratio) — without this, mixed-width traffic would
+        // make every device that serves it look slower to the shared
+        // planner.
+        let width_ratio = self.model.latent_w as f64
+            / exec.manifest().model.latent_w as f64;
         for d in self.plan.included_devices() {
             if out.stats.steps_run[d.device] > 0 {
+                let rows_run =
+                    d.rows.rows * out.stats.steps_run[d.device];
+                let rows_eq = ((rows_run as f64 * width_ratio).round()
+                    as usize)
+                    .max(1);
                 self.core.record_step(
                     self.device_map[d.device],
-                    d.rows.rows * out.stats.steps_run[d.device],
+                    rows_eq,
                     out.stats.compute_s[d.device],
                 );
             }
         }
+        // The reported timeline prices width exactly like the
+        // admission-time predictor (same helper, same ratio), so
+        // predicted and reported latency cannot drift apart for
+        // non-native-width sessions. Native sessions scale by 1.0 —
+        // float-identical to the pre-multi-resolution path.
+        let tl_cluster = crate::device::scale_cluster_per_row(
+            &self.cluster,
+            width_ratio,
+        );
         let tl = timeline::simulate(
             &self.plan,
-            &self.cluster,
+            &tl_cluster,
             &self.core.config().comm,
             &model,
         )?;

@@ -19,6 +19,7 @@ use crate::device::SimGpu;
 use crate::error::{Error, Result};
 use crate::model::latents::token_range;
 use crate::model::sampler;
+use crate::runtime::artifacts::{ModelInfo, ResKey};
 use crate::runtime::tensor::Tensor;
 use crate::runtime::ExecHandle;
 use crate::sched::plan::Plan;
@@ -26,7 +27,8 @@ use crate::sched::plan::Plan;
 use super::buffers::DeviceBuffers;
 use super::dataflow::{ExecStats, RequestOutput};
 
-/// Run one request with real worker threads.
+/// Run one request with real worker threads at the native resolution
+/// (the legacy entry point).
 pub fn execute(
     exec: &ExecHandle,
     plan: &Plan,
@@ -35,7 +37,33 @@ pub fn execute(
     cond: &[f32],
     stretch: bool,
 ) -> Result<RequestOutput> {
-    let model = exec.manifest().model.clone();
+    let native = exec.registry().native();
+    execute_at(
+        exec,
+        native.key,
+        &native.model,
+        plan,
+        cluster,
+        noise,
+        cond,
+        stretch,
+    )
+}
+
+/// Run one request with real worker threads against a registered
+/// resolution's artifacts.
+#[allow(clippy::too_many_arguments)]
+pub fn execute_at(
+    exec: &ExecHandle,
+    res: ResKey,
+    model: &ModelInfo,
+    plan: &Plan,
+    cluster: &[SimGpu],
+    noise: &Tensor,
+    cond: &[f32],
+    stretch: bool,
+) -> Result<RequestOutput> {
+    let model = model.clone();
     let included: Vec<usize> = plan
         .devices
         .iter()
@@ -68,7 +96,8 @@ pub fn execute(
                 let x_patch =
                     bufs.x.slice_rows(plan_dev.rows.row0, plan_dev.rows.rows);
                 let t_start = Instant::now();
-                let out = exec.denoise(
+                let out = exec.denoise_at(
+                    res,
                     plan_dev.rows.rows,
                     &x_patch,
                     &bufs.kv,

@@ -51,9 +51,26 @@ impl CostModel {
     /// Calibrate by timing the real denoiser artifacts at every AOT'd
     /// patch height. `reps` timed repetitions per height.
     pub fn calibrate(rt: &Runtime, reps: usize) -> Result<Self> {
-        let m = rt.manifest().model.clone();
-        let params = rt.manifest().load_params()?;
-        let heights = rt.manifest().patch_heights.clone();
+        Self::calibrate_with(rt.manifest(), reps, |h, inp| {
+            rt.denoise(h, inp)
+        })
+    }
+
+    /// Backend-agnostic calibration: time `denoise` at every native
+    /// patch height and fit the affine model. The PJRT and stub
+    /// backends both route here, so every execution path shares one
+    /// calibration contract.
+    pub fn calibrate_with(
+        manifest: &crate::runtime::artifacts::Manifest,
+        reps: usize,
+        mut denoise: impl FnMut(
+            usize,
+            &DenoiserInputs<'_>,
+        ) -> Result<crate::runtime::DenoiserOutputs>,
+    ) -> Result<Self> {
+        let m = manifest.model.clone();
+        let params = manifest.load_params()?;
+        let heights = manifest.patch_heights.clone();
         let kv = crate::runtime::Tensor::zeros(&m.kv_shape());
         let cond = vec![0.1f32; m.dim];
         let mut samples = Vec::new();
@@ -68,11 +85,11 @@ impl CostModel {
                 cond: &cond,
             };
             // Warm the executable then measure.
-            rt.denoise(h, &inp)?;
+            denoise(h, &inp)?;
             let mut times = Vec::with_capacity(reps);
             for _ in 0..reps {
                 let t0 = Instant::now();
-                rt.denoise(h, &inp)?;
+                denoise(h, &inp)?;
                 times.push(t0.elapsed().as_secs_f64());
             }
             samples.push((h, stats::median(&times)));
@@ -135,6 +152,23 @@ pub fn build_cluster(devices: &[DeviceConfig], cost: CostModel) -> Vec<SimGpu> {
         .iter()
         .enumerate()
         .map(|(i, d)| SimGpu::new(i, d.clone(), cost))
+        .collect()
+}
+
+/// Clone a cluster with each device's row-proportional step cost
+/// scaled by `ratio` — the tokens-per-row ratio of a non-native
+/// canvas width relative to the width the cost model was calibrated
+/// on. Both the latency predictor and session timelines use this one
+/// helper, so admission decisions and reported numbers cannot drift
+/// apart. Ratio 1.0 is a float-identical identity.
+pub fn scale_cluster_per_row(cluster: &[SimGpu], ratio: f64) -> Vec<SimGpu> {
+    cluster
+        .iter()
+        .map(|g| {
+            let mut g = g.clone();
+            g.cost.per_row_s *= ratio;
+            g
+        })
         .collect()
 }
 

@@ -130,6 +130,12 @@ impl FleetManager {
         self.inner.ledger().waiters
     }
 
+    /// Total leases ever granted (monotone). Tests use it to assert a
+    /// rejected request never touched the fleet.
+    pub fn granted_total(&self) -> u64 {
+        self.inner.ledger().granted
+    }
+
     /// Validate a requested gang: non-empty, in range, no duplicates.
     fn validate(&self, devices: &[usize]) -> Result<()> {
         if devices.is_empty() {

@@ -1,11 +1,14 @@
 //! `stadi` CLI: leader entrypoint.
 //!
 //! Subcommands:
-//!   generate  — run one request, print plan + latency + image summary
-//!   plan      — print the (M_i, P_i) plan for a cluster state
-//!   profile   — calibrate the per-step cost model, optionally save
-//!   serve     — TCP JSON-lines serving front-end
-//!   compare   — STADI vs patch/tensor parallelism on one setting
+//!   generate       — run one request, print plan + latency + summary
+//!   plan           — print the (M_i, P_i) plan for a cluster state
+//!   profile        — calibrate the per-step cost model, optionally save
+//!   serve          — TCP JSON-lines serving front-end
+//!   compare        — STADI vs patch/tensor parallelism on one setting
+//!   stub-artifacts — write a synthetic multi-resolution artifact set
+//!                    that executes offline on the deterministic stub
+//!                    backend (no PJRT, no python)
 
 use std::net::TcpListener;
 use std::process::ExitCode;
@@ -28,11 +31,12 @@ fn main() -> ExitCode {
         "profile" => cmd_profile(rest),
         "serve" => cmd_serve(rest),
         "compare" => cmd_compare(rest),
+        "stub-artifacts" => cmd_stub_artifacts(rest),
         _ => {
             println!(
                 "stadi — Spatio-Temporal Adaptive Diffusion Inference\n\n\
-                 usage: stadi <generate|plan|profile|serve|compare> \
-                 [flags]\n\
+                 usage: stadi <generate|plan|profile|serve|compare|\
+                 stub-artifacts> [flags]\n\
                  run `stadi <subcommand> --help` for flags"
             );
             Ok(())
@@ -206,6 +210,53 @@ fn cmd_serve(args: impl Iterator<Item = String>) -> Result<()> {
             )?;
         }
     }
+    Ok(())
+}
+
+fn cmd_stub_artifacts(args: impl Iterator<Item = String>) -> Result<()> {
+    let cmd = Command::new(
+        "stub-artifacts",
+        "write a synthetic multi-resolution artifact set (offline \
+         deterministic backend; every other subcommand then works \
+         with --artifacts pointed here)",
+    )
+    .flag("out", "output directory", Some("artifacts-stub"))
+    .flag(
+        "resolutions",
+        "extra latent resolutions as HxW pairs, comma-separated \
+         (empty = native only)",
+        Some("16x32,48x32"),
+    );
+    let p = cmd.parse(args)?;
+    let mut extra = Vec::new();
+    let spec = p.get("resolutions").unwrap_or("");
+    for part in spec.split(',').filter(|s| !s.trim().is_empty()) {
+        let (h, w) = part
+            .trim()
+            .split_once('x')
+            .ok_or_else(|| {
+                stadi::error::Error::Config(format!(
+                    "bad resolution {part:?} (expected HxW, e.g. 16x32)"
+                ))
+            })?;
+        let parse = |s: &str| {
+            s.parse::<usize>().map_err(|_| {
+                stadi::error::Error::Config(format!(
+                    "bad resolution {part:?} (expected HxW, e.g. 16x32)"
+                ))
+            })
+        };
+        extra.push((parse(h)?, parse(w)?));
+    }
+    let out = p.get("out").unwrap();
+    stadi::runtime::stubgen::write_stub_artifacts(out, &extra)?;
+    println!(
+        "wrote stub artifacts to {out} ({} extra resolution{}): try\n  \
+         stadi generate --artifacts {out} --steps 8 --warmup 2\n  \
+         stadi serve --artifacts {out} --steps 8 --warmup 2",
+        extra.len(),
+        if extra.len() == 1 { "" } else { "s" },
+    );
     Ok(())
 }
 

@@ -1,9 +1,18 @@
 //! Artifact manifest: the ABI between `python/compile/aot.py` and this
 //! runtime. Parses `artifacts/manifest.json`, validates file presence
 //! and sizes, and loads `params.bin`.
+//!
+//! Multi-resolution artifacts: a manifest may carry a `resolutions`
+//! table of additional AOT'd latent sizes. [`ArtifactRegistry`] wraps
+//! the base [`Manifest`] (the *native* resolution, parsed exactly as
+//! before — legacy single-resolution manifests load as a one-entry
+//! registry) and lazily validates/loads the extra resolutions behind
+//! an `RwLock`, holding at most a bounded number resident (LRU) so a
+//! long-running server doesn't keep every compiled size in memory.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, RwLock};
 
 use crate::error::{Error, Result};
 use crate::util::json::{self, Value};
@@ -30,6 +39,19 @@ impl ModelInfo {
     pub fn tokens_for_rows(&self, rows: usize) -> usize {
         assert_eq!(rows % self.patch, 0);
         (rows / self.patch) * (self.latent_w / self.patch)
+    }
+
+    /// This model re-based onto another latent resolution: everything
+    /// but the latent geometry (and the token count it implies) is
+    /// shared — the weights, layer stack and patch size are the same
+    /// network compiled for a different canvas.
+    pub fn with_resolution(&self, latent_h: usize, latent_w: usize) -> ModelInfo {
+        ModelInfo {
+            latent_h,
+            latent_w,
+            tokens_full: (latent_h / self.patch) * (latent_w / self.patch),
+            ..self.clone()
+        }
     }
 
     /// Shape of one latent image.
@@ -78,6 +100,12 @@ pub struct Manifest {
     pub artifacts: BTreeMap<String, ArtifactInfo>,
     /// Patch heights with a denoiser artifact, ascending.
     pub patch_heights: Vec<usize>,
+    /// True for synthetic artifact sets written by
+    /// [`crate::runtime::stubgen`]: their "HLO" files are
+    /// placeholders executed by the deterministic stub backend, never
+    /// by PJRT. Absent (false) in every real manifest, so legacy
+    /// manifests parse unchanged.
+    pub stub: bool,
 }
 
 fn parse_slots(v: &Value) -> Result<Vec<Slot>> {
@@ -166,8 +194,12 @@ impl Manifest {
         if patch_heights.is_empty() {
             return Err(Error::Artifact("no denoiser artifacts".into()));
         }
+        let stub = match v.get_opt("stub") {
+            Some(x) => x.as_bool()?,
+            None => false,
+        };
 
-        Ok(Manifest { dir, model, schedule, artifacts, patch_heights })
+        Ok(Manifest { dir, model, schedule, artifacts, patch_heights, stub })
     }
 
     pub fn artifact(&self, key: &str) -> Result<&ArtifactInfo> {
@@ -201,6 +233,388 @@ impl Manifest {
     pub fn golden(&self, name: &str) -> Result<Value> {
         json::from_file(&self.dir.join("golden").join(name))
     }
+}
+
+// --- Resolution-keyed artifact registry ------------------------------
+
+/// Key of one compiled resolution, in latent units (rows x cols).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ResKey {
+    pub h: usize,
+    pub w: usize,
+}
+
+impl ResKey {
+    pub fn of_model(m: &ModelInfo) -> ResKey {
+        ResKey { h: m.latent_h, w: m.latent_w }
+    }
+}
+
+impl std::fmt::Display for ResKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}", self.h, self.w)
+    }
+}
+
+/// One resolution's artifact set, ready to execute: the model geometry
+/// re-based onto that latent size plus the denoiser artifacts compiled
+/// for it.
+#[derive(Debug, Clone)]
+pub struct ResolutionArtifacts {
+    pub key: ResKey,
+    pub model: ModelInfo,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    /// Patch heights with a denoiser artifact, ascending.
+    pub patch_heights: Vec<usize>,
+    /// patch height -> artifact key.
+    denoisers: BTreeMap<usize, String>,
+}
+
+impl ResolutionArtifacts {
+    pub fn denoiser(&self, h: usize) -> Result<&ArtifactInfo> {
+        let key = self.denoiser_key(h)?;
+        self.artifacts
+            .get(key)
+            .ok_or_else(|| Error::Artifact(format!("no artifact {key:?}")))
+    }
+
+    pub fn denoiser_key(&self, h: usize) -> Result<&str> {
+        self.denoisers.get(&h).map(String::as_str).ok_or_else(|| {
+            Error::Artifact(format!(
+                "resolution {}: no denoiser artifact for patch height \
+                 {h} (have {:?})",
+                self.key, self.patch_heights
+            ))
+        })
+    }
+}
+
+/// A not-yet-validated resolution entry from the manifest's
+/// `resolutions` table: file presence/sizes are checked lazily on
+/// first [`ArtifactRegistry::get`], not at registry load.
+#[derive(Debug, Clone)]
+struct PendingResolution {
+    key: ResKey,
+    artifacts: Vec<PendingArtifact>,
+}
+
+#[derive(Debug, Clone)]
+struct PendingArtifact {
+    key: String,
+    file: PathBuf,
+    bytes: usize,
+    inputs: Vec<Slot>,
+    outputs: Vec<Slot>,
+    patch_h: Option<usize>,
+}
+
+/// Cumulative load/evict counters of a registry (tests and ops
+/// dashboards; `resident` excludes the always-resident native set).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RegistryStats {
+    pub resident: usize,
+    pub loads: u64,
+    pub evictions: u64,
+}
+
+struct RegistryState {
+    loaded: HashMap<ResKey, Arc<ResolutionArtifacts>>,
+    /// Least-recently-used order, front = next eviction victim.
+    lru: VecDeque<ResKey>,
+    loads: u64,
+    evictions: u64,
+}
+
+/// Default bound on resident non-native resolutions: traffic mixes
+/// rarely exceed a handful of live sizes.
+pub const DEFAULT_RESOLUTION_CAPACITY: usize = 4;
+
+/// Resolution-keyed artifact registry.
+///
+/// The *native* resolution is the base [`Manifest`] (always resident,
+/// never evicted — it is the legacy single-resolution path, byte-for-
+/// byte). Extra resolutions declared in the manifest's `resolutions`
+/// table validate and load lazily on first use; at most `capacity` of
+/// them stay resident (LRU) so a long-running server over a wide size
+/// mix doesn't accumulate every compiled size.
+pub struct ArtifactRegistry {
+    manifest: Manifest,
+    native: Arc<ResolutionArtifacts>,
+    pending: BTreeMap<ResKey, PendingResolution>,
+    capacity: usize,
+    state: RwLock<RegistryState>,
+}
+
+impl ArtifactRegistry {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        Self::with_capacity(dir, DEFAULT_RESOLUTION_CAPACITY)
+    }
+
+    pub fn with_capacity(
+        dir: impl AsRef<Path>,
+        capacity: usize,
+    ) -> Result<Self> {
+        let manifest = Manifest::load(&dir)?;
+        let native = Arc::new(native_resolution(&manifest));
+        let v = json::from_file(&manifest.dir.join("manifest.json"))?;
+        let mut pending = BTreeMap::new();
+        if let Some(table) = v.get_opt("resolutions") {
+            for (label, r) in table.as_obj()?.iter() {
+                let p = parse_resolution(&manifest, label, r)?;
+                if p.key == native.key {
+                    return Err(Error::Artifact(format!(
+                        "resolution {label} duplicates the native \
+                         resolution {}",
+                        native.key
+                    )));
+                }
+                if pending.insert(p.key, p).is_some() {
+                    return Err(Error::Artifact(format!(
+                        "duplicate resolution entry {label}"
+                    )));
+                }
+            }
+        }
+        Ok(ArtifactRegistry {
+            manifest,
+            native,
+            pending,
+            capacity: capacity.max(1),
+            state: RwLock::new(RegistryState {
+                loaded: HashMap::new(),
+                lru: VecDeque::new(),
+                loads: 0,
+                evictions: 0,
+            }),
+        })
+    }
+
+    /// The base (native-resolution) manifest, parsed exactly as the
+    /// legacy single-resolution loader did.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn native_key(&self) -> ResKey {
+        self.native.key
+    }
+
+    pub fn native(&self) -> Arc<ResolutionArtifacts> {
+        Arc::clone(&self.native)
+    }
+
+    /// True when `key` has compiled artifacts (native or declared in
+    /// the `resolutions` table) — the admission-time question.
+    pub fn is_registered(&self, key: ResKey) -> bool {
+        key == self.native.key || self.pending.contains_key(&key)
+    }
+
+    /// True when `key`'s artifact set is currently resident (native is
+    /// always resident). The PJRT runtime uses this to prune compiled
+    /// executables for evicted resolutions, so the LRU cap bounds the
+    /// heavyweight objects too, not just the metadata.
+    pub fn is_resident(&self, key: ResKey) -> bool {
+        key == self.native.key
+            || self.state.read().unwrap().loaded.contains_key(&key)
+    }
+
+    /// Every registered resolution, native first then ascending.
+    pub fn registered(&self) -> Vec<ResKey> {
+        let mut v = vec![self.native.key];
+        v.extend(self.pending.keys().copied());
+        v
+    }
+
+    pub fn stats(&self) -> RegistryStats {
+        let st = self.state.read().unwrap();
+        RegistryStats {
+            resident: st.loaded.len(),
+            loads: st.loads,
+            evictions: st.evictions,
+        }
+    }
+
+    /// Fetch a resolution's artifact set, validating and loading it on
+    /// first use. The native resolution never takes the lock.
+    pub fn get(&self, key: ResKey) -> Result<Arc<ResolutionArtifacts>> {
+        if key == self.native.key {
+            return Ok(Arc::clone(&self.native));
+        }
+        {
+            let mut st = self.state.write().unwrap();
+            if let Some(ra) = st.loaded.get(&key) {
+                let ra = Arc::clone(ra);
+                touch_lru(&mut st.lru, key);
+                return Ok(ra);
+            }
+        }
+        let pending = self.pending.get(&key).ok_or_else(|| {
+            Error::Artifact(format!(
+                "resolution {key} not registered (registered: {})",
+                self.registered()
+                    .iter()
+                    .map(ToString::to_string)
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))
+        })?;
+        // Validate files outside the lock (IO); two threads racing a
+        // cold resolution just validate twice.
+        let ra = Arc::new(load_resolution(&self.manifest, pending)?);
+        let mut st = self.state.write().unwrap();
+        if !st.loaded.contains_key(&key) {
+            if st.loaded.len() >= self.capacity {
+                if let Some(old) = st.lru.pop_front() {
+                    st.loaded.remove(&old);
+                    st.evictions += 1;
+                }
+            }
+            st.loaded.insert(key, Arc::clone(&ra));
+            st.lru.push_back(key);
+            st.loads += 1;
+            Ok(ra)
+        } else {
+            let ra = Arc::clone(&st.loaded[&key]);
+            touch_lru(&mut st.lru, key);
+            Ok(ra)
+        }
+    }
+}
+
+fn touch_lru(lru: &mut VecDeque<ResKey>, key: ResKey) {
+    if let Some(pos) = lru.iter().position(|&k| k == key) {
+        lru.remove(pos);
+        lru.push_back(key);
+    }
+}
+
+/// The base manifest as a resolution entry (artifact keys
+/// `denoiser_h{h}` — the legacy naming, untouched).
+fn native_resolution(m: &Manifest) -> ResolutionArtifacts {
+    ResolutionArtifacts {
+        key: ResKey::of_model(&m.model),
+        model: m.model.clone(),
+        artifacts: m.artifacts.clone(),
+        patch_heights: m.patch_heights.clone(),
+        denoisers: m
+            .patch_heights
+            .iter()
+            .map(|&h| (h, format!("denoiser_h{h}")))
+            .collect(),
+    }
+}
+
+/// Parse one `resolutions` table entry, validating its geometry
+/// against the base model (`tokens_full` and `kv_shape` are recorded
+/// redundantly in the manifest precisely so a stale AOT run fails
+/// loudly here instead of shipping wrong-shaped buffers).
+fn parse_resolution(
+    m: &Manifest,
+    label: &str,
+    v: &Value,
+) -> Result<PendingResolution> {
+    let h = v.get("latent_h")?.as_usize()?;
+    let w = v.get("latent_w")?.as_usize()?;
+    let model = &m.model;
+    if h == 0
+        || w == 0
+        || h % model.row_granularity != 0
+        || h % model.patch != 0
+        || w % model.patch != 0
+    {
+        return Err(Error::Artifact(format!(
+            "resolution {label}: latent {h}x{w} must be positive, \
+             row-granularity-aligned ({}) and patch-aligned ({})",
+            model.row_granularity, model.patch
+        )));
+    }
+    let tokens_full = v.get("tokens_full")?.as_usize()?;
+    let want_tokens = (h / model.patch) * (w / model.patch);
+    if tokens_full != want_tokens {
+        return Err(Error::Artifact(format!(
+            "resolution {label}: tokens_full {tokens_full} != derived \
+             {want_tokens} (stale resolutions table?)"
+        )));
+    }
+    let kv_shape = v.get("kv_shape")?.usizes()?;
+    let want_kv = vec![model.layers, tokens_full, 2 * model.dim];
+    if kv_shape != want_kv {
+        return Err(Error::Artifact(format!(
+            "resolution {label}: kv_shape {kv_shape:?} != derived \
+             {want_kv:?}"
+        )));
+    }
+    let mut artifacts = Vec::new();
+    for (key, a) in v.get("artifacts")?.as_obj()?.iter() {
+        artifacts.push(PendingArtifact {
+            key: key.clone(),
+            file: m.dir.join(a.get("file")?.as_str()?),
+            bytes: a.get("bytes")?.as_usize()?,
+            inputs: parse_slots(a.get("inputs")?)?,
+            outputs: parse_slots(a.get("outputs")?)?,
+            patch_h: match a.get_opt("patch_h") {
+                Some(x) => Some(x.as_usize()?),
+                None => None,
+            },
+        });
+    }
+    if !artifacts.iter().any(|a| a.patch_h.is_some()) {
+        return Err(Error::Artifact(format!(
+            "resolution {label}: no denoiser artifacts (entries need a \
+             patch_h field)"
+        )));
+    }
+    Ok(PendingResolution { key: ResKey { h, w }, artifacts })
+}
+
+/// Validate one pending resolution's files (presence + sizes, same
+/// contract as the base manifest) and assemble its artifact set.
+fn load_resolution(
+    m: &Manifest,
+    p: &PendingResolution,
+) -> Result<ResolutionArtifacts> {
+    let mut artifacts = BTreeMap::new();
+    let mut denoisers = BTreeMap::new();
+    let mut patch_heights = Vec::new();
+    for a in &p.artifacts {
+        if !a.file.exists() {
+            return Err(Error::Artifact(format!(
+                "artifact file missing: {}",
+                a.file.display()
+            )));
+        }
+        let actual = std::fs::metadata(&a.file)?.len() as usize;
+        if actual != a.bytes {
+            return Err(Error::Artifact(format!(
+                "{}: size {actual} != manifest {} (stale artifacts? \
+                 re-run `make artifacts`)",
+                a.file.display(),
+                a.bytes
+            )));
+        }
+        if let Some(h) = a.patch_h {
+            patch_heights.push(h);
+            denoisers.insert(h, a.key.clone());
+        }
+        artifacts.insert(
+            a.key.clone(),
+            ArtifactInfo {
+                key: a.key.clone(),
+                file: a.file.clone(),
+                inputs: a.inputs.clone(),
+                outputs: a.outputs.clone(),
+                bytes: a.bytes,
+            },
+        );
+    }
+    patch_heights.sort_unstable();
+    Ok(ResolutionArtifacts {
+        key: p.key,
+        model: m.model.with_resolution(p.key.h, p.key.w),
+        artifacts,
+        patch_heights,
+        denoisers,
+    })
 }
 
 #[cfg(test)]
@@ -252,5 +666,72 @@ mod tests {
         assert_eq!(m.tokens_for_rows(8), 64);
         assert_eq!(m.tokens_for_rows(32), 256);
         assert_eq!(m.kv_shape(), vec![3, 256, 192]);
+        // Re-basing keeps everything but the latent geometry.
+        let half = m.with_resolution(16, 32);
+        assert_eq!(half.latent_h, 16);
+        assert_eq!(half.tokens_full, 128);
+        assert_eq!(half.kv_shape(), vec![3, 128, 192]);
+        assert_eq!(half.dim, m.dim);
+        assert_eq!(half.row_granularity, m.row_granularity);
+    }
+
+    fn stub_dir(tag: &str, extra: &[(usize, usize)]) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "stadi-artifacts-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        crate::runtime::stubgen::write_stub_artifacts(&dir, extra).unwrap();
+        dir
+    }
+
+    #[test]
+    fn registry_loads_lazily_and_bounds_residency_lru() {
+        let dir =
+            stub_dir("lru", &[(16, 32), (48, 32), (8, 32)]);
+        let reg = ArtifactRegistry::with_capacity(&dir, 2).unwrap();
+        // Nothing resident until first use; native is always free.
+        assert_eq!(reg.stats(), RegistryStats::default());
+        reg.get(reg.native_key()).unwrap();
+        assert_eq!(reg.stats().resident, 0);
+        let (a, b, c) = (
+            ResKey { h: 16, w: 32 },
+            ResKey { h: 48, w: 32 },
+            ResKey { h: 8, w: 32 },
+        );
+        reg.get(a).unwrap();
+        reg.get(b).unwrap();
+        assert_eq!(
+            reg.stats(),
+            RegistryStats { resident: 2, loads: 2, evictions: 0 }
+        );
+        // Touch `a` so `b` becomes least-recently-used, then load a
+        // third: `b` is evicted, the cap holds.
+        reg.get(a).unwrap();
+        reg.get(c).unwrap();
+        let s = reg.stats();
+        assert_eq!((s.resident, s.loads, s.evictions), (2, 3, 1));
+        // The evicted resolution reloads transparently on demand.
+        reg.get(b).unwrap();
+        assert_eq!(reg.stats().loads, 4);
+        // Unregistered sizes are a typed error naming the options.
+        let e = reg.get(ResKey { h: 20, w: 32 }).unwrap_err();
+        assert!(e.to_string().contains("not registered"), "{e}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resolution_file_problems_surface_on_first_get_not_at_load() {
+        let dir = stub_dir("lazyerr", &[(16, 32)]);
+        std::fs::remove_file(dir.join("denoiser_16x32_h4.hlo")).unwrap();
+        // Registry load succeeds — validation of non-native sets is
+        // deferred (a server should boot even if a cold size is
+        // broken)...
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert!(reg.is_registered(ResKey { h: 16, w: 32 }));
+        // ...and the first get reports the missing file.
+        let e = reg.get(ResKey { h: 16, w: 32 }).unwrap_err();
+        assert!(e.to_string().contains("missing"), "{e}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -57,10 +57,12 @@ pub use backend::Runtime;
 #[cfg(feature = "xla-backend")]
 mod backend {
     use std::collections::BTreeMap;
-    use std::sync::Mutex;
+    use std::sync::{Arc, Mutex};
 
     use crate::error::{Error, Result};
-    use crate::runtime::artifacts::{ArtifactInfo, Manifest};
+    use crate::runtime::artifacts::{
+        ArtifactInfo, ArtifactRegistry, Manifest, ResKey,
+    };
     use crate::runtime::tensor::Tensor;
 
     use super::{DenoiserInputs, DenoiserOutputs};
@@ -73,7 +75,8 @@ mod backend {
         info: ArtifactInfo,
     }
 
-    /// PJRT CPU runtime with a compiled-executable cache.
+    /// PJRT CPU runtime with a compiled-executable cache, keyed by
+    /// artifact key (unique across the registry's resolutions).
     ///
     /// Execution goes through `execute_b` with explicitly-managed device
     /// buffers: the literal-taking `execute` of xla 0.1.6 leaks the
@@ -84,8 +87,19 @@ mod backend {
     /// step (see `params_buffer`).
     pub struct Runtime {
         client: xla::PjRtClient,
-        manifest: Manifest,
+        registry: Arc<ArtifactRegistry>,
         cache: Mutex<BTreeMap<String, std::sync::Arc<Compiled>>>,
+        /// Which *non-native* resolution each compiled key belongs to:
+        /// when the registry evicts a resolution, `track_and_prune`
+        /// drops its compiled executables too, so the registry's LRU
+        /// cap bounds the heavyweight objects and not just the
+        /// metadata.
+        owners: Mutex<BTreeMap<String, ResKey>>,
+        /// Registry eviction count last reconciled against `owners` —
+        /// the full prune scan only runs when it advances, so
+        /// steady-state denoise steps pay one atomic compare, not a
+        /// map walk under two locks.
+        pruned_at: std::sync::atomic::AtomicU64,
         /// Cached device buffer for the flat weights, keyed by the host
         /// pointer + length of the slice it was uploaded from (the exec
         /// service owns one stable params vec for the process lifetime).
@@ -93,14 +107,45 @@ mod backend {
     }
 
     impl Runtime {
-        pub fn new(manifest: Manifest) -> Result<Self> {
+        pub fn new(registry: Arc<ArtifactRegistry>) -> Result<Self> {
             let client = xla::PjRtClient::cpu()?;
             Ok(Runtime {
                 client,
-                manifest,
+                registry,
                 cache: Mutex::new(BTreeMap::new()),
+                owners: Mutex::new(BTreeMap::new()),
+                pruned_at: std::sync::atomic::AtomicU64::new(0),
                 params_buffer: Mutex::new(None),
             })
+        }
+
+        /// Record a compiled key's owning resolution and — only when
+        /// the registry has evicted something since the last check —
+        /// drop compiled executables whose resolution is no longer
+        /// resident. Lock order: owners, then cache (only this path
+        /// takes both).
+        fn track_and_prune(&self, res: ResKey, key: &str) {
+            use std::sync::atomic::Ordering;
+            if res == self.registry.native_key() {
+                return;
+            }
+            let mut owners = self.owners.lock().unwrap();
+            owners.insert(key.to_string(), res);
+            let evictions = self.registry.stats().evictions;
+            if self.pruned_at.swap(evictions, Ordering::Relaxed)
+                == evictions
+            {
+                return;
+            }
+            let mut cache = self.cache.lock().unwrap();
+            owners.retain(|k, &mut owner| {
+                if self.registry.is_resident(owner) {
+                    true
+                } else {
+                    cache.remove(k);
+                    false
+                }
+            });
         }
 
         /// Host-to-device upload with proper ownership (freed on drop).
@@ -121,31 +166,40 @@ mod backend {
         }
 
         pub fn manifest(&self) -> &Manifest {
-            &self.manifest
+            self.registry.manifest()
         }
 
-        /// Compile (or fetch cached) an artifact by key.
-        fn compiled(&self, key: &str) -> Result<std::sync::Arc<Compiled>> {
+        pub fn registry(&self) -> &Arc<ArtifactRegistry> {
+            &self.registry
+        }
+
+        /// Compile (or fetch cached) an artifact.
+        fn compiled(&self, info: &ArtifactInfo) -> Result<std::sync::Arc<Compiled>> {
+            let key = &info.key;
             if let Some(c) = self.cache.lock().unwrap().get(key) {
                 return Ok(c.clone());
             }
-            let info = self.manifest.artifact(key)?.clone();
             crate::log_debug!("runtime", "compiling artifact {key}");
             let proto = xla::HloModuleProto::from_text_file(
                 info.file.to_str().ok_or_else(|| Error::msg("bad path"))?,
             )?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = self.client.compile(&comp)?;
-            let arc = std::sync::Arc::new(Compiled { exe, info });
-            self.cache.lock().unwrap().insert(key.to_string(), arc.clone());
+            let arc =
+                std::sync::Arc::new(Compiled { exe, info: info.clone() });
+            self.cache.lock().unwrap().insert(key.clone(), arc.clone());
             Ok(arc)
         }
 
-        /// Pre-compile a set of artifacts (leader does this before serving
-        /// so compilation never lands on the request path).
-        pub fn warm(&self, keys: &[String]) -> Result<()> {
-            for k in keys {
-                self.compiled(k)?;
+        /// Pre-compile a resolution's denoisers at the given patch
+        /// heights (leader does this before serving so compilation
+        /// never lands on the request path).
+        pub fn warm_at(&self, res: ResKey, heights: &[usize]) -> Result<()> {
+            let ra = self.registry.get(res)?;
+            for &h in heights {
+                let info = ra.denoiser(h)?;
+                self.compiled(info)?;
+                self.track_and_prune(res, &info.key);
             }
             Ok(())
         }
@@ -155,15 +209,29 @@ mod backend {
             self.cache.lock().unwrap().len()
         }
 
-        /// Execute a denoiser artifact for patch height `h`.
+        /// Execute a native-resolution denoiser step (the legacy
+        /// single-resolution entry point).
         pub fn denoise(
             &self,
             h: usize,
             inp: &DenoiserInputs<'_>,
         ) -> Result<DenoiserOutputs> {
-            let key = format!("denoiser_h{h}");
-            let c = self.compiled(&key)?;
-            let m = &self.manifest.model;
+            self.denoise_at(self.registry.native_key(), h, inp)
+        }
+
+        /// Execute a denoiser artifact for patch height `h` at a
+        /// registered resolution.
+        pub fn denoise_at(
+            &self,
+            res: ResKey,
+            h: usize,
+            inp: &DenoiserInputs<'_>,
+        ) -> Result<DenoiserOutputs> {
+            let ra = self.registry.get(res)?;
+            let info = ra.denoiser(h)?;
+            let c = self.compiled(info)?;
+            self.track_and_prune(res, &info.key);
+            let m = &ra.model;
             // Shape checks against the manifest ABI.
             if inp.x_patch.shape != vec![h, m.latent_w, m.latent_c] {
                 return Err(Error::Artifact(format!(
@@ -247,7 +315,7 @@ mod backend {
             coef_x: f64,
             coef_eps: f64,
         ) -> Result<Tensor> {
-            let c = self.compiled("ddim_update")?;
+            let c = self.compiled(self.manifest().artifact("ddim_update")?)?;
             let bufs = [
                 self.upload(&x.data, &x.shape)?,
                 self.upload(&eps.data, &eps.shape)?,
@@ -270,7 +338,7 @@ mod backend {
             &self,
             x: &Tensor,
         ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
-            let c = self.compiled("features")?;
+            let c = self.compiled(self.manifest().artifact("features")?)?;
             let x_buf = self.upload(&x.data, &x.shape)?;
             let result = c
                 .exe
@@ -295,29 +363,39 @@ mod backend {
     //! and every execution method exists only to keep the callers
     //! type-checking.
 
+    use std::sync::Arc;
+
     use crate::error::{Error, Result};
-    use crate::runtime::artifacts::Manifest;
+    use crate::runtime::artifacts::{ArtifactRegistry, Manifest, ResKey};
     use crate::runtime::tensor::Tensor;
 
     use super::{DenoiserInputs, DenoiserOutputs, NO_BACKEND};
 
     /// Placeholder with the same API surface as the real PJRT runtime.
     pub struct Runtime {
-        manifest: Manifest,
+        registry: Arc<ArtifactRegistry>,
     }
 
     impl Runtime {
-        pub fn new(_manifest: Manifest) -> Result<Self> {
+        pub fn new(_registry: Arc<ArtifactRegistry>) -> Result<Self> {
             // Fail early: constructing a runtime that cannot execute
             // anything would only defer this error to the request path.
             Err(Error::msg(NO_BACKEND))
         }
 
         pub fn manifest(&self) -> &Manifest {
-            &self.manifest
+            self.registry.manifest()
         }
 
-        pub fn warm(&self, _keys: &[String]) -> Result<()> {
+        pub fn registry(&self) -> &Arc<ArtifactRegistry> {
+            &self.registry
+        }
+
+        pub fn warm_at(
+            &self,
+            _res: ResKey,
+            _heights: &[usize],
+        ) -> Result<()> {
             Err(Error::msg(NO_BACKEND))
         }
 
@@ -327,6 +405,15 @@ mod backend {
 
         pub fn denoise(
             &self,
+            _h: usize,
+            _inp: &DenoiserInputs<'_>,
+        ) -> Result<DenoiserOutputs> {
+            Err(Error::msg(NO_BACKEND))
+        }
+
+        pub fn denoise_at(
+            &self,
+            _res: ResKey,
             _h: usize,
             _inp: &DenoiserInputs<'_>,
         ) -> Result<DenoiserOutputs> {
@@ -355,14 +442,15 @@ mod backend {
 #[cfg(all(test, feature = "xla-backend"))]
 mod tests {
     use super::*;
-    use crate::runtime::artifacts::Manifest;
+    use crate::runtime::artifacts::ArtifactRegistry;
     use crate::util::rng::NormalGen;
     use std::path::PathBuf;
+    use std::sync::Arc;
 
-    fn manifest() -> Option<Manifest> {
+    fn registry() -> Option<Arc<ArtifactRegistry>> {
         let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if dir.join("manifest.json").exists() {
-            Some(Manifest::load(dir).unwrap())
+            Some(Arc::new(ArtifactRegistry::load(dir).unwrap()))
         } else {
             eprintln!("skipping: artifacts not built");
             None
@@ -371,12 +459,12 @@ mod tests {
 
     #[test]
     fn denoiser_matches_golden() {
-        let Some(m) = manifest() else { return };
+        let Some(reg) = registry() else { return };
         // Inputs regenerated through the cross-language PCG stream
         // (compile/pcg.py == util::rng), draw order: x, kv, cond —
         // exactly how aot.py::golden_denoiser produced them.
-        let golden = m.golden("denoiser.json").unwrap();
-        let rt = Runtime::new(m).unwrap();
+        let golden = reg.manifest().golden("denoiser.json").unwrap();
+        let rt = Runtime::new(reg).unwrap();
         let model = rt.manifest().model.clone();
         let params = rt.manifest().load_params().unwrap();
 
@@ -432,8 +520,8 @@ mod tests {
 
     #[test]
     fn ddim_artifact_is_fma() {
-        let Some(m) = manifest() else { return };
-        let rt = Runtime::new(m).unwrap();
+        let Some(reg) = registry() else { return };
+        let rt = Runtime::new(reg).unwrap();
         let shape = rt.manifest().model.latent_shape();
         let mut gen = NormalGen::new(2);
         let n: usize = shape.iter().product();
@@ -448,8 +536,8 @@ mod tests {
 
     #[test]
     fn features_shapes() {
-        let Some(m) = manifest() else { return };
-        let rt = Runtime::new(m).unwrap();
+        let Some(reg) = registry() else { return };
+        let rt = Runtime::new(reg).unwrap();
         let shape = rt.manifest().model.latent_shape();
         let n: usize = shape.iter().product();
         let x = Tensor::new(shape, NormalGen::new(3).vec_f32(n)).unwrap();
@@ -459,8 +547,8 @@ mod tests {
 
     #[test]
     fn rejects_bad_shapes() {
-        let Some(m) = manifest() else { return };
-        let rt = Runtime::new(m).unwrap();
+        let Some(reg) = registry() else { return };
+        let rt = Runtime::new(reg).unwrap();
         let params = rt.manifest().load_params().unwrap();
         let model = rt.manifest().model.clone();
         let x = Tensor::zeros(&[8, 32, 4]);

@@ -1,12 +1,20 @@
 //! PJRT runtime: load AOT HLO-text artifacts and execute them from the
-//! rust request path (python is build-time only).
+//! rust request path (python is build-time only). Artifact sets are
+//! resolution-keyed ([`ArtifactRegistry`]); synthetic "stub" sets
+//! ([`stubgen`]) execute on a deterministic offline backend
+//! ([`stub_exec`]) on any build.
 
 pub mod artifacts;
 pub mod client;
 pub mod service;
+pub mod stub_exec;
+pub mod stubgen;
 pub mod tensor;
 
-pub use artifacts::Manifest;
+pub use artifacts::{
+    ArtifactRegistry, Manifest, RegistryStats, ResKey, ResolutionArtifacts,
+};
 pub use client::{DenoiserInputs, DenoiserOutputs, Runtime};
 pub use service::{ExecHandle, ExecService};
+pub use stub_exec::StubExec;
 pub use tensor::Tensor;

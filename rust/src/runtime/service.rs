@@ -1,5 +1,5 @@
-//! Execution service: a dedicated thread owning the (non-Send) PJRT
-//! client, fronted by a cloneable, thread-safe `ExecHandle`.
+//! Execution service: a dedicated thread owning the (non-Send)
+//! execution backend, fronted by a cloneable, thread-safe `ExecHandle`.
 //!
 //! The `xla` crate's `PjRtClient` is `Rc`-based, so it cannot cross
 //! threads. All execution therefore funnels through one service thread
@@ -9,20 +9,39 @@
 //! call. Workers hold clones of the handle; each request carries its
 //! own reply channel.
 //!
+//! Two backends sit behind the service:
+//!
+//! * the **real PJRT runtime** (feature `xla-backend`) for genuine
+//!   AOT'd HLO artifacts;
+//! * the **deterministic stub backend** for synthetic artifact sets
+//!   whose manifest carries `"stub": true` (see
+//!   [`crate::runtime::stubgen`]) — available on every build, so the
+//!   whole engine runs end-to-end offline.
+//!
+//! Execution is resolution-keyed: requests name the [`ResKey`] whose
+//! artifact set they run against (the registry loads non-native
+//! resolutions lazily), and the legacy single-resolution entry points
+//! forward to the native key.
+//!
 //! Weights are loaded once inside the service, so per-step messages
 //! carry only the step inputs (x patch, stale KV, scalars).
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::device::CostModel;
 use crate::error::{Error, Result};
-use crate::runtime::artifacts::Manifest;
-use crate::runtime::client::{DenoiserInputs, DenoiserOutputs, Runtime};
+use crate::runtime::artifacts::{ArtifactRegistry, Manifest, ResKey};
+#[cfg(feature = "xla-backend")]
+use crate::runtime::client::Runtime;
+use crate::runtime::client::{DenoiserInputs, DenoiserOutputs};
+use crate::runtime::stub_exec::StubExec;
 use crate::runtime::tensor::Tensor;
 
 enum Msg {
     Denoise {
+        res: ResKey,
         h: usize,
         x_patch: Tensor,
         kv_stale: Tensor,
@@ -47,17 +66,100 @@ enum Msg {
         reply: mpsc::Sender<Result<CostModel>>,
     },
     Warm {
-        keys: Vec<String>,
+        res: ResKey,
+        heights: Vec<usize>,
         reply: mpsc::Sender<Result<()>>,
     },
     Shutdown,
+}
+
+/// The service thread's execution backend.
+enum Backend {
+    #[cfg(feature = "xla-backend")]
+    Real(Runtime),
+    Stub(StubExec),
+}
+
+impl Backend {
+    fn open(registry: Arc<ArtifactRegistry>) -> Result<Backend> {
+        if registry.manifest().stub {
+            return Ok(Backend::Stub(StubExec::new(registry)?));
+        }
+        #[cfg(feature = "xla-backend")]
+        {
+            Ok(Backend::Real(Runtime::new(registry)?))
+        }
+        #[cfg(not(feature = "xla-backend"))]
+        {
+            Err(Error::msg(crate::runtime::client::NO_BACKEND))
+        }
+    }
+
+    fn manifest(&self) -> &Manifest {
+        match self {
+            #[cfg(feature = "xla-backend")]
+            Backend::Real(rt) => rt.manifest(),
+            Backend::Stub(s) => s.manifest(),
+        }
+    }
+
+    fn denoise(
+        &self,
+        res: ResKey,
+        h: usize,
+        inp: &DenoiserInputs<'_>,
+    ) -> Result<DenoiserOutputs> {
+        match self {
+            #[cfg(feature = "xla-backend")]
+            Backend::Real(rt) => rt.denoise_at(res, h, inp),
+            Backend::Stub(s) => s.denoise(res, h, inp),
+        }
+    }
+
+    fn ddim_update(
+        &self,
+        x: &Tensor,
+        eps: &Tensor,
+        coef_x: f64,
+        coef_eps: f64,
+    ) -> Result<Tensor> {
+        match self {
+            #[cfg(feature = "xla-backend")]
+            Backend::Real(rt) => rt.ddim_update(x, eps, coef_x, coef_eps),
+            Backend::Stub(s) => s.ddim_update(x, eps, coef_x, coef_eps),
+        }
+    }
+
+    fn features(&self, x: &Tensor) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        match self {
+            #[cfg(feature = "xla-backend")]
+            Backend::Real(rt) => rt.features(x),
+            Backend::Stub(s) => s.features(x),
+        }
+    }
+
+    fn calibrate(&self, reps: usize) -> Result<CostModel> {
+        match self {
+            #[cfg(feature = "xla-backend")]
+            Backend::Real(rt) => CostModel::calibrate(rt, reps),
+            Backend::Stub(s) => s.calibrate(reps),
+        }
+    }
+
+    fn warm(&self, res: ResKey, heights: &[usize]) -> Result<()> {
+        match self {
+            #[cfg(feature = "xla-backend")]
+            Backend::Real(rt) => rt.warm_at(res, heights),
+            Backend::Stub(s) => s.warm(res, heights),
+        }
+    }
 }
 
 /// Cloneable, Send handle to the execution service.
 #[derive(Clone)]
 pub struct ExecHandle {
     tx: mpsc::Sender<Msg>,
-    manifest: Manifest,
+    registry: Arc<ArtifactRegistry>,
 }
 
 /// Owns the service thread; dropping shuts it down.
@@ -67,33 +169,58 @@ pub struct ExecService {
 }
 
 impl ExecService {
-    /// Spawn the service: loads the manifest eagerly (errors early),
-    /// builds the PJRT client + params inside the thread.
+    /// Spawn the service: loads the artifact registry eagerly (errors
+    /// early), builds the backend + params inside the thread.
+    ///
+    /// Backend selection: stub manifests always run on the
+    /// deterministic stub backend (any build); real manifests need the
+    /// `xla-backend` feature. On a feature-less build the missing
+    /// backend is reported before artifact problems — the actual fix
+    /// is the build flag, whether or not `make artifacts` has run.
     pub fn spawn(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
-        // Feature check before the artifacts check: on a stub build the
-        // missing backend is the real problem, whether or not
-        // `make artifacts` has been run.
-        if !cfg!(feature = "xla-backend") {
+        let registry = match ArtifactRegistry::load(&artifacts_dir) {
+            Ok(r) => Arc::new(r),
+            Err(e) => {
+                // On a feature-less build with *no manifest at all*,
+                // the missing backend is the actual problem ("run make
+                // artifacts" would not help). But if a manifest exists
+                // and fails to load — a corrupt stub set, a stale
+                // resolutions table — report that real error: default
+                // builds are fully executable via stub artifacts, so
+                // "rebuild with --features xla-backend" would be wrong
+                // advice.
+                let have_manifest = artifacts_dir
+                    .as_ref()
+                    .join("manifest.json")
+                    .exists();
+                if !cfg!(feature = "xla-backend") && !have_manifest {
+                    return Err(Error::msg(
+                        crate::runtime::client::NO_BACKEND,
+                    ));
+                }
+                return Err(e);
+            }
+        };
+        if !registry.manifest().stub && !cfg!(feature = "xla-backend") {
             return Err(Error::msg(crate::runtime::client::NO_BACKEND));
         }
-        let manifest = Manifest::load(artifacts_dir)?;
         let (tx, rx) = mpsc::channel::<Msg>();
-        let m2 = manifest.clone();
+        let reg2 = Arc::clone(&registry);
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let join = std::thread::Builder::new()
             .name("pjrt-exec".into())
             .spawn(move || {
-                let rt = match Runtime::new(m2) {
-                    Ok(rt) => {
+                let backend = match Backend::open(reg2) {
+                    Ok(b) => {
                         let _ = ready_tx.send(Ok(()));
-                        rt
+                        b
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
                         return;
                     }
                 };
-                let params = match rt.manifest().load_params() {
+                let params = match backend.manifest().load_params() {
                     Ok(p) => p,
                     Err(e) => {
                         crate::log_error!("exec", "params load failed: {e}");
@@ -103,9 +230,17 @@ impl ExecService {
                 while let Ok(msg) = rx.recv() {
                     match msg {
                         Msg::Denoise {
-                            h, x_patch, kv_stale, row_off, t, cond, reply,
+                            res,
+                            h,
+                            x_patch,
+                            kv_stale,
+                            row_off,
+                            t,
+                            cond,
+                            reply,
                         } => {
-                            let out = rt.denoise(
+                            let out = backend.denoise(
+                                res,
                                 h,
                                 &DenoiserInputs {
                                     params: &params,
@@ -119,17 +254,18 @@ impl ExecService {
                             let _ = reply.send(out);
                         }
                         Msg::DdimArtifact { x, eps, coef_x, coef_eps, reply } => {
-                            let _ = reply
-                                .send(rt.ddim_update(&x, &eps, coef_x, coef_eps));
+                            let _ = reply.send(
+                                backend.ddim_update(&x, &eps, coef_x, coef_eps),
+                            );
                         }
                         Msg::Features { x, reply } => {
-                            let _ = reply.send(rt.features(&x));
+                            let _ = reply.send(backend.features(&x));
                         }
                         Msg::Calibrate { reps, reply } => {
-                            let _ = reply.send(CostModel::calibrate(&rt, reps));
+                            let _ = reply.send(backend.calibrate(reps));
                         }
-                        Msg::Warm { keys, reply } => {
-                            let _ = reply.send(rt.warm(&keys));
+                        Msg::Warm { res, heights, reply } => {
+                            let _ = reply.send(backend.warm(res, &heights));
                         }
                         Msg::Shutdown => break,
                     }
@@ -138,7 +274,10 @@ impl ExecService {
         ready_rx
             .recv()
             .map_err(|_| Error::msg("exec service died during startup"))??;
-        Ok(ExecService { handle: ExecHandle { tx, manifest }, join: Some(join) })
+        Ok(ExecService {
+            handle: ExecHandle { tx, registry },
+            join: Some(join),
+        })
     }
 
     pub fn handle(&self) -> ExecHandle {
@@ -156,8 +295,14 @@ impl Drop for ExecService {
 }
 
 impl ExecHandle {
+    /// The base (native-resolution) manifest.
     pub fn manifest(&self) -> &Manifest {
-        &self.manifest
+        self.registry.manifest()
+    }
+
+    /// The resolution-keyed artifact registry.
+    pub fn registry(&self) -> &Arc<ArtifactRegistry> {
+        &self.registry
     }
 
     fn rpc<T>(
@@ -171,7 +316,8 @@ impl ExecHandle {
         rx.recv().map_err(|_| Error::msg("exec service dropped reply"))?
     }
 
-    /// Execute one denoiser step (inputs are copied into the message).
+    /// Execute one native-resolution denoiser step (inputs are copied
+    /// into the message).
     pub fn denoise(
         &self,
         h: usize,
@@ -181,7 +327,32 @@ impl ExecHandle {
         t: f64,
         cond: &[f32],
     ) -> Result<DenoiserOutputs> {
+        self.denoise_at(
+            self.registry.native_key(),
+            h,
+            x_patch,
+            kv_stale,
+            row_off,
+            t,
+            cond,
+        )
+    }
+
+    /// Execute one denoiser step against a registered resolution's
+    /// artifact set.
+    #[allow(clippy::too_many_arguments)]
+    pub fn denoise_at(
+        &self,
+        res: ResKey,
+        h: usize,
+        x_patch: &Tensor,
+        kv_stale: &Tensor,
+        row_off: usize,
+        t: f64,
+        cond: &[f32],
+    ) -> Result<DenoiserOutputs> {
         self.rpc(|reply| Msg::Denoise {
+            res,
             h,
             x_patch: x_patch.clone(),
             kv_stale: kv_stale.clone(),
@@ -219,15 +390,20 @@ impl ExecHandle {
         self.rpc(|reply| Msg::Calibrate { reps, reply })
     }
 
-    /// Pre-compile artifacts off the request path.
-    pub fn warm(&self, keys: &[String]) -> Result<()> {
-        self.rpc(|reply| Msg::Warm { keys: keys.to_vec(), reply })
+    /// Pre-compile a resolution's denoisers off the request path.
+    pub fn warm_res(&self, res: ResKey, heights: &[usize]) -> Result<()> {
+        self.rpc(|reply| Msg::Warm {
+            res,
+            heights: heights.to_vec(),
+            reply,
+        })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::stubgen;
     use std::path::PathBuf;
 
     fn artifacts() -> Option<PathBuf> {
@@ -270,5 +446,51 @@ mod tests {
     #[test]
     fn spawn_fails_cleanly_on_missing_artifacts() {
         assert!(ExecService::spawn("/nonexistent").is_err());
+    }
+
+    /// The stub backend serves any build: spawn over synthetic
+    /// artifacts, execute at native and registered non-native
+    /// resolutions, and get deterministic outputs — no PJRT, no
+    /// feature flag, no python.
+    #[test]
+    fn stub_backend_executes_every_registered_resolution() {
+        let dir = std::env::temp_dir()
+            .join(format!("stadi-svc-stub-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        stubgen::write_stub_artifacts(
+            &dir,
+            stubgen::DEFAULT_EXTRA_RESOLUTIONS,
+        )
+        .unwrap();
+        let svc = ExecService::spawn(&dir).unwrap();
+        let h = svc.handle();
+        assert!(h.manifest().stub);
+        for res in h.registry().registered() {
+            let ra = h.registry().get(res).unwrap();
+            let m = ra.model.clone();
+            let ph = m.row_granularity;
+            h.warm_res(res, &[ph]).unwrap();
+            let x = Tensor::zeros(&[ph, m.latent_w, m.latent_c]);
+            let kv = Tensor::zeros(&m.kv_shape());
+            let cond = vec![0.5f32; m.dim];
+            let a = h.denoise_at(res, ph, &x, &kv, 0, 250.0, &cond).unwrap();
+            let b = h.denoise_at(res, ph, &x, &kv, 0, 250.0, &cond).unwrap();
+            assert_eq!(a.eps_patch, b.eps_patch, "stub not deterministic");
+            assert_eq!(
+                a.eps_patch.shape,
+                vec![ph, m.latent_w, m.latent_c]
+            );
+        }
+        // Unregistered resolutions fail with a typed artifact error.
+        let bogus = crate::runtime::artifacts::ResKey { h: 24, w: 32 };
+        let m = h.manifest().model.clone();
+        let x = Tensor::zeros(&[4, m.latent_w, m.latent_c]);
+        let kv = Tensor::zeros(&m.kv_shape());
+        let cond = vec![0.0f32; m.dim];
+        let e = h
+            .denoise_at(bogus, 4, &x, &kv, 0, 1.0, &cond)
+            .unwrap_err();
+        assert!(e.to_string().contains("not registered"), "{e}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

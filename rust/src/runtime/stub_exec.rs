@@ -1,0 +1,313 @@
+//! Deterministic stub execution backend.
+//!
+//! Executes "stub" artifact sets (see [`crate::runtime::stubgen`])
+//! with cheap, fully deterministic arithmetic in place of PJRT: the
+//! epsilon prediction is a seeded contraction of the input patch, so
+//! latents depend on the request seed and the plan's patch split
+//! exactly like the real path (split-dependent outputs, Table II),
+//! while byte-identical inputs always produce byte-identical outputs —
+//! which is what lets integration tests pin latent sums offline.
+//!
+//! The backend enforces the same ABI as the real runtime: shape checks
+//! against the resolution's model geometry, and a denoiser artifact
+//! must exist for the requested patch height (a missing height fails
+//! here just like a missing HLO file fails compilation).
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::runtime::artifacts::{ArtifactRegistry, Manifest, ResKey};
+use crate::runtime::client::{DenoiserInputs, DenoiserOutputs};
+use crate::runtime::tensor::Tensor;
+use crate::util::rng::NormalGen;
+
+/// Stub runtime over a resolution-keyed registry.
+pub struct StubExec {
+    registry: Arc<ArtifactRegistry>,
+}
+
+/// Mix the call's identifying fields into one PRNG stream seed. Two
+/// calls agree on their noise stream iff they agree on resolution,
+/// patch geometry and timestep — the inputs the real compiled kernel
+/// would see.
+fn stream_seed(
+    params_seed: u64,
+    res: ResKey,
+    h: usize,
+    row_off: usize,
+    t: f64,
+) -> u64 {
+    let mut s = params_seed ^ 0x5851_f42d_4c95_7f2d;
+    for v in [
+        res.h as u64,
+        res.w as u64,
+        h as u64,
+        row_off as u64,
+        t.to_bits(),
+    ] {
+        s = s
+            .rotate_left(13)
+            .wrapping_add(v.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    }
+    s
+}
+
+impl StubExec {
+    pub fn new(registry: Arc<ArtifactRegistry>) -> Result<Self> {
+        if !registry.manifest().stub {
+            return Err(Error::Artifact(
+                "refusing stub execution of non-stub artifacts (the \
+                 manifest lacks \"stub\": true)"
+                    .into(),
+            ));
+        }
+        Ok(StubExec { registry })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        self.registry.manifest()
+    }
+
+    pub fn registry(&self) -> &Arc<ArtifactRegistry> {
+        &self.registry
+    }
+
+    /// One deterministic denoiser step at resolution `res`.
+    pub fn denoise(
+        &self,
+        res: ResKey,
+        h: usize,
+        inp: &DenoiserInputs<'_>,
+    ) -> Result<DenoiserOutputs> {
+        let ra = self.registry.get(res)?;
+        let m = &ra.model;
+        // The patch height must be AOT'd, like the real compile path.
+        ra.denoiser_key(h)?;
+        // Same ABI checks as the PJRT backend.
+        if inp.x_patch.shape != vec![h, m.latent_w, m.latent_c] {
+            return Err(Error::Artifact(format!(
+                "x_patch shape {:?} != [{h}, {}, {}]",
+                inp.x_patch.shape, m.latent_w, m.latent_c
+            )));
+        }
+        if inp.kv_stale.shape != m.kv_shape() {
+            return Err(Error::Artifact(format!(
+                "kv_stale shape {:?} != {:?}",
+                inp.kv_stale.shape,
+                m.kv_shape()
+            )));
+        }
+        if inp.params.len() != m.param_count || inp.cond.len() != m.dim {
+            return Err(Error::Artifact(
+                "params/cond length mismatch".into(),
+            ));
+        }
+        if inp.row_off % m.patch != 0 || inp.row_off + h > m.latent_h {
+            return Err(Error::Artifact(format!(
+                "bad row_off {} for h {h}",
+                inp.row_off
+            )));
+        }
+
+        let mut gen = NormalGen::new(stream_seed(
+            m.params_seed,
+            res,
+            h,
+            inp.row_off,
+            inp.t,
+        ));
+        let n = h * m.latent_w * m.latent_c;
+        let z = gen.vec_f32(n);
+        let mut eps = Vec::with_capacity(n);
+        for i in 0..n {
+            // A contraction of the noisy patch plus step/condition
+            // noise: DDIM trajectories stay bounded and every input
+            // byte influences the output deterministically.
+            let v = 0.7 * inp.x_patch.data[i]
+                + 0.2 * z[i]
+                + 0.1 * inp.cond[i % m.dim];
+            eps.push(v.clamp(-4.0, 4.0));
+        }
+        let t_own = m.tokens_for_rows(h);
+        let kv: Vec<f32> = gen
+            .vec_f32(m.layers * t_own * 2 * m.dim)
+            .into_iter()
+            .map(|v| 0.01 * v)
+            .collect();
+        Ok(DenoiserOutputs {
+            eps_patch: Tensor::new(vec![h, m.latent_w, m.latent_c], eps)?,
+            kv_fresh: Tensor::new(vec![m.layers, t_own, 2 * m.dim], kv)?,
+        })
+    }
+
+    /// The DDIM-update artifact is a pure FMA; the stub computes it
+    /// exactly, so cross-validation against the rust-native sampler
+    /// holds on stub builds too.
+    pub fn ddim_update(
+        &self,
+        x: &Tensor,
+        eps: &Tensor,
+        coef_x: f64,
+        coef_eps: f64,
+    ) -> Result<Tensor> {
+        if x.shape != eps.shape {
+            return Err(Error::Artifact(format!(
+                "ddim_update shape mismatch: {:?} vs {:?}",
+                x.shape, eps.shape
+            )));
+        }
+        let data: Vec<f32> = x
+            .data
+            .iter()
+            .zip(&eps.data)
+            .map(|(&xv, &ev)| (coef_x * xv as f64 + coef_eps * ev as f64) as f32)
+            .collect();
+        Tensor::new(x.shape.clone(), data)
+    }
+
+    /// Deterministic pooled pseudo-features (16/32/64 wide, like the
+    /// real extractor): chunked means of the input, so metric smoke
+    /// tests get stable, input-dependent values.
+    pub fn features(
+        &self,
+        x: &Tensor,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let pool = |width: usize| -> Vec<f32> {
+            let n = x.data.len();
+            (0..width)
+                .map(|k| {
+                    if n == 0 {
+                        return 0.0;
+                    }
+                    let lo = (k * n / width).min(n - 1);
+                    let hi = ((k + 1) * n / width).clamp(lo + 1, n);
+                    let s: f32 = x.data[lo..hi].iter().sum();
+                    s / (hi - lo) as f32
+                })
+                .collect()
+        };
+        Ok((pool(16), pool(32), pool(64)))
+    }
+
+    /// Warm = validate the artifacts exist (there is nothing to
+    /// compile), mirroring the real path's failure mode.
+    pub fn warm(&self, res: ResKey, heights: &[usize]) -> Result<()> {
+        let ra = self.registry.get(res)?;
+        for &h in heights {
+            ra.denoiser_key(h)?;
+        }
+        Ok(())
+    }
+
+    /// Calibrate the affine cost model by timing stub steps — the
+    /// timings are real wall-clock measurements of the stub
+    /// arithmetic, tiny but positive and monotone in rows.
+    pub fn calibrate(&self, reps: usize) -> Result<crate::device::CostModel> {
+        let native = self.registry.native_key();
+        crate::device::CostModel::calibrate_with(
+            self.manifest(),
+            reps,
+            |h, inp| self.denoise(native, h, inp),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::stubgen;
+
+    fn registry(tag: &str) -> (std::path::PathBuf, Arc<ArtifactRegistry>) {
+        let dir = std::env::temp_dir()
+            .join(format!("stadi-stubexec-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        stubgen::write_stub_artifacts(
+            &dir,
+            stubgen::DEFAULT_EXTRA_RESOLUTIONS,
+        )
+        .unwrap();
+        (dir.clone(), Arc::new(ArtifactRegistry::load(&dir).unwrap()))
+    }
+
+    #[test]
+    fn denoise_is_deterministic_and_seed_sensitive() {
+        let (dir, reg) = registry("det");
+        let stub = StubExec::new(Arc::clone(&reg)).unwrap();
+        let m = reg.manifest().model.clone();
+        let params = reg.manifest().load_params().unwrap();
+        let native = reg.native_key();
+        let x = Tensor::new(
+            vec![8, m.latent_w, m.latent_c],
+            NormalGen::new(3).vec_f32(8 * m.latent_w * m.latent_c),
+        )
+        .unwrap();
+        let kv = Tensor::zeros(&m.kv_shape());
+        let cond = vec![0.25f32; m.dim];
+        let inp = DenoiserInputs {
+            params: &params,
+            x_patch: &x,
+            kv_stale: &kv,
+            row_off: 8,
+            t: 500.0,
+            cond: &cond,
+        };
+        let a = stub.denoise(native, 8, &inp).unwrap();
+        let b = stub.denoise(native, 8, &inp).unwrap();
+        assert_eq!(a.eps_patch, b.eps_patch);
+        assert_eq!(a.kv_fresh, b.kv_fresh);
+        assert_eq!(a.kv_fresh.shape, vec![m.layers, 64, 2 * m.dim]);
+        // A different input patch changes the output.
+        let x2 = Tensor::new(
+            x.shape.clone(),
+            NormalGen::new(4).vec_f32(x.data.len()),
+        )
+        .unwrap();
+        let inp2 = DenoiserInputs { x_patch: &x2, ..inp.clone() };
+        let c = stub.denoise(native, 8, &inp2).unwrap();
+        assert!(a.eps_patch.max_abs_diff(&c.eps_patch) > 1e-4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn non_native_resolution_checks_its_own_geometry() {
+        let (dir, reg) = registry("res");
+        let stub = StubExec::new(Arc::clone(&reg)).unwrap();
+        let res = ResKey { h: 16, w: 32 };
+        let ra = reg.get(res).unwrap();
+        let m = ra.model.clone();
+        let params = reg.manifest().load_params().unwrap();
+        let x = Tensor::zeros(&[8, m.latent_w, m.latent_c]);
+        let kv = Tensor::zeros(&m.kv_shape());
+        let cond = vec![0.0f32; m.dim];
+        let inp = DenoiserInputs {
+            params: &params,
+            x_patch: &x,
+            kv_stale: &kv,
+            row_off: 0,
+            t: 100.0,
+            cond: &cond,
+        };
+        let out = stub.denoise(res, 8, &inp).unwrap();
+        // 8 rows at width 32: (8/2)*(32/2) = 64 own tokens.
+        assert_eq!(out.kv_fresh.shape, vec![m.layers, 64, 2 * m.dim]);
+        // The native KV stack (256 tokens) is the wrong shape here.
+        let kv_native =
+            Tensor::zeros(&reg.manifest().model.kv_shape());
+        let bad = DenoiserInputs { kv_stale: &kv_native, ..inp.clone() };
+        assert!(stub.denoise(res, 8, &bad).is_err());
+        // row_off past the 16-row latent is rejected.
+        let bad_off = DenoiserInputs { row_off: 12, ..inp };
+        assert!(stub.denoise(res, 8, &bad_off).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn calibrate_produces_positive_costs() {
+        let (dir, reg) = registry("calib");
+        let stub = StubExec::new(reg).unwrap();
+        let cost = stub.calibrate(2).unwrap();
+        assert!(cost.per_row_s > 0.0);
+        assert!(cost.fixed_s >= 0.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

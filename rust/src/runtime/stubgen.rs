@@ -1,0 +1,295 @@
+//! Synthetic "stub" artifact sets — the offline execution story.
+//!
+//! `write_stub_artifacts` emits a complete artifact directory
+//! (manifest.json + params.bin + placeholder HLO files) for a tiny
+//! model, including a `resolutions` table of extra latent sizes, all
+//! without touching python or a registry. The manifest carries
+//! `"stub": true`, which routes [`crate::runtime::ExecService`] to the
+//! deterministic stub backend ([`crate::runtime::stub_exec::StubExec`])
+//! instead of PJRT — so the entire engine (planner, sessions, serve
+//! stack, fleet, multi-resolution registry) runs end-to-end on a bare
+//! toolchain with pinned numerics. Real manifests never set the flag
+//! and are unaffected.
+//!
+//! The CLI front door is `stadi stub-artifacts --out DIR`.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Object, Value};
+use crate::util::rng::NormalGen;
+
+/// Geometry of the stub model (small enough that a full request is a
+/// few milliseconds of arithmetic).
+pub const LATENT_H: usize = 32;
+pub const LATENT_W: usize = 32;
+pub const LATENT_C: usize = 4;
+pub const PATCH: usize = 2;
+pub const DIM: usize = 16;
+pub const HEADS: usize = 2;
+pub const LAYERS: usize = 2;
+pub const TEMB_DIM: usize = 8;
+pub const ROW_GRANULARITY: usize = 4;
+pub const PARAM_COUNT: usize = 64;
+pub const PARAMS_SEED: u64 = 7;
+
+/// The two extra synthetic resolutions the default stub set compiles:
+/// a half-height interactive size and a 1.5x-height "high-res" size
+/// (latent rows x cols; x8 for pixels).
+pub const DEFAULT_EXTRA_RESOLUTIONS: &[(usize, usize)] = &[(16, 32), (48, 32)];
+
+fn tokens_full(h: usize, w: usize) -> usize {
+    (h / PATCH) * (w / PATCH)
+}
+
+fn slot(name: &str, shape: &[usize]) -> Value {
+    let mut o = Object::new();
+    o.insert("name", Value::Str(name.into()));
+    o.insert("shape", Value::from_usize_slice(shape));
+    o.insert("dtype", Value::Str("f32".into()));
+    Value::Obj(o)
+}
+
+fn num(n: usize) -> Value {
+    Value::Num(n as f64)
+}
+
+/// One denoiser artifact entry (and its placeholder file on disk).
+fn denoiser_entry(
+    dir: &Path,
+    key: &str,
+    res_h: usize,
+    res_w: usize,
+    patch_h: usize,
+    with_patch_h: bool,
+) -> Result<Value> {
+    let file = format!("{key}.hlo");
+    let content = format!(
+        "stub-hlo {key} (synthetic placeholder for the {res_h}x{res_w} \
+         latent; executed by the deterministic stub backend, not PJRT)\n"
+    );
+    std::fs::write(dir.join(&file), &content)?;
+    let toks = tokens_full(res_h, res_w);
+    let own = tokens_full(patch_h, res_w);
+    let mut o = Object::new();
+    o.insert("file", Value::Str(file));
+    o.insert("bytes", num(content.len()));
+    if with_patch_h {
+        o.insert("patch_h", num(patch_h));
+    }
+    o.insert(
+        "inputs",
+        Value::Arr(vec![
+            slot("params", &[PARAM_COUNT]),
+            slot("x_patch", &[patch_h, res_w, LATENT_C]),
+            slot("kv_stale", &[LAYERS, toks, 2 * DIM]),
+            slot("row_off", &[]),
+            slot("t", &[]),
+            slot("cond", &[DIM]),
+        ]),
+    );
+    o.insert(
+        "outputs",
+        Value::Arr(vec![
+            slot("eps_patch", &[patch_h, res_w, LATENT_C]),
+            slot("kv_fresh", &[LAYERS, own, 2 * DIM]),
+        ]),
+    );
+    Ok(Value::Obj(o))
+}
+
+/// Write a complete synthetic artifact set to `dir`: the native
+/// 32x32-latent model plus one registry entry per `(latent_h,
+/// latent_w)` in `extra`. Each extra resolution gets denoiser
+/// artifacts for every granularity-aligned patch height, exactly like
+/// a real AOT run would.
+pub fn write_stub_artifacts(
+    dir: impl AsRef<Path>,
+    extra: &[(usize, usize)],
+) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+
+    // Deterministic weights (the stub backend mixes them into its
+    // stream seeds only through params_seed, but length is validated
+    // exactly like the real path).
+    let params = NormalGen::new(PARAMS_SEED).vec_f32(PARAM_COUNT);
+    let mut bytes = Vec::with_capacity(PARAM_COUNT * 4);
+    for p in &params {
+        bytes.extend_from_slice(&p.to_le_bytes());
+    }
+    std::fs::write(dir.join("params.bin"), &bytes)?;
+
+    let mut model = Object::new();
+    model.insert("latent_h", num(LATENT_H));
+    model.insert("latent_w", num(LATENT_W));
+    model.insert("latent_c", num(LATENT_C));
+    model.insert("patch", num(PATCH));
+    model.insert("dim", num(DIM));
+    model.insert("heads", num(HEADS));
+    model.insert("layers", num(LAYERS));
+    model.insert("temb_dim", num(TEMB_DIM));
+    model.insert("row_granularity", num(ROW_GRANULARITY));
+    model.insert("tokens_full", num(tokens_full(LATENT_H, LATENT_W)));
+    model.insert("param_count", num(PARAM_COUNT));
+    model.insert("params_seed", num(PARAMS_SEED as usize));
+
+    let mut schedule = Object::new();
+    schedule.insert("train_steps", num(1000));
+    schedule.insert("beta_start", Value::Num(0.00085));
+    schedule.insert("beta_end", Value::Num(0.012));
+
+    // Native denoisers use the legacy key shape (`denoiser_h{h}`) so
+    // the base manifest parses through the unchanged legacy path.
+    let mut artifacts = Object::new();
+    let mut h = ROW_GRANULARITY;
+    while h <= LATENT_H {
+        let key = format!("denoiser_h{h}");
+        artifacts.insert(
+            key.clone(),
+            denoiser_entry(dir, &key, LATENT_H, LATENT_W, h, false)?,
+        );
+        h += ROW_GRANULARITY;
+    }
+
+    let mut resolutions = Object::new();
+    for &(rh, rw) in extra {
+        if rh == 0
+            || rw == 0
+            || rh % ROW_GRANULARITY != 0
+            || rw % PATCH != 0
+        {
+            return Err(Error::Artifact(format!(
+                "stub resolution {rh}x{rw} must be positive, \
+                 row-granularity-aligned ({ROW_GRANULARITY}) and \
+                 patch-aligned ({PATCH})"
+            )));
+        }
+        // Catch at write time what the registry would reject at load
+        // time — a set that can never load helps nobody.
+        if (rh, rw) == (LATENT_H, LATENT_W) {
+            return Err(Error::Artifact(format!(
+                "stub resolution {rh}x{rw} duplicates the native \
+                 resolution (it is always registered)"
+            )));
+        }
+        if resolutions.contains(&format!("{rh}x{rw}")) {
+            return Err(Error::Artifact(format!(
+                "duplicate stub resolution {rh}x{rw}"
+            )));
+        }
+        let mut entry = Object::new();
+        entry.insert("latent_h", num(rh));
+        entry.insert("latent_w", num(rw));
+        entry.insert("tokens_full", num(tokens_full(rh, rw)));
+        entry.insert(
+            "kv_shape",
+            Value::from_usize_slice(&[
+                LAYERS,
+                tokens_full(rh, rw),
+                2 * DIM,
+            ]),
+        );
+        let mut arts = Object::new();
+        let mut ph = ROW_GRANULARITY;
+        while ph <= rh {
+            let key = format!("denoiser_{rh}x{rw}_h{ph}");
+            arts.insert(
+                key.clone(),
+                denoiser_entry(dir, &key, rh, rw, ph, true)?,
+            );
+            ph += ROW_GRANULARITY;
+        }
+        entry.insert("artifacts", Value::Obj(arts));
+        resolutions.insert(format!("{rh}x{rw}"), Value::Obj(entry));
+    }
+
+    let mut manifest = Object::new();
+    manifest.insert("stub", Value::Bool(true));
+    manifest.insert("model", Value::Obj(model));
+    manifest.insert("schedule", Value::Obj(schedule));
+    manifest.insert("artifacts", Value::Obj(artifacts));
+    if !resolutions.is_empty() {
+        manifest.insert("resolutions", Value::Obj(resolutions));
+    }
+    std::fs::write(
+        dir.join("manifest.json"),
+        json::to_string_pretty(&Value::Obj(manifest)),
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::{ArtifactRegistry, Manifest, ResKey};
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("stadi-stubgen-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn generated_set_loads_as_manifest_and_registry() {
+        let dir = tmp("load");
+        write_stub_artifacts(&dir, DEFAULT_EXTRA_RESOLUTIONS).unwrap();
+        // The base manifest parses through the unchanged legacy path.
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.stub);
+        assert_eq!(m.model.latent_h, LATENT_H);
+        assert_eq!(m.model.tokens_full, 256);
+        assert_eq!(m.patch_heights, vec![4, 8, 12, 16, 20, 24, 28, 32]);
+        let params = m.load_params().unwrap();
+        assert_eq!(params.len(), PARAM_COUNT);
+        // The registry sees native + the two synthetic resolutions.
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert_eq!(reg.native_key(), ResKey { h: 32, w: 32 });
+        assert_eq!(
+            reg.registered(),
+            vec![
+                ResKey { h: 32, w: 32 },
+                ResKey { h: 16, w: 32 },
+                ResKey { h: 48, w: 32 },
+            ]
+        );
+        let ra = reg.get(ResKey { h: 16, w: 32 }).unwrap();
+        assert_eq!(ra.model.latent_h, 16);
+        assert_eq!(ra.model.tokens_full, 128);
+        assert_eq!(ra.patch_heights, vec![4, 8, 12, 16]);
+        ra.denoiser(8).unwrap();
+        assert!(ra.denoiser(24).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_shape_without_extras_is_single_entry_registry() {
+        let dir = tmp("legacy");
+        write_stub_artifacts(&dir, &[]).unwrap();
+        // No `resolutions` key at all — the legacy manifest shape.
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .unwrap();
+        assert!(!text.contains("resolutions"));
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert_eq!(reg.registered().len(), 1);
+        assert!(!reg.is_registered(ResKey { h: 16, w: 32 }));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_misaligned_native_and_duplicate_resolutions() {
+        let dir = tmp("bad");
+        assert!(write_stub_artifacts(&dir, &[(10, 32)]).is_err());
+        assert!(write_stub_artifacts(&dir, &[(16, 31)]).is_err());
+        // Writing a set the registry would refuse to load is caught
+        // at write time.
+        assert!(
+            write_stub_artifacts(&dir, &[(LATENT_H, LATENT_W)]).is_err()
+        );
+        assert!(
+            write_stub_artifacts(&dir, &[(16, 32), (16, 32)]).is_err()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -287,6 +287,17 @@ impl Plan {
 /// return a plan computed from speeds up to one quantum away — well
 /// inside the noise of the estimates themselves. Thresholds are keyed
 /// by their f64 bits (they are config constants, never computed).
+///
+/// `res` names a non-native execution resolution (latent h, w);
+/// native-resolution keys carry `None`, so the default-spec path and
+/// the spec path produce identical keys and the cache stays warm
+/// across the multi-resolution upgrade. Today's builders derive the
+/// split from `rows` alone (so two widths at the same row count build
+/// identical plans and keying them separately costs a few duplicate
+/// entries in a bounded cache); width is keyed *deliberately* —
+/// width-aware cost models shift the fixed-vs-per-row balance, which
+/// changes cost-aware splits, and a silently shared cache entry would
+/// then serve wrong plans across widths.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct PlanKey {
     pub m_base: usize,
@@ -299,6 +310,7 @@ pub struct PlanKey {
     pub rows: usize,
     pub devices: Vec<usize>,
     pub speeds_q: Vec<u32>,
+    pub res: Option<(usize, usize)>,
 }
 
 impl PlanKey {
@@ -319,7 +331,16 @@ impl PlanKey {
             rows,
             devices: devices.to_vec(),
             speeds_q: speeds.iter().map(|&v| quantize_speed(v)).collect(),
+            res: None,
         }
+    }
+
+    /// Attach a non-native resolution to the key (`None` = native —
+    /// the constructor's default, so existing native call sites are
+    /// untouched).
+    pub fn with_res(mut self, res: Option<(usize, usize)>) -> PlanKey {
+        self.res = res;
+        self
     }
 }
 
@@ -597,6 +618,14 @@ mod tests {
         assert_ne!(base, k(&p, 32, &[0, 2], &[1.0, 0.5]));
         assert_ne!(base, k(&p, 32, &[0, 1], &[1.0, 0.8]));
         assert_eq!(base, k(&p, 32, &[0, 1], &[1.0, 0.5]));
+        // Resolutions separate otherwise-identical shapes (two sizes
+        // with the same row count but different widths), and the
+        // native attachment (None) is the constructor default, so
+        // pre-multi-resolution native keys are unchanged.
+        let wide = base.clone().with_res(Some((32, 64)));
+        assert_ne!(base, wide);
+        assert_ne!(wide, base.clone().with_res(Some((32, 32))));
+        assert_eq!(base, base.clone().with_res(None));
     }
 
     #[test]

@@ -386,6 +386,83 @@ mod tests {
         assert!(ca[1] >= 8, "{ca:?}");
     }
 
+    /// Satellite: the Eq. 5 split at *non-native* sizes. For random
+    /// registered-style resolutions (any granularity-aligned row
+    /// count), random speeds and random granularities, the mend must
+    /// conserve total rows, respect the granularity, and never hand a
+    /// zero-row patch to an included (nonzero-speed, non-excluded)
+    /// device — nor a nonzero patch to an excluded one.
+    #[test]
+    fn property_non_native_row_splits_conserve_rows() {
+        let p = StadiParams::default();
+        forall(
+            67,
+            300,
+            |rng| {
+                let gran_pick = rng.below(4) as usize; // 1 | 2 | 4 | 8
+                let granules = 1 + rng.below(24) as usize;
+                let n = 1 + rng.below(6) as usize;
+                let speeds: Vec<f64> = (0..n)
+                    .map(|_| 0.05 + 0.95 * rng.next_f64())
+                    .collect();
+                (gran_pick, (granules, speeds))
+            },
+            |&(gran_pick, (granules, ref speeds))| {
+                let granularity = 1usize << gran_pick;
+                let rows = granules * granularity;
+                let Ok(assign) = assign_steps(speeds, &p) else {
+                    return Ok(()); // infeasible speed vectors skip
+                };
+                let included: Vec<usize> = assign
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, a)| a.class != StepClass::Excluded)
+                    .map(|(i, _)| i)
+                    .collect();
+                if included.len() > granules {
+                    // More devices than granules: the mend must refuse
+                    // rather than invent sub-granule patches.
+                    ensure(
+                        mend_patch_sizes(
+                            speeds, &assign, rows, granularity,
+                        )
+                        .is_err(),
+                        "oversubscribed latent accepted",
+                    )?;
+                    return Ok(());
+                }
+                let sizes =
+                    mend_patch_sizes(speeds, &assign, rows, granularity)
+                        .map_err(|e| e.to_string())?;
+                ensure(
+                    sizes.iter().sum::<usize>() == rows,
+                    format!("rows not conserved: {sizes:?} != {rows}"),
+                )?;
+                for (i, &s) in sizes.iter().enumerate() {
+                    ensure(
+                        s % granularity == 0,
+                        format!("granularity violated: {s}"),
+                    )?;
+                    let excluded =
+                        assign[i].class == StepClass::Excluded;
+                    if excluded {
+                        ensure(s == 0, "excluded device got rows")?;
+                    } else {
+                        ensure(
+                            s >= granularity,
+                            format!(
+                                "included device {i} (speed \
+                                 {}) got a zero-row patch",
+                                speeds[i]
+                            ),
+                        )?;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
     #[test]
     fn property_sum_granularity_floor_proportionality() {
         let p = StadiParams::default();

@@ -156,6 +156,11 @@ impl PartialOrd for DeadlineKey {
 pub struct RouterStats {
     pub admitted: u64,
     pub rejected: u64,
+    /// Rejected by the admission gate (`JobRunner::admit`) before ever
+    /// entering the queue — e.g. unregistered resolutions answered
+    /// with `bad_spec`. Disjoint from `admitted`/`rejected`, so
+    /// operators can tell a junk-request flood from an idle server.
+    pub inadmissible: u64,
     pub completed: u64,
     pub failed: u64,
     /// Dequeued after their deadline had already passed (subset of
@@ -177,6 +182,7 @@ struct Inner<T> {
     closed: bool,
     admitted: u64,
     rejected: u64,
+    inadmissible: u64,
     completed: u64,
     failed: u64,
     deadline_shed: u64,
@@ -201,6 +207,7 @@ impl<T: Prioritized> Router<T> {
                 closed: false,
                 admitted: 0,
                 rejected: 0,
+                inadmissible: 0,
                 completed: 0,
                 failed: 0,
                 deadline_shed: 0,
@@ -290,6 +297,13 @@ impl<T: Prioritized> Router<T> {
         self.inner.lock().unwrap().queue.len()
     }
 
+    /// Record a request the admission gate refused before it entered
+    /// the queue (the connection reader calls this when
+    /// `JobRunner::admit` errors).
+    pub fn record_inadmissible(&self) {
+        self.inner.lock().unwrap().inadmissible += 1;
+    }
+
     /// Record the outcome of one executed item (workers call this).
     pub fn record_outcome(&self, ok: bool, latency_s: f64) {
         let mut g = self.inner.lock().unwrap();
@@ -306,6 +320,7 @@ impl<T: Prioritized> Router<T> {
         RouterStats {
             admitted: g.admitted,
             rejected: g.rejected,
+            inadmissible: g.inadmissible,
             completed: g.completed,
             failed: g.failed,
             deadline_shed: g.deadline_shed,

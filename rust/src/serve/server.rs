@@ -94,6 +94,18 @@ pub trait JobRunner: Send + Sync + 'static {
         let _ = queued;
         self.run(job)
     }
+
+    /// Admission-time validation, called by the connection reader when
+    /// a request parses, *before* it enters the router. An `Err` is
+    /// answered immediately with the error's wire code and the job
+    /// never queues, never reaches a worker, and never acquires a
+    /// fleet lease — this is where inexecutable resolutions are shed
+    /// with `bad_spec`. The default admits everything (stub runners,
+    /// plain harnesses).
+    fn admit(&self, job: &Job) -> Result<()> {
+        let _ = job;
+        Ok(())
+    }
 }
 
 /// Production runner: one fresh [`Session`](crate::coordinator::Session)
@@ -171,6 +183,14 @@ impl SessionRunner {
 impl JobRunner for SessionRunner {
     fn run(&self, job: &Job) -> (bool, String) {
         self.run_with_load(job, 0)
+    }
+
+    /// Admission gate: a spec the engine cannot execute (field ranges,
+    /// misaligned sizes, unregistered resolutions) is rejected at
+    /// parse time — wire code `bad_spec` — instead of deep in the
+    /// engine after a lease was already acquired.
+    fn admit(&self, job: &Job) -> Result<()> {
+        self.core.check_spec(&job.spec)
     }
 
     fn run_with_load(&self, job: &Job, queued: usize) -> (bool, String) {
@@ -387,8 +407,9 @@ pub fn serve_with_stats(
             Ok((stream, _peer)) => {
                 let router = Arc::clone(&router);
                 let done = Arc::clone(&done);
+                let runner = Arc::clone(&runner);
                 conns.push(thread::spawn(move || {
-                    handle_connection(stream, &router, &done);
+                    handle_connection(stream, &router, &done, &runner);
                 }));
             }
             Err(e) if e.kind() == ErrorKind::WouldBlock => {
@@ -421,9 +442,11 @@ pub fn serve_with_stats(
     // figures are available structured on the returned RouterStats.
     crate::log_info!(
         "serve",
-        "done: admitted={} rejected={} completed={} failed={} ({})",
+        "done: admitted={} rejected={} inadmissible={} completed={} \
+         failed={} ({})",
         s.admitted,
         s.rejected,
+        s.inadmissible,
         s.completed,
         s.failed,
         s.latency_summary
@@ -454,12 +477,14 @@ fn close_and_answer(router: &Router<Ticket>) -> usize {
 }
 
 /// Reader half of one connection: parse lines, assign each a sequence
-/// number, enqueue (or answer immediately on parse error / busy).
-/// Spawns the writer half that restores per-connection FIFO order.
+/// number, validate admission with the runner, enqueue (or answer
+/// immediately on parse error / inadmissible spec / busy). Spawns the
+/// writer half that restores per-connection FIFO order.
 fn handle_connection(
     stream: TcpStream,
     router: &Router<Ticket>,
     done: &AtomicBool,
+    runner: &Arc<dyn JobRunner>,
 ) {
     let peer = stream
         .peer_addr()
@@ -512,16 +537,29 @@ fn handle_connection(
                         Ok(req) => {
                             // Deadlines are stamped here, at admission:
                             // queueing time counts against the SLO.
-                            let ticket = Ticket {
-                                job: Job::new(req.id.clone(), req.spec),
-                                seq: this_seq,
-                                reply: tx.clone(),
-                            };
-                            if let Err(e) = router.submit(ticket) {
+                            let job = Job::new(req.id.clone(), req.spec);
+                            // Admission gate: a job the runner cannot
+                            // execute (e.g. an unregistered
+                            // resolution) is answered now and never
+                            // queues or leases GPUs.
+                            if let Err(e) = runner.admit(&job) {
+                                router.record_inadmissible();
                                 let _ = tx.send((
                                     this_seq,
-                                    protocol::error_line(&req.id, &e),
+                                    protocol::error_line(&job.id, &e),
                                 ));
+                            } else {
+                                let ticket = Ticket {
+                                    job,
+                                    seq: this_seq,
+                                    reply: tx.clone(),
+                                };
+                                if let Err(e) = router.submit(ticket) {
+                                    let _ = tx.send((
+                                        this_seq,
+                                        protocol::error_line(&req.id, &e),
+                                    ));
+                                }
                             }
                         }
                         Err(e) => {

@@ -356,6 +356,11 @@ pub struct WorkloadClass {
     pub priority: u8,
     /// Relative deadline from arrival; `None` = no SLO.
     pub deadline_s: Option<f64>,
+    /// Output resolution in pixels (height, width) when this class
+    /// models one request size of a mixed-resolution sweep; `None`
+    /// for size-agnostic classes. Flows into the stats JSON so sweeps
+    /// stay self-describing.
+    pub resolution: Option<(usize, usize)>,
 }
 
 /// Queue discipline under simulation: the old FIFO router vs the
@@ -372,6 +377,8 @@ pub enum Discipline {
 #[derive(Debug, Clone)]
 pub struct ClassStats {
     pub name: String,
+    /// Echo of the class's resolution label, if any.
+    pub resolution: Option<(usize, usize)>,
     pub arrived: usize,
     pub completed: usize,
     /// Shed on dequeue, after the deadline passed in queue
@@ -403,6 +410,66 @@ impl MixedStats {
             .iter()
             .find(|c| c.name == name)
             .unwrap_or_else(|| panic!("no class {name:?}"))
+    }
+
+    /// Structured stats for bench output files. Field order is fixed
+    /// and every number is computed deterministically from the seeded
+    /// DES, so two runs at the same seed serialize byte-identically —
+    /// pinned by a regression test.
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::{Object, Value};
+        let mut o = Object::new();
+        o.insert(
+            "discipline",
+            Value::Str(
+                match self.discipline {
+                    Discipline::Fifo => "fifo",
+                    Discipline::PriorityEdf => "priority_edf",
+                }
+                .into(),
+            ),
+        );
+        o.insert("completed", Value::Num(self.completed as f64));
+        o.insert("shed", Value::Num(self.shed as f64));
+        o.insert("deadlines_met", Value::Num(self.deadlines_met as f64));
+        o.insert(
+            "deadlines_total",
+            Value::Num(self.deadlines_total as f64),
+        );
+        o.insert("throughput_rps", Value::Num(self.throughput_rps));
+        let classes: Vec<Value> = self
+            .per_class
+            .iter()
+            .map(|c| {
+                let mut co = Object::new();
+                co.insert("name", Value::Str(c.name.clone()));
+                if let Some((h, w)) = c.resolution {
+                    co.insert(
+                        "resolution",
+                        Value::Str(format!("{h}x{w}")),
+                    );
+                }
+                co.insert("arrived", Value::Num(c.arrived as f64));
+                co.insert("completed", Value::Num(c.completed as f64));
+                co.insert("shed", Value::Num(c.shed as f64));
+                co.insert(
+                    "deadlines_met",
+                    Value::Num(c.deadlines_met as f64),
+                );
+                co.insert(
+                    "deadlines_total",
+                    Value::Num(c.deadlines_total as f64),
+                );
+                co.insert(
+                    "mean_sojourn_s",
+                    Value::Num(c.mean_sojourn_s),
+                );
+                co.insert("p95_sojourn_s", Value::Num(c.p95_sojourn_s));
+                Value::Obj(co)
+            })
+            .collect();
+        o.insert("classes", Value::Arr(classes));
+        Value::Obj(o)
     }
 }
 
@@ -522,6 +589,7 @@ pub fn simulate_mixed_workload(
         agg.3 += with_deadline;
         per_class.push(ClassStats {
             name: c.name.clone(),
+            resolution: c.resolution,
             arrived: idx.len(),
             completed: sojourns.len(),
             shed: n_shed,
@@ -812,6 +880,7 @@ mod tests {
                 service_s: 0.08,
                 priority: 2,
                 deadline_s: Some(0.5),
+                resolution: Some((128, 256)),
             },
             WorkloadClass {
                 name: "batch".into(),
@@ -819,8 +888,30 @@ mod tests {
                 service_s: 0.4,
                 priority: 0,
                 deadline_s: None,
+                resolution: Some((256, 256)),
             },
         ]
+    }
+
+    /// Satellite regression: the mixed-resolution DES is a pure
+    /// function of its seed — two runs serialize byte-identically
+    /// (stats JSON included), and a different seed actually changes
+    /// the trajectory (the test isn't vacuous).
+    #[test]
+    fn mixed_resolution_stats_json_is_byte_identical_per_seed() {
+        let classes = mixed_classes();
+        for d in [Discipline::Fifo, Discipline::PriorityEdf] {
+            let a = simulate_mixed_workload(6.0, 300, &classes, d, 2, 42);
+            let b = simulate_mixed_workload(6.0, 300, &classes, d, 2, 42);
+            let ja = crate::util::json::to_string(&a.to_json());
+            let jb = crate::util::json::to_string(&b.to_json());
+            assert_eq!(ja, jb, "{d:?} DES drifted across identical runs");
+            // Resolutions are echoed into the JSON.
+            assert!(ja.contains("\"resolution\":\"128x256\""), "{ja}");
+            let c = simulate_mixed_workload(6.0, 300, &classes, d, 2, 43);
+            let jc = crate::util::json::to_string(&c.to_json());
+            assert_ne!(ja, jc, "{d:?} seed does not reach the DES");
+        }
     }
 
     #[test]

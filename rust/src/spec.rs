@@ -18,10 +18,12 @@
 //!
 //! Resolution note: latent rows = `height / VAE_FACTOR`. Planning and
 //! latency prediction accept any granularity-aligned row count, but
-//! *execution* is limited to the resolution the artifacts were AOT
-//! compiled for — `EngineCore::session_for` rejects non-native sizes
-//! with a typed [`Error::Spec`](crate::error::Error) (wire code
-//! `bad_spec`) instead of producing a wrong-shaped image.
+//! *execution* needs compiled artifacts for the requested latent size
+//! — any resolution in the engine's
+//! [`ArtifactRegistry`](crate::runtime::ArtifactRegistry) executes
+//! end-to-end, and unregistered sizes are rejected at admission with a
+//! typed [`Error::Spec`](crate::error::Error) (wire code `bad_spec`)
+//! instead of producing a wrong-shaped image.
 
 use crate::error::{Error, Result};
 use crate::util::json::{Object, Value};
@@ -261,6 +263,15 @@ impl GenerationSpec {
         match self.height_px {
             Some(h) => h / VAE_FACTOR,
             None => native_rows,
+        }
+    }
+
+    /// Latent columns this request renders (`width / VAE_FACTOR`;
+    /// native when unset).
+    pub fn latent_cols(&self, native_cols: usize) -> usize {
+        match self.width_px {
+            Some(w) => w / VAE_FACTOR,
+            None => native_cols,
         }
     }
 

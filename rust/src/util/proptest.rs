@@ -5,8 +5,30 @@
 //! implementation and panics with the minimal counterexample. Used for
 //! the coordinator invariants (routing, batching, scheduling state) as
 //! the brief requires.
+//!
+//! Seeding: each call site passes a fixed default seed, and the
+//! `QUICKCHECK_SEED` environment variable overrides it globally — CI
+//! sets a per-run value so every run explores a different slice of
+//! the input space, and a failure's panic message names the exact
+//! seed to re-run with (`QUICKCHECK_SEED=<n> cargo test <name>`).
 
 use crate::util::rng::Pcg32;
+
+/// The seed `forall` will actually use: the `QUICKCHECK_SEED` env
+/// override when set (empty = unset), else the call site's default.
+/// A set-but-unparseable value panics — silently falling back to the
+/// default would make "re-run with QUICKCHECK_SEED=<seed>" look like
+/// the CI failure was a flake when the seed was merely mistyped.
+pub fn effective_seed(default: u64) -> u64 {
+    match std::env::var("QUICKCHECK_SEED") {
+        Ok(s) if !s.trim().is_empty() => {
+            s.trim().parse::<u64>().unwrap_or_else(|_| {
+                panic!("QUICKCHECK_SEED={s:?} is not a u64 seed")
+            })
+        }
+        _ => default,
+    }
+}
 
 /// Types that can propose smaller versions of themselves.
 pub trait Shrink: Sized + Clone + std::fmt::Debug {
@@ -105,20 +127,25 @@ pub fn ensure(cond: bool, msg: impl Into<String>) -> Check {
     }
 }
 
-/// Run `prop` on `cases` inputs from `gen`; shrink on failure.
+/// Run `prop` on `cases` inputs from `gen`; shrink on failure. The
+/// seed is the call site's default unless `QUICKCHECK_SEED` overrides
+/// it (see [`effective_seed`]); failures print the seed that
+/// reproduces them.
 pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, prop: P)
 where
     T: Shrink,
     G: FnMut(&mut Pcg32) -> T,
     P: Fn(&T) -> Check,
 {
+    let seed = effective_seed(seed);
     let mut rng = Pcg32::new(seed);
     for case in 0..cases {
         let input = gen(&mut rng);
         if let Err(msg) = prop(&input) {
             let (min_input, min_msg) = shrink_loop(input, msg, &prop);
             panic!(
-                "property failed (case {case}/{cases}, seed {seed}):\n  \
+                "property failed (case {case}/{cases}, seed {seed} — \
+                 rerun with QUICKCHECK_SEED={seed}):\n  \
                  counterexample: {min_input:?}\n  reason: {min_msg}"
             );
         }
@@ -183,6 +210,23 @@ mod tests {
             |rng| rng.below(1000) as usize,
             |&x| ensure(x < 10, format!("{x} >= 10")),
         );
+    }
+
+    /// No env mutation (tests run concurrently): assert consistency
+    /// with whatever the environment actually says. An unparseable
+    /// env seed makes `effective_seed` itself panic loudly, which is
+    /// the contract.
+    #[test]
+    fn effective_seed_prefers_env_override() {
+        match std::env::var("QUICKCHECK_SEED") {
+            Ok(s) if !s.trim().is_empty() => assert_eq!(
+                effective_seed(123),
+                s.trim().parse::<u64>().expect(
+                    "QUICKCHECK_SEED set but not a u64 — fix the env"
+                )
+            ),
+            _ => assert_eq!(effective_seed(123), 123),
+        }
     }
 
     #[test]

@@ -1,0 +1,303 @@
+//! Multi-resolution execution, end to end on the stub runtime.
+//!
+//! These tests run on every build: they generate a synthetic
+//! multi-resolution artifact set (`runtime::stubgen`) into a temp
+//! directory and drive the *real* engine — registry, planner, plan
+//! cache, sessions, executors, serve stack, fleet — through the
+//! deterministic stub backend. They pin the PR's acceptance criteria:
+//!
+//! * a v2 request at a registered non-native resolution executes end
+//!   to end (latent sums pinned deterministic);
+//! * an unregistered resolution is shed at admission with `bad_spec`
+//!   and never acquires a fleet lease;
+//! * the resolution-keyed `PlanCache` stays consistent while mixed
+//!   resolutions hammer `plan_for` racing `calibrate`'s epoch-fenced
+//!   clear, and native-spec keys still hit the default-path cache
+//!   entries (cache-warm golden).
+
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use stadi::config::{EngineConfig, StadiParams};
+use stadi::coordinator::EngineCore;
+use stadi::fleet::FixedGang;
+use stadi::runtime::stubgen;
+use stadi::serve::server::{serve_with_stats, Client, ServeOptions, SessionRunner};
+use stadi::spec::GenerationSpec;
+use stadi::util::json;
+
+/// Write a fresh stub artifact set (native 32x32 latent + 16x32 +
+/// 48x32) into a per-test temp dir.
+fn stub_artifacts(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "stadi-multires-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    stubgen::write_stub_artifacts(&dir, stubgen::DEFAULT_EXTRA_RESOLUTIONS)
+        .unwrap();
+    dir
+}
+
+fn config(dir: &Path) -> EngineConfig {
+    let mut cfg = EngineConfig::two_gpu_default(dir, &[0.0, 0.4]);
+    cfg.stadi = StadiParams { m_base: 6, m_warmup: 2, ..Default::default() };
+    cfg
+}
+
+/// Acceptance criterion: a non-native but registered resolution
+/// executes end to end, deterministically; the latent has the
+/// requested shape; unregistered sizes stay typed rejections.
+#[test]
+fn registered_non_native_resolution_executes_end_to_end() {
+    let dir = stub_artifacts("e2e");
+    // 128x256px -> 16x32 latent: registered by the stub set.
+    let spec = GenerationSpec::new().seed(11).size(128, 256);
+
+    let run = || {
+        let core = EngineCore::new(config(&dir)).unwrap();
+        core.generate(&spec).unwrap()
+    };
+    let a = run();
+    assert_eq!(a.latent.shape, vec![16, 32, 4]);
+    assert_eq!(a.plan.total_rows(), 16);
+    assert!(a.timeline.total_s > 0.0);
+    assert!(a.latent.abs_sum() > 0.0);
+    // Pinned: a fresh engine with the same config and spec reproduces
+    // the latent bit for bit (fresh profiler -> same plan -> same
+    // deterministic stub numerics). A literal golden value would pin
+    // the stub's *arbitrary* arithmetic — an implementation detail —
+    // so the contract pinned here is determinism plus executor
+    // agreement (below), the properties real artifacts also carry.
+    let b = run();
+    assert_eq!(a.latent, b.latent, "non-native execution not pinned");
+    // Cross-executor pin: the threaded executor must reproduce the
+    // dataflow numerics bit-exactly at non-native resolutions too —
+    // an independent check that catches stub/executor drift.
+    let mut tcfg = config(&dir);
+    tcfg.mode = stadi::config::ExecMode::Threaded;
+    let th = EngineCore::new(tcfg).unwrap().generate(&spec).unwrap();
+    assert_eq!(
+        a.latent, th.latent,
+        "threaded and dataflow numerics diverge at 16x32"
+    );
+    // A different seed renders a different image at the same size.
+    let core = EngineCore::new(config(&dir)).unwrap();
+    let c = core.generate(&spec.clone().seed(12)).unwrap();
+    assert!(a.latent.max_abs_diff(&c.latent) > 1e-4);
+
+    // The high-res registered size executes too.
+    let hi = core
+        .generate(&GenerationSpec::new().seed(5).size(384, 256))
+        .unwrap();
+    assert_eq!(hi.latent.shape, vec![48, 32, 4]);
+    // Native still works and still renders native-shaped latents.
+    let native = core.generate(&GenerationSpec::new().seed(5)).unwrap();
+    assert_eq!(native.latent.shape, vec![32, 32, 4]);
+
+    // Unregistered (but plannable) sizes: typed Error::Spec from both
+    // session_for and generate; prediction still prices them.
+    let odd = GenerationSpec::new().size(192, 256); // 24x32: not compiled
+    assert!(core.predict_latency_for(&odd, &[0, 1]).unwrap() > 0.0);
+    let e = core.session_for(&odd).unwrap_err();
+    assert!(matches!(e, stadi::error::Error::Spec(_)), "{e}");
+    assert_eq!(e.wire_code(), "bad_spec");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The predictor prices width, not just rows: same latent rows, wider
+/// canvas, strictly more predicted seconds.
+#[test]
+fn predictor_scales_with_width_and_rows() {
+    let dir = stub_artifacts("pred");
+    let core = EngineCore::new(config(&dir)).unwrap();
+    let devs = [0usize, 1];
+    let native = core
+        .predict_latency_for(&GenerationSpec::new(), &devs)
+        .unwrap();
+    let half_rows = core
+        .predict_latency_for(&GenerationSpec::new().size(128, 256), &devs)
+        .unwrap();
+    let wide = core
+        .predict_latency_for(&GenerationSpec::new().size(256, 512), &devs)
+        .unwrap();
+    assert!(
+        half_rows < native,
+        "fewer rows should predict cheaper: {half_rows} vs {native}"
+    );
+    assert!(
+        wide > native,
+        "double width should predict dearer: {wide} vs {native}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: v2 serving over TCP on the stub runtime. A registered
+/// non-native request executes and echoes its spec; an unregistered
+/// resolution is rejected at admission with `bad_spec`, is never
+/// admitted to the router, and never acquires a fleet lease.
+#[test]
+fn serve_rejects_unregistered_resolution_before_any_lease() {
+    let dir = stub_artifacts("serve");
+    let core = EngineCore::new(config(&dir)).unwrap();
+    let fleet = core.fleet();
+    let runner = SessionRunner::with_fleet(
+        Arc::clone(&core),
+        fleet.clone(),
+        Arc::new(FixedGang(1)),
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let stop = Arc::clone(&stop);
+        thread::spawn(move || {
+            serve_with_stats(
+                Arc::new(runner),
+                listener,
+                ServeOptions {
+                    queue_capacity: 8,
+                    workers: 1,
+                    max_requests: 0,
+                    ..ServeOptions::default()
+                },
+                Some(stop),
+            )
+        })
+    };
+
+    let mut client = Client::connect(&addr).unwrap();
+    // Unregistered resolution first: rejected at admission.
+    let bad = GenerationSpec::new().seed(1).size(192, 256);
+    let line = client.request_spec("bad", &bad).unwrap();
+    let v = json::parse(&line).unwrap();
+    assert!(!v.get("ok").unwrap().as_bool().unwrap(), "{line}");
+    assert_eq!(v.get("code").unwrap().as_str().unwrap(), "bad_spec");
+    // ...and the fleet ledger never granted a lease for it.
+    assert_eq!(
+        fleet.granted_total(),
+        0,
+        "inadmissible request acquired a lease"
+    );
+
+    // A registered non-native request executes and echoes its spec.
+    let good = GenerationSpec::new().seed(21).size(128, 256);
+    let line = client.request_spec("good", &good).unwrap();
+    let v = json::parse(&line).unwrap();
+    assert!(v.get("ok").unwrap().as_bool().unwrap(), "{line}");
+    let echoed = v.get("spec").unwrap();
+    assert_eq!(echoed.get("height").unwrap().as_usize().unwrap(), 128);
+    assert_eq!(echoed.get("width").unwrap().as_usize().unwrap(), 256);
+    assert_eq!(echoed.get("seed").unwrap().as_usize().unwrap(), 21);
+    assert!(v.get("latent_sum").unwrap().as_f64().unwrap().is_finite());
+    assert!(fleet.granted_total() >= 1);
+    drop(client);
+
+    stop.store(true, Ordering::SeqCst);
+    let (handled, stats) = server.join().unwrap().unwrap();
+    // The inadmissible request never entered the router (it is
+    // counted in its own statistic): one admitted, one executed,
+    // nothing failed inside the engine.
+    assert_eq!(handled, 1);
+    assert_eq!(stats.admitted, 1);
+    assert_eq!(stats.inadmissible, 1);
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.failed, 0);
+    // The fleet is whole after shutdown.
+    assert_eq!(fleet.in_flight(), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: the resolution-keyed plan cache under concurrency.
+/// Mixed-resolution `plan_for` traffic hammers the cache while the
+/// main thread repeatedly `calibrate`s (each calibrate swaps the cost
+/// model and epoch-fences the cache). Every returned plan must match
+/// its spec's shape, stats must reconcile, and after a final calibrate
+/// a fresh build is observed (no stale plan survives the clear).
+#[test]
+fn plan_cache_survives_mixed_resolution_hammer_racing_calibrate() {
+    let dir = stub_artifacts("cache");
+    let mut cfg = config(&dir);
+    // Cost-aware mending makes plans depend on the calibrated cost
+    // model — the staleness the epoch fence exists to keep out.
+    cfg.stadi.cost_aware = true;
+    let core = EngineCore::new(cfg).unwrap();
+
+    let specs: Vec<(GenerationSpec, usize)> = vec![
+        (GenerationSpec::new(), 32),
+        (GenerationSpec::new().size(128, 256), 16),
+        (GenerationSpec::new().size(384, 256), 48),
+        (GenerationSpec::new().steps(4).size(128, 256), 16),
+    ];
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut hammers = Vec::new();
+    for t in 0..4usize {
+        let core = Arc::clone(&core);
+        let specs = specs.clone();
+        let stop = Arc::clone(&stop);
+        hammers.push(thread::spawn(move || {
+            let mut calls = 0u64;
+            let mut i = t; // stagger the per-thread spec order
+            while !stop.load(Ordering::Relaxed) {
+                let (spec, rows) = &specs[i % specs.len()];
+                let plan = core.plan_for(spec).unwrap();
+                assert_eq!(
+                    plan.total_rows(),
+                    *rows,
+                    "plan shape diverged from its spec"
+                );
+                calls += 1;
+                i += 1;
+            }
+            calls
+        }));
+    }
+    // Let the hammers actually populate the cache before racing the
+    // clears (latch on observed traffic, not on timing).
+    loop {
+        let s = core.plan_cache_stats();
+        if s.hits + s.misses >= 8 {
+            break;
+        }
+        thread::yield_now();
+    }
+    for _ in 0..5 {
+        core.calibrate(1).unwrap();
+        thread::yield_now();
+    }
+    stop.store(true, Ordering::SeqCst);
+    let total: u64 = hammers.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(total > 0, "hammers never ran");
+    let s = core.plan_cache_stats();
+    assert_eq!(s.hits + s.misses, total, "cache accounting diverged");
+
+    // After a final clear, the next plan_for must rebuild: a stale
+    // pre-clear plan being re-served would show up as a hit here.
+    core.calibrate(1).unwrap();
+    let before = core.plan_cache_stats();
+    core.plan_for(&specs[1].0).unwrap();
+    let after = core.plan_cache_stats();
+    assert_eq!(
+        after.misses,
+        before.misses + 1,
+        "stale-cost plan survived calibrate's clear"
+    );
+
+    // Cache-warm golden: the default-spec path and the legacy plan()
+    // entry point share one (native, res-free) key — the second call
+    // is a pure hit.
+    core.plan().unwrap(); // builds (or re-hits) the native key
+    let mid = core.plan_cache_stats();
+    core.plan_for(&GenerationSpec::default()).unwrap();
+    let end = core.plan_cache_stats();
+    assert_eq!(
+        end.misses, mid.misses,
+        "native spec key diverged from the default-path key"
+    );
+    assert_eq!(end.hits, mid.hits + 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -339,26 +339,82 @@ fn panicking_job_releases_lease_and_counts_failed() {
     assert_eq!(fleet.in_flight(), 0);
 }
 
-/// Stub whose first job ("gate") blocks until released, recording
-/// execution order — deterministic scaffolding for queue-discipline
-/// tests (everything behind the gate is enqueued before any of it
-/// runs).
+/// One-shot latch: `open()` releases every current and future
+/// `wait()`er. Used instead of sleeps so the queue-discipline tests
+/// synchronize on *events* (gate entered, N requests admitted), not on
+/// wall-clock guesses.
+struct Latch(std::sync::Mutex<bool>, std::sync::Condvar);
+
+impl Latch {
+    fn shared() -> Arc<Latch> {
+        Arc::new(Latch(std::sync::Mutex::new(false), std::sync::Condvar::new()))
+    }
+
+    fn open(&self) {
+        *self.0.lock().unwrap() = true;
+        self.1.notify_all();
+    }
+
+    fn wait(&self) {
+        let mut open = self.0.lock().unwrap();
+        while !*open {
+            open = self.1.wait(open).unwrap();
+        }
+    }
+}
+
+/// Stub whose "gate" job blocks until released, recording execution
+/// order — deterministic scaffolding for queue-discipline tests
+/// (everything behind the gate is enqueued before any of it runs).
+/// `entered` opens when the gate job starts executing (the worker is
+/// definitely pinned); `admitted` counts admission-validated requests
+/// so tests can wait until the queue holds exactly what they sent.
 struct GatedRunner {
-    release: Arc<(std::sync::Mutex<bool>, std::sync::Condvar)>,
+    release: Arc<Latch>,
+    entered: Arc<Latch>,
+    admitted: Arc<(std::sync::Mutex<usize>, std::sync::Condvar)>,
     order: Arc<std::sync::Mutex<Vec<String>>>,
+}
+
+impl GatedRunner {
+    fn new() -> GatedRunner {
+        GatedRunner {
+            release: Latch::shared(),
+            entered: Latch::shared(),
+            admitted: Arc::new((
+                std::sync::Mutex::new(0),
+                std::sync::Condvar::new(),
+            )),
+            order: Arc::new(std::sync::Mutex::new(Vec::new())),
+        }
+    }
+
+    /// Block until `n` requests have passed admission (are queued or
+    /// executing).
+    fn wait_admitted(&self, n: usize) {
+        let (lock, cv) = &*self.admitted;
+        let mut count = lock.lock().unwrap();
+        while *count < n {
+            count = cv.wait(count).unwrap();
+        }
+    }
 }
 
 impl JobRunner for GatedRunner {
     fn run(&self, job: &Job) -> (bool, String) {
         if job.id == "gate" {
-            let (lock, cv) = &*self.release;
-            let mut open = lock.lock().unwrap();
-            while !*open {
-                open = cv.wait(open).unwrap();
-            }
+            self.entered.open();
+            self.release.wait();
         }
         self.order.lock().unwrap().push(job.id.clone());
         (true, format!("{{\"id\": \"{}\", \"ok\": true}}", job.id))
+    }
+
+    fn admit(&self, _job: &Job) -> stadi::error::Result<()> {
+        let (lock, cv) = &*self.admitted;
+        *lock.lock().unwrap() += 1;
+        cv.notify_all();
+        Ok(())
     }
 }
 
@@ -368,44 +424,38 @@ impl JobRunner for GatedRunner {
 /// submission order (the per-connection reorder buffer).
 #[test]
 fn high_priority_requests_execute_before_queued_low_priority() {
-    let release = Arc::new((
-        std::sync::Mutex::new(false),
-        std::sync::Condvar::new(),
-    ));
-    let order = Arc::new(std::sync::Mutex::new(Vec::new()));
+    let runner = Arc::new(GatedRunner::new());
+    let order = Arc::clone(&runner.order);
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
     let stop = Arc::new(AtomicBool::new(false));
     let server = {
         let stop = Arc::clone(&stop);
-        let runner = GatedRunner {
-            release: Arc::clone(&release),
-            order: Arc::clone(&order),
-        };
+        let runner: Arc<dyn JobRunner> = Arc::clone(&runner);
         thread::spawn(move || {
-            serve_with(Arc::new(runner), listener, opts(8, 1, 0), Some(stop))
+            serve_with(runner, listener, opts(8, 1, 0), Some(stop))
         })
     };
 
     let mut client = Client::connect(&addr).unwrap();
     client.send("gate", 0).unwrap();
-    // Give the (only) worker time to pick up the gate job, so the
-    // next three all queue behind it.
-    thread::sleep(Duration::from_millis(100));
+    // The (only) worker signals when it is pinned at the gate, so the
+    // next four all queue behind it — no timing guesses.
+    runner.entered.wait();
     let lo = GenerationSpec::new().priority(Priority::Low);
     let hi = GenerationSpec::new().priority(Priority::High);
     client.send_spec("low1", &lo).unwrap();
     client.send_spec("low2", &lo).unwrap();
     client.send_spec("high", &hi).unwrap();
-    thread::sleep(Duration::from_millis(100));
-    {
-        let (lock, cv) = &*release;
-        *lock.lock().unwrap() = true;
-        cv.notify_all();
-    }
+    // The fence is admitted strictly after "high" was *submitted* (one
+    // reader thread handles the connection's lines in order), so once
+    // it passes admission the interesting three are all queued.
+    client.send_spec("fence", &lo).unwrap();
+    runner.wait_admitted(5);
+    runner.release.open();
     // Responses come back in submission order regardless of execution
     // order (per-connection FIFO), all ok.
-    for want in ["gate", "low1", "low2", "high"] {
+    for want in ["gate", "low1", "low2", "high", "fence"] {
         let line = client.read_line().unwrap();
         let v = json::parse(&line).unwrap();
         assert!(v.get("ok").unwrap().as_bool().unwrap(), "{line}");
@@ -413,10 +463,11 @@ fn high_priority_requests_execute_before_queued_low_priority() {
     }
     stop.store(true, Ordering::SeqCst);
     server.join().unwrap().unwrap();
-    // Execution order: the high-priority job jumped both queued lows.
+    // Execution order: the high-priority job jumped both queued lows
+    // (and the same-rank fence stayed FIFO behind them).
     assert_eq!(
         *order.lock().unwrap(),
-        vec!["gate", "high", "low1", "low2"],
+        vec!["gate", "high", "low1", "low2", "fence"],
     );
 }
 
@@ -425,44 +476,36 @@ fn high_priority_requests_execute_before_queued_low_priority() {
 /// counted in `RouterStats::deadline_shed`.
 #[test]
 fn expired_deadline_is_shed_with_typed_code() {
-    let release = Arc::new((
-        std::sync::Mutex::new(false),
-        std::sync::Condvar::new(),
-    ));
-    let order = Arc::new(std::sync::Mutex::new(Vec::new()));
+    let runner = Arc::new(GatedRunner::new());
+    let order = Arc::clone(&runner.order);
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
     let stop = Arc::new(AtomicBool::new(false));
     let server = {
         let stop = Arc::clone(&stop);
-        let runner = GatedRunner {
-            release: Arc::clone(&release),
-            order: Arc::clone(&order),
-        };
+        let runner: Arc<dyn JobRunner> = Arc::clone(&runner);
         thread::spawn(move || {
-            serve_with_stats(
-                Arc::new(runner),
-                listener,
-                opts(8, 1, 0),
-                Some(stop),
-            )
+            serve_with_stats(runner, listener, opts(8, 1, 0), Some(stop))
         })
     };
 
     let mut client = Client::connect(&addr).unwrap();
     client.send("gate", 0).unwrap();
-    thread::sleep(Duration::from_millis(100));
-    // 10ms budget, but the worker is held at the gate for ~200ms more:
-    // guaranteed to expire in queue.
+    runner.entered.wait(); // worker pinned at the gate
+    // 10ms budget while the worker is held: guaranteed to expire in
+    // queue. The admission latch anchors the expiry wait to the
+    // moment the deadline was actually stamped, so the only wall
+    // clock left is the (intrinsic) deadline budget itself, waited
+    // out with a 3x margin.
     client
         .send_spec("urgent", &GenerationSpec::new().deadline_s(0.01))
         .unwrap();
-    thread::sleep(Duration::from_millis(200));
-    {
-        let (lock, cv) = &*release;
-        *lock.lock().unwrap() = true;
-        cv.notify_all();
+    runner.wait_admitted(2);
+    let stamped = std::time::Instant::now();
+    while stamped.elapsed() < Duration::from_millis(30) {
+        thread::sleep(Duration::from_millis(5));
     }
+    runner.release.open();
     let line = client.read_line().unwrap();
     let v = json::parse(&line).unwrap();
     assert!(v.get("ok").unwrap().as_bool().unwrap(), "{line}");

@@ -9,14 +9,24 @@
 #                               # real-PJRT feature (requires the real
 #                               # xla crate; see rust/Cargo.toml)
 #
-# The default run still *compile-gates* the xla-backend feature
-# against the offline API stub in rust/xla-stub — API-surface
-# regressions behind the feature fail fast without registry access —
-# and builds the docs (`cargo doc --no-deps` with warnings denied) so
-# broken intra-doc links fail the gate too.
+# The default run executes the test suite TWICE — once with default
+# features and once with `--features xla-backend` against the offline
+# API stub in rust/xla-stub — so feature-gated code (the resolution
+# plumbing included) is compiled AND its always-run tests executed in
+# both configurations; it cannot rot behind the gate. Docs build with
+# warnings denied so broken intra-doc links fail too.
+#
+# Property tests: QUICKCHECK_SEED seeds the `util::proptest` harness
+# (defaults to today's UTC date, so every day explores a fresh slice
+# of the input space). A failing property prints the reproducing seed
+# — re-run with `QUICKCHECK_SEED=<seed> cargo test <name>`.
 
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
+
+QUICKCHECK_SEED="${QUICKCHECK_SEED:-$(date -u +%Y%m%d)}"
+export QUICKCHECK_SEED
+echo "== QUICKCHECK_SEED=$QUICKCHECK_SEED"
 
 FEATURES=()
 if [[ "${1:-}" == "--xla" ]]; then
@@ -35,8 +45,13 @@ cargo build --release "${FEATURES[@]}"
 echo "== cargo test -q"
 cargo test -q "${FEATURES[@]}"
 
-echo "== cargo check --features xla-backend (API-surface gate)"
-cargo check --features xla-backend
+if [[ ${#FEATURES[@]} -eq 0 ]]; then
+    echo "== cargo test -q --features xla-backend (offline API stub)"
+    cargo test -q --features xla-backend
+else
+    echo "== cargo check (default features)"
+    cargo check
+fi
 
 echo "== cargo doc --no-deps"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
