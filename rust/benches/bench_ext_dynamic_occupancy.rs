@@ -13,6 +13,15 @@
 //! Expectation: adaptive tracks the drift (rows/steps shift over the
 //! sequence) and the cumulative latency gap vs static widens as the
 //! drift grows.
+//!
+//! Phase 2 (this PR): the per-request EWMA only helps the *next*
+//! request — a background job landing mid-denoise still runs the
+//! stale split to completion. The in-request ramp below injects a
+//! deterministic occupancy step *inside* a request
+//! (`serve::sim::simulate_drift_strategies`) and compares frozen vs
+//! per-request-EWMA vs mid-flight re-planning (warmup-barrier +
+//! every-K-syncs elastic re-splits), asserting the mid-flight
+//! strategy strictly wins.
 
 use stadi::config::DeviceConfig;
 use stadi::coordinator::timeline;
@@ -142,5 +151,73 @@ fn main() -> stadi::Result<()> {
         "adaptive {cum_adaptive} should beat static {cum_static}"
     );
     expt::save_results("ext_dynamic_occupancy.dat", &dat)?;
+
+    // ---- Phase 2: in-request ramp (mid-flight re-planning) ----------
+    // A background job lands on GPU1 a third of the way into each
+    // request's fast grid: the EWMA loop above cannot react until the
+    // next request, the mid-flight re-planner fixes the tail of the
+    // same request.
+    let ramp_at = params.m_base / 3;
+    let scenario = stadi::serve::sim::DriftScenario {
+        requests: 4,
+        drift: stadi::device::OccupancySchedule::parse(&format!(
+            "0@0;0@0,0.6@{ramp_at}"
+        ))?,
+        replan: stadi::config::ReplanConfig {
+            enabled: true,
+            every_k_syncs: 4,
+            drift_threshold: 0.1,
+        },
+    };
+    let cmp = stadi::serve::sim::simulate_drift_strategies(
+        &schedule,
+        &params,
+        &[
+            DeviceConfig::new("gpu0", 1.0, 0.0),
+            DeviceConfig::new("gpu1", 1.0, 0.0),
+        ],
+        cost,
+        &comm,
+        &model,
+        &scenario,
+    )?;
+    let mut t2 = Table::new(&[
+        "strategy", "total (s)", "req0", "req3", "replans", "migrated rows",
+    ]);
+    for (name, s) in [
+        ("frozen", &cmp.frozen),
+        ("per-request EWMA", &cmp.ewma),
+        ("mid-flight", &cmp.midflight),
+    ] {
+        t2.row(&[
+            name.to_string(),
+            format!("{:.3}", s.total_s),
+            format!("{:.3}", s.per_request_s[0]),
+            format!("{:.3}", s.per_request_s[3]),
+            format!("{}", s.replans),
+            format!("{}", s.migrated_rows),
+        ]);
+    }
+    println!("\nin-request occupancy ramp (0 -> 60% at fast step {ramp_at}):");
+    t2.print();
+    println!(
+        "mid-flight saves {:.1}% vs frozen, {:.1}% vs EWMA-only",
+        (1.0 - cmp.midflight.total_s / cmp.frozen.total_s) * 100.0,
+        (1.0 - cmp.midflight.total_s / cmp.ewma.total_s) * 100.0
+    );
+    assert!(
+        cmp.midflight.total_s < cmp.frozen.total_s,
+        "mid-flight {} should strictly beat frozen {}",
+        cmp.midflight.total_s,
+        cmp.frozen.total_s
+    );
+    assert!(
+        cmp.midflight.replans >= 1,
+        "the ramp must trigger at least one in-request re-plan"
+    );
+    expt::save_results(
+        "ext_dynamic_occupancy_midflight.json",
+        &stadi::util::json::to_string_pretty(&cmp.to_json()),
+    )?;
     Ok(())
 }

@@ -126,6 +126,36 @@ impl Default for CommConfig {
     }
 }
 
+/// Mid-flight re-planning knobs (EXTENSION past the paper's frozen
+/// plans). When enabled, a session re-reads its *own* measured
+/// per-step timings at the warmup barrier and every `every_k_syncs`
+/// sync points after it; when the live speeds drift past
+/// `drift_threshold` (max relative change vs the speeds the current
+/// plan was built from), it re-runs the Eq. 4 suffix re-quantization
+/// and the Eq. 5 elastic re-split over the *remaining* steps and
+/// continues with migrated patch boundaries. Disabled by default: the
+/// static path stays byte-identical to pre-replan behavior, and a
+/// zero-drift re-plan is a structural no-op (golden-pinned).
+#[derive(Debug, Clone)]
+pub struct ReplanConfig {
+    pub enabled: bool,
+    /// Re-plan cadence after the warmup barrier, in sync points.
+    pub every_k_syncs: usize,
+    /// Max relative per-device speed change that still counts as
+    /// "no drift". 0.0 re-evaluates at every re-plan point.
+    pub drift_threshold: f64,
+}
+
+impl Default for ReplanConfig {
+    fn default() -> Self {
+        ReplanConfig {
+            enabled: false,
+            every_k_syncs: 4,
+            drift_threshold: 0.05,
+        }
+    }
+}
+
 /// How the engine executes a request (DESIGN.md §4).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExecMode {
@@ -145,6 +175,7 @@ pub struct EngineConfig {
     pub stadi: StadiParams,
     pub comm: CommConfig,
     pub mode: ExecMode,
+    pub replan: ReplanConfig,
 }
 
 impl EngineConfig {
@@ -161,6 +192,7 @@ impl EngineConfig {
             stadi: StadiParams::default(),
             comm: CommConfig::default(),
             mode: ExecMode::Dataflow,
+            replan: ReplanConfig::default(),
         }
     }
 
@@ -211,6 +243,18 @@ impl EngineConfig {
         }
         if self.comm.bandwidth_bytes_per_s <= 0.0 || self.comm.latency_s < 0.0 {
             return Err(Error::Config("bad comm cost model".into()));
+        }
+        if self.replan.every_k_syncs == 0 {
+            return Err(Error::Config(
+                "replan.every_k_syncs must be >= 1".into(),
+            ));
+        }
+        if self.replan.drift_threshold < 0.0
+            || self.replan.drift_threshold.is_nan()
+        {
+            return Err(Error::Config(
+                "replan.drift_threshold must be >= 0".into(),
+            ));
         }
         Ok(())
     }
@@ -289,7 +333,26 @@ impl EngineConfig {
             Some("threaded") => ExecMode::Threaded,
             _ => ExecMode::Dataflow,
         };
-        let cfg = EngineConfig { artifacts_dir, devices, stadi, comm, mode };
+        let mut replan = ReplanConfig::default();
+        if let Some(r) = v.get_opt("replan") {
+            if let Some(x) = r.get_opt("enabled") {
+                replan.enabled = x.as_bool()?;
+            }
+            if let Some(x) = r.get_opt("every_k_syncs") {
+                replan.every_k_syncs = x.as_usize()?;
+            }
+            if let Some(x) = r.get_opt("drift_threshold") {
+                replan.drift_threshold = x.as_f64()?;
+            }
+        }
+        let cfg = EngineConfig {
+            artifacts_dir,
+            devices,
+            stadi,
+            comm,
+            mode,
+            replan,
+        };
         cfg.validate()?;
         Ok(cfg)
     }
@@ -369,5 +432,27 @@ mod tests {
     #[test]
     fn json_missing_devices_errors() {
         assert!(EngineConfig::from_json(&json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn replan_defaults_off_and_parses_from_json() {
+        let cfg = EngineConfig::two_gpu_default("artifacts", &[0.0]);
+        assert!(!cfg.replan.enabled, "replan must default off (PR-4 path)");
+        let text = r#"{
+            "devices": [{"name": "g0"}],
+            "replan": {"enabled": true, "every_k_syncs": 2,
+                       "drift_threshold": 0.1}
+        }"#;
+        let cfg = EngineConfig::from_json(&json::parse(text).unwrap()).unwrap();
+        assert!(cfg.replan.enabled);
+        assert_eq!(cfg.replan.every_k_syncs, 2);
+        assert!((cfg.replan.drift_threshold - 0.1).abs() < 1e-12);
+        // Invalid cadence / threshold are typed config errors.
+        let mut bad = EngineConfig::two_gpu_default("a", &[0.0]);
+        bad.replan.every_k_syncs = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = EngineConfig::two_gpu_default("a", &[0.0]);
+        bad.replan.drift_threshold = -0.5;
+        assert!(bad.validate().is_err());
     }
 }

@@ -21,8 +21,9 @@
 use std::sync::{Arc, Mutex, RwLock, Weak};
 
 use crate::config::{EngineConfig, ExecMode, StadiParams};
+use crate::coordinator::session::ReplanEvent;
 use crate::coordinator::{dataflow, timeline, Session};
-use crate::device::{build_cluster, CostModel, SimGpu};
+use crate::device::{build_cluster, CostModel, OccupancySchedule, SimGpu};
 use crate::error::{Error, Result};
 use crate::fleet::{FleetManager, GpuLease};
 use crate::model::schedule::Schedule;
@@ -41,10 +42,18 @@ const PLAN_CACHE_CAPACITY: usize = 128;
 #[derive(Debug)]
 pub struct Generation {
     pub latent: Tensor,
+    /// The plan the request *started* on (re-plans, if any, are
+    /// described by `replans`).
     pub plan: Plan,
     pub stats: dataflow::ExecStats,
-    /// Simulated heterogeneous-cluster latency for this plan.
+    /// Simulated heterogeneous-cluster latency: the static plan's
+    /// timeline, or — for adaptive runs — the drift-aware virtual
+    /// timeline of the path actually executed, migration transfers
+    /// included.
     pub timeline: timeline::Timeline,
+    /// Mid-flight re-plans applied during execution (empty on the
+    /// static path and whenever no drift crossed the threshold).
+    pub replans: Vec<ReplanEvent>,
 }
 
 /// One consistent set of planning inputs: the cache epoch (read
@@ -71,6 +80,11 @@ pub struct EngineCore {
     /// Request-shape keyed plan cache: repeated (steps, rows, gang,
     /// quantized speeds) shapes skip Eq. 4/5. Cleared on `calibrate`.
     plans: PlanCache,
+    /// Deterministic occupancy drift for the virtual clocks:
+    /// `STADI_DRIFT` env override first, else the (stub) manifest's
+    /// `"drift"` table. None on real deployments — sessions then
+    /// detect drift from their own wall-clock step timings.
+    drift: Option<OccupancySchedule>,
     /// Handle to our own `Arc` (constructors only hand out `Arc`s), so
     /// `&self` methods can mint owned clones for sessions without the
     /// unstable `self: &Arc<Self>` receiver.
@@ -95,6 +109,10 @@ impl EngineCore {
         let cluster = build_cluster(&config.devices, cost);
         let profiler = Profiler::new(&config.devices);
         let schedule = Schedule::from_info(&exec.manifest().schedule);
+        let drift = match OccupancySchedule::from_env()? {
+            Some(s) => Some(s),
+            None => exec.manifest().drift.clone(),
+        };
         Ok(Arc::new_cyclic(|self_ref| EngineCore {
             config,
             _service: service,
@@ -103,6 +121,7 @@ impl EngineCore {
             cluster: RwLock::new(cluster),
             profiler: Mutex::new(profiler),
             plans: PlanCache::new(PLAN_CACHE_CAPACITY),
+            drift,
             self_ref: self_ref.clone(),
         }))
     }
@@ -138,6 +157,13 @@ impl EngineCore {
     /// Snapshot of the simulated cluster.
     pub fn cluster(&self) -> Vec<SimGpu> {
         self.cluster.read().unwrap().clone()
+    }
+
+    /// The deterministic occupancy drift schedule driving this
+    /// engine's virtual clocks (env `STADI_DRIFT` over the manifest's
+    /// `"drift"` table), if any.
+    pub fn drift_schedule(&self) -> Option<&OccupancySchedule> {
+        self.drift.as_ref()
     }
 
     pub fn schedule(&self) -> &Schedule {

@@ -74,9 +74,58 @@ pub fn execute_at(
     noise: &Tensor,
     cond: &[f32],
 ) -> Result<RequestOutput> {
-    let model = model.clone();
-    let n_dev = plan.devices.len();
+    let mut st = ExecState::new(model, plan.devices.len(), noise);
+    run_span(exec, res, model, plan, &mut st, plan.sync_points.len(), cond)?;
+    finish(plan, st)
+}
 
+/// Checkpointable executor state: full per-device buffers, per-plan
+/// step cursors and cumulative stats. At a sync barrier every included
+/// device's buffers are fully fresh (the exchange just ran), which is
+/// exactly what lets a mid-flight re-plan migrate row ownership and
+/// continue on the same state — see `Session::execute`'s adaptive
+/// loop. Shared by the dataflow and threaded executors.
+pub struct ExecState {
+    pub bufs: Vec<DeviceBuffers>,
+    /// Per-device step cursor within the *current* plan.
+    pub cursor: Vec<usize>,
+    pub stats: ExecStats,
+}
+
+impl ExecState {
+    pub fn new(model: &ModelInfo, n_dev: usize, noise: &Tensor) -> Self {
+        ExecState {
+            bufs: (0..n_dev)
+                .map(|_| DeviceBuffers::new(model, noise))
+                .collect(),
+            cursor: vec![0; n_dev],
+            stats: ExecStats {
+                compute_s: vec![0.0; n_dev],
+                steps_run: vec![0; n_dev],
+                ..Default::default()
+            },
+        }
+    }
+
+    /// Switch to a re-planned continuation: cursors reset, buffers and
+    /// stats persist (the new plan's devices line up index-for-index).
+    pub fn reset_cursors(&mut self) {
+        for c in self.cursor.iter_mut() {
+            *c = 0;
+        }
+    }
+}
+
+/// Run `n_syncs` sync intervals of `plan` from `st`'s position.
+pub fn run_span(
+    exec: &ExecHandle,
+    res: ResKey,
+    model: &ModelInfo,
+    plan: &Plan,
+    st: &mut ExecState,
+    n_syncs: usize,
+    cond: &[f32],
+) -> Result<()> {
     let included: Vec<usize> = plan
         .devices
         .iter()
@@ -86,18 +135,10 @@ pub fn execute_at(
     if included.is_empty() {
         return Err(Error::Sched("no included devices".into()));
     }
-
-    let mut bufs: Vec<DeviceBuffers> = plan
-        .devices
-        .iter()
-        .map(|_| DeviceBuffers::new(&model, noise))
-        .collect();
-    let mut cursor = vec![0usize; n_dev];
-    let mut stats = ExecStats {
-        compute_s: vec![0.0; n_dev],
-        steps_run: vec![0; n_dev],
-        ..Default::default()
-    };
+    if st.bufs.len() != plan.devices.len() {
+        return Err(Error::Sched("state/plan size mismatch".into()));
+    }
+    let ExecState { bufs, cursor, stats } = st;
 
     // Pending per-device publications at the current sync point.
     struct Publish {
@@ -106,11 +147,11 @@ pub fn execute_at(
         kv_block: Tensor,
     }
 
-    for _sync in &plan.sync_points {
+    for _ in 0..n_syncs {
         let mut published: Vec<Publish> = Vec::with_capacity(included.len());
         for &di in &included {
             let dp = &plan.devices[di];
-            let (t0, t1) = token_range(&model, dp.rows);
+            let (t0, t1) = token_range(model, dp.rows);
             // Run local steps up to and including the next sync step.
             loop {
                 let step = dp.steps.get(cursor[di]).ok_or_else(|| {
@@ -165,7 +206,7 @@ pub fn execute_at(
             stats.x_bytes += p.x_patch.byte_len() as u64;
             stats.kv_bytes += p.kv_block.byte_len() as u64;
             let dp = &plan.devices[p.device];
-            let (t0, _) = token_range(&model, dp.rows);
+            let (t0, _) = token_range(model, dp.rows);
             for &dj in &included {
                 if dj == p.device {
                     continue;
@@ -176,23 +217,30 @@ pub fn execute_at(
         }
         stats.syncs += 1;
     }
+    Ok(())
+}
 
-    // All devices drained their programs.
-    for &di in &included {
-        if cursor[di] != plan.devices[di].steps.len() {
+/// Drain-check the final plan and extract the finished request.
+pub fn finish(plan: &Plan, st: ExecState) -> Result<RequestOutput> {
+    // All devices drained their (current-plan) programs.
+    for d in plan.included_devices() {
+        if st.cursor[d.device] != d.steps.len() {
             return Err(Error::Sched(format!(
                 "device {} finished with {}/{} steps",
-                plan.devices[di].name,
-                cursor[di],
-                plan.devices[di].steps.len()
+                d.name,
+                st.cursor[d.device],
+                d.steps.len()
             )));
         }
     }
-
     // Final latent: any device's x is fully fresh after the last
     // gather; take the first included one.
-    let latent = bufs[included[0]].x.clone();
-    Ok(RequestOutput { latent, stats })
+    let first = plan
+        .included_devices()
+        .next()
+        .ok_or_else(|| Error::Sched("no included devices".into()))?;
+    let latent = st.bufs[first.device].x.clone();
+    Ok(RequestOutput { latent, stats: st.stats })
 }
 
 #[cfg(test)]

@@ -23,7 +23,26 @@ use crate::error::Result;
 use crate::model::latents::{seeded_cond, seeded_noise};
 use crate::runtime::artifacts::{ModelInfo, ResKey};
 use crate::sched::plan::Plan;
+use crate::sched::replan::{drift_detected, live_speeds, replan_at_sync};
 use crate::spec::GenerationSpec;
+
+/// One mid-flight re-plan applied by a session's adaptive loop.
+#[derive(Debug, Clone)]
+pub struct ReplanEvent {
+    /// Global sync-point count (across plan switches) at the barrier.
+    pub at_sync: usize,
+    /// The barrier's post-state timestep.
+    pub t_now: Option<usize>,
+    /// Live speeds the re-plan was built from (local device order,
+    /// normalized to max 1).
+    pub live_speeds: Vec<f64>,
+    /// Rows whose owning device changed.
+    pub migrated_rows: usize,
+    /// Conservative migration transfer charged on the virtual clock.
+    pub migration_bytes: u64,
+    /// Did any device change step class (Full/Half/Excluded)?
+    pub classes_changed: bool,
+}
 
 /// A lightweight execution session: plan snapshot + cluster snapshot,
 /// bound to the resolution whose artifacts it executes.
@@ -95,8 +114,14 @@ impl Session {
         self.execute_seeded(spec.seed)
     }
 
-    /// Execute from a bare seed.
+    /// Execute from a bare seed. With `replan.enabled` the execution
+    /// loop is adaptive (see [`Self::execute_adaptive_seeded`]);
+    /// otherwise this is the frozen-plan path, byte-identical to
+    /// pre-replan behavior.
     pub fn execute_seeded(&self, seed: u64) -> Result<Generation> {
+        if self.core.config().replan.enabled {
+            return self.execute_adaptive_seeded(seed);
+        }
         let exec = self.core.exec();
         let model = self.model.clone();
         // Pre-compile every artifact the plan needs so compilation
@@ -175,6 +200,226 @@ impl Session {
             plan: self.plan.clone(),
             stats: out.stats,
             timeline: tl,
+            replans: Vec::new(),
+        })
+    }
+
+    /// Adaptive execution: structure the request into the warmup phase
+    /// plus post-warmup epochs. At the warmup barrier and every
+    /// `every_k_syncs` sync points after it, re-read this request's
+    /// *own* measured per-step timings, and when live speeds drift
+    /// past the threshold re-run the Eq. 4 suffix re-quantization and
+    /// the Eq. 5 elastic re-split over the remaining steps, migrating
+    /// patch boundaries at the barrier (where every included device's
+    /// buffers are fully fresh, so ownership moves are numerically
+    /// free — the timeline still charges the conservative transfer).
+    ///
+    /// Measurement source: with a deterministic drift schedule
+    /// injected (stub manifest / `STADI_DRIFT`), per-step seconds are
+    /// *virtual* — synthesized from the calibrated cost model and the
+    /// schedule — so drift scenarios are byte-reproducible on any
+    /// build; without one, real wall-clock step timings drive
+    /// detection. Everything here is indexed by session-local device
+    /// ids; the lease map translates to global ids only at the drift
+    /// schedule and profiler boundaries (a lease-restricted session
+    /// must react to drift on *its own* global devices, not on
+    /// whichever devices share its local indices).
+    pub fn execute_adaptive_seeded(&self, seed: u64) -> Result<Generation> {
+        let rcfg = self.core.config().replan.clone();
+        let k = rcfg.every_k_syncs.max(1);
+        let exec = self.core.exec();
+        let model = self.model.clone();
+        let schedule = self.core.schedule();
+        let comm = &self.core.config().comm;
+        let drift = self.core.drift_schedule();
+        let granularity = model.row_granularity;
+        let n = self.plan.devices.len();
+
+        // Width pricing identical to the static path: the virtual
+        // clocks run on the per-row-scaled cluster, so reported and
+        // predicted latency cannot drift apart.
+        let width_ratio = self.model.latent_w as f64
+            / exec.manifest().model.latent_w as f64;
+        let tl_cluster =
+            crate::device::scale_cluster_per_row(&self.cluster, width_ratio);
+        let tl_costs: Vec<crate::device::CostModel> =
+            tl_cluster.iter().map(|g| g.cost).collect();
+
+        // Pre-compile every height the initial plan needs; re-plans
+        // warm new heights at their barrier (below), so compilation
+        // never lands inside measured step times.
+        let mut warmed: std::collections::BTreeSet<usize> = self
+            .plan
+            .included_devices()
+            .map(|d| d.rows.rows)
+            .collect();
+        let heights: Vec<usize> = warmed.iter().copied().collect();
+        exec.warm_res(self.res, &heights)?;
+
+        let noise = seeded_noise(&model, seed);
+        let cond = seeded_cond(&model, seed);
+
+        let mut st = dataflow::ExecState::new(&model, n, &noise);
+        let mut sim = timeline::SimState::new(n);
+        let mut cur = self.plan.clone();
+        let mut events: Vec<ReplanEvent> = Vec::new();
+        let mut rows_run = vec![0usize; n];
+        let mut synced_in_cur = 0usize;
+        let mut global_sync = 0usize;
+        let warmup_syncs = cur.params.m_warmup;
+        let mut next_replan =
+            if warmup_syncs > 0 { warmup_syncs } else { k };
+
+        loop {
+            let remaining = cur.sync_points.len() - synced_in_cur;
+            if remaining == 0 {
+                break;
+            }
+            let span = next_replan
+                .saturating_sub(global_sync)
+                .max(1)
+                .min(remaining);
+
+            let steps_before = st.stats.steps_run.clone();
+            let busy_before = sim.busy.clone();
+            let wall_before = st.stats.compute_s.clone();
+
+            match self.core.mode() {
+                ExecMode::Dataflow => dataflow::run_span(
+                    exec, self.res, &model, &cur, &mut st, span, &cond,
+                )?,
+                ExecMode::Threaded => threaded::run_span_at(
+                    exec,
+                    self.res,
+                    &model,
+                    &cur,
+                    &self.cluster,
+                    &cond,
+                    &mut st,
+                    span,
+                    true,
+                )?,
+            }
+            timeline::simulate_span(
+                &cur,
+                &tl_cluster,
+                comm,
+                &model,
+                drift.map(|d| (d, self.device_map.as_slice())),
+                &mut sim,
+                span,
+            )?;
+            for d in cur.included_devices() {
+                let delta =
+                    st.stats.steps_run[d.device] - steps_before[d.device];
+                rows_run[d.device] += d.rows.rows * delta;
+            }
+            global_sync += span;
+            synced_in_cur += span;
+
+            if synced_in_cur >= cur.sync_points.len() {
+                break;
+            }
+            if global_sync < next_replan {
+                continue;
+            }
+            next_replan = global_sync + k;
+
+            // In-request drift detection on this segment's timings.
+            let sec_delta: Vec<f64> = (0..n)
+                .map(|i| {
+                    if drift.is_some() {
+                        sim.busy[i] - busy_before[i]
+                    } else {
+                        st.stats.compute_s[i] - wall_before[i]
+                    }
+                })
+                .collect();
+            let live = live_speeds(
+                &cur,
+                &tl_costs,
+                &steps_before,
+                &st.stats.steps_run,
+                &sec_delta,
+            );
+            if !drift_detected(&cur, &live, rcfg.drift_threshold) {
+                continue;
+            }
+            // The same (unscaled) cost model the static planner's
+            // cost-aware allocator used — zero drift must reproduce
+            // its split exactly, width-scaled timelines or not.
+            let cost_ref = if cur.params.cost_aware {
+                Some(&self.cluster[0].cost)
+            } else {
+                None
+            };
+            let rp = match replan_at_sync(
+                schedule,
+                &cur,
+                synced_in_cur,
+                &live,
+                cost_ref,
+                granularity,
+            )? {
+                Some(rp) => rp,
+                None => {
+                    // Parity deferral: the very next barrier fits.
+                    next_replan = global_sync + 1;
+                    continue;
+                }
+            };
+            if rp.is_structural_noop() {
+                continue;
+            }
+            // Warm newly-introduced patch heights before their steps
+            // are measured.
+            let mut fresh = Vec::new();
+            for d in rp.plan.included_devices() {
+                if warmed.insert(d.rows.rows) {
+                    fresh.push(d.rows.rows);
+                }
+            }
+            if !fresh.is_empty() {
+                exec.warm_res(self.res, &fresh)?;
+            }
+            let bytes = rp.migration_bytes(&model);
+            sim.charge_migration(comm, bytes);
+            events.push(ReplanEvent {
+                at_sync: global_sync,
+                t_now: cur.sync_points[synced_in_cur - 1],
+                live_speeds: live,
+                migrated_rows: rp.migrated_rows,
+                migration_bytes: bytes,
+                classes_changed: rp.classes_changed,
+            });
+            cur = rp.plan;
+            synced_in_cur = 0;
+            st.reset_cursors();
+            sim.switch_plan();
+        }
+
+        let out = dataflow::finish(&cur, st)?;
+        // Profiler feedback under *global* ids, rows normalized to
+        // native-width equivalents — identical to the static path.
+        for i in 0..n {
+            if rows_run[i] > 0 {
+                let rows_eq = ((rows_run[i] as f64 * width_ratio).round()
+                    as usize)
+                    .max(1);
+                self.core.record_step(
+                    self.device_map[i],
+                    rows_eq,
+                    out.stats.compute_s[i],
+                );
+            }
+        }
+        let tl = sim.finish(&self.plan);
+        Ok(Generation {
+            latent: out.latent,
+            plan: self.plan.clone(),
+            stats: out.stats,
+            timeline: tl,
+            replans: events,
         })
     }
 }

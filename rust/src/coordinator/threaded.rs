@@ -24,8 +24,7 @@ use crate::runtime::tensor::Tensor;
 use crate::runtime::ExecHandle;
 use crate::sched::plan::Plan;
 
-use super::buffers::DeviceBuffers;
-use super::dataflow::{ExecStats, RequestOutput};
+use super::dataflow::{ExecState, RequestOutput};
 
 /// Run one request with real worker threads at the native resolution
 /// (the legacy entry point).
@@ -63,7 +62,40 @@ pub fn execute_at(
     cond: &[f32],
     stretch: bool,
 ) -> Result<RequestOutput> {
-    let model = model.clone();
+    let mut st = ExecState::new(model, plan.devices.len(), noise);
+    run_span_at(
+        exec,
+        res,
+        model,
+        plan,
+        cluster,
+        cond,
+        &mut st,
+        plan.sync_points.len(),
+        stretch,
+    )?;
+    super::dataflow::finish(plan, st)
+}
+
+/// Run `n_syncs` sync intervals of `plan` with one scoped worker
+/// thread per included device, from `st`'s position. Workers borrow
+/// their device's buffers, run until they have passed `n_syncs` sync
+/// barriers (the bundled x+KV all-gather), and leave every included
+/// device's buffers fully fresh — which is what lets the adaptive
+/// execution loop re-plan row ownership between spans with numerics
+/// still bit-equal to the dataflow executor.
+#[allow(clippy::too_many_arguments)]
+pub fn run_span_at(
+    exec: &ExecHandle,
+    res: ResKey,
+    model: &ModelInfo,
+    plan: &Plan,
+    cluster: &[SimGpu],
+    cond: &[f32],
+    st: &mut ExecState,
+    n_syncs: usize,
+    stretch: bool,
+) -> Result<()> {
     let included: Vec<usize> = plan
         .devices
         .iter()
@@ -73,123 +105,158 @@ pub fn execute_at(
     if included.is_empty() {
         return Err(Error::Sched("no included devices".into()));
     }
+    if st.bufs.len() != plan.devices.len() {
+        return Err(Error::Sched("state/plan size mismatch".into()));
+    }
     let bus = CollectiveBus::new();
     let cond: Arc<Vec<f32>> = Arc::new(cond.to_vec());
+    let ExecState { bufs, cursor, stats } = st;
+    let cursors: Vec<usize> = cursor.clone();
 
-    let mut handles = Vec::new();
-    for &di in &included {
-        let exec = exec.clone();
-        let cond = Arc::clone(&cond);
-        let bus = bus.clone();
-        let plan_dev = plan.devices[di].clone();
-        let all_devices: Vec<_> = plan.devices.clone();
-        let included = included.clone();
-        let gpu = cluster[di].clone();
-        let model = model.clone();
-        let noise = noise.clone();
-        handles.push(thread::spawn(move || -> Result<(usize, DeviceBuffers, f64, usize)> {
-            let mut bufs = DeviceBuffers::new(&model, &noise);
-            let (t0, t1) = token_range(&model, plan_dev.rows);
-            let mut compute_s = 0.0f64;
-            let mut steps_run = 0usize;
-            for step in &plan_dev.steps {
-                let x_patch =
-                    bufs.x.slice_rows(plan_dev.rows.row0, plan_dev.rows.rows);
-                let t_start = Instant::now();
-                let out = exec.denoise_at(
-                    res,
-                    plan_dev.rows.rows,
-                    &x_patch,
-                    &bufs.kv,
-                    plan_dev.rows.row0,
-                    step.t_from as f64,
-                    &cond,
-                )?;
-                let real = t_start.elapsed().as_secs_f64();
-                compute_s += real;
-                steps_run += 1;
-                if stretch {
-                    gpu.stretch_step(plan_dev.rows.rows, real);
-                }
-
-                bufs.scatter_kv(t0, &out.kv_fresh);
-                sampler::ddim_update_rows(
-                    &mut bufs.x,
-                    &out.eps_patch,
-                    plan_dev.rows.row0,
-                    step.coef,
-                );
-
-                if step.sync {
-                    // One uneven all-gather carries [x_patch || kv
-                    // block]: the x half is the synchronous output
-                    // gather of Alg. 1, the kv half is the buffer
-                    // update. Bundling them in the barrier pins the
-                    // staleness semantics to the *sync point* (a peer
-                    // racing ahead can never leak a fresher buffer
-                    // into this interval), which is what makes
-                    // threaded numerics bit-equal to the dataflow
-                    // executor. Transfer-cost-wise the kv half is
-                    // still modeled as maskable-async by the timeline
-                    // simulator.
-                    let own = bufs
-                        .x
-                        .slice_rows(plan_dev.rows.row0, plan_dev.rows.rows);
-                    let mut payload = own.data;
-                    payload
-                        .extend_from_slice(&bufs.gather_kv(t0, t1 - t0).data);
-                    let gathered = bus.all_gather(
-                        "sync",
-                        plan_dev.device,
-                        &included,
-                        payload,
-                    )?;
-                    for (&peer, data) in &gathered {
-                        if peer == plan_dev.device {
-                            continue;
-                        }
-                        let pr = all_devices[peer].rows;
-                        let x_len =
-                            pr.rows * model.latent_w * model.latent_c;
-                        let patch = Tensor::new(
-                            vec![pr.rows, model.latent_w, model.latent_c],
-                            data[..x_len].to_vec(),
-                        )?;
-                        bufs.x.scatter_rows(pr.row0, &patch);
-                        let (p0, p1) = token_range(&model, pr);
-                        let block = Tensor::new(
-                            vec![model.layers, p1 - p0, 2 * model.dim],
-                            data[x_len..].to_vec(),
-                        )?;
-                        bufs.scatter_kv(p0, &block);
-                    }
-                }
+    let mut results: Vec<(usize, Result<(usize, f64, usize)>)> =
+        Vec::with_capacity(included.len());
+    thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (di, bufs) in bufs.iter_mut().enumerate() {
+            if !plan.devices[di].included() {
+                continue;
             }
-            Ok((plan_dev.device, bufs, compute_s, steps_run))
-        }));
-    }
+            let exec = exec.clone();
+            let cond = Arc::clone(&cond);
+            let bus = bus.clone();
+            let plan_dev = &plan.devices[di];
+            let all_devices = &plan.devices;
+            let included = included.clone();
+            let gpu = &cluster[di];
+            let cursor0 = cursors[di];
+            handles.push((
+                di,
+                scope.spawn(move || -> Result<(usize, f64, usize)> {
+                    let (t0, t1) = token_range(model, plan_dev.rows);
+                    let mut compute_s = 0.0f64;
+                    let mut steps_run = 0usize;
+                    let mut cur = cursor0;
+                    let mut syncs_left = n_syncs;
+                    while syncs_left > 0 {
+                        let step =
+                            plan_dev.steps.get(cur).ok_or_else(|| {
+                                Error::Sched(format!(
+                                    "device {} ran out of steps",
+                                    plan_dev.name
+                                ))
+                            })?;
+                        let x_patch = bufs
+                            .x
+                            .slice_rows(plan_dev.rows.row0, plan_dev.rows.rows);
+                        let t_start = Instant::now();
+                        let out = exec.denoise_at(
+                            res,
+                            plan_dev.rows.rows,
+                            &x_patch,
+                            &bufs.kv,
+                            plan_dev.rows.row0,
+                            step.t_from as f64,
+                            &cond,
+                        )?;
+                        let real = t_start.elapsed().as_secs_f64();
+                        compute_s += real;
+                        steps_run += 1;
+                        if stretch {
+                            gpu.stretch_step(plan_dev.rows.rows, real);
+                        }
 
-    let mut stats = ExecStats {
-        compute_s: vec![0.0; plan.devices.len()],
-        steps_run: vec![0; plan.devices.len()],
-        ..Default::default()
-    };
-    let mut result: Option<Tensor> = None;
-    for h in handles {
-        let (di, bufs, compute_s, steps_run) = h
-            .join()
-            .map_err(|_| Error::msg("worker thread panicked"))??;
-        stats.compute_s[di] = compute_s;
-        stats.steps_run[di] = steps_run;
-        if result.is_none() || di == included[0] {
-            result = Some(bufs.x);
+                        bufs.scatter_kv(t0, &out.kv_fresh);
+                        sampler::ddim_update_rows(
+                            &mut bufs.x,
+                            &out.eps_patch,
+                            plan_dev.rows.row0,
+                            step.coef,
+                        );
+                        cur += 1;
+
+                        if step.sync {
+                            // One uneven all-gather carries [x_patch ||
+                            // kv block]: the x half is the synchronous
+                            // output gather of Alg. 1, the kv half is
+                            // the buffer update. Bundling them in the
+                            // barrier pins the staleness semantics to
+                            // the *sync point* (a peer racing ahead can
+                            // never leak a fresher buffer into this
+                            // interval), which is what makes threaded
+                            // numerics bit-equal to the dataflow
+                            // executor. Transfer-cost-wise the kv half
+                            // is still modeled as maskable-async by the
+                            // timeline simulator.
+                            let own = bufs.x.slice_rows(
+                                plan_dev.rows.row0,
+                                plan_dev.rows.rows,
+                            );
+                            let mut payload = own.data;
+                            payload.extend_from_slice(
+                                &bufs.gather_kv(t0, t1 - t0).data,
+                            );
+                            let gathered = bus.all_gather(
+                                "sync",
+                                plan_dev.device,
+                                &included,
+                                payload,
+                            )?;
+                            for (&peer, data) in &gathered {
+                                if peer == plan_dev.device {
+                                    continue;
+                                }
+                                let pr = all_devices[peer].rows;
+                                let x_len = pr.rows
+                                    * model.latent_w
+                                    * model.latent_c;
+                                let patch = Tensor::new(
+                                    vec![
+                                        pr.rows,
+                                        model.latent_w,
+                                        model.latent_c,
+                                    ],
+                                    data[..x_len].to_vec(),
+                                )?;
+                                bufs.x.scatter_rows(pr.row0, &patch);
+                                let (p0, p1) = token_range(model, pr);
+                                let block = Tensor::new(
+                                    vec![
+                                        model.layers,
+                                        p1 - p0,
+                                        2 * model.dim,
+                                    ],
+                                    data[x_len..].to_vec(),
+                                )?;
+                                bufs.scatter_kv(p0, &block);
+                            }
+                            syncs_left -= 1;
+                        }
+                    }
+                    Ok((cur, compute_s, steps_run))
+                }),
+            ));
         }
+        for (di, h) in handles {
+            let r = match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(Error::msg("worker thread panicked")),
+            };
+            results.push((di, r));
+        }
+    });
+
+    for (di, r) in results {
+        let (cur, compute_s, steps_run) = r?;
+        cursor[di] = cur;
+        stats.compute_s[di] += compute_s;
+        stats.steps_run[di] += steps_run;
     }
-    stats.syncs = plan.sync_points.len();
+    stats.syncs += n_syncs;
     // The bundled barrier moves x+kv together; split accounting
     // analytically (every sync, every included device contributes its
     // x patch and kv block).
-    let syncs = plan.sync_points.len() as u64;
+    let syncs = n_syncs as u64;
+    let mut span_bytes = 0u64;
     for &di in &included {
         let d = &plan.devices[di];
         let x = (d.rows.rows * model.latent_w * model.latent_c * 4) as u64;
@@ -200,9 +267,10 @@ pub fn execute_at(
             * 4) as u64;
         stats.x_bytes += syncs * x;
         stats.kv_bytes += syncs * kv;
+        span_bytes += syncs * (x + kv);
     }
-    debug_assert_eq!(stats.x_bytes + stats.kv_bytes, bus.bytes_gathered());
-    Ok(RequestOutput { latent: result.unwrap(), stats })
+    debug_assert_eq!(span_bytes, bus.bytes_gathered());
+    Ok(())
 }
 
 #[cfg(test)]

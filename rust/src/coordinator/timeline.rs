@@ -14,9 +14,9 @@
 //! interval's compute, charging only their unmasked remainder — the
 //! paper's "mask communication latency within computation".
 
-use crate::comm::{all_gather_cost, all_reduce_cost};
+use crate::comm::{all_gather_cost, all_reduce_cost, p2p_cost};
 use crate::config::CommConfig;
-use crate::device::SimGpu;
+use crate::device::{OccupancySchedule, SimGpu};
 use crate::error::{Error, Result};
 use crate::runtime::artifacts::ModelInfo;
 use crate::sched::plan::Plan;
@@ -36,16 +36,131 @@ pub struct Timeline {
     pub utilization: f64,
 }
 
-/// Simulate a STADI/patch-parallel plan.
-pub fn simulate(
+/// A drift source for the virtual clock: the deterministic occupancy
+/// schedule plus the *global* device id of each local cluster index
+/// (identity for whole-cluster runs, the lease map for gang sessions —
+/// the schedule describes the fleet, not the gang).
+pub type DriftCtx<'a> = (&'a OccupancySchedule, &'a [usize]);
+
+/// Resumable virtual-clock state, so the adaptive execution loop can
+/// simulate a request as a sequence of plan segments (re-plans switch
+/// plans mid-request; the clock, per-device busy totals, async-KV debt
+/// and drift step counters all carry across the switch).
+#[derive(Debug, Clone)]
+pub struct SimState {
+    /// Per-device step cursor within the current plan.
+    pub cursor: Vec<usize>,
+    /// Per-device executed-step counters (the drift-schedule key);
+    /// persist across plan switches.
+    pub steps_done: Vec<usize>,
+    /// Per-device compute-busy seconds.
+    pub busy: Vec<f64>,
+    /// Virtual clock.
+    pub now: f64,
+    /// Blocking communication seconds so far.
+    pub comm_s: f64,
+    /// Unmasked async-KV debt carried into the next interval.
+    pub kv_debt: f64,
+    /// Sync points completed within the current plan.
+    pub synced: usize,
+}
+
+impl SimState {
+    pub fn new(n: usize) -> Self {
+        SimState {
+            cursor: vec![0; n],
+            steps_done: vec![0; n],
+            busy: vec![0.0; n],
+            now: 0.0,
+            comm_s: 0.0,
+            kv_debt: 0.0,
+            synced: 0,
+        }
+    }
+
+    /// Switch to a re-planned continuation: per-plan positions reset,
+    /// clocks and drift counters persist.
+    pub fn switch_plan(&mut self) {
+        for c in self.cursor.iter_mut() {
+            *c = 0;
+        }
+        self.synced = 0;
+    }
+
+    /// Charge a row-migration transfer at a re-plan barrier: the
+    /// gained rows' x/KV state moves point-to-point before the next
+    /// interval starts (conservative — see `sched::replan`).
+    pub fn charge_migration(&mut self, comm: &CommConfig, bytes: u64) {
+        if bytes == 0 {
+            return;
+        }
+        let cost = p2p_cost(comm, bytes as usize);
+        self.now += cost;
+        self.comm_s += cost;
+    }
+
+    /// Finalize into a [`Timeline`]; idle/utilization are reported
+    /// over `plan`'s included devices (for adaptive runs: the initial
+    /// plan, so a mid-flight exclusion shows up as idle time).
+    pub fn finish(&self, plan: &Plan) -> Timeline {
+        let n = self.busy.len();
+        let included: Vec<usize> = plan
+            .devices
+            .iter()
+            .filter(|d| d.included())
+            .map(|d| d.device)
+            .collect();
+        let now = self.now;
+        let idle: Vec<f64> = (0..n)
+            .map(|i| {
+                if plan.devices[i].included() {
+                    (now - self.busy[i]).max(0.0)
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let util = if included.is_empty() || now <= 0.0 {
+            0.0
+        } else {
+            included.iter().map(|&i| self.busy[i] / now).sum::<f64>()
+                / included.len() as f64
+        };
+        Timeline {
+            total_s: now,
+            busy_s: self.busy.clone(),
+            idle_s: idle,
+            comm_s: self.comm_s,
+            utilization: util,
+        }
+    }
+}
+
+/// Advance the virtual clock by `n_syncs` sync intervals of `plan`
+/// from `st`'s position. With `drift`, each device's per-step time
+/// follows the occupancy schedule at its own executed-step index;
+/// without, this is arithmetic-identical to the original whole-plan
+/// loop (the static `simulate` is a single full-length span).
+pub fn simulate_span(
     plan: &Plan,
     cluster: &[SimGpu],
     comm: &CommConfig,
     model: &ModelInfo,
-) -> Result<Timeline> {
+    drift: Option<DriftCtx<'_>>,
+    st: &mut SimState,
+    n_syncs: usize,
+) -> Result<()> {
     let n = plan.devices.len();
-    if cluster.len() != n {
+    if cluster.len() != n || st.cursor.len() != n {
         return Err(Error::Sched("cluster/plan size mismatch".into()));
+    }
+    if let Some((_, map)) = drift {
+        if map.len() != n {
+            return Err(Error::Sched(format!(
+                "drift map names {} devices, plan has {n}",
+                map.len()
+            )));
+        }
     }
     let included: Vec<usize> = plan
         .devices
@@ -76,14 +191,11 @@ pub fn simulate(
     let kv_sizes: Vec<usize> =
         included.iter().map(|&i| kv_bytes[i]).collect();
 
-    let mut cursor = vec![0usize; n];
-    let mut busy = vec![0.0f64; n];
-    let mut now = 0.0f64;
-    let mut comm_total = 0.0f64;
-    // Unmasked async-KV debt carried into the next interval.
-    let mut kv_debt = 0.0f64;
-
-    for (si, _sync) in plan.sync_points.iter().enumerate() {
+    for _ in 0..n_syncs {
+        let si = st.synced;
+        if si >= plan.sync_points.len() {
+            return Err(Error::Sched("span past the last sync".into()));
+        }
         let mut arrivals = Vec::with_capacity(included.len());
         let mut min_compute = f64::INFINITY;
         let mut is_warmup_interval = false;
@@ -91,11 +203,22 @@ pub fn simulate(
             let dp = &plan.devices[di];
             let mut t_dev = 0.0;
             loop {
-                let step = dp.steps.get(cursor[di]).ok_or_else(|| {
+                let step = dp.steps.get(st.cursor[di]).ok_or_else(|| {
                     Error::Sched("step underrun in timeline".into())
                 })?;
-                t_dev += cluster[di].step_time(dp.rows.rows);
-                cursor[di] += 1;
+                t_dev += match drift {
+                    None => cluster[di].step_time(dp.rows.rows),
+                    Some((sched, map)) => {
+                        let v = sched.speed_at(
+                            &cluster[di],
+                            map[di],
+                            st.steps_done[di],
+                        );
+                        cluster[di].cost.step_time(dp.rows.rows, v)
+                    }
+                };
+                st.cursor[di] += 1;
+                st.steps_done[di] += 1;
                 if step.is_warmup {
                     is_warmup_interval = true;
                 }
@@ -103,55 +226,78 @@ pub fn simulate(
                     break;
                 }
             }
-            busy[di] += t_dev;
+            st.busy[di] += t_dev;
             min_compute = min_compute.min(t_dev);
             arrivals.push(t_dev);
         }
         // Async KV debt from the previous interval masks under this
         // interval's *minimum* compute (the first device to finish is
         // the one that could be blocked by unfinished transfers).
-        let unmasked = (kv_debt - min_compute).max(0.0);
-        comm_total += unmasked;
+        let unmasked = (st.kv_debt - min_compute).max(0.0);
+        st.comm_s += unmasked;
 
         let barrier = arrivals.iter().cloned().fold(0.0, f64::max);
         let x_cost = all_gather_cost(comm, &x_sizes);
-        comm_total += x_cost;
+        st.comm_s += x_cost;
         let mut t_interval = barrier + unmasked + x_cost;
         if is_warmup_interval || si == plan.sync_points.len() - 1 {
             // Warmup: synchronous KV exchange (blocking). The final
             // interval cannot mask trailing publishes either.
             let kv_cost = all_gather_cost(comm, &kv_sizes);
-            comm_total += kv_cost;
+            st.comm_s += kv_cost;
             t_interval += kv_cost;
-            kv_debt = 0.0;
+            st.kv_debt = 0.0;
         } else {
-            kv_debt = all_gather_cost(comm, &kv_sizes);
+            st.kv_debt = all_gather_cost(comm, &kv_sizes);
         }
-        now += t_interval;
+        st.now += t_interval;
+        st.synced += 1;
     }
+    Ok(())
+}
 
-    let idle: Vec<f64> = (0..n)
-        .map(|i| {
-            if plan.devices[i].included() {
-                (now - busy[i]).max(0.0)
-            } else {
-                0.0
-            }
-        })
-        .collect();
-    let util = if included.is_empty() || now <= 0.0 {
-        0.0
-    } else {
-        included.iter().map(|&i| busy[i] / now).sum::<f64>()
-            / included.len() as f64
-    };
-    Ok(Timeline {
-        total_s: now,
-        busy_s: busy,
-        idle_s: idle,
-        comm_s: comm_total,
-        utilization: util,
-    })
+/// Simulate a STADI/patch-parallel plan.
+pub fn simulate(
+    plan: &Plan,
+    cluster: &[SimGpu],
+    comm: &CommConfig,
+    model: &ModelInfo,
+) -> Result<Timeline> {
+    let mut st = SimState::new(plan.devices.len());
+    simulate_span(
+        plan,
+        cluster,
+        comm,
+        model,
+        None,
+        &mut st,
+        plan.sync_points.len(),
+    )?;
+    Ok(st.finish(plan))
+}
+
+/// Replay a *frozen* plan under an injected occupancy drift: the
+/// baseline the mid-flight re-planner is measured against. `map`
+/// names each local device's global id in the schedule.
+pub fn simulate_under_drift(
+    plan: &Plan,
+    cluster: &[SimGpu],
+    comm: &CommConfig,
+    model: &ModelInfo,
+    sched: &OccupancySchedule,
+    map: &[usize],
+) -> Result<Timeline> {
+    let mut st = SimState::new(plan.devices.len());
+    simulate_span(
+        plan,
+        cluster,
+        comm,
+        model,
+        Some((sched, map)),
+        &mut st,
+        plan.sync_points.len(),
+    )?;
+    Ok(st.finish(plan))
 }
 
 /// Latency of the tensor-parallelism baseline (paper §V baselines):
@@ -348,6 +494,79 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn segmented_spans_match_the_whole_run_bit_exactly() {
+        // The adaptive loop's segment partitioning must not move a
+        // single float: state carries the clock, busy totals and
+        // async-KV debt across span boundaries.
+        let p = StadiParams::default();
+        let plan = build_plan(&[1.0, 0.5], &p);
+        let cl = cluster(&[0.0, 0.5]);
+        let comm = CommConfig::default();
+        let m = model();
+        let whole = simulate(&plan, &cl, &comm, &m).unwrap();
+        let mut st = SimState::new(2);
+        let total = plan.sync_points.len();
+        let mut done = 0;
+        for span in [1usize, 4, 7, 2] {
+            let span = span.min(total - done);
+            simulate_span(&plan, &cl, &comm, &m, None, &mut st, span)
+                .unwrap();
+            done += span;
+        }
+        simulate_span(&plan, &cl, &comm, &m, None, &mut st, total - done)
+            .unwrap();
+        let seg = st.finish(&plan);
+        assert_eq!(whole.total_s, seg.total_s);
+        assert_eq!(whole.busy_s, seg.busy_s);
+        assert_eq!(whole.comm_s, seg.comm_s);
+        // Running past the end is a typed error, not a panic.
+        let e = simulate_span(&plan, &cl, &comm, &m, None, &mut st, 1);
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn drift_slows_the_frozen_plan_and_constant_drift_is_identity() {
+        use crate::device::OccupancySchedule;
+        let p = StadiParams::default();
+        let plan = build_plan(&[1.0, 1.0], &p);
+        let cl = cluster(&[0.0, 0.0]);
+        let comm = CommConfig::default();
+        let m = model();
+        let base = simulate(&plan, &cl, &comm, &m).unwrap();
+        // A schedule pinning every device at its config occupancy is
+        // the identity — same floats, not merely close.
+        let flat = OccupancySchedule::parse("0@0;0@0").unwrap();
+        let same =
+            simulate_under_drift(&plan, &cl, &comm, &m, &flat, &[0, 1])
+                .unwrap();
+        assert_eq!(base.total_s, same.total_s);
+        assert_eq!(base.busy_s, same.busy_s);
+        // A mid-run ramp on device 1 strictly slows the frozen plan.
+        let ramp = OccupancySchedule::parse("0@0;0@0,0.6@10").unwrap();
+        let slow =
+            simulate_under_drift(&plan, &cl, &comm, &m, &ramp, &[0, 1])
+                .unwrap();
+        assert!(slow.total_s > base.total_s * 1.2, "{}", slow.total_s);
+        // The drift key is the *global* id through the map: remapping
+        // device 1 to a flat schedule entry restores the baseline.
+        let remapped =
+            simulate_under_drift(&plan, &cl, &comm, &m, &ramp, &[0, 0])
+                .unwrap();
+        assert_eq!(base.total_s, remapped.total_s);
+    }
+
+    #[test]
+    fn migration_charge_advances_clock_and_comm() {
+        let comm = CommConfig::default();
+        let mut st = SimState::new(2);
+        st.charge_migration(&comm, 0);
+        assert_eq!(st.now, 0.0);
+        st.charge_migration(&comm, 1 << 20);
+        assert!(st.now > 0.0);
+        assert_eq!(st.now, st.comm_s);
     }
 
     #[test]

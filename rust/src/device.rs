@@ -112,6 +112,165 @@ impl CostModel {
     }
 }
 
+// --- Deterministic occupancy drift ---------------------------------
+
+/// A deterministic per-device occupancy schedule keyed by the device's
+/// *executed-step index within a request* — the offline stand-in for a
+/// background job landing mid-denoise. Device `d`'s occupancy at its
+/// `n`-th executed step is the value of the last breakpoint
+/// `(from_step, occ)` with `from_step <= n`; devices without
+/// breakpoints (or step indices before the first breakpoint) fall back
+/// to their static config occupancy.
+///
+/// The schedule is pure data: executors never sleep on it. It drives
+/// the *virtual* clocks — measured-step synthesis for in-request drift
+/// detection and the drift-aware timeline simulation — so injected
+/// drift is byte-reproducible on any build (the flake gate diffs
+/// pinned stats JSON across two runs). It ships either inside a stub
+/// manifest (`"drift"` table, see [`crate::runtime::stubgen`]) or via
+/// the `STADI_DRIFT` environment variable, which overrides the
+/// manifest.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct OccupancySchedule {
+    /// Per device id: breakpoints `(from_step, occupancy)`, strictly
+    /// increasing in `from_step`. Empty vec = no override.
+    ramps: Vec<Vec<(usize, f64)>>,
+}
+
+/// Environment variable holding a drift spec (overrides the manifest):
+/// per-device ramps separated by `;`, each ramp a comma-separated list
+/// of `OCC@STEP` breakpoints — e.g. `"0@0;0@0,0.6@4"` keeps device 0
+/// idle and lands a 60%-occupancy job on device 1 at its 4th step.
+pub const DRIFT_ENV: &str = "STADI_DRIFT";
+
+impl OccupancySchedule {
+    pub fn new(ramps: Vec<Vec<(usize, f64)>>) -> Result<Self> {
+        for (d, ramp) in ramps.iter().enumerate() {
+            let mut prev: Option<usize> = None;
+            for &(step, occ) in ramp {
+                if !(0.0..1.0).contains(&occ) {
+                    return Err(crate::error::Error::Config(format!(
+                        "drift: device {d} occupancy {occ} outside [0, 1)"
+                    )));
+                }
+                if matches!(prev, Some(p) if step <= p) {
+                    return Err(crate::error::Error::Config(format!(
+                        "drift: device {d} breakpoints must strictly \
+                         increase (step {step})"
+                    )));
+                }
+                prev = Some(step);
+            }
+        }
+        Ok(OccupancySchedule { ramps })
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.ramps.len()
+    }
+
+    /// True when no device carries any breakpoint.
+    pub fn is_empty(&self) -> bool {
+        self.ramps.iter().all(Vec::is_empty)
+    }
+
+    /// Occupancy override for `device` at its `step`-th executed step;
+    /// `None` = no override (use the static config occupancy).
+    pub fn occupancy(&self, device: usize, step: usize) -> Option<f64> {
+        let ramp = self.ramps.get(device)?;
+        ramp.iter()
+            .take_while(|&&(from, _)| from <= step)
+            .last()
+            .map(|&(_, occ)| occ)
+    }
+
+    /// Effective speed of `gpu` at its `step`-th executed step under
+    /// this schedule (its static speed when no breakpoint applies).
+    pub fn speed_at(&self, gpu: &SimGpu, global_id: usize, step: usize) -> f64 {
+        match self.occupancy(global_id, step) {
+            Some(occ) => gpu.config.capability * (1.0 - occ),
+            None => gpu.effective_speed(),
+        }
+    }
+
+    /// Parse the `STADI_DRIFT` spec format (see [`DRIFT_ENV`]).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut ramps = Vec::new();
+        for seg in spec.split(';') {
+            let mut ramp = Vec::new();
+            for part in seg.split(',').filter(|s| !s.trim().is_empty()) {
+                let (occ, step) =
+                    part.trim().split_once('@').ok_or_else(|| {
+                        crate::error::Error::Config(format!(
+                            "drift: bad breakpoint {part:?} (want OCC@STEP)"
+                        ))
+                    })?;
+                let occ: f64 = occ.trim().parse().map_err(|_| {
+                    crate::error::Error::Config(format!(
+                        "drift: bad occupancy {occ:?}"
+                    ))
+                })?;
+                let step: usize = step.trim().parse().map_err(|_| {
+                    crate::error::Error::Config(format!(
+                        "drift: bad step {step:?}"
+                    ))
+                })?;
+                ramp.push((step, occ));
+            }
+            ramps.push(ramp);
+        }
+        Self::new(ramps)
+    }
+
+    /// Read the schedule from [`DRIFT_ENV`] if set.
+    pub fn from_env() -> Result<Option<Self>> {
+        match std::env::var(DRIFT_ENV) {
+            Ok(s) if !s.trim().is_empty() => Ok(Some(Self::parse(&s)?)),
+            _ => Ok(None),
+        }
+    }
+
+    /// Manifest encoding: an array per device of `[from_step, occ]`
+    /// pairs.
+    pub fn to_json(&self) -> Value {
+        Value::Arr(
+            self.ramps
+                .iter()
+                .map(|ramp| {
+                    Value::Arr(
+                        ramp.iter()
+                            .map(|&(s, o)| {
+                                Value::Arr(vec![
+                                    Value::Num(s as f64),
+                                    Value::Num(o),
+                                ])
+                            })
+                            .collect(),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mut ramps = Vec::new();
+        for ramp in v.as_arr()? {
+            let mut out = Vec::new();
+            for bp in ramp.as_arr()? {
+                let pair = bp.as_arr()?;
+                if pair.len() != 2 {
+                    return Err(crate::error::Error::Config(
+                        "drift: breakpoint must be [step, occ]".into(),
+                    ));
+                }
+                out.push((pair[0].as_usize()?, pair[1].as_f64()?));
+            }
+            ramps.push(out);
+        }
+        Self::new(ramps)
+    }
+}
+
 /// One simulated GPU.
 #[derive(Debug, Clone)]
 pub struct SimGpu {
@@ -212,6 +371,69 @@ mod tests {
         let c = CostModel { fixed_s: 0.002, per_row_s: 0.0005 };
         let back = CostModel::from_json(&c.to_json()).unwrap();
         assert_eq!(c, back);
+    }
+
+    #[test]
+    fn occupancy_schedule_lookup_and_fallback() {
+        let s = OccupancySchedule::parse("0@0;0@0,0.6@4").unwrap();
+        assert_eq!(s.num_devices(), 2);
+        assert_eq!(s.occupancy(0, 0), Some(0.0));
+        assert_eq!(s.occupancy(0, 99), Some(0.0));
+        assert_eq!(s.occupancy(1, 3), Some(0.0));
+        assert_eq!(s.occupancy(1, 4), Some(0.6));
+        assert_eq!(s.occupancy(1, 100), Some(0.6));
+        // Devices beyond the spec, and steps before the first
+        // breakpoint, fall back to the static config.
+        assert_eq!(s.occupancy(2, 0), None);
+        let late = OccupancySchedule::parse(";0.5@8").unwrap();
+        assert_eq!(late.occupancy(0, 3), None);
+        assert_eq!(late.occupancy(1, 7), None);
+        assert_eq!(late.occupancy(1, 8), Some(0.5));
+        // speed_at: override replaces the config occupancy entirely.
+        let gpu = SimGpu::new(
+            1,
+            DeviceConfig::new("g", 0.8, 0.25),
+            CostModel::uncalibrated(),
+        );
+        assert!((s.speed_at(&gpu, 1, 2) - 0.8).abs() < 1e-12);
+        assert!((s.speed_at(&gpu, 1, 9) - 0.8 * 0.4).abs() < 1e-12);
+        assert!((s.speed_at(&gpu, 2, 9) - 0.8 * 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn occupancy_schedule_rejects_bad_specs() {
+        assert!(OccupancySchedule::parse("1.0@0").is_err()); // occ >= 1
+        assert!(OccupancySchedule::parse("0.5@4,0.6@4").is_err()); // order
+        assert!(OccupancySchedule::parse("0.5@4,0.6@2").is_err());
+        assert!(OccupancySchedule::parse("nope").is_err());
+        assert!(OccupancySchedule::parse("0.5@x").is_err());
+        // Empty segments are fine (device without override).
+        let s = OccupancySchedule::parse(";").unwrap();
+        assert!(s.is_empty());
+        assert_eq!(s.num_devices(), 2);
+    }
+
+    #[test]
+    fn occupancy_schedule_json_roundtrip() {
+        let s = OccupancySchedule::parse("0@0,0.3@2;0.7@5").unwrap();
+        let back = OccupancySchedule::from_json(&s.to_json()).unwrap();
+        assert_eq!(s, back);
+        // Malformed breakpoints are typed errors.
+        let bad = crate::util::json::parse("[[[0]]]").unwrap();
+        assert!(OccupancySchedule::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn drift_env_parses_and_absence_is_none() {
+        // No env mutation (tests run concurrently): consistency with
+        // whatever the environment actually says.
+        match std::env::var(DRIFT_ENV) {
+            Ok(s) if !s.trim().is_empty() => {
+                let got = OccupancySchedule::from_env().unwrap().unwrap();
+                assert_eq!(got, OccupancySchedule::parse(&s).unwrap());
+            }
+            _ => assert!(OccupancySchedule::from_env().unwrap().is_none()),
+        }
     }
 
     #[test]

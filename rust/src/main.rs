@@ -63,6 +63,17 @@ fn base_flags(cmd: Command) -> Command {
         .switch("no-spatial", "disable spatial adaptation (+SA off)")
         .switch("cost-aware", "EXTENSION: affine-cost patch mending")
         .switch("threaded", "real worker threads instead of dataflow")
+        .flag(
+            "replan",
+            "EXTENSION: mid-flight re-planning cadence in sync points \
+             (0 = force frozen plans; empty = config default)",
+            Some(""),
+        )
+        .flag(
+            "replan-threshold",
+            "relative speed drift that triggers a re-plan",
+            Some("0.05"),
+        )
 }
 
 fn build_config(
@@ -83,6 +94,22 @@ fn build_config(
     cfg.stadi.cost_aware = p.get_bool("cost-aware");
     if p.get_bool("threaded") {
         cfg.mode = ExecMode::Threaded;
+    }
+    // Empty = leave whatever the JSON config says; an explicit 0
+    // forces the frozen path even when the config opted in.
+    if let Some(spec) = p.get("replan").filter(|s| !s.trim().is_empty()) {
+        let every: usize = spec.trim().parse().map_err(|_| {
+            stadi::error::Error::Config(format!(
+                "--replan {spec:?} is not a sync-point count"
+            ))
+        })?;
+        if every == 0 {
+            cfg.replan.enabled = false;
+        } else {
+            cfg.replan.enabled = true;
+            cfg.replan.every_k_syncs = every;
+            cfg.replan.drift_threshold = p.get_parsed("replan-threshold")?;
+        }
     }
     cfg.validate()?;
     Ok(cfg)
@@ -226,6 +253,13 @@ fn cmd_stub_artifacts(args: impl Iterator<Item = String>) -> Result<()> {
         "extra latent resolutions as HxW pairs, comma-separated \
          (empty = native only)",
         Some("16x32,48x32"),
+    )
+    .flag(
+        "drift",
+        "deterministic occupancy drift schedule embedded in the \
+         manifest, per-device `;`-separated OCC@STEP ramps (e.g. \
+         \"0@0;0@0,0.6@4\"; empty = none)",
+        Some(""),
     );
     let p = cmd.parse(args)?;
     let mut extra = Vec::new();
@@ -249,7 +283,17 @@ fn cmd_stub_artifacts(args: impl Iterator<Item = String>) -> Result<()> {
         extra.push((parse(h)?, parse(w)?));
     }
     let out = p.get("out").unwrap();
-    stadi::runtime::stubgen::write_stub_artifacts(out, &extra)?;
+    let drift = match p.get("drift").filter(|s| !s.trim().is_empty()) {
+        Some(spec) => {
+            Some(stadi::device::OccupancySchedule::parse(spec)?)
+        }
+        None => None,
+    };
+    stadi::runtime::stubgen::write_stub_artifacts_with_drift(
+        out,
+        &extra,
+        drift.as_ref(),
+    )?;
     println!(
         "wrote stub artifacts to {out} ({} extra resolution{}): try\n  \
          stadi generate --artifacts {out} --steps 8 --warmup 2\n  \

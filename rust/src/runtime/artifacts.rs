@@ -106,6 +106,12 @@ pub struct Manifest {
     /// by PJRT. Absent (false) in every real manifest, so legacy
     /// manifests parse unchanged.
     pub stub: bool,
+    /// Optional deterministic per-device occupancy schedule (`"drift"`
+    /// table, written by stubgen for drift-injection tests): the
+    /// engine's virtual clocks replay it so mid-request speed drift is
+    /// byte-reproducible offline. `STADI_DRIFT` overrides it; absent
+    /// in every real manifest.
+    pub drift: Option<crate::device::OccupancySchedule>,
 }
 
 fn parse_slots(v: &Value) -> Result<Vec<Slot>> {
@@ -198,8 +204,22 @@ impl Manifest {
             Some(x) => x.as_bool()?,
             None => false,
         };
+        let drift = match v.get_opt("drift") {
+            Some(x) => {
+                Some(crate::device::OccupancySchedule::from_json(x)?)
+            }
+            None => None,
+        };
 
-        Ok(Manifest { dir, model, schedule, artifacts, patch_heights, stub })
+        Ok(Manifest {
+            dir,
+            model,
+            schedule,
+            artifacts,
+            patch_heights,
+            stub,
+            drift,
+        })
     }
 
     pub fn artifact(&self, key: &str) -> Result<&ArtifactInfo> {

@@ -72,6 +72,15 @@ impl StubExec {
         &self.registry
     }
 
+    /// The deterministic occupancy drift schedule this stub set ships
+    /// (manifest `"drift"` table), if any. The stub backend itself
+    /// never sleeps on it — drift shapes the engine's *virtual* clocks
+    /// (in-request drift detection + timeline), which is what keeps
+    /// injected-drift scenarios byte-reproducible on any build.
+    pub fn drift(&self) -> Option<&crate::device::OccupancySchedule> {
+        self.manifest().drift.as_ref()
+    }
+
     /// One deterministic denoiser step at resolution `res`.
     pub fn denoise(
         &self,

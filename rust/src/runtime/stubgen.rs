@@ -107,6 +107,20 @@ pub fn write_stub_artifacts(
     dir: impl AsRef<Path>,
     extra: &[(usize, usize)],
 ) -> Result<()> {
+    write_stub_artifacts_with_drift(dir, extra, None)
+}
+
+/// [`write_stub_artifacts`] plus an optional deterministic occupancy
+/// drift schedule embedded in the manifest (`"drift"` table) — the
+/// drift-injection harness: any engine opened over the set replays
+/// the schedule on its virtual clocks, so integration tests can force
+/// a known drift at a known step on any build. CLI:
+/// `stadi stub-artifacts --drift "0@0;0@0,0.6@4"`.
+pub fn write_stub_artifacts_with_drift(
+    dir: impl AsRef<Path>,
+    extra: &[(usize, usize)],
+    drift: Option<&crate::device::OccupancySchedule>,
+) -> Result<()> {
     let dir = dir.as_ref();
     std::fs::create_dir_all(dir)?;
 
@@ -212,6 +226,9 @@ pub fn write_stub_artifacts(
     if !resolutions.is_empty() {
         manifest.insert("resolutions", Value::Obj(resolutions));
     }
+    if let Some(d) = drift {
+        manifest.insert("drift", d.to_json());
+    }
     std::fs::write(
         dir.join("manifest.json"),
         json::to_string_pretty(&Value::Obj(manifest)),
@@ -275,6 +292,25 @@ mod tests {
         assert_eq!(reg.registered().len(), 1);
         assert!(!reg.is_registered(ResKey { h: 16, w: 32 }));
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn drift_table_roundtrips_through_the_manifest() {
+        use crate::device::OccupancySchedule;
+        let dir = tmp("drift");
+        let sched = OccupancySchedule::parse("0@0;0@0,0.6@4").unwrap();
+        write_stub_artifacts_with_drift(&dir, &[], Some(&sched)).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.drift.as_ref(), Some(&sched));
+        // Plain sets carry no drift table at all (legacy shape).
+        let dir2 = tmp("nodrift");
+        write_stub_artifacts(&dir2, &[]).unwrap();
+        let text =
+            std::fs::read_to_string(dir2.join("manifest.json")).unwrap();
+        assert!(!text.contains("drift"));
+        assert!(Manifest::load(&dir2).unwrap().drift.is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&dir2);
     }
 
     #[test]

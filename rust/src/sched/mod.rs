@@ -1,12 +1,16 @@
 //! The paper's scheduling contribution: computation-aware step
 //! allocation (temporal, Eq. 4), elastic patch-size mending (spatial,
-//! Eq. 5), effective-speed profiling, and the joint Algorithm-1 plan.
+//! Eq. 5), effective-speed profiling, the joint Algorithm-1 plan, and
+//! the mid-flight re-planner (`replan`) that re-runs Eq. 4/5 over a
+//! request's remaining steps at sync barriers.
 
 pub mod plan;
 pub mod profiler;
+pub mod replan;
 pub mod spatial;
 pub mod temporal;
 
 pub use plan::{DevicePlan, Plan, PlanCache, PlanCacheStats, PlanKey, StepSpec};
 pub use profiler::Profiler;
+pub use replan::{replan_at_sync, RePlan, RowMove};
 pub use temporal::{normalize_warmup, StepAssignment, StepClass};

@@ -96,7 +96,7 @@ impl Plan {
         } else {
             uniform_patch_sizes(&assign, total_rows, granularity)?
         };
-        Self::assemble(schedule, speeds, names, params, &assign, &sizes)
+        Self::assemble_base(schedule, speeds, names, params, &assign, &sizes)
     }
 
     /// Build with the EXTENSION cost-aware allocator (affine step-cost
@@ -114,7 +114,7 @@ impl Plan {
         let sizes = crate::sched::spatial::cost_aware_sizes(
             speeds, &assign, cost, total_rows, granularity,
         )?;
-        Self::assemble(schedule, speeds, names, params, &assign, &sizes)
+        Self::assemble_base(schedule, speeds, names, params, &assign, &sizes)
     }
 
     /// Build with explicit patch sizes (Fig. 9's patch-ratio sweep and
@@ -135,10 +135,66 @@ impl Plan {
                 ));
             }
         }
-        Self::assemble(schedule, speeds, names, params, &assign, sizes)
+        Self::assemble_base(schedule, speeds, names, params, &assign, sizes)
     }
 
-    fn assemble(
+    /// Continue a request mid-flight: assemble device programs over an
+    /// explicit *fast-grid suffix* (the remaining timesteps from a
+    /// sync barrier) instead of a fresh `ddim_grid`. Half-class
+    /// devices run the
+    /// [`crate::sched::temporal::requantize_suffix`] grid (every other
+    /// point, both endpoints kept); no step is a warmup step (re-plans
+    /// happen at or after the warmup barrier). `assign` carries the
+    /// Eq. 4 classes at live speeds, `sizes` the Eq. 5 re-split;
+    /// excluded devices must have size 0. Used by
+    /// [`crate::sched::replan`].
+    pub fn build_on_grid(
+        schedule: &Schedule,
+        fast_grid: &[usize],
+        speeds: &[f64],
+        names: &[String],
+        params: &StadiParams,
+        assign: &[crate::sched::temporal::StepAssignment],
+        sizes: &[usize],
+    ) -> Result<Plan> {
+        if fast_grid.is_empty() {
+            return Err(Error::Sched("empty fast suffix".into()));
+        }
+        if assign.len() != speeds.len() || sizes.len() != speeds.len() {
+            return Err(Error::Sched(
+                "assign/sizes/speeds length mismatch".into(),
+            ));
+        }
+        for (a, &s) in assign.iter().zip(sizes) {
+            if (a.class == StepClass::Excluded) != (s == 0) {
+                return Err(Error::Sched(
+                    "size must be 0 exactly for excluded devices".into(),
+                ));
+            }
+        }
+        let any_half =
+            assign.iter().any(|a| a.class == StepClass::Half);
+        let slow_suffix = if any_half {
+            Some(crate::sched::temporal::requantize_suffix(fast_grid)?)
+        } else {
+            None
+        };
+        Self::assemble(
+            schedule,
+            speeds,
+            names,
+            params,
+            assign,
+            sizes,
+            fast_grid,
+            slow_suffix.as_deref(),
+            0,
+        )
+    }
+
+    /// Assemble from the params-derived grids (the static entry
+    /// points).
+    fn assemble_base(
         schedule: &Schedule,
         speeds: &[f64],
         names: &[String],
@@ -146,20 +202,52 @@ impl Plan {
         assign: &[crate::sched::temporal::StepAssignment],
         sizes: &[usize],
     ) -> Result<Plan> {
-        let ranges = partition_rows(sizes);
-
         let fast_grid = schedule.ddim_grid(params.m_base);
-        let slow_grid = Schedule::stadi_slow_grid(&fast_grid, params.m_warmup);
+        let slow_grid =
+            Schedule::stadi_slow_grid(&fast_grid, params.m_warmup);
+        Self::assemble(
+            schedule,
+            speeds,
+            names,
+            params,
+            assign,
+            sizes,
+            &fast_grid,
+            Some(&slow_grid),
+            params.m_warmup,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn assemble(
+        schedule: &Schedule,
+        speeds: &[f64],
+        names: &[String],
+        params: &StadiParams,
+        assign: &[crate::sched::temporal::StepAssignment],
+        sizes: &[usize],
+        fast_grid: &[usize],
+        slow_grid: Option<&[usize]>,
+        warmup_len: usize,
+    ) -> Result<Plan> {
+        let ranges = partition_rows(sizes);
 
         // Post-state sets per included device, for the sync intersection.
         let grids: Vec<Option<&[usize]>> = assign
             .iter()
             .map(|a| match a.class {
-                StepClass::Full => Some(fast_grid.as_slice()),
-                StepClass::Half => Some(slow_grid.as_slice()),
+                StepClass::Full => Some(fast_grid),
+                StepClass::Half => slow_grid,
                 StepClass::Excluded => None,
             })
             .collect();
+        if assign.iter().any(|a| a.class == StepClass::Half)
+            && slow_grid.is_none()
+        {
+            return Err(Error::Sched(
+                "Half-class device without a slow grid".into(),
+            ));
+        }
         let mut common: Option<BTreeSet<usize>> = None;
         for g in grids.iter().flatten() {
             // Post-states of a grid are all points except the first.
@@ -175,8 +263,8 @@ impl Plan {
         let mut devices = Vec::with_capacity(speeds.len());
         for (i, a) in assign.iter().enumerate() {
             let grid: &[usize] = match a.class {
-                StepClass::Full => &fast_grid,
-                StepClass::Half => &slow_grid,
+                StepClass::Full => fast_grid,
+                StepClass::Half => slow_grid.unwrap(),
                 StepClass::Excluded => &[],
             };
             let coefs = schedule.grid_coefficients(grid);
@@ -190,7 +278,7 @@ impl Plan {
                         t_from,
                         t_to,
                         coef: coefs[k],
-                        is_warmup: k < params.m_warmup,
+                        is_warmup: k < warmup_len,
                         // Final step (None) always syncs; otherwise the
                         // post-state must be common to all devices.
                         sync: match t_to {

@@ -1,0 +1,653 @@
+//! Mid-flight re-planning: sync-point elastic re-splits (EXTENSION).
+//!
+//! The paper freezes the Eq. 4/5 plan before inference and only
+//! applies the step allocator "after warmup phases". Real background
+//! jobs land *while work is in flight*, so the plan's speed snapshot
+//! goes stale mid-denoise. Sync barriers make this fixable: at a sync
+//! point every included device holds the fully-fresh latent and KV
+//! stack (the all-gather just ran), so ownership of rows can move
+//! without any numerical consequence — the continuation depends only
+//! on *which* grid steps run over *which* rows, not on who ran the
+//! history.
+//!
+//! [`replan_at_sync`] therefore re-runs the static planner at live
+//! speeds and adopts its answer for the remaining steps:
+//!
+//! * Eq. 4 re-classifies devices (a drifted device can demote
+//!   Full→Half or drop out entirely; originally-excluded devices are
+//!   never re-admitted — their buffers are stale);
+//! * the remaining fast grid is the plan's own suffix from the
+//!   barrier; Half-class devices continue on the
+//!   [`requantize_suffix`](crate::sched::temporal::requantize_suffix)
+//!   grid (every other point, both endpoints kept);
+//! * Eq. 5 re-splits rows using the *full-request* step weights, so
+//!   unchanged speeds reproduce the current split byte-for-byte — the
+//!   zero-drift invariant the integration goldens pin.
+//!
+//! The [`RePlan`] delta carries row-migration accounting: which rows
+//! changed owner and what a KV-sharded engine would pay to move them
+//! (this repo's executors exchange full buffers at syncs, so the
+//! migration itself is numerically free; the timeline model charges
+//! the conservative transfer anyway so the DES comparison cannot
+//! flatter re-planning).
+
+use crate::device::CostModel;
+use crate::error::{Error, Result};
+use crate::model::latents::RowRange;
+use crate::model::schedule::Schedule;
+use crate::runtime::artifacts::ModelInfo;
+use crate::sched::plan::{Plan, StepSpec};
+use crate::sched::spatial::resplit_sizes;
+use crate::sched::temporal::{assign_steps, StepClass};
+
+/// One device's row range before and after a re-plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RowMove {
+    pub device: usize,
+    pub old: RowRange,
+    pub new: RowRange,
+}
+
+impl RowMove {
+    /// Rows this device gained (rows it must have fresh state for that
+    /// it did not own before the barrier).
+    pub fn gained_rows(&self) -> usize {
+        self.new.rows - overlap(self.old, self.new)
+    }
+}
+
+fn overlap(a: RowRange, b: RowRange) -> usize {
+    let lo = a.row0.max(b.row0);
+    let hi = a.end().min(b.end());
+    hi.saturating_sub(lo)
+}
+
+/// The delta produced by one re-plan decision.
+#[derive(Debug, Clone)]
+pub struct RePlan {
+    /// The continuation plan over the remaining fast-grid suffix.
+    pub plan: Plan,
+    /// The live speeds the re-plan was built from (local plan order).
+    pub speeds: Vec<f64>,
+    /// Devices whose row range changed.
+    pub moves: Vec<RowMove>,
+    /// Rows whose owning device changed.
+    pub migrated_rows: usize,
+    /// Did any device change step class (Full/Half/Excluded)?
+    pub classes_changed: bool,
+}
+
+impl RePlan {
+    /// True when the re-plan reproduces the current structure exactly
+    /// (no migration, no class change) — the zero-drift case. Callers
+    /// keep executing the current plan; by construction the suffix
+    /// programs are identical anyway.
+    pub fn is_structural_noop(&self) -> bool {
+        self.migrated_rows == 0 && !self.classes_changed
+    }
+
+    /// Conservative migration transfer: every gained row's x slice and
+    /// KV block, as a KV-sharded engine would have to move them.
+    /// (Full-buffer engines like this repo's executors pay nothing;
+    /// charging the bytes anyway keeps the adaptive-vs-frozen
+    /// comparison honest.)
+    pub fn migration_bytes(&self, model: &ModelInfo) -> u64 {
+        let mut bytes = 0u64;
+        for mv in &self.moves {
+            let gained = mv.gained_rows();
+            if gained == 0 {
+                continue;
+            }
+            let x = gained * model.latent_w * model.latent_c * 4;
+            let kv = model.layers
+                * model.tokens_for_rows(gained)
+                * 2
+                * model.dim
+                * 4;
+            bytes += (x + kv) as u64;
+        }
+        bytes
+    }
+}
+
+/// Live per-device speeds from one segment's measurements: invert the
+/// calibrated cost model (`mean = step_time(rows, v)` ⇒ `v`), keep the
+/// current plan's estimate for devices without fresh samples,
+/// normalize to max 1 (the scale Eq. 4/5 consume). Local device order
+/// throughout. `costs` is each local device's cost model (the
+/// cluster's, in the same order as the plan). Shared by the session's
+/// adaptive loop and the DES strategy comparison, so the simulated
+/// numbers describe exactly what the engine does.
+pub fn live_speeds(
+    plan: &Plan,
+    costs: &[CostModel],
+    steps_before: &[usize],
+    steps_after: &[usize],
+    sec_delta: &[f64],
+) -> Vec<f64> {
+    let mut v = vec![0.0f64; plan.devices.len()];
+    for d in plan.included_devices() {
+        let i = d.device;
+        let steps = steps_after[i] - steps_before[i];
+        if steps == 0 || sec_delta[i] <= 0.0 {
+            v[i] = d.speed;
+            continue;
+        }
+        let mean = sec_delta[i] / steps as f64;
+        v[i] = costs[i].step_time(d.rows.rows, 1.0) / mean;
+    }
+    let max = v.iter().cloned().fold(0.0, f64::max);
+    if max > 0.0 {
+        for x in v.iter_mut() {
+            *x /= max;
+        }
+    }
+    v
+}
+
+/// Max relative change of any included device's live speed vs the
+/// speed the current plan was built from, against the threshold
+/// (strict, so a literal zero-drift measurement never re-plans).
+///
+/// The plan's stored speeds can carry a different scale than the
+/// max-1-normalized live estimates: a lease-restricted gang keeps the
+/// *global* profiler normalization (`EngineCore::subset_parts` slices
+/// without re-normalizing), so a [0.8, 0.8] gang is the same shape as
+/// live [1.0, 1.0]. Both sides are therefore normalized to their own
+/// included-max before comparing — only *relative* shape changes count
+/// as drift (Eq. 4/5 are scale-invariant, so shape is all a re-plan
+/// could act on anyway).
+pub fn drift_detected(plan: &Plan, live: &[f64], threshold: f64) -> bool {
+    let plan_max = plan
+        .included_devices()
+        .map(|d| d.speed)
+        .fold(0.0, f64::max);
+    if plan_max <= 0.0 {
+        return false;
+    }
+    plan.included_devices().any(|d| {
+        let old = (d.speed / plan_max).max(1e-9);
+        (live[d.device] - d.speed / plan_max).abs() / old > threshold
+    })
+}
+
+/// A device's program cursor after `synced` completed sync points: the
+/// index of its next step.
+pub fn cursor_after_syncs(steps: &[StepSpec], synced: usize) -> Result<usize> {
+    if synced == 0 {
+        return Ok(0);
+    }
+    let mut seen = 0usize;
+    for (k, s) in steps.iter().enumerate() {
+        if s.sync {
+            seen += 1;
+            if seen == synced {
+                return Ok(k + 1);
+            }
+        }
+    }
+    Err(Error::Sched(format!(
+        "program has only {seen} sync steps, asked for {synced}"
+    )))
+}
+
+/// Re-plan the remaining steps of `prev` at a sync barrier.
+///
+/// `synced` is the number of `prev` sync points completed (the barrier
+/// everyone just arrived at); `live_speeds` the freshly measured
+/// per-device speeds in the plan's (local) device order. Pass `cost`
+/// iff the plan was built cost-aware. Returns `Ok(None)` when no
+/// re-plan is possible at this barrier: nothing executed yet, the
+/// request is finished (or only the final step remains), or a new
+/// Half-class demotion lands on an even-parity suffix — callers defer
+/// one sync point and retry.
+pub fn replan_at_sync(
+    schedule: &Schedule,
+    prev: &Plan,
+    synced: usize,
+    live_speeds: &[f64],
+    cost: Option<&CostModel>,
+    granularity: usize,
+) -> Result<Option<RePlan>> {
+    let n = prev.devices.len();
+    if live_speeds.len() != n {
+        return Err(Error::Sched(format!(
+            "live speeds for {} devices, plan has {n}",
+            live_speeds.len()
+        )));
+    }
+    if synced == 0 || synced >= prev.sync_points.len() {
+        return Ok(None);
+    }
+    // (Only the final sync point is the clean-sample None —
+    // check_alignment guarantees it — and the bound above already
+    // excludes it, so sync_points[synced - 1] is always a timestep.)
+    debug_assert!(prev.sync_points[synced - 1].is_some());
+
+    // The remaining fast grid is the Full-class reference device's own
+    // suffix — valid for original plans and for suffix plans alike
+    // (the fastest device is always Full).
+    let fast_dev = prev
+        .devices
+        .iter()
+        .find(|d| d.class == StepClass::Full)
+        .ok_or_else(|| Error::Sched("plan has no Full-class device".into()))?;
+    let j = cursor_after_syncs(&fast_dev.steps, synced)?;
+    let fast_suffix: Vec<usize> =
+        fast_dev.steps[j..].iter().map(|s| s.t_from).collect();
+    if fast_suffix.len() < 2 {
+        return Ok(None); // only the final step remains
+    }
+
+    // No re-admission: a device excluded from `prev` has stale
+    // buffers, so its live speed is pinned to 0 (Eq. 4 keeps it out
+    // and Eq. 5 gives it no rows).
+    let mut speeds = live_speeds.to_vec();
+    for (i, d) in prev.devices.iter().enumerate() {
+        if !d.included() {
+            speeds[i] = 0.0;
+        }
+    }
+
+    let assign = assign_steps(&speeds, &prev.params)?;
+    let any_half = assign.iter().any(|a| a.class == StepClass::Half);
+    if any_half && fast_suffix.len() % 2 == 0 {
+        // A Half-class continuation needs an odd suffix (both
+        // endpoints on the slow grid). Plans that already carry Half
+        // devices only sync at odd-suffix barriers; an all-Full plan
+        // syncs every step, so the very next barrier has the right
+        // parity — defer to it.
+        return Ok(None);
+    }
+
+    let total_rows = prev.total_rows();
+    let sizes = resplit_sizes(
+        &speeds,
+        &assign,
+        prev.params.spatial,
+        cost,
+        total_rows,
+        granularity,
+    )?;
+    let names: Vec<String> =
+        prev.devices.iter().map(|d| d.name.clone()).collect();
+    let plan = Plan::build_on_grid(
+        schedule,
+        &fast_suffix,
+        &speeds,
+        &names,
+        &prev.params,
+        &assign,
+        &sizes,
+    )?;
+
+    // Row-migration accounting: who owns which rows before vs after.
+    let mut old_owner = vec![usize::MAX; total_rows];
+    let mut new_owner = vec![usize::MAX; total_rows];
+    for d in &prev.devices {
+        for r in d.rows.row0..d.rows.end() {
+            old_owner[r] = d.device;
+        }
+    }
+    for d in &plan.devices {
+        for r in d.rows.row0..d.rows.end() {
+            new_owner[r] = d.device;
+        }
+    }
+    let migrated_rows = old_owner
+        .iter()
+        .zip(&new_owner)
+        .filter(|(a, b)| a != b)
+        .count();
+    let moves: Vec<RowMove> = prev
+        .devices
+        .iter()
+        .zip(&plan.devices)
+        .filter(|(o, p)| o.rows != p.rows)
+        .map(|(o, p)| RowMove { device: o.device, old: o.rows, new: p.rows })
+        .collect();
+    let classes_changed = prev
+        .devices
+        .iter()
+        .zip(&plan.devices)
+        .any(|(o, p)| o.class != p.class);
+
+    Ok(Some(RePlan {
+        plan,
+        speeds,
+        moves,
+        migrated_rows,
+        classes_changed,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StadiParams;
+    use crate::util::proptest::{ensure, forall};
+
+    fn sched() -> Schedule {
+        Schedule::scaled_linear(1000, 0.00085, 0.012)
+    }
+
+    fn build(speeds: &[f64], p: &StadiParams, rows: usize) -> Plan {
+        let names: Vec<String> =
+            (0..speeds.len()).map(|i| format!("g{i}")).collect();
+        Plan::build(&sched(), speeds, &names, p, rows, 4).unwrap()
+    }
+
+    /// A device's remaining step program after `synced` sync points.
+    fn suffix_of(plan: &Plan, device: usize, synced: usize) -> Vec<StepSpec> {
+        let d = &plan.devices[device];
+        if !d.included() {
+            return Vec::new();
+        }
+        let j = cursor_after_syncs(&d.steps, synced).unwrap();
+        d.steps[j..].to_vec()
+    }
+
+    /// Step programs match up to the local re-indexing a fresh suffix
+    /// plan applies (index restarts at 0; everything the executors and
+    /// the timeline consume — timesteps, coefficients, sync flags,
+    /// warmup flags — must be identical).
+    fn programs_equal(a: &[StepSpec], b: &[StepSpec]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(x, y)| {
+                x.t_from == y.t_from
+                    && x.t_to == y.t_to
+                    && x.coef == y.coef
+                    && x.sync == y.sync
+                    && x.is_warmup == y.is_warmup
+            })
+    }
+
+    #[test]
+    fn zero_drift_replan_is_a_structural_noop_with_identical_programs() {
+        let p = StadiParams::default(); // 100 steps, warmup 4
+        let speeds = [1.0, 0.5];
+        let plan = build(&speeds, &p, 32);
+        // At the warmup barrier (m_warmup syncs) and at later
+        // barriers, unchanged speeds must reproduce the remaining
+        // programs exactly.
+        for synced in [4usize, 6, 10] {
+            let rp = replan_at_sync(&sched(), &plan, synced, &speeds, None, 4)
+                .unwrap()
+                .expect("replan possible at a mid-request barrier");
+            assert!(rp.is_structural_noop(), "drift-free replan migrated");
+            assert_eq!(rp.migrated_rows, 0);
+            assert!(rp.moves.is_empty());
+            for d in 0..2 {
+                assert!(
+                    programs_equal(
+                        &suffix_of(&plan, d, synced),
+                        &rp.plan.devices[d].steps
+                    ),
+                    "device {d} suffix program diverges at sync {synced}"
+                );
+                assert_eq!(plan.devices[d].rows, rp.plan.devices[d].rows);
+            }
+            // The continuation's sync schedule is the tail of the
+            // original schedule.
+            assert_eq!(
+                rp.plan.sync_points.as_slice(),
+                &plan.sync_points[synced..]
+            );
+        }
+    }
+
+    #[test]
+    fn drift_demotes_and_migrates_rows() {
+        let p = StadiParams::default();
+        let plan = build(&[1.0, 1.0], &p, 32); // equal speeds: 16/16
+        assert_eq!(plan.devices[1].rows.rows, 16);
+        // Device 1 slows to 0.4 mid-request: demote to Half, shrink
+        // its patch. All-Full plans sync every step, so barrier parity
+        // matters: m_base 100 - synced must leave an odd suffix.
+        let synced = 5;
+        let rp = replan_at_sync(
+            &sched(),
+            &plan,
+            synced,
+            &[1.0, 0.4],
+            None,
+            4,
+        )
+        .unwrap()
+        .expect("odd-suffix barrier must replan");
+        assert!(rp.classes_changed);
+        assert_eq!(rp.plan.devices[1].class, StepClass::Half);
+        assert!(rp.plan.devices[1].rows.rows < 16);
+        assert!(rp.migrated_rows > 0);
+        assert_eq!(rp.moves.len(), 2);
+        assert!(rp.migration_bytes(&test_model()) > 0);
+        // Coverage: the re-split still tiles the latent exactly.
+        assert_eq!(rp.plan.total_rows(), 32);
+        // Even-parity barrier defers instead.
+        let deferred =
+            replan_at_sync(&sched(), &plan, 4, &[1.0, 0.4], None, 4)
+                .unwrap();
+        assert!(deferred.is_none(), "even suffix must defer demotion");
+    }
+
+    fn test_model() -> ModelInfo {
+        ModelInfo {
+            latent_h: 32,
+            latent_w: 32,
+            latent_c: 4,
+            patch: 2,
+            dim: 96,
+            heads: 4,
+            layers: 3,
+            temb_dim: 64,
+            row_granularity: 4,
+            tokens_full: 256,
+            param_count: 1,
+            params_seed: 0,
+        }
+    }
+
+    #[test]
+    fn drift_detection_is_scale_invariant_for_gang_plans() {
+        // A lease-restricted gang keeps the global profiler scale: a
+        // plan built at [0.5, 0.5] is the same *shape* as live
+        // measurements normalized to [1.0, 1.0] — no drift, no
+        // spurious planner pass at every barrier.
+        let p = StadiParams::default();
+        let plan = build(&[0.5, 0.5], &p, 32);
+        assert!(!drift_detected(&plan, &[1.0, 1.0], 0.1));
+        // A genuine relative change is still caught...
+        assert!(drift_detected(&plan, &[1.0, 0.4], 0.1));
+        // ...and max-1 plans compare as before.
+        let plan = build(&[1.0, 0.6], &p, 32);
+        assert!(!drift_detected(&plan, &[1.0, 0.6], 0.1));
+        assert!(drift_detected(&plan, &[1.0, 0.3], 0.1));
+    }
+
+    #[test]
+    fn excluded_devices_are_never_readmitted() {
+        let p = StadiParams::default();
+        let plan = build(&[1.0, 0.1], &p, 32); // device 1 excluded
+        assert!(!plan.devices[1].included());
+        // Device 1 "recovers" — but its buffers are stale, so the
+        // re-plan must keep it out regardless of its live speed.
+        let rp = replan_at_sync(&sched(), &plan, 6, &[1.0, 1.0], None, 4)
+            .unwrap()
+            .unwrap();
+        assert_eq!(rp.plan.devices[1].class, StepClass::Excluded);
+        assert_eq!(rp.plan.devices[1].rows.rows, 0);
+        assert!(rp.is_structural_noop());
+    }
+
+    #[test]
+    fn terminal_barriers_return_none() {
+        let p = StadiParams { m_base: 8, m_warmup: 2, ..Default::default() };
+        let plan = build(&[1.0, 0.5], &p, 32);
+        let speeds = [1.0, 0.5];
+        let last = plan.sync_points.len();
+        assert!(replan_at_sync(&sched(), &plan, 0, &speeds, None, 4)
+            .unwrap()
+            .is_none());
+        assert!(replan_at_sync(&sched(), &plan, last, &speeds, None, 4)
+            .unwrap()
+            .is_none());
+        // One-before-last: only the final shared step remains.
+        assert!(replan_at_sync(&sched(), &plan, last - 1, &speeds, None, 4)
+            .unwrap()
+            .is_none());
+    }
+
+    /// Satellite: the re-quantization/re-split property. For random
+    /// valid (M_base, M_warmup), random speeds and granularities, at
+    /// every feasible re-plan barrier and random live speeds: the
+    /// re-quantized remaining steps stay on the fast-device grid with
+    /// the sync schedules of all included devices aligned, and the
+    /// re-split covers the latent rows exactly once at granularity
+    /// alignment.
+    #[test]
+    fn property_replan_grids_align_and_resplit_tiles_exactly() {
+        let s = sched();
+        forall(
+            71,
+            150,
+            |rng| {
+                let m_warmup = 1 + rng.below(4) as usize;
+                let m_base = m_warmup + 2 * (2 + rng.below(12) as usize);
+                let gran = 1usize << (rng.below(3) as usize); // 1|2|4
+                let granules = 2 + rng.below(14) as usize;
+                let n = 2 + rng.below(3) as usize;
+                let speeds: Vec<f64> =
+                    (0..n).map(|_| 0.05 + 0.95 * rng.next_f64()).collect();
+                let live: Vec<f64> =
+                    (0..n).map(|_| 0.05 + 0.95 * rng.next_f64()).collect();
+                let synced = 1 + rng.below(12) as usize;
+                (
+                    ((m_base, m_warmup), (gran, granules)),
+                    ((speeds, live), synced),
+                )
+            },
+            |case| {
+                let (
+                    ((m_base, m_warmup), (gran, granules)),
+                    ((speeds, live), synced),
+                ) = case;
+                let (m_base, m_warmup, gran, granules, synced) =
+                    (*m_base, *m_warmup, *gran, *granules, *synced);
+                // Shrink candidates may violate the config invariants
+                // the engine enforces upstream; skip those.
+                if m_warmup == 0
+                    || m_warmup >= m_base
+                    || (m_base - m_warmup) % 2 != 0
+                    || gran == 0
+                    || granules == 0
+                    || speeds.is_empty()
+                    || live.len() != speeds.len()
+                    || speeds.iter().chain(live.iter()).any(|&v| v <= 0.0)
+                {
+                    return Ok(());
+                }
+                let p = StadiParams {
+                    m_base,
+                    m_warmup,
+                    ..StadiParams::default()
+                };
+                let rows = gran * granules;
+                let names: Vec<String> =
+                    (0..speeds.len()).map(|i| format!("g{i}")).collect();
+                let Ok(plan) = Plan::build(&s, speeds, &names, &p, rows, gran)
+                else {
+                    return Ok(()); // infeasible shape: skip
+                };
+                let synced = synced % plan.sync_points.len();
+                let rp = match replan_at_sync(
+                    &s, &plan, synced, live, None, gran,
+                ) {
+                    Ok(Some(rp)) => rp,
+                    Ok(None) => return Ok(()), // deferred/terminal
+                    Err(e) => {
+                        // Live speeds can push the split past what the
+                        // granule budget allows — a typed refusal, not
+                        // a broken plan.
+                        return ensure(
+                            e.to_string().contains("granule"),
+                            format!("unexpected replan error: {e}"),
+                        );
+                    }
+                };
+                let fast_steps: Vec<usize> = plan
+                    .devices
+                    .iter()
+                    .find(|d| d.class == StepClass::Full)
+                    .unwrap()
+                    .steps
+                    .iter()
+                    .map(|st| st.t_from)
+                    .collect();
+                // (1) every device's remaining grid lives on the fast
+                // suffix, and sync schedules align.
+                for d in rp.plan.included_devices() {
+                    for st in &d.steps {
+                        ensure(
+                            fast_steps.contains(&st.t_from),
+                            format!(
+                                "timestep {} not on the fast grid",
+                                st.t_from
+                            ),
+                        )?;
+                    }
+                    ensure(
+                        d.sync_states() == rp.plan.sync_points,
+                        "sync misalignment after replan",
+                    )?;
+                }
+                // (2) the re-split tiles the rows exactly once.
+                let mut covered = vec![0usize; rows];
+                for d in &rp.plan.devices {
+                    ensure(
+                        d.rows.rows % gran == 0,
+                        "granularity violated",
+                    )?;
+                    for r in d.rows.row0..d.rows.end() {
+                        covered[r] += 1;
+                    }
+                }
+                ensure(
+                    covered.iter().all(|&c| c == 1),
+                    "rows not covered exactly once",
+                )?;
+                // (3) migration accounting is self-consistent.
+                let gained: usize = rp
+                    .moves
+                    .iter()
+                    .map(|m| m.gained_rows())
+                    .sum();
+                ensure(
+                    gained == rp.migrated_rows,
+                    format!(
+                        "gained {gained} != migrated {}",
+                        rp.migrated_rows
+                    ),
+                )?;
+                // (4) zero drift (live == plan speeds) is a noop.
+                if let Ok(Some(noop)) = replan_at_sync(
+                    &s,
+                    &plan,
+                    synced,
+                    &plan
+                        .devices
+                        .iter()
+                        .map(|d| d.speed)
+                        .collect::<Vec<f64>>(),
+                    None,
+                    gran,
+                ) {
+                    ensure(
+                        noop.is_structural_noop(),
+                        "same-speed replan migrated rows",
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -194,6 +194,35 @@ pub fn cost_aware_sizes(
     Ok(granules.iter().map(|&g| g * granularity).collect())
 }
 
+/// Eq. 5 elastic re-split at a mid-request sync barrier. The weights
+/// deliberately use the *full-request* step counts carried by
+/// `assign` (M_base / half-class totals — the same weights the static
+/// planner uses) rather than the remaining-step counts: re-planning
+/// is "adopt the split the static planner would build at today's
+/// speeds", so unchanged speeds reproduce the current split exactly —
+/// the zero-drift no-op invariant the re-planner is pinned to.
+/// `cost` engages the cost-aware allocator (pass it iff the plan was
+/// built cost-aware, so a re-plan never switches allocator families
+/// mid-request).
+pub fn resplit_sizes(
+    speeds: &[f64],
+    assign: &[StepAssignment],
+    spatial: bool,
+    cost: Option<&crate::device::CostModel>,
+    total_rows: usize,
+    granularity: usize,
+) -> Result<Vec<usize>> {
+    if !spatial {
+        return uniform_patch_sizes(assign, total_rows, granularity);
+    }
+    match cost {
+        Some(c) => {
+            cost_aware_sizes(speeds, assign, c, total_rows, granularity)
+        }
+        None => mend_patch_sizes(speeds, assign, total_rows, granularity),
+    }
+}
+
 /// Largest gang a latent of `total_rows` can feed: every included
 /// device needs at least one granule. Request-shaped planning uses
 /// this to bound gang size for small images (a 16-row draft spec on a

@@ -62,6 +62,31 @@ pub fn normalize_warmup(m_base: usize, preferred: usize) -> usize {
     w
 }
 
+/// Re-quantize a step *suffix* at a mid-request sync barrier: the
+/// Half-class continuation takes every other point of the remaining
+/// fast grid, keeping both endpoints — the barrier timestep (shared
+/// state all devices just synchronized on) and the final pre-clean
+/// timestep (so the last transition to the clean sample stays
+/// aligned). This needs an odd-length suffix, which is exactly what
+/// common sync barriers of a plan with Half-class devices yield
+/// (M_base - M_warmup even ⇒ every shared post-state sits an even
+/// number of fast steps before the final grid point); an all-Full
+/// plan's barriers alternate parity, and callers defer one sync when
+/// a demotion lands on the wrong one.
+pub fn requantize_suffix(fast_suffix: &[usize]) -> Result<Vec<usize>> {
+    if fast_suffix.is_empty() {
+        return Err(Error::Sched("empty fast suffix".into()));
+    }
+    if fast_suffix.len() % 2 == 0 {
+        return Err(Error::Sched(format!(
+            "Half-class continuation needs an odd fast suffix (got {} \
+             remaining steps)",
+            fast_suffix.len()
+        )));
+    }
+    Ok(fast_suffix.iter().copied().step_by(2).collect())
+}
+
 /// Apply Eq. 4 to every device. `speeds` need not be normalized; the
 /// max in the slice is v_max. When `p.temporal` is false (ablation
 /// "None"/"+SA"), every non-excluded device gets M_base.
@@ -169,6 +194,38 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn requantize_suffix_keeps_both_endpoints() {
+        // Odd suffix: every other point, first and last included.
+        let f = [90usize, 80, 70, 60, 50];
+        assert_eq!(requantize_suffix(&f).unwrap(), vec![90, 70, 50]);
+        // Length 1 (only the final step) is trivially itself.
+        assert_eq!(requantize_suffix(&[10]).unwrap(), vec![10]);
+        // Even suffixes cannot host a Half-class continuation.
+        assert!(requantize_suffix(&[90, 80]).is_err());
+        assert!(requantize_suffix(&[]).is_err());
+    }
+
+    #[test]
+    fn requantize_matches_stadi_slow_grid_at_the_warmup_barrier() {
+        use crate::model::schedule::Schedule;
+        // The suffix re-quantization at a post-warmup barrier must
+        // reproduce the static slow grid's continuation exactly (the
+        // zero-drift invariant, grid half of it).
+        let s = Schedule::scaled_linear(1000, 0.00085, 0.012);
+        let fast = s.ddim_grid(100);
+        let slow = Schedule::stadi_slow_grid(&fast, 4);
+        // After m_warmup - 1 = 3 shared syncs both classes sit at
+        // fast[3]; the slow continuation is slow[3..].
+        let suffix = requantize_suffix(&fast[3..]).unwrap();
+        assert_eq!(suffix, slow[3..].to_vec());
+        // After the first post-warmup sync (post-state fast[5]) the
+        // continuation is slow[5-th slow point..] = every other fast
+        // point from index 5.
+        let suffix = requantize_suffix(&fast[5..]).unwrap();
+        assert_eq!(suffix, slow[4..].to_vec());
     }
 
     #[test]

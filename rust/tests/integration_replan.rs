@@ -1,0 +1,325 @@
+//! Mid-flight re-planning, end to end on the stub runtime — runs on
+//! every build. These tests pin the PR's acceptance criteria:
+//!
+//! * a zero-drift re-plan is byte-identical to the static plan
+//!   (latents AND virtual timeline), and the `replan.enabled = false`
+//!   flag restores the frozen-plan (PR-4) behavior exactly, drift
+//!   table present or not;
+//! * a deterministically injected mid-run drift (stub-manifest
+//!   `"drift"` table) triggers in-request re-plans that migrate rows
+//!   and strictly reduce the virtual makespan vs the frozen plan
+//!   replayed under the same drift;
+//! * drift detection on a lease-restricted session goes through the
+//!   local→global device map: drift on the session's *own* global
+//!   devices re-plans, drift on devices outside the lease never does
+//!   (the profiler feedback round-trip audit);
+//! * the DES drift comparison serializes byte-identically — the CI
+//!   flake gate (`scripts/check.sh`) runs these tests twice and diffs
+//!   the stats JSON written via `STADI_REPLAN_STATS_OUT`.
+
+use std::path::{Path, PathBuf};
+
+use stadi::config::{
+    DeviceConfig, EngineConfig, ExecMode, ReplanConfig, StadiParams,
+};
+use stadi::coordinator::{timeline, EngineCore};
+use stadi::device::OccupancySchedule;
+use stadi::runtime::stubgen;
+use stadi::spec::GenerationSpec;
+
+/// Write a fresh stub artifact set with an optional drift table into a
+/// per-test temp dir.
+fn stub_artifacts(tag: &str, drift: Option<&str>) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("stadi-replan-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let sched = drift.map(|s| OccupancySchedule::parse(s).unwrap());
+    stubgen::write_stub_artifacts_with_drift(&dir, &[], sched.as_ref())
+        .unwrap();
+    dir
+}
+
+fn config(dir: &Path, occ: &[f64]) -> EngineConfig {
+    let mut cfg = EngineConfig::two_gpu_default(dir, occ);
+    cfg.stadi = StadiParams { m_base: 16, m_warmup: 2, ..Default::default() };
+    cfg
+}
+
+fn enable_replan(cfg: &mut EngineConfig, k: usize, threshold: f64) {
+    cfg.replan = ReplanConfig {
+        enabled: true,
+        every_k_syncs: k,
+        drift_threshold: threshold,
+    };
+}
+
+/// Acceptance criterion 1: with a constant (zero-drift) schedule the
+/// adaptive loop must reproduce the frozen path byte for byte — same
+/// latents, same virtual timeline, no re-plan events — even at
+/// threshold 0 where every barrier re-evaluates.
+#[test]
+fn zero_drift_replan_is_byte_identical_to_the_static_plan() {
+    // The drift table pins both devices at their config occupancy, so
+    // the virtual measurements equal the plan's speed snapshot exactly
+    // and every re-plan evaluation is a structural no-op.
+    let dir = stub_artifacts("zerodrift", Some("0@0;0.4@0"));
+    let spec = GenerationSpec::new().seed(11);
+
+    let frozen = EngineCore::new(config(&dir, &[0.0, 0.4]))
+        .unwrap()
+        .generate(&spec)
+        .unwrap();
+    let mut cfg = config(&dir, &[0.0, 0.4]);
+    enable_replan(&mut cfg, 2, 0.0);
+    let adaptive = EngineCore::new(cfg).unwrap().generate(&spec).unwrap();
+
+    assert_eq!(
+        frozen.latent, adaptive.latent,
+        "zero-drift adaptive execution diverged from the static plan"
+    );
+    assert!(adaptive.replans.is_empty(), "{:?}", adaptive.replans);
+    // The virtual timeline is the same arithmetic, merely segmented.
+    assert_eq!(frozen.timeline.total_s, adaptive.timeline.total_s);
+    assert_eq!(frozen.timeline.busy_s, adaptive.timeline.busy_s);
+    assert_eq!(frozen.timeline.comm_s, adaptive.timeline.comm_s);
+    assert_eq!(frozen.stats.steps_run, adaptive.stats.steps_run);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The disabled flag restores PR-4 behavior exactly: a drift table in
+/// the manifest changes *nothing* on the frozen path — identical
+/// latents and identical (drift-blind) timeline vs a plain artifact
+/// set.
+#[test]
+fn replan_disabled_ignores_drift_entirely() {
+    let plain = stub_artifacts("plain", None);
+    let drifted = stub_artifacts("drifted", Some("0@0;0@0,0.7@4"));
+    let spec = GenerationSpec::new().seed(7);
+
+    let a = EngineCore::new(config(&plain, &[0.0, 0.0]))
+        .unwrap()
+        .generate(&spec)
+        .unwrap();
+    let b = EngineCore::new(config(&drifted, &[0.0, 0.0]))
+        .unwrap()
+        .generate(&spec)
+        .unwrap();
+    assert_eq!(a.latent, b.latent);
+    assert_eq!(a.timeline.total_s, b.timeline.total_s);
+    assert!(b.replans.is_empty());
+    let _ = std::fs::remove_dir_all(&plain);
+    let _ = std::fs::remove_dir_all(&drifted);
+}
+
+/// Acceptance criterion 2: an injected mid-run drift (device 1 drops
+/// to 30% speed at its 4th step) triggers a re-plan that demotes and
+/// shrinks the straggler, migrates rows, and strictly beats the
+/// frozen plan's makespan under the *same* drift — deterministically,
+/// on any build, across executors.
+#[test]
+fn injected_drift_replans_and_strictly_beats_the_frozen_makespan() {
+    let dir = stub_artifacts("ramp", Some("0@0;0@0,0.7@4"));
+    let spec = GenerationSpec::new().seed(21);
+    let run = |mode: ExecMode| {
+        let mut cfg = config(&dir, &[0.0, 0.0]);
+        cfg.mode = mode;
+        enable_replan(&mut cfg, 2, 0.1);
+        EngineCore::new(cfg).unwrap().generate(&spec).unwrap()
+    };
+
+    let g = run(ExecMode::Dataflow);
+    assert!(!g.replans.is_empty(), "ramp did not trigger a re-plan");
+    let ev = &g.replans[0];
+    assert!(ev.migrated_rows > 0, "re-plan moved no rows");
+    assert!(ev.migration_bytes > 0);
+    assert!(ev.classes_changed, "straggler was not demoted");
+    assert!(
+        ev.live_speeds[1] < 0.5,
+        "live speed missed the drift: {:?}",
+        ev.live_speeds
+    );
+
+    // Frozen baseline: the same initial plan replayed under the same
+    // drift schedule (the timeline model the paper's figures use).
+    let core = EngineCore::new(config(&dir, &[0.0, 0.0])).unwrap();
+    let sched = OccupancySchedule::parse("0@0;0@0,0.7@4").unwrap();
+    let frozen = timeline::simulate_under_drift(
+        &g.plan,
+        &core.cluster(),
+        &core.config().comm,
+        &core.exec().manifest().model,
+        &sched,
+        &[0, 1],
+    )
+    .unwrap();
+    assert!(
+        g.timeline.total_s < frozen.total_s,
+        "mid-flight {} should strictly beat frozen {}",
+        g.timeline.total_s,
+        frozen.total_s
+    );
+
+    // Determinism: a fresh engine reproduces the run bit for bit
+    // (latents, events, virtual clock) — wall time never leaks in.
+    let h = run(ExecMode::Dataflow);
+    assert_eq!(g.latent, h.latent, "adaptive run not deterministic");
+    assert_eq!(g.replans.len(), h.replans.len());
+    assert_eq!(g.timeline.total_s, h.timeline.total_s);
+    assert_eq!(
+        g.replans[0].migrated_rows,
+        h.replans[0].migrated_rows
+    );
+
+    // Cross-executor pin: the threaded executor runs the same adaptive
+    // path (segments, migrations and all) with bit-equal numerics.
+    let th = run(ExecMode::Threaded);
+    assert_eq!(
+        g.latent, th.latent,
+        "threaded and dataflow adaptive numerics diverge"
+    );
+    assert_eq!(g.replans.len(), th.replans.len());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: the local→global map round-trip on a restricted lease.
+/// Drift on the session's own global device must re-plan; drift on a
+/// device *outside* the lease must not (a session indexing the fleet
+/// schedule by its local ids would invert both answers). Profiler
+/// feedback stays keyed by global ids throughout.
+#[test]
+fn lease_restricted_replan_keys_drift_by_global_device_id() {
+    let three = |dir: &Path| {
+        let cfg = EngineConfig {
+            artifacts_dir: dir.to_path_buf(),
+            devices: vec![
+                DeviceConfig::new("gpu0", 1.0, 0.0),
+                DeviceConfig::new("gpu1", 1.0, 0.0),
+                DeviceConfig::new("gpu2", 1.0, 0.0),
+            ],
+            stadi: StadiParams {
+                m_base: 16,
+                m_warmup: 2,
+                ..Default::default()
+            },
+            comm: Default::default(),
+            mode: ExecMode::Dataflow,
+            replan: ReplanConfig {
+                enabled: true,
+                every_k_syncs: 2,
+                drift_threshold: 0.1,
+            },
+        };
+        cfg.validate().unwrap();
+        cfg
+    };
+    let spec = GenerationSpec::new().seed(5);
+
+    // Case A: global device 2 drifts — it is local index 1 of the
+    // [1, 2] lease, so the session must react.
+    let dir = stub_artifacts("lease-own", Some(";;0@0,0.7@4"));
+    let core = EngineCore::new(three(&dir)).unwrap();
+    let fleet = core.fleet();
+    let lease = fleet.try_acquire(&[1, 2]).unwrap().unwrap();
+    let session = core.session_for_on(&spec, &lease).unwrap();
+    assert_eq!(session.devices(), &[1, 2]);
+    let g = session.execute(&spec).unwrap();
+    assert!(
+        !g.replans.is_empty(),
+        "drift on a leased device (global 2) was not detected"
+    );
+    assert!(
+        g.replans[0].live_speeds[1] < 0.5,
+        "drift must land on local index 1 (global 2): {:?}",
+        g.replans[0].live_speeds
+    );
+    // Feedback landed under global ids: the 3-wide speed vector is
+    // intact and a whole-cluster plan still works.
+    assert_eq!(core.effective_speeds().len(), 3);
+    core.session().unwrap();
+    drop(lease);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Case C: global device 0 drifts — it is outside the [1, 2]
+    // lease. A session wrongly indexing the schedule by *local* ids
+    // would see "device 0" drift and re-plan; the correct session
+    // never does.
+    let dir = stub_artifacts("lease-other", Some("0@0,0.7@4;;"));
+    let core = EngineCore::new(three(&dir)).unwrap();
+    let fleet = core.fleet();
+    let lease = fleet.try_acquire(&[1, 2]).unwrap().unwrap();
+    let g = core
+        .session_for_on(&spec, &lease)
+        .unwrap()
+        .execute(&spec)
+        .unwrap();
+    assert!(
+        g.replans.is_empty(),
+        "drift outside the lease triggered a re-plan: {:?}",
+        g.replans
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Flake gate: the DES drift comparison is a pure function of the
+/// scenario. `scripts/check.sh` runs this test twice in one job with
+/// `STADI_REPLAN_STATS_OUT` pointing at two different files and
+/// `diff`s them — any nondeterminism (wall-clock leakage, map-order
+/// iteration, uninitialized state) fails CI without a single retry.
+#[test]
+fn drift_stats_json_is_pinned_and_midflight_wins() {
+    let schedule =
+        stadi::model::schedule::Schedule::scaled_linear(1000, 0.00085, 0.012);
+    let params =
+        StadiParams { m_base: 16, m_warmup: 2, ..Default::default() };
+    let devices = vec![
+        DeviceConfig::new("g0", 1.0, 0.0),
+        DeviceConfig::new("g1", 1.0, 0.0),
+    ];
+    let cost = stadi::device::CostModel { fixed_s: 0.004, per_row_s: 0.0012 };
+    let comm = stadi::config::CommConfig::default();
+    let model = stadi::runtime::artifacts::ModelInfo {
+        latent_h: 32,
+        latent_w: 32,
+        latent_c: 4,
+        patch: 2,
+        dim: 96,
+        heads: 4,
+        layers: 3,
+        temb_dim: 64,
+        row_granularity: 4,
+        tokens_full: 256,
+        param_count: 1,
+        params_seed: 0,
+    };
+    let scenario = stadi::serve::sim::DriftScenario {
+        requests: 3,
+        drift: OccupancySchedule::parse("0@0;0@0,0.7@6").unwrap(),
+        replan: ReplanConfig {
+            enabled: true,
+            every_k_syncs: 2,
+            drift_threshold: 0.1,
+        },
+    };
+    let cmp = stadi::serve::sim::simulate_drift_strategies(
+        &schedule, &params, &devices, cost, &comm, &model, &scenario,
+    )
+    .unwrap();
+    assert!(cmp.midflight.total_s < cmp.ewma.total_s);
+    assert!(cmp.ewma.total_s < cmp.frozen.total_s);
+    assert!(cmp.midflight.replans >= 1);
+    let json = stadi::util::json::to_string_pretty(&cmp.to_json());
+    // In-process determinism (the cross-process pin is the CI diff).
+    let again = stadi::serve::sim::simulate_drift_strategies(
+        &schedule, &params, &devices, cost, &comm, &model, &scenario,
+    )
+    .unwrap();
+    assert_eq!(
+        json,
+        stadi::util::json::to_string_pretty(&again.to_json())
+    );
+    if let Ok(path) = std::env::var("STADI_REPLAN_STATS_OUT") {
+        if !path.trim().is_empty() {
+            std::fs::write(&path, &json).unwrap();
+        }
+    }
+}

@@ -53,6 +53,22 @@ else
     cargo check
 fi
 
+# Retry-free flake gate: the drift-injection tests must be a pure
+# function of their inputs. Run them twice in one job, each time
+# dumping the DES comparison's stats JSON, and diff the two dumps —
+# any nondeterminism (wall-clock leakage, map-order iteration,
+# uninitialized state) fails CI here, with zero retries to hide it.
+echo "== drift determinism gate (run twice, diff pinned stats JSON)"
+DRIFT_A="$(mktemp)"
+DRIFT_B="$(mktemp)"
+trap 'rm -f "$DRIFT_A" "$DRIFT_B"' EXIT
+STADI_REPLAN_STATS_OUT="$DRIFT_A" \
+    cargo test -q "${FEATURES[@]}" --test integration_replan
+STADI_REPLAN_STATS_OUT="$DRIFT_B" \
+    cargo test -q "${FEATURES[@]}" --test integration_replan
+diff -u "$DRIFT_A" "$DRIFT_B"
+echo "   drift stats identical across runs"
+
 echo "== cargo doc --no-deps"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
