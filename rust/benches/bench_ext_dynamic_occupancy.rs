@@ -23,7 +23,7 @@
 //! every-K-syncs elastic re-splits), asserting the mid-flight
 //! strategy strictly wins.
 
-use stadi::config::DeviceConfig;
+use stadi::config::{DeviceConfig, HaloMode};
 use stadi::coordinator::timeline;
 use stadi::device::build_cluster;
 use stadi::expt;
@@ -32,6 +32,7 @@ use stadi::runtime::ExecService;
 use stadi::sched::plan::Plan;
 use stadi::sched::Profiler;
 use stadi::util::benchkit::Table;
+use stadi::util::json::{self, Object, Value};
 use stadi::util::plot::{render, Series};
 
 fn main() -> stadi::Result<()> {
@@ -75,6 +76,7 @@ fn main() -> stadi::Result<()> {
     let mut s_static = Series::new("static", 'o');
     let mut s_adapt = Series::new("adaptive", '#');
     let mut dat = String::new();
+    let mut ramp = Vec::new();
     for k in 0..n_requests {
         let occ = occ_at(k);
         let cluster = build_cluster(
@@ -134,6 +136,12 @@ fn main() -> stadi::Result<()> {
             "{k} {occ} {} {}\n",
             t_static.total_s, t_adaptive.total_s
         ));
+        let mut e = Object::new();
+        e.insert("req", Value::Num(k as f64));
+        e.insert("occ_gpu1", Value::Num(occ));
+        e.insert("static_s", Value::Num(t_static.total_s));
+        e.insert("adaptive_s", Value::Num(t_adaptive.total_s));
+        ramp.push(Value::Obj(e));
     }
     table.print();
     println!("\nper-request latency across the occupancy ramp:");
@@ -218,6 +226,50 @@ fn main() -> stadi::Result<()> {
     expt::save_results(
         "ext_dynamic_occupancy_midflight.json",
         &stadi::util::json::to_string_pretty(&cmp.to_json()),
+    )?;
+
+    // ---- Committed perf-trajectory artifact -------------------------
+    // The ramp + mid-flight numbers plus the displaced-halo pricing of
+    // the static plan at the most-drifted point of the ramp.
+    let drifted = build_cluster(
+        &[
+            DeviceConfig::new("gpu0", 1.0, 0.0),
+            DeviceConfig::new("gpu1", 1.0, occ_at(n_requests - 1)),
+        ],
+        cost,
+    );
+    let h_sync =
+        timeline::simulate(&static_plan, &drifted, &comm, &model)?;
+    let h_disp = timeline::simulate_with(
+        &static_plan,
+        &drifted,
+        &comm,
+        &model,
+        HaloMode::Displaced { max_staleness: 1 },
+    )?;
+    assert!(
+        h_disp.total_s <= h_sync.total_s + 1e-12,
+        "displaced charging made the drifted plan slower"
+    );
+    let mut halo = Object::new();
+    halo.insert("mode", Value::Str("displaced:1".into()));
+    halo.insert("occ_gpu1", Value::Num(occ_at(n_requests - 1)));
+    halo.insert("sync_total_s", Value::Num(h_sync.total_s));
+    halo.insert("displaced_total_s", Value::Num(h_disp.total_s));
+    halo.insert(
+        "speedup_vs_sync",
+        Value::Num(h_sync.total_s / h_disp.total_s),
+    );
+    let mut out = Object::new();
+    out.insert("bench", Value::Str("dynamic_occupancy".into()));
+    out.insert("cumulative_static_s", Value::Num(cum_static));
+    out.insert("cumulative_adaptive_s", Value::Num(cum_adaptive));
+    out.insert("ramp", Value::Arr(ramp));
+    out.insert("midflight", cmp.to_json());
+    out.insert("halo", Value::Obj(halo));
+    expt::save_results(
+        "BENCH_dynamic_occupancy.json",
+        &json::to_string_pretty(&Value::Obj(out)),
     )?;
     Ok(())
 }

@@ -83,6 +83,29 @@ fn main() -> stadi::Result<()> {
          STADI={s_st:.3}s ({:.1}% faster)",
         (1.0 - s_st / s_pp) * 100.0
     );
+    // Displaced-halo pricing of the same plan: the committed perf
+    // trajectory records both charges so re-anchors can see how much
+    // comm headroom displacement buys on this testbed.
+    let s_st_disp = timeline::simulate_with(
+        &stadi_plan,
+        &cluster,
+        &comm,
+        &model,
+        stadi::config::HaloMode::Displaced { max_staleness: 1 },
+    )?
+    .total_s;
+    assert!(
+        s_st_disp <= s_st + 1e-12,
+        "displaced charging made the plan slower: {s_st_disp} vs {s_st}"
+    );
+    let halo_entry = || {
+        let mut h = Object::new();
+        h.insert("mode", Value::Str("displaced:1".into()));
+        h.insert("sync_total_s", Value::Num(s_st));
+        h.insert("displaced_total_s", Value::Num(s_st_disp));
+        h.insert("speedup_vs_sync", Value::Num(s_st / s_st_disp));
+        Value::Obj(h)
+    };
 
     let n_requests = 600;
     let mut table = Table::new(&[
@@ -334,6 +357,7 @@ fn main() -> stadi::Result<()> {
     bench.insert("service_batch_s", Value::Num(s_large));
     bench.insert("servers", Value::Num(servers as f64));
     bench.insert("sweep", Value::Arr(sweep));
+    bench.insert("halo", halo_entry());
     expt::save_results(
         "BENCH_serving.json",
         &json::to_string_pretty(&Value::Obj(bench)),
@@ -435,6 +459,7 @@ fn main() -> stadi::Result<()> {
         Value::Num(mean_res_service),
     );
     mr_bench.insert("sweep", Value::Arr(mr_sweep));
+    mr_bench.insert("halo", halo_entry());
     expt::save_results(
         "BENCH_multires.json",
         &json::to_string_pretty(&Value::Obj(mr_bench)),

@@ -48,6 +48,39 @@ pub fn all_gather_cost(cfg: &CommConfig, sizes: &[usize]) -> f64 {
     }
 }
 
+/// Cost of publishing `bytes` to the displaced-halo mailbox: one
+/// point-to-point transfer under the same α+β model the timeline
+/// charges everywhere else. The displaced path used to be priced ad
+/// hoc; pinning `publish_cost == p2p_cost` for equal payloads removes
+/// the `CommConfig` cost asymmetry (publish is a single directed
+/// transfer — the strategy knob only shapes *collectives*).
+pub fn publish_cost(cfg: &CommConfig, bytes: usize) -> f64 {
+    p2p_cost(cfg, bytes)
+}
+
+/// Cost of one displaced halo exchange among ranks with the given
+/// per-rank payload sizes: every rank's publish still crosses the
+/// wire (same strategy-shaped total as the blocking gather — the
+/// bytes are identical), but the *charging* differs: the timeline
+/// overlaps this cost with the next compute span instead of blocking
+/// on it. Routed through [`publish_cost`] so the α+β model stays
+/// single-sourced.
+pub fn displaced_exchange_cost(cfg: &CommConfig, sizes: &[usize]) -> f64 {
+    let n = sizes.len();
+    if n <= 1 {
+        return 0.0;
+    }
+    match cfg.uneven_strategy {
+        UnevenStrategy::PadAllGather => {
+            let max = *sizes.iter().max().unwrap();
+            (n - 1) as f64 * publish_cost(cfg, max)
+        }
+        UnevenStrategy::MultiBroadcast => {
+            sizes.iter().map(|&s| publish_cost(cfg, s)).sum()
+        }
+    }
+}
+
 /// Cost of a synchronous all-reduce of `bytes` on every rank (ring:
 /// 2(n-1)/n · bytes on the wire per rank, (2n-2) latency hops). Used by
 /// the tensor-parallelism baseline.
@@ -252,6 +285,44 @@ mod tests {
         let pad = all_gather_cost(&cfg(UnevenStrategy::PadAllGather), &sizes);
         let bc = all_gather_cost(&cfg(UnevenStrategy::MultiBroadcast), &sizes);
         assert!(bc < pad);
+    }
+
+    #[test]
+    fn publish_cost_matches_p2p_for_equal_payloads() {
+        // The cost-asymmetry fix: the displaced publish path prices
+        // bytes with the exact α+β model the timeline charges.
+        for strategy in
+            [UnevenStrategy::PadAllGather, UnevenStrategy::MultiBroadcast]
+        {
+            let c = cfg(strategy);
+            for bytes in [0usize, 1, 4096, 1_000_000] {
+                assert_eq!(publish_cost(&c, bytes), p2p_cost(&c, bytes));
+            }
+        }
+    }
+
+    #[test]
+    fn displaced_exchange_cost_equals_all_gather_cost() {
+        // Same bytes cross the wire either way — only the *charging*
+        // (blocking vs overlapped) differs, which is the timeline's
+        // job, not the cost model's.
+        for strategy in
+            [UnevenStrategy::PadAllGather, UnevenStrategy::MultiBroadcast]
+        {
+            let c = cfg(strategy);
+            for sizes in [
+                vec![1000usize, 1000],
+                vec![4_000_000, 4, 4, 4],
+                vec![123],
+                vec![],
+            ] {
+                assert_eq!(
+                    displaced_exchange_cost(&c, &sizes),
+                    all_gather_cost(&c, &sizes),
+                    "{strategy:?} {sizes:?}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -156,6 +156,76 @@ impl Default for ReplanConfig {
     }
 }
 
+/// Halo-exchange mode at sync points (EXTENSION, DistriFusion-style
+/// displaced patch parallelism adapted to STADI's sync schedule).
+///
+/// `Sync` is the paper's behavior: every sync point blocks on a full
+/// x/KV all-gather. `Displaced { max_staleness }` publishes the local
+/// boundary data without blocking and consumes the peers' most recent
+/// *published* halos, as long as they are at most `max_staleness` sync
+/// intervals old; warmup syncs, the first `max_staleness` intervals
+/// (nothing old enough published yet) and the final sync (the gathered
+/// clean image must be fresh) always fall back to the blocking
+/// exchange. `Displaced { max_staleness: 0 }` is required — and tested
+/// — to be byte-identical to `Sync`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum HaloMode {
+    #[default]
+    Sync,
+    Displaced { max_staleness: usize },
+}
+
+impl HaloMode {
+    /// The staleness budget this mode tolerates (0 for `Sync`).
+    pub fn max_staleness(self) -> usize {
+        match self {
+            HaloMode::Sync => 0,
+            HaloMode::Displaced { max_staleness } => max_staleness,
+        }
+    }
+
+    /// True when the mode can ever skip a blocking exchange. A
+    /// displaced mode with budget 0 is behaviorally `Sync` (and the
+    /// executors treat it so), but keeps its spelled identity for
+    /// round-trips.
+    pub fn is_displaced(self) -> bool {
+        matches!(self, HaloMode::Displaced { .. })
+    }
+
+    /// `"sync"` | `"displaced"` | `"displaced:N"`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.trim();
+        if s == "sync" {
+            return Ok(HaloMode::Sync);
+        }
+        if s == "displaced" {
+            return Ok(HaloMode::Displaced { max_staleness: 1 });
+        }
+        if let Some(n) = s.strip_prefix("displaced:") {
+            let max_staleness = n.trim().parse::<usize>().map_err(|_| {
+                Error::Config(format!(
+                    "bad halo staleness budget {n:?} (expected \
+                     displaced:<uint>)"
+                ))
+            })?;
+            return Ok(HaloMode::Displaced { max_staleness });
+        }
+        Err(Error::Config(format!(
+            "unknown halo mode {s:?} (expected sync | displaced | \
+             displaced:N)"
+        )))
+    }
+
+    pub fn as_string(self) -> String {
+        match self {
+            HaloMode::Sync => "sync".into(),
+            HaloMode::Displaced { max_staleness } => {
+                format!("displaced:{max_staleness}")
+            }
+        }
+    }
+}
+
 /// How the engine executes a request (DESIGN.md §4).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExecMode {
@@ -176,6 +246,10 @@ pub struct EngineConfig {
     pub comm: CommConfig,
     pub mode: ExecMode,
     pub replan: ReplanConfig,
+    /// Halo-exchange mode at sync points. Per-request quality tiers
+    /// can only *tighten* the budget (effective budget =
+    /// `min(config, tier)`), never loosen it.
+    pub halo: HaloMode,
 }
 
 impl EngineConfig {
@@ -193,6 +267,7 @@ impl EngineConfig {
             comm: CommConfig::default(),
             mode: ExecMode::Dataflow,
             replan: ReplanConfig::default(),
+            halo: HaloMode::default(),
         }
     }
 
@@ -255,6 +330,12 @@ impl EngineConfig {
             return Err(Error::Config(
                 "replan.drift_threshold must be >= 0".into(),
             ));
+        }
+        if self.halo.max_staleness() > 1024 {
+            return Err(Error::Config(format!(
+                "halo staleness budget {} is nonsense (max 1024)",
+                self.halo.max_staleness()
+            )));
         }
         Ok(())
     }
@@ -345,6 +426,10 @@ impl EngineConfig {
                 replan.drift_threshold = x.as_f64()?;
             }
         }
+        let halo = match v.get_opt("halo").map(|x| x.as_str()).transpose()? {
+            Some(s) => HaloMode::parse(s)?,
+            None => HaloMode::default(),
+        };
         let cfg = EngineConfig {
             artifacts_dir,
             devices,
@@ -352,6 +437,7 @@ impl EngineConfig {
             comm,
             mode,
             replan,
+            halo,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -453,6 +539,44 @@ mod tests {
         assert!(bad.validate().is_err());
         let mut bad = EngineConfig::two_gpu_default("a", &[0.0]);
         bad.replan.drift_threshold = -0.5;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn halo_mode_parses_round_trips_and_defaults_sync() {
+        let cfg = EngineConfig::two_gpu_default("artifacts", &[0.0]);
+        assert_eq!(cfg.halo, HaloMode::Sync, "halo must default to sync");
+        assert_eq!(HaloMode::parse("sync").unwrap(), HaloMode::Sync);
+        assert_eq!(
+            HaloMode::parse("displaced").unwrap(),
+            HaloMode::Displaced { max_staleness: 1 }
+        );
+        assert_eq!(
+            HaloMode::parse("displaced:3").unwrap(),
+            HaloMode::Displaced { max_staleness: 3 }
+        );
+        for m in [
+            HaloMode::Sync,
+            HaloMode::Displaced { max_staleness: 0 },
+            HaloMode::Displaced { max_staleness: 7 },
+        ] {
+            assert_eq!(HaloMode::parse(&m.as_string()).unwrap(), m);
+        }
+        assert!(HaloMode::parse("async").is_err());
+        assert!(HaloMode::parse("displaced:-1").is_err());
+        assert!(HaloMode::parse("displaced:x").is_err());
+        // JSON plumbing: `"halo"` is a string field of the config.
+        let text = r#"{
+            "devices": [{"name": "g0"}],
+            "halo": "displaced:2"
+        }"#;
+        let cfg = EngineConfig::from_json(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.halo, HaloMode::Displaced { max_staleness: 2 });
+        assert_eq!(cfg.halo.max_staleness(), 2);
+        assert!(cfg.halo.is_displaced());
+        // An absurd budget is a typed config error.
+        let mut bad = EngineConfig::two_gpu_default("a", &[0.0]);
+        bad.halo = HaloMode::Displaced { max_staleness: 4096 };
         assert!(bad.validate().is_err());
     }
 }

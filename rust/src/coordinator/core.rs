@@ -20,7 +20,7 @@
 
 use std::sync::{Arc, Mutex, RwLock, Weak};
 
-use crate::config::{EngineConfig, ExecMode, StadiParams};
+use crate::config::{EngineConfig, ExecMode, HaloMode, StadiParams};
 use crate::coordinator::session::ReplanEvent;
 use crate::coordinator::{dataflow, timeline, Session};
 use crate::device::{build_cluster, CostModel, OccupancySchedule, SimGpu};
@@ -175,6 +175,26 @@ impl EngineCore {
         self.profiler.lock().unwrap().effective_speeds()
     }
 
+    /// The halo mode a request runs under: per-request quality tiers
+    /// can only *tighten* the configured staleness budget, so a
+    /// high-quality request on a displaced engine runs with budget 0 —
+    /// the byte-identical synchronous path. `None` (no spec) keeps the
+    /// engine's configured budget.
+    pub fn effective_halo(&self, spec: Option<&GenerationSpec>) -> HaloMode {
+        match self.config.halo {
+            HaloMode::Sync => HaloMode::Sync,
+            HaloMode::Displaced { max_staleness } => {
+                let budget = match spec {
+                    Some(s) => {
+                        max_staleness.min(s.quality.staleness_budget())
+                    }
+                    None => max_staleness,
+                };
+                HaloMode::Displaced { max_staleness: budget }
+            }
+        }
+    }
+
     /// Feed one measured step back into the shared profiler (sessions
     /// call this on completion; exposed for benches that execute plans
     /// through the low-level executors).
@@ -282,10 +302,33 @@ impl EngineCore {
         } else {
             Some((res.h, res.w))
         };
+        let halo = self.effective_halo(Some(spec));
         let key = PlanKey::new(&params, rows, &snap.devices, &snap.speeds)
-            .with_res(res_key);
+            .with_res(res_key)
+            .with_halo(halo);
         self.plans.get_or_build_at(snap.epoch, key, || {
             if params.cost_aware && params.spatial {
+                // Displaced-halo engines price the split comm-aware:
+                // sync-effective plans carry the blocking x-gather
+                // term, displaced plans drop it (the transfers mask
+                // under compute). Sync engines keep the legacy
+                // compute-only allocator, byte for byte.
+                if self.config.halo.is_displaced() {
+                    let bytes_per_row =
+                        spec.latent_cols(m.latent_w) * m.latent_c * 4;
+                    return Plan::build_cost_aware_with_comm(
+                        &self.schedule,
+                        &snap.speeds,
+                        &snap.names,
+                        &params,
+                        &snap.cluster[0].cost,
+                        &self.config.comm,
+                        halo,
+                        bytes_per_row,
+                        rows,
+                        granularity,
+                    );
+                }
                 return Plan::build_cost_aware(
                     &self.schedule,
                     &snap.speeds,
@@ -412,7 +455,14 @@ impl EngineCore {
         let model = self.exec.registry().get(res)?.model.clone();
         let snap = self.whole_cluster_parts();
         let plan = self.plan_snapshot(spec, &snap)?;
-        Ok(Session::new(self.owned(), plan, snap.cluster, res, model))
+        Ok(Session::new(
+            self.owned(),
+            plan,
+            snap.cluster,
+            res,
+            model,
+            self.effective_halo(Some(spec)),
+        ))
     }
 
     /// Open an execution session on an explicit plan — the escape
@@ -428,6 +478,7 @@ impl EngineCore {
             self.cluster(),
             native.key,
             native.model.clone(),
+            self.effective_halo(None),
         )
     }
 
@@ -457,6 +508,7 @@ impl EngineCore {
             lease.devices().to_vec(),
             res,
             model,
+            self.effective_halo(Some(spec)),
         ))
     }
 
@@ -494,12 +546,17 @@ impl EngineCore {
         // same floats).
         let native = &self.exec.manifest().model;
         let res = self.spec_res(spec);
+        // The predictor prices the request's halo mode too: displaced
+        // exchanges mostly mask under compute, so a displaced engine
+        // admits comm-bound shapes a sync engine would refuse.
+        let halo = self.effective_halo(Some(spec));
         if res.w == native.latent_w {
-            let tl = timeline::simulate(
+            let tl = timeline::simulate_with(
                 &plan,
                 &snap.cluster,
                 &self.config.comm,
                 native,
+                halo,
             )?;
             return Ok(tl.total_s);
         }
@@ -507,11 +564,12 @@ impl EngineCore {
         let ratio = res.w as f64 / native.latent_w as f64;
         let cluster =
             crate::device::scale_cluster_per_row(&snap.cluster, ratio);
-        let tl = timeline::simulate(
+        let tl = timeline::simulate_with(
             &plan,
             &cluster,
             &self.config.comm,
             &model,
+            halo,
         )?;
         Ok(tl.total_s)
     }
@@ -531,11 +589,12 @@ impl EngineCore {
     /// current cluster.
     pub fn simulate_latency(&self, plan: &Plan) -> Result<timeline::Timeline> {
         let cluster = self.cluster.read().unwrap();
-        timeline::simulate(
+        timeline::simulate_with(
             plan,
             &cluster,
             &self.config.comm,
             &self.exec.manifest().model,
+            self.effective_halo(None),
         )
     }
 

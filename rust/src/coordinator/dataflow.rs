@@ -15,6 +15,7 @@
 
 use std::time::Instant;
 
+use crate::config::HaloMode;
 use crate::error::{Error, Result};
 use crate::model::latents::token_range;
 use crate::model::sampler;
@@ -38,6 +39,11 @@ pub struct ExecStats {
     pub kv_bytes: u64,
     /// Number of sync points executed.
     pub syncs: usize,
+    /// Sync points served by displaced (stale, non-blocking) halos.
+    pub halo_displaced: usize,
+    /// Sync points served by the blocking exchange (all of them under
+    /// [`HaloMode::Sync`] or a zero staleness budget).
+    pub halo_fallback: usize,
 }
 
 /// Result of one request.
@@ -60,7 +66,15 @@ pub fn execute(
     cond: &[f32],
 ) -> Result<RequestOutput> {
     let native = exec.registry().native();
-    execute_at(exec, native.key, &native.model, plan, noise, cond)
+    execute_at(
+        exec,
+        native.key,
+        &native.model,
+        plan,
+        noise,
+        cond,
+        HaloMode::Sync,
+    )
 }
 
 /// Run one request through the plan's dataflow against a registered
@@ -73,10 +87,37 @@ pub fn execute_at(
     plan: &Plan,
     noise: &Tensor,
     cond: &[f32],
+    halo: HaloMode,
 ) -> Result<RequestOutput> {
     let mut st = ExecState::new(model, plan.devices.len(), noise);
-    run_span(exec, res, model, plan, &mut st, plan.sync_points.len(), cond)?;
+    run_span(
+        exec,
+        res,
+        model,
+        plan,
+        &mut st,
+        plan.sync_points.len(),
+        cond,
+        halo,
+    )?;
     finish(plan, st)
+}
+
+/// One device's boundary payload at a sync point: the fresh x patch
+/// and the KV block covering its token range.
+#[derive(Clone)]
+pub struct HaloPayload {
+    pub device: usize,
+    pub x_patch: Tensor,
+    pub kv_block: Tensor,
+}
+
+/// Published payloads of one sync point, retained so later displaced
+/// sync points can consume them stale.
+pub struct HaloEntry {
+    /// Plan-local sync index the payloads were published at.
+    pub sync: usize,
+    pub payloads: Vec<HaloPayload>,
 }
 
 /// Checkpointable executor state: full per-device buffers, per-plan
@@ -90,6 +131,13 @@ pub struct ExecState {
     /// Per-device step cursor within the *current* plan.
     pub cursor: Vec<usize>,
     pub stats: ExecStats,
+    /// Plan-local sync points completed. Resets with the cursors on a
+    /// re-plan — the halo history below is indexed by this counter.
+    pub synced: usize,
+    /// Recent sync points' published payloads, newest last. Only
+    /// populated under a positive staleness budget; a displaced sync
+    /// point `si` consumes the entry published at `si - budget`.
+    pub halo: Vec<HaloEntry>,
 }
 
 impl ExecState {
@@ -104,19 +152,37 @@ impl ExecState {
                 steps_run: vec![0; n_dev],
                 ..Default::default()
             },
+            synced: 0,
+            halo: Vec::new(),
         }
     }
 
     /// Switch to a re-planned continuation: cursors reset, buffers and
     /// stats persist (the new plan's devices line up index-for-index).
+    /// Published halos are invalidated — migrated rows make the old
+    /// payload row ranges meaningless, so the first post-re-plan sync
+    /// points fall back to the blocking exchange until the history
+    /// refills.
     pub fn reset_cursors(&mut self) {
         for c in self.cursor.iter_mut() {
             *c = 0;
         }
+        self.synced = 0;
+        self.halo.clear();
     }
 }
 
 /// Run `n_syncs` sync intervals of `plan` from `st`'s position.
+///
+/// Under [`HaloMode::Displaced`] with a positive budget, sync points
+/// the plan marks safe ([`Plan::displaced_fallback`] is false) consume
+/// peers' payloads published `budget` sync points ago instead of the
+/// fresh ones — the numerical face of the non-blocking exchange the
+/// timeline overlaps with compute. Every sync point still *publishes*
+/// fresh payloads, so staleness never exceeds the budget. A zero
+/// budget (or `HaloMode::Sync`) is byte-identical to the legacy
+/// blocking exchange.
+#[allow(clippy::too_many_arguments)]
 pub fn run_span(
     exec: &ExecHandle,
     res: ResKey,
@@ -125,6 +191,7 @@ pub fn run_span(
     st: &mut ExecState,
     n_syncs: usize,
     cond: &[f32],
+    halo: HaloMode,
 ) -> Result<()> {
     let included: Vec<usize> = plan
         .devices
@@ -138,17 +205,13 @@ pub fn run_span(
     if st.bufs.len() != plan.devices.len() {
         return Err(Error::Sched("state/plan size mismatch".into()));
     }
-    let ExecState { bufs, cursor, stats } = st;
-
-    // Pending per-device publications at the current sync point.
-    struct Publish {
-        device: usize,
-        x_patch: Tensor,
-        kv_block: Tensor,
-    }
+    let budget = halo.max_staleness();
+    let ExecState { bufs, cursor, stats, synced, halo: history } = st;
 
     for _ in 0..n_syncs {
-        let mut published: Vec<Publish> = Vec::with_capacity(included.len());
+        let si = *synced;
+        let mut published: Vec<HaloPayload> =
+            Vec::with_capacity(included.len());
         for &di in &included {
             let dp = &plan.devices[di];
             let (t0, t1) = token_range(model, dp.rows);
@@ -187,7 +250,7 @@ pub fn run_span(
                 cursor[di] += 1;
 
                 if step.sync {
-                    published.push(Publish {
+                    published.push(HaloPayload {
                         device: di,
                         x_patch: bufs[di]
                             .x
@@ -199,12 +262,14 @@ pub fn run_span(
             }
         }
 
-        // Sync exchange: every device receives every peer's fresh
-        // x patch (synchronous all-gather) and KV block (async publish
-        // consumed at the barrier).
+        // The same payloads move either way — displaced ones just move
+        // off the critical path (the timeline prices the difference).
         for p in &published {
             stats.x_bytes += p.x_patch.byte_len() as u64;
             stats.kv_bytes += p.kv_block.byte_len() as u64;
+        }
+
+        let scatter = |bufs: &mut Vec<DeviceBuffers>, p: &HaloPayload| {
             let dp = &plan.devices[p.device];
             let (t0, _) = token_range(model, dp.rows);
             for &dj in &included {
@@ -214,10 +279,72 @@ pub fn run_span(
                 bufs[dj].x.scatter_rows(dp.rows.row0, &p.x_patch);
                 bufs[dj].scatter_kv(t0, &p.kv_block);
             }
+        };
+
+        if plan.displaced_fallback(si, budget) {
+            // Blocking exchange: every device receives every peer's
+            // fresh x patch and KV block at the barrier.
+            stats.halo_fallback += 1;
+            for p in &published {
+                scatter(bufs, p);
+            }
+        } else {
+            // Displaced exchange: consume the peers' payloads from
+            // `budget` sync points ago; the fresh ones were published
+            // asynchronously and will be consumed later.
+            stats.halo_displaced += 1;
+            let entry = history
+                .iter()
+                .find(|e| e.sync == si - budget)
+                .ok_or_else(|| {
+                    Error::Sched(format!(
+                        "displaced sync {si}: no published halo for sync {}",
+                        si - budget
+                    ))
+                })?;
+            for p in &entry.payloads {
+                scatter(bufs, p);
+            }
+        }
+
+        if budget > 0 {
+            history.push(HaloEntry { sync: si, payloads: published });
+            while history.len() > budget + 1 {
+                history.remove(0);
+            }
         }
         stats.syncs += 1;
+        *synced += 1;
     }
     Ok(())
+}
+
+/// Restore the fully-fresh buffer invariant: exchange every included
+/// device's own rows and KV block with all peers, as one blocking
+/// barrier would. Used before a mid-flight re-plan migrates row
+/// ownership while displaced halos are in flight — a numeric no-op
+/// when the buffers were already fresh (e.g. the barrier landed on a
+/// fallback sync point).
+pub fn refresh_buffers(model: &ModelInfo, plan: &Plan, st: &mut ExecState) {
+    let included: Vec<usize> = plan
+        .devices
+        .iter()
+        .filter(|d| d.included())
+        .map(|d| d.device)
+        .collect();
+    for &di in &included {
+        let dp = &plan.devices[di];
+        let (t0, t1) = token_range(model, dp.rows);
+        let x_patch = st.bufs[di].x.slice_rows(dp.rows.row0, dp.rows.rows);
+        let kv_block = st.bufs[di].gather_kv(t0, t1 - t0);
+        for &dj in &included {
+            if dj == di {
+                continue;
+            }
+            st.bufs[dj].x.scatter_rows(dp.rows.row0, &x_patch);
+            st.bufs[dj].scatter_kv(t0, &kv_block);
+        }
+    }
 }
 
 /// Drain-check the final plan and extract the finished request.

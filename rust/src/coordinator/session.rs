@@ -15,7 +15,7 @@
 
 use std::sync::Arc;
 
-use crate::config::ExecMode;
+use crate::config::{ExecMode, HaloMode};
 use crate::coordinator::core::{EngineCore, Generation};
 use crate::coordinator::{dataflow, threaded, timeline};
 use crate::device::SimGpu;
@@ -59,6 +59,9 @@ pub struct Session {
     /// The model geometry re-based onto that resolution (native
     /// sessions carry the base model unchanged).
     model: ModelInfo,
+    /// Effective halo mode: the engine's configured mode, tightened by
+    /// the request's quality tier (see [`EngineCore::effective_halo`]).
+    halo: HaloMode,
 }
 
 impl Session {
@@ -68,13 +71,15 @@ impl Session {
         cluster: Vec<SimGpu>,
         res: ResKey,
         model: ModelInfo,
+        halo: HaloMode,
     ) -> Self {
         let device_map = (0..cluster.len()).collect();
-        Session { core, plan, cluster, device_map, res, model }
+        Session { core, plan, cluster, device_map, res, model, halo }
     }
 
     /// A session over a device subset: `plan`/`cluster` are indexed
     /// locally (0..k), `device_map[local]` names the global device.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn with_map(
         core: Arc<EngineCore>,
         plan: Plan,
@@ -82,14 +87,20 @@ impl Session {
         device_map: Vec<usize>,
         res: ResKey,
         model: ModelInfo,
+        halo: HaloMode,
     ) -> Self {
         debug_assert_eq!(cluster.len(), device_map.len());
-        Session { core, plan, cluster, device_map, res, model }
+        Session { core, plan, cluster, device_map, res, model, halo }
     }
 
     /// The plan this session executes (pinned at session creation).
     pub fn plan(&self) -> &Plan {
         &self.plan
+    }
+
+    /// The halo mode this session executes under.
+    pub fn halo(&self) -> HaloMode {
+        self.halo
     }
 
     /// Global device ids this session runs on, in local index order.
@@ -139,6 +150,7 @@ impl Session {
         let out = match self.core.mode() {
             ExecMode::Dataflow => dataflow::execute_at(
                 exec, self.res, &model, &self.plan, &noise, &cond,
+                self.halo,
             )?,
             ExecMode::Threaded => threaded::execute_at(
                 exec,
@@ -149,6 +161,7 @@ impl Session {
                 &noise,
                 &cond,
                 true,
+                self.halo,
             )?,
         };
         // Feed measured per-step compute back into the shared profiler
@@ -189,11 +202,12 @@ impl Session {
             &self.cluster,
             width_ratio,
         );
-        let tl = timeline::simulate(
+        let tl = timeline::simulate_with(
             &self.plan,
             &tl_cluster,
             &self.core.config().comm,
             &model,
+            self.halo,
         )?;
         Ok(Generation {
             latent: out.latent,
@@ -287,6 +301,7 @@ impl Session {
             match self.core.mode() {
                 ExecMode::Dataflow => dataflow::run_span(
                     exec, self.res, &model, &cur, &mut st, span, &cond,
+                    self.halo,
                 )?,
                 ExecMode::Threaded => threaded::run_span_at(
                     exec,
@@ -298,6 +313,7 @@ impl Session {
                     &mut st,
                     span,
                     true,
+                    self.halo,
                 )?,
             }
             timeline::simulate_span(
@@ -308,6 +324,7 @@ impl Session {
                 drift.map(|d| (d, self.device_map.as_slice())),
                 &mut sim,
                 span,
+                self.halo,
             )?;
             for d in cur.included_devices() {
                 let delta =
@@ -392,6 +409,21 @@ impl Session {
                 migration_bytes: bytes,
                 classes_changed: rp.classes_changed,
             });
+            // Re-plans invalidate published halos: with a positive
+            // staleness budget the barrier may sit on a *displaced*
+            // sync point, where peer rows are stale — migrating row
+            // ownership there would bake staleness into the new
+            // owners. Restore the fully-fresh invariant with a
+            // blocking full exchange (a numeric no-op when the barrier
+            // happened to be a fallback sync), flush the in-flight
+            // displaced transfers onto the clock, and drop the history
+            // (`reset_cursors` below) so the new plan's first `budget`
+            // sync points re-fill it via fallback.
+            if self.halo.max_staleness() > 0 {
+                dataflow::refresh_buffers(&model, &cur, &mut st);
+                sim.flush_debts();
+                sim.charge_refresh(comm, &cur, &model);
+            }
             cur = rp.plan;
             synced_in_cur = 0;
             st.reset_cursors();

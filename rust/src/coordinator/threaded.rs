@@ -15,6 +15,7 @@ use std::thread;
 use std::time::Instant;
 
 use crate::comm::CollectiveBus;
+use crate::config::HaloMode;
 use crate::device::SimGpu;
 use crate::error::{Error, Result};
 use crate::model::latents::token_range;
@@ -24,7 +25,13 @@ use crate::runtime::tensor::Tensor;
 use crate::runtime::ExecHandle;
 use crate::sched::plan::Plan;
 
-use super::dataflow::{ExecState, RequestOutput};
+use super::dataflow::{ExecState, HaloEntry, HaloPayload, RequestOutput};
+
+/// A worker's private view of recent sync points' payloads: plan-local
+/// sync index -> (device -> raw `[x || kv]` payload). Entries are
+/// `Arc`-shared with the bus mailboxes, so keeping a history window is
+/// cheap.
+type LocalHistory = Vec<(usize, Vec<(usize, Arc<Vec<f32>>)>)>;
 
 /// Run one request with real worker threads at the native resolution
 /// (the legacy entry point).
@@ -46,6 +53,7 @@ pub fn execute(
         noise,
         cond,
         stretch,
+        HaloMode::Sync,
     )
 }
 
@@ -61,6 +69,7 @@ pub fn execute_at(
     noise: &Tensor,
     cond: &[f32],
     stretch: bool,
+    halo: HaloMode,
 ) -> Result<RequestOutput> {
     let mut st = ExecState::new(model, plan.devices.len(), noise);
     run_span_at(
@@ -73,6 +82,7 @@ pub fn execute_at(
         &mut st,
         plan.sync_points.len(),
         stretch,
+        halo,
     )?;
     super::dataflow::finish(plan, st)
 }
@@ -95,6 +105,7 @@ pub fn run_span_at(
     st: &mut ExecState,
     n_syncs: usize,
     stretch: bool,
+    halo: HaloMode,
 ) -> Result<()> {
     let included: Vec<usize> = plan
         .devices
@@ -108,12 +119,40 @@ pub fn run_span_at(
     if st.bufs.len() != plan.devices.len() {
         return Err(Error::Sched("state/plan size mismatch".into()));
     }
+    let budget = halo.max_staleness();
     let bus = CollectiveBus::new();
     let cond: Arc<Vec<f32>> = Arc::new(cond.to_vec());
-    let ExecState { bufs, cursor, stats } = st;
+    let ExecState { bufs, cursor, stats, synced, halo: history } = st;
     let cursors: Vec<usize> = cursor.clone();
+    let synced0 = *synced;
+    // The fallback decision is plan-global per sync point, so every
+    // worker takes the same branch at the same barrier — precompute it
+    // once for the span.
+    let fallback_map: Vec<bool> = (0..n_syncs)
+        .map(|k| plan.displaced_fallback(synced0 + k, budget))
+        .collect();
+    // Seed each worker's private history window from the state (the
+    // bus — and with it every per-sync mailbox — dies at span end, so
+    // payloads a later span's displaced sync will consume stale must
+    // ride through `ExecState`).
+    let seed_history: LocalHistory = history
+        .iter()
+        .map(|e| {
+            let payloads = e
+                .payloads
+                .iter()
+                .map(|p| {
+                    let mut data = p.x_patch.data.clone();
+                    data.extend_from_slice(&p.kv_block.data);
+                    (p.device, Arc::new(data))
+                })
+                .collect();
+            (e.sync, payloads)
+        })
+        .collect();
 
-    let mut results: Vec<(usize, Result<(usize, f64, usize)>)> =
+    type WorkerOut = (usize, f64, usize, LocalHistory);
+    let mut results: Vec<(usize, Result<WorkerOut>)> =
         Vec::with_capacity(included.len());
     thread::scope(|scope| {
         let mut handles = Vec::new();
@@ -129,14 +168,45 @@ pub fn run_span_at(
             let included = included.clone();
             let gpu = &cluster[di];
             let cursor0 = cursors[di];
+            let fallback_map = &fallback_map;
+            let seed_history = &seed_history;
             handles.push((
                 di,
-                scope.spawn(move || -> Result<(usize, f64, usize)> {
+                scope.spawn(move || -> Result<WorkerOut> {
                     let (t0, t1) = token_range(model, plan_dev.rows);
                     let mut compute_s = 0.0f64;
                     let mut steps_run = 0usize;
                     let mut cur = cursor0;
                     let mut syncs_left = n_syncs;
+                    let mut local: LocalHistory = seed_history.clone();
+                    // Reconstruct a peer's [x || kv] payload and
+                    // scatter it into this worker's buffers (the row
+                    // and token ranges are peer-disjoint, so scatter
+                    // order is immaterial).
+                    let scatter_peer = |bufs: &mut super::buffers::DeviceBuffers,
+                                        peer: usize,
+                                        data: &[f32]|
+                     -> Result<()> {
+                        let pr = all_devices[peer].rows;
+                        let x_len =
+                            pr.rows * model.latent_w * model.latent_c;
+                        let patch = Tensor::new(
+                            vec![
+                                pr.rows,
+                                model.latent_w,
+                                model.latent_c,
+                            ],
+                            data[..x_len].to_vec(),
+                        )?;
+                        bufs.x.scatter_rows(pr.row0, &patch);
+                        let (p0, p1) = token_range(model, pr);
+                        let block = Tensor::new(
+                            vec![model.layers, p1 - p0, 2 * model.dim],
+                            data[x_len..].to_vec(),
+                        )?;
+                        bufs.scatter_kv(p0, &block);
+                        Ok(())
+                    };
                     while syncs_left > 0 {
                         let step =
                             plan_dev.steps.get(cur).ok_or_else(|| {
@@ -175,18 +245,16 @@ pub fn run_span_at(
                         cur += 1;
 
                         if step.sync {
-                            // One uneven all-gather carries [x_patch ||
-                            // kv block]: the x half is the synchronous
+                            // One payload carries [x_patch || kv
+                            // block]: the x half is the synchronous
                             // output gather of Alg. 1, the kv half is
-                            // the buffer update. Bundling them in the
-                            // barrier pins the staleness semantics to
-                            // the *sync point* (a peer racing ahead can
-                            // never leak a fresher buffer into this
-                            // interval), which is what makes threaded
-                            // numerics bit-equal to the dataflow
-                            // executor. Transfer-cost-wise the kv half
-                            // is still modeled as maskable-async by the
-                            // timeline simulator.
+                            // the buffer update. Bundling them pins the
+                            // staleness semantics to the *sync point*
+                            // (a peer racing ahead can never leak a
+                            // fresher buffer into this interval), which
+                            // is what makes threaded numerics bit-equal
+                            // to the dataflow executor.
+                            let si = synced0 + (n_syncs - syncs_left);
                             let own = bufs.x.slice_rows(
                                 plan_dev.rows.row0,
                                 plan_dev.rows.rows,
@@ -195,44 +263,102 @@ pub fn run_span_at(
                             payload.extend_from_slice(
                                 &bufs.gather_kv(t0, t1 - t0).data,
                             );
-                            let gathered = bus.all_gather(
-                                "sync",
-                                plan_dev.device,
-                                &included,
-                                payload,
-                            )?;
-                            for (&peer, data) in &gathered {
-                                if peer == plan_dev.device {
-                                    continue;
+                            if fallback_map[n_syncs - syncs_left] {
+                                // Blocking exchange: the uneven
+                                // all-gather carries every payload
+                                // through the barrier.
+                                let gathered = bus.all_gather(
+                                    "sync",
+                                    plan_dev.device,
+                                    &included,
+                                    payload,
+                                )?;
+                                for (&peer, data) in &gathered {
+                                    if peer == plan_dev.device {
+                                        continue;
+                                    }
+                                    scatter_peer(bufs, peer, data)?;
                                 }
-                                let pr = all_devices[peer].rows;
-                                let x_len = pr.rows
-                                    * model.latent_w
-                                    * model.latent_c;
-                                let patch = Tensor::new(
-                                    vec![
-                                        pr.rows,
-                                        model.latent_w,
-                                        model.latent_c,
-                                    ],
-                                    data[..x_len].to_vec(),
+                                if budget > 0 {
+                                    local.push((
+                                        si,
+                                        gathered
+                                            .into_iter()
+                                            .map(|(d, v)| (d, Arc::new(v)))
+                                            .collect(),
+                                    ));
+                                    while local.len() > budget + 1 {
+                                        local.remove(0);
+                                    }
+                                }
+                            } else {
+                                // Displaced exchange: publish the fresh
+                                // payload to this sync point's private
+                                // channel, join an *empty* barrier (a
+                                // publish happens-before its
+                                // publisher's barrier join, so after
+                                // the barrier every peer's fresh halo
+                                // is visible and exactly version 1 on
+                                // its channel), record everyone's fresh
+                                // payload, then consume the entry from
+                                // `budget` sync points ago.
+                                let ch = format!("halo:{si}");
+                                bus.publish(
+                                    plan_dev.device,
+                                    &ch,
+                                    payload,
+                                );
+                                bus.all_gather(
+                                    "sync",
+                                    plan_dev.device,
+                                    &included,
+                                    Vec::new(),
                                 )?;
-                                bufs.x.scatter_rows(pr.row0, &patch);
-                                let (p0, p1) = token_range(model, pr);
-                                let block = Tensor::new(
-                                    vec![
-                                        model.layers,
-                                        p1 - p0,
-                                        2 * model.dim,
-                                    ],
-                                    data[x_len..].to_vec(),
-                                )?;
-                                bufs.scatter_kv(p0, &block);
+                                let mut fresh: Vec<(
+                                    usize,
+                                    Arc<Vec<f32>>,
+                                )> = Vec::with_capacity(included.len());
+                                for &peer in &included {
+                                    let data = bus
+                                        .peek(peer, &ch)
+                                        .ok_or_else(|| {
+                                            Error::Comm(format!(
+                                                "device {peer}: no halo \
+                                                 published at sync {si}"
+                                            ))
+                                        })?;
+                                    debug_assert_eq!(
+                                        bus.peek_version(peer, &ch),
+                                        1
+                                    );
+                                    fresh.push((peer, data));
+                                }
+                                local.push((si, fresh));
+                                while local.len() > budget + 1 {
+                                    local.remove(0);
+                                }
+                                let stale = local
+                                    .iter()
+                                    .find(|e| e.0 == si - budget)
+                                    .ok_or_else(|| {
+                                        Error::Comm(format!(
+                                            "no halo history for sync {}",
+                                            si - budget
+                                        ))
+                                    })?;
+                                let stale: Vec<(usize, Arc<Vec<f32>>)> =
+                                    stale.1.clone();
+                                for (peer, data) in &stale {
+                                    if *peer == plan_dev.device {
+                                        continue;
+                                    }
+                                    scatter_peer(bufs, *peer, data)?;
+                                }
                             }
                             syncs_left -= 1;
                         }
                     }
-                    Ok((cur, compute_s, steps_run))
+                    Ok((cur, compute_s, steps_run, local))
                 }),
             ));
         }
@@ -245,18 +371,62 @@ pub fn run_span_at(
         }
     });
 
+    let mut merged: Option<LocalHistory> = None;
     for (di, r) in results {
-        let (cur, compute_s, steps_run) = r?;
+        let (cur, compute_s, steps_run, local) = r?;
         cursor[di] = cur;
         stats.compute_s[di] += compute_s;
         stats.steps_run[di] += steps_run;
+        // Every worker's history window holds the same payloads (each
+        // peeked the same channels); persist the first one.
+        if merged.is_none() {
+            merged = Some(local);
+        }
     }
+    if budget > 0 {
+        if let Some(local) = merged {
+            *history = local
+                .into_iter()
+                .map(|(sync, payloads)| -> Result<HaloEntry> {
+                    let payloads = payloads
+                        .into_iter()
+                        .map(|(device, data)| -> Result<HaloPayload> {
+                            let pr = plan.devices[device].rows;
+                            let x_len =
+                                pr.rows * model.latent_w * model.latent_c;
+                            let x_patch = Tensor::new(
+                                vec![
+                                    pr.rows,
+                                    model.latent_w,
+                                    model.latent_c,
+                                ],
+                                data[..x_len].to_vec(),
+                            )?;
+                            let (p0, p1) = token_range(model, pr);
+                            let kv_block = Tensor::new(
+                                vec![model.layers, p1 - p0, 2 * model.dim],
+                                data[x_len..].to_vec(),
+                            )?;
+                            Ok(HaloPayload { device, x_patch, kv_block })
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    Ok(HaloEntry { sync, payloads })
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+    }
+    *synced += n_syncs;
     stats.syncs += n_syncs;
-    // The bundled barrier moves x+kv together; split accounting
-    // analytically (every sync, every included device contributes its
-    // x patch and kv block).
+    let displaced = fallback_map.iter().filter(|f| !**f).count();
+    stats.halo_displaced += displaced;
+    stats.halo_fallback += n_syncs - displaced;
+    // The payloads move x+kv together; split accounting analytically
+    // (every sync, every included device contributes its x patch and
+    // kv block — fallback syncs through the gather, displaced syncs
+    // through async publishes, with only the empty barrier in the
+    // gather path).
     let syncs = n_syncs as u64;
-    let mut span_bytes = 0u64;
+    let mut per_sync = 0u64;
     for &di in &included {
         let d = &plan.devices[di];
         let x = (d.rows.rows * model.latent_w * model.latent_c * 4) as u64;
@@ -267,9 +437,13 @@ pub fn run_span_at(
             * 4) as u64;
         stats.x_bytes += syncs * x;
         stats.kv_bytes += syncs * kv;
-        span_bytes += syncs * (x + kv);
+        per_sync += x + kv;
     }
-    debug_assert_eq!(span_bytes, bus.bytes_gathered());
+    debug_assert_eq!(
+        (n_syncs - displaced) as u64 * per_sync,
+        bus.bytes_gathered()
+    );
+    debug_assert_eq!(displaced as u64 * per_sync, bus.bytes_published());
     Ok(())
 }
 

@@ -13,9 +13,23 @@
 //! afterwards KV publishes are asynchronous and overlap with the next
 //! interval's compute, charging only their unmasked remainder — the
 //! paper's "mask communication latency within computation".
+//!
+//! Displaced halo mode ([`HaloMode::Displaced`]) generalizes the
+//! async-KV masking to the x exchange: a non-fallback sync publishes
+//! both x and KV without blocking, and the transfer cost joins a
+//! deadline-FIFO *debt queue*. Each subsequent interval drains the
+//! queue under its minimum compute time (the transfer rides behind
+//! whichever device finishes first); a debt that reaches its deadline
+//! — the sync interval whose consumers need the data, `publish +
+//! max_staleness` — surfaces its remainder as blocking comm. The
+//! synchronous path is the single-entry, deadline-next-interval
+//! special case of the same queue, float-identical to the original
+//! arithmetic.
 
-use crate::comm::{all_gather_cost, all_reduce_cost, p2p_cost};
-use crate::config::CommConfig;
+use crate::comm::{
+    all_gather_cost, all_reduce_cost, displaced_exchange_cost, p2p_cost,
+};
+use crate::config::{CommConfig, HaloMode};
 use crate::device::{OccupancySchedule, SimGpu};
 use crate::error::{Error, Result};
 use crate::runtime::artifacts::ModelInfo;
@@ -32,6 +46,14 @@ pub struct Timeline {
     pub idle_s: Vec<f64>,
     /// Blocking communication seconds on the critical path.
     pub comm_s: f64,
+    /// Per-device transfer seconds hidden *behind* compute (async KV
+    /// and displaced halo exchanges that never surfaced).
+    pub overlap_s: Vec<f64>,
+    /// Sync intervals that ran the displaced (non-blocking) exchange.
+    pub halo_displaced: usize,
+    /// Sync intervals that ran the blocking exchange (every interval
+    /// under `HaloMode::Sync`).
+    pub halo_fallback: usize,
     /// Mean utilization of included devices: busy / total.
     pub utilization: f64,
 }
@@ -59,10 +81,20 @@ pub struct SimState {
     pub now: f64,
     /// Blocking communication seconds so far.
     pub comm_s: f64,
-    /// Unmasked async-KV debt carried into the next interval.
-    pub kv_debt: f64,
+    /// Outstanding async-transfer debts, FIFO by publish order: each
+    /// entry is `(deadline, remaining_s)` where `deadline` is the
+    /// plan-local sync index by which the transfer must complete
+    /// (consumers read the data there); remainders surface as blocking
+    /// comm at the deadline. The synchronous path keeps at most one
+    /// entry (the async-KV publish, deadline = next interval).
+    pub debts: Vec<(usize, f64)>,
     /// Sync points completed within the current plan.
     pub synced: usize,
+    /// Per-device transfer seconds hidden behind compute.
+    pub overlap_s: Vec<f64>,
+    /// Displaced / blocking exchange counters (see [`Timeline`]).
+    pub halo_displaced: usize,
+    pub halo_fallback: usize,
 }
 
 impl SimState {
@@ -73,18 +105,71 @@ impl SimState {
             busy: vec![0.0; n],
             now: 0.0,
             comm_s: 0.0,
-            kv_debt: 0.0,
+            debts: Vec::new(),
             synced: 0,
+            overlap_s: vec![0.0; n],
+            halo_displaced: 0,
+            halo_fallback: 0,
         }
     }
 
     /// Switch to a re-planned continuation: per-plan positions reset,
-    /// clocks and drift counters persist.
+    /// clocks and drift counters persist. Outstanding transfer debts
+    /// survive the switch with their deadlines rebased into the new
+    /// plan's sync coordinates (a deadline at or before the barrier
+    /// becomes 0 — overdue, charged at the next interval).
     pub fn switch_plan(&mut self) {
         for c in self.cursor.iter_mut() {
             *c = 0;
         }
+        for e in self.debts.iter_mut() {
+            e.0 = e.0.saturating_sub(self.synced);
+        }
         self.synced = 0;
+    }
+
+    /// Drop outstanding transfer debts and charge them as blocking
+    /// comm *now* — the timeline side of a halo invalidation (a
+    /// re-plan under displaced halos migrates rows, so published
+    /// halos for them are void and a fresh blocking exchange runs).
+    pub fn flush_debts(&mut self) {
+        let due: f64 = self.debts.iter().map(|&(_, r)| r).sum();
+        self.debts.clear();
+        if due > 0.0 {
+            self.now += due;
+            self.comm_s += due;
+        }
+    }
+
+    /// Charge the blocking full exchange a halo invalidation runs at a
+    /// re-plan barrier (fresh x patches and KV blocks for `plan`'s —
+    /// the *outgoing* plan's — row ownership).
+    pub fn charge_refresh(
+        &mut self,
+        comm: &CommConfig,
+        plan: &Plan,
+        model: &ModelInfo,
+    ) {
+        let included: Vec<&crate::sched::plan::DevicePlan> =
+            plan.included_devices().collect();
+        let x_sizes: Vec<usize> = included
+            .iter()
+            .map(|d| d.rows.rows * model.latent_w * model.latent_c * 4)
+            .collect();
+        let kv_sizes: Vec<usize> = included
+            .iter()
+            .map(|d| {
+                model.layers
+                    * model.tokens_for_rows(d.rows.rows)
+                    * 2
+                    * model.dim
+                    * 4
+            })
+            .collect();
+        let cost = all_gather_cost(comm, &x_sizes)
+            + all_gather_cost(comm, &kv_sizes);
+        self.now += cost;
+        self.comm_s += cost;
     }
 
     /// Charge a row-migration transfer at a re-plan barrier: the
@@ -131,6 +216,9 @@ impl SimState {
             busy_s: self.busy.clone(),
             idle_s: idle,
             comm_s: self.comm_s,
+            overlap_s: self.overlap_s.clone(),
+            halo_displaced: self.halo_displaced,
+            halo_fallback: self.halo_fallback,
             utilization: util,
         }
     }
@@ -140,7 +228,11 @@ impl SimState {
 /// from `st`'s position. With `drift`, each device's per-step time
 /// follows the occupancy schedule at its own executed-step index;
 /// without, this is arithmetic-identical to the original whole-plan
-/// loop (the static `simulate` is a single full-length span).
+/// loop (the static `simulate` is a single full-length span). `halo`
+/// selects the exchange model: `Sync` blocks on the x all-gather at
+/// every sync point, `Displaced` queues non-fallback exchanges as
+/// deadline debts that drain behind later compute (see module docs).
+#[allow(clippy::too_many_arguments)]
 pub fn simulate_span(
     plan: &Plan,
     cluster: &[SimGpu],
@@ -149,6 +241,7 @@ pub fn simulate_span(
     drift: Option<DriftCtx<'_>>,
     st: &mut SimState,
     n_syncs: usize,
+    halo: HaloMode,
 ) -> Result<()> {
     let n = plan.devices.len();
     if cluster.len() != n || st.cursor.len() != n {
@@ -191,6 +284,7 @@ pub fn simulate_span(
     let kv_sizes: Vec<usize> =
         included.iter().map(|&i| kv_bytes[i]).collect();
 
+    let budget = halo.max_staleness();
     for _ in 0..n_syncs {
         let si = st.synced;
         if si >= plan.sync_points.len() {
@@ -228,40 +322,101 @@ pub fn simulate_span(
             }
             st.busy[di] += t_dev;
             min_compute = min_compute.min(t_dev);
-            arrivals.push(t_dev);
+            arrivals.push((di, t_dev));
         }
-        // Async KV debt from the previous interval masks under this
-        // interval's *minimum* compute (the first device to finish is
-        // the one that could be blocked by unfinished transfers).
-        let unmasked = (st.kv_debt - min_compute).max(0.0);
+        // Outstanding transfer debts mask under this interval's
+        // *minimum* compute (the first device to finish is the one
+        // that could be blocked by unfinished transfers). Per-device
+        // overlap accounting: each device hides up to its own compute
+        // time of the outstanding transfers.
+        let outstanding: f64 = st.debts.iter().map(|&(_, r)| r).sum();
+        if outstanding > 0.0 {
+            for &(di, t_dev) in &arrivals {
+                st.overlap_s[di] += t_dev.min(outstanding);
+            }
+        }
+        let mut drain = min_compute;
+        for e in st.debts.iter_mut() {
+            if drain <= 0.0 {
+                break;
+            }
+            let d = e.1.min(drain);
+            e.1 -= d;
+            drain -= d;
+        }
+        // Debts at (or past) their deadline surface their remainder
+        // as blocking comm; the final interval flushes everything
+        // (trailing publishes cannot hide behind future compute).
+        let last = si == plan.sync_points.len() - 1;
+        let mut unmasked = 0.0;
+        st.debts.retain(|&(deadline, remaining)| {
+            if remaining <= 0.0 {
+                return false;
+            }
+            if deadline <= si || last {
+                unmasked += remaining;
+                return false;
+            }
+            true
+        });
         st.comm_s += unmasked;
 
-        let barrier = arrivals.iter().cloned().fold(0.0, f64::max);
-        let x_cost = all_gather_cost(comm, &x_sizes);
-        st.comm_s += x_cost;
-        let mut t_interval = barrier + unmasked + x_cost;
-        if is_warmup_interval || si == plan.sync_points.len() - 1 {
-            // Warmup: synchronous KV exchange (blocking). The final
-            // interval cannot mask trailing publishes either.
-            let kv_cost = all_gather_cost(comm, &kv_sizes);
-            st.comm_s += kv_cost;
-            t_interval += kv_cost;
-            st.kv_debt = 0.0;
+        let barrier =
+            arrivals.iter().map(|&(_, t)| t).fold(0.0, f64::max);
+        let fallback =
+            !halo.is_displaced() || plan.displaced_fallback(si, budget);
+        if fallback {
+            st.halo_fallback += 1;
+            let x_cost = all_gather_cost(comm, &x_sizes);
+            st.comm_s += x_cost;
+            let mut t_interval = barrier + unmasked + x_cost;
+            if is_warmup_interval || last {
+                // Warmup: synchronous KV exchange (blocking). The
+                // final interval cannot mask trailing publishes
+                // either.
+                let kv_cost = all_gather_cost(comm, &kv_sizes);
+                st.comm_s += kv_cost;
+                t_interval += kv_cost;
+            } else {
+                st.debts
+                    .push((si + 1, all_gather_cost(comm, &kv_sizes)));
+            }
+            st.now += t_interval;
         } else {
-            st.kv_debt = all_gather_cost(comm, &kv_sizes);
+            // Displaced: publish x and KV without blocking. Consumers
+            // read this interval's halos at most `budget` syncs later,
+            // so the transfer must land by then — queue it with that
+            // deadline. Priced by the same α+β model as the blocking
+            // path (see `comm::displaced_exchange_cost`).
+            st.halo_displaced += 1;
+            let async_cost = displaced_exchange_cost(comm, &x_sizes)
+                + displaced_exchange_cost(comm, &kv_sizes);
+            st.debts.push((si + budget, async_cost));
+            st.now += barrier + unmasked;
         }
-        st.now += t_interval;
         st.synced += 1;
     }
     Ok(())
 }
 
-/// Simulate a STADI/patch-parallel plan.
+/// Simulate a STADI/patch-parallel plan under the synchronous halo
+/// exchange (the paper's model; wrapper over [`simulate_with`]).
 pub fn simulate(
     plan: &Plan,
     cluster: &[SimGpu],
     comm: &CommConfig,
     model: &ModelInfo,
+) -> Result<Timeline> {
+    simulate_with(plan, cluster, comm, model, HaloMode::Sync)
+}
+
+/// Simulate a plan under an explicit halo-exchange mode.
+pub fn simulate_with(
+    plan: &Plan,
+    cluster: &[SimGpu],
+    comm: &CommConfig,
+    model: &ModelInfo,
+    halo: HaloMode,
 ) -> Result<Timeline> {
     let mut st = SimState::new(plan.devices.len());
     simulate_span(
@@ -272,6 +427,7 @@ pub fn simulate(
         None,
         &mut st,
         plan.sync_points.len(),
+        halo,
     )?;
     Ok(st.finish(plan))
 }
@@ -296,6 +452,7 @@ pub fn simulate_under_drift(
         Some((sched, map)),
         &mut st,
         plan.sync_points.len(),
+        HaloMode::Sync,
     )?;
     Ok(st.finish(plan))
 }
@@ -348,6 +505,9 @@ pub fn simulate_tensor_parallel(
         busy_s: busy,
         idle_s: idle,
         comm_s: m_steps as f64 * comm_per_step,
+        overlap_s: vec![0.0; n],
+        halo_displaced: 0,
+        halo_fallback: 0,
         utilization: util,
     }
 }
@@ -512,19 +672,186 @@ mod tests {
         let mut done = 0;
         for span in [1usize, 4, 7, 2] {
             let span = span.min(total - done);
-            simulate_span(&plan, &cl, &comm, &m, None, &mut st, span)
-                .unwrap();
+            simulate_span(
+                &plan,
+                &cl,
+                &comm,
+                &m,
+                None,
+                &mut st,
+                span,
+                HaloMode::Sync,
+            )
+            .unwrap();
             done += span;
         }
-        simulate_span(&plan, &cl, &comm, &m, None, &mut st, total - done)
-            .unwrap();
+        simulate_span(
+            &plan,
+            &cl,
+            &comm,
+            &m,
+            None,
+            &mut st,
+            total - done,
+            HaloMode::Sync,
+        )
+        .unwrap();
         let seg = st.finish(&plan);
         assert_eq!(whole.total_s, seg.total_s);
         assert_eq!(whole.busy_s, seg.busy_s);
         assert_eq!(whole.comm_s, seg.comm_s);
         // Running past the end is a typed error, not a panic.
-        let e = simulate_span(&plan, &cl, &comm, &m, None, &mut st, 1);
+        let e = simulate_span(
+            &plan,
+            &cl,
+            &comm,
+            &m,
+            None,
+            &mut st,
+            1,
+            HaloMode::Sync,
+        );
         assert!(e.is_err());
+    }
+
+    #[test]
+    fn displaced_budget_zero_is_float_identical_to_sync() {
+        // Budget 0 ≡ sync: every interval falls back, so the queue
+        // degenerates to today's single-entry arithmetic — same
+        // floats, same counters.
+        let p = StadiParams::default();
+        for speeds in [[1.0, 1.0], [1.0, 0.5], [1.0, 0.33]] {
+            let plan = build_plan(&speeds, &p);
+            let cl = cluster(&[0.0, 1.0 - speeds[1]]);
+            let comm = CommConfig::default();
+            let m = model();
+            let sync = simulate(&plan, &cl, &comm, &m).unwrap();
+            let disp = simulate_with(
+                &plan,
+                &cl,
+                &comm,
+                &m,
+                HaloMode::Displaced { max_staleness: 0 },
+            )
+            .unwrap();
+            assert_eq!(sync.total_s, disp.total_s);
+            assert_eq!(sync.busy_s, disp.busy_s);
+            assert_eq!(sync.comm_s, disp.comm_s);
+            assert_eq!(sync.idle_s, disp.idle_s);
+            assert_eq!(sync.overlap_s, disp.overlap_s);
+            assert_eq!(sync.halo_displaced, disp.halo_displaced);
+            assert_eq!(sync.halo_fallback, disp.halo_fallback);
+            assert_eq!(sync.halo_displaced, 0);
+            assert_eq!(sync.halo_fallback, plan.sync_points.len());
+        }
+    }
+
+    /// A slow-interconnect config where the sync exchange is
+    /// comm-bound (the x gather is a large fraction of each interval).
+    fn slow_comm() -> CommConfig {
+        CommConfig {
+            latency_s: 0.02,
+            bandwidth_bytes_per_s: 2e7,
+            uneven_strategy: crate::config::UnevenStrategy::PadAllGather,
+        }
+    }
+
+    #[test]
+    fn displaced_beats_sync_on_comm_bound_cluster() {
+        let p = StadiParams::default();
+        let plan = build_plan(&[1.0, 0.5], &p);
+        let cl = cluster(&[0.0, 0.5]);
+        let comm = slow_comm();
+        let m = model();
+        let sync = simulate(&plan, &cl, &comm, &m).unwrap();
+        // Comm-bound under sync: blocking comm is a real fraction.
+        assert!(
+            sync.comm_s > 0.2 * sync.total_s,
+            "fixture not comm-bound: comm {} of {}",
+            sync.comm_s,
+            sync.total_s
+        );
+        let mut prev = sync.total_s;
+        for budget in [1usize, 2] {
+            let disp = simulate_with(
+                &plan,
+                &cl,
+                &comm,
+                &m,
+                HaloMode::Displaced { max_staleness: budget },
+            )
+            .unwrap();
+            // Strictly beats sync; never loses to a smaller budget
+            // (equal is fine — with uniform interval times the
+            // steady-state unmasked remainder is inflow minus drain
+            // capacity regardless of deadline depth).
+            assert!(
+                disp.total_s < sync.total_s,
+                "budget {budget}: {} !< {}",
+                disp.total_s,
+                sync.total_s
+            );
+            assert!(disp.total_s <= prev + 1e-12);
+            assert!(disp.comm_s < sync.comm_s);
+            assert!(disp.halo_displaced > 0);
+            // Overlap accounting surfaces the hidden transfers.
+            assert!(disp.overlap_s.iter().sum::<f64>() > 0.0);
+            // Same compute either way — only the comm charging moved.
+            assert_eq!(disp.busy_s, sync.busy_s);
+            prev = disp.total_s;
+        }
+    }
+
+    #[test]
+    fn displaced_segmented_spans_match_whole_run_bit_exactly() {
+        // Debts carry across span boundaries (and their deadlines are
+        // plan-local, so segmentation must not shift them).
+        let p = StadiParams::default();
+        let halo = HaloMode::Displaced { max_staleness: 2 };
+        let plan = build_plan(&[1.0, 0.5], &p);
+        let cl = cluster(&[0.0, 0.5]);
+        let comm = slow_comm();
+        let m = model();
+        let whole = simulate_with(&plan, &cl, &comm, &m, halo).unwrap();
+        let mut st = SimState::new(2);
+        let total = plan.sync_points.len();
+        let mut done = 0;
+        for span in [3usize, 1, 9, 2] {
+            let span = span.min(total - done);
+            simulate_span(&plan, &cl, &comm, &m, None, &mut st, span, halo)
+                .unwrap();
+            done += span;
+        }
+        simulate_span(
+            &plan,
+            &cl,
+            &comm,
+            &m,
+            None,
+            &mut st,
+            total - done,
+            halo,
+        )
+        .unwrap();
+        let seg = st.finish(&plan);
+        assert_eq!(whole.total_s, seg.total_s);
+        assert_eq!(whole.busy_s, seg.busy_s);
+        assert_eq!(whole.comm_s, seg.comm_s);
+        assert_eq!(whole.overlap_s, seg.overlap_s);
+        assert_eq!(whole.halo_displaced, seg.halo_displaced);
+    }
+
+    #[test]
+    fn flush_debts_charges_outstanding_transfers() {
+        let mut st = SimState::new(2);
+        st.flush_debts();
+        assert_eq!(st.now, 0.0);
+        st.debts.push((3, 0.25));
+        st.debts.push((5, 0.5));
+        st.flush_debts();
+        assert!(st.debts.is_empty());
+        assert_eq!(st.now, 0.75);
+        assert_eq!(st.comm_s, 0.75);
     }
 
     #[test]

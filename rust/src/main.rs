@@ -74,6 +74,13 @@ fn base_flags(cmd: Command) -> Command {
             "relative speed drift that triggers a re-plan",
             Some("0.05"),
         )
+        .flag(
+            "halo-mode",
+            "halo exchange at sync points: sync | displaced | \
+             displaced:N (N = staleness budget in sync intervals; \
+             empty = config default)",
+            Some(""),
+        )
 }
 
 fn build_config(
@@ -110,6 +117,10 @@ fn build_config(
             cfg.replan.every_k_syncs = every;
             cfg.replan.drift_threshold = p.get_parsed("replan-threshold")?;
         }
+    }
+    // Empty = leave whatever the JSON config says.
+    if let Some(spec) = p.get("halo-mode").filter(|s| !s.trim().is_empty()) {
+        cfg.halo = stadi::config::HaloMode::parse(spec.trim())?;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -260,6 +271,13 @@ fn cmd_stub_artifacts(args: impl Iterator<Item = String>) -> Result<()> {
          manifest, per-device `;`-separated OCC@STEP ramps (e.g. \
          \"0@0;0@0,0.6@4\"; empty = none)",
         Some(""),
+    )
+    .flag(
+        "kv-gain",
+        "KV-context coupling gain in [0,1] embedded in the manifest \
+         (makes displaced-halo staleness numerically measurable; \
+         empty = none, the exact legacy arithmetic)",
+        Some(""),
     );
     let p = cmd.parse(args)?;
     let mut extra = Vec::new();
@@ -289,10 +307,19 @@ fn cmd_stub_artifacts(args: impl Iterator<Item = String>) -> Result<()> {
         }
         None => None,
     };
-    stadi::runtime::stubgen::write_stub_artifacts_with_drift(
+    let kv_gain = match p.get("kv-gain").filter(|s| !s.trim().is_empty()) {
+        Some(spec) => Some(spec.trim().parse::<f64>().map_err(|_| {
+            stadi::error::Error::Config(format!(
+                "--kv-gain {spec:?} is not a number"
+            ))
+        })?),
+        None => None,
+    };
+    stadi::runtime::stubgen::write_stub_artifacts_full(
         out,
         &extra,
         drift.as_ref(),
+        kv_gain,
     )?;
     println!(
         "wrote stub artifacts to {out} ({} extra resolution{}): try\n  \

@@ -112,6 +112,13 @@ pub struct Manifest {
     /// byte-reproducible offline. `STADI_DRIFT` overrides it; absent
     /// in every real manifest.
     pub drift: Option<crate::device::OccupancySchedule>,
+    /// Optional kv-context coupling gain (`"kv_gain"` key, written by
+    /// stubgen for halo quality-gate tests): the stub backend mixes
+    /// this fraction of the stale KV context into each eps sample, so
+    /// displaced-halo staleness produces *measurable* (but bounded)
+    /// numeric drift instead of none. Absent (and treated as 0.0 —
+    /// the exact legacy arithmetic) in every real manifest.
+    pub kv_gain: Option<f64>,
 }
 
 fn parse_slots(v: &Value) -> Result<Vec<Slot>> {
@@ -210,6 +217,18 @@ impl Manifest {
             }
             None => None,
         };
+        let kv_gain = match v.get_opt("kv_gain") {
+            Some(x) => {
+                let g = x.as_f64()?;
+                if !(0.0..=1.0).contains(&g) {
+                    return Err(Error::Artifact(format!(
+                        "kv_gain {g} outside [0, 1]"
+                    )));
+                }
+                Some(g)
+            }
+            None => None,
+        };
 
         Ok(Manifest {
             dir,
@@ -219,6 +238,7 @@ impl Manifest {
             patch_heights,
             stub,
             drift,
+            kv_gain,
         })
     }
 

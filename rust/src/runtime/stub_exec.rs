@@ -125,6 +125,33 @@ impl StubExec {
             inp.row_off,
             inp.t,
         ));
+        // Optional KV coupling (manifest "kv_gain"): fold the stale KV
+        // stack's per-column means into every eps sample, so the
+        // output depends on *neighbor-published* context and displaced
+        // halo staleness becomes measurable. Gated on > 0 so absent /
+        // zero gains keep the legacy arithmetic byte for byte (even
+        // `v + 0.0` can flip a -0.0 sign bit).
+        let kv_ctx: Option<(f32, Vec<f32>)> = match self
+            .manifest()
+            .kv_gain
+        {
+            Some(g) if g > 0.0 => {
+                let cols = 2 * m.dim;
+                let toks = m.tokens_full;
+                let mut mean = vec![0.0f32; cols];
+                for t in 0..toks {
+                    for (c, acc) in mean.iter_mut().enumerate() {
+                        *acc += inp.kv_stale.data[t * cols + c];
+                    }
+                }
+                let inv = 1.0 / toks as f32;
+                for v in &mut mean {
+                    *v *= inv;
+                }
+                Some((g as f32, mean))
+            }
+            _ => None,
+        };
         let n = h * m.latent_w * m.latent_c;
         let z = gen.vec_f32(n);
         let mut eps = Vec::with_capacity(n);
@@ -132,9 +159,12 @@ impl StubExec {
             // A contraction of the noisy patch plus step/condition
             // noise: DDIM trajectories stay bounded and every input
             // byte influences the output deterministically.
-            let v = 0.7 * inp.x_patch.data[i]
+            let mut v = 0.7 * inp.x_patch.data[i]
                 + 0.2 * z[i]
                 + 0.1 * inp.cond[i % m.dim];
+            if let Some((g, ctx)) = &kv_ctx {
+                v += g * ctx[i % ctx.len()];
+            }
             eps.push(v.clamp(-4.0, 4.0));
         }
         let t_own = m.tokens_for_rows(h);
@@ -308,6 +338,56 @@ mod tests {
         let bad_off = DenoiserInputs { row_off: 12, ..inp };
         assert!(stub.denoise(res, 8, &bad_off).is_err());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn kv_gain_couples_eps_to_stale_kv_without_it_is_independent() {
+        let (dir, reg) = registry("nogain");
+        let stub = StubExec::new(Arc::clone(&reg)).unwrap();
+        let dir2 = std::env::temp_dir()
+            .join(format!("stadi-stubexec-gain-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir2);
+        stubgen::write_stub_artifacts_full(&dir2, &[], None, Some(0.05))
+            .unwrap();
+        let reg2 = Arc::new(ArtifactRegistry::load(&dir2).unwrap());
+        let stub2 = StubExec::new(Arc::clone(&reg2)).unwrap();
+
+        let m = reg.manifest().model.clone();
+        let params = reg.manifest().load_params().unwrap();
+        let native = reg.native_key();
+        let x = Tensor::new(
+            vec![8, m.latent_w, m.latent_c],
+            NormalGen::new(3).vec_f32(8 * m.latent_w * m.latent_c),
+        )
+        .unwrap();
+        let kv_a = Tensor::zeros(&m.kv_shape());
+        let kv_b = Tensor::new(
+            m.kv_shape(),
+            NormalGen::new(11).vec_f32(
+                m.layers * m.tokens_full * 2 * m.dim,
+            ),
+        )
+        .unwrap();
+        let cond = vec![0.25f32; m.dim];
+        let inp_a = DenoiserInputs {
+            params: &params,
+            x_patch: &x,
+            kv_stale: &kv_a,
+            row_off: 8,
+            t: 500.0,
+            cond: &cond,
+        };
+        let inp_b = DenoiserInputs { kv_stale: &kv_b, ..inp_a };
+        // Without kv_gain, eps ignores the stale KV entirely.
+        let a = stub.denoise(native, 8, &inp_a).unwrap();
+        let b = stub.denoise(native, 8, &inp_b).unwrap();
+        assert_eq!(a.eps_patch, b.eps_patch);
+        // With it, a different KV context shifts eps.
+        let ga = stub2.denoise(native, 8, &inp_a).unwrap();
+        let gb = stub2.denoise(native, 8, &inp_b).unwrap();
+        assert!(ga.eps_patch.max_abs_diff(&gb.eps_patch) > 1e-6);
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&dir2);
     }
 
     #[test]

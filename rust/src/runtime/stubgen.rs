@@ -121,7 +121,32 @@ pub fn write_stub_artifacts_with_drift(
     extra: &[(usize, usize)],
     drift: Option<&crate::device::OccupancySchedule>,
 ) -> Result<()> {
+    write_stub_artifacts_full(dir, extra, drift, None)
+}
+
+/// [`write_stub_artifacts_with_drift`] plus an optional `kv_gain`
+/// manifest key: the stub backend mixes this fraction of the stale KV
+/// context into each eps sample, coupling a device's output to its
+/// *neighbors'* published halos. Without it the stub's arithmetic is
+/// purely local, so displaced-halo staleness would be invisible —
+/// with it, the halo quality gate measures a real (bounded,
+/// deterministic) PSNR/SSIM drift per staleness budget. CLI:
+/// `stadi stub-artifacts --kv-gain 0.05`. Absent (or 0) keeps the
+/// exact legacy arithmetic byte for byte.
+pub fn write_stub_artifacts_full(
+    dir: impl AsRef<Path>,
+    extra: &[(usize, usize)],
+    drift: Option<&crate::device::OccupancySchedule>,
+    kv_gain: Option<f64>,
+) -> Result<()> {
     let dir = dir.as_ref();
+    if let Some(g) = kv_gain {
+        if !(0.0..=1.0).contains(&g) {
+            return Err(Error::Artifact(format!(
+                "kv_gain {g} outside [0, 1]"
+            )));
+        }
+    }
     std::fs::create_dir_all(dir)?;
 
     // Deterministic weights (the stub backend mixes them into its
@@ -229,6 +254,9 @@ pub fn write_stub_artifacts_with_drift(
     if let Some(d) = drift {
         manifest.insert("drift", d.to_json());
     }
+    if let Some(g) = kv_gain {
+        manifest.insert("kv_gain", Value::Num(g));
+    }
     std::fs::write(
         dir.join("manifest.json"),
         json::to_string_pretty(&Value::Obj(manifest)),
@@ -309,6 +337,27 @@ mod tests {
             std::fs::read_to_string(dir2.join("manifest.json")).unwrap();
         assert!(!text.contains("drift"));
         assert!(Manifest::load(&dir2).unwrap().drift.is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&dir2);
+    }
+
+    #[test]
+    fn kv_gain_roundtrips_and_is_absent_by_default() {
+        let dir = tmp("kvgain");
+        write_stub_artifacts_full(&dir, &[], None, Some(0.05)).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.kv_gain, Some(0.05));
+        // Plain sets carry no kv_gain key at all (legacy shape).
+        let dir2 = tmp("nokvgain");
+        write_stub_artifacts(&dir2, &[]).unwrap();
+        let text =
+            std::fs::read_to_string(dir2.join("manifest.json")).unwrap();
+        assert!(!text.contains("kv_gain"));
+        assert!(Manifest::load(&dir2).unwrap().kv_gain.is_none());
+        // Out-of-range gains are rejected at write time.
+        assert!(
+            write_stub_artifacts_full(&dir, &[], None, Some(1.5)).is_err()
+        );
         let _ = std::fs::remove_dir_all(&dir);
         let _ = std::fs::remove_dir_all(&dir2);
     }

@@ -117,6 +117,40 @@ impl Plan {
         Self::assemble_base(schedule, speeds, names, params, &assign, &sizes)
     }
 
+    /// Build with the cost-aware allocator priced under the engine's
+    /// comm config and halo mode (see
+    /// [`crate::sched::spatial::cost_aware_sizes_with_comm`]):
+    /// sync-effective plans account for the blocking per-interval x
+    /// gather, displaced plans drop it — the latter is byte-identical
+    /// to [`Plan::build_cost_aware`]. `bytes_per_row` is the x payload
+    /// of one latent row at the planned width.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_cost_aware_with_comm(
+        schedule: &Schedule,
+        speeds: &[f64],
+        names: &[String],
+        params: &StadiParams,
+        cost: &crate::device::CostModel,
+        comm: &crate::config::CommConfig,
+        halo: crate::config::HaloMode,
+        bytes_per_row: usize,
+        total_rows: usize,
+        granularity: usize,
+    ) -> Result<Plan> {
+        let assign = assign_steps(speeds, params)?;
+        let sizes = crate::sched::spatial::cost_aware_sizes_with_comm(
+            speeds,
+            &assign,
+            cost,
+            comm,
+            halo,
+            bytes_per_row,
+            total_rows,
+            granularity,
+        )?;
+        Self::assemble_base(schedule, speeds, names, params, &assign, &sizes)
+    }
+
     /// Build with explicit patch sizes (Fig. 9's patch-ratio sweep and
     /// custom baselines). Temporal assignment still follows Eq. 4 /
     /// the `params.temporal` toggle; excluded devices must have size 0.
@@ -334,6 +368,44 @@ impl Plan {
         self.devices.iter().filter(|d| d.included())
     }
 
+    /// Number of leading sync intervals that contain a warmup step.
+    /// Re-plan suffixes built via [`Plan::build_on_grid`] carry no
+    /// warmup steps, so this is 0 there — the displaced fallback rule
+    /// stays plan-local either way.
+    pub fn warmup_sync_count(&self) -> usize {
+        let Some(d) = self.included_devices().next() else {
+            return 0;
+        };
+        let mut count = 0;
+        let mut any_warmup = false;
+        for s in &d.steps {
+            any_warmup |= s.is_warmup;
+            if s.sync {
+                if any_warmup {
+                    count += 1;
+                }
+                any_warmup = false;
+            }
+        }
+        count
+    }
+
+    /// Whether sync interval `si` (plan-local index into
+    /// `sync_points`) must run the *blocking* exchange under a
+    /// displaced halo with the given staleness budget. True for:
+    /// budget 0 (≡ sync), warmup intervals (the paper's all-sync
+    /// prefix), the first `budget` intervals (nothing old enough has
+    /// been published yet), and the final interval (the gathered clean
+    /// image must assemble from fresh buffers). The executors, the
+    /// timeline and the byte accounting all route through this one
+    /// rule so they cannot drift apart.
+    pub fn displaced_fallback(&self, si: usize, budget: usize) -> bool {
+        budget == 0
+            || si < budget
+            || si < self.warmup_sync_count()
+            || si + 1 >= self.sync_points.len()
+    }
+
     /// Total latent rows (for sanity checks).
     pub fn total_rows(&self) -> usize {
         self.devices.iter().map(|d| d.rows.rows).sum()
@@ -399,6 +471,11 @@ pub struct PlanKey {
     pub devices: Vec<usize>,
     pub speeds_q: Vec<u32>,
     pub res: Option<(usize, usize)>,
+    /// Effective halo mode the plan was built under. Keyed because
+    /// the comm-aware Eq. 5 variant splits rows differently when the
+    /// displaced exchange hides the x transfer; `Sync` is the
+    /// constructor default, so pre-halo keys are unchanged.
+    pub halo: crate::config::HaloMode,
 }
 
 impl PlanKey {
@@ -420,6 +497,7 @@ impl PlanKey {
             devices: devices.to_vec(),
             speeds_q: speeds.iter().map(|&v| quantize_speed(v)).collect(),
             res: None,
+            halo: crate::config::HaloMode::Sync,
         }
     }
 
@@ -428,6 +506,13 @@ impl PlanKey {
     /// untouched).
     pub fn with_res(mut self, res: Option<(usize, usize)>) -> PlanKey {
         self.res = res;
+        self
+    }
+
+    /// Attach the effective halo mode (`Sync` = the constructor's
+    /// default, so existing call sites are untouched).
+    pub fn with_halo(mut self, halo: crate::config::HaloMode) -> PlanKey {
+        self.halo = halo;
         self
     }
 }
@@ -714,6 +799,46 @@ mod tests {
         assert_ne!(base, wide);
         assert_ne!(wide, base.clone().with_res(Some((32, 32))));
         assert_eq!(base, base.clone().with_res(None));
+        // Halo modes separate keys too (displaced plans may split rows
+        // differently); Sync is the constructor default.
+        use crate::config::HaloMode;
+        let displaced = base
+            .clone()
+            .with_halo(HaloMode::Displaced { max_staleness: 2 });
+        assert_ne!(base, displaced);
+        assert_ne!(
+            displaced,
+            base.clone().with_halo(HaloMode::Displaced { max_staleness: 1 })
+        );
+        assert_eq!(base, base.clone().with_halo(HaloMode::Sync));
+    }
+
+    #[test]
+    fn displaced_fallback_covers_warmup_prefix_and_final() {
+        let p = StadiParams::default(); // m_base 100, m_warmup 4
+        let plan = build(&[1.0, 0.5], &p).unwrap();
+        // Heterogeneous plan: the fast device's 4th (non-sync) warmup
+        // step lands in the 4th sync interval, so 4 intervals carry
+        // warmup steps (see heterogeneous_plan_alternates_fast_syncs).
+        assert_eq!(plan.warmup_sync_count(), 4);
+        let n = plan.sync_points.len();
+        let budget = 2;
+        // Warmup prefix and the first `budget` intervals fall back.
+        for si in 0..plan.warmup_sync_count().max(budget) {
+            assert!(plan.displaced_fallback(si, budget), "si={si}");
+        }
+        // Steady-state intervals displace.
+        assert!(!plan.displaced_fallback(4, budget));
+        assert!(!plan.displaced_fallback(n - 2, budget));
+        // The final (clean-state) interval always falls back.
+        assert!(plan.displaced_fallback(n - 1, budget));
+        // Budget 0 is sync everywhere.
+        for si in 0..n {
+            assert!(plan.displaced_fallback(si, 0));
+        }
+        // A homogeneous plan has warmup syncs too (every step syncs).
+        let homo = build(&[1.0, 1.0], &p).unwrap();
+        assert_eq!(homo.warmup_sync_count(), p.m_warmup);
     }
 
     #[test]

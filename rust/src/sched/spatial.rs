@@ -194,6 +194,105 @@ pub fn cost_aware_sizes(
     Ok(granules.iter().map(|&g| g * granularity).collect())
 }
 
+/// Comm-aware variant of [`cost_aware_sizes`] for the displaced-halo
+/// planner. Under [`HaloMode::Sync`] each candidate placement is
+/// additionally charged the blocking per-interval x all-gather its
+/// allocation would cost — under `PadAllGather` that penalizes growing
+/// the *largest* patch (the pad target), flattening splits on slow
+/// interconnects. Under a positive staleness budget the exchange is
+/// off the critical path, the term vanishes, and the greedy reduces
+/// byte-identically to [`cost_aware_sizes`] (same candidate rule, zero
+/// added score) — the planner face of "displaced comm is cheaper".
+///
+/// `bytes_per_row` is the x payload of one latent row at the planned
+/// width (`latent_cols * latent_c * 4`).
+///
+/// [`HaloMode::Sync`]: crate::config::HaloMode::Sync
+#[allow(clippy::too_many_arguments)]
+pub fn cost_aware_sizes_with_comm(
+    speeds: &[f64],
+    assign: &[StepAssignment],
+    cost: &crate::device::CostModel,
+    comm: &crate::config::CommConfig,
+    halo: crate::config::HaloMode,
+    bytes_per_row: usize,
+    total_rows: usize,
+    granularity: usize,
+) -> Result<Vec<usize>> {
+    assert_eq!(speeds.len(), assign.len());
+    if total_rows % granularity != 0 {
+        return Err(Error::Sched(format!(
+            "total rows {total_rows} not a multiple of granularity \
+             {granularity}"
+        )));
+    }
+    let included: Vec<usize> = assign
+        .iter()
+        .enumerate()
+        .filter(|(_, a)| a.class != StepClass::Excluded)
+        .map(|(i, _)| i)
+        .collect();
+    if included.is_empty() {
+        return Err(Error::Sched("no included devices".into()));
+    }
+    let granules_total = total_rows / granularity;
+    if included.len() > granules_total {
+        return Err(Error::Sched(format!(
+            "{} devices but only {granules_total} granules",
+            included.len()
+        )));
+    }
+    let any_half = assign.iter().any(|a| a.class == StepClass::Half);
+    let steps_per_sync = |i: usize| -> f64 {
+        match assign[i].class {
+            StepClass::Full if any_half => 2.0,
+            _ => 1.0,
+        }
+    };
+    let interval_time = |i: usize, granules: usize| -> f64 {
+        let rows = granules * granularity;
+        cost.step_time(rows, speeds[i]) * steps_per_sync(i)
+    };
+    // The blocking x gather a candidate allocation would pay per sync
+    // interval; identically zero when the displaced path masks it.
+    let blocking = halo.max_staleness() == 0;
+    let x_gather = |granules: &[usize]| -> f64 {
+        if !blocking {
+            return 0.0;
+        }
+        let sizes: Vec<usize> = included
+            .iter()
+            .map(|&i| granules[i] * granularity * bytes_per_row)
+            .collect();
+        crate::comm::all_gather_cost(comm, &sizes)
+    };
+
+    let mut granules = vec![0usize; speeds.len()];
+    for &i in &included {
+        granules[i] = 1;
+    }
+    let mut remaining = granules_total - included.len();
+    while remaining > 0 {
+        let &best = included
+            .iter()
+            .min_by(|&&a, &&b| {
+                let mut score = |i: usize| {
+                    granules[i] += 1;
+                    let s = interval_time(i, granules[i])
+                        + x_gather(&granules);
+                    granules[i] -= 1;
+                    s
+                };
+                let (sa, sb) = (score(a), score(b));
+                sa.partial_cmp(&sb).unwrap()
+            })
+            .unwrap();
+        granules[best] += 1;
+        remaining -= 1;
+    }
+    Ok(granules.iter().map(|&g| g * granularity).collect())
+}
+
 /// Eq. 5 elastic re-split at a mid-request sync barrier. The weights
 /// deliberately use the *full-request* step counts carried by
 /// `assign` (M_base / half-class totals — the same weights the static
@@ -413,6 +512,76 @@ mod tests {
         // Fast device pays 2 steps per interval; slow pays 1 at half
         // speed — the slow device can afford a sizeable share.
         assert!(ca[1] >= 8, "{ca:?}");
+    }
+
+    #[test]
+    fn comm_aware_flattens_sync_splits_but_not_displaced() {
+        use crate::config::{CommConfig, HaloMode, UnevenStrategy};
+        use crate::device::CostModel;
+        let cost = CostModel { fixed_s: 0.002, per_row_s: 0.0005 };
+        let speeds = [1.0, 0.4];
+        let assign = [full(100), full(100)];
+        let legacy =
+            cost_aware_sizes(&speeds, &assign, &cost, 32, 2).unwrap();
+        assert_eq!(legacy, vec![24, 8]);
+
+        // Slow interconnect: under Pad, growing the largest patch
+        // raises every interval's blocking gather — the sync-effective
+        // split flattens toward the slow device.
+        let slow = CommConfig {
+            latency_s: 0.0,
+            bandwidth_bytes_per_s: 1e5,
+            uneven_strategy: UnevenStrategy::PadAllGather,
+        };
+        let sync = cost_aware_sizes_with_comm(
+            &speeds,
+            &assign,
+            &cost,
+            &slow,
+            HaloMode::Sync,
+            512,
+            32,
+            2,
+        )
+        .unwrap();
+        assert_eq!(sync.iter().sum::<usize>(), 32);
+        assert!(sync[0] < legacy[0], "sync {sync:?} vs legacy {legacy:?}");
+
+        // Displaced hides the exchange: the comm term is identically
+        // zero and the allocator reduces byte-identically to the
+        // legacy cost-aware split even on the slow interconnect.
+        let disp = cost_aware_sizes_with_comm(
+            &speeds,
+            &assign,
+            &cost,
+            &slow,
+            HaloMode::Displaced { max_staleness: 1 },
+            512,
+            32,
+            2,
+        )
+        .unwrap();
+        assert_eq!(disp, legacy);
+
+        // Near-free interconnect: the comm term is negligible and the
+        // sync-effective split agrees with legacy too.
+        let fast = CommConfig {
+            latency_s: 0.0,
+            bandwidth_bytes_per_s: 1e12,
+            uneven_strategy: UnevenStrategy::PadAllGather,
+        };
+        let free = cost_aware_sizes_with_comm(
+            &speeds,
+            &assign,
+            &cost,
+            &fast,
+            HaloMode::Sync,
+            512,
+            32,
+            2,
+        )
+        .unwrap();
+        assert_eq!(free, legacy);
     }
 
     /// Satellite: the Eq. 5 split at *non-native* sizes. For random

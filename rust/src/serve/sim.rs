@@ -841,6 +841,7 @@ pub fn simulate_drift_strategies(
                 Some((&scenario.drift, &map)),
                 &mut st,
                 plan0.sync_points.len(),
+                crate::config::HaloMode::Sync,
             )?;
             offsets = st.steps_done.clone();
             per.push(st.now);
@@ -896,6 +897,7 @@ pub fn simulate_drift_strategies(
                         Some((&scenario.drift, &map)),
                         &mut st,
                         span,
+                        crate::config::HaloMode::Sync,
                     )?;
                     for d in cur.included_devices() {
                         let delta = st.steps_done[d.device]

@@ -68,6 +68,20 @@ impl Quality {
         }
     }
 
+    /// The halo staleness budget this tier tolerates (sync intervals a
+    /// peeked neighbor halo may lag). High-quality requests always run
+    /// the fully synchronous exchange; draft requests accept the most
+    /// displacement. The engine's configured
+    /// [`HaloMode`](crate::config::HaloMode) can only be *tightened*
+    /// by the tier: effective budget = `min(config, tier)`.
+    pub fn staleness_budget(self) -> usize {
+        match self {
+            Quality::Draft => 2,
+            Quality::Standard => 1,
+            Quality::High => 0,
+        }
+    }
+
     pub fn as_str(self) -> &'static str {
         match self {
             Quality::Draft => "draft",
@@ -507,6 +521,17 @@ mod tests {
         assert_eq!(
             GenerationSpec::from_json(&v).unwrap(),
             GenerationSpec::new().seed(3)
+        );
+    }
+
+    #[test]
+    fn staleness_budget_tightens_with_quality() {
+        assert_eq!(Quality::Draft.staleness_budget(), 2);
+        assert_eq!(Quality::Standard.staleness_budget(), 1);
+        assert_eq!(Quality::High.staleness_budget(), 0);
+        assert!(
+            Quality::High.staleness_budget()
+                < Quality::Standard.staleness_budget()
         );
     }
 

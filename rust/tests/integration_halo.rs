@@ -1,0 +1,331 @@
+//! Displaced halo exchange, end to end on the stub runtime — runs on
+//! every build. These tests pin the PR's acceptance criteria:
+//!
+//! * on a slow-interconnect heterogeneous cluster (comm-bound under
+//!   the synchronous exchange) the displaced mode's simulated AND
+//!   stub-executed virtual makespan strictly beats `HaloMode::Sync`;
+//! * the PSNR/SSIM (+LPIPS-proxy) quality gate passes at every
+//!   quality tier's staleness budget — drift is *measured* (the stub
+//!   set carries a `kv_gain` coupling so stale halos actually move the
+//!   numerics), not assumed;
+//! * `max_staleness = 0` (and the High tier, which tightens any
+//!   configured budget to 0) is byte-identical to the sync path —
+//!   latents, timeline floats and halo counters;
+//! * property test: for random clusters and budgets, budget-0 stays
+//!   bit-identical, and the fallback counter matches the plan's
+//!   displaced-fallback rule exactly (warmup prefix, first `budget`
+//!   syncs and the final sync always run the blocking exchange — the
+//!   audit that no consumer ever reads a halo older than its budget).
+
+use std::path::{Path, PathBuf};
+
+use stadi::config::{
+    CommConfig, EngineConfig, ExecMode, HaloMode, StadiParams,
+    UnevenStrategy,
+};
+use stadi::coordinator::EngineCore;
+use stadi::metrics::{lpips::lpips, psnr::psnr, ssim::ssim};
+use stadi::runtime::stubgen;
+use stadi::spec::{GenerationSpec, Quality};
+
+/// Stub artifact set with the KV coupling gain: every device's eps
+/// depends on the neighbor-published KV context, so halo staleness is
+/// numerically measurable (without it the stub's arithmetic is purely
+/// local and the quality gate would measure nothing).
+fn stub_artifacts(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("stadi-halo-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    stubgen::write_stub_artifacts_full(&dir, &[], None, Some(0.05))
+        .unwrap();
+    dir
+}
+
+/// A slow interconnect on which the blocking x gather is a large
+/// fraction of every sync interval (comm-bound under `Sync`).
+fn slow_comm() -> CommConfig {
+    CommConfig {
+        latency_s: 0.02,
+        bandwidth_bytes_per_s: 2e7,
+        uneven_strategy: UnevenStrategy::PadAllGather,
+    }
+}
+
+fn config(dir: &Path, halo: HaloMode) -> EngineConfig {
+    let mut cfg = EngineConfig::two_gpu_default(dir, &[0.0, 0.5]);
+    cfg.stadi =
+        StadiParams { m_base: 16, m_warmup: 2, ..Default::default() };
+    cfg.comm = slow_comm();
+    cfg.halo = halo;
+    cfg
+}
+
+/// Acceptance criterion: simulated + stub-executed makespan win on the
+/// comm-bound cluster, with agreeing executor/timeline counters and
+/// bit-equal numerics across both executors.
+#[test]
+fn displaced_strictly_beats_sync_makespan_on_comm_bound_cluster() {
+    let dir = stub_artifacts("makespan");
+    // Standard quality: tier budget 1 == the configured budget.
+    let spec = GenerationSpec::new().seed(9).quality(Quality::Standard);
+    let disp_mode = HaloMode::Displaced { max_staleness: 1 };
+
+    let sync = EngineCore::new(config(&dir, HaloMode::Sync))
+        .unwrap()
+        .generate(&spec)
+        .unwrap();
+    // Premise: the fixture really is comm-bound under sync.
+    assert!(
+        sync.timeline.comm_s > 0.2 * sync.timeline.total_s,
+        "fixture not comm-bound: comm {} of {}",
+        sync.timeline.comm_s,
+        sync.timeline.total_s
+    );
+    assert_eq!(sync.timeline.halo_displaced, 0);
+
+    let disp_core = EngineCore::new(config(&dir, disp_mode)).unwrap();
+    let disp = disp_core.generate(&spec).unwrap();
+    // Stub-executed virtual makespan strictly beats sync.
+    assert!(
+        disp.timeline.total_s < sync.timeline.total_s,
+        "displaced {} !< sync {}",
+        disp.timeline.total_s,
+        sync.timeline.total_s
+    );
+    assert!(disp.timeline.comm_s < sync.timeline.comm_s);
+    assert!(disp.stats.halo_displaced > 0, "no sync ran displaced");
+    assert_eq!(
+        disp.stats.halo_displaced + disp.stats.halo_fallback,
+        disp.stats.syncs
+    );
+    // Executor counters agree with the virtual timeline's.
+    assert_eq!(disp.stats.halo_displaced, disp.timeline.halo_displaced);
+    assert_eq!(disp.stats.halo_fallback, disp.timeline.halo_fallback);
+    // Overlap accounting surfaces the hidden transfers.
+    assert!(disp.timeline.overlap_s.iter().sum::<f64>() > 0.0);
+
+    // The *simulated* (predictor) side sees the same win — gang
+    // policies size displaced gangs by the cheaper effective comm.
+    let p_sync = EngineCore::new(config(&dir, HaloMode::Sync))
+        .unwrap()
+        .predict_latency_for(&spec, &[0, 1])
+        .unwrap();
+    let p_disp = disp_core.predict_latency_for(&spec, &[0, 1]).unwrap();
+    assert!(p_disp < p_sync, "predicted {p_disp} !< {p_sync}");
+
+    // Cross-executor pin: the threaded executor's displaced protocol
+    // (publish → barrier → peek) reproduces dataflow bit for bit.
+    let mut tcfg = config(&dir, disp_mode);
+    tcfg.mode = ExecMode::Threaded;
+    let th = EngineCore::new(tcfg).unwrap().generate(&spec).unwrap();
+    assert_eq!(
+        disp.latent, th.latent,
+        "threaded and dataflow displaced numerics diverge"
+    );
+    assert_eq!(disp.stats.halo_displaced, th.stats.halo_displaced);
+    assert_eq!(disp.stats.halo_fallback, th.stats.halo_fallback);
+    assert_eq!(disp.stats.x_bytes, th.stats.x_bytes);
+    assert_eq!(disp.stats.kv_bytes, th.stats.kv_bytes);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `max_staleness = 0` ≡ today's sync path, byte for byte — and the
+/// High quality tier tightens *any* configured budget to 0.
+#[test]
+fn budget_zero_and_high_tier_are_byte_identical_to_sync() {
+    let dir = stub_artifacts("budget0");
+    let spec = GenerationSpec::new().seed(11);
+    for mode in [ExecMode::Dataflow, ExecMode::Threaded] {
+        let run = |halo: HaloMode| {
+            let mut cfg = config(&dir, halo);
+            cfg.mode = mode;
+            EngineCore::new(cfg).unwrap().generate(&spec).unwrap()
+        };
+        let sync = run(HaloMode::Sync);
+        let d0 = run(HaloMode::Displaced { max_staleness: 0 });
+        assert_eq!(sync.latent, d0.latent, "{mode:?} latents diverged");
+        assert_eq!(sync.timeline.total_s, d0.timeline.total_s);
+        assert_eq!(sync.timeline.busy_s, d0.timeline.busy_s);
+        assert_eq!(sync.timeline.comm_s, d0.timeline.comm_s);
+        assert_eq!(sync.timeline.overlap_s, d0.timeline.overlap_s);
+        assert_eq!(
+            sync.timeline.halo_fallback,
+            d0.timeline.halo_fallback
+        );
+        assert_eq!(d0.timeline.halo_displaced, 0);
+        assert_eq!(d0.stats.halo_displaced, 0);
+        assert_eq!(sync.stats.x_bytes, d0.stats.x_bytes);
+        assert_eq!(sync.stats.kv_bytes, d0.stats.kv_bytes);
+    }
+    // High tier on a budget-2 engine: effective budget 0, identical to
+    // the sync engine under the same spec.
+    let high = GenerationSpec::new().seed(11).quality(Quality::High);
+    let sync_high = EngineCore::new(config(&dir, HaloMode::Sync))
+        .unwrap()
+        .generate(&high)
+        .unwrap();
+    let disp_core = EngineCore::new(config(
+        &dir,
+        HaloMode::Displaced { max_staleness: 2 },
+    ))
+    .unwrap();
+    assert_eq!(
+        disp_core.effective_halo(Some(&high)).max_staleness(),
+        0
+    );
+    let disp_high = disp_core.generate(&high).unwrap();
+    assert_eq!(sync_high.latent, disp_high.latent);
+    assert_eq!(disp_high.stats.halo_displaced, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The quality gate: displaced-vs-sync PSNR/SSIM/LPIPS per tier, each
+/// tier measured at its own staleness budget on a budget-2 engine.
+/// The floors are deliberately conservative — the point is that drift
+/// exists, is bounded, and is *measured* per budget.
+#[test]
+fn quality_gate_psnr_ssim_lpips_within_per_tier_floors() {
+    let dir = stub_artifacts("gate");
+    let tiers = [
+        // (tier, psnr floor dB, ssim floor, lpips ceiling)
+        (Quality::Draft, 25.0, 0.85, 0.05),
+        (Quality::Standard, 30.0, 0.90, 0.05),
+    ];
+    for (q, psnr_floor, ssim_floor, lpips_ceil) in tiers {
+        // Explicit steps win over the tier's step scaling, pinning a
+        // plan with enough sync points that both budgets engage; the
+        // tier still sets the staleness budget.
+        let spec = GenerationSpec::new().seed(5).steps(24).quality(q);
+        let sync = EngineCore::new(config(&dir, HaloMode::Sync))
+            .unwrap()
+            .generate(&spec)
+            .unwrap();
+        let disp_core = EngineCore::new(config(
+            &dir,
+            HaloMode::Displaced { max_staleness: 2 },
+        ))
+        .unwrap();
+        let disp = disp_core.generate(&spec).unwrap();
+        assert!(
+            disp.stats.halo_displaced > 0,
+            "{q:?}: staleness never engaged"
+        );
+        // The coupling makes staleness *visible*: outputs differ...
+        assert_ne!(
+            sync.latent, disp.latent,
+            "{q:?}: displaced output identical — the gate measures \
+             nothing (kv_gain coupling lost?)"
+        );
+        // ...but inside the tier's floor.
+        let p = psnr(&sync.latent, &disp.latent);
+        let s = ssim(&sync.latent, &disp.latent);
+        let l = lpips(disp_core.exec(), &sync.latent, &disp.latent)
+            .unwrap();
+        assert!(
+            p >= psnr_floor,
+            "{q:?}: PSNR {p:.2} dB below floor {psnr_floor}"
+        );
+        assert!(
+            s >= ssim_floor,
+            "{q:?}: SSIM {s:.4} below floor {ssim_floor}"
+        );
+        assert!(
+            l <= lpips_ceil,
+            "{q:?}: LPIPS {l:.5} above ceiling {lpips_ceil}"
+        );
+    }
+    // High tier: budget 0, exact — asserted byte-identical in
+    // `budget_zero_and_high_tier_are_byte_identical_to_sync`.
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Property test (QUICKCHECK_SEED-honoring): random straggler
+/// occupancies × staleness budgets. Budget 0 is bit-identical to
+/// Sync; for every budget the executor's fallback counter matches the
+/// plan's displaced-fallback rule *exactly* — which is the audit that
+/// no consumer ever read a halo older than its budget (the executor
+/// errors out if the history entry `si - budget` is missing, and the
+/// threaded path debug-asserts each peeked version).
+#[test]
+fn property_budget_zero_identity_and_fallback_rule_audit() {
+    use stadi::util::proptest::{ensure, forall};
+    let dir = stub_artifacts("prop");
+    forall(
+        173,
+        12,
+        |rng| {
+            let occ = 0.7 * rng.next_f64();
+            let budget = rng.below(3) as usize; // 0 | 1 | 2
+            let seed = rng.below(1 << 20) as u64;
+            (occ, (budget, seed))
+        },
+        |&(occ, (budget, seed))| {
+            // Draft tier: its budget (2) never tightens the configured
+            // one, so the effective budget is exactly `budget`; the
+            // explicit step count keeps the plan large enough that
+            // budgets 1 and 2 actually displace some syncs.
+            let spec = GenerationSpec::new()
+                .seed(seed)
+                .steps(16)
+                .quality(Quality::Draft);
+            let mut base = config(&dir, HaloMode::Sync);
+            base.devices[1].occupancy = occ;
+            let sync = EngineCore::new(base.clone())
+                .map_err(|e| e.to_string())?
+                .generate(&spec)
+                .map_err(|e| e.to_string())?;
+            let mut dcfg = base.clone();
+            dcfg.halo = HaloMode::Displaced { max_staleness: budget };
+            let disp = EngineCore::new(dcfg)
+                .map_err(|e| e.to_string())?
+                .generate(&spec)
+                .map_err(|e| e.to_string())?;
+
+            if budget == 0 {
+                ensure(
+                    sync.latent == disp.latent,
+                    format!("budget-0 latents diverged (occ {occ})"),
+                )?;
+                ensure(
+                    sync.timeline.total_s == disp.timeline.total_s,
+                    "budget-0 timeline diverged",
+                )?;
+                ensure(
+                    disp.stats.halo_displaced == 0,
+                    "budget-0 ran a displaced sync",
+                )?;
+            }
+            // Counters conserve and agree with the virtual timeline.
+            ensure(
+                disp.stats.halo_displaced + disp.stats.halo_fallback
+                    == disp.stats.syncs,
+                "halo counters do not partition the syncs",
+            )?;
+            ensure(
+                disp.stats.halo_displaced
+                    == disp.timeline.halo_displaced,
+                "executor/timeline displaced counters disagree",
+            )?;
+            ensure(
+                disp.stats.halo_fallback == disp.timeline.halo_fallback,
+                "executor/timeline fallback counters disagree",
+            )?;
+            // The fallback counter matches the plan's rule exactly:
+            // warmup prefix, the first `budget` syncs and the final
+            // sync block; everything else runs displaced.
+            let n = disp.plan.sync_points.len();
+            let expected = (0..n)
+                .filter(|&si| disp.plan.displaced_fallback(si, budget))
+                .count();
+            ensure(
+                disp.stats.halo_fallback == expected,
+                format!(
+                    "fallback counter {} != rule {} (budget {budget})",
+                    disp.stats.halo_fallback, expected
+                ),
+            )?;
+            Ok(())
+        },
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

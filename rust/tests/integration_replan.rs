@@ -208,6 +208,7 @@ fn lease_restricted_replan_keys_drift_by_global_device_id() {
                 every_k_syncs: 2,
                 drift_threshold: 0.1,
             },
+            halo: Default::default(),
         };
         cfg.validate().unwrap();
         cfg

@@ -22,7 +22,8 @@
 # — re-run with `QUICKCHECK_SEED=<seed> cargo test <name>`.
 
 set -euo pipefail
-cd "$(dirname "$0")/../rust"
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$ROOT/rust"
 
 QUICKCHECK_SEED="${QUICKCHECK_SEED:-$(date -u +%Y%m%d)}"
 export QUICKCHECK_SEED
@@ -68,6 +69,34 @@ STADI_REPLAN_STATS_OUT="$DRIFT_B" \
     cargo test -q "${FEATURES[@]}" --test integration_replan
 diff -u "$DRIFT_A" "$DRIFT_B"
 echo "   drift stats identical across runs"
+
+# Displaced-halo quality gate: the PSNR/SSIM/LPIPS floors and the
+# budget-0 bit-identity property must hold in BOTH feature configs —
+# the staleness path crosses the executor/runtime boundary, so it
+# must not rot behind the xla-backend gate either.
+echo "== displaced-halo quality gate (default + xla-backend stub)"
+cargo test -q --test integration_halo
+cargo test -q --features xla-backend --test integration_halo
+
+# The committed perf-trajectory artifacts at the repo root must each
+# carry the displaced-halo pricing ("halo" key) — a re-anchor that
+# regenerates them without it silently drops the perf history this
+# PR pinned. scripts/gen_bench_artifacts.py regenerates them.
+echo "== committed BENCH artifacts carry halo pricing"
+found=0
+for f in "$ROOT"/BENCH_*.json; do
+    [[ -e "$f" ]] || continue
+    found=1
+    if ! grep -q '"halo"' "$f"; then
+        echo "error: $(basename "$f") is missing the \"halo\" key" >&2
+        exit 1
+    fi
+    echo "   $(basename "$f") ok"
+done
+if [[ $found -eq 0 ]]; then
+    echo "error: no committed BENCH_*.json artifacts at repo root" >&2
+    exit 1
+fi
 
 echo "== cargo doc --no-deps"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
