@@ -156,6 +156,33 @@ impl Default for ReplanConfig {
     }
 }
 
+/// Cross-request batching knobs (EXTENSION past the paper's
+/// one-request-per-gang serving). When enabled, the serve worker that
+/// pops a request holds it in a bounded **admission window**
+/// (`window_ms`) and gathers up to `max_batch - 1` further compatible
+/// requests — same resolution, same effective step grid, same
+/// effective halo budget (see `serve::batch::FuseKey`) — into one
+/// *fused session*: a single lease, a single plan, per-request
+/// seeds/latents executed in lockstep at the plan's sync barriers.
+/// Disabled by default: the solo path stays byte-identical to
+/// pre-batching behavior (pinned by `tests/integration_batch.rs`).
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    pub enabled: bool,
+    /// Admission-window length in milliseconds: the longest a popped
+    /// request may be parked waiting for compatible companions. 0
+    /// fuses only requests already queued at pop time.
+    pub window_ms: u64,
+    /// Largest fused session (1 = batching off in all but name).
+    pub max_batch: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig { enabled: false, window_ms: 5, max_batch: 4 }
+    }
+}
+
 /// Halo-exchange mode at sync points (EXTENSION, DistriFusion-style
 /// displaced patch parallelism adapted to STADI's sync schedule).
 ///
@@ -250,6 +277,8 @@ pub struct EngineConfig {
     /// can only *tighten* the budget (effective budget =
     /// `min(config, tier)`), never loosen it.
     pub halo: HaloMode,
+    /// Cross-request batching (fused sessions); off by default.
+    pub batch: BatchConfig,
 }
 
 impl EngineConfig {
@@ -268,6 +297,7 @@ impl EngineConfig {
             mode: ExecMode::Dataflow,
             replan: ReplanConfig::default(),
             halo: HaloMode::default(),
+            batch: BatchConfig::default(),
         }
     }
 
@@ -335,6 +365,23 @@ impl EngineConfig {
             return Err(Error::Config(format!(
                 "halo staleness budget {} is nonsense (max 1024)",
                 self.halo.max_staleness()
+            )));
+        }
+        if self.batch.max_batch == 0 {
+            return Err(Error::Config(
+                "batch.max_batch must be >= 1".into(),
+            ));
+        }
+        if self.batch.max_batch > 64 {
+            return Err(Error::Config(format!(
+                "batch.max_batch {} is nonsense (max 64)",
+                self.batch.max_batch
+            )));
+        }
+        if self.batch.window_ms > 60_000 {
+            return Err(Error::Config(format!(
+                "batch.window_ms {} is nonsense (max 60000)",
+                self.batch.window_ms
             )));
         }
         Ok(())
@@ -430,6 +477,18 @@ impl EngineConfig {
             Some(s) => HaloMode::parse(s)?,
             None => HaloMode::default(),
         };
+        let mut batch = BatchConfig::default();
+        if let Some(b) = v.get_opt("batch") {
+            if let Some(x) = b.get_opt("enabled") {
+                batch.enabled = x.as_bool()?;
+            }
+            if let Some(x) = b.get_opt("window_ms") {
+                batch.window_ms = x.as_usize()? as u64;
+            }
+            if let Some(x) = b.get_opt("max_batch") {
+                batch.max_batch = x.as_usize()?;
+            }
+        }
         let cfg = EngineConfig {
             artifacts_dir,
             devices,
@@ -438,6 +497,7 @@ impl EngineConfig {
             mode,
             replan,
             halo,
+            batch,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -539,6 +599,36 @@ mod tests {
         assert!(bad.validate().is_err());
         let mut bad = EngineConfig::two_gpu_default("a", &[0.0]);
         bad.replan.drift_threshold = -0.5;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn batch_defaults_off_and_parses_from_json() {
+        let cfg = EngineConfig::two_gpu_default("artifacts", &[0.0]);
+        assert!(!cfg.batch.enabled, "batching must default off");
+        // A config that never mentions "batch" is the pre-batching
+        // config exactly.
+        let text = r#"{"devices": [{"name": "g0"}]}"#;
+        let cfg = EngineConfig::from_json(&json::parse(text).unwrap()).unwrap();
+        assert!(!cfg.batch.enabled);
+        assert_eq!(cfg.batch.max_batch, BatchConfig::default().max_batch);
+        let text = r#"{
+            "devices": [{"name": "g0"}],
+            "batch": {"enabled": true, "window_ms": 12, "max_batch": 3}
+        }"#;
+        let cfg = EngineConfig::from_json(&json::parse(text).unwrap()).unwrap();
+        assert!(cfg.batch.enabled);
+        assert_eq!(cfg.batch.window_ms, 12);
+        assert_eq!(cfg.batch.max_batch, 3);
+        // Invalid knobs are typed config errors.
+        let mut bad = EngineConfig::two_gpu_default("a", &[0.0]);
+        bad.batch.max_batch = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = EngineConfig::two_gpu_default("a", &[0.0]);
+        bad.batch.max_batch = 1000;
+        assert!(bad.validate().is_err());
+        let mut bad = EngineConfig::two_gpu_default("a", &[0.0]);
+        bad.batch.window_ms = 600_000;
         assert!(bad.validate().is_err());
     }
 

@@ -574,6 +574,74 @@ impl EngineCore {
         Ok(tl.total_s)
     }
 
+    /// The batched variant of [`Self::predict_latency_for`]: price the
+    /// spec's plan executed as a fused batch of `batch` compatible
+    /// requests on the gang ([`timeline::simulate_batched`] — per-row
+    /// compute xB, fixed cost and exchange paid once). This is what
+    /// keeps the router's deadline/EDF decisions honest under
+    /// batching: a member of a batch of 4 is admitted against its
+    /// *fused* completion time, not the solo fiction. `batch <= 1` is
+    /// float-identical to the solo predictor.
+    pub fn predict_latency_for_batched(
+        &self,
+        spec: &GenerationSpec,
+        devices: &[usize],
+        batch: usize,
+    ) -> Result<f64> {
+        if batch <= 1 {
+            return self.predict_latency_for(spec, devices);
+        }
+        let snap = self.subset_parts(devices)?;
+        let plan = self.plan_snapshot(spec, &snap)?;
+        let native = &self.exec.manifest().model;
+        let res = self.spec_res(spec);
+        let halo = self.effective_halo(Some(spec));
+        if res.w == native.latent_w {
+            let tl = timeline::simulate_batched(
+                &plan,
+                &snap.cluster,
+                &self.config.comm,
+                native,
+                halo,
+                batch,
+            )?;
+            return Ok(tl.total_s);
+        }
+        let model = native.with_resolution(res.h, res.w);
+        let ratio = res.w as f64 / native.latent_w as f64;
+        let cluster =
+            crate::device::scale_cluster_per_row(&snap.cluster, ratio);
+        let tl = timeline::simulate_batched(
+            &plan,
+            &cluster,
+            &self.config.comm,
+            &model,
+            halo,
+            batch,
+        )?;
+        Ok(tl.total_s)
+    }
+
+    /// The batching-compatibility signature of a spec on this engine:
+    /// (latent rows, latent cols, effective M_base, normalized warmup,
+    /// halo staleness budget). Two admissible specs with equal
+    /// signatures resolve to the same `PlanKey` on any given gang —
+    /// same resolution, same Eq. 4 step grids (the grid-alignment
+    /// property pinned in `sched::temporal`), same exchange schedule —
+    /// so their plans satisfy [`Plan::fuses_with`] and their latents
+    /// stay byte-identical whether run fused or solo. The serve-side
+    /// `FuseKey` wraps exactly this tuple.
+    pub fn fuse_signature(
+        &self,
+        spec: &GenerationSpec,
+    ) -> Result<(usize, usize, usize, usize, usize)> {
+        let (params, rows) = self.spec_params(spec)?;
+        let m = &self.exec.manifest().model;
+        let cols = spec.latent_cols(m.latent_w);
+        let budget = self.effective_halo(Some(spec)).max_staleness();
+        Ok((rows, cols, params.m_base, params.m_warmup, budget))
+    }
+
     /// Plan + execute one spec-shaped request (one-shot convenience).
     pub fn generate(&self, spec: &GenerationSpec) -> Result<Generation> {
         self.session_for(spec)?.execute(spec)

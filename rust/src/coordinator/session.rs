@@ -44,6 +44,25 @@ pub struct ReplanEvent {
     pub classes_changed: bool,
 }
 
+/// A request joining an in-flight fused session at a sync barrier.
+/// The token is opaque to the executor — the serve layer uses it to
+/// route the joiner's generation back to its connection.
+#[derive(Debug, Clone, Copy)]
+pub struct FusedJoiner {
+    pub token: u64,
+    pub seed: u64,
+}
+
+/// Result of a fused (cross-request batched) session run.
+#[derive(Debug)]
+pub struct FusedOutcome {
+    /// Generations of the founding members, in input-seed order.
+    pub members: Vec<Generation>,
+    /// Generations of barrier joiners, tagged by their tokens, in
+    /// join order.
+    pub joined: Vec<(u64, Generation)>,
+}
+
 /// A lightweight execution session: plan snapshot + cluster snapshot,
 /// bound to the resolution whose artifacts it executes.
 pub struct Session {
@@ -216,6 +235,220 @@ impl Session {
             timeline: tl,
             replans: Vec::new(),
         })
+    }
+
+    /// Execute a **fused session**: several compatible requests (same
+    /// plan — same resolution, step grids and halo budget, see
+    /// [`Plan::fuses_with`]) run in lockstep on this session's gang,
+    /// one sync-barrier round at a time. Every member owns an
+    /// independent [`dataflow::ExecState`], so a member's numerics
+    /// never see another member's latents — each request's output is
+    /// byte-identical to its solo run by construction (pinned by
+    /// `tests/integration_batch.rs`). What fusing buys is *scheduling*:
+    /// one gang lease, one kernel warm-up, and per-step costs priced
+    /// batched ([`timeline::simulate_batched`]) instead of B disjoint
+    /// leases.
+    ///
+    /// `poll` is the join gate: called with `true` after every barrier
+    /// round while members are still in flight, returning requests that
+    /// attach *at that barrier* with a fresh lagging cursor (they run
+    /// their full grids, offset by however many rounds late they
+    /// joined). When all members have drained it is called once with
+    /// `false` — the closing handshake — and any stragglers it returns
+    /// are adopted and run to completion before the session ends, so an
+    /// offered request is never dropped.
+    ///
+    /// Threaded execution mode and adaptive re-planning degrade to
+    /// sequential solo runs on the same lease (real thread pools and
+    /// per-member re-plans don't lockstep); the outcome shape and the
+    /// never-dropped guarantee are identical.
+    pub fn execute_fused_seeded(
+        &self,
+        seeds: &[u64],
+        mut poll: Option<&mut dyn FnMut(bool) -> Vec<FusedJoiner>>,
+    ) -> Result<FusedOutcome> {
+        if seeds.is_empty() {
+            return Err(crate::error::Error::Sched(
+                "fused session needs at least one member".into(),
+            ));
+        }
+        // Fallback: modes whose executors can't interleave per-barrier
+        // rounds run members sequentially on this session's lease.
+        if self.core.mode() == ExecMode::Threaded
+            || self.core.config().replan.enabled
+        {
+            let mut members = Vec::with_capacity(seeds.len());
+            for &s in seeds {
+                members.push(self.execute_seeded(s)?);
+            }
+            let mut joined = Vec::new();
+            if let Some(p) = poll.as_mut() {
+                for j in p(false) {
+                    joined.push((j.token, self.execute_seeded(j.seed)?));
+                }
+            }
+            return Ok(FusedOutcome { members, joined });
+        }
+
+        let exec = self.core.exec();
+        let model = self.model.clone();
+        let heights: Vec<usize> = self
+            .plan
+            .included_devices()
+            .map(|d| d.rows.rows)
+            .collect();
+        exec.warm_res(self.res, &heights)?;
+
+        struct Member {
+            token: Option<u64>,
+            seed: u64,
+            /// Batch occupancy when this member started — the honest
+            /// price of its own steps (later joins speed nobody up
+            /// retroactively; the pricing stays conservative for the
+            /// joiner, who shares a busier gang).
+            batch: usize,
+            st: Option<dataflow::ExecState>,
+            out: Option<dataflow::RequestOutput>,
+        }
+        let n = self.plan.devices.len();
+        let total_syncs = self.plan.sync_points.len();
+        let mut members: Vec<Member> = seeds
+            .iter()
+            .map(|&seed| Member {
+                token: None,
+                seed,
+                batch: seeds.len(),
+                st: Some(dataflow::ExecState::new(
+                    &model,
+                    n,
+                    &seeded_noise(&model, seed),
+                )),
+                out: None,
+            })
+            .collect();
+
+        loop {
+            let active: Vec<usize> = members
+                .iter()
+                .enumerate()
+                .filter(|(_, m)| m.out.is_none())
+                .map(|(i, _)| i)
+                .collect();
+            if active.is_empty() {
+                // Closing handshake: one final poll(false); stragglers
+                // it hands back are adopted, the gate never reopens.
+                let stragglers = match poll.take() {
+                    Some(p) => p(false),
+                    None => Vec::new(),
+                };
+                if stragglers.is_empty() {
+                    break;
+                }
+                let b = stragglers.len();
+                for j in stragglers {
+                    members.push(Member {
+                        token: Some(j.token),
+                        seed: j.seed,
+                        batch: b,
+                        st: Some(dataflow::ExecState::new(
+                            &model,
+                            n,
+                            &seeded_noise(&model, j.seed),
+                        )),
+                        out: None,
+                    });
+                }
+                continue;
+            }
+            // One lockstep barrier round per active member.
+            for &i in &active {
+                let cond = seeded_cond(&model, members[i].seed);
+                let st = members[i].st.as_mut().unwrap();
+                dataflow::run_span(
+                    exec, self.res, &model, &self.plan, st, 1, &cond,
+                    self.halo,
+                )?;
+                if st.synced >= total_syncs {
+                    let st = members[i].st.take().unwrap();
+                    members[i].out =
+                        Some(dataflow::finish(&self.plan, st)?);
+                }
+            }
+            // Drain the join gate at the barrier while still in flight.
+            let in_flight =
+                members.iter().filter(|m| m.out.is_none()).count();
+            if in_flight > 0 {
+                if let Some(p) = poll.as_mut() {
+                    for j in p(true) {
+                        let b = members
+                            .iter()
+                            .filter(|m| m.out.is_none())
+                            .count()
+                            + 1;
+                        members.push(Member {
+                            token: Some(j.token),
+                            seed: j.seed,
+                            batch: b,
+                            st: Some(dataflow::ExecState::new(
+                                &model,
+                                n,
+                                &seeded_noise(&model, j.seed),
+                            )),
+                            out: None,
+                        });
+                    }
+                }
+            }
+        }
+
+        // Epilogue per member: profiler feedback (identical to the solo
+        // path) and the batched timeline at the member's occupancy.
+        let width_ratio = self.model.latent_w as f64
+            / exec.manifest().model.latent_w as f64;
+        let tl_cluster = crate::device::scale_cluster_per_row(
+            &self.cluster,
+            width_ratio,
+        );
+        let comm = &self.core.config().comm;
+        let mut founders = Vec::new();
+        let mut joined = Vec::new();
+        for m in members {
+            let out = m.out.expect("all members drained");
+            for d in self.plan.included_devices() {
+                if out.stats.steps_run[d.device] > 0 {
+                    let rows_run =
+                        d.rows.rows * out.stats.steps_run[d.device];
+                    let rows_eq = ((rows_run as f64 * width_ratio)
+                        .round() as usize)
+                        .max(1);
+                    self.core.record_step(
+                        self.device_map[d.device],
+                        rows_eq,
+                        out.stats.compute_s[d.device],
+                    );
+                }
+            }
+            let tl = timeline::simulate_batched(
+                &self.plan,
+                &tl_cluster,
+                comm,
+                &model,
+                self.halo,
+                m.batch.max(1),
+            )?;
+            let generation = Generation {
+                latent: out.latent,
+                plan: self.plan.clone(),
+                stats: out.stats,
+                timeline: tl,
+                replans: Vec::new(),
+            };
+            match m.token {
+                Some(t) => joined.push((t, generation)),
+                None => founders.push(generation),
+            }
+        }
+        Ok(FusedOutcome { members: founders, joined })
     }
 
     /// Adaptive execution: structure the request into the warmup phase

@@ -432,6 +432,35 @@ pub fn simulate_with(
     Ok(st.finish(plan))
 }
 
+/// Price a plan executed as a **fused batch** of `batch` compatible
+/// requests in lockstep on one gang: each device's row-proportional
+/// compute scales by the batch size (B stacked latents per kernel
+/// launch), while the fixed per-step cost and the halo/x exchange are
+/// paid once per step — the sync schedule, halo debts and barrier
+/// structure are those of the single shared plan. That amortization
+/// (fixed + B·per_row·rows instead of B·(fixed + per_row·rows), comm
+/// once instead of B times) is the throughput lever of cross-request
+/// batching; `batch == 1` is float-identical to [`simulate_with`], so
+/// solo pricing is the degenerate case, not a separate code path.
+pub fn simulate_batched(
+    plan: &Plan,
+    cluster: &[SimGpu],
+    comm: &CommConfig,
+    model: &ModelInfo,
+    halo: HaloMode,
+    batch: usize,
+) -> Result<Timeline> {
+    if batch == 0 {
+        return Err(Error::Sched("batch size must be >= 1".into()));
+    }
+    if batch == 1 {
+        return simulate_with(plan, cluster, comm, model, halo);
+    }
+    let scaled =
+        crate::device::scale_cluster_per_row(cluster, batch as f64);
+    simulate_with(plan, &scaled, comm, model, halo)
+}
+
 /// Replay a *frozen* plan under an injected occupancy drift: the
 /// baseline the mid-flight re-planner is measured against. `map`
 /// names each local device's global id in the schedule.
@@ -653,6 +682,52 @@ mod tests {
                 )?;
                 Ok(())
             },
+        );
+    }
+
+    #[test]
+    fn batched_pricing_amortizes_fixed_cost_and_comm() {
+        let p = StadiParams::default();
+        let plan = build_plan(&[1.0, 0.5], &p);
+        let cl = cluster(&[0.0, 0.5]);
+        let comm = CommConfig::default();
+        let m = model();
+        let solo = simulate_with(&plan, &cl, &comm, &m, HaloMode::Sync)
+            .unwrap();
+        // Batch of 1 is the solo path, bit-exact.
+        let b1 = simulate_batched(&plan, &cl, &comm, &m, HaloMode::Sync, 1)
+            .unwrap();
+        assert_eq!(b1.total_s.to_bits(), solo.total_s.to_bits());
+        assert_eq!(b1.comm_s.to_bits(), solo.comm_s.to_bits());
+        // A batch of B serves B requests in strictly less than B solo
+        // runs (fixed per-step cost and the exchange are paid once),
+        // but strictly more than one (the per-row work is real).
+        for b in [2usize, 4, 8] {
+            let tb =
+                simulate_batched(&plan, &cl, &comm, &m, HaloMode::Sync, b)
+                    .unwrap();
+            assert!(
+                tb.total_s < b as f64 * solo.total_s,
+                "batch {b}: {} !< {}",
+                tb.total_s,
+                b as f64 * solo.total_s
+            );
+            assert!(tb.total_s > solo.total_s, "batch {b} not slower");
+            // Comm is per-plan, not per-member.
+            assert!((tb.comm_s - solo.comm_s).abs() < 1e-12);
+        }
+        // Per-request amortized latency improves monotonically in B.
+        let per = |b: usize| {
+            simulate_batched(&plan, &cl, &comm, &m, HaloMode::Sync, b)
+                .unwrap()
+                .total_s
+                / b as f64
+        };
+        assert!(per(2) < per(1) && per(4) < per(2) && per(8) < per(4));
+        // Batch 0 is a typed error.
+        assert!(
+            simulate_batched(&plan, &cl, &comm, &m, HaloMode::Sync, 0)
+                .is_err()
         );
     }
 

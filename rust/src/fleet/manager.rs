@@ -1,10 +1,14 @@
-//! The fleet ledger: disjoint RAII GPU leases.
+//! The fleet ledger: disjoint RAII GPU leases, with opt-in batch slots.
 //!
-//! `FleetManager` tracks which devices are currently leased. A grant
-//! hands back a [`GpuLease`] whose `Drop` returns the devices and
-//! wakes blocked acquirers — so release is tied to scope, not to a
-//! code path: early returns, `?` propagation, and panics unwinding
-//! through the serve worker's `catch_unwind` all release correctly.
+//! `FleetManager` tracks per-device slot occupancy. A grant hands back
+//! a [`GpuLease`] whose `Drop` returns the devices and wakes blocked
+//! acquirers — so release is tied to scope, not to a code path: early
+//! returns, `?` propagation, and panics unwinding through the serve
+//! worker's `catch_unwind` all release correctly. Leases are granted
+//! *exclusive*; a fused-batch host opts into sharing via
+//! [`GpuLease::open_slots`], after which compatible requests attach
+//! through [`FleetManager::try_join`] (RAII [`SlotJoin`]) instead of
+//! waiting for a free gang.
 //!
 //! Locking: one `Mutex<Ledger>` guarding the in-use bitmap plus a
 //! `Condvar` signalled on every release. The mutex is held only for
@@ -26,8 +30,15 @@ use crate::spec::Priority;
 
 #[derive(Debug)]
 struct Ledger {
-    /// `in_use[d]` = device `d` is currently leased.
-    in_use: Vec<bool>,
+    /// `used[d]` = batch slots of device `d` currently occupied. 0 =
+    /// free; 1 = exclusively leased (the only state the pre-batching
+    /// ledger had); >1 = a shared lease plus joined batch members.
+    used: Vec<u32>,
+    /// `share_cap[d]` = slot capacity the *owning lease* opened on
+    /// device `d` via [`GpuLease::open_slots`]. 0 (the grant default)
+    /// means exclusive — joins refused — so every pre-batching code
+    /// path behaves bit-identically.
+    share_cap: Vec<u32>,
     /// Acquirers currently blocked in [`FleetManager::acquire`] — the
     /// admission layer's natural queue-depth signal.
     waiters: usize,
@@ -100,7 +111,8 @@ impl FleetManager {
             inner: Arc::new(Inner {
                 n: n_devices,
                 ledger: Mutex::new(Ledger {
-                    in_use: vec![false; n_devices],
+                    used: vec![0; n_devices],
+                    share_cap: vec![0; n_devices],
                     waiters: 0,
                     active: 0,
                     granted: 0,
@@ -115,9 +127,11 @@ impl FleetManager {
         self.inner.n
     }
 
-    /// Devices not currently leased, ascending.
+    /// Devices not currently leased, ascending. A shared device with
+    /// joiners still attached is NOT free — it returns to the pool
+    /// only when its last slot (owner or joiner) drops.
     pub fn free_devices(&self) -> Vec<usize> {
-        free_of(&self.inner.ledger().in_use)
+        free_of(&self.inner.ledger().used)
     }
 
     /// Leases currently outstanding.
@@ -165,10 +179,36 @@ impl FleetManager {
     pub fn try_acquire(&self, devices: &[usize]) -> Result<Option<GpuLease>> {
         self.validate(devices)?;
         let mut g = self.inner.ledger();
-        if devices.iter().any(|&d| g.in_use[d]) {
+        if devices.iter().any(|&d| g.used[d] > 0) {
             return Ok(None);
         }
         Ok(Some(self.grant(&mut g, devices)))
+    }
+
+    /// Try to join an in-flight shared lease on exactly `devices`:
+    /// succeeds only when every device is currently leased by an owner
+    /// that opened batch slots ([`GpuLease::open_slots`]) and has a
+    /// slot spare. `Ok(None)` otherwise (exclusive lease, full, or
+    /// free — a free device needs a real lease, not a join). The
+    /// returned RAII guard occupies one slot per device until dropped;
+    /// the devices stay un-free until owner *and* all joiners release.
+    /// Never blocks.
+    pub fn try_join(&self, devices: &[usize]) -> Result<Option<SlotJoin>> {
+        self.validate(devices)?;
+        let mut g = self.inner.ledger();
+        let joinable = |d: usize| {
+            g.used[d] >= 1 && g.share_cap[d] > 0 && g.used[d] < g.share_cap[d]
+        };
+        if !devices.iter().all(|&d| joinable(d)) {
+            return Ok(None);
+        }
+        for &d in devices {
+            g.used[d] += 1;
+        }
+        g.generation += 1;
+        let mut sorted = devices.to_vec();
+        sorted.sort_unstable();
+        Ok(Some(SlotJoin { inner: Arc::clone(&self.inner), devices: sorted }))
     }
 
     /// Block until `policy` picks a grantable gang from the free set,
@@ -238,7 +278,7 @@ impl FleetManager {
             let (free, queue_depth, in_flight, gen) = {
                 let g = self.inner.ledger();
                 (
-                    free_of(&g.in_use),
+                    free_of(&g.used),
                     // This acquirer is demand, not queue: depth counts
                     // the requests waiting *behind* it.
                     g.waiters - 1 + backlog,
@@ -286,7 +326,7 @@ impl FleetManager {
                             policy.name()
                         )));
                     }
-                    if gang.iter().all(|&d| !g.in_use[d]) {
+                    if gang.iter().all(|&d| g.used[d] == 0) {
                         return Ok(self.grant(&mut g, &gang));
                     }
                     // A concurrent grant took one of our devices while
@@ -326,8 +366,9 @@ impl FleetManager {
         devices: &[usize],
     ) -> GpuLease {
         for &d in devices {
-            debug_assert!(!g.in_use[d], "double-granting device {d}");
-            g.in_use[d] = true;
+            debug_assert!(g.used[d] == 0, "double-granting device {d}");
+            g.used[d] = 1;
+            g.share_cap[d] = 0;
         }
         g.active += 1;
         g.granted += 1;
@@ -342,11 +383,10 @@ impl FleetManager {
     }
 }
 
-fn free_of(in_use: &[bool]) -> Vec<usize> {
-    in_use
-        .iter()
+fn free_of(used: &[u32]) -> Vec<usize> {
+    used.iter()
         .enumerate()
-        .filter(|(_, &u)| !u)
+        .filter(|(_, &u)| u == 0)
         .map(|(d, _)| d)
         .collect()
 }
@@ -361,6 +401,33 @@ impl GpuLease {
     pub fn id(&self) -> u64 {
         self.id
     }
+
+    /// Open this lease's devices for batch-slot joins: up to `cap`
+    /// total slots per device (owner included), so `cap - 1` compatible
+    /// requests can attach via [`FleetManager::try_join`] while this
+    /// lease is in flight. `cap <= 1` keeps/returns the lease to
+    /// exclusive. Leases are granted exclusive — sharing is opt-in per
+    /// lease, which is what keeps every non-batching caller's
+    /// disjointness guarantees (and the property tests pinning them)
+    /// intact.
+    pub fn open_slots(&self, cap: u32) {
+        let mut g = self.inner.ledger();
+        for &d in &self.devices {
+            g.share_cap[d] = cap.max(1);
+        }
+        g.generation += 1;
+    }
+
+    /// Close the join window early (the fused session's gate no longer
+    /// accepts members): new joins are refused, already-joined slots
+    /// drain on their own schedule. Idempotent; `Drop` does this too.
+    pub fn close_slots(&self) {
+        let mut g = self.inner.ledger();
+        for &d in &self.devices {
+            g.share_cap[d] = 0;
+        }
+        g.generation += 1;
+    }
 }
 
 impl Drop for GpuLease {
@@ -370,12 +437,44 @@ impl Drop for GpuLease {
         // would abort the process.
         let mut g = self.inner.ledger();
         for &d in &self.devices {
-            debug_assert!(g.in_use[d], "releasing an unleased device {d}");
-            g.in_use[d] = false;
+            debug_assert!(g.used[d] >= 1, "releasing an unleased device {d}");
+            g.used[d] -= 1;
+            // The owner is gone: no new joins, whatever joiner slots
+            // remain keep the device un-free until they drop.
+            g.share_cap[d] = 0;
         }
         g.active -= 1;
         g.generation += 1;
         // Releases can unblock several waiters (small-gang policies).
+        self.inner.freed.notify_all();
+    }
+}
+
+/// RAII batch-slot membership on an in-flight shared lease (see
+/// [`FleetManager::try_join`]). Dropping releases the slots and wakes
+/// blocked acquirers — the last slot out returns the devices to the
+/// pool.
+#[derive(Debug)]
+pub struct SlotJoin {
+    inner: Arc<Inner>,
+    devices: Vec<usize>,
+}
+
+impl SlotJoin {
+    /// Joined device indices, ascending.
+    pub fn devices(&self) -> &[usize] {
+        &self.devices
+    }
+}
+
+impl Drop for SlotJoin {
+    fn drop(&mut self) {
+        let mut g = self.inner.ledger();
+        for &d in &self.devices {
+            debug_assert!(g.used[d] >= 1, "releasing an unjoined device {d}");
+            g.used[d] -= 1;
+        }
+        g.generation += 1;
         self.inner.freed.notify_all();
     }
 }
@@ -518,6 +617,65 @@ mod tests {
         }
         assert_eq!(m.free_devices(), vec![0, 1, 2]);
         assert_eq!(m.in_flight(), 0);
+    }
+
+    #[test]
+    fn slot_joins_share_an_open_lease_and_respect_capacity() {
+        let m = FleetManager::new(4);
+        let lease = m.try_acquire(&[0, 1]).unwrap().unwrap();
+        // Exclusive by default: joins refused everywhere.
+        assert!(m.try_join(&[0, 1]).unwrap().is_none());
+        // cap 3 = owner + 2 joiners.
+        lease.open_slots(3);
+        let j1 = m.try_join(&[0, 1]).unwrap().unwrap();
+        assert_eq!(j1.devices(), &[0, 1]);
+        let j2 = m.try_join(&[0, 1]).unwrap().unwrap();
+        // Full: a third join is refused.
+        assert!(m.try_join(&[0, 1]).unwrap().is_none());
+        // A join must cover leased+open devices only — free devices
+        // and partial overlaps are refused, not half-joined.
+        assert!(m.try_join(&[2]).unwrap().is_none());
+        assert!(m.try_join(&[1, 2]).unwrap().is_none());
+        // Shared devices stay un-free and un-leasable for outsiders.
+        assert_eq!(m.free_devices(), vec![2, 3]);
+        assert!(m.try_acquire(&[0]).unwrap().is_none());
+        // One joiner out -> a slot frees up again.
+        drop(j1);
+        let j3 = m.try_join(&[0, 1]).unwrap().unwrap();
+        // Owner closes the window: no new joins, existing ones drain.
+        lease.close_slots();
+        assert!(m.try_join(&[0, 1]).unwrap().is_none());
+        // Owner released while joiners remain: devices still un-free.
+        drop(lease);
+        assert_eq!(m.free_devices(), vec![2, 3]);
+        assert_eq!(m.in_flight(), 0);
+        drop(j2);
+        drop(j3);
+        // Last slot out returns the devices to the pool.
+        assert_eq!(m.free_devices(), vec![0, 1, 2, 3]);
+        let again = m.try_acquire(&[0, 1]).unwrap();
+        assert!(again.is_some());
+    }
+
+    #[test]
+    fn slot_release_wakes_blocked_acquirers() {
+        let m = FleetManager::new(1);
+        let lease = m.try_acquire(&[0]).unwrap().unwrap();
+        lease.open_slots(2);
+        let join = m.try_join(&[0]).unwrap().unwrap();
+        drop(lease); // owner gone, joiner still holds the device
+        let waiter = {
+            let m = m.clone();
+            thread::spawn(move || {
+                m.acquire(&AllGpus, &[1.0], None, 0).unwrap()
+            })
+        };
+        while m.waiters() == 0 {
+            thread::yield_now();
+        }
+        drop(join); // last slot out must notify the waiter
+        let lease = waiter.join().unwrap();
+        assert_eq!(lease.devices(), &[0]);
     }
 
     #[test]

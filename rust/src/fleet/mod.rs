@@ -32,8 +32,8 @@
 pub mod manager;
 pub mod policy;
 
-pub use manager::{FleetManager, GpuLease};
+pub use manager::{FleetManager, GpuLease, SlotJoin};
 pub use policy::{
-    parse_policy, Adaptive, AllGpus, Deadline, FixedGang, GangPolicy,
-    PolicyCtx,
+    parse_policy, Adaptive, AllGpus, BatchAware, Deadline, FixedGang,
+    GangPolicy, PolicyCtx,
 };

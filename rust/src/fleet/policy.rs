@@ -192,6 +192,52 @@ impl GangPolicy for Deadline {
     }
 }
 
+/// Batch-slot-aware gang sizing: like [`Adaptive`], but the shard
+/// divisor assumes each gang can serve up to `max_batch` queued
+/// requests as one fused session — so under backlog the policy hands
+/// out *fewer, larger* gangs than demand-per-gang sharding would, and
+/// the batching layer fills the slots. Demand that cannot batch
+/// (incompatible shapes) still drains: a gang is never smaller than
+/// the plain adaptive shard would make the *batched* demand.
+///
+/// Low load behaves exactly like [`Adaptive`] — there is nothing to
+/// fuse, so min-predicted-latency gangs win.
+pub struct BatchAware {
+    /// Largest fused session the serve layer will assemble; the
+    /// divisor that converts queued requests into expected gangs.
+    pub max_batch: usize,
+    inner: Adaptive,
+}
+
+impl BatchAware {
+    pub fn new(max_batch: usize) -> Self {
+        BatchAware { max_batch: max_batch.max(1), inner: Adaptive::default() }
+    }
+}
+
+impl GangPolicy for BatchAware {
+    fn name(&self) -> String {
+        format!("batched:{}", self.max_batch)
+    }
+
+    fn choose(&self, free: &[usize], ctx: &PolicyCtx) -> Option<Vec<usize>> {
+        if free.is_empty() {
+            return None;
+        }
+        if ctx.queue_depth < self.inner.load_threshold {
+            return self.inner.choose(free, ctx);
+        }
+        // Fused demand: `queue_depth + 1` requests collapse into
+        // ceil(demand / max_batch) expected sessions; shard the free
+        // set across those instead of across raw requests.
+        let sessions =
+            (ctx.queue_depth + 1).div_ceil(self.max_batch).max(1);
+        let sorted = by_speed_desc(free, ctx.speeds);
+        let k = sorted.len().div_ceil(sessions).max(1);
+        Some(balanced_pick(&sorted, k))
+    }
+}
+
 /// Min-predicted-latency fastest-first prefix (fastest-first prefixes
 /// are the natural candidates: a slower device only ever joins after
 /// every faster one). Whole free set when no prefix can be priced.
@@ -244,8 +290,8 @@ fn balanced_pick(sorted_desc: &[usize], k: usize) -> Vec<usize> {
     gang
 }
 
-/// Parse a `--gang-policy` spec: `all`, `fixed:K`, `adaptive`, or
-/// `deadline`.
+/// Parse a `--gang-policy` spec: `all`, `fixed:K`, `adaptive`,
+/// `deadline`, or `batched:K`.
 pub fn parse_policy(spec: &str) -> Result<Box<dyn GangPolicy>> {
     if spec == "all" {
         return Ok(Box::new(AllGpus));
@@ -265,9 +311,18 @@ pub fn parse_policy(spec: &str) -> Result<Box<dyn GangPolicy>> {
         }
         return Ok(Box::new(FixedGang(k)));
     }
+    if let Some(k) = spec.strip_prefix("batched:") {
+        let k: usize = k.parse().map_err(|_| {
+            Error::Config(format!("bad batch size in {spec:?}"))
+        })?;
+        if k == 0 {
+            return Err(Error::Config("batch size must be >= 1".into()));
+        }
+        return Ok(Box::new(BatchAware::new(k)));
+    }
     Err(Error::Config(format!(
         "unknown gang policy {spec:?} (expected all | fixed:K | adaptive \
-         | deadline)"
+         | deadline | batched:K)"
     )))
 }
 
@@ -406,13 +461,48 @@ mod tests {
     }
 
     #[test]
+    fn batch_aware_shards_by_fused_demand() {
+        let speeds = [1.0, 0.9, 0.8, 0.5];
+        // 3 waiting + this one = 4 requests; max_batch 4 fuses them
+        // into 1 expected session -> the whole free set, where plain
+        // adaptive sharding would hand out singletons.
+        let got = BatchAware::new(4)
+            .choose(&[0, 1, 2, 3], &ctx(&speeds, 3, None))
+            .unwrap();
+        assert_eq!(got.len(), 4);
+        let adaptive = Adaptive::default()
+            .choose(&[0, 1, 2, 3], &ctx(&speeds, 3, None))
+            .unwrap();
+        assert_eq!(adaptive, vec![0]);
+        // 7 waiting + 1 = 8 over batches of 4 -> 2 sessions -> 2-device
+        // balanced gangs.
+        let got = BatchAware::new(4)
+            .choose(&[0, 1, 2, 3], &ctx(&speeds, 7, None))
+            .unwrap();
+        assert_eq!(got, vec![0, 3]);
+        // max_batch 1 degenerates to adaptive sharding exactly.
+        let got = BatchAware::new(1)
+            .choose(&[0, 1, 2, 3], &ctx(&speeds, 3, None))
+            .unwrap();
+        assert_eq!(got, adaptive);
+        // Low load: identical to adaptive (min-latency prefix path).
+        let got = BatchAware::new(4)
+            .choose(&[0, 1, 2, 3], &ctx(&speeds, 0, None))
+            .unwrap();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
     fn parse_roundtrip() {
         assert_eq!(parse_policy("all").unwrap().name(), "all");
         assert_eq!(parse_policy("fixed:3").unwrap().name(), "fixed:3");
         assert_eq!(parse_policy("adaptive").unwrap().name(), "adaptive");
         assert_eq!(parse_policy("deadline").unwrap().name(), "deadline");
+        assert_eq!(parse_policy("batched:4").unwrap().name(), "batched:4");
         assert!(parse_policy("fixed:0").is_err());
         assert!(parse_policy("fixed:x").is_err());
+        assert!(parse_policy("batched:0").is_err());
+        assert!(parse_policy("batched:x").is_err());
         assert!(parse_policy("bogus").is_err());
     }
 }

@@ -219,20 +219,58 @@ fn cmd_serve(args: impl Iterator<Item = String>) -> Result<()> {
         .flag("max-requests", "stop after N requests (0 = run forever)", Some("0"))
         .flag(
             "gang-policy",
-            "fleet partitioning: all | fixed:K | adaptive | deadline \
-             (empty = whole-cluster sessions)",
+            "fleet partitioning: all | fixed:K | adaptive | deadline | \
+             batched:K (empty = whole-cluster sessions)",
+            Some(""),
+        )
+        .flag(
+            "batch-window",
+            "cross-request batching admission window in ms; setting it \
+             enables batching (empty = config default, off unless the \
+             JSON config enables it)",
+            Some(""),
+        )
+        .flag(
+            "batch-max",
+            "largest fused session; setting it enables batching (empty \
+             = config default)",
             Some(""),
         );
     let p = cmd.parse(args)?;
     let cfg = build_config(&p)?;
     let core = EngineCore::new(cfg)?;
     let listener = TcpListener::bind(p.get("addr").unwrap())?;
-    let opts = ServeOptions {
+    let mut opts = ServeOptions {
         queue_capacity: p.get_parsed("queue")?,
         workers: p.get_parsed("workers")?,
         max_requests: p.get_parsed("max-requests")?,
         ..ServeOptions::default()
     };
+    // The engine config's `batch` block is the baseline; either CLI
+    // flag overrides its field *and* switches batching on (passing a
+    // batching knob means you want batching).
+    opts.batch = core.config().batch.clone();
+    if let Some(s) = p.get("batch-window").filter(|s| !s.trim().is_empty()) {
+        opts.batch.window_ms = s.trim().parse().map_err(|_| {
+            stadi::error::Error::Config(format!(
+                "--batch-window {s:?} is not a millisecond count"
+            ))
+        })?;
+        opts.batch.enabled = true;
+    }
+    if let Some(s) = p.get("batch-max").filter(|s| !s.trim().is_empty()) {
+        opts.batch.max_batch = s.trim().parse().map_err(|_| {
+            stadi::error::Error::Config(format!(
+                "--batch-max {s:?} is not a session size"
+            ))
+        })?;
+        opts.batch.enabled = true;
+    }
+    if opts.batch.enabled && opts.batch.max_batch < 2 {
+        return Err(stadi::error::Error::Config(
+            "batching needs --batch-max >= 2".into(),
+        ));
+    }
     match p.get("gang-policy").filter(|s| !s.is_empty()) {
         None => {
             stadi::serve::server::serve(core, listener, opts, None)?;

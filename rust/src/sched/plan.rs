@@ -411,6 +411,30 @@ impl Plan {
         self.devices.iter().map(|d| d.rows.rows).sum()
     }
 
+    /// Whether two plans can run in **lockstep** as one fused batch:
+    /// identical ordered sync schedules (so every barrier lines up),
+    /// identical device sets, and identical row splits (so a batched
+    /// step launches one kernel shape per device). This is the
+    /// executable form of the batching compatibility rule — the
+    /// serve-side `FuseKey` (same resolution, step grid, halo budget)
+    /// is chosen so that compatible requests resolve to the *same*
+    /// `PlanKey` and therefore trivially satisfy this; the predicate
+    /// exists so fused execution can assert it rather than assume it.
+    pub fn fuses_with(&self, other: &Plan) -> bool {
+        self.sync_points == other.sync_points
+            && self.devices.len() == other.devices.len()
+            && self
+                .devices
+                .iter()
+                .zip(&other.devices)
+                .all(|(a, b)| {
+                    a.device == b.device
+                        && a.class == b.class
+                        && a.rows == b.rows
+                        && a.steps.len() == b.steps.len()
+                })
+    }
+
     /// Human-readable summary (used by `stadi plan`).
     pub fn describe(&self) -> String {
         let mut s = String::new();
@@ -811,6 +835,21 @@ mod tests {
             base.clone().with_halo(HaloMode::Displaced { max_staleness: 1 })
         );
         assert_eq!(base, base.clone().with_halo(HaloMode::Sync));
+    }
+
+    #[test]
+    fn fuses_with_requires_identical_lockstep_shape() {
+        let p = StadiParams::default();
+        let a = build(&[1.0, 0.5], &p).unwrap();
+        // Same shape (rebuilt) fuses; a plan always fuses with itself.
+        assert!(a.fuses_with(&a));
+        assert!(a.fuses_with(&build(&[1.0, 0.5], &p).unwrap()));
+        // Different speeds -> different rows/grids -> no fuse.
+        assert!(!a.fuses_with(&build(&[1.0, 1.0], &p).unwrap()));
+        // Different step budget -> different sync schedule -> no fuse.
+        assert!(!a.fuses_with(&build(&[1.0, 0.5], &p.for_steps(50)).unwrap()));
+        // Different device count -> no fuse.
+        assert!(!a.fuses_with(&build(&[1.0], &p).unwrap()));
     }
 
     #[test]

@@ -1,0 +1,482 @@
+//! Cross-request batching: compatibility keys, admission-window
+//! grouping, and the join-at-barrier matchmaking registry.
+//!
+//! STADI's Eq. 4 step grid is a pure function of (rows, cols, step
+//! count, warmup length, halo budget) — the *grid-alignment property*
+//! pinned in `sched::temporal`. Two requests whose [`FuseKey`]s are
+//! equal therefore plan to the *same* lockstep schedule on any gang
+//! (see [`Plan::fuses_with`](crate::sched::plan::Plan::fuses_with)),
+//! which is what makes fusing them into one session safe: the fused
+//! session runs each member's own latents through the *identical*
+//! plan, so every member's output stays byte-identical to its solo
+//! run. Batching changes *when* work runs and what it costs — never
+//! what it computes.
+//!
+//! Three layers live here:
+//!
+//! * [`FuseKey`] — the compatibility signature (wraps
+//!   [`EngineCore::fuse_signature`](crate::coordinator::EngineCore::fuse_signature)).
+//! * [`group_compatible`] — the *pure* admission-window grouping rule,
+//!   shared by the serve worker's gather loop, the discrete-event
+//!   frontier sweep in [`serve::sim`](crate::serve::sim), and the
+//!   property tests — one definition, three consumers, no drift.
+//! * [`BatchGates`] — the live matchmaking registry for
+//!   **join-at-barrier**: a worker running a fused session registers a
+//!   gate keyed by its `FuseKey`; a later worker holding a compatible
+//!   request first claims a fleet slot on the gate's devices
+//!   ([`FleetManager::try_join`]) and then parks an [`Offer`] that the
+//!   running session adopts at its next sync barrier
+//!   (`Session::execute_fused_seeded`'s poll hook). Offers are never
+//!   silently dropped: the session's closing handshake adopts
+//!   stragglers, and a gate that closes without adopting declines its
+//!   offers so their workers fall back to founding their own sessions.
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use crate::coordinator::Generation;
+use crate::error::Error;
+use crate::fleet::{FleetManager, SlotJoin};
+
+/// Batch-compatibility signature. Equal keys ⇒ identical Eq. 4/Eq. 5
+/// plans on any gang ⇒ safe to fuse. The fields mirror
+/// `EngineCore::fuse_signature`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FuseKey {
+    /// Latent rows (after any per-request resolution override).
+    pub rows: usize,
+    /// Latent cols.
+    pub cols: usize,
+    /// Base denoising step count (Eq. 4 `m`).
+    pub steps: usize,
+    /// Warmup steps executed at full sync.
+    pub warmup: usize,
+    /// Effective halo staleness budget (0 = fully synchronous).
+    pub halo_budget: usize,
+}
+
+impl FuseKey {
+    /// Build from the `(rows, cols, steps, warmup, halo_budget)` tuple
+    /// `EngineCore::fuse_signature` returns.
+    pub fn from_signature(sig: (usize, usize, usize, usize, usize)) -> Self {
+        FuseKey {
+            rows: sig.0,
+            cols: sig.1,
+            steps: sig.2,
+            warmup: sig.3,
+            halo_budget: sig.4,
+        }
+    }
+}
+
+/// Pure admission-window grouping: partition arrivals (time-sorted or
+/// not — they are processed in arrival order as given) into fused
+/// groups of at most `max_batch`, where a group's *leader* (its first
+/// member) holds the window open for `window_s` and every later
+/// arrival with the same key inside that window joins.
+///
+/// Returns groups as index lists into `arrivals`, in leader order.
+/// Invariants (property-tested, and relied on by the DES sweep):
+///
+/// * every group is key-homogeneous;
+/// * `1 <= group.len() <= max_batch`;
+/// * no member waits past the leader's window: a member arriving at
+///   `t` joins a leader arriving at `t0 >= t - window_s`, and the
+///   group dispatches no later than `t0 + window_s`, so every member's
+///   extra queueing delay is `<= window_s`;
+/// * every index appears in exactly one group (nothing starves).
+pub fn group_compatible(
+    arrivals: &[(f64, FuseKey)],
+    window_s: f64,
+    max_batch: usize,
+) -> Vec<Vec<usize>> {
+    let max_batch = max_batch.max(1);
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    let mut taken = vec![false; arrivals.len()];
+    for i in 0..arrivals.len() {
+        if taken[i] {
+            continue;
+        }
+        taken[i] = true;
+        let (t0, key) = arrivals[i];
+        let mut group = vec![i];
+        for (j, &(t, k)) in
+            arrivals.iter().enumerate().skip(i + 1)
+        {
+            if group.len() >= max_batch {
+                break;
+            }
+            if taken[j] || k != key {
+                continue;
+            }
+            if t > t0 + window_s {
+                // Arrivals are processed in order; a later index can
+                // still be earlier in time if the caller passed an
+                // unsorted trace, so `continue` rather than `break`.
+                continue;
+            }
+            taken[j] = true;
+            group.push(j);
+        }
+        groups.push(group);
+    }
+    groups
+}
+
+/// How a parked joiner's request resolved.
+#[derive(Debug)]
+pub enum JoinReply {
+    /// Adopted at a barrier and executed; here is its generation.
+    Done(Box<Generation>),
+    /// The gate closed without adopting this offer (session finished
+    /// its last barrier first, or tore down). Nothing ran — the
+    /// joiner's worker should fall back to founding its own session.
+    Declined,
+    /// The fused session adopted the offer but then failed; the
+    /// joiner's client is owed this error, same as the founders'.
+    Failed(Error),
+}
+
+/// A parked join request: the joiner's worker blocks on the paired
+/// receiver while the running session holds this end. The embedded
+/// [`SlotJoin`] keeps the fleet slot claimed from offer time until the
+/// reply is sent (dropping the offer releases it).
+pub struct Offer {
+    /// Correlates this offer with the generation the session hands
+    /// back (`FusedOutcome::joined` carries the token).
+    pub token: u64,
+    pub seed: u64,
+    reply: mpsc::Sender<JoinReply>,
+    /// Held, not read: the slot frees on drop.
+    _slot: SlotJoin,
+}
+
+impl Offer {
+    /// Send the joiner's result. Errors (receiver gone — its worker
+    /// died) are ignored: the slot still frees on drop.
+    pub fn resolve(self, reply: JoinReply) {
+        let _ = self.reply.send(reply);
+    }
+}
+
+struct Gate {
+    id: u64,
+    key: FuseKey,
+    devices: Vec<usize>,
+    /// Cleared by [`GateHandle::close`]; offers check it under the
+    /// registry lock, so after `close` returns no new offer can land.
+    accepting: bool,
+    pending: Vec<Offer>,
+}
+
+#[derive(Default)]
+struct State {
+    next_gate: u64,
+    next_token: u64,
+    gates: Vec<Gate>,
+}
+
+/// Matchmaking registry: open gates (fused sessions willing to adopt
+/// joiners at their next barrier) keyed by [`FuseKey`]. One per
+/// serving runner, shared by all workers.
+#[derive(Default)]
+pub struct BatchGates {
+    inner: Mutex<State>,
+}
+
+impl BatchGates {
+    pub fn new() -> Self {
+        BatchGates::default()
+    }
+
+    /// Open a gate for a session about to run on `devices` with
+    /// compatibility `key`. The handle drains offers at barriers and
+    /// unregisters (declining leftovers) on drop.
+    pub fn register(
+        &self,
+        key: FuseKey,
+        devices: Vec<usize>,
+    ) -> GateHandle<'_> {
+        let mut g = self.inner.lock().unwrap();
+        let id = g.next_gate;
+        g.next_gate += 1;
+        g.gates.push(Gate {
+            id,
+            key,
+            devices,
+            accepting: true,
+            pending: Vec::new(),
+        });
+        GateHandle { gates: self, id }
+    }
+
+    /// Try to park `seed` on an open gate with this `key`. Claims a
+    /// fleet slot on the gate's devices first — a gate whose lease has
+    /// no free slots (or closed them) is skipped. On success the
+    /// joiner's worker blocks on the returned receiver until the
+    /// session [`Offer::resolve`]s it (a dropped sender — session
+    /// panicked — reads as `Declined`: nothing ran).
+    pub fn offer(
+        &self,
+        key: FuseKey,
+        fleet: &FleetManager,
+        seed: u64,
+    ) -> Option<mpsc::Receiver<JoinReply>> {
+        let mut g = self.inner.lock().unwrap();
+        let idx = {
+            let gates = &g.gates;
+            let mut found = None;
+            for (i, gate) in gates.iter().enumerate() {
+                if !gate.accepting || gate.key != key {
+                    continue;
+                }
+                if let Ok(Some(slot)) = fleet.try_join(&gate.devices) {
+                    found = Some((i, slot));
+                    break;
+                }
+            }
+            found
+        };
+        let (i, slot) = idx?;
+        let token = g.next_token;
+        g.next_token += 1;
+        let (tx, rx) = mpsc::channel();
+        g.gates[i].pending.push(Offer {
+            token,
+            seed,
+            reply: tx,
+            _slot: slot,
+        });
+        Some(rx)
+    }
+
+    #[cfg(test)]
+    fn open_gates(&self) -> usize {
+        self.inner.lock().unwrap().gates.len()
+    }
+}
+
+/// RAII handle on one open gate. The owning worker drains offers at
+/// sync barriers and must resolve every drained offer; undrained
+/// offers are declined when the handle drops.
+pub struct GateHandle<'a> {
+    gates: &'a BatchGates,
+    id: u64,
+}
+
+impl GateHandle<'_> {
+    /// Take every offer parked since the last drain. The caller now
+    /// owns them: adopt their seeds into the session and
+    /// [`Offer::resolve`] each when its generation (or the session's
+    /// error) is known.
+    pub fn drain(&self) -> Vec<Offer> {
+        let mut g = self.gates.inner.lock().unwrap();
+        match g.gates.iter_mut().find(|gate| gate.id == self.id) {
+            Some(gate) => std::mem::take(&mut gate.pending),
+            None => Vec::new(),
+        }
+    }
+
+    /// Stop accepting new offers (the session is past its last
+    /// adoption barrier). After this returns, no offer can land, so a
+    /// final [`GateHandle::drain`] observes the complete set — the
+    /// close-then-drain pair is the session's closing handshake.
+    pub fn close(&self) {
+        let mut g = self.gates.inner.lock().unwrap();
+        if let Some(gate) =
+            g.gates.iter_mut().find(|gate| gate.id == self.id)
+        {
+            gate.accepting = false;
+        }
+    }
+}
+
+impl Drop for GateHandle<'_> {
+    fn drop(&mut self) {
+        let mut g = self.gates.inner.lock().unwrap();
+        if let Some(pos) =
+            g.gates.iter().position(|gate| gate.id == self.id)
+        {
+            let gate = g.gates.swap_remove(pos);
+            for offer in gate.pending {
+                offer.resolve(JoinReply::Declined);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(rows: usize, steps: usize) -> FuseKey {
+        FuseKey { rows, cols: 32, steps, warmup: 2, halo_budget: 0 }
+    }
+
+    #[test]
+    fn fuse_key_roundtrips_signature_tuple() {
+        let k = FuseKey::from_signature((32, 48, 20, 2, 1));
+        assert_eq!(
+            k,
+            FuseKey { rows: 32, cols: 48, steps: 20, warmup: 2, halo_budget: 1 }
+        );
+        assert_ne!(k, FuseKey::from_signature((32, 48, 20, 2, 0)));
+    }
+
+    #[test]
+    fn grouping_fuses_within_window_and_splits_keys() {
+        let a = key(32, 20);
+        let b = key(64, 20);
+        let arrivals = vec![
+            (0.0, a),   // leader of group 1
+            (0.001, b), // different key: own group
+            (0.002, a), // joins group 1
+            (0.004, a), // joins group 1 (window 5 ms)
+            (0.010, a), // outside leader's window: new group
+        ];
+        let groups = group_compatible(&arrivals, 0.005, 8);
+        assert_eq!(groups, vec![vec![0, 2, 3], vec![1], vec![4]]);
+    }
+
+    #[test]
+    fn grouping_respects_max_batch_and_covers_everything() {
+        let a = key(32, 20);
+        let arrivals: Vec<_> = (0..7).map(|i| (i as f64 * 1e-4, a)).collect();
+        let groups = group_compatible(&arrivals, 1.0, 3);
+        assert_eq!(groups, vec![vec![0, 1, 2], vec![3, 4, 5], vec![6]]);
+        // max_batch 0 is clamped to 1 (everyone solo), not a panic.
+        let solo = group_compatible(&arrivals, 1.0, 0);
+        assert_eq!(solo.len(), 7);
+        assert!(solo.iter().all(|grp| grp.len() == 1));
+    }
+
+    // Keys shrink to nothing (they are categorical, not ordered);
+    // the interesting shrinking happens on the arrival vector.
+    impl crate::util::proptest::Shrink for FuseKey {}
+
+    #[test]
+    fn property_grouping_is_homogeneous_bounded_and_starvation_free() {
+        use crate::util::proptest::{ensure, forall};
+        forall(
+            29,
+            200,
+            |rng| {
+                let n = rng.below(24) as usize;
+                let window = 0.001 + rng.below(20) as f64 * 0.001;
+                let max_batch = 1 + rng.below(6) as usize;
+                let mut t = 0.0f64;
+                let arrivals: Vec<(f64, FuseKey)> = (0..n)
+                    .map(|_| {
+                        t += rng.below(8) as f64 * 0.001;
+                        let k = match rng.below(3) {
+                            0 => key(32, 20),
+                            1 => key(64, 20),
+                            _ => key(32, 28),
+                        };
+                        (t, k)
+                    })
+                    .collect();
+                (arrivals, (window, max_batch))
+            },
+            |(arrivals, (window, max_batch))| {
+                let groups =
+                    group_compatible(arrivals, *window, *max_batch);
+                let mut seen = vec![0usize; arrivals.len()];
+                for grp in &groups {
+                    ensure(!grp.is_empty(), "empty group")?;
+                    ensure(
+                        grp.len() <= *max_batch,
+                        "group exceeds max_batch",
+                    )?;
+                    let (t0, k0) = arrivals[grp[0]];
+                    for &i in grp {
+                        seen[i] += 1;
+                        ensure(
+                            arrivals[i].1 == k0,
+                            "mixed keys fused",
+                        )?;
+                        // Dispatch happens by t0 + window, and members
+                        // arrive at or after the leader, so nobody
+                        // waits past one window.
+                        ensure(
+                            arrivals[i].0 >= t0
+                                && arrivals[i].0 <= t0 + window + 1e-12,
+                            "member outside leader window",
+                        )?;
+                    }
+                }
+                ensure(
+                    seen.iter().all(|&c| c == 1),
+                    "request starved or double-served",
+                )?;
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn gates_matchmake_only_compatible_sessions_with_free_slots() {
+        let gates = BatchGates::new();
+        let fleet = FleetManager::new(4);
+        let lease = fleet.try_acquire(&[0, 1]).unwrap().unwrap();
+        lease.open_slots(3); // owner + 2 joiners
+        let k = key(32, 20);
+        let handle = gates.register(k, vec![0, 1]);
+
+        // Wrong key: no match even though slots are free.
+        assert!(gates.offer(key(64, 20), &fleet, 7).is_none());
+        // Two joiners fit, the third finds the slots exhausted.
+        let rx1 = gates.offer(k, &fleet, 11).expect("slot 1");
+        let _rx2 = gates.offer(k, &fleet, 12).expect("slot 2");
+        assert!(gates.offer(k, &fleet, 13).is_none());
+
+        // The session drains both offers at a barrier…
+        let offers = handle.drain();
+        assert_eq!(offers.len(), 2);
+        assert_eq!(
+            offers.iter().map(|o| o.seed).collect::<Vec<_>>(),
+            vec![11, 12]
+        );
+        // …and a second drain sees nothing new.
+        assert!(handle.drain().is_empty());
+
+        // Resolving an offer releases its slot: a new joiner fits.
+        let (o1, o2) = {
+            let mut it = offers.into_iter();
+            (it.next().unwrap(), it.next().unwrap())
+        };
+        o1.resolve(JoinReply::Declined);
+        assert!(matches!(rx1.recv().unwrap(), JoinReply::Declined));
+        let _rx3 = gates.offer(k, &fleet, 14).expect("freed slot");
+
+        // close() stops new offers; drop declines what's still parked.
+        handle.close();
+        assert!(gates.offer(k, &fleet, 15).is_none());
+        let leftovers = handle.drain();
+        assert_eq!(leftovers.len(), 1); // seed 14
+        for o in leftovers {
+            o.resolve(JoinReply::Declined);
+        }
+        drop(handle);
+        assert_eq!(gates.open_gates(), 0);
+        drop(o2);
+    }
+
+    #[test]
+    fn dropped_gate_declines_parked_offers() {
+        let gates = BatchGates::new();
+        let fleet = FleetManager::new(2);
+        let lease = fleet.try_acquire(&[0]).unwrap().unwrap();
+        lease.open_slots(2);
+        let k = key(32, 20);
+        let handle = gates.register(k, vec![0]);
+        let rx = gates.offer(k, &fleet, 5).expect("slot");
+        drop(handle); // session tore down without draining
+        assert!(matches!(rx.recv().unwrap(), JoinReply::Declined));
+        // The slot freed with the offer: the lease owner is alone again
+        // and a fresh gate can matchmake anew.
+        let handle2 = gates.register(k, vec![0]);
+        assert!(gates.offer(k, &fleet, 6).is_some());
+        drop(handle2);
+    }
+}

@@ -9,6 +9,7 @@
 //! See rust/DESIGN_SERVE.md for the architecture diagram, the fleet
 //! lease lifecycle, and locking rules.
 
+pub mod batch;
 pub mod protocol;
 pub mod router;
 pub mod server;

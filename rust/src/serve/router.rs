@@ -168,6 +168,20 @@ pub struct RouterStats {
     /// records them as failed).
     pub deadline_shed: u64,
     pub queue_len: usize,
+    /// Requests currently parked in a batching admission window
+    /// (popped by a worker, not yet executing). Part of the backlog
+    /// signal gang policies see.
+    pub parked: usize,
+    /// Requests served as members of a fused session (founders and
+    /// barrier joiners alike).
+    pub batched: u64,
+    /// Requests served alone (batching off, no compatible peer, or a
+    /// window that closed empty).
+    pub solo: u64,
+    /// Fused sessions dispatched (each counted once).
+    pub fused_sessions: u64,
+    /// Mean members per fused session (0.0 before the first one).
+    pub mean_fused: f64,
     /// Mean completed-job latency (exact over all samples).
     pub latency_mean_s: f64,
     /// Median / tail latency from the tracker's bounded reservoir.
@@ -186,6 +200,11 @@ struct Inner<T> {
     completed: u64,
     failed: u64,
     deadline_shed: u64,
+    parked: usize,
+    batched: u64,
+    solo: u64,
+    fused_sessions: u64,
+    fused_members: u64,
     latency: LatencyTracker,
 }
 
@@ -211,6 +230,11 @@ impl<T: Prioritized> Router<T> {
                 completed: 0,
                 failed: 0,
                 deadline_shed: 0,
+                parked: 0,
+                batched: 0,
+                solo: 0,
+                fused_sessions: 0,
+                fused_members: 0,
                 latency: LatencyTracker::new(),
             }),
             available: Condvar::new(),
@@ -270,6 +294,46 @@ impl<T: Prioritized> Router<T> {
         self.inner.lock().unwrap().queue.pop_first().map(|(_, t)| t)
     }
 
+    /// Dequeue the best-positioned item satisfying `pred`, waiting for
+    /// one to arrive until `until` (the batching admission window uses
+    /// this to gather fuse-compatible peers for a leader it already
+    /// holds). Returns `None` on window expiry or shutdown — both mean
+    /// "stop gathering and run what you have", so they are not
+    /// distinguished. Non-matching items are left queued, untouched, in
+    /// their order positions. Deadline shedding applies exactly as in
+    /// [`Router::pop`]: an expired match comes back as
+    /// [`Dequeued::Expired`] and still consumes the caller's attention,
+    /// not a batch slot.
+    pub fn pop_match_timeout(
+        &self,
+        pred: impl Fn(&T) -> bool,
+        until: Instant,
+    ) -> Option<Dequeued<T>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            let found =
+                g.queue.iter().find(|(_, t)| pred(t)).map(|(k, _)| *k);
+            if let Some(key) = found {
+                let item = g.queue.remove(&key).expect("key just seen");
+                if key.deadline.0.is_some_and(|d| d < Instant::now()) {
+                    g.deadline_shed += 1;
+                    return Some(Dequeued::Expired(item));
+                }
+                return Some(Dequeued::Ready(item));
+            }
+            if g.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= until {
+                return None;
+            }
+            let (guard, _) =
+                self.available.wait_timeout(g, until - now).unwrap();
+            g = guard;
+        }
+    }
+
     /// Close the router: wake every blocked `pop`, reject future
     /// submits, and hand back the still-queued items so the caller can
     /// answer their submitters (the server sends shutdown error lines
@@ -295,6 +359,46 @@ impl<T: Prioritized> Router<T> {
 
     pub fn queue_len(&self) -> usize {
         self.inner.lock().unwrap().queue.len()
+    }
+
+    /// Mark `n` requests as parked in a batching admission window:
+    /// popped off the queue by a gathering worker but not yet
+    /// executing. Parked requests are invisible to `queue_len` (they
+    /// left the queue) yet still represent waiting demand, so
+    /// [`Router::backlog`] counts them.
+    pub fn park(&self, n: usize) {
+        self.inner.lock().unwrap().parked += n;
+    }
+
+    /// Un-park `n` requests (their fused session is dispatching, or
+    /// they were shed). Saturates rather than panicking on unbalanced
+    /// calls.
+    pub fn unpark(&self, n: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.parked = g.parked.saturating_sub(n);
+    }
+
+    /// Waiting demand: queued items plus those parked in admission
+    /// windows. This — not `queue_len` — is the load signal gang
+    /// policies should see, otherwise a full admission window looks
+    /// like an idle server and the policy hands out oversized gangs.
+    pub fn backlog(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.queue.len() + g.parked
+    }
+
+    /// Record the occupancy of one dispatched session: `size <= 1` is
+    /// a solo run; larger sizes count every member as batched and the
+    /// session once (so `mean_fused` = members / sessions).
+    pub fn record_batch(&self, size: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if size <= 1 {
+            g.solo += 1;
+        } else {
+            g.batched += size as u64;
+            g.fused_sessions += 1;
+            g.fused_members += size as u64;
+        }
     }
 
     /// Record a request the admission gate refused before it entered
@@ -325,6 +429,15 @@ impl<T: Prioritized> Router<T> {
             failed: g.failed,
             deadline_shed: g.deadline_shed,
             queue_len: g.queue.len(),
+            parked: g.parked,
+            batched: g.batched,
+            solo: g.solo,
+            fused_sessions: g.fused_sessions,
+            mean_fused: if g.fused_sessions == 0 {
+                0.0
+            } else {
+                g.fused_members as f64 / g.fused_sessions as f64
+            },
             latency_mean_s: g.latency.mean(),
             latency_p50_s: g.latency.p50(),
             latency_p95_s: g.latency.p95(),
@@ -559,6 +672,112 @@ mod tests {
         assert!((s.latency_p50_s - 0.505).abs() < 0.02);
         assert!((s.latency_p95_s - 0.955).abs() < 0.02);
         assert!(s.latency_p95_s < 2.0, "failure latency leaked in");
+    }
+
+    #[test]
+    fn batch_occupancy_stats_and_parked_backlog() {
+        let r: Router<Job> = Router::new(8);
+        // Empty router: all occupancy fields at rest.
+        let s = r.stats();
+        assert_eq!((s.batched, s.solo, s.fused_sessions), (0, 0, 0));
+        assert_eq!(s.mean_fused, 0.0);
+        assert_eq!(s.parked, 0);
+        // Two fused sessions (3 + 2 members) and two solo runs.
+        r.record_batch(3);
+        r.record_batch(1);
+        r.record_batch(2);
+        r.record_batch(0); // degenerate: counts as solo
+        let s = r.stats();
+        assert_eq!(s.batched, 5);
+        assert_eq!(s.solo, 2);
+        assert_eq!(s.fused_sessions, 2);
+        assert!((s.mean_fused - 2.5).abs() < 1e-12);
+        // Parked requests left the queue but still count as backlog.
+        r.submit(job("q", 1)).unwrap();
+        r.park(2);
+        assert_eq!(r.queue_len(), 1);
+        assert_eq!(r.stats().parked, 2);
+        assert_eq!(r.backlog(), 3);
+        r.unpark(1);
+        assert_eq!(r.backlog(), 2);
+        // Unbalanced unpark saturates to zero, never panics.
+        r.unpark(10);
+        assert_eq!(r.backlog(), 1);
+    }
+
+    #[test]
+    fn pop_match_skips_incompatible_and_respects_window() {
+        let r: Arc<Router<Job>> = Arc::new(Router::new(8));
+        r.submit(job("odd1", 1)).unwrap();
+        r.submit(job("even1", 2)).unwrap();
+        r.submit(job("odd2", 3)).unwrap();
+        let until = Instant::now() + Duration::from_millis(200);
+        let even = |j: &Job| j.seed() % 2 == 0;
+        // Matches the best-ordered even job, leaving odd ones queued
+        // in place.
+        let got = r.pop_match_timeout(even, until).unwrap();
+        match got {
+            Dequeued::Ready(j) => assert_eq!(j.id, "even1"),
+            Dequeued::Expired(j) => panic!("{} wrongly expired", j.id),
+        }
+        assert_eq!(r.queue_len(), 2);
+        // No even job left: a short window expires with None and the
+        // queue is untouched.
+        let t0 = Instant::now();
+        let miss = r
+            .pop_match_timeout(even, Instant::now() + Duration::from_millis(30));
+        assert!(miss.is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        assert_eq!(r.queue_len(), 2);
+        // A matching submit from another thread wakes the waiter
+        // before the window closes.
+        let waiter = {
+            let r = Arc::clone(&r);
+            std::thread::spawn(move || {
+                r.pop_match_timeout(
+                    |j: &Job| j.seed() % 2 == 0,
+                    Instant::now() + Duration::from_secs(5),
+                )
+            })
+        };
+        std::thread::sleep(Duration::from_millis(10));
+        r.submit(job("even2", 4)).unwrap();
+        match waiter.join().unwrap().expect("waiter should match") {
+            Dequeued::Ready(j) => assert_eq!(j.id, "even2"),
+            Dequeued::Expired(j) => panic!("{} wrongly expired", j.id),
+        }
+        // Ordinary pops drain the untouched odd jobs in order.
+        assert_eq!(pop_ready(&r).id, "odd1");
+        assert_eq!(pop_ready(&r).id, "odd2");
+        // Shutdown wakes a match-waiter with None.
+        let blocked = {
+            let r = Arc::clone(&r);
+            std::thread::spawn(move || {
+                r.pop_match_timeout(
+                    |_: &Job| true,
+                    Instant::now() + Duration::from_secs(30),
+                )
+            })
+        };
+        std::thread::sleep(Duration::from_millis(10));
+        r.close();
+        assert!(blocked.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn pop_match_sheds_expired_matches() {
+        let r: Router<Job> = Router::new(8);
+        r.submit(Job::new(
+            "stale",
+            GenerationSpec::new().deadline_s(0.005),
+        ))
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        let got = r
+            .pop_match_timeout(|_: &Job| true, Instant::now())
+            .unwrap();
+        assert!(matches!(got, Dequeued::Expired(_)));
+        assert_eq!(r.stats().deadline_shed, 1);
     }
 
     #[test]

@@ -31,9 +31,11 @@ use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{EngineCore, Generation};
+use crate::config::BatchConfig;
+use crate::coordinator::{EngineCore, FusedJoiner, Generation};
 use crate::error::{Error, Result};
 use crate::fleet::{FleetManager, GangPolicy};
+use crate::serve::batch::{BatchGates, FuseKey, JoinReply, Offer};
 use crate::serve::protocol::{self, WireRequest};
 use crate::serve::router::{Dequeued, Job, Prioritized, Router, RouterStats};
 use crate::spec::GenerationSpec;
@@ -65,6 +67,10 @@ pub struct ServeOptions {
     /// further connections wait in the OS accept backlog — the job
     /// queue bounds work, this bounds threads.
     pub max_connections: usize,
+    /// Cross-request batching (fused denoise sessions). Disabled by
+    /// default: the solo path is pinned byte-identical to pre-batching
+    /// behavior.
+    pub batch: BatchConfig,
 }
 
 impl Default for ServeOptions {
@@ -74,6 +80,7 @@ impl Default for ServeOptions {
             workers: 2,
             max_requests: 0,
             max_connections: 256,
+            batch: BatchConfig::default(),
         }
     }
 }
@@ -106,6 +113,35 @@ pub trait JobRunner: Send + Sync + 'static {
         let _ = job;
         Ok(())
     }
+
+    /// Batch-compatibility key for a job: jobs with equal keys may
+    /// fuse into one session. `None` (the default) = this job never
+    /// fuses, so the worker skips the admission window entirely.
+    fn fuse_key(&self, job: &Job) -> Option<FuseKey> {
+        let _ = job;
+        None
+    }
+
+    /// Run a gathered group of fuse-compatible jobs, ideally as one
+    /// fused session; returns one `(ok, line)` per job, in order.
+    /// `record` feeds the router's occupancy histogram: call it once
+    /// per dispatched session with the total member count (including
+    /// barrier joiners); a job adopted into *another* session must not
+    /// be recorded here (its founder counts it). The default runs each
+    /// job solo (stub runners, batching off).
+    fn run_batched(
+        &self,
+        jobs: &[Job],
+        backlog: usize,
+        record: &dyn Fn(usize),
+    ) -> Vec<(bool, String)> {
+        jobs.iter()
+            .map(|j| {
+                record(1);
+                self.run_with_load(j, backlog)
+            })
+            .collect()
+    }
 }
 
 /// Production runner: one fresh [`Session`](crate::coordinator::Session)
@@ -118,13 +154,21 @@ pub trait JobRunner: Send + Sync + 'static {
 pub struct SessionRunner {
     core: Arc<EngineCore>,
     fleet: Option<(FleetManager, Arc<dyn GangPolicy>)>,
+    batch: Option<BatchRuntime>,
+}
+
+/// Batching state owned by the runner: the config plus the live
+/// join-at-barrier matchmaking registry shared by all workers.
+struct BatchRuntime {
+    cfg: BatchConfig,
+    gates: BatchGates,
 }
 
 impl SessionRunner {
     /// Whole-cluster sessions (PR 1 behavior — equivalent to a fleet
     /// under the `AllGpus` policy, without the ledger).
     pub fn new(core: Arc<EngineCore>) -> Self {
-        SessionRunner { core, fleet: None }
+        SessionRunner { core, fleet: None, batch: None }
     }
 
     /// Gang-partitioned sessions: acquire a policy-chosen lease per
@@ -135,7 +179,22 @@ impl SessionRunner {
         fleet: FleetManager,
         policy: Arc<dyn GangPolicy>,
     ) -> Self {
-        SessionRunner { core, fleet: Some((fleet, policy)) }
+        SessionRunner { core, fleet: Some((fleet, policy)), batch: None }
+    }
+
+    /// Enable cross-request batching (no-op when `cfg.enabled` is
+    /// false or `max_batch <= 1`): the serve worker gathers
+    /// fuse-compatible jobs into one session, and — with a fleet —
+    /// in-flight fused sessions adopt later compatible requests at
+    /// their sync barriers via slot leases.
+    pub fn with_batching(mut self, cfg: &BatchConfig) -> Self {
+        if cfg.enabled && cfg.max_batch > 1 {
+            self.batch = Some(BatchRuntime {
+                cfg: cfg.clone(),
+                gates: BatchGates::new(),
+            });
+        }
+        self
     }
 
     fn generate(&self, job: &Job, queued: usize) -> Result<Generation> {
@@ -178,6 +237,124 @@ impl SessionRunner {
             }
         }
     }
+
+    /// Found one fused session for a gathered group: a single lease
+    /// (policy-priced at the group's batch size), a single plan, one
+    /// independent latent trajectory per member. With a fleet and
+    /// spare capacity under `max_batch`, the session opens joiner
+    /// slots and a [`BatchGates`] gate so compatible requests landing
+    /// mid-flight attach at the next sync barrier.
+    fn generate_fused(
+        &self,
+        jobs: &[Job],
+        key: FuseKey,
+        queued: usize,
+        rt: &BatchRuntime,
+        record: &dyn Fn(usize),
+    ) -> Result<Vec<Generation>> {
+        let spec = &jobs[0].spec;
+        let seeds: Vec<u64> = jobs.iter().map(|j| j.seed()).collect();
+        let (fleet, policy) = match &self.fleet {
+            // Whole-cluster fused session: the single implicit gang
+            // leaves nothing for a joiner to attach to, so no gate.
+            None => {
+                let out = self
+                    .core
+                    .session_for(spec)?
+                    .execute_fused_seeded(&seeds, None)?;
+                record(out.members.len());
+                return Ok(out.members);
+            }
+            Some((fleet, policy)) => (fleet, policy),
+        };
+        let core = Arc::clone(&self.core);
+        let spec_for_predict = spec.clone();
+        let max_gang = self.core.max_gang_for(spec)?;
+        let batch = seeds.len();
+        // Price the whole fused session, not one request: a batch of
+        // B amortizes fixed and halo cost over B rows' worth of work,
+        // which is exactly what the policy should weigh when sizing
+        // the gang (`timeline::simulate_batched`).
+        let predict = move |gang: &[usize]| {
+            if gang.len() > max_gang {
+                return None;
+            }
+            core.predict_latency_for_batched(&spec_for_predict, gang, batch)
+                .ok()
+        };
+        let lease = fleet.acquire_for(
+            policy.as_ref(),
+            &self.core.effective_speeds(),
+            Some(&predict),
+            queued,
+            spec.priority,
+            jobs[0].deadline,
+        )?;
+        let session = self.core.session_for_on(spec, &lease)?;
+        // Founders share the owner slot, so capping joiner slots at
+        // `max_batch - founders` keeps total members <= max_batch.
+        let joiner_slots = rt.cfg.max_batch.saturating_sub(seeds.len());
+        let mut adopted: Vec<Offer> = Vec::new();
+        let out = if joiner_slots == 0 {
+            session.execute_fused_seeded(&seeds, None)
+        } else {
+            lease.open_slots(joiner_slots as u32 + 1);
+            let gate = rt.gates.register(key, lease.devices().to_vec());
+            let r = {
+                let mut poll = |attach: bool| -> Vec<FusedJoiner> {
+                    if !attach {
+                        // Closing handshake: after `close` no offer
+                        // can land, so this drain sees the complete
+                        // set and nothing is silently dropped.
+                        gate.close();
+                    }
+                    let fresh = gate.drain();
+                    let joiners = fresh
+                        .iter()
+                        .map(|o| FusedJoiner { token: o.token, seed: o.seed })
+                        .collect();
+                    adopted.extend(fresh);
+                    joiners
+                };
+                session.execute_fused_seeded(&seeds, Some(&mut poll))
+            };
+            // On the error path the gate may still hold undrained
+            // offers; dropping it declines them (their workers fall
+            // back to founding their own sessions — nothing ran).
+            drop(gate);
+            r
+        };
+        match out {
+            Ok(outcome) => {
+                record(outcome.members.len() + outcome.joined.len());
+                let mut by_token: BTreeMap<u64, Generation> =
+                    outcome.joined.into_iter().collect();
+                for offer in adopted {
+                    match by_token.remove(&offer.token) {
+                        Some(gen) => {
+                            offer.resolve(JoinReply::Done(Box::new(gen)))
+                        }
+                        // Defensive: an adopted offer always comes
+                        // back in `joined`; decline rather than hang
+                        // its worker if that invariant ever breaks.
+                        None => offer.resolve(JoinReply::Declined),
+                    }
+                }
+                Ok(outcome.members)
+            }
+            Err(e) => {
+                // Members adopted into the failing session owe their
+                // clients the error, same as the founders.
+                for offer in adopted {
+                    offer.resolve(JoinReply::Failed(Error::msg(format!(
+                        "fused session failed: {e}"
+                    ))));
+                }
+                record(seeds.len());
+                Err(e)
+            }
+        }
+    }
 }
 
 impl JobRunner for SessionRunner {
@@ -204,6 +381,97 @@ impl JobRunner for SessionRunner {
                 )
             }
             Err(e) => (false, protocol::error_line(&job.id, &e)),
+        }
+    }
+
+    fn fuse_key(&self, job: &Job) -> Option<FuseKey> {
+        let _rt = self.batch.as_ref()?;
+        self.core
+            .fuse_signature(&job.spec)
+            .ok()
+            .map(FuseKey::from_signature)
+    }
+
+    fn run_batched(
+        &self,
+        jobs: &[Job],
+        backlog: usize,
+        record: &dyn Fn(usize),
+    ) -> Vec<(bool, String)> {
+        let solo_all = |jobs: &[Job]| {
+            jobs.iter()
+                .map(|j| {
+                    record(1);
+                    self.run_with_load(j, backlog)
+                })
+                .collect::<Vec<_>>()
+        };
+        let Some(rt) = &self.batch else { return solo_all(jobs) };
+        // The worker gathers by key, so a mixed group means a bug or a
+        // spec whose signature stopped resolving; degrade to solo runs
+        // rather than fuse incompatible plans.
+        let key = match self.fuse_key(&jobs[0]) {
+            Some(k)
+                if jobs.iter().all(|j| self.fuse_key(j) == Some(k)) =>
+            {
+                k
+            }
+            _ => return solo_all(jobs),
+        };
+        let t0 = Instant::now();
+        if jobs.len() == 1 {
+            let Some((fleet, _)) = &self.fleet else {
+                // No fleet = no slot leases to join and no gang to
+                // share: a lone job gains nothing from the fused path.
+                return solo_all(jobs);
+            };
+            // A lone compatible job first offers itself to an
+            // in-flight fused session (join at the next barrier)
+            // instead of founding its own.
+            if let Some(rx) = rt.gates.offer(key, fleet, jobs[0].seed()) {
+                match rx.recv() {
+                    Ok(JoinReply::Done(gen)) => {
+                        let wall = t0.elapsed().as_secs_f64();
+                        return vec![(
+                            true,
+                            protocol::response_line(
+                                &jobs[0].id,
+                                &jobs[0].spec,
+                                &gen,
+                                wall,
+                            ),
+                        )];
+                    }
+                    Ok(JoinReply::Failed(e)) => {
+                        return vec![(
+                            false,
+                            protocol::error_line(&jobs[0].id, &e),
+                        )];
+                    }
+                    // Declined (or the session died before adopting —
+                    // a dropped sender reads the same): nothing ran,
+                    // so found our own session below.
+                    Ok(JoinReply::Declined) | Err(_) => {}
+                }
+            }
+        }
+        match self.generate_fused(jobs, key, backlog, rt, record) {
+            Ok(gens) => {
+                let wall = t0.elapsed().as_secs_f64();
+                jobs.iter()
+                    .zip(gens)
+                    .map(|(j, g)| {
+                        (
+                            true,
+                            protocol::response_line(&j.id, &j.spec, &g, wall),
+                        )
+                    })
+                    .collect()
+            }
+            Err(e) => jobs
+                .iter()
+                .map(|j| (false, protocol::error_line(&j.id, &e)))
+                .collect(),
         }
     }
 }
@@ -236,7 +504,9 @@ pub fn serve(
     opts: ServeOptions,
     stop: Option<Arc<AtomicBool>>,
 ) -> Result<u64> {
-    serve_with(Arc::new(SessionRunner::new(core)), listener, opts, stop)
+    let runner =
+        Arc::new(SessionRunner::new(core).with_batching(&opts.batch));
+    serve_with(runner, listener, opts, stop)
 }
 
 /// Serve with fleet partitioning: every job leases a policy-chosen
@@ -258,12 +528,11 @@ pub fn serve_fleet(
         fleet.num_devices(),
         policy.name()
     );
-    serve_with(
-        Arc::new(SessionRunner::with_fleet(core, fleet, policy)),
-        listener,
-        opts,
-        stop,
-    )
+    let runner = Arc::new(
+        SessionRunner::with_fleet(core, fleet, policy)
+            .with_batching(&opts.batch),
+    );
+    serve_with(runner, listener, opts, stop)
 }
 
 /// Serve until `stop` is set, `max_requests` is reached, or forever.
@@ -314,67 +583,120 @@ pub fn serve_with_stats(
             let done = Arc::clone(&done);
             let handled = Arc::clone(&handled);
             let max = opts.max_requests as u64;
+            let batch_cfg = opts.batch.clone();
             thread::spawn(move || {
+                // Count one delivered response toward `max_requests`
+                // and trip shutdown at the low-water mark.
+                let count_handled = |n_new: u64| {
+                    let n = handled.fetch_add(n_new, Ordering::SeqCst)
+                        + n_new;
+                    if max > 0 && n >= max {
+                        done.store(true, Ordering::SeqCst);
+                        close_and_answer(&router);
+                    }
+                };
                 while let Some(popped) = router.pop() {
                     let t0 = Instant::now();
                     // Deadline shed: the router hands expired jobs
                     // back instead of running them — answer with the
                     // typed `deadline` code and count a failure.
-                    let t = match popped {
+                    let leader = match popped {
                         Dequeued::Ready(t) => t,
                         Dequeued::Expired(t) => {
-                            let late = t
-                                .job
-                                .deadline_slack_s()
-                                .map(|s| (-s).max(0.0))
-                                .unwrap_or(0.0);
-                            let line = protocol::error_line(
-                                &t.job.id,
-                                &Error::DeadlineExceeded {
-                                    deadline_s: t
-                                        .job
-                                        .spec
-                                        .deadline_s
-                                        .unwrap_or(0.0),
-                                    late_by_s: late,
-                                },
-                            );
-                            router.record_outcome(false, 0.0);
-                            let _ = t.reply.send((t.seq, line));
-                            let n =
-                                handled.fetch_add(1, Ordering::SeqCst) + 1;
-                            if max > 0 && n >= max {
-                                done.store(true, Ordering::SeqCst);
-                                close_and_answer(&router);
-                            }
+                            answer_expired(&router, &t);
+                            count_handled(1);
                             continue;
                         }
                     };
+                    // Batching: park the leader through a bounded
+                    // admission window and gather fuse-compatible
+                    // companions off the queue. Parked requests left
+                    // `queue_len` but still count in `backlog`, so
+                    // gang policies keep seeing the waiting demand.
+                    let mut group = vec![leader];
+                    if batch_cfg.enabled && batch_cfg.max_batch > 1 {
+                        if let Some(key) = runner.fuse_key(&group[0].job)
+                        {
+                            router.park(1);
+                            let until = Instant::now()
+                                + Duration::from_millis(
+                                    batch_cfg.window_ms,
+                                );
+                            while group.len() < batch_cfg.max_batch {
+                                let m = router.pop_match_timeout(
+                                    |c: &Ticket| {
+                                        runner.fuse_key(&c.job)
+                                            == Some(key)
+                                    },
+                                    until,
+                                );
+                                match m {
+                                    Some(Dequeued::Ready(c)) => {
+                                        router.park(1);
+                                        group.push(c);
+                                    }
+                                    Some(Dequeued::Expired(c)) => {
+                                        answer_expired(&router, &c);
+                                        count_handled(1);
+                                    }
+                                    None => break,
+                                }
+                            }
+                            router.unpark(group.len());
+                        }
+                    }
                     // A panicking runner must not shrink the pool (with
                     // one worker it would wedge the whole server) nor
-                    // leave a sequence gap in the reply stream.
-                    let (ok, line) = std::panic::catch_unwind(
+                    // leave a sequence gap in any reply stream.
+                    let jobs: Vec<Job> =
+                        group.iter().map(|c| c.job.clone()).collect();
+                    let backlog = router.backlog();
+                    let results = std::panic::catch_unwind(
                         std::panic::AssertUnwindSafe(|| {
-                            runner.run_with_load(&t.job, router.queue_len())
+                            runner.run_batched(&jobs, backlog, &|size| {
+                                if size > 0 {
+                                    router.record_batch(size);
+                                }
+                            })
                         }),
                     )
                     .unwrap_or_else(|_| {
-                        (
-                            false,
-                            protocol::error_line(
-                                &t.job.id,
-                                &Error::msg("internal error: job panicked"),
-                            ),
-                        )
+                        jobs.iter()
+                            .map(|j| {
+                                (
+                                    false,
+                                    protocol::error_line(
+                                        &j.id,
+                                        &Error::msg(
+                                            "internal error: job panicked",
+                                        ),
+                                    ),
+                                )
+                            })
+                            .collect()
                     });
-                    router.record_outcome(ok, t0.elapsed().as_secs_f64());
-                    // Deliver before counting so the final client gets
-                    // its response before shutdown begins.
-                    let _ = t.reply.send((t.seq, line));
-                    let n = handled.fetch_add(1, Ordering::SeqCst) + 1;
-                    if max > 0 && n >= max {
-                        done.store(true, Ordering::SeqCst);
-                        close_and_answer(&router);
+                    for (i, c) in group.into_iter().enumerate() {
+                        // Defensive: a runner returning the wrong
+                        // arity still answers every client.
+                        let (ok, line) =
+                            results.get(i).cloned().unwrap_or_else(|| {
+                                (
+                                    false,
+                                    protocol::error_line(
+                                        &c.job.id,
+                                        &Error::msg(
+                                            "internal error: missing \
+                                             batch result",
+                                        ),
+                                    ),
+                                )
+                            });
+                        router
+                            .record_outcome(ok, t0.elapsed().as_secs_f64());
+                        // Deliver before counting so the final client
+                        // gets its response before shutdown begins.
+                        let _ = c.reply.send((c.seq, line));
+                        count_handled(1);
                     }
                 }
             })
@@ -443,18 +765,43 @@ pub fn serve_with_stats(
     crate::log_info!(
         "serve",
         "done: admitted={} rejected={} inadmissible={} completed={} \
-         failed={} ({})",
+         failed={} batched={} solo={} fused_sessions={} \
+         mean_fused={:.2} ({})",
         s.admitted,
         s.rejected,
         s.inadmissible,
         s.completed,
         s.failed,
+        s.batched,
+        s.solo,
+        s.fused_sessions,
+        s.mean_fused,
         s.latency_summary
     );
     match accept_err {
         Some(e) => Err(e.into()),
         None => Ok((handled.load(Ordering::SeqCst), s)),
     }
+}
+
+/// Answer a ticket that expired while queued with the typed
+/// `deadline` wire code and record the failure (workers call this for
+/// expired leaders and for expired would-be batch companions alike).
+fn answer_expired(router: &Router<Ticket>, t: &Ticket) {
+    let late = t
+        .job
+        .deadline_slack_s()
+        .map(|s| (-s).max(0.0))
+        .unwrap_or(0.0);
+    let line = protocol::error_line(
+        &t.job.id,
+        &Error::DeadlineExceeded {
+            deadline_s: t.job.spec.deadline_s.unwrap_or(0.0),
+            late_by_s: late,
+        },
+    );
+    router.record_outcome(false, 0.0);
+    let _ = t.reply.send((t.seq, line));
 }
 
 /// Close the router and answer every still-queued ticket with a

@@ -78,11 +78,27 @@ echo "== displaced-halo quality gate (default + xla-backend stub)"
 cargo test -q --test integration_halo
 cargo test -q --features xla-backend --test integration_halo
 
+# Cross-request batching gate: the fused-vs-solo byte-identity pins,
+# the serve-worker admission window, and the DES frontier claims must
+# hold in BOTH feature configs (the fused path crosses the
+# executor/runtime boundary like the halo path does).
+echo "== cross-request batching gate (default + xla-backend stub)"
+cargo test -q --test integration_batch
+cargo test -q --features xla-backend --test integration_batch
+
 # The committed perf-trajectory artifacts at the repo root must each
 # carry the displaced-halo pricing ("halo" key) — a re-anchor that
 # regenerates them without it silently drops the perf history this
 # PR pinned. scripts/gen_bench_artifacts.py regenerates them.
+# BENCH_batching.json is additionally required by name: it is the
+# throughput-vs-latency frontier tests/integration_batch.rs pins
+# against the in-process sweep.
 echo "== committed BENCH artifacts carry halo pricing"
+if [[ ! -e "$ROOT/BENCH_batching.json" ]]; then
+    echo "error: BENCH_batching.json missing at repo root" \
+         "(regenerate with scripts/gen_bench_artifacts.py)" >&2
+    exit 1
+fi
 found=0
 for f in "$ROOT"/BENCH_*.json; do
     [[ -e "$f" ]] || continue

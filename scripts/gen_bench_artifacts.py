@@ -246,6 +246,144 @@ def plan_and_simulate(speeds, eff, m_base, m_warmup, total_rows, comm,
     return out
 
 
+# --- cross-request batching frontier (serve/sim.rs mirror) ------------
+def batch_group_compatible(arrivals, window_s, max_batch):
+    """Mirror of serve::batch::group_compatible (greedy, in order)."""
+    max_batch = max(max_batch, 1)
+    groups = []
+    taken = [False] * len(arrivals)
+    for i in range(len(arrivals)):
+        if taken[i]:
+            continue
+        taken[i] = True
+        t0, key = arrivals[i]
+        group = [i]
+        for j in range(i + 1, len(arrivals)):
+            if len(group) >= max_batch:
+                break
+            t, k = arrivals[j]
+            if taken[j] or k != key:
+                continue
+            if t > t0 + window_s:
+                continue
+            taken[j] = True
+            group.append(j)
+        groups.append(group)
+    return groups
+
+
+def batch_percentile(xs, q):
+    """Mirror of util::stats::percentile (linear interpolation)."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    pos = (q / 100.0) * (len(s) - 1)
+    lo = int(math.floor(pos))
+    hi = int(math.ceil(pos))
+    if lo == hi:
+        return s[lo]
+    w = pos - lo
+    return s[lo] * (1.0 - w) + s[hi] * w
+
+
+def batch_serve_groups(arrivals, groups, servers, service, deadline_s):
+    """Mirror of serve::sim::serve_groups (FIFO by ready time)."""
+    free = [0.0] * max(servers, 1)
+    sojourns = [0.0] * len(arrivals)
+    makespan = 0.0
+    for ready, members in groups:
+        k = 0
+        best = free[0]
+        for i, f in enumerate(free):
+            if f < best:
+                k = i
+                best = f
+        start = max(ready, best)
+        finish = start + service(len(members))
+        free[k] = finish
+        makespan = max(makespan, finish)
+        for m in members:
+            sojourns[m] = finish - arrivals[m]
+    hits = sum(1 for s in sojourns if s <= deadline_s)
+    n = len(sojourns)
+    return {
+        "throughput_rps": n / makespan if makespan > 0.0 else 0.0,
+        "mean_sojourn_s": sum(sojourns) / n if n else 0.0,
+        "p95_sojourn_s": batch_percentile(sojourns, 95.0),
+        "deadline_hit_rate": hits / n if n else 1.0,
+        "mean_group": n / max(len(groups), 1),
+    }
+
+
+def batch_frontier():
+    """Mirror of serve::sim::simulate_batch_frontier on the
+    BatchFrontierConfig::stub_fixture() constants: 8 steps on a 2-gang
+    fleet over the slow interconnect, 16 rows per device per member.
+    A fused session of B pays fixed + comm once and the per-row work B
+    times; tests/integration_batch.rs pins this output against the
+    in-process Rust sweep."""
+    steps = 8.0
+    per_sync_comm = p2p(SLOW_COMM, x_bytes(16)) + p2p(
+        SLOW_COMM, kv_bytes(16)
+    )
+    servers = 2
+    max_batch = 4
+    window_s = 0.25
+    session_fixed_s = steps * (0.004 + per_sync_comm)
+    per_member_s = steps * 0.0012 * 16.0
+    deadline_s = 4.0
+    n_requests = 240
+    load_multiples = [0.5, 1.0, 2.0, 4.0, 6.0, 8.0, 10.0]
+
+    def service(members):
+        return session_fixed_s + members * per_member_s
+
+    key_a = (32, 32, 8, 2, 0)
+    key_b = (48, 32, 8, 2, 0)
+    cap = servers / service(1)
+    points = []
+    for load_x in load_multiples:
+        rate = load_x * cap
+        arrivals = [
+            (i / rate, key_b if i % 3 == 2 else key_a)
+            for i in range(n_requests)
+        ]
+        times = [t for t, _ in arrivals]
+        solo = [(t, [i]) for i, t in enumerate(times)]
+        disjoint = batch_serve_groups(
+            times, solo, servers, service, deadline_s
+        )
+        fused = []
+        for g in batch_group_compatible(arrivals, window_s, max_batch):
+            if len(g) == max_batch:
+                ready = times[g[-1]]
+            else:
+                ready = times[g[0]] + window_s
+            fused.append((ready, g))
+        fused.sort(key=lambda e: e[0])
+        batched = batch_serve_groups(
+            times, fused, servers, service, deadline_s
+        )
+        points.append(
+            {
+                "load_x": load_x,
+                "rate_rps": rate,
+                "disjoint": disjoint,
+                "batched": batched,
+            }
+        )
+    return {
+        "servers": servers,
+        "max_batch": max_batch,
+        "window_s": window_s,
+        "session_fixed_s": session_fixed_s,
+        "per_member_s": per_member_s,
+        "deadline_s": deadline_s,
+        "halo": "shared-per-session",
+        "points": points,
+    }
+
+
 SOURCE = (
     "scripts/gen_bench_artifacts.py — deterministic mirror of the "
     "timeline/comm/planner arithmetic (uncalibrated cost model, stub "
@@ -383,11 +521,30 @@ def main():
         },
     }
 
+    # --- BENCH_batching: fused sessions vs disjoint leases frontier --
+    frontier = batch_frontier()
+    for pt in frontier["points"]:
+        if pt["load_x"] >= 2.0:
+            assert (
+                pt["batched"]["throughput_rps"]
+                > pt["disjoint"]["throughput_rps"]
+            ), "batched must strictly beat disjoint from 2x load"
+            assert (
+                pt["batched"]["deadline_hit_rate"]
+                >= pt["disjoint"]["deadline_hit_rate"]
+            ), "batched deadline hits must not regress"
+    batching = {
+        "bench": "batching",
+        "source": SOURCE,
+        "frontier": frontier,
+    }
+
     for name, obj in [
         ("BENCH_serving.json", serving),
         ("BENCH_multires.json", multires),
         ("BENCH_dynamic_occupancy.json", dyn),
         ("BENCH_halo.json", halo_bench),
+        ("BENCH_batching.json", batching),
     ]:
         path = os.path.join(root, name)
         with open(path, "w") as f:
