@@ -1,0 +1,125 @@
+//! Wire-protocol hot path: what does one request line cost before and
+//! after the engine does any real work?
+//!
+//!   parse    — v2 (`"spec"` object) and v1 (bare `"seed"`) request
+//!              lines through `WireRequest::parse`;
+//!   format   — request re-serialization, success responses
+//!              (`response_line`, which embeds the per-device plan and
+//!              a latent summary), and error/busy lines.
+//!
+//! Std-only: runs on every build — it writes its own stub artifact
+//! set and executes one request on the stub runtime to get a real
+//! `Generation` for the response path. Results land in
+//! `bench_out/BENCH_protocol.json` (measured wall clock, not part of
+//! the committed repo-root artifacts).
+
+use stadi::config::{EngineConfig, StadiParams};
+use stadi::coordinator::EngineCore;
+use stadi::error::Error;
+use stadi::expt;
+use stadi::runtime::stubgen;
+use stadi::serve::protocol::{
+    busy_line, error_line, response_line, WireRequest,
+};
+use stadi::spec::GenerationSpec;
+use stadi::util::benchkit::{self, banner, fmt_secs, Table};
+use stadi::util::json::{Object, Value};
+
+fn main() -> stadi::Result<()> {
+    let dir = std::env::temp_dir()
+        .join(format!("stadi-bench-protocol-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    stubgen::write_stub_artifacts(
+        &dir,
+        stubgen::DEFAULT_EXTRA_RESOLUTIONS,
+    )?;
+    let mut cfg = EngineConfig::two_gpu_default(&dir, &[0.0, 0.4]);
+    cfg.stadi =
+        StadiParams { m_base: 6, m_warmup: 2, ..Default::default() };
+    let core = EngineCore::new(cfg)?;
+
+    let spec = GenerationSpec::new().seed(7);
+    let generation = core.session_for(&spec)?.execute(&spec)?;
+    let req = WireRequest { id: "bench-1".into(), spec: spec.clone() };
+    let v2 = req.to_line();
+    let v1 = req.to_line_v1();
+
+    banner("request parsing (per line)");
+    let s_parse_v2 = benchkit::bench("parse v2", 3, 2000, || {
+        std::hint::black_box(WireRequest::parse(&v2).unwrap());
+    });
+    let s_parse_v1 = benchkit::bench("parse v1", 3, 2000, || {
+        std::hint::black_box(WireRequest::parse(&v1).unwrap());
+    });
+
+    banner("response formatting (per line)");
+    let s_req = benchkit::bench("request to_line", 3, 2000, || {
+        std::hint::black_box(req.to_line());
+    });
+    let s_resp = benchkit::bench("response_line", 3, 2000, || {
+        std::hint::black_box(response_line(
+            "bench-1",
+            &spec,
+            &generation,
+            0.1,
+        ));
+    });
+    let err = Error::Protocol("spec rejected".into());
+    let s_err = benchkit::bench("error_line", 3, 2000, || {
+        std::hint::black_box(error_line("bench-1", &err));
+    });
+    let s_busy = benchkit::bench("busy_line", 3, 2000, || {
+        std::hint::black_box(busy_line("bench-1", 17));
+    });
+
+    let mut t = Table::new(&["op", "median", "line bytes"]);
+    for (name, s, bytes) in [
+        ("parse v2", &s_parse_v2, v2.len()),
+        ("parse v1", &s_parse_v1, v1.len()),
+        ("request to_line", &s_req, v2.len()),
+        (
+            "response_line",
+            &s_resp,
+            response_line("bench-1", &spec, &generation, 0.1).len(),
+        ),
+        ("error_line", &s_err, error_line("bench-1", &err).len()),
+        ("busy_line", &s_busy, busy_line("bench-1", 17).len()),
+    ] {
+        t.row(&[
+            name.to_string(),
+            fmt_secs(s.p50_s),
+            format!("{bytes}"),
+        ]);
+    }
+    t.print();
+
+    let mut o = Object::new();
+    o.insert("bench", Value::Str("protocol".into()));
+    o.insert(
+        "source",
+        Value::Str(
+            "benches/bench_protocol.rs — measured wall clock on the \
+             stub runtime (not a committed artifact)"
+                .into(),
+        ),
+    );
+    o.insert("halo", Value::Str("none (wire protocol only)".into()));
+    let mut ops = Object::new();
+    for (name, s) in [
+        ("parse_v2_s", &s_parse_v2),
+        ("parse_v1_s", &s_parse_v1),
+        ("request_to_line_s", &s_req),
+        ("response_line_s", &s_resp),
+        ("error_line_s", &s_err),
+        ("busy_line_s", &s_busy),
+    ] {
+        ops.insert(name, Value::Num(s.p50_s));
+    }
+    o.insert("median", Value::Obj(ops));
+    expt::save_results(
+        "BENCH_protocol.json",
+        &stadi::util::json::to_string_pretty(&Value::Obj(o)),
+    )?;
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

@@ -183,6 +183,38 @@ impl Default for BatchConfig {
     }
 }
 
+/// Federated serving knobs (EXTENSION past the paper's single-process
+/// coordinator). `nodes > 1` shards the serve front-end across that
+/// many coordinator nodes — each wrapping its own engine core and
+/// fleet slice — routed by `shard_policy` with spill-over admission
+/// when the home node is saturated; `migrate` additionally allows an
+/// in-flight request to move to a sibling node at a sync barrier via
+/// a serialized [`MigrationEnvelope`](crate::federation), e.g. when
+/// its node saturates or a device dies. The default (`nodes: 1`,
+/// `migrate: false`) is the pre-federation single-node path, bit-exact
+/// (pinned by `tests/integration_federation.rs`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FederationConfig {
+    /// Coordinator nodes in the front tier (1 = federation off).
+    pub nodes: usize,
+    /// Shard policy: `"least-loaded"` (backlog, then predicted
+    /// latency) or `"hash"` (consistent-hash affinity for plan-cache
+    /// warmth). Parsed by `federation::parse_shard_policy`.
+    pub shard_policy: String,
+    /// Allow barrier-checkpoint migration of in-flight requests.
+    pub migrate: bool,
+}
+
+impl Default for FederationConfig {
+    fn default() -> Self {
+        FederationConfig {
+            nodes: 1,
+            shard_policy: "least-loaded".into(),
+            migrate: false,
+        }
+    }
+}
+
 /// Halo-exchange mode at sync points (EXTENSION, DistriFusion-style
 /// displaced patch parallelism adapted to STADI's sync schedule).
 ///
@@ -279,6 +311,8 @@ pub struct EngineConfig {
     pub halo: HaloMode,
     /// Cross-request batching (fused sessions); off by default.
     pub batch: BatchConfig,
+    /// Multi-node federated serving; off (single node) by default.
+    pub federation: FederationConfig,
 }
 
 impl EngineConfig {
@@ -298,6 +332,7 @@ impl EngineConfig {
             replan: ReplanConfig::default(),
             halo: HaloMode::default(),
             batch: BatchConfig::default(),
+            federation: FederationConfig::default(),
         }
     }
 
@@ -383,6 +418,26 @@ impl EngineConfig {
                 "batch.window_ms {} is nonsense (max 60000)",
                 self.batch.window_ms
             )));
+        }
+        if self.federation.nodes == 0 {
+            return Err(Error::Config(
+                "federation.nodes must be >= 1".into(),
+            ));
+        }
+        if self.federation.nodes > 64 {
+            return Err(Error::Config(format!(
+                "federation.nodes {} is nonsense (max 64)",
+                self.federation.nodes
+            )));
+        }
+        match self.federation.shard_policy.as_str() {
+            "least-loaded" | "hash" => {}
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown federation.shard_policy {other:?} \
+                     (want \"least-loaded\" or \"hash\")",
+                )));
+            }
         }
         Ok(())
     }
@@ -489,6 +544,18 @@ impl EngineConfig {
                 batch.max_batch = x.as_usize()?;
             }
         }
+        let mut federation = FederationConfig::default();
+        if let Some(f) = v.get_opt("federation") {
+            if let Some(x) = f.get_opt("nodes") {
+                federation.nodes = x.as_usize()?;
+            }
+            if let Some(x) = f.get_opt("shard_policy") {
+                federation.shard_policy = x.as_str()?.to_string();
+            }
+            if let Some(x) = f.get_opt("migrate") {
+                federation.migrate = x.as_bool()?;
+            }
+        }
         let cfg = EngineConfig {
             artifacts_dir,
             devices,
@@ -498,6 +565,7 @@ impl EngineConfig {
             replan,
             halo,
             batch,
+            federation,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -629,6 +697,40 @@ mod tests {
         assert!(bad.validate().is_err());
         let mut bad = EngineConfig::two_gpu_default("a", &[0.0]);
         bad.batch.window_ms = 600_000;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn federation_defaults_off_and_parses_from_json() {
+        let cfg = EngineConfig::two_gpu_default("artifacts", &[0.0]);
+        assert_eq!(cfg.federation.nodes, 1, "federation must default off");
+        assert!(!cfg.federation.migrate);
+        // A config that never mentions "federation" is the
+        // pre-federation config exactly.
+        let text = r#"{"devices": [{"name": "g0"}]}"#;
+        let cfg = EngineConfig::from_json(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.federation.nodes, 1);
+        assert_eq!(cfg.federation.shard_policy, "least-loaded");
+        assert!(!cfg.federation.migrate);
+        let text = r#"{
+            "devices": [{"name": "g0"}],
+            "federation": {
+                "nodes": 3, "shard_policy": "hash", "migrate": true
+            }
+        }"#;
+        let cfg = EngineConfig::from_json(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.federation.nodes, 3);
+        assert_eq!(cfg.federation.shard_policy, "hash");
+        assert!(cfg.federation.migrate);
+        // Invalid knobs are typed config errors.
+        let mut bad = EngineConfig::two_gpu_default("a", &[0.0]);
+        bad.federation.nodes = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = EngineConfig::two_gpu_default("a", &[0.0]);
+        bad.federation.nodes = 1000;
+        assert!(bad.validate().is_err());
+        let mut bad = EngineConfig::two_gpu_default("a", &[0.0]);
+        bad.federation.shard_policy = "round-robin".into();
         assert!(bad.validate().is_err());
     }
 

@@ -157,6 +157,29 @@ impl ExecState {
         }
     }
 
+    /// Rebuild execution state from a *fully-fresh* barrier snapshot —
+    /// the receiving half of a
+    /// [`MigrationEnvelope`](crate::federation::MigrationEnvelope)
+    /// transfer. At a sync barrier every included device holds the
+    /// identical gathered latent and fully-published KV stack, so one
+    /// `(x, kv)` pair seeds *any* destination device count: a sibling
+    /// node's cluster, or this node's own cluster with a recovered
+    /// device re-admitted. Cursors start at 0 for the suffix plan;
+    /// stats start empty (the sender's stats travel separately in the
+    /// envelope).
+    pub fn from_fresh(
+        model: &ModelInfo,
+        n_dev: usize,
+        x: &Tensor,
+        kv: &Tensor,
+    ) -> Self {
+        let mut st = ExecState::new(model, n_dev, x);
+        for b in st.bufs.iter_mut() {
+            b.kv = kv.clone();
+        }
+        st
+    }
+
     /// Switch to a re-planned continuation: cursors reset, buffers and
     /// stats persist (the new plan's devices line up index-for-index).
     /// Published halos are invalidated — migrated rows make the old

@@ -21,4 +21,7 @@ pub mod timeline;
 
 // `self::` disambiguates from the built-in `core` crate (E0659).
 pub use self::core::{EngineCore, Generation};
-pub use self::session::{FusedJoiner, FusedOutcome, ReplanEvent, Session};
+pub use self::session::{
+    BarrierCheckpoint, FusedJoiner, FusedOutcome, ReplanEvent, ResumePoint,
+    Session,
+};

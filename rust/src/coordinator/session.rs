@@ -19,9 +19,10 @@ use crate::config::{ExecMode, HaloMode};
 use crate::coordinator::core::{EngineCore, Generation};
 use crate::coordinator::{dataflow, threaded, timeline};
 use crate::device::SimGpu;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::model::latents::{seeded_cond, seeded_noise};
 use crate::runtime::artifacts::{ModelInfo, ResKey};
+use crate::runtime::Tensor;
 use crate::sched::plan::Plan;
 use crate::sched::replan::{drift_detected, live_speeds, replan_at_sync};
 use crate::spec::GenerationSpec;
@@ -61,6 +62,43 @@ pub struct FusedOutcome {
     /// Generations of barrier joiners, tagged by their tokens, in
     /// join order.
     pub joined: Vec<(u64, Generation)>,
+}
+
+/// A request frozen at a sync barrier with the fully-fresh invariant
+/// restored: every included device holds the identical gathered latent
+/// and fully-published KV stack, so `exec.bufs[i]` of any included `i`
+/// plus the plan's remaining fast-grid suffix fully determine the
+/// continuation — on this cluster or any other. Produced by
+/// [`Session::execute_to_barrier`]; serialized for cross-node transfer
+/// by [`MigrationEnvelope`](crate::federation::MigrationEnvelope).
+#[derive(Debug)]
+pub struct BarrierCheckpoint {
+    /// Execution state at the barrier (buffers fresh, cursors past
+    /// `synced` sync points of the session's plan).
+    pub exec: dataflow::ExecState,
+    /// The virtual clock at the barrier (prefix compute + comm).
+    pub sim: timeline::SimState,
+    /// Sync points of the session's plan completed at the barrier.
+    pub synced: usize,
+}
+
+/// The receiving half of a barrier handoff: a fully-fresh `(x, kv)`
+/// snapshot plus the clock to resume under. `transfer_bytes` is the
+/// envelope payload the destination charges on its timeline before
+/// the first resumed step ([`timeline::SimState::charge_migration`]) —
+/// zero for an intra-process handoff that moved nothing.
+#[derive(Debug, Clone, Copy)]
+pub struct ResumePoint<'a> {
+    /// Gathered full latent at the barrier.
+    pub x: &'a Tensor,
+    /// Fully-published KV stack at the barrier.
+    pub kv: &'a Tensor,
+    /// Sender's wall clock (`SimState::now`) at the handoff.
+    pub elapsed_s: f64,
+    /// Portion of `elapsed_s` the sender attributed to communication.
+    pub comm_s: f64,
+    /// Envelope payload bytes to charge as a migration transfer.
+    pub transfer_bytes: u64,
 }
 
 /// A lightweight execution session: plan snapshot + cluster snapshot,
@@ -130,6 +168,12 @@ impl Session {
     /// The resolution this session executes (latent rows x cols).
     pub fn resolution(&self) -> ResKey {
         self.res
+    }
+
+    /// The model geometry this session executes against (re-based onto
+    /// its resolution; native sessions carry the base model unchanged).
+    pub fn model(&self) -> &ModelInfo {
+        &self.model
     }
 
     /// Execute one request through the pinned plan: Algorithm 1 via
@@ -685,6 +729,203 @@ impl Session {
             stats: out.stats,
             timeline: tl,
             replans: events,
+        })
+    }
+
+    /// Execute the first `n_syncs` sync intervals of this session's
+    /// plan and stop at the barrier with the fully-fresh invariant
+    /// restored — the sending half of a cross-node migration or a
+    /// device re-admission handoff.
+    ///
+    /// Under [`HaloMode::Sync`] the restoring exchange is a numeric
+    /// no-op (the barrier's all-gather just ran); under a positive
+    /// displaced-staleness budget the barrier may sit on a displaced
+    /// sync point with stale peer rows, so the refresh is a real
+    /// blocking exchange, flushed and charged on the virtual clock
+    /// exactly like the adaptive re-plan path does.
+    ///
+    /// `n_syncs` must leave work behind: `0 < n_syncs <
+    /// plan.sync_points.len()`. Prefix timings are fed back into the
+    /// shared profiler here, since the destination never sees them.
+    pub fn execute_to_barrier(
+        &self,
+        seed: u64,
+        n_syncs: usize,
+    ) -> Result<BarrierCheckpoint> {
+        let total = self.plan.sync_points.len();
+        if n_syncs == 0 || n_syncs >= total {
+            return Err(Error::Sched(format!(
+                "checkpoint barrier {n_syncs} out of range (plan has \
+                 {total} sync points; the handoff must leave work)"
+            )));
+        }
+        let exec = self.core.exec();
+        let model = self.model.clone();
+        let comm = &self.core.config().comm;
+        let drift = self.core.drift_schedule();
+        let n = self.plan.devices.len();
+        let heights: Vec<usize> = self
+            .plan
+            .included_devices()
+            .map(|d| d.rows.rows)
+            .collect();
+        exec.warm_res(self.res, &heights)?;
+        let width_ratio = self.model.latent_w as f64
+            / exec.manifest().model.latent_w as f64;
+        let tl_cluster = crate::device::scale_cluster_per_row(
+            &self.cluster,
+            width_ratio,
+        );
+        let noise = seeded_noise(&model, seed);
+        let cond = seeded_cond(&model, seed);
+        let mut st = dataflow::ExecState::new(&model, n, &noise);
+        let mut sim = timeline::SimState::new(n);
+        match self.core.mode() {
+            ExecMode::Dataflow => dataflow::run_span(
+                exec, self.res, &model, &self.plan, &mut st, n_syncs,
+                &cond, self.halo,
+            )?,
+            ExecMode::Threaded => threaded::run_span_at(
+                exec,
+                self.res,
+                &model,
+                &self.plan,
+                &self.cluster,
+                &cond,
+                &mut st,
+                n_syncs,
+                true,
+                self.halo,
+            )?,
+        }
+        timeline::simulate_span(
+            &self.plan,
+            &tl_cluster,
+            comm,
+            &model,
+            drift.map(|d| (d, self.device_map.as_slice())),
+            &mut sim,
+            n_syncs,
+            self.halo,
+        )?;
+        // Restore the fully-fresh invariant the checkpoint contract
+        // promises (numeric no-op under `HaloMode::Sync`); displaced
+        // halos pay for the blocking exchange on the clock.
+        dataflow::refresh_buffers(&model, &self.plan, &mut st);
+        if self.halo.max_staleness() > 0 {
+            sim.flush_debts();
+            sim.charge_refresh(comm, &self.plan, &model);
+        }
+        for d in self.plan.included_devices() {
+            if st.stats.steps_run[d.device] > 0 {
+                let rows_run =
+                    d.rows.rows * st.stats.steps_run[d.device];
+                let rows_eq = ((rows_run as f64 * width_ratio).round()
+                    as usize)
+                    .max(1);
+                self.core.record_step(
+                    self.device_map[d.device],
+                    rows_eq,
+                    st.stats.compute_s[d.device],
+                );
+            }
+        }
+        Ok(BarrierCheckpoint { exec: st, sim, synced: n_syncs })
+    }
+
+    /// Resume a migrated request: this session's plan must be the
+    /// *continuation* plan over the checkpoint's remaining fast-grid
+    /// suffix (built by
+    /// [`plan_suffix_on`](crate::sched::replan::plan_suffix_on) at the
+    /// destination's live speeds). Every device starts from the
+    /// transferred fully-fresh buffers, the envelope transfer is
+    /// charged on the resumed clock before the first step, and the
+    /// returned generation's timeline spans the *whole* request
+    /// (sender prefix + transfer + local suffix).
+    ///
+    /// When the destination's speeds match the sender's, the
+    /// continuation programs are the ones the sender would have run
+    /// (the zero-drift re-plan invariant), so the rendered latent is
+    /// byte-identical to the unmigrated run — pinned by
+    /// `tests/integration_federation.rs`.
+    pub fn resume_seeded(
+        &self,
+        seed: u64,
+        rp: &ResumePoint<'_>,
+    ) -> Result<Generation> {
+        let exec = self.core.exec();
+        let model = self.model.clone();
+        let comm = &self.core.config().comm;
+        let drift = self.core.drift_schedule();
+        let n = self.plan.devices.len();
+        let heights: Vec<usize> = self
+            .plan
+            .included_devices()
+            .map(|d| d.rows.rows)
+            .collect();
+        exec.warm_res(self.res, &heights)?;
+        let width_ratio = self.model.latent_w as f64
+            / exec.manifest().model.latent_w as f64;
+        let tl_cluster = crate::device::scale_cluster_per_row(
+            &self.cluster,
+            width_ratio,
+        );
+        let cond = seeded_cond(&model, seed);
+        let mut st = dataflow::ExecState::from_fresh(&model, n, rp.x, rp.kv);
+        let mut sim =
+            timeline::SimState::resumed(n, rp.elapsed_s, rp.comm_s);
+        sim.charge_migration(comm, rp.transfer_bytes);
+        let n_syncs = self.plan.sync_points.len();
+        match self.core.mode() {
+            ExecMode::Dataflow => dataflow::run_span(
+                exec, self.res, &model, &self.plan, &mut st, n_syncs,
+                &cond, self.halo,
+            )?,
+            ExecMode::Threaded => threaded::run_span_at(
+                exec,
+                self.res,
+                &model,
+                &self.plan,
+                &self.cluster,
+                &cond,
+                &mut st,
+                n_syncs,
+                true,
+                self.halo,
+            )?,
+        }
+        timeline::simulate_span(
+            &self.plan,
+            &tl_cluster,
+            comm,
+            &model,
+            drift.map(|d| (d, self.device_map.as_slice())),
+            &mut sim,
+            n_syncs,
+            self.halo,
+        )?;
+        let out = dataflow::finish(&self.plan, st)?;
+        for d in self.plan.included_devices() {
+            if out.stats.steps_run[d.device] > 0 {
+                let rows_run =
+                    d.rows.rows * out.stats.steps_run[d.device];
+                let rows_eq = ((rows_run as f64 * width_ratio).round()
+                    as usize)
+                    .max(1);
+                self.core.record_step(
+                    self.device_map[d.device],
+                    rows_eq,
+                    out.stats.compute_s[d.device],
+                );
+            }
+        }
+        let tl = sim.finish(&self.plan);
+        Ok(Generation {
+            latent: out.latent,
+            plan: self.plan.clone(),
+            stats: out.stats,
+            timeline: tl,
+            replans: Vec::new(),
         })
     }
 }

@@ -113,6 +113,20 @@ impl SimState {
         }
     }
 
+    /// A virtual clock resumed from a migrated checkpoint: the
+    /// destination starts `elapsed_s` into the request's wall time
+    /// (the sender's `now` at the handoff barrier, prefix comm
+    /// included) with `comm_s` of that already attributed to
+    /// communication. Per-device busy/overlap counters start at zero —
+    /// utilization reports describe the destination span only; the
+    /// makespan (`now`) spans the whole request.
+    pub fn resumed(n: usize, elapsed_s: f64, comm_s: f64) -> Self {
+        let mut st = SimState::new(n);
+        st.now = elapsed_s;
+        st.comm_s = comm_s;
+        st
+    }
+
     /// Switch to a re-planned continuation: per-plan positions reset,
     /// clocks and drift counters persist. Outstanding transfer debts
     /// survive the switch with their deadlines rebased into the new

@@ -1,0 +1,231 @@
+//! The versioned barrier-checkpoint wire format.
+//!
+//! A request frozen at a sync barrier is fully determined by one
+//! `(x, kv)` snapshot (every included device holds the identical
+//! gathered latent and fully-published KV stack — the fully-fresh
+//! invariant [`Session::execute_to_barrier`] restores), the remaining
+//! fast-grid suffix, the STADI params the plan was built under, and
+//! the virtual clock. [`MigrationEnvelope`] packages exactly that,
+//! with an explicit `version` gate so a node running an older tier
+//! rejects an envelope it cannot faithfully resume instead of
+//! rendering a silently different image.
+
+use crate::config::StadiParams;
+use crate::coordinator::{BarrierCheckpoint, Session};
+use crate::error::{Error, Result};
+use crate::runtime::Tensor;
+use crate::sched::replan::fast_suffix_of;
+use crate::util::json::{Object, Value};
+
+/// Current envelope schema version. Bump on any field change; decoders
+/// reject other versions (see DESIGN_SERVE.md "Federation & migration").
+pub const ENVELOPE_VERSION: usize = 1;
+
+/// A serialized barrier checkpoint: everything a destination node
+/// needs to resume the request — on any device count — plus the clock
+/// to resume under. Produced by [`MigrationEnvelope::capture`],
+/// consumed by [`resume_envelope_on`](crate::federation::resume_envelope_on).
+#[derive(Debug, Clone)]
+pub struct MigrationEnvelope {
+    /// Schema version ([`ENVELOPE_VERSION`]).
+    pub version: usize,
+    /// The request's seed (conditioning is re-derived from it).
+    pub seed: u64,
+    /// Sync points of the source plan completed at the checkpoint.
+    pub synced: usize,
+    /// Source virtual clock at the handoff.
+    pub elapsed_s: f64,
+    /// Portion of `elapsed_s` that was blocking communication.
+    pub comm_s: f64,
+    /// Remaining fast-grid timesteps (the Full-class reference grid).
+    pub fast_suffix: Vec<usize>,
+    /// STADI params the source plan was built under (the destination
+    /// re-plans the suffix under the same Eq. 4/5 knobs).
+    pub params: StadiParams,
+    /// Latent rows the request spans (Eq. 5 re-splits these).
+    pub total_rows: usize,
+    /// Gathered full latent at the barrier.
+    pub x: Tensor,
+    /// Fully-published KV stack at the barrier.
+    pub kv: Tensor,
+}
+
+impl MigrationEnvelope {
+    /// Seal a [`BarrierCheckpoint`] of `session` into an envelope.
+    /// Returns `Ok(None)` when the barrier leaves nothing migratable
+    /// (at most the final step remains) — finish locally instead.
+    pub fn capture(
+        session: &Session,
+        ckpt: &BarrierCheckpoint,
+        seed: u64,
+    ) -> Result<Option<MigrationEnvelope>> {
+        let plan = session.plan();
+        let fast_suffix = match fast_suffix_of(plan, ckpt.synced)? {
+            Some(fs) => fs,
+            None => return Ok(None),
+        };
+        // Fully fresh means any included device's buffers will do.
+        let d = plan.included_devices().next().ok_or_else(|| {
+            Error::Sched("checkpointed plan has no included device".into())
+        })?;
+        let bufs = &ckpt.exec.bufs[d.device];
+        Ok(Some(MigrationEnvelope {
+            version: ENVELOPE_VERSION,
+            seed,
+            synced: ckpt.synced,
+            elapsed_s: ckpt.sim.now,
+            comm_s: ckpt.sim.comm_s,
+            fast_suffix,
+            params: plan.params.clone(),
+            total_rows: plan.total_rows(),
+            x: bufs.x.clone(),
+            kv: bufs.kv.clone(),
+        }))
+    }
+
+    /// Bytes a cross-node transfer of this envelope's state moves (the
+    /// latent and KV payloads; scalar header ignored). This is what
+    /// the destination charges via
+    /// [`SimState::charge_migration`](crate::coordinator::timeline::SimState::charge_migration).
+    pub fn payload_bytes(&self) -> u64 {
+        (self.x.byte_len() + self.kv.byte_len()) as u64
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut o = Object::new();
+        o.insert("version", Value::Num(self.version as f64));
+        o.insert("seed", Value::Num(self.seed as f64));
+        o.insert("synced", Value::Num(self.synced as f64));
+        o.insert("elapsed_s", Value::Num(self.elapsed_s));
+        o.insert("comm_s", Value::Num(self.comm_s));
+        o.insert("fast_suffix", Value::from_usize_slice(&self.fast_suffix));
+        let mut p = Object::new();
+        p.insert("m_base", Value::Num(self.params.m_base as f64));
+        p.insert("m_warmup", Value::Num(self.params.m_warmup as f64));
+        p.insert("a", Value::Num(self.params.a));
+        p.insert("b", Value::Num(self.params.b));
+        p.insert("temporal", Value::Bool(self.params.temporal));
+        p.insert("spatial", Value::Bool(self.params.spatial));
+        p.insert("cost_aware", Value::Bool(self.params.cost_aware));
+        o.insert("params", Value::Obj(p));
+        o.insert("total_rows", Value::Num(self.total_rows as f64));
+        o.insert("x", tensor_json(&self.x));
+        o.insert("kv", tensor_json(&self.kv));
+        Value::Obj(o)
+    }
+
+    /// Decode an envelope, rejecting unknown schema versions with a
+    /// typed error — a node must never guess at fields it does not
+    /// understand and resume a subtly different request.
+    pub fn from_json(v: &Value) -> Result<MigrationEnvelope> {
+        let version = v.get("version")?.as_usize()?;
+        if version != ENVELOPE_VERSION {
+            return Err(Error::Protocol(format!(
+                "migration envelope version {version} unsupported \
+                 (this node speaks {ENVELOPE_VERSION})"
+            )));
+        }
+        let p = v.get("params")?;
+        let params = StadiParams {
+            m_base: p.get("m_base")?.as_usize()?,
+            m_warmup: p.get("m_warmup")?.as_usize()?,
+            a: p.get("a")?.as_f64()?,
+            b: p.get("b")?.as_f64()?,
+            temporal: p.get("temporal")?.as_bool()?,
+            spatial: p.get("spatial")?.as_bool()?,
+            cost_aware: p.get("cost_aware")?.as_bool()?,
+        };
+        Ok(MigrationEnvelope {
+            version,
+            seed: v.get("seed")?.as_f64()? as u64,
+            synced: v.get("synced")?.as_usize()?,
+            elapsed_s: v.get("elapsed_s")?.as_f64()?,
+            comm_s: v.get("comm_s")?.as_f64()?,
+            fast_suffix: v.get("fast_suffix")?.usizes()?,
+            params,
+            total_rows: v.get("total_rows")?.as_usize()?,
+            x: tensor_from_json(v.get("x")?)?,
+            kv: tensor_from_json(v.get("kv")?)?,
+        })
+    }
+}
+
+fn tensor_json(t: &Tensor) -> Value {
+    let mut o = Object::new();
+    o.insert("shape", Value::from_usize_slice(&t.shape));
+    o.insert("data", Value::from_f32_slice(&t.data));
+    Value::Obj(o)
+}
+
+fn tensor_from_json(v: &Value) -> Result<Tensor> {
+    Tensor::new(v.get("shape")?.usizes()?, v.get("data")?.f32s()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn fixture() -> MigrationEnvelope {
+        MigrationEnvelope {
+            version: ENVELOPE_VERSION,
+            seed: 42,
+            synced: 3,
+            elapsed_s: 1.25,
+            comm_s: 0.125,
+            fast_suffix: vec![6, 4, 2, 0],
+            params: StadiParams {
+                m_base: 8,
+                m_warmup: 2,
+                ..StadiParams::default()
+            },
+            total_rows: 32,
+            x: Tensor::new(vec![2, 2], vec![1.0, -2.0, 0.5, 4.0]).unwrap(),
+            kv: Tensor::new(vec![1, 3], vec![0.0, 7.0, -1.5]).unwrap(),
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let env = fixture();
+        let text = json::to_string(&env.to_json());
+        let back =
+            MigrationEnvelope::from_json(&json::parse(&text).unwrap())
+                .unwrap();
+        assert_eq!(back.version, env.version);
+        assert_eq!(back.seed, env.seed);
+        assert_eq!(back.synced, env.synced);
+        assert_eq!(back.elapsed_s, env.elapsed_s);
+        assert_eq!(back.comm_s, env.comm_s);
+        assert_eq!(back.fast_suffix, env.fast_suffix);
+        assert_eq!(back.params.m_base, env.params.m_base);
+        assert_eq!(back.params.m_warmup, env.params.m_warmup);
+        assert_eq!(back.params.a, env.params.a);
+        assert_eq!(back.params.b, env.params.b);
+        assert_eq!(back.total_rows, env.total_rows);
+        assert_eq!(back.x, env.x);
+        assert_eq!(back.kv, env.kv);
+        assert_eq!(
+            back.payload_bytes(),
+            env.payload_bytes(),
+            "payload accounting must survive the wire"
+        );
+    }
+
+    #[test]
+    fn unknown_version_is_rejected() {
+        let env = fixture();
+        let mut v = env.to_json();
+        if let Value::Obj(o) = &mut v {
+            o.insert("version", Value::Num((ENVELOPE_VERSION + 1) as f64));
+        }
+        let e = MigrationEnvelope::from_json(&v).unwrap_err();
+        assert!(matches!(e, Error::Protocol(_)), "{e}");
+    }
+
+    #[test]
+    fn payload_counts_latent_and_kv_bytes() {
+        let env = fixture();
+        assert_eq!(env.payload_bytes(), (4 + 3) * 4);
+    }
+}

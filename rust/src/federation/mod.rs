@@ -1,0 +1,50 @@
+//! Federated serving (EXTENSION): a multi-node coordinator tier.
+//!
+//! The paper's coordinator owns one heterogeneous cluster. A serving
+//! deployment shards traffic across several such clusters ("nodes"),
+//! each with its own [`EngineCore`](crate::coordinator::EngineCore),
+//! plan cache, profiler and fleet ledger. This module adds the tier
+//! that federates them:
+//!
+//! * [`CoordinatorNode`] — one engine core plus its fleet slice;
+//! * [`ShardPolicy`] ([`LeastLoaded`], [`ConsistentHash`]) — routes a
+//!   [`GenerationSpec`](crate::spec::GenerationSpec) to a home node:
+//!   least-loaded by backlog and predicted latency, or consistent-hash
+//!   affinity so repeated request shapes land on a warm
+//!   [`PlanCache`](crate::sched::plan::PlanCache);
+//! * spill-over admission — when the home node answers busy, the
+//!   request spills to the best-ranked sibling instead of queueing
+//!   ([`FrontTier::admit`]);
+//! * barrier-checkpoint migration — an in-flight request can move to
+//!   a sibling node at a sync barrier: the fully-fresh `(x, kv)`
+//!   snapshot plus the remaining fast-grid suffix are serialized into
+//!   a versioned [`MigrationEnvelope`], the suffix is re-planned on
+//!   the destination
+//!   ([`plan_suffix_on`](crate::sched::replan::plan_suffix_on)), the
+//!   transfer is charged on the virtual clock
+//!   ([`charge_migration`](crate::coordinator::timeline::SimState::charge_migration)),
+//!   and — when speeds match — the rendered latent is byte-identical
+//!   to the unmigrated run (the zero-drift re-plan invariant).
+//!
+//! The same envelope seam re-admits a *recovered device* on its own
+//! node: the stock mid-flight re-planner never re-admits excluded
+//! devices (their buffers are stale), but a barrier handoff transfers
+//! fresh state to everyone, so [`resume_envelope_on`] may include any
+//! device whose live speed clears Eq. 4.
+//!
+//! Everything defaults off: `federation.nodes = 1` is the pre-tier
+//! single-node engine, bit-exact (pinned by
+//! `tests/integration_federation.rs`).
+
+pub mod envelope;
+pub mod node;
+pub mod shard;
+pub mod tier;
+
+pub use envelope::{MigrationEnvelope, ENVELOPE_VERSION};
+pub use node::CoordinatorNode;
+pub use shard::{
+    parse_shard_policy, spill_order, ConsistentHash, LeastLoaded, NodeView,
+    ShardPolicy,
+};
+pub use tier::{resume_envelope_on, FrontTier};

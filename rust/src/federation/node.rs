@@ -1,0 +1,68 @@
+//! One coordinator node: an engine core plus its fleet slice.
+
+use std::sync::Arc;
+
+use crate::coordinator::EngineCore;
+use crate::error::Result;
+use crate::federation::shard::NodeView;
+use crate::fleet::{FleetManager, GpuLease};
+use crate::spec::GenerationSpec;
+
+/// A federation member: its own [`EngineCore`] (artifacts, profiler,
+/// plan cache, virtual cluster) and its own [`FleetManager`] ledger.
+/// The tier never reaches into a sibling's core — state crosses nodes
+/// only through a serialized
+/// [`MigrationEnvelope`](crate::federation::MigrationEnvelope).
+pub struct CoordinatorNode {
+    id: usize,
+    core: Arc<EngineCore>,
+    fleet: FleetManager,
+}
+
+impl CoordinatorNode {
+    pub fn new(id: usize, core: Arc<EngineCore>) -> Self {
+        let fleet = core.fleet();
+        CoordinatorNode { id, core, fleet }
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    pub fn core(&self) -> &Arc<EngineCore> {
+        &self.core
+    }
+
+    pub fn fleet(&self) -> &FleetManager {
+        &self.fleet
+    }
+
+    /// Every device of this node's cluster, ascending.
+    pub fn all_devices(&self) -> Vec<usize> {
+        (0..self.fleet.num_devices()).collect()
+    }
+
+    /// Non-blocking whole-node admission: lease the full cluster, or
+    /// answer busy (`Ok(None)`) **without** touching the grant ledger —
+    /// the property spill-over admission is pinned on
+    /// (`FleetManager::granted_total` stays put on a busy answer).
+    pub fn try_admit(&self) -> Result<Option<GpuLease>> {
+        self.fleet.try_acquire(&self.all_devices())
+    }
+
+    /// This node's load snapshot for the shard policy: fleet backlog
+    /// and occupancy plus the node's own planner-backed latency
+    /// prediction for `spec`.
+    pub fn view(&self, spec: &GenerationSpec) -> NodeView {
+        NodeView {
+            id: self.id,
+            backlog: self.fleet.waiters(),
+            in_flight: self.fleet.in_flight(),
+            free_devices: self.fleet.free_devices().len(),
+            predicted_latency_s: self
+                .core
+                .predict_latency_for(spec, &self.all_devices())
+                .ok(),
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! Shard policies: which node a request calls home.
+//!
+//! A policy ranks live [`NodeView`]s — fleet backlog, in-flight
+//! leases, free devices, and the node's own planner-backed latency
+//! prediction — and names the home node. Admission then tries the
+//! home first and spills to the best-ranked sibling when it answers
+//! busy ([`spill_order`]). Policies are pure over their inputs, so
+//! routing is deterministic and testable without a cluster.
+
+use crate::error::{Error, Result};
+use crate::spec::GenerationSpec;
+
+/// One node's load snapshot, as the policy sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeView {
+    /// Node id (index in the tier).
+    pub id: usize,
+    /// Acquirers blocked on the node's fleet (queue-depth signal,
+    /// analogous to `Router::backlog()` on the serve side).
+    pub backlog: usize,
+    /// Leases currently outstanding on the node's fleet.
+    pub in_flight: usize,
+    /// Devices currently free on the node.
+    pub free_devices: usize,
+    /// The node's own predicted end-to-end latency for this spec on
+    /// its full cluster (`EngineCore::predict_latency_for`); `None`
+    /// when prediction failed (unplannable shape on that node).
+    pub predicted_latency_s: Option<f64>,
+}
+
+impl NodeView {
+    /// Load rank: fewer queued + in-flight requests first, then the
+    /// faster predicted service, then the lower id (total order).
+    fn load_key(&self) -> (usize, f64, usize) {
+        (
+            self.backlog + self.in_flight,
+            self.predicted_latency_s.unwrap_or(f64::INFINITY),
+            self.id,
+        )
+    }
+}
+
+fn lighter(a: &NodeView, b: &NodeView) -> bool {
+    let (la, pa, ia) = a.load_key();
+    let (lb, pb, ib) = b.load_key();
+    if la != lb {
+        return la < lb;
+    }
+    if pa != pb {
+        return pa < pb;
+    }
+    ia < ib
+}
+
+/// Routes a spec to its home node. Implementations must be pure
+/// functions of `(spec, views)` so routing decisions are reproducible.
+pub trait ShardPolicy: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// The home node for `spec`. `views` is non-empty and indexed by
+    /// node id.
+    fn choose(&self, spec: &GenerationSpec, views: &[NodeView]) -> usize;
+}
+
+/// Least-loaded routing: fewest queued + in-flight requests, ties
+/// broken by the node's own latency prediction, then by id.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct LeastLoaded;
+
+impl ShardPolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn choose(&self, _spec: &GenerationSpec, views: &[NodeView]) -> usize {
+        debug_assert!(!views.is_empty());
+        let mut best = &views[0];
+        for v in &views[1..] {
+            if lighter(v, best) {
+                best = v;
+            }
+        }
+        best.id
+    }
+}
+
+/// Consistent-hash affinity: equal request *shapes* (steps, size,
+/// quality — everything that keys a
+/// [`PlanKey`](crate::sched::plan::PlanKey), deliberately not the
+/// seed) hash to the same node, so a shape's plan is built once and
+/// every repeat hits that node's warm
+/// [`PlanCache`](crate::sched::plan::PlanCache). A small virtual-node
+/// ring keeps the mapping stable under node-count changes: adding a
+/// node remaps only the shapes whose ring successor it becomes.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ConsistentHash;
+
+/// Virtual points per node on the hash ring.
+const RING_REPLICAS: u64 = 16;
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// The shape signature consistent hashing keys on: every spec field
+/// that shapes the plan, and not the seed (seeds vary per request;
+/// affinity is about plan-cache warmth, not stickiness per client).
+fn shape_sig(spec: &GenerationSpec) -> String {
+    format!(
+        "steps={:?};h={:?};w={:?};q={};p={}",
+        spec.steps,
+        spec.height_px,
+        spec.width_px,
+        spec.quality.as_str(),
+        spec.priority.rank(),
+    )
+}
+
+impl ShardPolicy for ConsistentHash {
+    fn name(&self) -> &'static str {
+        "hash"
+    }
+
+    fn choose(&self, spec: &GenerationSpec, views: &[NodeView]) -> usize {
+        debug_assert!(!views.is_empty());
+        let key = fnv1a(shape_sig(spec).as_bytes());
+        // Successor of `key` on the ring of node replica points.
+        let mut best: Option<(u64, usize)> = None; // (distance, id)
+        for v in views {
+            for r in 0..RING_REPLICAS {
+                let point = fnv1a(
+                    format!("node={};replica={r}", v.id).as_bytes(),
+                );
+                let dist = point.wrapping_sub(key);
+                if best.map(|(d, _)| dist < d).unwrap_or(true) {
+                    best = Some((dist, v.id));
+                }
+            }
+        }
+        best.map(|(_, id)| id).unwrap_or(0)
+    }
+}
+
+/// Parse a `federation.shard_policy` config string.
+pub fn parse_shard_policy(s: &str) -> Result<Box<dyn ShardPolicy>> {
+    match s {
+        "least-loaded" => Ok(Box::new(LeastLoaded)),
+        "hash" => Ok(Box::new(ConsistentHash)),
+        other => Err(Error::Config(format!(
+            "unknown shard policy {other:?} (want \"least-loaded\" or \
+             \"hash\")"
+        ))),
+    }
+}
+
+/// Admission order when the home node answers busy: home first, then
+/// every sibling by ascending load rank. The caller walks this list
+/// with `try_admit` — the first grant wins.
+pub fn spill_order(home: usize, views: &[NodeView]) -> Vec<usize> {
+    let mut rest: Vec<&NodeView> =
+        views.iter().filter(|v| v.id != home).collect();
+    rest.sort_by(|a, b| {
+        let (la, pa, ia) = a.load_key();
+        let (lb, pb, ib) = b.load_key();
+        la.cmp(&lb)
+            .then(pa.partial_cmp(&pb).unwrap_or(std::cmp::Ordering::Equal))
+            .then(ia.cmp(&ib))
+    });
+    let mut order = Vec::with_capacity(views.len());
+    if views.iter().any(|v| v.id == home) {
+        order.push(home);
+    }
+    order.extend(rest.iter().map(|v| v.id));
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(id: usize, backlog: usize, in_flight: usize) -> NodeView {
+        NodeView {
+            id,
+            backlog,
+            in_flight,
+            free_devices: 2,
+            predicted_latency_s: Some(1.0),
+        }
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_then_prediction_then_id() {
+        let spec = GenerationSpec::new();
+        let views =
+            vec![view(0, 2, 1), view(1, 0, 0), view(2, 0, 1)];
+        assert_eq!(LeastLoaded.choose(&spec, &views), 1);
+        // Equal load: the faster-predicted node wins.
+        let mut views = vec![view(0, 0, 0), view(1, 0, 0)];
+        views[1].predicted_latency_s = Some(0.5);
+        assert_eq!(LeastLoaded.choose(&spec, &views), 1);
+        // Fully symmetric: lowest id.
+        let views = vec![view(0, 1, 1), view(1, 1, 1)];
+        assert_eq!(LeastLoaded.choose(&spec, &views), 0);
+        // A node that cannot predict ranks behind one that can.
+        let mut views = vec![view(0, 0, 0), view(1, 0, 0)];
+        views[0].predicted_latency_s = None;
+        assert_eq!(LeastLoaded.choose(&spec, &views), 1);
+    }
+
+    #[test]
+    fn hash_is_deterministic_and_seed_blind() {
+        let views = vec![view(0, 0, 0), view(1, 5, 5), view(2, 0, 0)];
+        let a = GenerationSpec::new().seed(1).steps(6);
+        let b = GenerationSpec::new().seed(999).steps(6);
+        let h = ConsistentHash;
+        // Same shape, different seed: same home (plan-cache affinity);
+        // load plays no part in the hash choice.
+        assert_eq!(h.choose(&a, &views), h.choose(&b, &views));
+        // Repeated calls are stable.
+        assert_eq!(h.choose(&a, &views), h.choose(&a, &views));
+        // Shapes spread: over a family of step budgets at 3 nodes, at
+        // least two distinct homes appear.
+        let homes: std::collections::BTreeSet<usize> = (2..40)
+            .map(|s| {
+                h.choose(&GenerationSpec::new().steps(2 * s), &views)
+            })
+            .collect();
+        assert!(homes.len() >= 2, "ring degenerated to one node");
+    }
+
+    #[test]
+    fn ring_is_mostly_stable_when_a_node_joins() {
+        let h = ConsistentHash;
+        let three = vec![view(0, 0, 0), view(1, 0, 0), view(2, 0, 0)];
+        let four = vec![
+            view(0, 0, 0),
+            view(1, 0, 0),
+            view(2, 0, 0),
+            view(3, 0, 0),
+        ];
+        let shapes: Vec<GenerationSpec> =
+            (1..=60).map(|s| GenerationSpec::new().steps(2 * s)).collect();
+        let moved = shapes
+            .iter()
+            .filter(|s| {
+                let before = h.choose(s, &three);
+                let after = h.choose(s, &four);
+                after != before && after != 3
+            })
+            .count();
+        // Consistent hashing: shapes either stay put or move to the
+        // new node — none shuffle between surviving nodes.
+        assert_eq!(moved, 0, "{moved} shapes shuffled between old nodes");
+    }
+
+    #[test]
+    fn parse_matches_config_contract() {
+        assert_eq!(parse_shard_policy("least-loaded").unwrap().name(),
+            "least-loaded");
+        assert_eq!(parse_shard_policy("hash").unwrap().name(), "hash");
+        assert!(parse_shard_policy("round-robin").is_err());
+    }
+
+    #[test]
+    fn spill_order_puts_home_first_then_lightest() {
+        let views =
+            vec![view(0, 3, 1), view(1, 0, 0), view(2, 1, 0)];
+        assert_eq!(spill_order(0, &views), vec![0, 1, 2]);
+        assert_eq!(spill_order(1, &views), vec![1, 2, 0]);
+        assert_eq!(spill_order(2, &views), vec![2, 1, 0]);
+    }
+}

@@ -1,0 +1,340 @@
+//! The front tier: routing, spill-over admission, barrier migration.
+
+use std::sync::Arc;
+
+use crate::config::{EngineConfig, FederationConfig};
+use crate::coordinator::{EngineCore, Generation, ResumePoint, Session};
+use crate::error::{Error, Result};
+use crate::federation::envelope::MigrationEnvelope;
+use crate::federation::node::CoordinatorNode;
+use crate::federation::shard::{
+    parse_shard_policy, spill_order, NodeView, ShardPolicy,
+};
+use crate::fleet::{AllGpus, GpuLease};
+use crate::sched::replan::plan_suffix_on;
+use crate::spec::GenerationSpec;
+
+/// The multi-node serving front: N [`CoordinatorNode`]s behind one
+/// admission surface. Requests are routed to a home node by the
+/// [`ShardPolicy`], spill to the best-ranked sibling when the home
+/// answers busy, and — with `federation.migrate` on — may move to a
+/// sibling at a sync barrier mid-flight via a [`MigrationEnvelope`].
+pub struct FrontTier {
+    nodes: Vec<CoordinatorNode>,
+    policy: Box<dyn ShardPolicy>,
+    migrate: bool,
+}
+
+impl FrontTier {
+    /// Federate pre-built cores (heterogeneous tiers, tests).
+    pub fn new(
+        cores: Vec<Arc<EngineCore>>,
+        policy: Box<dyn ShardPolicy>,
+        migrate: bool,
+    ) -> Result<FrontTier> {
+        if cores.is_empty() {
+            return Err(Error::Config("front tier needs >= 1 node".into()));
+        }
+        let nodes = cores
+            .into_iter()
+            .enumerate()
+            .map(|(id, core)| CoordinatorNode::new(id, core))
+            .collect();
+        Ok(FrontTier { nodes, policy, migrate })
+    }
+
+    /// Build `cfg.federation.nodes` identical nodes from one config
+    /// (each node gets its own core, profiler, plan cache and fleet;
+    /// the per-node config carries `federation` defaults so a node
+    /// can never recursively federate).
+    pub fn homogeneous(cfg: &EngineConfig) -> Result<FrontTier> {
+        let fed = cfg.federation.clone();
+        let policy = parse_shard_policy(&fed.shard_policy)?;
+        let mut node_cfg = cfg.clone();
+        node_cfg.federation = FederationConfig::default();
+        let mut cores = Vec::with_capacity(fed.nodes);
+        for _ in 0..fed.nodes {
+            cores.push(EngineCore::new(node_cfg.clone())?);
+        }
+        Self::new(cores, policy, fed.migrate)
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn nodes(&self) -> &[CoordinatorNode] {
+        &self.nodes
+    }
+
+    pub fn node(&self, id: usize) -> &CoordinatorNode {
+        &self.nodes[id]
+    }
+
+    pub fn migrate_enabled(&self) -> bool {
+        self.migrate
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Live load snapshots, indexed by node id.
+    pub fn views(&self, spec: &GenerationSpec) -> Vec<NodeView> {
+        self.nodes.iter().map(|n| n.view(spec)).collect()
+    }
+
+    /// The policy's home node for `spec` under current load.
+    pub fn route(&self, spec: &GenerationSpec) -> usize {
+        self.policy.choose(spec, &self.views(spec))
+    }
+
+    /// Spill-over admission: try the home node, then every sibling in
+    /// [`spill_order`]. `Ok(None)` = every node busy (the caller may
+    /// block on the home fleet or shed). A busy node's grant ledger is
+    /// untouched — `try_admit` answers busy without granting.
+    pub fn admit(
+        &self,
+        spec: &GenerationSpec,
+    ) -> Result<Option<(usize, GpuLease)>> {
+        let views = self.views(spec);
+        let home = self.policy.choose(spec, &views);
+        for id in spill_order(home, &views) {
+            if let Some(lease) = self.nodes[id].try_admit()? {
+                return Ok(Some((id, lease)));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Admit (spilling, then blocking on the home fleet if every node
+    /// is busy) and execute one request; returns the serving node id.
+    pub fn generate(
+        &self,
+        spec: &GenerationSpec,
+    ) -> Result<(usize, Generation)> {
+        let (id, lease) = self.admit_blocking(spec, 0)?;
+        let g = self.nodes[id]
+            .core()
+            .session_for_on(spec, &lease)?
+            .execute(spec)?;
+        Ok((id, g))
+    }
+
+    /// One request through the full federated path — what the serve
+    /// runner calls per job. Admission spills across nodes; when
+    /// migration is enabled and the serving node is saturated (fleet
+    /// waiters queued behind this request) while a sibling sits idle,
+    /// the request executes to the mid-plan sync barrier, ships a
+    /// [`MigrationEnvelope`], and finishes on the sibling.
+    pub fn serve_one(
+        &self,
+        spec: &GenerationSpec,
+        backlog: usize,
+    ) -> Result<Generation> {
+        let (id, lease) = self.admit_blocking(spec, backlog)?;
+        let node = &self.nodes[id];
+        let session = node.core().session_for_on(spec, &lease)?;
+        if self.migrate {
+            if let Some(g) = self.migrate_mid_run(spec, id, &session)? {
+                return Ok(g);
+            }
+        }
+        session.execute(spec)
+    }
+
+    fn admit_blocking(
+        &self,
+        spec: &GenerationSpec,
+        backlog: usize,
+    ) -> Result<(usize, GpuLease)> {
+        if let Some(granted) = self.admit(spec)? {
+            return Ok(granted);
+        }
+        // Every node busy: block on the home node's fleet (the
+        // policy's pick under current load) until a lease frees up.
+        let home = self.route(spec);
+        let node = &self.nodes[home];
+        let lease = node.fleet().acquire(
+            &AllGpus,
+            &node.core().effective_speeds(),
+            None,
+            backlog,
+        )?;
+        Ok((home, lease))
+    }
+
+    /// The saturation-triggered migration attempt. `Ok(None)` = no
+    /// migration happened (no pressure, no idle sibling, nothing
+    /// migratable at the barrier) — the caller finishes locally.
+    fn migrate_mid_run(
+        &self,
+        spec: &GenerationSpec,
+        src: usize,
+        session: &Session,
+    ) -> Result<Option<Generation>> {
+        if self.nodes[src].fleet().waiters() == 0 {
+            return Ok(None); // no one queued behind us: stay put
+        }
+        let dest = match self.nodes.iter().position(|n| {
+            n.id() != src
+                && n.fleet().in_flight() == 0
+                && n.fleet().waiters() == 0
+        }) {
+            Some(d) => d,
+            None => return Ok(None), // no idle sibling to absorb us
+        };
+        let total = session.plan().sync_points.len();
+        if total < 2 {
+            return Ok(None);
+        }
+        // Reserve the destination before doing any work there; a race
+        // that snatched it away just cancels the migration.
+        let dest_lease = match self.nodes[dest].try_admit()? {
+            Some(l) => l,
+            None => return Ok(None),
+        };
+        let ckpt = session.execute_to_barrier(spec.seed, total / 2)?;
+        let env =
+            match MigrationEnvelope::capture(session, &ckpt, spec.seed)? {
+                Some(e) => e,
+                // Nothing migratable (only the final step remains):
+                // the caller re-executes locally from scratch —
+                // wasteful, but deterministic and correct.
+                None => return Ok(None),
+            };
+        let dest_core = self.nodes[dest].core();
+        let g = resume_envelope_on(
+            dest_core,
+            &env,
+            &dest_core.effective_speeds(),
+        )?;
+        drop(dest_lease);
+        match g {
+            Some(g) => Ok(Some(g)),
+            // Parity deferral on the destination: resume locally from
+            // the same envelope rather than re-running the prefix.
+            None => {
+                let src_core = self.nodes[src].core();
+                resume_envelope_on(
+                    src_core,
+                    &env,
+                    &src_core.effective_speeds(),
+                )
+            }
+        }
+    }
+
+    /// Deterministic migration driver (tests, offline replay): run
+    /// `spec` on `src` to its plan's `n_syncs`-th barrier, seal the
+    /// envelope, resume on `dest`. Errors if migration is disabled or
+    /// the barrier leaves nothing migratable.
+    pub fn generate_migrated(
+        &self,
+        spec: &GenerationSpec,
+        n_syncs: usize,
+        src: usize,
+        dest: usize,
+    ) -> Result<Generation> {
+        if !self.migrate {
+            return Err(Error::Config(
+                "federation.migrate is disabled".into(),
+            ));
+        }
+        let session = self.nodes[src].core().session_for(spec)?;
+        let ckpt = session.execute_to_barrier(spec.seed, n_syncs)?;
+        let env = MigrationEnvelope::capture(&session, &ckpt, spec.seed)?
+            .ok_or_else(|| {
+                Error::Sched(format!(
+                    "barrier {n_syncs} leaves no migratable suffix"
+                ))
+            })?;
+        let core = self.nodes[dest].core();
+        resume_envelope_on(core, &env, &core.effective_speeds())?
+            .ok_or_else(|| {
+                Error::Sched(
+                    "suffix parity defers migration at this barrier"
+                        .into(),
+                )
+            })
+    }
+
+    /// Resume a decoded envelope on node `dest` at its live speeds.
+    /// `Ok(None)` = parity deferral (hand off at the next barrier).
+    pub fn resume_on(
+        &self,
+        dest: usize,
+        env: &MigrationEnvelope,
+    ) -> Result<Option<Generation>> {
+        if !self.migrate {
+            return Err(Error::Config(
+                "federation.migrate is disabled".into(),
+            ));
+        }
+        let core = self.nodes[dest].core();
+        resume_envelope_on(core, env, &core.effective_speeds())
+    }
+}
+
+/// Resume a [`MigrationEnvelope`] on `core` with explicit per-device
+/// `speeds` — the shared receiving half of cross-node migration *and*
+/// intra-node device re-admission. The suffix is re-planned over
+/// `speeds` by [`plan_suffix_on`] (every device starts from the
+/// envelope's fully-fresh buffers, so a recovered device whose live
+/// speed clears Eq. 4 is included — unlike the stock mid-flight
+/// re-planner, which pins excluded devices out), the envelope payload
+/// is charged on the resumed clock, and the returned timeline spans
+/// the whole request. `Ok(None)` = parity deferral: a Half-class
+/// continuation needs an odd suffix — hand off at the next barrier.
+pub fn resume_envelope_on(
+    core: &EngineCore,
+    env: &MigrationEnvelope,
+    speeds: &[f64],
+) -> Result<Option<Generation>> {
+    let names: Vec<String> = core
+        .config()
+        .devices
+        .iter()
+        .map(|d| d.name.clone())
+        .collect();
+    if speeds.len() != names.len() {
+        return Err(Error::Sched(format!(
+            "resume speeds for {} devices, node has {}",
+            speeds.len(),
+            names.len()
+        )));
+    }
+    let cluster = core.cluster();
+    let cost = if env.params.cost_aware {
+        Some(&cluster[0].cost)
+    } else {
+        None
+    };
+    let granularity = core.exec().manifest().model.row_granularity;
+    let plan = match plan_suffix_on(
+        core.schedule(),
+        &env.fast_suffix,
+        &env.params,
+        speeds,
+        &names,
+        cost,
+        env.total_rows,
+        granularity,
+    )? {
+        Some(p) => p,
+        None => return Ok(None),
+    };
+    let session = core.session_with_plan(plan);
+    session
+        .resume_seeded(
+            env.seed,
+            &ResumePoint {
+                x: &env.x,
+                kv: &env.kv,
+                elapsed_s: env.elapsed_s,
+                comm_s: env.comm_s,
+                transfer_bytes: env.payload_bytes(),
+            },
+        )
+        .map(Some)
+}

@@ -679,6 +679,32 @@ mod tests {
     }
 
     #[test]
+    fn slot_join_released_on_panic_unwind() {
+        // A fused-session member that panics while holding a SlotJoin
+        // must not leak its device slots — the batch-slot mirror of
+        // release_on_panic_unwind above.
+        let m = FleetManager::new(2);
+        let lease = m.try_acquire(&[0, 1]).unwrap().unwrap();
+        lease.open_slots(2); // owner + 1 joiner
+        let m2 = m.clone();
+        let r = std::panic::catch_unwind(move || {
+            let _join = m2.try_join(&[0, 1]).unwrap().unwrap();
+            panic!("fused member died");
+        });
+        assert!(r.is_err());
+        // The unwind dropped the join: the slot is spare again, the
+        // ledger did not poison, and counts stayed consistent.
+        let j = m.try_join(&[0, 1]).unwrap().unwrap();
+        assert_eq!(j.devices(), &[0, 1]);
+        drop(j);
+        drop(lease);
+        // Owner and joiners all gone: the fleet is whole again.
+        assert_eq!(m.free_devices(), vec![0, 1]);
+        assert_eq!(m.in_flight(), 0);
+        assert!(m.try_acquire(&[0, 1]).unwrap().is_some());
+    }
+
+    #[test]
     fn property_random_interleavings_stay_disjoint() {
         use crate::util::proptest::{ensure, forall};
         // Random acquire/release sequences against a shadow model: a

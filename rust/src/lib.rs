@@ -36,6 +36,7 @@ pub mod des;
 pub mod device;
 pub mod error;
 pub mod expt;
+pub mod federation;
 pub mod fleet;
 pub mod linalg;
 pub mod metrics;

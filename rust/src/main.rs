@@ -235,10 +235,46 @@ fn cmd_serve(args: impl Iterator<Item = String>) -> Result<()> {
             "largest fused session; setting it enables batching (empty \
              = config default)",
             Some(""),
+        )
+        .flag(
+            "nodes",
+            "federate N identical coordinator nodes behind one \
+             admission surface (empty = config default; 1 = no tier)",
+            Some(""),
+        )
+        .flag(
+            "shard-policy",
+            "federation routing: least-loaded | hash (empty = config \
+             default)",
+            Some(""),
+        )
+        .flag(
+            "migrate",
+            "true|false: barrier-checkpoint migration between \
+             federation nodes (empty = config default)",
+            Some(""),
         );
     let p = cmd.parse(args)?;
-    let cfg = build_config(&p)?;
-    let core = EngineCore::new(cfg)?;
+    let mut cfg = build_config(&p)?;
+    if let Some(s) = p.get("nodes").filter(|s| !s.trim().is_empty()) {
+        cfg.federation.nodes = s.trim().parse().map_err(|_| {
+            stadi::error::Error::Config(format!(
+                "--nodes {s:?} is not a node count"
+            ))
+        })?;
+    }
+    if let Some(s) = p.get("shard-policy").filter(|s| !s.trim().is_empty())
+    {
+        cfg.federation.shard_policy = s.trim().to_string();
+    }
+    if let Some(s) = p.get("migrate").filter(|s| !s.trim().is_empty()) {
+        cfg.federation.migrate = s.trim().parse().map_err(|_| {
+            stadi::error::Error::Config(format!(
+                "--migrate {s:?} is not true|false"
+            ))
+        })?;
+    }
+    cfg.validate()?;
     let listener = TcpListener::bind(p.get("addr").unwrap())?;
     let mut opts = ServeOptions {
         queue_capacity: p.get_parsed("queue")?,
@@ -249,7 +285,7 @@ fn cmd_serve(args: impl Iterator<Item = String>) -> Result<()> {
     // The engine config's `batch` block is the baseline; either CLI
     // flag overrides its field *and* switches batching on (passing a
     // batching knob means you want batching).
-    opts.batch = core.config().batch.clone();
+    opts.batch = cfg.batch.clone();
     if let Some(s) = p.get("batch-window").filter(|s| !s.trim().is_empty()) {
         opts.batch.window_ms = s.trim().parse().map_err(|_| {
             stadi::error::Error::Config(format!(
@@ -271,6 +307,24 @@ fn cmd_serve(args: impl Iterator<Item = String>) -> Result<()> {
             "batching needs --batch-max >= 2".into(),
         ));
     }
+    if cfg.federation.nodes > 1 {
+        if p.get("gang-policy").filter(|s| !s.is_empty()).is_some() {
+            return Err(stadi::error::Error::Config(
+                "--gang-policy partitions one node's fleet; it cannot \
+                 be combined with a federated tier (--nodes > 1)"
+                    .into(),
+            ));
+        }
+        let tier = stadi::federation::FrontTier::homogeneous(&cfg)?;
+        stadi::serve::server::serve_federated(
+            std::sync::Arc::new(tier),
+            listener,
+            opts,
+            None,
+        )?;
+        return Ok(());
+    }
+    let core = EngineCore::new(cfg)?;
     match p.get("gang-policy").filter(|s| !s.is_empty()) {
         None => {
             stadi::serve::server::serve(core, listener, opts, None)?;

@@ -31,6 +31,7 @@
 //! the conservative transfer anyway so the DES comparison cannot
 //! flatter re-planning).
 
+use crate::config::StadiParams;
 use crate::device::CostModel;
 use crate::error::{Error, Result};
 use crate::model::latents::RowRange;
@@ -191,6 +192,85 @@ pub fn cursor_after_syncs(steps: &[StepSpec], synced: usize) -> Result<usize> {
     )))
 }
 
+/// The remaining fast-grid suffix of `prev` after `synced` completed
+/// sync points: the Full-class reference device's own `t_from` tail
+/// from its cursor on. This is the payload a
+/// [`MigrationEnvelope`](crate::federation::MigrationEnvelope) ships —
+/// together with the barrier's fresh buffers it fully determines the
+/// continuation. Returns `Ok(None)` when the barrier carries no
+/// replannable work: nothing executed yet (`synced == 0`), or at most
+/// the final step remains.
+pub fn fast_suffix_of(
+    prev: &Plan,
+    synced: usize,
+) -> Result<Option<Vec<usize>>> {
+    if synced == 0 || synced >= prev.sync_points.len() {
+        return Ok(None);
+    }
+    let fast_dev = prev
+        .devices
+        .iter()
+        .find(|d| d.class == StepClass::Full)
+        .ok_or_else(|| Error::Sched("plan has no Full-class device".into()))?;
+    let j = cursor_after_syncs(&fast_dev.steps, synced)?;
+    let fast_suffix: Vec<usize> =
+        fast_dev.steps[j..].iter().map(|s| s.t_from).collect();
+    if fast_suffix.len() < 2 {
+        return Ok(None); // only the final step remains
+    }
+    Ok(Some(fast_suffix))
+}
+
+/// Plan a fast-grid suffix onto an **arbitrary** cluster — the
+/// cross-node migration / device re-admission planner.
+///
+/// Unlike [`replan_at_sync`], which continues on the same devices and
+/// therefore pins originally-excluded devices to speed 0 (their
+/// buffers are stale), every device here is assumed to start from
+/// *transferred fully-fresh buffers* (the `MigrationEnvelope`
+/// state-transfer seam), so Eq. 4/5 run free over the live speeds:
+/// any device count, recovered devices included. The caller owns
+/// charging the state-transfer bytes on the timeline.
+///
+/// Returns `Ok(None)` on parity deferral: a Half-class continuation
+/// needs an odd suffix (both endpoints on the slow grid) — hand off at
+/// the next barrier instead.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_suffix_on(
+    schedule: &Schedule,
+    fast_suffix: &[usize],
+    params: &StadiParams,
+    speeds: &[f64],
+    names: &[String],
+    cost: Option<&CostModel>,
+    total_rows: usize,
+    granularity: usize,
+) -> Result<Option<Plan>> {
+    let assign = assign_steps(speeds, params)?;
+    let any_half = assign.iter().any(|a| a.class == StepClass::Half);
+    if any_half && fast_suffix.len() % 2 == 0 {
+        return Ok(None);
+    }
+    let sizes = resplit_sizes(
+        speeds,
+        &assign,
+        params.spatial,
+        cost,
+        total_rows,
+        granularity,
+    )?;
+    Plan::build_on_grid(
+        schedule,
+        fast_suffix,
+        speeds,
+        names,
+        params,
+        &assign,
+        &sizes,
+    )
+    .map(Some)
+}
+
 /// Re-plan the remaining steps of `prev` at a sync barrier.
 ///
 /// `synced` is the number of `prev` sync points completed (the barrier
@@ -216,28 +296,17 @@ pub fn replan_at_sync(
             live_speeds.len()
         )));
     }
-    if synced == 0 || synced >= prev.sync_points.len() {
-        return Ok(None);
-    }
-    // (Only the final sync point is the clean-sample None —
-    // check_alignment guarantees it — and the bound above already
-    // excludes it, so sync_points[synced - 1] is always a timestep.)
-    debug_assert!(prev.sync_points[synced - 1].is_some());
-
     // The remaining fast grid is the Full-class reference device's own
     // suffix — valid for original plans and for suffix plans alike
     // (the fastest device is always Full).
-    let fast_dev = prev
-        .devices
-        .iter()
-        .find(|d| d.class == StepClass::Full)
-        .ok_or_else(|| Error::Sched("plan has no Full-class device".into()))?;
-    let j = cursor_after_syncs(&fast_dev.steps, synced)?;
-    let fast_suffix: Vec<usize> =
-        fast_dev.steps[j..].iter().map(|s| s.t_from).collect();
-    if fast_suffix.len() < 2 {
-        return Ok(None); // only the final step remains
-    }
+    let fast_suffix = match fast_suffix_of(prev, synced)? {
+        Some(fs) => fs,
+        None => return Ok(None),
+    };
+    // (Only the final sync point is the clean-sample None —
+    // check_alignment guarantees it — and the suffix bound above
+    // already excludes it, so sync_points[synced - 1] is a timestep.)
+    debug_assert!(prev.sync_points[synced - 1].is_some());
 
     // No re-admission: a device excluded from `prev` has stale
     // buffers, so its live speed is pinned to 0 (Eq. 4 keeps it out

@@ -3,8 +3,10 @@
 //! priority router (priority desc / earliest-deadline / FIFO, with
 //! dequeue-time deadline shedding), concurrent TCP server (accept
 //! loop + worker pool over per-request sessions, optionally
-//! fleet-partitioned via gang policies), and the M/G/c + gang-policy
-//! + mixed-priority queueing simulations.
+//! fleet-partitioned via gang policies or federated across a
+//! multi-node [`FrontTier`](crate::federation::FrontTier)), and the
+//! M/G/c + gang-policy + mixed-priority + federation queueing
+//! simulations.
 //!
 //! See rust/DESIGN_SERVE.md for the architecture diagram, the fleet
 //! lease lifecycle, and locking rules.

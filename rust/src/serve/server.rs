@@ -34,6 +34,7 @@ use std::time::{Duration, Instant};
 use crate::config::BatchConfig;
 use crate::coordinator::{EngineCore, FusedJoiner, Generation};
 use crate::error::{Error, Result};
+use crate::federation::FrontTier;
 use crate::fleet::{FleetManager, GangPolicy};
 use crate::serve::batch::{BatchGates, FuseKey, JoinReply, Offer};
 use crate::serve::protocol::{self, WireRequest};
@@ -533,6 +534,65 @@ pub fn serve_fleet(
             .with_batching(&opts.batch),
     );
     serve_with(runner, listener, opts, stop)
+}
+
+/// Runs each job through a [`FrontTier`]: shard-policy routing,
+/// spill-over admission across sibling nodes, and (when the tier
+/// enables it) barrier-checkpoint migration off saturated nodes.
+pub struct FederatedRunner {
+    tier: Arc<FrontTier>,
+}
+
+impl FederatedRunner {
+    pub fn new(tier: Arc<FrontTier>) -> Self {
+        FederatedRunner { tier }
+    }
+}
+
+impl JobRunner for FederatedRunner {
+    fn run(&self, job: &Job) -> (bool, String) {
+        self.run_with_load(job, 0)
+    }
+
+    /// Nodes are homogeneous (one config builds them all), so any
+    /// node's engine validates a spec for the whole tier.
+    fn admit(&self, job: &Job) -> Result<()> {
+        self.tier.node(0).core().check_spec(&job.spec)
+    }
+
+    fn run_with_load(&self, job: &Job, queued: usize) -> (bool, String) {
+        let t0 = Instant::now();
+        match self.tier.serve_one(&job.spec, queued) {
+            Ok(g) => {
+                let wall = t0.elapsed().as_secs_f64();
+                (
+                    true,
+                    protocol::response_line(&job.id, &job.spec, &g, wall),
+                )
+            }
+            Err(e) => (false, protocol::error_line(&job.id, &e)),
+        }
+    }
+}
+
+/// Serve across a federated tier: every request routes to a home node
+/// by the tier's shard policy, spills to the best-ranked sibling when
+/// the home answers busy, and — with migration on — may finish on an
+/// idle sibling after a mid-plan barrier handoff.
+pub fn serve_federated(
+    tier: Arc<FrontTier>,
+    listener: TcpListener,
+    opts: ServeOptions,
+    stop: Option<Arc<AtomicBool>>,
+) -> Result<u64> {
+    crate::log_info!(
+        "serve",
+        "federation on: {} nodes, policy {}, migrate {}",
+        tier.num_nodes(),
+        tier.policy_name(),
+        tier.migrate_enabled()
+    );
+    serve_with(Arc::new(FederatedRunner::new(tier)), listener, opts, stop)
 }
 
 /// Serve until `stop` is set, `max_requests` is reached, or forever.

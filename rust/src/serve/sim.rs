@@ -1281,6 +1281,470 @@ pub fn simulate_drift_strategies(
     Ok(DriftComparison { frozen, ewma, midflight })
 }
 
+// --- Federated serving DES (multi-node tier, BENCH_federation) -------
+
+/// Fixture for the federation frontier sweep: `nodes` identical nodes
+/// of `servers_per_node` workers each, unit-speed service split into
+/// `segments` equal sync intervals (the barrier grid migration rides
+/// on). A brownout rotates through the tier — during the k-th
+/// `window_s` window node `k % nodes` runs at `spike_speed` — so every
+/// node periodically slows *after* requests were admitted to it. The
+/// router's load probe sees only current speeds (no future knowledge);
+/// blindsided in-flight requests are exactly what barrier-checkpoint
+/// migration exists to rescue.
+///
+/// `scripts/gen_bench_artifacts.py` mirrors this arithmetic
+/// operation-for-operation (same constants, same greedy admission,
+/// same segment loop) to emit `BENCH_federation.json`; keep the two
+/// in sync.
+#[derive(Debug, Clone)]
+pub struct FederationSimConfig {
+    /// Coordinator nodes in the tier.
+    pub nodes: usize,
+    /// Concurrent requests per node (worker pool / gang count).
+    pub servers_per_node: usize,
+    /// Full-speed service time of one request.
+    pub service_s: f64,
+    /// Sync barriers per request; migration may fire at any interior
+    /// boundary.
+    pub segments: usize,
+    /// Latency SLO for the deadline-hit-rate column.
+    pub deadline_s: f64,
+    /// Envelope transfer time charged on a migration handoff.
+    pub migration_s: f64,
+    /// Spill threshold: a request spills off its home node when the
+    /// home's estimated finish lags its arrival by more than this.
+    pub busy_wait_s: f64,
+    /// Relative speed of the browned-out node during its window.
+    pub spike_speed: f64,
+    /// Length of one brownout window; the slowed node is
+    /// `floor(t / window_s) % nodes`.
+    pub window_s: f64,
+    /// Requests per sweep point.
+    pub n_requests: usize,
+    /// Offered-load multiples of a single node's capacity (so `2.0`
+    /// means twice what the no-tier baseline can serve).
+    pub load_multiples: Vec<f64>,
+}
+
+impl FederationSimConfig {
+    /// The fixture shared with `scripts/gen_bench_artifacts.py` and
+    /// `BENCH_federation.json`.
+    pub fn stub_fixture() -> Self {
+        FederationSimConfig {
+            nodes: 4,
+            servers_per_node: 2,
+            service_s: 1.0,
+            segments: 4,
+            deadline_s: 3.0,
+            migration_s: 0.05,
+            busy_wait_s: 1.0,
+            spike_speed: 0.1,
+            window_s: 5.0,
+            n_requests: 240,
+            load_multiples: vec![0.5, 1.0, 1.5, 2.0, 2.5],
+        }
+    }
+
+    /// Saturation throughput of ONE node at full speed — the sweep's
+    /// load unit, so multiples compare against the single-node
+    /// baseline's ceiling rather than the whole tier's.
+    pub fn capacity_rps(&self) -> f64 {
+        self.servers_per_node as f64 / self.service_s
+    }
+}
+
+/// The three arrival traces of the sweep, in emission order.
+pub const FEDERATION_TRACES: [&str; 3] = ["bursty", "diurnal", "flash"];
+
+/// Deterministic arrival times for one named trace at `rate` rps —
+/// closed-form, RNG-free, strictly non-decreasing:
+///
+/// * `bursty` — groups of 6 arrive together at the group's mean slot;
+/// * `diurnal` — four equal phases at 0.5x / 1.5x / 2.0x / 1.0x rate;
+/// * `flash` — steady, except a 3x crowd between n/3 and n/2.
+pub fn federation_arrivals(trace: &str, rate: f64, n: usize) -> Vec<f64> {
+    let mut out = Vec::with_capacity(n);
+    match trace {
+        "bursty" => {
+            for i in 0..n {
+                out.push((i / 6) as f64 * (6.0 / rate));
+            }
+        }
+        "diurnal" => {
+            let mult = [0.5, 1.5, 2.0, 1.0];
+            let mut t = 0.0;
+            for i in 0..n {
+                let q = (i * 4 / n).min(3);
+                t += 1.0 / (rate * mult[q]);
+                out.push(t);
+            }
+        }
+        "flash" => {
+            let mut t = 0.0;
+            for i in 0..n {
+                let dt = if i >= n / 3 && i < n / 2 {
+                    1.0 / (3.0 * rate)
+                } else {
+                    1.0 / rate
+                };
+                t += dt;
+                out.push(t);
+            }
+        }
+        other => panic!("unknown federation trace {other:?}"),
+    }
+    out
+}
+
+/// Serving discipline under comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FedMode {
+    /// One node (node 0) takes all traffic — no tier.
+    Single,
+    /// Federated admission (shard + spill); no mid-flight migration.
+    FederatedNoMigrate,
+    /// Federated admission plus barrier-checkpoint migration.
+    FederatedMigrate,
+}
+
+/// Per-discipline outcome at one (trace, load) point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FedSideStats {
+    /// Fraction of requests finishing within `deadline_s`.
+    pub deadline_hit_rate: f64,
+    pub mean_sojourn_s: f64,
+    pub p95_sojourn_s: f64,
+    /// Completed requests over the arrival-to-last-finish span.
+    pub throughput_rps: f64,
+    /// Barrier handoffs that actually fired.
+    pub migrations: usize,
+    /// Admissions granted off the home node.
+    pub spills: usize,
+}
+
+/// One point of the sweep: the same arrival train through all three
+/// disciplines (paired comparison, not sampled).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FederationPoint {
+    pub load_x: f64,
+    pub rate_rps: f64,
+    pub single: FedSideStats,
+    pub fed_nomig: FedSideStats,
+    pub fed_mig: FedSideStats,
+}
+
+/// One trace's load sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FederationTraceSweep {
+    pub trace: String,
+    pub points: Vec<FederationPoint>,
+}
+
+/// The full frontier, JSON-serializable for `BENCH_federation.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FederationFrontier {
+    pub config: FederationSimConfig,
+    pub traces: Vec<FederationTraceSweep>,
+}
+
+fn fed_mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Linear-interpolated percentile on a sorted copy (mirrored digit for
+/// digit by the python generator — do not swap in another estimator).
+fn fed_percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).expect("finite sojourns"));
+    let rank = p / 100.0 * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    s[lo] + (s[hi] - s[lo]) * (rank - lo as f64)
+}
+
+/// Node `node`'s relative speed at time `t`: the brownout rotates, one
+/// node at a time, every `window_s`.
+fn fed_speed(cfg: &FederationSimConfig, node: usize, t: f64) -> f64 {
+    if (t / cfg.window_s).floor() as usize % cfg.nodes == node {
+        cfg.spike_speed
+    } else {
+        1.0
+    }
+}
+
+/// Greedy FIFO service of one arrival train under one discipline.
+/// Requests are admitted in arrival order; each takes the earliest-free
+/// server of its chosen node and executes `segments` intervals whose
+/// durations follow the node's live speed. Admission prices a node by
+/// probing its queue depth and *current* speed (`fin_est`) — it cannot
+/// foresee the next brownout window, which is what keeps the scenario
+/// honest. Under [`FedMode::FederatedMigrate`], a request finding
+/// itself on a slowed node at an interior barrier moves to an idle
+/// full-speed sibling when staying would blow its deadline and moving
+/// still makes it — paying `migration_s` and freeing its source server
+/// at the barrier, exactly the envelope handoff's cost shape. At most
+/// one migration per request (one envelope hop).
+fn fed_run(
+    cfg: &FederationSimConfig,
+    arrivals: &[f64],
+    mode: FedMode,
+) -> FedSideStats {
+    let n_nodes = if mode == FedMode::Single { 1 } else { cfg.nodes };
+    let mut free = vec![vec![0.0f64; cfg.servers_per_node]; n_nodes];
+    let seg_work = cfg.service_s / cfg.segments as f64;
+    let min_server = |free: &[Vec<f64>], nd: usize| -> (usize, f64) {
+        let mut k = 0usize;
+        let mut best = free[nd][0];
+        for (i, &f) in free[nd].iter().enumerate() {
+            if f < best {
+                k = i;
+                best = f;
+            }
+        }
+        (k, best)
+    };
+    let mut sojourns = Vec::with_capacity(arrivals.len());
+    let mut migrations = 0usize;
+    let mut spills = 0usize;
+    let mut last_finish = 0.0f64;
+    for (i, &a) in arrivals.iter().enumerate() {
+        // Admission: home node by shard; the probe estimates finish as
+        // queue-drain plus one service at the node's *current* speed,
+        // and the request spills to the best-probing node when the
+        // home estimate lags arrival by more than `busy_wait_s`.
+        let node = match mode {
+            FedMode::Single => 0,
+            _ => {
+                let home = i % cfg.nodes;
+                let fin_est = |nd: usize| {
+                    min_server(&free, nd).1.max(a)
+                        + cfg.service_s / fed_speed(cfg, nd, a)
+                };
+                if fin_est(home) - a > cfg.busy_wait_s {
+                    let mut chosen = home;
+                    let mut best = fin_est(home);
+                    for nd in 0..cfg.nodes {
+                        if fin_est(nd) < best {
+                            chosen = nd;
+                            best = fin_est(nd);
+                        }
+                    }
+                    if chosen != home {
+                        spills += 1;
+                    }
+                    chosen
+                } else {
+                    home
+                }
+            }
+        };
+        let (mut cur_k, f0) = min_server(&free, node);
+        let mut cur_node = node;
+        let mut t = a.max(f0);
+        let mut migrated = false;
+        for s in 0..cfg.segments {
+            t += seg_work / fed_speed(cfg, cur_node, t);
+            if mode == FedMode::FederatedMigrate
+                && !migrated
+                && s + 1 < cfg.segments
+            {
+                let spd_now = fed_speed(cfg, cur_node, t);
+                if spd_now < 1.0 {
+                    let remaining =
+                        (cfg.segments - s - 1) as f64 * seg_work;
+                    let stay = t + remaining / spd_now;
+                    // Candidate destinations: full-speed siblings with
+                    // an idle server (the tier migrates onto spare
+                    // capacity; it never steals a sibling's queue).
+                    let mut best: Option<(f64, usize, usize)> = None;
+                    for nd in 0..cfg.nodes {
+                        if nd == cur_node || fed_speed(cfg, nd, t) < 1.0
+                        {
+                            continue;
+                        }
+                        let (kk, fdest) = min_server(&free, nd);
+                        if fdest > t + cfg.migration_s {
+                            continue;
+                        }
+                        let fin = (t + cfg.migration_s).max(fdest)
+                            + remaining;
+                        if best.map(|(b, _, _)| fin < b).unwrap_or(true)
+                        {
+                            best = Some((fin, nd, kk));
+                        }
+                    }
+                    // Deadline rescue: move only when staying misses
+                    // the SLO and the handoff still makes it.
+                    let deadline = a + cfg.deadline_s;
+                    if let Some((fin, nd, kk)) = best {
+                        if stay > deadline && fin <= deadline {
+                            free[cur_node][cur_k] = t;
+                            t = (t + cfg.migration_s).max(free[nd][kk]);
+                            cur_node = nd;
+                            cur_k = kk;
+                            migrated = true;
+                            migrations += 1;
+                        }
+                    }
+                }
+            }
+        }
+        free[cur_node][cur_k] = t;
+        sojourns.push(t - a);
+        if t > last_finish {
+            last_finish = t;
+        }
+    }
+    let hits = sojourns
+        .iter()
+        .filter(|&&s| s <= cfg.deadline_s)
+        .count();
+    let n = sojourns.len();
+    let span = last_finish - arrivals[0];
+    FedSideStats {
+        deadline_hit_rate: if n == 0 {
+            1.0
+        } else {
+            hits as f64 / n as f64
+        },
+        mean_sojourn_s: fed_mean(&sojourns),
+        p95_sojourn_s: fed_percentile(&sojourns, 95.0),
+        throughput_rps: if span > 0.0 { n as f64 / span } else { 0.0 },
+        migrations,
+        spills,
+    }
+}
+
+/// Sweep every (trace, load) pair through the three disciplines. Each
+/// point replays the identical arrival train, so the comparison is
+/// paired rather than sampled; the rotating brownout timing is fixed
+/// by `window_s` alone and shared by all three runs.
+pub fn simulate_federation_frontier(
+    cfg: &FederationSimConfig,
+) -> FederationFrontier {
+    let cap = cfg.capacity_rps();
+    let traces = FEDERATION_TRACES
+        .iter()
+        .map(|&trace| {
+            let points = cfg
+                .load_multiples
+                .iter()
+                .map(|&load_x| {
+                    let rate = load_x * cap;
+                    let arr =
+                        federation_arrivals(trace, rate, cfg.n_requests);
+                    FederationPoint {
+                        load_x,
+                        rate_rps: rate,
+                        single: fed_run(cfg, &arr, FedMode::Single),
+                        fed_nomig: fed_run(
+                            cfg,
+                            &arr,
+                            FedMode::FederatedNoMigrate,
+                        ),
+                        fed_mig: fed_run(
+                            cfg,
+                            &arr,
+                            FedMode::FederatedMigrate,
+                        ),
+                    }
+                })
+                .collect();
+            FederationTraceSweep { trace: trace.to_string(), points }
+        })
+        .collect();
+    FederationFrontier { config: cfg.clone(), traces }
+}
+
+impl FederationFrontier {
+    /// Fixed field order, byte-identical across runs (the sweep is
+    /// RNG-free); matches `scripts/gen_bench_artifacts.py` field for
+    /// field so `BENCH_federation.json` can be re-derived either way.
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::{Object, Value};
+        let side = |s: &FedSideStats| {
+            let mut o = Object::new();
+            o.insert(
+                "deadline_hit_rate",
+                Value::Num(s.deadline_hit_rate),
+            );
+            o.insert("mean_sojourn_s", Value::Num(s.mean_sojourn_s));
+            o.insert("p95_sojourn_s", Value::Num(s.p95_sojourn_s));
+            o.insert("throughput_rps", Value::Num(s.throughput_rps));
+            o.insert("migrations", Value::Num(s.migrations as f64));
+            o.insert("spills", Value::Num(s.spills as f64));
+            Value::Obj(o)
+        };
+        let mut o = Object::new();
+        o.insert("bench", Value::Str("federation".into()));
+        o.insert(
+            "source",
+            Value::Str("scripts/gen_bench_artifacts.py".into()),
+        );
+        // Migration ships a fully-fresh barrier snapshot; the halo
+        // label names the comm mode the handoff relies on.
+        o.insert("halo", Value::Str("checkpoint-migration".into()));
+        let c = &self.config;
+        let mut co = Object::new();
+        co.insert("nodes", Value::Num(c.nodes as f64));
+        co.insert(
+            "servers_per_node",
+            Value::Num(c.servers_per_node as f64),
+        );
+        co.insert("service_s", Value::Num(c.service_s));
+        co.insert("segments", Value::Num(c.segments as f64));
+        co.insert("deadline_s", Value::Num(c.deadline_s));
+        co.insert("migration_s", Value::Num(c.migration_s));
+        co.insert("busy_wait_s", Value::Num(c.busy_wait_s));
+        co.insert("spike_speed", Value::Num(c.spike_speed));
+        co.insert("window_s", Value::Num(c.window_s));
+        co.insert("n_requests", Value::Num(c.n_requests as f64));
+        co.insert(
+            "load_multiples",
+            Value::Arr(
+                c.load_multiples
+                    .iter()
+                    .map(|&x| Value::Num(x))
+                    .collect(),
+            ),
+        );
+        o.insert("config", Value::Obj(co));
+        let traces: Vec<Value> = self
+            .traces
+            .iter()
+            .map(|tr| {
+                let mut to = Object::new();
+                to.insert("trace", Value::Str(tr.trace.clone()));
+                let points: Vec<Value> = tr
+                    .points
+                    .iter()
+                    .map(|p| {
+                        let mut po = Object::new();
+                        po.insert("load_x", Value::Num(p.load_x));
+                        po.insert("rate_rps", Value::Num(p.rate_rps));
+                        po.insert("single", side(&p.single));
+                        po.insert("fed_nomig", side(&p.fed_nomig));
+                        po.insert("fed_mig", side(&p.fed_mig));
+                        Value::Obj(po)
+                    })
+                    .collect();
+                to.insert("points", Value::Arr(points));
+                Value::Obj(to)
+            })
+            .collect();
+        o.insert("traces", Value::Arr(traces));
+        Value::Obj(o)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1821,6 +2285,116 @@ mod tests {
         assert!(
             (p.disjoint.mean_sojourn_s - cfg.service_s(1)).abs()
                 < 1e-9
+        );
+    }
+
+    /// The tentpole claim of BENCH_federation: at every load point at
+    /// or past 2x a single node's capacity, on every trace, migration
+    /// strictly beats migration-off federation, which strictly beats
+    /// the single-node baseline, on deadline hits — and the wins come
+    /// from actual barrier handoffs, not routing luck.
+    #[test]
+    fn federation_migration_strictly_wins_at_high_load() {
+        let cfg = FederationSimConfig::stub_fixture();
+        let sweep = simulate_federation_frontier(&cfg);
+        let mut asserted = 0usize;
+        for tr in &sweep.traces {
+            for p in &tr.points {
+                if p.load_x < 2.0 {
+                    continue;
+                }
+                asserted += 1;
+                assert!(
+                    p.fed_mig.deadline_hit_rate
+                        > p.fed_nomig.deadline_hit_rate,
+                    "{} x{}: migration must beat nomig ({} vs {})",
+                    tr.trace,
+                    p.load_x,
+                    p.fed_mig.deadline_hit_rate,
+                    p.fed_nomig.deadline_hit_rate
+                );
+                assert!(
+                    p.fed_nomig.deadline_hit_rate
+                        > p.single.deadline_hit_rate,
+                    "{} x{}: federation must beat single ({} vs {})",
+                    tr.trace,
+                    p.load_x,
+                    p.fed_nomig.deadline_hit_rate,
+                    p.single.deadline_hit_rate
+                );
+                assert!(
+                    p.fed_mig.migrations > 0,
+                    "{} x{}: the winning side must actually migrate",
+                    tr.trace,
+                    p.load_x
+                );
+            }
+        }
+        assert!(asserted >= 6, "sweep must cover >= 2x on every trace");
+    }
+
+    /// Discipline invariants that hold at every point: the single-node
+    /// baseline can neither spill nor migrate, the migration-off side
+    /// never migrates, and every run serves all requests.
+    #[test]
+    fn federation_disciplines_respect_their_contracts() {
+        let cfg = FederationSimConfig::stub_fixture();
+        let sweep = simulate_federation_frontier(&cfg);
+        for tr in &sweep.traces {
+            for p in &tr.points {
+                assert_eq!(p.single.migrations, 0);
+                assert_eq!(p.single.spills, 0);
+                assert_eq!(p.fed_nomig.migrations, 0);
+                for side in
+                    [&p.single, &p.fed_nomig, &p.fed_mig]
+                {
+                    assert!(side.deadline_hit_rate >= 0.0);
+                    assert!(side.deadline_hit_rate <= 1.0);
+                    assert!(side.throughput_rps > 0.0);
+                    assert!(side.mean_sojourn_s > 0.0);
+                    assert!(
+                        side.p95_sojourn_s
+                            >= side.mean_sojourn_s * 0.5
+                    );
+                }
+            }
+        }
+    }
+
+    /// RNG-free determinism + the BENCH schema gate: two sweeps
+    /// serialize byte-identically and carry the "halo" key that
+    /// scripts/check.sh requires of every committed BENCH_*.json.
+    #[test]
+    fn federation_frontier_is_deterministic_and_json_stable() {
+        let cfg = FederationSimConfig::stub_fixture();
+        let a = simulate_federation_frontier(&cfg);
+        let b = simulate_federation_frontier(&cfg);
+        assert_eq!(a, b);
+        let ja = crate::util::json::to_string(&a.to_json());
+        assert_eq!(ja, crate::util::json::to_string(&b.to_json()));
+        assert!(ja.contains("\"halo\""));
+        assert!(ja.contains("\"checkpoint-migration\""));
+        assert!(ja.contains("\"traces\""));
+        assert!(ja.contains("\"window_s\""));
+    }
+
+    /// The arrival generators are closed-form: non-decreasing, sized
+    /// to n, and the flash crowd really compresses its middle third.
+    #[test]
+    fn federation_arrivals_are_ordered_and_shaped() {
+        for trace in FEDERATION_TRACES {
+            let arr = federation_arrivals(trace, 4.0, 120);
+            assert_eq!(arr.len(), 120);
+            for w in arr.windows(2) {
+                assert!(w[1] >= w[0], "{trace} must be non-decreasing");
+            }
+        }
+        let flash = federation_arrivals("flash", 4.0, 120);
+        let crowd = flash[59] - flash[40];
+        let steady = flash[100] - flash[81];
+        assert!(
+            crowd < steady * 0.5,
+            "flash crowd must arrive >= 2x denser"
         );
     }
 }

@@ -1,0 +1,337 @@
+//! Federated serving, end to end on the stub runtime — runs on every
+//! build (no artifacts, no xla feature needed).
+//!
+//! Pins the PR's acceptance criteria:
+//!
+//! * equal-speed migration is a numerics no-op: run a request to the
+//!   mid-plan barrier on one node, ship the envelope, finish on a
+//!   sibling of identical speeds — the latent is **byte-identical**
+//!   to an uninterrupted single-node run;
+//! * spill-over admission never touches a saturated home's grant
+//!   ledger: the home answers busy without granting, the sibling
+//!   grants, and `granted_total` proves which is which;
+//! * the scaled DES frontier: on every trace, at every load at or
+//!   past 2x one node's capacity, federated+migration strictly beats
+//!   both migration-off federation and the single-node baseline on
+//!   deadline hits — and the committed `BENCH_federation.json`
+//!   matches the in-process sweep field for field at 1e-9;
+//! * the default config (`nodes: 1`, `migrate: false`) is the
+//!   pre-federation path bit-exact, and a 1-node tier serves exactly
+//!   what the bare core serves;
+//! * the same envelope seam re-admits an excluded device *within* a
+//!   node: a device pinned out by Eq. 4 at plan time joins the suffix
+//!   after its occupancy clears, which the stock mid-flight re-planner
+//!   (by contract) never does.
+
+use std::path::{Path, PathBuf};
+
+use stadi::config::{EngineConfig, FederationConfig, StadiParams};
+use stadi::coordinator::EngineCore;
+use stadi::federation::{resume_envelope_on, FrontTier, MigrationEnvelope};
+use stadi::serve::sim::{
+    simulate_federation_frontier, FederationSimConfig,
+};
+use stadi::spec::GenerationSpec;
+use stadi::util::json::{self, Value};
+
+/// Write a fresh stub artifact set into a per-test temp dir.
+fn stub_artifacts(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("stadi-fed-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    stadi::runtime::stubgen::write_stub_artifacts(
+        &dir,
+        stadi::runtime::stubgen::DEFAULT_EXTRA_RESOLUTIONS,
+    )
+    .unwrap();
+    dir
+}
+
+fn config(dir: &Path, occ: &[f64]) -> EngineConfig {
+    let mut cfg = EngineConfig::two_gpu_default(dir, occ);
+    cfg.stadi =
+        StadiParams { m_base: 6, m_warmup: 2, ..Default::default() };
+    cfg
+}
+
+#[test]
+fn equal_speed_migration_latent_is_byte_identical() {
+    let dir = stub_artifacts("mig");
+    let mut cfg = config(&dir, &[0.0, 0.0]);
+    cfg.federation = FederationConfig {
+        nodes: 2,
+        migrate: true,
+        ..Default::default()
+    };
+    let tier = FrontTier::homogeneous(&cfg).unwrap();
+    let spec = GenerationSpec::new().seed(11);
+
+    // Uninterrupted baseline on an independent core (no shared plan
+    // cache, no shared profiler — same config, fresh state).
+    let mut solo_cfg = cfg.clone();
+    solo_cfg.federation = FederationConfig::default();
+    let solo_core = EngineCore::new(solo_cfg).unwrap();
+    let baseline =
+        solo_core.session_for(&spec).unwrap().execute(&spec).unwrap();
+
+    let total = tier
+        .node(0)
+        .core()
+        .session_for(&spec)
+        .unwrap()
+        .plan()
+        .sync_points
+        .len();
+    assert!(total >= 2, "fixture must have interior barriers");
+    for n_syncs in 1..total {
+        let g = tier.generate_migrated(&spec, n_syncs, 0, 1).unwrap();
+        assert_eq!(
+            g.latent, baseline.latent,
+            "migration at barrier {n_syncs}/{total} must not change \
+             a single byte of the latent"
+        );
+        // The handoff charges the envelope transfer on the resumed
+        // clock: at equal speeds the migrated timeline can never beat
+        // the uninterrupted one.
+        assert!(g.timeline.total_s >= baseline.timeline.total_s - 1e-12);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn envelope_json_roundtrip_resumes_identically() {
+    let dir = stub_artifacts("env");
+    let mut cfg = config(&dir, &[0.0, 0.0]);
+    cfg.federation = FederationConfig {
+        nodes: 2,
+        migrate: true,
+        ..Default::default()
+    };
+    let tier = FrontTier::homogeneous(&cfg).unwrap();
+    let spec = GenerationSpec::new().seed(23);
+    let session = tier.node(0).core().session_for(&spec).unwrap();
+    let total = session.plan().sync_points.len();
+    let ckpt = session.execute_to_barrier(spec.seed, total / 2).unwrap();
+    let env = MigrationEnvelope::capture(&session, &ckpt, spec.seed)
+        .unwrap()
+        .expect("mid-plan barrier leaves a migratable suffix");
+
+    // Wire round-trip: serialize, re-parse, resume on the sibling.
+    let wire = json::to_string(&env.to_json());
+    let decoded =
+        MigrationEnvelope::from_json(&json::parse(&wire).unwrap())
+            .unwrap();
+    let direct = tier.resume_on(1, &env).unwrap().expect("no deferral");
+    let roundtrip =
+        tier.resume_on(1, &decoded).unwrap().expect("no deferral");
+    assert_eq!(direct.latent, roundtrip.latent);
+    assert_eq!(direct.timeline.total_s, roundtrip.timeline.total_s);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn spillover_leaves_saturated_home_ledger_untouched() {
+    let dir = stub_artifacts("spill");
+    let mut cfg = config(&dir, &[0.0, 0.0]);
+    cfg.federation = FederationConfig {
+        nodes: 2,
+        shard_policy: "hash".to_string(),
+        ..Default::default()
+    };
+    let tier = FrontTier::homogeneous(&cfg).unwrap();
+    let spec = GenerationSpec::new().seed(5);
+    let home = tier.route(&spec);
+    let sibling = 1 - home;
+
+    // Saturate the home node by holding its whole-fleet lease.
+    let held = tier
+        .node(home)
+        .try_admit()
+        .unwrap()
+        .expect("idle home must grant");
+    let home_granted = tier.node(home).fleet().granted_total();
+    let sib_granted = tier.node(sibling).fleet().granted_total();
+
+    let (id, lease) = tier
+        .admit(&spec)
+        .unwrap()
+        .expect("sibling has capacity, admission must spill");
+    assert_eq!(id, sibling, "grant must come from the spill target");
+    assert_eq!(
+        tier.node(home).fleet().granted_total(),
+        home_granted,
+        "a busy home answers busy without granting"
+    );
+    assert_eq!(
+        tier.node(sibling).fleet().granted_total(),
+        sib_granted + 1
+    );
+
+    // Both nodes saturated: admission yields None and no ledger moves.
+    let home_granted = tier.node(home).fleet().granted_total();
+    let sib_granted = tier.node(sibling).fleet().granted_total();
+    assert!(tier.admit(&spec).unwrap().is_none());
+    assert_eq!(tier.node(home).fleet().granted_total(), home_granted);
+    assert_eq!(
+        tier.node(sibling).fleet().granted_total(),
+        sib_granted
+    );
+
+    drop(lease);
+    drop(held);
+    assert_eq!(tier.node(home).fleet().in_flight(), 0);
+    assert_eq!(tier.node(sibling).fleet().in_flight(), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Recursive 1e-9 comparison of two JSON values (same shape, same
+/// strings, numbers within tolerance).
+fn assert_json_close(a: &Value, b: &Value, path: &str) {
+    match (a, b) {
+        (Value::Num(x), Value::Num(y)) => {
+            assert!(
+                (x - y).abs() <= 1e-9,
+                "{path}: {x} vs {y} differ by more than 1e-9"
+            );
+        }
+        (Value::Str(x), Value::Str(y)) => {
+            assert_eq!(x, y, "{path}: string mismatch");
+        }
+        (Value::Bool(x), Value::Bool(y)) => {
+            assert_eq!(x, y, "{path}: bool mismatch");
+        }
+        (Value::Null, Value::Null) => {}
+        (Value::Arr(xs), Value::Arr(ys)) => {
+            assert_eq!(xs.len(), ys.len(), "{path}: length mismatch");
+            for (i, (x, y)) in xs.iter().zip(ys).enumerate() {
+                assert_json_close(x, y, &format!("{path}[{i}]"));
+            }
+        }
+        (Value::Obj(xo), Value::Obj(yo)) => {
+            assert_eq!(xo.len(), yo.len(), "{path}: key-count mismatch");
+            for (k, x) in xo.iter() {
+                let y = yo
+                    .get(k)
+                    .unwrap_or_else(|| panic!("{path}.{k}: missing"));
+                assert_json_close(x, y, &format!("{path}.{k}"));
+            }
+        }
+        _ => panic!("{path}: shape mismatch"),
+    }
+}
+
+#[test]
+fn federation_frontier_matches_committed_bench() {
+    let sweep =
+        simulate_federation_frontier(&FederationSimConfig::stub_fixture());
+    // Strict win at every >= 2x point, on every trace — the tentpole
+    // claim the committed artifact makes.
+    for tr in &sweep.traces {
+        let mut asserted = 0usize;
+        for p in &tr.points {
+            if p.load_x < 2.0 {
+                continue;
+            }
+            asserted += 1;
+            assert!(
+                p.fed_mig.deadline_hit_rate
+                    > p.fed_nomig.deadline_hit_rate,
+                "{} x{}: migration must strictly win",
+                tr.trace,
+                p.load_x
+            );
+            assert!(
+                p.fed_nomig.deadline_hit_rate
+                    > p.single.deadline_hit_rate,
+                "{} x{}: federation must strictly win",
+                tr.trace,
+                p.load_x
+            );
+            assert!(p.fed_mig.migrations > 0);
+        }
+        assert!(asserted >= 2, "{}: sweep must reach 2x", tr.trace);
+    }
+
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap()
+        .join("BENCH_federation.json");
+    let committed = json::from_file(&path).unwrap_or_else(|e| {
+        panic!(
+            "BENCH_federation.json must be committed at the repo root \
+             (regenerate with scripts/gen_bench_artifacts.py): {e}"
+        )
+    });
+    assert_json_close(&sweep.to_json(), &committed, "BENCH_federation");
+}
+
+#[test]
+fn default_config_is_pre_federation_bit_exact() {
+    let dir = stub_artifacts("default");
+    let cfg = config(&dir, &[0.0, 0.4]);
+    assert_eq!(cfg.federation, FederationConfig::default());
+    assert_eq!(cfg.federation.nodes, 1);
+    assert!(!cfg.federation.migrate);
+
+    let core = EngineCore::new(cfg.clone()).unwrap();
+    let spec = GenerationSpec::new().seed(42);
+    let bare =
+        core.session_for(&spec).unwrap().execute(&spec).unwrap();
+
+    // A 1-node tier is an admission wrapper around the same engine:
+    // identical latent, identical simulated timeline.
+    let tier = FrontTier::homogeneous(&cfg).unwrap();
+    assert_eq!(tier.num_nodes(), 1);
+    assert!(!tier.migrate_enabled());
+    let (id, federated) = tier.generate(&spec).unwrap();
+    assert_eq!(id, 0);
+    assert_eq!(federated.latent, bare.latent);
+    assert_eq!(federated.timeline.total_s, bare.timeline.total_s);
+
+    // Migration entry points refuse when the config bit is off.
+    let err = tier
+        .generate_migrated(&spec, 1, 0, 0)
+        .expect_err("migrate: false must refuse the migration driver");
+    assert!(err.to_string().contains("disabled"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn excluded_device_rejoins_suffix_after_occupancy_clears() {
+    let dir = stub_artifacts("readmit");
+    // occ 0.8 -> effective speed 0.2 <= b * v_max (0.25): gpu1 is
+    // excluded by Eq. 4 at plan time.
+    let cfg = config(&dir, &[0.0, 0.8]);
+    let core = EngineCore::new(cfg).unwrap();
+    let spec = GenerationSpec::new().seed(31);
+    let session = core.session_for(&spec).unwrap();
+    let plan = session.plan();
+    let included: Vec<usize> =
+        plan.included_devices().map(|d| d.device).collect();
+    assert_eq!(
+        included,
+        vec![0],
+        "fixture must start with gpu1 excluded"
+    );
+
+    let total = plan.sync_points.len();
+    let ckpt = session.execute_to_barrier(spec.seed, total / 2).unwrap();
+    let env = MigrationEnvelope::capture(&session, &ckpt, spec.seed)
+        .unwrap()
+        .expect("interior barrier leaves a suffix");
+
+    // gpu1's occupancy cleared: resume the envelope on the same node
+    // with explicit live speeds. The suffix re-plan sees fully-fresh
+    // barrier state, so the recovered device is included — the stock
+    // mid-flight re-planner would have pinned it out forever.
+    let g = resume_envelope_on(&core, &env, &[1.0, 1.0])
+        .unwrap()
+        .expect("even suffix must not defer");
+    assert!(
+        g.stats.steps_run[1] > 0,
+        "re-admitted gpu1 must run suffix steps, got {:?}",
+        g.stats.steps_run
+    );
+    assert!(g.stats.steps_run[0] > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}

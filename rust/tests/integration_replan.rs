@@ -209,6 +209,8 @@ fn lease_restricted_replan_keys_drift_by_global_device_id() {
                 drift_threshold: 0.1,
             },
             halo: Default::default(),
+            batch: Default::default(),
+            federation: Default::default(),
         };
         cfg.validate().unwrap();
         cfg

@@ -62,7 +62,8 @@ fi
 echo "== drift determinism gate (run twice, diff pinned stats JSON)"
 DRIFT_A="$(mktemp)"
 DRIFT_B="$(mktemp)"
-trap 'rm -f "$DRIFT_A" "$DRIFT_B"' EXIT
+BENCH_TMP="$(mktemp -d)"
+trap 'rm -f "$DRIFT_A" "$DRIFT_B"; rm -rf "$BENCH_TMP"' EXIT
 STADI_REPLAN_STATS_OUT="$DRIFT_A" \
     cargo test -q "${FEATURES[@]}" --test integration_replan
 STADI_REPLAN_STATS_OUT="$DRIFT_B" \
@@ -86,19 +87,31 @@ echo "== cross-request batching gate (default + xla-backend stub)"
 cargo test -q --test integration_batch
 cargo test -q --features xla-backend --test integration_batch
 
+# Federation gate: equal-speed migration byte-identity, spill-over
+# ledger pins, the default-config bit-exactness claim, and the
+# DES-vs-committed-artifact match must hold in BOTH feature configs
+# (the envelope resume path crosses the executor/runtime boundary
+# like the halo and batching paths do).
+echo "== federation gate (default + xla-backend stub)"
+cargo test -q --test integration_federation
+cargo test -q --features xla-backend --test integration_federation
+
 # The committed perf-trajectory artifacts at the repo root must each
 # carry the displaced-halo pricing ("halo" key) — a re-anchor that
 # regenerates them without it silently drops the perf history this
 # PR pinned. scripts/gen_bench_artifacts.py regenerates them.
 # BENCH_batching.json is additionally required by name: it is the
 # throughput-vs-latency frontier tests/integration_batch.rs pins
-# against the in-process sweep.
+# against the in-process sweep. BENCH_federation.json likewise: it is
+# the deadline-hit frontier tests/integration_federation.rs pins.
 echo "== committed BENCH artifacts carry halo pricing"
-if [[ ! -e "$ROOT/BENCH_batching.json" ]]; then
-    echo "error: BENCH_batching.json missing at repo root" \
-         "(regenerate with scripts/gen_bench_artifacts.py)" >&2
-    exit 1
-fi
+for req in BENCH_batching.json BENCH_federation.json; do
+    if [[ ! -e "$ROOT/$req" ]]; then
+        echo "error: $req missing at repo root" \
+             "(regenerate with scripts/gen_bench_artifacts.py)" >&2
+        exit 1
+    fi
+done
 found=0
 for f in "$ROOT"/BENCH_*.json; do
     [[ -e "$f" ]] || continue
@@ -113,6 +126,54 @@ if [[ $found -eq 0 ]]; then
     echo "error: no committed BENCH_*.json artifacts at repo root" >&2
     exit 1
 fi
+
+# Artifact drift gate: every committed BENCH_*.json must re-derive,
+# field for field, from the analytical generator at HEAD. A code edit
+# that shifts any pinned number without regenerating the artifacts
+# (or a hand-edited artifact) fails here, naming the first divergent
+# field path.
+echo "== BENCH artifact drift gate (regenerate into tmp, compare)"
+python3 "$ROOT/scripts/gen_bench_artifacts.py" --out "$BENCH_TMP" \
+    > /dev/null
+for f in "$ROOT"/BENCH_*.json; do
+    name="$(basename "$f")"
+    if [[ ! -e "$BENCH_TMP/$name" ]]; then
+        echo "error: $name is committed but no longer emitted by" \
+             "scripts/gen_bench_artifacts.py" >&2
+        exit 1
+    fi
+    python3 - "$f" "$BENCH_TMP/$name" <<'PY'
+import json, sys
+
+def walk(a, b, path):
+    if type(a) is not type(b):
+        sys.exit(f"drift at {path}: {type(a).__name__} vs "
+                 f"{type(b).__name__}")
+    if isinstance(a, dict):
+        if list(a) != list(b):
+            sys.exit(f"drift at {path}: keys {list(a)} vs {list(b)}")
+        for k in a:
+            walk(a[k], b[k], f"{path}.{k}")
+    elif isinstance(a, list):
+        if len(a) != len(b):
+            sys.exit(f"drift at {path}: len {len(a)} vs {len(b)}")
+        for i, (x, y) in enumerate(zip(a, b)):
+            walk(x, y, f"{path}[{i}]")
+    elif isinstance(a, float) or isinstance(b, float):
+        if abs(a - b) > 1e-9:
+            sys.exit(f"drift at {path}: {a!r} vs {b!r}")
+    elif a != b:
+        sys.exit(f"drift at {path}: {a!r} vs {b!r}")
+
+committed, fresh = sys.argv[1], sys.argv[2]
+with open(committed) as fh:
+    a = json.load(fh)
+with open(fresh) as fh:
+    b = json.load(fh)
+walk(a, b, "$")
+PY
+    echo "   $name re-derives cleanly"
+done
 
 echo "== cargo doc --no-deps"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

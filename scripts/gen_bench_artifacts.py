@@ -13,13 +13,16 @@ auditable arithmetic, not snapshots of one host's wall clock. Every
 emitted file carries a `source` field saying exactly that, and a `halo`
 key (sync-vs-displaced pricing) that scripts/check.sh schema-checks.
 
-Usage: python3 scripts/gen_bench_artifacts.py  (writes BENCH_*.json
-to the repo root, i.e. the parent of this script's directory)
+Usage: python3 scripts/gen_bench_artifacts.py [--out DIR]
+(default DIR is the repo root, i.e. the parent of this script's
+directory; scripts/check.sh uses --out to re-derive the committed
+artifacts into a scratch dir and diff them field by field)
 """
 
 import json
 import math
 import os
+import sys
 
 # --- cost model (device.rs CostModel::uncalibrated) -------------------
 FIXED_S = 4e-3
@@ -384,6 +387,186 @@ def batch_frontier():
     }
 
 
+# --- federated serving DES (serve/sim.rs federation mirror) -----------
+FED_CFG = {
+    "nodes": 4,
+    "servers_per_node": 2,
+    "service_s": 1.0,
+    "segments": 4,
+    "deadline_s": 3.0,
+    "migration_s": 0.05,
+    "busy_wait_s": 1.0,
+    "spike_speed": 0.1,
+    "window_s": 5.0,
+    "n_requests": 240,
+    "load_multiples": [0.5, 1.0, 1.5, 2.0, 2.5],
+}
+
+FED_TRACES = ["bursty", "diurnal", "flash"]
+
+
+def fed_arrivals(trace, rate, n):
+    """Mirror of serve::sim::federation_arrivals (closed-form)."""
+    out = []
+    if trace == "bursty":
+        for i in range(n):
+            out.append((i // 6) * (6.0 / rate))
+    elif trace == "diurnal":
+        mult = [0.5, 1.5, 2.0, 1.0]
+        t = 0.0
+        for i in range(n):
+            q = min(i * 4 // n, 3)
+            t += 1.0 / (rate * mult[q])
+            out.append(t)
+    elif trace == "flash":
+        t = 0.0
+        for i in range(n):
+            dt = 1.0 / (3.0 * rate) if n // 3 <= i < n // 2 else 1.0 / rate
+            t += dt
+            out.append(t)
+    else:
+        raise ValueError(f"unknown federation trace {trace!r}")
+    return out
+
+
+def fed_percentile(xs, p):
+    """Mirror of serve::sim::fed_percentile — same interpolation form
+    as batch_percentile but written `lo + (hi - lo) * w`, kept digit
+    for digit with the Rust side (the two forms differ in last-ulp)."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    rank = p / 100.0 * (len(s) - 1)
+    lo = math.floor(rank)
+    hi = math.ceil(rank)
+    return s[lo] + (s[hi] - s[lo]) * (rank - lo)
+
+
+def fed_speed(cfg, node, t):
+    """Rotating brownout: floor(t / window) % nodes runs slowed."""
+    if math.floor(t / cfg["window_s"]) % cfg["nodes"] == node:
+        return cfg["spike_speed"]
+    return 1.0
+
+
+def fed_run(cfg, arrivals, mode):
+    """Mirror of serve::sim::fed_run, operation for operation.
+
+    mode is "single" | "fed_nomig" | "fed_mig". Admission probes queue
+    depth plus one service at the node's *current* speed (no future
+    knowledge of the brownout rotation); migration is a deadline
+    rescue onto an idle full-speed sibling, one hop max.
+    """
+    n_nodes = 1 if mode == "single" else cfg["nodes"]
+    free = [[0.0] * cfg["servers_per_node"] for _ in range(n_nodes)]
+    seg_work = cfg["service_s"] / cfg["segments"]
+
+    def min_server(nd):
+        k, best = 0, free[nd][0]
+        for i, f in enumerate(free[nd]):
+            if f < best:
+                k, best = i, f
+        return k, best
+
+    sojourns = []
+    migrations = spills = 0
+    last_finish = 0.0
+    for i, a in enumerate(arrivals):
+        if mode == "single":
+            node = 0
+        else:
+            home = i % cfg["nodes"]
+
+            def fin_est(nd):
+                return (
+                    max(min_server(nd)[1], a)
+                    + cfg["service_s"] / fed_speed(cfg, nd, a)
+                )
+
+            if fin_est(home) - a > cfg["busy_wait_s"]:
+                chosen, best = home, fin_est(home)
+                for nd in range(cfg["nodes"]):
+                    if fin_est(nd) < best:
+                        chosen, best = nd, fin_est(nd)
+                if chosen != home:
+                    spills += 1
+                node = chosen
+            else:
+                node = home
+        cur_k, f0 = min_server(node)
+        cur_node = node
+        t = max(a, f0)
+        migrated = False
+        for s in range(cfg["segments"]):
+            t += seg_work / fed_speed(cfg, cur_node, t)
+            if mode == "fed_mig" and not migrated and s + 1 < cfg["segments"]:
+                spd_now = fed_speed(cfg, cur_node, t)
+                if spd_now < 1.0:
+                    remaining = (cfg["segments"] - s - 1) * seg_work
+                    stay = t + remaining / spd_now
+                    best = None
+                    for nd in range(cfg["nodes"]):
+                        if nd == cur_node or fed_speed(cfg, nd, t) < 1.0:
+                            continue
+                        kk, fdest = min_server(nd)
+                        if fdest > t + cfg["migration_s"]:
+                            continue
+                        fin = max(t + cfg["migration_s"], fdest) + remaining
+                        if best is None or fin < best[0]:
+                            best = (fin, nd, kk)
+                    deadline = a + cfg["deadline_s"]
+                    if best is not None and stay > deadline \
+                            and best[0] <= deadline:
+                        fin, nd, kk = best
+                        free[cur_node][cur_k] = t
+                        t = max(t + cfg["migration_s"], free[nd][kk])
+                        cur_node, cur_k = nd, kk
+                        migrated = True
+                        migrations += 1
+        free[cur_node][cur_k] = t
+        sojourns.append(t - a)
+        if t > last_finish:
+            last_finish = t
+    hits = sum(1 for s in sojourns if s <= cfg["deadline_s"])
+    n = len(sojourns)
+    span = last_finish - arrivals[0]
+    return {
+        "deadline_hit_rate": hits / n if n else 1.0,
+        "mean_sojourn_s": sum(sojourns) / n if n else 0.0,
+        "p95_sojourn_s": fed_percentile(sojourns, 95.0),
+        "throughput_rps": n / span if span > 0.0 else 0.0,
+        "migrations": migrations,
+        "spills": spills,
+    }
+
+
+def federation_frontier():
+    """Mirror of serve::sim::simulate_federation_frontier on the
+    FederationSimConfig::stub_fixture() constants. Load multiples are
+    relative to ONE node's capacity (the no-tier baseline's ceiling);
+    tests/integration_federation.rs pins this output against the
+    in-process Rust sweep."""
+    cfg = FED_CFG
+    cap = cfg["servers_per_node"] / cfg["service_s"]
+    traces = []
+    for trace in FED_TRACES:
+        points = []
+        for load_x in cfg["load_multiples"]:
+            rate = load_x * cap
+            arr = fed_arrivals(trace, rate, cfg["n_requests"])
+            points.append(
+                {
+                    "load_x": load_x,
+                    "rate_rps": rate,
+                    "single": fed_run(cfg, arr, "single"),
+                    "fed_nomig": fed_run(cfg, arr, "fed_nomig"),
+                    "fed_mig": fed_run(cfg, arr, "fed_mig"),
+                }
+            )
+        traces.append({"trace": trace, "points": points})
+    return traces
+
+
 SOURCE = (
     "scripts/gen_bench_artifacts.py — deterministic mirror of the "
     "timeline/comm/planner arithmetic (uncalibrated cost model, stub "
@@ -402,6 +585,15 @@ def halo_entry(sync, disp, mode="displaced:1"):
 
 def main():
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out_dir = root
+    argv = sys.argv[1:]
+    if argv and argv[0] == "--out":
+        if len(argv) != 2:
+            raise SystemExit("usage: gen_bench_artifacts.py [--out DIR]")
+        out_dir = argv[1]
+        os.makedirs(out_dir, exist_ok=True)
+    elif argv:
+        raise SystemExit("usage: gen_bench_artifacts.py [--out DIR]")
 
     # --- BENCH_serving: the paper testbed plan, sync vs displaced ----
     speeds = [1.0, 0.5]
@@ -521,6 +713,29 @@ def main():
         },
     }
 
+    # --- BENCH_federation: multi-node tier + migration frontier ------
+    fed_traces = federation_frontier()
+    for tr in fed_traces:
+        for pt in tr["points"]:
+            if pt["load_x"] < 2.0:
+                continue
+            assert (
+                pt["fed_mig"]["deadline_hit_rate"]
+                > pt["fed_nomig"]["deadline_hit_rate"]
+            ), f'{tr["trace"]} x{pt["load_x"]}: migration must win'
+            assert (
+                pt["fed_nomig"]["deadline_hit_rate"]
+                > pt["single"]["deadline_hit_rate"]
+            ), f'{tr["trace"]} x{pt["load_x"]}: federation must win'
+            assert pt["fed_mig"]["migrations"] > 0
+    federation = {
+        "bench": "federation",
+        "source": "scripts/gen_bench_artifacts.py",
+        "halo": "checkpoint-migration",
+        "config": FED_CFG,
+        "traces": fed_traces,
+    }
+
     # --- BENCH_batching: fused sessions vs disjoint leases frontier --
     frontier = batch_frontier()
     for pt in frontier["points"]:
@@ -545,8 +760,9 @@ def main():
         ("BENCH_dynamic_occupancy.json", dyn),
         ("BENCH_halo.json", halo_bench),
         ("BENCH_batching.json", batching),
+        ("BENCH_federation.json", federation),
     ]:
-        path = os.path.join(root, name)
+        path = os.path.join(out_dir, name)
         with open(path, "w") as f:
             json.dump(obj, f, indent=2)
             f.write("\n")
