@@ -215,6 +215,42 @@ impl Default for FederationConfig {
     }
 }
 
+/// Graceful-degradation knobs (EXTENSION past the paper's fixed
+/// per-request quality). When enabled, the serve workers compute a
+/// backlog-pressure signal (router backlog over capacity, plus the
+/// latency predictor's deadline-budget deficit) and walk a demotion
+/// ladder instead of shedding: crossing the k-th entry of
+/// `pressure_thresholds` arms k rungs of admission-time quality-tier
+/// demotion (high → standard → draft, re-keying the plan through the
+/// `GenerationSpec` path) and, past the top threshold, mid-flight
+/// step-suffix re-quantization at the next sync barrier (the drift
+/// machinery's `requantize_suffix`, driven by queueing pressure).
+/// Every rung is priced against the request's remaining deadline
+/// budget by `predict_latency_for` — a request that still fits its
+/// SLO is never degraded — and `floor` is the tier no request is
+/// demoted below. Disabled by default: the serve path stays
+/// bit-exact to pre-degradation behavior (pinned by
+/// `tests/integration_degrade.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradeConfig {
+    pub enabled: bool,
+    /// Strictly increasing pressure levels; crossing the k-th arms k
+    /// ladder rungs. Pressure 0 (idle) is always below the first.
+    pub pressure_thresholds: Vec<f64>,
+    /// Quality tier demotion never crosses (ladder lower bound).
+    pub floor: crate::spec::Quality,
+}
+
+impl Default for DegradeConfig {
+    fn default() -> Self {
+        DegradeConfig {
+            enabled: false,
+            pressure_thresholds: vec![1.0, 2.0],
+            floor: crate::spec::Quality::Draft,
+        }
+    }
+}
+
 /// Halo-exchange mode at sync points (EXTENSION, DistriFusion-style
 /// displaced patch parallelism adapted to STADI's sync schedule).
 ///
@@ -313,6 +349,8 @@ pub struct EngineConfig {
     pub batch: BatchConfig,
     /// Multi-node federated serving; off (single node) by default.
     pub federation: FederationConfig,
+    /// Pressure-driven quality degradation; off by default.
+    pub degrade: DegradeConfig,
 }
 
 impl EngineConfig {
@@ -333,6 +371,7 @@ impl EngineConfig {
             halo: HaloMode::default(),
             batch: BatchConfig::default(),
             federation: FederationConfig::default(),
+            degrade: DegradeConfig::default(),
         }
     }
 
@@ -436,6 +475,31 @@ impl EngineConfig {
                 return Err(Error::Config(format!(
                     "unknown federation.shard_policy {other:?} \
                      (want \"least-loaded\" or \"hash\")",
+                )));
+            }
+        }
+        let th = &self.degrade.pressure_thresholds;
+        if th.is_empty() || th.len() > 8 {
+            return Err(Error::Config(format!(
+                "degrade.pressure_thresholds needs 1..=8 entries \
+                 (got {})",
+                th.len()
+            )));
+        }
+        for w in th.windows(2) {
+            if !(w[0] < w[1]) {
+                return Err(Error::Config(format!(
+                    "degrade.pressure_thresholds must be strictly \
+                     increasing (got {} then {})",
+                    w[0], w[1]
+                )));
+            }
+        }
+        for &t in th {
+            if !t.is_finite() || t <= 0.0 {
+                return Err(Error::Config(format!(
+                    "degrade.pressure_thresholds entries must be \
+                     finite and > 0 (got {t})"
                 )));
             }
         }
@@ -556,6 +620,22 @@ impl EngineConfig {
                 federation.migrate = x.as_bool()?;
             }
         }
+        let mut degrade = DegradeConfig::default();
+        if let Some(d) = v.get_opt("degrade") {
+            if let Some(x) = d.get_opt("enabled") {
+                degrade.enabled = x.as_bool()?;
+            }
+            if let Some(x) = d.get_opt("pressure_thresholds") {
+                degrade.pressure_thresholds = x
+                    .as_arr()?
+                    .iter()
+                    .map(|t| t.as_f64())
+                    .collect::<Result<Vec<f64>>>()?;
+            }
+            if let Some(x) = d.get_opt("floor") {
+                degrade.floor = crate::spec::Quality::parse(x.as_str()?)?;
+            }
+        }
         let cfg = EngineConfig {
             artifacts_dir,
             devices,
@@ -566,6 +646,7 @@ impl EngineConfig {
             halo,
             batch,
             federation,
+            degrade,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -732,6 +813,48 @@ mod tests {
         let mut bad = EngineConfig::two_gpu_default("a", &[0.0]);
         bad.federation.shard_policy = "round-robin".into();
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn degrade_defaults_off_and_parses_from_json() {
+        let cfg = EngineConfig::two_gpu_default("artifacts", &[0.0]);
+        assert!(!cfg.degrade.enabled, "degradation must default off");
+        // A config that never mentions "degrade" is the
+        // pre-degradation config exactly.
+        let text = r#"{"devices": [{"name": "g0"}]}"#;
+        let cfg = EngineConfig::from_json(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.degrade, DegradeConfig::default());
+        let text = r#"{
+            "devices": [{"name": "g0"}],
+            "degrade": {
+                "enabled": true,
+                "pressure_thresholds": [0.5, 1.5, 3.0],
+                "floor": "standard"
+            }
+        }"#;
+        let cfg = EngineConfig::from_json(&json::parse(text).unwrap()).unwrap();
+        assert!(cfg.degrade.enabled);
+        assert_eq!(cfg.degrade.pressure_thresholds, vec![0.5, 1.5, 3.0]);
+        assert_eq!(cfg.degrade.floor, crate::spec::Quality::Standard);
+        // Invalid knobs are typed config errors.
+        let mut bad = EngineConfig::two_gpu_default("a", &[0.0]);
+        bad.degrade.pressure_thresholds = vec![];
+        assert!(bad.validate().is_err());
+        let mut bad = EngineConfig::two_gpu_default("a", &[0.0]);
+        bad.degrade.pressure_thresholds = vec![2.0, 1.0];
+        assert!(bad.validate().is_err());
+        let mut bad = EngineConfig::two_gpu_default("a", &[0.0]);
+        bad.degrade.pressure_thresholds = vec![0.0];
+        assert!(bad.validate().is_err());
+        let mut bad = EngineConfig::two_gpu_default("a", &[0.0]);
+        bad.degrade.pressure_thresholds = vec![f64::NAN];
+        assert!(bad.validate().is_err());
+        // An unknown floor tier is a parse error.
+        let text = r#"{
+            "devices": [{"name": "g0"}],
+            "degrade": {"floor": "potato"}
+        }"#;
+        assert!(EngineConfig::from_json(&json::parse(text).unwrap()).is_err());
     }
 
     #[test]

@@ -24,7 +24,10 @@ use crate::model::latents::{seeded_cond, seeded_noise};
 use crate::runtime::artifacts::{ModelInfo, ResKey};
 use crate::runtime::Tensor;
 use crate::sched::plan::Plan;
-use crate::sched::replan::{drift_detected, live_speeds, replan_at_sync};
+use crate::sched::replan::{
+    drift_detected, live_speeds, replan_at_sync, requantize_plan_at_sync,
+    RePlan, RowMove,
+};
 use crate::spec::GenerationSpec;
 
 /// One mid-flight re-plan applied by a session's adaptive loop.
@@ -710,6 +713,235 @@ impl Session {
         let out = dataflow::finish(&cur, st)?;
         // Profiler feedback under *global* ids, rows normalized to
         // native-width equivalents — identical to the static path.
+        for i in 0..n {
+            if rows_run[i] > 0 {
+                let rows_eq = ((rows_run[i] as f64 * width_ratio).round()
+                    as usize)
+                    .max(1);
+                self.core.record_step(
+                    self.device_map[i],
+                    rows_eq,
+                    out.stats.compute_s[i],
+                );
+            }
+        }
+        let tl = sim.finish(&self.plan);
+        Ok(Generation {
+            latent: out.latent,
+            plan: self.plan.clone(),
+            stats: out.stats,
+            timeline: tl,
+            replans: events,
+        })
+    }
+
+    /// Degraded execution: the *pressure* twin of
+    /// [`Self::execute_adaptive_seeded`]. The request runs to the
+    /// warmup barrier in one span, then stops at every subsequent sync
+    /// barrier and asks `should_requantize` (the serve layer's
+    /// pressure ladder — see [`crate::serve::degrade`]) whether
+    /// backlog pressure has crossed the top threshold. The first
+    /// barrier where it says yes — and the suffix parity allows it —
+    /// swaps the continuation onto the
+    /// [`requantize_plan_at_sync`] coarse grid: every other remaining
+    /// fast step, both endpoints kept, so the remaining work roughly
+    /// halves while the final transition stays aligned. Exactly one
+    /// re-quantization per request (one mid-flight ladder rung), so
+    /// the quality delta stays bounded; parity deferrals retry at the
+    /// next barrier, exactly like a drift demotion.
+    ///
+    /// Row moves are accounted and charged on the virtual clock like a
+    /// drift re-plan (`charge_migration`), published halos are
+    /// refreshed at the swap barrier under a positive staleness
+    /// budget, and each applied re-quantization is reported as a
+    /// [`ReplanEvent`] on the returned generation (what
+    /// `RouterStats::requantized` counts). When `should_requantize`
+    /// never fires, the chunked execution is latent-byte-identical to
+    /// [`Self::execute_seeded`] (the same span invariant the adaptive
+    /// path pins).
+    pub fn execute_degraded_seeded(
+        &self,
+        seed: u64,
+        should_requantize: &mut dyn FnMut() -> bool,
+    ) -> Result<Generation> {
+        let exec = self.core.exec();
+        let model = self.model.clone();
+        let schedule = self.core.schedule();
+        let comm = &self.core.config().comm;
+        let drift = self.core.drift_schedule();
+        let granularity = model.row_granularity;
+        let n = self.plan.devices.len();
+
+        let width_ratio = self.model.latent_w as f64
+            / exec.manifest().model.latent_w as f64;
+        let tl_cluster =
+            crate::device::scale_cluster_per_row(&self.cluster, width_ratio);
+
+        let mut warmed: std::collections::BTreeSet<usize> = self
+            .plan
+            .included_devices()
+            .map(|d| d.rows.rows)
+            .collect();
+        let heights: Vec<usize> = warmed.iter().copied().collect();
+        exec.warm_res(self.res, &heights)?;
+
+        let noise = seeded_noise(&model, seed);
+        let cond = seeded_cond(&model, seed);
+
+        let mut st = dataflow::ExecState::new(&model, n, &noise);
+        let mut sim = timeline::SimState::new(n);
+        let mut cur = self.plan.clone();
+        let mut events: Vec<ReplanEvent> = Vec::new();
+        let mut rows_run = vec![0usize; n];
+        let mut synced_in_cur = 0usize;
+        let mut global_sync = 0usize;
+        let warmup_syncs = cur.params.m_warmup;
+        let mut requantized = false;
+
+        loop {
+            let remaining = cur.sync_points.len() - synced_in_cur;
+            if remaining == 0 {
+                break;
+            }
+            // Never thin the warmup phase (early steps set global
+            // structure — the same rule the displaced-halo fallback
+            // enforces): run to the warmup barrier in one span, then
+            // barrier-by-barrier until the one-shot fires.
+            let span = if requantized {
+                remaining
+            } else if global_sync < warmup_syncs {
+                (warmup_syncs - global_sync).min(remaining)
+            } else {
+                1
+            };
+
+            let steps_before = st.stats.steps_run.clone();
+            match self.core.mode() {
+                ExecMode::Dataflow => dataflow::run_span(
+                    exec, self.res, &model, &cur, &mut st, span, &cond,
+                    self.halo,
+                )?,
+                ExecMode::Threaded => threaded::run_span_at(
+                    exec,
+                    self.res,
+                    &model,
+                    &cur,
+                    &self.cluster,
+                    &cond,
+                    &mut st,
+                    span,
+                    true,
+                    self.halo,
+                )?,
+            }
+            timeline::simulate_span(
+                &cur,
+                &tl_cluster,
+                comm,
+                &model,
+                drift.map(|d| (d, self.device_map.as_slice())),
+                &mut sim,
+                span,
+                self.halo,
+            )?;
+            for d in cur.included_devices() {
+                let delta =
+                    st.stats.steps_run[d.device] - steps_before[d.device];
+                rows_run[d.device] += d.rows.rows * delta;
+            }
+            global_sync += span;
+            synced_in_cur += span;
+
+            if synced_in_cur >= cur.sync_points.len() {
+                break;
+            }
+            if requantized
+                || global_sync < warmup_syncs
+                || !should_requantize()
+            {
+                continue;
+            }
+            let cost_ref = if cur.params.cost_aware {
+                Some(&self.cluster[0].cost)
+            } else {
+                None
+            };
+            let newp = match requantize_plan_at_sync(
+                schedule,
+                &cur,
+                synced_in_cur,
+                cost_ref,
+                granularity,
+            )? {
+                Some(p) => p,
+                // Parity deferral (or only the final step remains):
+                // the very next barrier is re-checked anyway.
+                None => continue,
+            };
+            // Row-move accounting, shaped exactly like a drift
+            // re-plan's, so the virtual clock charges the same
+            // conservative transfer for migrated ownership.
+            let moves: Vec<RowMove> = cur
+                .devices
+                .iter()
+                .zip(&newp.devices)
+                .filter(|(o, p)| o.rows != p.rows)
+                .map(|(o, p)| RowMove {
+                    device: o.device,
+                    old: o.rows,
+                    new: p.rows,
+                })
+                .collect();
+            let rp = RePlan {
+                speeds: cur
+                    .devices
+                    .iter()
+                    .map(|d| if d.included() { d.speed } else { 0.0 })
+                    .collect(),
+                migrated_rows: moves.iter().map(|m| m.gained_rows()).sum(),
+                classes_changed: cur
+                    .devices
+                    .iter()
+                    .zip(&newp.devices)
+                    .any(|(o, p)| o.class != p.class),
+                moves,
+                plan: newp,
+            };
+            let mut fresh = Vec::new();
+            for d in rp.plan.included_devices() {
+                if warmed.insert(d.rows.rows) {
+                    fresh.push(d.rows.rows);
+                }
+            }
+            if !fresh.is_empty() {
+                exec.warm_res(self.res, &fresh)?;
+            }
+            let bytes = rp.migration_bytes(&model);
+            sim.charge_migration(comm, bytes);
+            events.push(ReplanEvent {
+                at_sync: global_sync,
+                t_now: cur.sync_points[synced_in_cur - 1],
+                live_speeds: rp.speeds.clone(),
+                migrated_rows: rp.migrated_rows,
+                migration_bytes: bytes,
+                classes_changed: rp.classes_changed,
+            });
+            // Same halo rule as a drift re-plan: the coarse grid's
+            // sync schedule is new, so published-but-unconsumed
+            // displaced halos are refreshed and charged here.
+            if self.halo.max_staleness() > 0 {
+                dataflow::refresh_buffers(&model, &cur, &mut st);
+                sim.flush_debts();
+                sim.charge_refresh(comm, &cur, &model);
+            }
+            cur = rp.plan;
+            synced_in_cur = 0;
+            st.reset_cursors();
+            sim.switch_plan();
+            requantized = true;
+        }
+
+        let out = dataflow::finish(&cur, st)?;
         for i in 0..n {
             if rows_run[i] > 0 {
                 let rows_eq = ((rows_run[i] as f64 * width_ratio).round()

@@ -253,6 +253,19 @@ fn cmd_serve(args: impl Iterator<Item = String>) -> Result<()> {
             "true|false: barrier-checkpoint migration between \
              federation nodes (empty = config default)",
             Some(""),
+        )
+        .flag(
+            "degrade",
+            "graceful degradation under overload: off | on | \
+             on:T1,T2,... (ascending pressure thresholds; empty = \
+             config default)",
+            Some(""),
+        )
+        .flag(
+            "degrade-floor",
+            "lowest quality tier the demotion ladder may serve: \
+             draft | standard | high (empty = config default)",
+            Some(""),
         );
     let p = cmd.parse(args)?;
     let mut cfg = build_config(&p)?;
@@ -273,6 +286,34 @@ fn cmd_serve(args: impl Iterator<Item = String>) -> Result<()> {
                 "--migrate {s:?} is not true|false"
             ))
         })?;
+    }
+    if let Some(s) = p.get("degrade").filter(|s| !s.trim().is_empty()) {
+        let s = s.trim();
+        if s == "off" {
+            cfg.degrade.enabled = false;
+        } else if s == "on" {
+            cfg.degrade.enabled = true;
+        } else if let Some(list) = s.strip_prefix("on:") {
+            cfg.degrade.pressure_thresholds = list
+                .split(',')
+                .map(|t| {
+                    t.trim().parse::<f64>().map_err(|_| {
+                        stadi::error::Error::Config(format!(
+                            "--degrade threshold {t:?} is not a number"
+                        ))
+                    })
+                })
+                .collect::<Result<Vec<f64>>>()?;
+            cfg.degrade.enabled = true;
+        } else {
+            return Err(stadi::error::Error::Config(format!(
+                "--degrade {s:?} is not off | on | on:T1,T2,..."
+            )));
+        }
+    }
+    if let Some(s) = p.get("degrade-floor").filter(|s| !s.trim().is_empty())
+    {
+        cfg.degrade.floor = stadi::spec::Quality::parse(s.trim())?;
     }
     cfg.validate()?;
     let listener = TcpListener::bind(p.get("addr").unwrap())?;
@@ -305,6 +346,16 @@ fn cmd_serve(args: impl Iterator<Item = String>) -> Result<()> {
     if opts.batch.enabled && opts.batch.max_batch < 2 {
         return Err(stadi::error::Error::Config(
             "batching needs --batch-max >= 2".into(),
+        ));
+    }
+    // The engine config's `degrade` block (possibly overridden above)
+    // is what the serve path arms.
+    opts.degrade = cfg.degrade.clone();
+    if opts.degrade.enabled && cfg.federation.nodes > 1 {
+        return Err(stadi::error::Error::Config(
+            "--degrade shapes one node's admission queue; it cannot \
+             be combined with a federated tier (--nodes > 1)"
+                .into(),
         ));
     }
     if cfg.federation.nodes > 1 {

@@ -39,7 +39,7 @@ use crate::model::schedule::Schedule;
 use crate::runtime::artifacts::ModelInfo;
 use crate::sched::plan::{Plan, StepSpec};
 use crate::sched::spatial::resplit_sizes;
-use crate::sched::temporal::{assign_steps, StepClass};
+use crate::sched::temporal::{assign_steps, requantize_suffix, StepClass};
 
 /// One device's row range before and after a re-plan.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -269,6 +269,65 @@ pub fn plan_suffix_on(
         &sizes,
     )
     .map(Some)
+}
+
+/// Re-quantize the remaining steps of `prev` at a sync barrier —
+/// the *pressure* lever (graceful degradation), as opposed to
+/// [`replan_at_sync`]'s *drift* lever.
+///
+/// The continuation keeps the current speeds, classes and row split
+/// intent but runs on the [`requantize_suffix`] grid: every other
+/// point of the remaining fast suffix, both endpoints kept, so the
+/// remaining work roughly halves while the final transition to the
+/// clean sample stays aligned. The coarse grid becomes the
+/// continuation's *fast* grid (Eq. 4 re-classifies over it, excluded
+/// devices stay pinned out — their buffers are stale).
+///
+/// Returns `Ok(None)` when nothing can be cheapened at this barrier:
+/// nothing executed yet / at most the final step remains, the suffix
+/// has even parity (defer one sync point, exactly like a drift
+/// demotion), the coarse grid would be a single step, or a Half-class
+/// continuation lands on an even coarse suffix. Callers should only
+/// trigger this past the warmup barrier — early denoising steps set
+/// global structure and tolerate no thinning (the same rule the
+/// displaced-halo fallback enforces).
+pub fn requantize_plan_at_sync(
+    schedule: &Schedule,
+    prev: &Plan,
+    synced: usize,
+    cost: Option<&CostModel>,
+    granularity: usize,
+) -> Result<Option<Plan>> {
+    let fast_suffix = match fast_suffix_of(prev, synced)? {
+        Some(fs) => fs,
+        None => return Ok(None),
+    };
+    if fast_suffix.len() % 2 == 0 {
+        return Ok(None); // parity deferral: retry at the next barrier
+    }
+    let coarse = requantize_suffix(&fast_suffix)?;
+    if coarse.len() < 2 {
+        return Ok(None); // only the final transition remains
+    }
+    // No re-admission (same rule as replan_at_sync): an excluded
+    // device's buffers are stale, so its speed is pinned to 0.
+    let speeds: Vec<f64> = prev
+        .devices
+        .iter()
+        .map(|d| if d.included() { d.speed } else { 0.0 })
+        .collect();
+    let names: Vec<String> =
+        prev.devices.iter().map(|d| d.name.clone()).collect();
+    plan_suffix_on(
+        schedule,
+        &coarse,
+        &prev.params,
+        &speeds,
+        &names,
+        cost,
+        prev.total_rows(),
+        granularity,
+    )
 }
 
 /// Re-plan the remaining steps of `prev` at a sync barrier.
@@ -514,6 +573,49 @@ mod tests {
             param_count: 1,
             params_seed: 0,
         }
+    }
+
+    #[test]
+    fn requantize_halves_suffix_and_keeps_endpoints() {
+        let p = StadiParams { m_base: 20, m_warmup: 2, ..Default::default() };
+        let speeds = [1.0, 1.0]; // all-Full: a sync point every step
+        let plan = build(&speeds, &p, 32);
+        // Odd-suffix barrier: 20 - 5 = 15 remaining fast steps.
+        let synced = 5;
+        let fast = fast_suffix_of(&plan, synced).unwrap().unwrap();
+        assert_eq!(fast.len(), 15);
+        let rq = requantize_plan_at_sync(&sched(), &plan, synced, None, 4)
+            .unwrap()
+            .expect("odd barrier must requantize");
+        // The coarse grid is every other fast point, endpoints kept.
+        let coarse: Vec<usize> = rq.devices[0]
+            .steps
+            .iter()
+            .map(|st| st.t_from)
+            .collect();
+        assert_eq!(coarse.len(), 8);
+        assert_eq!(coarse.first(), fast.first());
+        assert_eq!(coarse.last(), fast.last());
+        assert!(coarse.iter().all(|t| fast.contains(t)));
+        // Even-parity barrier defers.
+        assert!(requantize_plan_at_sync(&sched(), &plan, 4, None, 4)
+            .unwrap()
+            .is_none());
+        // Terminal barriers refuse.
+        let last = plan.sync_points.len();
+        assert!(requantize_plan_at_sync(&sched(), &plan, 0, None, 4)
+            .unwrap()
+            .is_none());
+        assert!(requantize_plan_at_sync(&sched(), &plan, last, None, 4)
+            .unwrap()
+            .is_none());
+        // Excluded devices stay pinned out of the cheap continuation.
+        let het = build(&[1.0, 0.1], &p, 32);
+        assert!(!het.devices[1].included());
+        let rq = requantize_plan_at_sync(&sched(), &het, 5, None, 4)
+            .unwrap()
+            .unwrap();
+        assert_eq!(rq.devices[1].class, StepClass::Excluded);
     }
 
     #[test]

@@ -1,0 +1,249 @@
+//! Pressure-driven graceful degradation: shed quality, not requests.
+//!
+//! Under backlog the router can only reject (`busy`) or expire
+//! (`deadline`). This module composes the existing levers into a
+//! *demotion ladder* instead (the quality-for-latency trade
+//! DistriFusion makes spatially with stale activations): a pure
+//! pressure signal derived from [`Router::backlog()`]
+//! (crate::serve::router::Router::backlog) and the latency
+//! predictor's deadline-budget deficit arms ladder rungs against the
+//! [`DegradeConfig::pressure_thresholds`], and each armed rung
+//! demotes the request one quality tier
+//! (high → standard → draft, re-keying the plan through the
+//! `GenerationSpec` path) — unless the request is already at the
+//! configured floor, or its predicted latency already fits the
+//! remaining deadline budget (a request that makes its SLO is never
+//! degraded). Past the *top* threshold the serve path additionally
+//! re-quantizes the running step suffix at the next sync barrier
+//! (`temporal::requantize_suffix` driven by queueing pressure instead
+//! of drift — see `Session::execute_degraded_seeded`).
+//!
+//! Everything here is a pure function of its snapshot — no clocks, no
+//! locks — so the ladder is property-testable and the DES in
+//! [`crate::serve::sim`] replays the identical arithmetic.
+
+use crate::config::DegradeConfig;
+use crate::spec::Quality;
+
+/// Safety margin applied when pricing a tier against the remaining
+/// deadline budget — the same 1.2x slack the `Deadline` gang policy
+/// uses, so "fits" means the same thing at admission and gang sizing.
+pub const PRICE_SLACK: f64 = 1.2;
+
+/// Numeric rank of a quality tier on the ladder (draft lowest). The
+/// ladder only ever moves *down* this rank, never up.
+pub fn tier_rank(q: Quality) -> u8 {
+    match q {
+        Quality::Draft => 0,
+        Quality::Standard => 1,
+        Quality::High => 2,
+    }
+}
+
+/// One rung down the ladder; draft is the bottom and maps to itself.
+pub fn demote_once(q: Quality) -> Quality {
+    match q {
+        Quality::High => Quality::Standard,
+        Quality::Standard => Quality::Draft,
+        Quality::Draft => Quality::Draft,
+    }
+}
+
+/// The backlog-pressure signal. Dimensionless, 0 when idle:
+///
+/// * queue term — `backlog / capacity`, the fraction of the router's
+///   admission budget already consumed (parked batch companions
+///   included, matching what gang policies see);
+/// * deficit term — how far the predicted latency overshoots the
+///   request's remaining deadline budget, relative to that budget
+///   (`max(0, (predicted - budget) / budget)`); 0 when either side is
+///   unknown, so deadline-less requests see pure queue pressure.
+///
+/// Both terms are snapshots; the signal is a pure function of them.
+pub fn pressure_signal(
+    backlog: usize,
+    capacity: usize,
+    predicted_s: Option<f64>,
+    budget_s: Option<f64>,
+) -> f64 {
+    let queue = if capacity == 0 {
+        0.0
+    } else {
+        backlog as f64 / capacity as f64
+    };
+    let deficit = match (predicted_s, budget_s) {
+        (Some(p), Some(b)) if b > 0.0 && p.is_finite() => {
+            ((p - b) / b).max(0.0)
+        }
+        // A deadline with no remaining budget is an unbounded deficit;
+        // cap it at one full rung worth so the signal stays finite.
+        (_, Some(b)) if b <= 0.0 => 1.0,
+        _ => 0.0,
+    };
+    queue + deficit
+}
+
+/// Number of ladder rungs the signal arms: how many thresholds the
+/// pressure has crossed. Monotone in `pressure` by construction.
+pub fn rungs(pressure: f64, thresholds: &[f64]) -> usize {
+    thresholds.iter().filter(|&&t| pressure >= t).count()
+}
+
+/// True when the pressure has crossed the *top* threshold — the level
+/// at which the serve path also re-quantizes the running suffix at
+/// the next sync barrier (mid-flight lever).
+pub fn wants_requantize(pressure: f64, thresholds: &[f64]) -> bool {
+    thresholds.last().is_some_and(|&top| pressure >= top)
+}
+
+/// Admission-time ladder walk: demote `quality` one tier per armed
+/// rung, stopping early when
+///
+/// * the tier has reached the configured floor, or
+/// * the request carries a deadline and `predict(tier)` (the
+///   planner-backed latency for the demoted spec) fits the remaining
+///   budget with [`PRICE_SLACK`] — degradation is priced, not free.
+///
+/// `predict` may return `None` (degraded/offline mode): the ladder
+/// then walks on queue pressure alone, exactly like a deadline-less
+/// request. The result is monotone non-increasing in `pressure` for a
+/// fixed snapshot, and `pressure` below the first threshold returns
+/// `quality` unchanged — both pinned by the property tests.
+pub fn admission_demotion(
+    quality: Quality,
+    pressure: f64,
+    cfg: &DegradeConfig,
+    budget_s: Option<f64>,
+    predict: &mut dyn FnMut(Quality) -> Option<f64>,
+) -> Quality {
+    if !cfg.enabled {
+        return quality;
+    }
+    let mut q = quality;
+    for _ in 0..rungs(pressure, &cfg.pressure_thresholds) {
+        if tier_rank(q) <= tier_rank(cfg.floor) {
+            break;
+        }
+        if let (Some(b), Some(p)) = (budget_s, predict(q)) {
+            if p * PRICE_SLACK <= b {
+                break; // this tier already makes the SLO: stop here
+            }
+        }
+        q = demote_once(q);
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(thresholds: &[f64], floor: Quality) -> DegradeConfig {
+        DegradeConfig {
+            enabled: true,
+            pressure_thresholds: thresholds.to_vec(),
+            floor,
+        }
+    }
+
+    #[test]
+    fn pressure_terms_compose() {
+        assert_eq!(pressure_signal(0, 8, None, None), 0.0);
+        assert!((pressure_signal(4, 8, None, None) - 0.5).abs() < 1e-12);
+        // Deficit: predicted 3s against a 2s budget = 0.5 extra.
+        let p = pressure_signal(4, 8, Some(3.0), Some(2.0));
+        assert!((p - 1.0).abs() < 1e-12);
+        // Fits budget: no deficit term.
+        let p = pressure_signal(4, 8, Some(1.0), Some(2.0));
+        assert!((p - 0.5).abs() < 1e-12);
+        // Expired budget: capped one-rung deficit, still finite.
+        let p = pressure_signal(0, 8, Some(1.0), Some(0.0));
+        assert!((p - 1.0).abs() < 1e-12);
+        assert_eq!(pressure_signal(5, 0, None, None), 0.0);
+    }
+
+    #[test]
+    fn rungs_monotone_and_top_threshold_requantizes() {
+        let th = [1.0, 2.0];
+        assert_eq!(rungs(0.0, &th), 0);
+        assert_eq!(rungs(1.0, &th), 1);
+        assert_eq!(rungs(1.5, &th), 1);
+        assert_eq!(rungs(2.5, &th), 2);
+        assert!(!wants_requantize(1.5, &th));
+        assert!(wants_requantize(2.0, &th));
+        assert!(!wants_requantize(1.0, &[]));
+    }
+
+    #[test]
+    fn ladder_respects_floor_and_pricing() {
+        let c = cfg(&[1.0, 2.0], Quality::Draft);
+        let mut no_predict = |_q: Quality| None;
+        // Zero pressure: untouched at every tier.
+        for q in [Quality::Draft, Quality::Standard, Quality::High] {
+            assert_eq!(
+                admission_demotion(q, 0.5, &c, None, &mut no_predict),
+                q
+            );
+        }
+        // Two rungs armed: high drops two tiers to the draft floor.
+        assert_eq!(
+            admission_demotion(
+                Quality::High,
+                2.5,
+                &c,
+                None,
+                &mut no_predict
+            ),
+            Quality::Draft
+        );
+        // A standard floor stops the ladder one rung up.
+        let c_std = cfg(&[1.0, 2.0], Quality::Standard);
+        assert_eq!(
+            admission_demotion(
+                Quality::High,
+                9.0,
+                &c_std,
+                None,
+                &mut no_predict
+            ),
+            Quality::Standard
+        );
+        // Pricing: a tier that fits the budget is never demoted.
+        let mut fits = |_q: Quality| Some(1.0);
+        assert_eq!(
+            admission_demotion(
+                Quality::High,
+                9.0,
+                &c,
+                Some(2.0),
+                &mut fits
+            ),
+            Quality::High
+        );
+        // ... but a tier that blows the budget walks down.
+        let mut blows = |_q: Quality| Some(10.0);
+        assert_eq!(
+            admission_demotion(
+                Quality::High,
+                1.5,
+                &c,
+                Some(2.0),
+                &mut blows
+            ),
+            Quality::Standard
+        );
+        // Disabled config is the identity regardless of pressure.
+        let mut off = c.clone();
+        off.enabled = false;
+        assert_eq!(
+            admission_demotion(
+                Quality::High,
+                9.0,
+                &off,
+                None,
+                &mut no_predict
+            ),
+            Quality::High
+        );
+    }
+}

@@ -12,6 +12,7 @@
 //! lease lifecycle, and locking rules.
 
 pub mod batch;
+pub mod degrade;
 pub mod protocol;
 pub mod router;
 pub mod server;

@@ -24,7 +24,7 @@
 //! can enqueue jobs bundled with their reply route while unit tests
 //! use bare [`Job`]s (the default payload type).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
@@ -165,8 +165,15 @@ pub struct RouterStats {
     pub failed: u64,
     /// Dequeued after their deadline had already passed (subset of
     /// whatever outcome the caller then records — the serve worker
-    /// records them as failed).
+    /// records them as failed). Counts both dequeue-time expiries and
+    /// entries moved to the expiry pen by the slot sweep.
     pub deadline_shed: u64,
+    /// Requests the degradation ladder demoted at admission (one per
+    /// request, however many rungs it walked).
+    pub demoted: u64,
+    /// Requests whose running step suffix was re-quantized mid-flight
+    /// at a sync barrier under queueing pressure.
+    pub requantized: u64,
     pub queue_len: usize,
     /// Requests currently parked in a batching admission window
     /// (popped by a worker, not yet executing). Part of the backlog
@@ -192,6 +199,12 @@ pub struct RouterStats {
 
 struct Inner<T> {
     queue: BTreeMap<OrderKey, T>,
+    /// Expiry pen: entries whose deadline passed while queued, moved
+    /// out of the queue by the slot sweep so they stop occupying
+    /// admission capacity. They still surface to workers (ahead of
+    /// live work) as [`Dequeued::Expired`] so their clients get a
+    /// typed `deadline` answer.
+    expired: VecDeque<T>,
     next_seq: u64,
     closed: bool,
     admitted: u64,
@@ -200,6 +213,8 @@ struct Inner<T> {
     completed: u64,
     failed: u64,
     deadline_shed: u64,
+    demoted: u64,
+    requantized: u64,
     parked: usize,
     batched: u64,
     solo: u64,
@@ -222,6 +237,7 @@ impl<T: Prioritized> Router<T> {
             capacity: capacity.max(1),
             inner: Mutex::new(Inner {
                 queue: BTreeMap::new(),
+                expired: VecDeque::new(),
                 next_seq: 0,
                 closed: false,
                 admitted: 0,
@@ -230,6 +246,8 @@ impl<T: Prioritized> Router<T> {
                 completed: 0,
                 failed: 0,
                 deadline_shed: 0,
+                demoted: 0,
+                requantized: 0,
                 parked: 0,
                 batched: 0,
                 solo: 0,
@@ -245,13 +263,39 @@ impl<T: Prioritized> Router<T> {
         self.capacity
     }
 
+    /// Move already-expired entries from the queue into the expiry
+    /// pen, freeing their admission slots. Dequeue-only shedding left
+    /// long-expired requests occupying router capacity during a storm
+    /// (no worker reached them, so they blocked fresh admissions with
+    /// `busy`); the sweep runs on every `submit`/`park`/`backlog` so
+    /// capacity always reflects live demand. Returns how many moved.
+    fn sweep_expired_locked(g: &mut Inner<T>) -> usize {
+        let now = Instant::now();
+        let stale: Vec<OrderKey> = g
+            .queue
+            .iter()
+            .filter(|(k, _)| k.deadline.0.is_some_and(|d| d < now))
+            .map(|(k, _)| *k)
+            .collect();
+        let n = stale.len();
+        for key in stale {
+            let item = g.queue.remove(&key).expect("key just seen");
+            g.deadline_shed += 1;
+            g.expired.push_back(item);
+        }
+        n
+    }
+
     /// Admit an item, or reject with backpressure when full / closed.
+    /// Expired entries are swept out of the queue first so they never
+    /// hold admission slots against live traffic.
     pub fn submit(&self, item: T) -> Result<()> {
         let mut g = self.inner.lock().unwrap();
         if g.closed {
             g.rejected += 1;
             return Err(Error::Shutdown);
         }
+        Self::sweep_expired_locked(&mut g);
         if g.queue.len() >= self.capacity {
             g.rejected += 1;
             return Err(Error::Busy { queue_depth: g.queue.len() });
@@ -275,6 +319,11 @@ impl<T: Prioritized> Router<T> {
     pub fn pop(&self) -> Option<Dequeued<T>> {
         let mut g = self.inner.lock().unwrap();
         loop {
+            // Swept corpses first: their shed was counted at sweep
+            // time, and answering them is cheaper than any live run.
+            if let Some(item) = g.expired.pop_front() {
+                return Some(Dequeued::Expired(item));
+            }
             if let Some((key, item)) = g.queue.pop_first() {
                 if key.deadline.0.is_some_and(|d| d < Instant::now()) {
                     g.deadline_shed += 1;
@@ -311,6 +360,11 @@ impl<T: Prioritized> Router<T> {
     ) -> Option<Dequeued<T>> {
         let mut g = self.inner.lock().unwrap();
         loop {
+            // Swept corpses consume the gatherer's attention exactly
+            // like a dequeue-time expiry would (already shed-counted).
+            if let Some(item) = g.expired.pop_front() {
+                return Some(Dequeued::Expired(item));
+            }
             let found =
                 g.queue.iter().find(|(_, t)| pred(t)).map(|(k, _)| *k);
             if let Some(key) = found {
@@ -342,8 +396,10 @@ impl<T: Prioritized> Router<T> {
     pub fn drain_close(&self) -> Vec<T> {
         let mut g = self.inner.lock().unwrap();
         g.closed = true;
-        let drained: Vec<T> =
-            std::mem::take(&mut g.queue).into_values().collect();
+        // Penned expiries first (oldest debt), then queue order: every
+        // submitter still waiting gets an answer.
+        let mut drained: Vec<T> = std::mem::take(&mut g.expired).into();
+        drained.extend(std::mem::take(&mut g.queue).into_values());
         self.available.notify_all();
         drained
     }
@@ -367,7 +423,12 @@ impl<T: Prioritized> Router<T> {
     /// left the queue) yet still represent waiting demand, so
     /// [`Router::backlog`] counts them.
     pub fn park(&self, n: usize) {
-        self.inner.lock().unwrap().parked += n;
+        let mut g = self.inner.lock().unwrap();
+        let swept = Self::sweep_expired_locked(&mut g);
+        g.parked += n;
+        if swept > 0 {
+            self.available.notify_all();
+        }
     }
 
     /// Un-park `n` requests (their fused session is dispatching, or
@@ -383,7 +444,11 @@ impl<T: Prioritized> Router<T> {
     /// policies should see, otherwise a full admission window looks
     /// like an idle server and the policy hands out oversized gangs.
     pub fn backlog(&self) -> usize {
-        let g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap();
+        let swept = Self::sweep_expired_locked(&mut g);
+        if swept > 0 {
+            self.available.notify_all();
+        }
         g.queue.len() + g.parked
     }
 
@@ -408,6 +473,15 @@ impl<T: Prioritized> Router<T> {
         self.inner.lock().unwrap().inadmissible += 1;
     }
 
+    /// Record graceful-degradation activity: requests demoted at
+    /// admission and suffixes re-quantized mid-flight. Workers (or the
+    /// runner, at shutdown) accumulate these into the stats snapshot.
+    pub fn record_degrade(&self, demoted: u64, requantized: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.demoted += demoted;
+        g.requantized += requantized;
+    }
+
     /// Record the outcome of one executed item (workers call this).
     pub fn record_outcome(&self, ok: bool, latency_s: f64) {
         let mut g = self.inner.lock().unwrap();
@@ -428,6 +502,8 @@ impl<T: Prioritized> Router<T> {
             completed: g.completed,
             failed: g.failed,
             deadline_shed: g.deadline_shed,
+            demoted: g.demoted,
+            requantized: g.requantized,
             queue_len: g.queue.len(),
             parked: g.parked,
             batched: g.batched,
@@ -565,6 +641,64 @@ mod tests {
             Dequeued::Expired(j) => panic!("{} wrongly shed", j.id),
         }
         assert_eq!(r.stats().deadline_shed, 1);
+    }
+
+    #[test]
+    fn expiry_sweep_frees_router_slots() {
+        // Satellite fix pin: dequeue-only shedding let long-expired
+        // requests occupy router slots during a storm — a full queue
+        // of corpses bounced every fresh admission with `busy` until a
+        // worker happened by. The sweep must free ALL such slots.
+        let r: Router<Job> = Router::new(4);
+        for i in 0..4 {
+            r.submit(Job::new(
+                format!("stale{i}"),
+                GenerationSpec::new().deadline_s(0.005),
+            ))
+            .unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        // Sweep (here via the backlog probe every worker loop makes):
+        // all four slots freed, all four shed-counted.
+        assert_eq!(r.backlog(), 0);
+        assert_eq!(r.queue_len(), 0);
+        assert_eq!(r.stats().deadline_shed, 4);
+        // The freed-slot count is exactly the capacity: four fresh
+        // submissions all admit where previously all four bounced.
+        for i in 0..4u64 {
+            r.submit(job(&format!("fresh{i}"), i)).unwrap();
+        }
+        assert_eq!(r.queue_len(), 4);
+        let s = r.stats();
+        assert_eq!(s.admitted, 8);
+        assert_eq!(s.rejected, 0);
+        // Swept corpses still reach workers (ahead of live work) as
+        // Expired so their clients get the typed deadline answer —
+        // and never double-count the shed stat.
+        for i in 0..4 {
+            match r.pop().unwrap() {
+                Dequeued::Expired(j) => {
+                    assert_eq!(j.id, format!("stale{i}"))
+                }
+                Dequeued::Ready(j) => {
+                    panic!("{} should have expired", j.id)
+                }
+            }
+        }
+        assert_eq!(pop_ready(&r).id, "fresh0");
+        assert_eq!(r.stats().deadline_shed, 4, "no double count");
+    }
+
+    #[test]
+    fn degrade_counters_accumulate_into_stats() {
+        let r: Router<u64> = Router::new(4);
+        let s = r.stats();
+        assert_eq!((s.demoted, s.requantized), (0, 0));
+        r.record_degrade(2, 1);
+        r.record_degrade(1, 0);
+        let s = r.stats();
+        assert_eq!(s.demoted, 3);
+        assert_eq!(s.requantized, 1);
     }
 
     #[test]

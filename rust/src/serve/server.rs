@@ -31,15 +31,16 @@ use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::config::BatchConfig;
+use crate::config::{BatchConfig, DegradeConfig};
 use crate::coordinator::{EngineCore, FusedJoiner, Generation};
 use crate::error::{Error, Result};
 use crate::federation::FrontTier;
 use crate::fleet::{FleetManager, GangPolicy};
 use crate::serve::batch::{BatchGates, FuseKey, JoinReply, Offer};
+use crate::serve::degrade;
 use crate::serve::protocol::{self, WireRequest};
 use crate::serve::router::{Dequeued, Job, Prioritized, Router, RouterStats};
-use crate::spec::GenerationSpec;
+use crate::spec::{GenerationSpec, Quality};
 use crate::util::{json, stats};
 
 /// How often blocked accept/read calls re-check shutdown flags.
@@ -72,6 +73,11 @@ pub struct ServeOptions {
     /// default: the solo path is pinned byte-identical to pre-batching
     /// behavior.
     pub batch: BatchConfig,
+    /// Graceful degradation under overload (pressure-driven quality
+    /// demotion + mid-flight suffix re-quantization). Disabled by
+    /// default: the serve path is pinned bit-exact to pre-degrade
+    /// behavior.
+    pub degrade: DegradeConfig,
 }
 
 impl Default for ServeOptions {
@@ -82,6 +88,7 @@ impl Default for ServeOptions {
             max_requests: 0,
             max_connections: 256,
             batch: BatchConfig::default(),
+            degrade: DegradeConfig::default(),
         }
     }
 }
@@ -143,6 +150,37 @@ pub trait JobRunner: Send + Sync + 'static {
             })
             .collect()
     }
+
+    /// Admission-time shaping hook, called by the worker on a freshly
+    /// popped job *before* it is fuse-keyed or executed. A
+    /// pressure-aware runner may rewrite the spec here (quality-tier
+    /// demotion under backlog); the default leaves it untouched.
+    fn shape(&self, job: &mut Job, backlog: usize) {
+        let _ = (job, backlog);
+    }
+
+    /// [`JobRunner::run_batched`] with a *live* backlog probe in
+    /// addition to the dispatch-time snapshot, so a degradation-aware
+    /// runner can re-read queueing pressure at mid-flight sync
+    /// barriers. The default ignores the probe — behavior identical to
+    /// `run_batched` — so plain runners never see it.
+    fn run_batched_live(
+        &self,
+        jobs: &[Job],
+        backlog: usize,
+        live_backlog: &dyn Fn() -> usize,
+        record: &dyn Fn(usize),
+    ) -> Vec<(bool, String)> {
+        let _ = live_backlog;
+        self.run_batched(jobs, backlog, record)
+    }
+
+    /// Cumulative graceful-degradation counters
+    /// `(demoted, requantized)` the server folds into the router's
+    /// final stats snapshot at shutdown. The default reports none.
+    fn degrade_counts(&self) -> (u64, u64) {
+        (0, 0)
+    }
 }
 
 /// Production runner: one fresh [`Session`](crate::coordinator::Session)
@@ -156,6 +194,7 @@ pub struct SessionRunner {
     core: Arc<EngineCore>,
     fleet: Option<(FleetManager, Arc<dyn GangPolicy>)>,
     batch: Option<BatchRuntime>,
+    degrade: Option<DegradeState>,
 }
 
 /// Batching state owned by the runner: the config plus the live
@@ -165,11 +204,22 @@ struct BatchRuntime {
     gates: BatchGates,
 }
 
+/// Degradation state owned by the runner: the ladder config, the
+/// router capacity the pressure signal normalizes against, and the
+/// cumulative activity counters the server folds into the router's
+/// final stats at shutdown.
+struct DegradeState {
+    cfg: DegradeConfig,
+    queue_capacity: usize,
+    demoted: AtomicU64,
+    requantized: AtomicU64,
+}
+
 impl SessionRunner {
     /// Whole-cluster sessions (PR 1 behavior — equivalent to a fleet
     /// under the `AllGpus` policy, without the ledger).
     pub fn new(core: Arc<EngineCore>) -> Self {
-        SessionRunner { core, fleet: None, batch: None }
+        SessionRunner { core, fleet: None, batch: None, degrade: None }
     }
 
     /// Gang-partitioned sessions: acquire a policy-chosen lease per
@@ -180,7 +230,35 @@ impl SessionRunner {
         fleet: FleetManager,
         policy: Arc<dyn GangPolicy>,
     ) -> Self {
-        SessionRunner { core, fleet: Some((fleet, policy)), batch: None }
+        SessionRunner {
+            core,
+            fleet: Some((fleet, policy)),
+            batch: None,
+            degrade: None,
+        }
+    }
+
+    /// Enable the graceful-degradation ladder (no-op when
+    /// `cfg.enabled` is false — the default path stays bit-exact):
+    /// popped jobs walk the admission demotion ladder against the live
+    /// backlog, and solo sessions re-quantize their running step
+    /// suffix at a sync barrier once pressure crosses the top
+    /// threshold. `queue_capacity` is the router capacity the pressure
+    /// signal normalizes the backlog against.
+    pub fn with_degrade(
+        mut self,
+        cfg: &DegradeConfig,
+        queue_capacity: usize,
+    ) -> Self {
+        if cfg.enabled {
+            self.degrade = Some(DegradeState {
+                cfg: cfg.clone(),
+                queue_capacity: queue_capacity.max(1),
+                demoted: AtomicU64::new(0),
+                requantized: AtomicU64::new(0),
+            });
+        }
+        self
     }
 
     /// Enable cross-request batching (no-op when `cfg.enabled` is
@@ -237,6 +315,101 @@ impl SessionRunner {
                 self.core.session_for_on(spec, &lease)?.execute(spec)
             }
         }
+    }
+
+    /// Solo generation with the mid-flight degradation lever armed:
+    /// identical planning/leasing to [`SessionRunner::generate`], but
+    /// executed through `Session::execute_degraded_seeded`, which asks
+    /// `should_requantize` at each post-warmup sync barrier and — at
+    /// most once per request — halves the remaining fast-grid step
+    /// suffix. The probe fires only when live queueing pressure sits
+    /// past the *top* threshold, the (possibly already demoted) tier
+    /// is above the configured floor, and the predicted latency does
+    /// not already fit the remaining deadline budget. With mid-flight
+    /// re-planning enabled the drift-adaptive loop keeps precedence
+    /// and only admission demotion applies.
+    fn generate_degraded(
+        &self,
+        job: &Job,
+        queued: usize,
+        live_backlog: &dyn Fn() -> usize,
+    ) -> Result<Generation> {
+        let Some(ds) = &self.degrade else {
+            return self.generate(job, queued);
+        };
+        if self.core.config().replan.enabled {
+            return self.generate(job, queued);
+        }
+        let spec = &job.spec;
+        let n_dev = self.core.effective_speeds().len();
+        let all: Vec<usize> = (0..n_dev).collect();
+        // Full-request prediction at the current (post-shape) tier: a
+        // conservative ceiling on the remaining work, so "fits the
+        // budget" can only become false as the deadline burns down.
+        let predicted = self.core.predict_latency_for(spec, &all).ok();
+        let deadline = job.deadline;
+        let at_floor = degrade::tier_rank(spec.quality)
+            <= degrade::tier_rank(ds.cfg.floor);
+        let thresholds = ds.cfg.pressure_thresholds.clone();
+        let capacity = ds.queue_capacity;
+        let mut should = move || {
+            if at_floor {
+                return false;
+            }
+            let budget = deadline.map(|d| {
+                let now = Instant::now();
+                if d >= now {
+                    (d - now).as_secs_f64()
+                } else {
+                    -((now - d).as_secs_f64())
+                }
+            });
+            if let (Some(b), Some(p)) = (budget, predicted) {
+                if p * degrade::PRICE_SLACK <= b {
+                    return false; // still makes the SLO untouched
+                }
+            }
+            let pressure = degrade::pressure_signal(
+                live_backlog(),
+                capacity,
+                predicted,
+                budget,
+            );
+            degrade::wants_requantize(pressure, &thresholds)
+        };
+        let g = match &self.fleet {
+            None => self
+                .core
+                .session_for(spec)?
+                .execute_degraded_seeded(spec.seed, &mut should)?,
+            Some((fleet, policy)) => {
+                let core = Arc::clone(&self.core);
+                let spec_for_predict = spec.clone();
+                let max_gang = self.core.max_gang_for(spec)?;
+                let predict = move |gang: &[usize]| {
+                    if gang.len() > max_gang {
+                        return None;
+                    }
+                    core.predict_latency_for(&spec_for_predict, gang).ok()
+                };
+                let lease = fleet.acquire_for(
+                    policy.as_ref(),
+                    &self.core.effective_speeds(),
+                    Some(&predict),
+                    queued,
+                    spec.priority,
+                    job.deadline,
+                )?;
+                self.core
+                    .session_for_on(spec, &lease)?
+                    .execute_degraded_seeded(spec.seed, &mut should)?
+            }
+        };
+        // One `ReplanEvent` per fired re-quantization (the degraded
+        // loop emits nothing else) — this is what
+        // `RouterStats::requantized` counts.
+        ds.requantized.fetch_add(g.replans.len() as u64, Ordering::Relaxed);
+        Ok(g)
     }
 
     /// Found one fused session for a gathered group: a single lease
@@ -393,6 +566,100 @@ impl JobRunner for SessionRunner {
             .map(FuseKey::from_signature)
     }
 
+    /// Admission-time rung walk: demote the request's quality tier
+    /// against the popped backlog pressure, each rung priced by the
+    /// planner-backed latency predictor against the remaining deadline
+    /// budget and floored at `DegradeConfig::floor`. Requests carrying
+    /// an explicit step count pin their plan and are never reshaped.
+    /// Runs before the job is fuse-keyed, so batching groups form on
+    /// the demoted spec.
+    fn shape(&self, job: &mut Job, backlog: usize) {
+        let Some(ds) = &self.degrade else { return };
+        if job.spec.steps.is_some() {
+            return;
+        }
+        let budget = job.deadline_slack_s();
+        let n_dev = self.core.effective_speeds().len();
+        let all: Vec<usize> = (0..n_dev).collect();
+        let spec = job.spec.clone();
+        let core = &self.core;
+        let mut predict = |q: Quality| {
+            core.predict_latency_for(&spec.clone().quality(q), &all).ok()
+        };
+        let pressure = degrade::pressure_signal(
+            backlog,
+            ds.queue_capacity,
+            predict(job.spec.quality),
+            budget,
+        );
+        let demoted = degrade::admission_demotion(
+            job.spec.quality,
+            pressure,
+            &ds.cfg,
+            budget,
+            &mut predict,
+        );
+        if demoted != job.spec.quality {
+            crate::log_debug!(
+                "serve",
+                "degrade: {} {} -> {} (pressure {:.2})",
+                job.id,
+                job.spec.quality.as_str(),
+                demoted.as_str(),
+                pressure
+            );
+            job.spec.quality = demoted;
+            ds.demoted.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Solo jobs run with the mid-flight re-quantization lever armed
+    /// (live backlog probed at sync barriers). Fused groups — and any
+    /// job that could still join one — keep the plain batched path:
+    /// thinning a shared lockstep schedule would degrade every member,
+    /// so the mid-flight lever is solo-only by design.
+    fn run_batched_live(
+        &self,
+        jobs: &[Job],
+        backlog: usize,
+        live_backlog: &dyn Fn() -> usize,
+        record: &dyn Fn(usize),
+    ) -> Vec<(bool, String)> {
+        if jobs.len() == 1
+            && self.degrade.is_some()
+            && self.fuse_key(&jobs[0]).is_none()
+        {
+            let job = &jobs[0];
+            record(1);
+            let t0 = Instant::now();
+            return vec![match self.generate_degraded(
+                job,
+                backlog,
+                live_backlog,
+            ) {
+                Ok(g) => {
+                    let wall = t0.elapsed().as_secs_f64();
+                    (
+                        true,
+                        protocol::response_line(&job.id, &job.spec, &g, wall),
+                    )
+                }
+                Err(e) => (false, protocol::error_line(&job.id, &e)),
+            }];
+        }
+        self.run_batched(jobs, backlog, record)
+    }
+
+    fn degrade_counts(&self) -> (u64, u64) {
+        match &self.degrade {
+            Some(ds) => (
+                ds.demoted.load(Ordering::Relaxed),
+                ds.requantized.load(Ordering::Relaxed),
+            ),
+            None => (0, 0),
+        }
+    }
+
     fn run_batched(
         &self,
         jobs: &[Job],
@@ -505,8 +772,11 @@ pub fn serve(
     opts: ServeOptions,
     stop: Option<Arc<AtomicBool>>,
 ) -> Result<u64> {
-    let runner =
-        Arc::new(SessionRunner::new(core).with_batching(&opts.batch));
+    let runner = Arc::new(
+        SessionRunner::new(core)
+            .with_batching(&opts.batch)
+            .with_degrade(&opts.degrade, opts.queue_capacity),
+    );
     serve_with(runner, listener, opts, stop)
 }
 
@@ -531,7 +801,8 @@ pub fn serve_fleet(
     );
     let runner = Arc::new(
         SessionRunner::with_fleet(core, fleet, policy)
-            .with_batching(&opts.batch),
+            .with_batching(&opts.batch)
+            .with_degrade(&opts.degrade, opts.queue_capacity),
     );
     serve_with(runner, listener, opts, stop)
 }
@@ -660,7 +931,7 @@ pub fn serve_with_stats(
                     // Deadline shed: the router hands expired jobs
                     // back instead of running them — answer with the
                     // typed `deadline` code and count a failure.
-                    let leader = match popped {
+                    let mut leader = match popped {
                         Dequeued::Ready(t) => t,
                         Dequeued::Expired(t) => {
                             answer_expired(&router, &t);
@@ -668,6 +939,11 @@ pub fn serve_with_stats(
                             continue;
                         }
                     };
+                    // Admission-time degradation: a pressure-aware
+                    // runner may demote the request's quality tier
+                    // here, before the job is fuse-keyed or executed
+                    // (the default hook is a no-op).
+                    runner.shape(&mut leader.job, router.backlog());
                     // Batching: park the leader through a bounded
                     // admission window and gather fuse-compatible
                     // companions off the queue. Parked requests left
@@ -711,13 +987,19 @@ pub fn serve_with_stats(
                     let jobs: Vec<Job> =
                         group.iter().map(|c| c.job.clone()).collect();
                     let backlog = router.backlog();
+                    let live_backlog = || router.backlog();
                     let results = std::panic::catch_unwind(
                         std::panic::AssertUnwindSafe(|| {
-                            runner.run_batched(&jobs, backlog, &|size| {
-                                if size > 0 {
-                                    router.record_batch(size);
-                                }
-                            })
+                            runner.run_batched_live(
+                                &jobs,
+                                backlog,
+                                &live_backlog,
+                                &|size| {
+                                    if size > 0 {
+                                        router.record_batch(size);
+                                    }
+                                },
+                            )
                         }),
                     )
                     .unwrap_or_else(|_| {
@@ -819,6 +1101,13 @@ pub fn serve_with_stats(
     for c in conns {
         let _ = c.join();
     }
+    // Fold the runner's cumulative degradation activity into the final
+    // snapshot (counters live on the runner so the ladder needs no
+    // router handle).
+    let (demoted, requantized) = runner.degrade_counts();
+    if demoted > 0 || requantized > 0 {
+        router.record_degrade(demoted, requantized);
+    }
     let s = router.stats();
     // latency_summary already carries n/mean/p50/p95/max; the same
     // figures are available structured on the returned RouterStats.
@@ -826,7 +1115,7 @@ pub fn serve_with_stats(
         "serve",
         "done: admitted={} rejected={} inadmissible={} completed={} \
          failed={} batched={} solo={} fused_sessions={} \
-         mean_fused={:.2} ({})",
+         mean_fused={:.2} demoted={} requantized={} ({})",
         s.admitted,
         s.rejected,
         s.inadmissible,
@@ -836,6 +1125,8 @@ pub fn serve_with_stats(
         s.solo,
         s.fused_sessions,
         s.mean_fused,
+        s.demoted,
+        s.requantized,
         s.latency_summary
     );
     match accept_err {

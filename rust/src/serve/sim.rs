@@ -1745,6 +1745,381 @@ impl FederationFrontier {
     }
 }
 
+// --- Graceful-degradation DES (quality ladder, BENCH_degradation) ----
+
+/// Fixture for the degradation frontier sweep: `servers` identical
+/// workers, one request in service per worker, per-tier service cost
+/// `service_s * Quality::factor()` (draft 0.5x / standard 1.0x / high
+/// 1.5x — the same knob the real `GenerationSpec` path re-keys on
+/// demotion). A brownout rotates through the pool — during the k-th
+/// `window_s` window server `k % servers` runs at `brownout_speed` —
+/// so requests admitted against full-speed predictions keep getting
+/// blindsided mid-flight, which is what arms the barrier
+/// re-quantization lever on top of admission demotion.
+///
+/// Each sweep point replays the identical arrival train with the
+/// ladder OFF and ON (paired comparison, not sampled); the ON side
+/// runs the *real* ladder arithmetic —
+/// [`degrade::pressure_signal`](crate::serve::degrade::pressure_signal),
+/// [`degrade::admission_demotion`](crate::serve::degrade::admission_demotion),
+/// [`degrade::wants_requantize`](crate::serve::degrade::wants_requantize)
+/// — against a queue-depth snapshot and the per-request deadline
+/// budget, so the bench exercises the shipped demotion code, not a
+/// re-derivation of it.
+///
+/// `scripts/gen_bench_artifacts.py` mirrors this arithmetic
+/// operation-for-operation (same constants, same greedy admission,
+/// same ladder walk) to emit `BENCH_degradation.json`; keep the two
+/// in sync.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradeSimConfig {
+    /// Concurrent requests (worker pool size).
+    pub servers: usize,
+    /// Full-speed service time of a standard-tier request.
+    pub service_s: f64,
+    /// Latency SLO for the deadline-hit-rate column.
+    pub deadline_s: f64,
+    /// The ladder under test: thresholds + floor. `enabled` must stay
+    /// true — the OFF side of the pair skips the ladder wholesale
+    /// rather than threading a second config through.
+    pub degrade: crate::config::DegradeConfig,
+    /// Router admission budget the queue term normalizes by.
+    pub queue_capacity: usize,
+    /// Relative speed of the browned-out server during its window.
+    pub brownout_speed: f64,
+    /// Length of one brownout window; the slowed server is
+    /// `floor(t / window_s) % servers`.
+    pub window_s: f64,
+    /// Requests per sweep point.
+    pub n_requests: usize,
+    /// Offered-load multiples of the full-speed pool capacity.
+    pub load_multiples: Vec<f64>,
+}
+
+impl DegradeSimConfig {
+    /// The fixture shared with `scripts/gen_bench_artifacts.py` and
+    /// `BENCH_degradation.json`.
+    pub fn stub_fixture() -> Self {
+        DegradeSimConfig {
+            servers: 3,
+            service_s: 1.0,
+            deadline_s: 3.0,
+            degrade: crate::config::DegradeConfig {
+                enabled: true,
+                pressure_thresholds: vec![0.8, 1.6],
+                floor: crate::spec::Quality::Draft,
+            },
+            queue_capacity: 6,
+            brownout_speed: 0.25,
+            window_s: 5.0,
+            n_requests: 240,
+            load_multiples: vec![1.0, 1.5, 2.0, 2.5, 3.0],
+        }
+    }
+
+    /// Saturation throughput of the full-speed pool over the request
+    /// mix — the tier cycle's mean factor is exactly 1.0, so this is
+    /// just `servers / service_s` — the sweep's load unit.
+    pub fn capacity_rps(&self) -> f64 {
+        self.servers as f64 / self.service_s
+    }
+}
+
+/// The arrival tier of request `i`: the train cycles high / standard
+/// / draft, so every third request already sits on the default floor
+/// and exercises the "nothing below you" branch of the ladder.
+pub fn degrade_tier(i: usize) -> crate::spec::Quality {
+    use crate::spec::Quality;
+    match i % 3 {
+        0 => Quality::High,
+        1 => Quality::Standard,
+        _ => Quality::Draft,
+    }
+}
+
+/// Deterministic steady arrival train at `rate` rps — closed-form,
+/// RNG-free, starting at t = 0.
+pub fn degradation_arrivals(rate: f64, n: usize) -> Vec<f64> {
+    (0..n).map(|i| i as f64 / rate).collect()
+}
+
+/// Server `server`'s relative speed at time `t`: the brownout
+/// rotates, one server at a time, every `window_s`.
+fn degrade_speed(cfg: &DegradeSimConfig, server: usize, t: f64) -> f64 {
+    if (t / cfg.window_s).floor() as usize % cfg.servers == server {
+        cfg.brownout_speed
+    } else {
+        1.0
+    }
+}
+
+/// Per-side outcome at one load point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradeSideStats {
+    /// Fraction of requests finishing within `deadline_s`.
+    pub deadline_hit_rate: f64,
+    pub mean_sojourn_s: f64,
+    pub p95_sojourn_s: f64,
+    /// Completed requests over the arrival-to-last-finish span.
+    pub throughput_rps: f64,
+    /// Requests demoted at least one tier at admission.
+    pub demoted: usize,
+    /// Requests whose step suffix was re-quantized at the barrier.
+    pub requantized: usize,
+    /// Mean *served* tier rank (draft 0 .. high 2); the arrival mix
+    /// averages exactly 1.0, so the gap to 1.0 is the quality paid.
+    pub mean_tier: f64,
+    /// Lowest served tier rank — the floor guarantee, pinned.
+    pub min_tier: u8,
+}
+
+/// One point of the sweep: the same arrival train with the ladder
+/// OFF and ON.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradationPoint {
+    pub load_x: f64,
+    pub rate_rps: f64,
+    pub off: DegradeSideStats,
+    pub on: DegradeSideStats,
+}
+
+/// The full frontier, JSON-serializable for `BENCH_degradation.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradationFrontier {
+    pub config: DegradeSimConfig,
+    pub points: Vec<DegradationPoint>,
+}
+
+/// Greedy FIFO service of one arrival train, ladder OFF or ON.
+/// Requests are admitted in arrival order onto the earliest-free
+/// server; each executes as two equal step-halves whose durations
+/// follow the server's live speed sampled at the half's start — the
+/// interior boundary is the sync barrier the mid-flight lever fires
+/// at. The ON side walks the real admission ladder against a
+/// queue-depth snapshot and the remaining deadline budget; past the
+/// top threshold it additionally re-quantizes the remaining suffix at
+/// the barrier (halving the remaining step work — the 2:1 grid) when
+/// the priced second half would blow the deadline. Both levers are
+/// floor-gated; neither fires on the OFF side.
+fn degrade_run(
+    cfg: &DegradeSimConfig,
+    arrivals: &[f64],
+    ladder_on: bool,
+) -> DegradeSideStats {
+    use crate::serve::degrade;
+    let mut free = vec![0.0f64; cfg.servers];
+    let mut finishes: Vec<f64> = Vec::with_capacity(arrivals.len());
+    let mut sojourns = Vec::with_capacity(arrivals.len());
+    let mut demoted = 0usize;
+    let mut requantized = 0usize;
+    let mut tier_sum = 0.0f64;
+    let mut min_tier = u8::MAX;
+    let mut last_finish = 0.0f64;
+    for (i, &a) in arrivals.iter().enumerate() {
+        let mut q = degrade_tier(i);
+        let mut k = 0usize;
+        let mut f0 = free[0];
+        for (j, &f) in free.iter().enumerate() {
+            if f < f0 {
+                k = j;
+                f0 = f;
+            }
+        }
+        let start = a.max(f0);
+        // Admission snapshot: remaining deadline budget after the
+        // queue wait, and the number of requests arrived-but-not-
+        // finished (the router backlog the queue term normalizes).
+        let budget = cfg.deadline_s - (start - a);
+        let backlog = finishes.iter().filter(|&&f| f > a).count();
+        if ladder_on {
+            let spd = degrade_speed(cfg, k, start);
+            let mut predict = |qq: crate::spec::Quality| {
+                Some(cfg.service_s * qq.factor() / spd)
+            };
+            let p = degrade::pressure_signal(
+                backlog,
+                cfg.queue_capacity,
+                predict(q),
+                Some(budget),
+            );
+            let nq = degrade::admission_demotion(
+                q,
+                p,
+                &cfg.degrade,
+                Some(budget),
+                &mut predict,
+            );
+            if nq != q {
+                demoted += 1;
+                q = nq;
+            }
+        }
+        let work = cfg.service_s * q.factor();
+        let mut t = start + 0.5 * work / degrade_speed(cfg, k, start);
+        let mut rest = 0.5 * work;
+        if ladder_on
+            && degrade::tier_rank(q) > degrade::tier_rank(cfg.degrade.floor)
+        {
+            // Barrier snapshot: live speed (the brownout may have
+            // rotated onto this server mid-request), live queue
+            // depth, and what remains of the deadline.
+            let pred = rest / degrade_speed(cfg, k, t);
+            let rem_budget = a + cfg.deadline_s - t;
+            let arrived = arrivals.iter().filter(|&&x| x <= t).count();
+            let done = finishes.iter().filter(|&&f| f <= t).count();
+            let backlog_mid = arrived.saturating_sub(done + 1);
+            let p = degrade::pressure_signal(
+                backlog_mid,
+                cfg.queue_capacity,
+                Some(pred),
+                Some(rem_budget),
+            );
+            if degrade::wants_requantize(
+                p,
+                &cfg.degrade.pressure_thresholds,
+            ) && pred * degrade::PRICE_SLACK > rem_budget
+            {
+                rest *= 0.5; // 2:1 grid on the remaining suffix
+                requantized += 1;
+            }
+        }
+        t += rest / degrade_speed(cfg, k, t);
+        free[k] = t;
+        finishes.push(t);
+        sojourns.push(t - a);
+        tier_sum += degrade::tier_rank(q) as f64;
+        min_tier = min_tier.min(degrade::tier_rank(q));
+        if t > last_finish {
+            last_finish = t;
+        }
+    }
+    let n = sojourns.len();
+    let hits = sojourns
+        .iter()
+        .filter(|&&s| s <= cfg.deadline_s)
+        .count();
+    let span = last_finish - arrivals[0];
+    DegradeSideStats {
+        deadline_hit_rate: if n == 0 {
+            1.0
+        } else {
+            hits as f64 / n as f64
+        },
+        mean_sojourn_s: fed_mean(&sojourns),
+        p95_sojourn_s: fed_percentile(&sojourns, 95.0),
+        throughput_rps: if span > 0.0 { n as f64 / span } else { 0.0 },
+        demoted,
+        requantized,
+        mean_tier: if n == 0 { 0.0 } else { tier_sum / n as f64 },
+        min_tier: if min_tier == u8::MAX { 0 } else { min_tier },
+    }
+}
+
+/// Sweep every load multiple through the paired OFF/ON runs. The
+/// rotating brownout timing is fixed by `window_s` alone and shared
+/// by both sides of every point.
+pub fn simulate_degradation_frontier(
+    cfg: &DegradeSimConfig,
+) -> DegradationFrontier {
+    let cap = cfg.capacity_rps();
+    let points = cfg
+        .load_multiples
+        .iter()
+        .map(|&load_x| {
+            let rate = load_x * cap;
+            let arr = degradation_arrivals(rate, cfg.n_requests);
+            DegradationPoint {
+                load_x,
+                rate_rps: rate,
+                off: degrade_run(cfg, &arr, false),
+                on: degrade_run(cfg, &arr, true),
+            }
+        })
+        .collect();
+    DegradationFrontier { config: cfg.clone(), points }
+}
+
+impl DegradationFrontier {
+    /// Fixed field order, byte-identical across runs (the sweep is
+    /// RNG-free); matches `scripts/gen_bench_artifacts.py` field for
+    /// field so `BENCH_degradation.json` can be re-derived either
+    /// way.
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::{Object, Value};
+        let side = |s: &DegradeSideStats| {
+            let mut o = Object::new();
+            o.insert(
+                "deadline_hit_rate",
+                Value::Num(s.deadline_hit_rate),
+            );
+            o.insert("mean_sojourn_s", Value::Num(s.mean_sojourn_s));
+            o.insert("p95_sojourn_s", Value::Num(s.p95_sojourn_s));
+            o.insert("throughput_rps", Value::Num(s.throughput_rps));
+            o.insert("demoted", Value::Num(s.demoted as f64));
+            o.insert("requantized", Value::Num(s.requantized as f64));
+            o.insert("mean_tier", Value::Num(s.mean_tier));
+            o.insert("min_tier", Value::Num(s.min_tier as f64));
+            Value::Obj(o)
+        };
+        let mut o = Object::new();
+        o.insert("bench", Value::Str("degradation".into()));
+        o.insert(
+            "source",
+            Value::Str("scripts/gen_bench_artifacts.py".into()),
+        );
+        // The ladder sheds quality, not halo traffic; the label names
+        // the lever the top rung pulls at the sync barrier.
+        o.insert("halo", Value::Str("quality-ladder".into()));
+        let c = &self.config;
+        let mut co = Object::new();
+        co.insert("servers", Value::Num(c.servers as f64));
+        co.insert("service_s", Value::Num(c.service_s));
+        co.insert("deadline_s", Value::Num(c.deadline_s));
+        co.insert(
+            "pressure_thresholds",
+            Value::Arr(
+                c.degrade
+                    .pressure_thresholds
+                    .iter()
+                    .map(|&x| Value::Num(x))
+                    .collect(),
+            ),
+        );
+        co.insert("floor", Value::Str(c.degrade.floor.as_str().into()));
+        co.insert(
+            "queue_capacity",
+            Value::Num(c.queue_capacity as f64),
+        );
+        co.insert("brownout_speed", Value::Num(c.brownout_speed));
+        co.insert("window_s", Value::Num(c.window_s));
+        co.insert("n_requests", Value::Num(c.n_requests as f64));
+        co.insert(
+            "load_multiples",
+            Value::Arr(
+                c.load_multiples
+                    .iter()
+                    .map(|&x| Value::Num(x))
+                    .collect(),
+            ),
+        );
+        o.insert("config", Value::Obj(co));
+        let points: Vec<Value> = self
+            .points
+            .iter()
+            .map(|p| {
+                let mut po = Object::new();
+                po.insert("load_x", Value::Num(p.load_x));
+                po.insert("rate_rps", Value::Num(p.rate_rps));
+                po.insert("off", side(&p.off));
+                po.insert("on", side(&p.on));
+                Value::Obj(po)
+            })
+            .collect();
+        o.insert("points", Value::Arr(points));
+        Value::Obj(o)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -2396,5 +2771,139 @@ mod tests {
             crowd < steady * 0.5,
             "flash crowd must arrive >= 2x denser"
         );
+    }
+
+    /// The tentpole claim of BENCH_degradation: at every load point
+    /// at or past 2x the pool's capacity the ladder converts strictly
+    /// more deadline misses into hits than shedding alone, the wins
+    /// come from actual demotions paid in tiers, and no request is
+    /// ever served below the configured floor.
+    #[test]
+    fn degradation_ladder_strictly_wins_at_overload() {
+        let cfg = DegradeSimConfig::stub_fixture();
+        let sweep = simulate_degradation_frontier(&cfg);
+        assert_eq!(sweep.points.len(), cfg.load_multiples.len());
+        let floor =
+            crate::serve::degrade::tier_rank(cfg.degrade.floor);
+        let mut asserted = 0usize;
+        let mut requant_total = 0usize;
+        for p in &sweep.points {
+            // The OFF side never touches either lever, and its tier
+            // mix is the arrival mix exactly.
+            assert_eq!(p.off.demoted, 0, "x{}", p.load_x);
+            assert_eq!(p.off.requantized, 0, "x{}", p.load_x);
+            assert!((p.off.mean_tier - 1.0).abs() < 1e-12);
+            // Floor guarantee at every load, not just overload.
+            assert!(
+                p.on.min_tier >= floor,
+                "x{}: served below the floor",
+                p.load_x
+            );
+            requant_total += p.on.requantized;
+            if p.load_x < 2.0 {
+                continue;
+            }
+            asserted += 1;
+            assert!(
+                p.on.deadline_hit_rate > p.off.deadline_hit_rate,
+                "x{}: ladder must beat shedding ({} vs {})",
+                p.load_x,
+                p.on.deadline_hit_rate,
+                p.off.deadline_hit_rate
+            );
+            assert!(
+                p.on.demoted > 0,
+                "x{}: the winning side must demote",
+                p.load_x
+            );
+            assert!(
+                p.on.mean_tier < p.off.mean_tier,
+                "x{}: the win is paid in tiers",
+                p.load_x
+            );
+        }
+        assert!(asserted >= 3, "sweep must cover >= 2x");
+        assert!(
+            requant_total > 0,
+            "the top rung must fire somewhere in the sweep"
+        );
+    }
+
+    /// Raising the floor to standard really binds: high-tier arrivals
+    /// stop one rung up (mean served tier can lose at most 1/3),
+    /// which preserves quality relative to the draft floor and pays
+    /// for it in deadline hits at 3x load.
+    #[test]
+    fn degradation_floor_binds_at_standard() {
+        let mut std_cfg = DegradeSimConfig::stub_fixture();
+        std_cfg.degrade.floor = crate::spec::Quality::Standard;
+        std_cfg.load_multiples = vec![3.0];
+        let mut draft_cfg = DegradeSimConfig::stub_fixture();
+        draft_cfg.load_multiples = vec![3.0];
+        let std_p =
+            &simulate_degradation_frontier(&std_cfg).points[0];
+        let draft_p =
+            &simulate_degradation_frontier(&draft_cfg).points[0];
+        assert!(std_p.on.demoted > 0);
+        assert!(draft_p.on.demoted > 0);
+        // Only High -> Standard demotions remain: the served mean
+        // cannot drop below (1 + 1 + 0) / 3.
+        assert!(
+            std_p.on.mean_tier >= 2.0 / 3.0 - 1e-12,
+            "standard floor crossed: mean tier {}",
+            std_p.on.mean_tier
+        );
+        assert!(
+            std_p.on.mean_tier > draft_p.on.mean_tier,
+            "higher floor must preserve more quality ({} vs {})",
+            std_p.on.mean_tier,
+            draft_p.on.mean_tier
+        );
+        assert!(
+            std_p.on.deadline_hit_rate
+                <= draft_p.on.deadline_hit_rate,
+            "quality preserved must cost hits, not conjure them"
+        );
+    }
+
+    /// RNG-free determinism + the BENCH schema gate: two sweeps
+    /// serialize byte-identically and carry the "halo" key that
+    /// scripts/check.sh requires of every committed BENCH_*.json.
+    #[test]
+    fn degradation_frontier_is_deterministic_and_json_stable() {
+        let cfg = DegradeSimConfig::stub_fixture();
+        let a = simulate_degradation_frontier(&cfg);
+        let b = simulate_degradation_frontier(&cfg);
+        assert_eq!(a, b);
+        let ja = crate::util::json::to_string(&a.to_json());
+        assert_eq!(ja, crate::util::json::to_string(&b.to_json()));
+        assert!(ja.contains("\"halo\""));
+        assert!(ja.contains("\"quality-ladder\""));
+        assert!(ja.contains("\"points\""));
+        assert!(ja.contains("\"pressure_thresholds\""));
+        assert!(ja.contains("\"floor\":\"draft\""));
+    }
+
+    /// The arrival train is closed-form: steady spacing, sized to n,
+    /// starting at zero; the tier cycle really averages 1.0.
+    #[test]
+    fn degradation_arrivals_and_tiers_are_shaped() {
+        let arr = degradation_arrivals(4.0, 17);
+        assert_eq!(arr.len(), 17);
+        assert_eq!(arr[0], 0.0);
+        for w in arr.windows(2) {
+            assert!((w[1] - w[0] - 0.25).abs() < 1e-12);
+        }
+        use crate::spec::Quality;
+        assert_eq!(degrade_tier(0), Quality::High);
+        assert_eq!(degrade_tier(1), Quality::Standard);
+        assert_eq!(degrade_tier(2), Quality::Draft);
+        let sum: f64 = (0..240)
+            .map(|i| {
+                crate::serve::degrade::tier_rank(degrade_tier(i))
+                    as f64
+            })
+            .sum();
+        assert!((sum / 240.0 - 1.0).abs() < 1e-12);
     }
 }

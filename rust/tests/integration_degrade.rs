@@ -1,0 +1,882 @@
+//! Graceful degradation under overload: shed quality, not requests.
+//!
+//! The scenario-storm suite pins the pressure-driven demotion ladder
+//! end to end: the RNG-free degradation frontier against its committed
+//! bench artifact, a live TCP storm with a deterministically stalled
+//! worker (mixed tiers, deadlines, a pinned step count, a multi-res
+//! request, and a mid-request occupancy collapse embedded in the stub
+//! manifest's drift table), the precedence rule that adaptive
+//! re-planning disarms the mid-flight lever, the bit-exactness of the
+//! default (ladder-off) serve path, and `QUICKCHECK_SEED` property
+//! tests over the pure ladder arithmetic.
+//!
+//! Everything here runs on the stub runtime — no artifacts beyond the
+//! generated stub set, no xla backend, no wall-clock sleeps: the storm
+//! synchronizes on events (gate entered, N requests admitted), so the
+//! queue always holds exactly what the arithmetic below assumes.
+
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+use stadi::config::{DegradeConfig, EngineConfig, ReplanConfig, StadiParams};
+use stadi::coordinator::EngineCore;
+use stadi::sched::temporal::requantize_suffix;
+use stadi::serve::degrade::{
+    admission_demotion, pressure_signal, rungs, tier_rank, wants_requantize,
+};
+use stadi::serve::router::Job;
+use stadi::serve::server::{
+    serve, serve_with_stats, Client, JobRunner, ServeOptions, SessionRunner,
+};
+use stadi::serve::sim::{simulate_degradation_frontier, DegradeSimConfig};
+use stadi::spec::{GenerationSpec, Priority, Quality};
+use stadi::util::json::{self, Value};
+use stadi::util::proptest::{ensure, forall};
+
+const TIERS: [Quality; 3] =
+    [Quality::Draft, Quality::Standard, Quality::High];
+
+/// Write a fresh stub artifact set into a per-test temp dir; `drift`
+/// optionally embeds an occupancy schedule in the manifest so every
+/// engine over the set replays the same mid-request collapse.
+fn stub_artifacts(tag: &str, drift: Option<&str>) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("stadi-degrade-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let sched = drift
+        .map(|s| stadi::device::OccupancySchedule::parse(s).unwrap());
+    stadi::runtime::stubgen::write_stub_artifacts_with_drift(
+        &dir,
+        stadi::runtime::stubgen::DEFAULT_EXTRA_RESOLUTIONS,
+        sched.as_ref(),
+    )
+    .unwrap();
+    dir
+}
+
+fn config(dir: &Path, occ: &[f64]) -> EngineConfig {
+    let mut cfg = EngineConfig::two_gpu_default(dir, occ);
+    cfg.stadi =
+        StadiParams { m_base: 6, m_warmup: 2, ..Default::default() };
+    cfg
+}
+
+fn ladder(thresholds: &[f64]) -> DegradeConfig {
+    DegradeConfig {
+        enabled: true,
+        pressure_thresholds: thresholds.to_vec(),
+        floor: Quality::Draft,
+    }
+}
+
+/// Relative 1e-9 closeness for numbers that crossed the JSON wire.
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0)
+}
+
+/// Recursive 1e-9 comparison of two JSON values (same shape, same
+/// strings, numbers within tolerance).
+fn assert_json_close(a: &Value, b: &Value, path: &str) {
+    match (a, b) {
+        (Value::Num(x), Value::Num(y)) => {
+            assert!(
+                (x - y).abs() <= 1e-9,
+                "{path}: {x} vs {y} differ by more than 1e-9"
+            );
+        }
+        (Value::Str(x), Value::Str(y)) => {
+            assert_eq!(x, y, "{path}: string mismatch");
+        }
+        (Value::Bool(x), Value::Bool(y)) => {
+            assert_eq!(x, y, "{path}: bool mismatch");
+        }
+        (Value::Null, Value::Null) => {}
+        (Value::Arr(xs), Value::Arr(ys)) => {
+            assert_eq!(xs.len(), ys.len(), "{path}: length mismatch");
+            for (i, (x, y)) in xs.iter().zip(ys).enumerate() {
+                assert_json_close(x, y, &format!("{path}[{i}]"));
+            }
+        }
+        (Value::Obj(xo), Value::Obj(yo)) => {
+            assert_eq!(xo.len(), yo.len(), "{path}: key-count mismatch");
+            for (k, x) in xo.iter() {
+                let y = yo
+                    .get(k)
+                    .unwrap_or_else(|| panic!("{path}.{k}: missing"));
+                assert_json_close(x, y, &format!("{path}.{k}"));
+            }
+        }
+        _ => panic!("{path}: shape mismatch"),
+    }
+}
+
+/// One-shot latch: `open()` releases every current and future
+/// `wait()`. Lets the storm synchronize on *events* (gate entered, N
+/// requests admitted), not on wall-clock guesses.
+struct Latch(Mutex<bool>, Condvar);
+
+impl Latch {
+    fn shared() -> Arc<Latch> {
+        Arc::new(Latch(Mutex::new(false), Condvar::new()))
+    }
+
+    fn open(&self) {
+        *self.0.lock().unwrap() = true;
+        self.1.notify_all();
+    }
+
+    fn wait(&self) {
+        let mut open = self.0.lock().unwrap();
+        while !*open {
+            open = self.1.wait(open).unwrap();
+        }
+    }
+}
+
+/// Real [`SessionRunner`] whose "gate" job blocks until released —
+/// the worker is pinned inside a genuine engine dispatch while the
+/// storm piles up behind it, so every later job pops against a known
+/// backlog. All other hooks delegate, so admission demotion, the
+/// mid-flight lever, and the degrade counters are the production ones.
+struct StormGate {
+    inner: SessionRunner,
+    release: Arc<Latch>,
+    entered: Arc<Latch>,
+    admitted: Arc<(Mutex<usize>, Condvar)>,
+    /// How many jobs the storm queues behind the gate. Admission
+    /// (`admit`) runs *before* the reader enqueues a job, so after the
+    /// release the gate additionally holds until the router backlog
+    /// reaches this count — every pressure computed below then reads
+    /// exactly the queue the arithmetic assumes, with no race against
+    /// the reader's final `submit`.
+    queued: usize,
+}
+
+impl StormGate {
+    fn new(inner: SessionRunner, queued: usize) -> StormGate {
+        StormGate {
+            inner,
+            release: Latch::shared(),
+            entered: Latch::shared(),
+            admitted: Arc::new((Mutex::new(0), Condvar::new())),
+            queued,
+        }
+    }
+
+    /// Block until `n` requests have passed admission (are queued or
+    /// executing).
+    fn wait_admitted(&self, n: usize) {
+        let (lock, cv) = &*self.admitted;
+        let mut count = lock.lock().unwrap();
+        while *count < n {
+            count = cv.wait(count).unwrap();
+        }
+    }
+}
+
+impl JobRunner for StormGate {
+    fn run(&self, job: &Job) -> (bool, String) {
+        self.inner.run(job)
+    }
+
+    fn admit(&self, job: &Job) -> stadi::error::Result<()> {
+        self.inner.admit(job)?;
+        let (lock, cv) = &*self.admitted;
+        *lock.lock().unwrap() += 1;
+        cv.notify_all();
+        Ok(())
+    }
+
+    fn shape(&self, job: &mut Job, backlog: usize) {
+        self.inner.shape(job, backlog)
+    }
+
+    fn run_batched_live(
+        &self,
+        jobs: &[Job],
+        backlog: usize,
+        live_backlog: &dyn Fn() -> usize,
+        record: &dyn Fn(usize),
+    ) -> Vec<(bool, String)> {
+        if jobs.len() == 1 && jobs[0].id == "gate" {
+            self.entered.open();
+            self.release.wait();
+            while live_backlog() < self.queued {
+                thread::yield_now();
+            }
+        }
+        self.inner.run_batched_live(jobs, backlog, live_backlog, record)
+    }
+
+    fn degrade_counts(&self) -> (u64, u64) {
+        self.inner.degrade_counts()
+    }
+}
+
+/// The committed degradation frontier: ladder ON must meet strictly
+/// more deadlines at every >= 2x load point while never serving below
+/// the floor and giving up at most one tier of quality on average —
+/// and the sweep must match `BENCH_degradation.json` at the repo root
+/// number for number (the Rust DES and the python twin in
+/// `scripts/gen_bench_artifacts.py` are the same arithmetic).
+#[test]
+fn degradation_frontier_matches_committed_bench() {
+    let cfg = DegradeSimConfig::stub_fixture();
+    let sweep = simulate_degradation_frontier(&cfg);
+    let floor = tier_rank(cfg.degrade.floor);
+    let mut overloaded = 0usize;
+    let mut requantized = 0usize;
+    for p in &sweep.points {
+        assert_eq!(
+            p.off.demoted, 0,
+            "x{}: the OFF side must never touch the ladder",
+            p.load_x
+        );
+        assert_eq!(p.off.requantized, 0, "x{}", p.load_x);
+        assert!(
+            p.on.min_tier >= floor,
+            "x{}: served below the configured floor",
+            p.load_x
+        );
+        // The ladder only ever sheds quality...
+        assert!(
+            p.on.mean_tier <= p.off.mean_tier + 1e-12,
+            "x{}: ladder ON raised the mean served tier",
+            p.load_x
+        );
+        // ...and at most one full tier of it on average.
+        assert!(
+            p.off.mean_tier - p.on.mean_tier <= 1.0 + 1e-12,
+            "x{}: mean quality delta {} exceeds one tier",
+            p.load_x,
+            p.off.mean_tier - p.on.mean_tier
+        );
+        requantized += p.on.requantized;
+        if p.load_x >= 2.0 {
+            overloaded += 1;
+            assert!(
+                p.on.deadline_hit_rate > p.off.deadline_hit_rate,
+                "x{}: ON {} vs OFF {} — overload must buy deadlines",
+                p.load_x,
+                p.on.deadline_hit_rate,
+                p.off.deadline_hit_rate
+            );
+            assert!(p.on.demoted > 0, "x{}: ladder idle", p.load_x);
+        }
+    }
+    assert!(overloaded >= 3, "sweep must cover >= 3 overload points");
+    assert!(requantized > 0, "mid-flight lever never fired in the sweep");
+
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap()
+        .join("BENCH_degradation.json");
+    let committed = std::fs::read_to_string(&path).unwrap_or_else(|_| {
+        panic!(
+            "{} must be committed at the repo root (regenerate with \
+             scripts/gen_bench_artifacts.py)",
+            path.display()
+        )
+    });
+    assert_json_close(
+        &sweep.to_json(),
+        &json::parse(&committed).unwrap(),
+        "degradation",
+    );
+}
+
+/// The storm itself: one worker pinned inside a gate job while six
+/// mixed requests queue behind it, against the ladder
+/// `thresholds = [0.25, 0.6]`, `capacity = 8`. Pop order is
+/// deterministic (priority, then deadline, then FIFO) so each job
+/// pops against a known backlog — 5, 4, 3, 2, 1, 0 — i.e. pressures
+/// 0.625, 0.5, 0.375, 0.25, 0.125, 0.0:
+///
+/// * `j1` (high, `steps: 7` pinned, high priority) pops first at
+///   pressure 0.625 >= 0.6: never reshaped (explicit steps), but the
+///   mid-flight lever re-quantizes its running suffix once;
+/// * `j2` (draft + 60s deadline) is already at the floor — untouched;
+/// * `j3` (high, 0.375) and `j4` (high, exactly 0.25) each arm one
+///   rung and serve standard;
+/// * `j5` (high, 0.125) and `j6` (standard multi-res, 0.0) are below
+///   every threshold — untouched.
+///
+/// Every request completes: quality is shed, requests never are. The
+/// stub manifest also embeds a mid-request occupancy collapse on
+/// device 1 (0.6 from step 4), so the whole storm runs under drift.
+#[test]
+fn scenario_storm_sheds_quality_not_requests() {
+    let dir = stub_artifacts("storm", Some("0@0;0@0,0.6@4"));
+    let core = EngineCore::new(config(&dir, &[0.0, 0.0])).unwrap();
+    let dcfg = ladder(&[0.25, 0.6]);
+    let runner = Arc::new(StormGate::new(
+        SessionRunner::new(core).with_degrade(&dcfg, 8),
+        6,
+    ));
+    let release = Arc::clone(&runner.release);
+    let entered = Arc::clone(&runner.entered);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let stop = Arc::clone(&stop);
+        let runner = Arc::clone(&runner) as Arc<dyn JobRunner>;
+        thread::spawn(move || {
+            serve_with_stats(
+                runner,
+                listener,
+                ServeOptions {
+                    queue_capacity: 8,
+                    workers: 1,
+                    degrade: dcfg,
+                    ..ServeOptions::default()
+                },
+                Some(stop),
+            )
+        })
+    };
+
+    let mut client = Client::connect(&addr).unwrap();
+    client
+        .send_spec(
+            "gate",
+            &GenerationSpec::new().seed(1).quality(Quality::Draft),
+        )
+        .unwrap();
+    entered.wait();
+    // The worker is pinned inside the gate job: everything below is
+    // queued before any of it runs.
+    client
+        .send_spec(
+            "j1",
+            &GenerationSpec::new()
+                .seed(2)
+                .steps(7)
+                .quality(Quality::High)
+                .priority(Priority::High),
+        )
+        .unwrap();
+    client
+        .send_spec(
+            "j2",
+            &GenerationSpec::new()
+                .seed(3)
+                .quality(Quality::Draft)
+                .deadline_s(60.0),
+        )
+        .unwrap();
+    client
+        .send_spec("j3", &GenerationSpec::new().seed(4).quality(Quality::High))
+        .unwrap();
+    client
+        .send_spec("j4", &GenerationSpec::new().seed(5).quality(Quality::High))
+        .unwrap();
+    client
+        .send_spec("j5", &GenerationSpec::new().seed(6).quality(Quality::High))
+        .unwrap();
+    client
+        .send_spec(
+            "j6",
+            &GenerationSpec::new()
+                .seed(7)
+                .quality(Quality::Standard)
+                .size(128, 256),
+        )
+        .unwrap();
+    runner.wait_admitted(7);
+    release.open();
+
+    // Responses come back in submission order (per-connection FIFO),
+    // all ok — and each echoes the tier it was actually *served* at.
+    let want = [
+        ("gate", "draft"),
+        ("j1", "high"),
+        ("j2", "draft"),
+        ("j3", "standard"),
+        ("j4", "standard"),
+        ("j5", "high"),
+        ("j6", "standard"),
+    ];
+    for (id, quality) in want {
+        let line = client.read_line().unwrap();
+        let v = json::parse(&line).unwrap();
+        assert!(v.get("ok").unwrap().as_bool().unwrap(), "{line}");
+        assert_eq!(v.get("id").unwrap().as_str().unwrap(), id);
+        let spec = v.get("spec").unwrap();
+        assert_eq!(
+            spec.get("quality").unwrap().as_str().unwrap(),
+            quality,
+            "served tier for {id}: {line}"
+        );
+        if id == "j1" {
+            // The pinned step count survives re-quantization: the
+            // *suffix grid* thinned, the request's plan key did not.
+            assert_eq!(spec.get("steps").unwrap().as_usize().unwrap(), 7);
+        }
+    }
+    drop(client);
+
+    stop.store(true, Ordering::SeqCst);
+    let (handled, stats) = server.join().unwrap().unwrap();
+    assert_eq!(handled, 7);
+    assert_eq!(stats.admitted, 7);
+    assert_eq!(
+        stats.completed, 7,
+        "graceful degradation must never shed a request"
+    );
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.deadline_shed, 0);
+    assert_eq!(
+        stats.demoted, 2,
+        "exactly j3 (0.375) and j4 (exactly at the 0.25 rung)"
+    );
+    assert_eq!(
+        stats.requantized, 1,
+        "only j1 ran above the 0.6 re-quantize threshold"
+    );
+}
+
+/// Precedence: when adaptive re-planning owns the sync barriers
+/// (`replan.enabled`), the mid-flight lever stays disarmed — one
+/// schedule surgeon per request — while the admission ladder still
+/// applies. With thresholds this low, `jA` would otherwise have
+/// re-quantized (pressure 0.125 >= 0.1).
+#[test]
+fn replan_precedence_disarms_the_midflight_lever() {
+    let dir = stub_artifacts("prec", None);
+    let mut cfg = config(&dir, &[0.0, 0.0]);
+    cfg.replan = ReplanConfig { enabled: true, ..Default::default() };
+    let core = EngineCore::new(cfg).unwrap();
+    let dcfg = ladder(&[0.05, 0.1]);
+    let runner = Arc::new(StormGate::new(
+        SessionRunner::new(core).with_degrade(&dcfg, 8),
+        2,
+    ));
+    let release = Arc::clone(&runner.release);
+    let entered = Arc::clone(&runner.entered);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = {
+        let stop = Arc::clone(&stop);
+        let runner = Arc::clone(&runner) as Arc<dyn JobRunner>;
+        thread::spawn(move || {
+            serve_with_stats(
+                runner,
+                listener,
+                ServeOptions {
+                    queue_capacity: 8,
+                    workers: 1,
+                    degrade: dcfg,
+                    ..ServeOptions::default()
+                },
+                Some(stop),
+            )
+        })
+    };
+
+    let mut client = Client::connect(&addr).unwrap();
+    client
+        .send_spec(
+            "gate",
+            &GenerationSpec::new().seed(20).quality(Quality::Draft),
+        )
+        .unwrap();
+    entered.wait();
+    // jA pops at backlog 1 -> pressure 0.125: both rungs arm, so the
+    // admission ladder walks high -> standard -> draft.
+    client
+        .send_spec(
+            "jA",
+            &GenerationSpec::new().seed(21).quality(Quality::High),
+        )
+        .unwrap();
+    client.send_spec("jB", &GenerationSpec::new().seed(22)).unwrap();
+    runner.wait_admitted(3);
+    release.open();
+
+    for (id, quality) in
+        [("gate", "draft"), ("jA", "draft"), ("jB", "standard")]
+    {
+        let line = client.read_line().unwrap();
+        let v = json::parse(&line).unwrap();
+        assert!(v.get("ok").unwrap().as_bool().unwrap(), "{line}");
+        assert_eq!(v.get("id").unwrap().as_str().unwrap(), id);
+        assert_eq!(
+            v.get("spec").unwrap().get("quality").unwrap().as_str().unwrap(),
+            quality,
+            "{line}"
+        );
+    }
+    drop(client);
+
+    stop.store(true, Ordering::SeqCst);
+    let (handled, stats) = server.join().unwrap().unwrap();
+    assert_eq!(handled, 3);
+    assert_eq!(stats.completed, 3);
+    assert_eq!(
+        stats.demoted, 1,
+        "the admission ladder still applies under re-planning"
+    );
+    assert_eq!(
+        stats.requantized, 0,
+        "adaptive re-planning owns the barriers: the mid-flight \
+         lever must stay disarmed"
+    );
+}
+
+/// The default serve path (ladder disarmed) is the pre-degradation
+/// one, bit for bit: the served latent equals a direct generate on an
+/// independent core, tolerance only for the JSON round-trip.
+#[test]
+fn degrade_off_serving_stays_bit_exact() {
+    let dir = stub_artifacts("off", None);
+    let spec = GenerationSpec::new().seed(91);
+    let baseline = EngineCore::new(config(&dir, &[0.0, 0.0]))
+        .unwrap()
+        .session_for(&spec)
+        .unwrap()
+        .execute(&spec)
+        .unwrap();
+
+    let core = EngineCore::new(config(&dir, &[0.0, 0.0])).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = thread::spawn(move || {
+        serve(
+            core,
+            listener,
+            ServeOptions {
+                queue_capacity: 4,
+                workers: 1,
+                max_requests: 1,
+                ..ServeOptions::default()
+            },
+            None,
+        )
+    });
+    let mut client = Client::connect(&addr).unwrap();
+    let line = client.request_spec("b0", &spec).unwrap();
+    drop(client);
+    assert_eq!(server.join().unwrap().unwrap(), 1);
+
+    let v = json::parse(&line).unwrap();
+    assert!(v.get("ok").unwrap().as_bool().unwrap(), "{line}");
+    let got = v.get("latent_sum").unwrap().as_f64().unwrap();
+    assert!(
+        close(got, baseline.latent.sum()),
+        "default serve diverged from direct generate: {got} vs {}",
+        baseline.latent.sum()
+    );
+    let Value::Arr(first8) = v.get("latent_first8").unwrap() else {
+        panic!("latent_first8 missing: {line}");
+    };
+    assert_eq!(first8.len(), 8.min(baseline.latent.data.len()));
+    for (i, x) in first8.iter().enumerate() {
+        let want = f64::from(baseline.latent.data[i]);
+        let got = x.as_f64().unwrap();
+        assert!(close(got, want), "latent[{i}]: {got} vs {want}");
+    }
+    assert_eq!(
+        v.get("spec").unwrap().get("quality").unwrap().as_str().unwrap(),
+        "standard",
+        "no ladder, no demotion"
+    );
+}
+
+/// Core-level pins for the degraded executor under a mid-request
+/// occupancy collapse (device 1 drops to 0.6 at step 4, from the
+/// manifest's drift table):
+///
+/// * a probe that never fires replays the static path byte for byte
+///   (this is the `degrade.enabled` default, so the OFF ladder is
+///   exactly the pre-degradation engine);
+/// * a probe that always fires re-quantizes exactly once (one-shot),
+///   deferring the even 4-step suffix at the first barrier to the odd
+///   3-step suffix at the next, and strictly reduces executed steps.
+#[test]
+fn occupancy_collapse_degraded_execution_is_byte_exact_until_the_lever_fires()
+{
+    let dir = stub_artifacts("collapse", Some("0@0;0@0,0.6@4"));
+    let core = EngineCore::new(config(&dir, &[0.0, 0.0])).unwrap();
+    let spec = GenerationSpec::new().seed(5);
+    let session = core.session_for(&spec).unwrap();
+    let base = session.execute(&spec).unwrap();
+
+    let calm =
+        session.execute_degraded_seeded(spec.seed, &mut || false).unwrap();
+    assert_eq!(
+        calm.latent, base.latent,
+        "an armed-but-idle ladder must not change a byte"
+    );
+    assert!(calm.replans.is_empty());
+
+    let forced =
+        session.execute_degraded_seeded(spec.seed, &mut || true).unwrap();
+    assert_eq!(
+        forced.replans.len(),
+        1,
+        "re-quantization is one-shot per request"
+    );
+    let full: usize = base.stats.steps_run.iter().sum();
+    let thin: usize = forced.stats.steps_run.iter().sum();
+    assert!(
+        thin < full,
+        "the coarser suffix must run fewer steps ({thin} vs {full})"
+    );
+    assert_ne!(
+        forced.latent, base.latent,
+        "the thinned grid is a genuinely different trajectory"
+    );
+}
+
+/// For a fixed snapshot, more pressure never buys more quality.
+#[test]
+fn prop_admission_demotion_is_monotone_in_pressure() {
+    let cfg = ladder(&[0.5, 1.0, 2.0]);
+    forall(
+        0xD1,
+        300,
+        |rng| {
+            (
+                (rng.below(4000) as usize, rng.below(4000) as usize),
+                rng.below(3) as usize,
+            )
+        },
+        |&((a, b), t)| {
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            let q = TIERS[t % 3];
+            let lo_q = admission_demotion(
+                q,
+                lo as f64 / 1000.0,
+                &cfg,
+                None,
+                &mut |_| None,
+            );
+            let hi_q = admission_demotion(
+                q,
+                hi as f64 / 1000.0,
+                &cfg,
+                None,
+                &mut |_| None,
+            );
+            ensure(
+                tier_rank(hi_q) <= tier_rank(lo_q),
+                format!(
+                    "more pressure served more quality: {lo}m -> {}, \
+                     {hi}m -> {}",
+                    lo_q.as_str(),
+                    hi_q.as_str()
+                ),
+            )
+        },
+    );
+}
+
+/// The ladder never promotes, never crosses the floor, and a tier
+/// whose predicted latency fits the deadline budget is never demoted.
+#[test]
+fn prop_demotion_respects_floor_price_and_direction() {
+    forall(
+        0xD2,
+        300,
+        |rng| {
+            (
+                (rng.below(3) as usize, rng.below(3) as usize),
+                rng.below(5000) as usize,
+            )
+        },
+        |&((qi, fi), p_milli)| {
+            let q = TIERS[qi % 3];
+            let floor = TIERS[fi % 3];
+            let cfg = DegradeConfig {
+                enabled: true,
+                pressure_thresholds: vec![0.5, 1.0, 2.0],
+                floor,
+            };
+            let p = p_milli as f64 / 1000.0;
+            let out = admission_demotion(q, p, &cfg, None, &mut |_| None);
+            ensure(
+                tier_rank(out) <= tier_rank(q),
+                "the ladder promoted a request",
+            )?;
+            ensure(
+                tier_rank(out) >= tier_rank(floor).min(tier_rank(q)),
+                format!(
+                    "fell through the floor: {} under floor {}",
+                    out.as_str(),
+                    floor.as_str()
+                ),
+            )?;
+            // A predictor that always fits the budget vetoes every
+            // rung before it demotes.
+            let fits = admission_demotion(
+                q,
+                p,
+                &cfg,
+                Some(10.0),
+                &mut |_| Some(0.1),
+            );
+            ensure(
+                fits == q,
+                "a request that makes its SLO was demoted",
+            )?;
+            // Disabled ladder is the identity at any pressure.
+            let off = DegradeConfig { enabled: false, ..cfg.clone() };
+            ensure(
+                admission_demotion(q, p, &off, None, &mut |_| None) == q,
+                "a disabled ladder moved a tier",
+            )
+        },
+    );
+}
+
+/// Re-quantization stays on the fast grid: the coarse suffix is a
+/// subsequence keeping both endpoints and exactly `(n + 1) / 2`
+/// steps; even-length suffixes are the parity-deferral error case.
+#[test]
+fn prop_requantized_suffix_stays_on_the_fast_grid() {
+    forall(
+        0xD3,
+        300,
+        |rng| {
+            let n = rng.below(41) as usize;
+            (0..n).map(|_| rng.below(4) as usize).collect::<Vec<usize>>()
+        },
+        |raw: &Vec<usize>| {
+            // Build a strictly increasing, odd-length step suffix from
+            // the raw deltas — valid under any shrink of `raw`.
+            let mut fast = Vec::new();
+            let mut acc = 0usize;
+            for &d in raw {
+                acc += d + 1;
+                fast.push(acc);
+            }
+            if fast.len() % 2 == 0 {
+                fast.pop();
+            }
+            if fast.is_empty() {
+                return ensure(
+                    requantize_suffix(&fast).is_err(),
+                    "an empty suffix must be rejected",
+                );
+            }
+            let coarse =
+                requantize_suffix(&fast).map_err(|e| e.to_string())?;
+            ensure(
+                coarse.len() == (fast.len() + 1) / 2,
+                format!("kept {} of {} steps", coarse.len(), fast.len()),
+            )?;
+            ensure(
+                coarse.first() == fast.first()
+                    && coarse.last() == fast.last(),
+                "the suffix endpoints must survive",
+            )?;
+            let mut it = fast.iter();
+            ensure(
+                coarse.iter().all(|c| it.any(|f| f == c)),
+                "the coarse grid left the fast grid",
+            )?;
+            // One more step makes the length even: exactly the
+            // half-step pairing the executor parity-defers on.
+            let mut even = fast.clone();
+            even.push(acc + 1);
+            ensure(
+                requantize_suffix(&even).is_err(),
+                "an even suffix must defer, not re-quantize",
+            )
+        },
+    );
+}
+
+/// Below the first threshold the whole mechanism is provably inert:
+/// zero rungs, no re-quantize wish, identity at every tier.
+#[test]
+fn prop_pressure_below_first_threshold_is_identity() {
+    forall(
+        0xD4,
+        300,
+        |rng| {
+            let steps = (0..1 + rng.below(4) as usize)
+                .map(|_| rng.below(900) as usize)
+                .collect::<Vec<usize>>();
+            (steps, rng.below(1000) as usize)
+        },
+        |&(ref steps, frac)| {
+            // Strictly increasing positive thresholds from raw deltas.
+            let mut th = Vec::new();
+            let mut acc = 0usize;
+            for &d in steps {
+                acc += d + 1;
+                th.push(acc as f64 / 1000.0);
+            }
+            let p = th[0] * frac as f64 / 1000.0; // strictly < th[0]
+            ensure(
+                rungs(p, &th) == 0,
+                format!("pressure {p} armed a rung of {th:?}"),
+            )?;
+            ensure(
+                !wants_requantize(p, &th),
+                "below every threshold yet wanting to re-quantize",
+            )?;
+            let cfg = DegradeConfig {
+                enabled: true,
+                pressure_thresholds: th.clone(),
+                floor: Quality::Draft,
+            };
+            for q in TIERS {
+                ensure(
+                    admission_demotion(q, p, &cfg, None, &mut |_| None)
+                        == q,
+                    format!(
+                        "{} demoted at pressure {p} below {}",
+                        q.as_str(),
+                        th[0]
+                    ),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The pressure signal itself: monotone in backlog, only ever raised
+/// by a predicted deadline overrun, and guarded against a zero
+/// capacity.
+#[test]
+fn prop_pressure_signal_is_monotone_and_guarded() {
+    forall(
+        0xD5,
+        300,
+        |rng| {
+            (
+                (rng.below(64) as usize, rng.below(64) as usize),
+                rng.below(16) as usize,
+            )
+        },
+        |&((a, b), cap)| {
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            let p_lo = pressure_signal(lo, cap, None, None);
+            let p_hi = pressure_signal(hi, cap, None, None);
+            ensure(
+                p_lo <= p_hi,
+                format!("backlog {lo} -> {p_lo} but {hi} -> {p_hi}"),
+            )?;
+            let with_deficit =
+                pressure_signal(hi, cap, Some(3.0), Some(1.0));
+            ensure(
+                with_deficit >= p_hi,
+                "a predicted overrun lowered the pressure",
+            )?;
+            ensure(
+                pressure_signal(hi, 0, None, None) == 0.0,
+                "the capacity-0 queue term must vanish",
+            )
+        },
+    );
+}

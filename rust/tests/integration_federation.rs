@@ -296,6 +296,66 @@ fn default_config_is_pre_federation_bit_exact() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Regression for the parity-deferral fallback: when the migration
+/// destination declines at the barrier (`Ok(None)` — a Half-class
+/// continuation needs an odd suffix), the source must be able to
+/// finish locally from the *same* envelope, byte-identical to an
+/// uninterrupted run. Nothing about the declined handoff may leak
+/// into the fallback numerics.
+#[test]
+fn parity_deferral_resumes_locally_from_same_envelope() {
+    let dir = stub_artifacts("defer");
+    let cfg = config(&dir, &[0.0, 0.0]);
+    let spec = GenerationSpec::new().seed(77);
+
+    // Uninterrupted baseline on an independent core (fresh profiler,
+    // fresh plan cache — same config).
+    let baseline = EngineCore::new(cfg.clone())
+        .unwrap()
+        .session_for(&spec)
+        .unwrap()
+        .execute(&spec)
+        .unwrap();
+
+    let core = EngineCore::new(cfg).unwrap();
+    let session = core.session_for(&spec).unwrap();
+    let total = session.plan().sync_points.len();
+    // Pick a barrier whose remaining fast suffix is even — the parity
+    // a Half-class destination must decline.
+    let (n_syncs, env) = (1..total)
+        .find_map(|k| {
+            let ckpt =
+                session.execute_to_barrier(spec.seed, k).unwrap();
+            MigrationEnvelope::capture(&session, &ckpt, spec.seed)
+                .unwrap()
+                .filter(|e| e.fast_suffix.len() % 2 == 0)
+                .map(|e| (k, e))
+        })
+        .expect("fixture must reach an even-suffix barrier");
+
+    // Destination with a Half-class sibling (0.5 <= 0.75 * v_max, yet
+    // above the Eq. 4 exclusion floor): must defer, not error.
+    let deferred = resume_envelope_on(&core, &env, &[1.0, 0.5]).unwrap();
+    assert!(
+        deferred.is_none(),
+        "half-class destination must defer the even suffix \
+         (barrier {n_syncs}, suffix {})",
+        env.fast_suffix.len()
+    );
+
+    // Fallback: the source finishes locally from the very same
+    // envelope bytes.
+    let local = resume_envelope_on(&core, &env, &[1.0, 1.0])
+        .unwrap()
+        .expect("full-speed local resume never defers");
+    assert_eq!(
+        local.latent, baseline.latent,
+        "declined migration must fall back to a byte-identical \
+         local finish"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn excluded_device_rejoins_suffix_after_occupancy_clears() {
     let dir = stub_artifacts("readmit");

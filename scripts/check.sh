@@ -96,6 +96,16 @@ echo "== federation gate (default + xla-backend stub)"
 cargo test -q --test integration_federation
 cargo test -q --features xla-backend --test integration_federation
 
+# Degradation gate: the scenario-storm suite — strictly-more-deadlines
+# at overload vs the committed BENCH_degradation.json, the ladder-off
+# bit-exactness pin, the replan-precedence rule, and the
+# QUICKCHECK_SEED ladder properties — must hold in BOTH feature
+# configs (the degraded executor crosses the session/runtime boundary
+# like the paths above).
+echo "== graceful degradation gate (default + xla-backend stub)"
+cargo test -q --test integration_degrade
+cargo test -q --features xla-backend --test integration_degrade
+
 # The committed perf-trajectory artifacts at the repo root must each
 # carry the displaced-halo pricing ("halo" key) — a re-anchor that
 # regenerates them without it silently drops the perf history this
@@ -104,8 +114,11 @@ cargo test -q --features xla-backend --test integration_federation
 # throughput-vs-latency frontier tests/integration_batch.rs pins
 # against the in-process sweep. BENCH_federation.json likewise: it is
 # the deadline-hit frontier tests/integration_federation.rs pins.
+# BENCH_degradation.json likewise: the quality-vs-deadline frontier
+# tests/integration_degrade.rs pins.
 echo "== committed BENCH artifacts carry halo pricing"
-for req in BENCH_batching.json BENCH_federation.json; do
+for req in BENCH_batching.json BENCH_federation.json \
+           BENCH_degradation.json; do
     if [[ ! -e "$ROOT/$req" ]]; then
         echo "error: $req missing at repo root" \
              "(regenerate with scripts/gen_bench_artifacts.py)" >&2

@@ -567,6 +567,172 @@ def federation_frontier():
     return traces
 
 
+# --- graceful-degradation DES (serve/sim.rs degradation mirror) -------
+DEG_CFG = {
+    "servers": 3,
+    "service_s": 1.0,
+    "deadline_s": 3.0,
+    "pressure_thresholds": [0.8, 1.6],
+    "floor": "draft",
+    "queue_capacity": 6,
+    "brownout_speed": 0.25,
+    "window_s": 5.0,
+    "n_requests": 240,
+    "load_multiples": [1.0, 1.5, 2.0, 2.5, 3.0],
+}
+
+DEG_PRICE_SLACK = 1.2
+DEG_FACTOR = {"draft": 0.5, "standard": 1.0, "high": 1.5}
+DEG_RANK = {"draft": 0, "standard": 1, "high": 2}
+DEG_DEMOTE = {"high": "standard", "standard": "draft", "draft": "draft"}
+
+
+def deg_tier(i):
+    """Mirror of serve::sim::degrade_tier (high/standard/draft cycle)."""
+    return ("high", "standard", "draft")[i % 3]
+
+
+def deg_speed(cfg, server, t):
+    """Rotating brownout: floor(t / window) % servers runs slowed."""
+    if math.floor(t / cfg["window_s"]) % cfg["servers"] == server:
+        return cfg["brownout_speed"]
+    return 1.0
+
+
+def deg_pressure(backlog, capacity, predicted, budget):
+    """Mirror of serve::degrade::pressure_signal (match-arm order
+    preserved: a positive budget with a finite prediction prices the
+    deficit; an expired budget is a capped one-rung deficit)."""
+    queue = backlog / capacity if capacity else 0.0
+    if predicted is not None and budget is not None and budget > 0.0 \
+            and math.isfinite(predicted):
+        deficit = max((predicted - budget) / budget, 0.0)
+    elif budget is not None and budget <= 0.0:
+        deficit = 1.0
+    else:
+        deficit = 0.0
+    return queue + deficit
+
+
+def deg_rungs(pressure, thresholds):
+    return sum(1 for t in thresholds if pressure >= t)
+
+
+def deg_admission(quality, pressure, cfg, budget, predict):
+    """Mirror of serve::degrade::admission_demotion (enabled=true)."""
+    q = quality
+    for _ in range(deg_rungs(pressure, cfg["pressure_thresholds"])):
+        if DEG_RANK[q] <= DEG_RANK[cfg["floor"]]:
+            break
+        p = predict(q)
+        if budget is not None and p is not None \
+                and p * DEG_PRICE_SLACK <= budget:
+            break
+        q = DEG_DEMOTE[q]
+    return q
+
+
+def deg_run(cfg, arrivals, ladder_on):
+    """Mirror of serve::sim::degrade_run, operation for operation.
+
+    Greedy FIFO onto the earliest-free server; two step-halves whose
+    durations follow the server's live speed sampled at each half's
+    start. The ON side walks the real admission ladder and, past the
+    top threshold, halves the remaining step work at the barrier when
+    the priced second half would blow the deadline (floor-gated)."""
+    free = [0.0] * cfg["servers"]
+    finishes = []
+    sojourns = []
+    demoted = requantized = 0
+    tier_sum = 0.0
+    min_tier = None
+    last_finish = 0.0
+    for i, a in enumerate(arrivals):
+        q = deg_tier(i)
+        k, f0 = 0, free[0]
+        for j, f in enumerate(free):
+            if f < f0:
+                k, f0 = j, f
+        start = max(a, f0)
+        budget = cfg["deadline_s"] - (start - a)
+        backlog = sum(1 for f in finishes if f > a)
+        if ladder_on:
+            spd = deg_speed(cfg, k, start)
+
+            def predict(qq):
+                return cfg["service_s"] * DEG_FACTOR[qq] / spd
+
+            p = deg_pressure(
+                backlog, cfg["queue_capacity"], predict(q), budget
+            )
+            nq = deg_admission(q, p, cfg, budget, predict)
+            if nq != q:
+                demoted += 1
+                q = nq
+        work = cfg["service_s"] * DEG_FACTOR[q]
+        t = start + 0.5 * work / deg_speed(cfg, k, start)
+        rest = 0.5 * work
+        if ladder_on and DEG_RANK[q] > DEG_RANK[cfg["floor"]]:
+            pred = rest / deg_speed(cfg, k, t)
+            rem_budget = a + cfg["deadline_s"] - t
+            arrived = sum(1 for x in arrivals if x <= t)
+            done = sum(1 for f in finishes if f <= t)
+            backlog_mid = max(arrived - (done + 1), 0)
+            p = deg_pressure(
+                backlog_mid, cfg["queue_capacity"], pred, rem_budget
+            )
+            if cfg["pressure_thresholds"] \
+                    and p >= cfg["pressure_thresholds"][-1] \
+                    and pred * DEG_PRICE_SLACK > rem_budget:
+                rest *= 0.5
+                requantized += 1
+        t += rest / deg_speed(cfg, k, t)
+        free[k] = t
+        finishes.append(t)
+        sojourns.append(t - a)
+        tier_sum += DEG_RANK[q]
+        if min_tier is None or DEG_RANK[q] < min_tier:
+            min_tier = DEG_RANK[q]
+        if t > last_finish:
+            last_finish = t
+    n = len(sojourns)
+    hits = sum(1 for s in sojourns if s <= cfg["deadline_s"])
+    span = last_finish - arrivals[0]
+    return {
+        "deadline_hit_rate": hits / n if n else 1.0,
+        "mean_sojourn_s": sum(sojourns) / n if n else 0.0,
+        "p95_sojourn_s": fed_percentile(sojourns, 95.0),
+        "throughput_rps": n / span if span > 0.0 else 0.0,
+        "demoted": demoted,
+        "requantized": requantized,
+        "mean_tier": tier_sum / n if n else 0.0,
+        "min_tier": min_tier if min_tier is not None else 0,
+    }
+
+
+def degradation_frontier():
+    """Mirror of serve::sim::simulate_degradation_frontier on the
+    DegradeSimConfig::stub_fixture() constants: the same steady
+    arrival train replayed with the quality ladder OFF and ON;
+    tests/integration_degrade.rs pins this output against the
+    in-process Rust sweep."""
+    cfg = DEG_CFG
+    cap = cfg["servers"] / cfg["service_s"]
+    points = []
+    for load_x in cfg["load_multiples"]:
+        rate = load_x * cap
+        arr = [i / rate for i in range(cfg["n_requests"])]
+        points.append(
+            {
+                "load_x": load_x,
+                "rate_rps": rate,
+                "off": deg_run(cfg, arr, False),
+                "on": deg_run(cfg, arr, True),
+            }
+        )
+    return points
+
+
 SOURCE = (
     "scripts/gen_bench_artifacts.py — deterministic mirror of the "
     "timeline/comm/planner arithmetic (uncalibrated cost model, stub "
@@ -754,6 +920,33 @@ def main():
         "frontier": frontier,
     }
 
+    # --- BENCH_degradation: quality ladder under overload ------------
+    deg_points = degradation_frontier()
+    deg_requant_total = 0
+    for pt in deg_points:
+        assert pt["off"]["demoted"] == 0
+        assert pt["off"]["requantized"] == 0
+        assert pt["on"]["min_tier"] >= DEG_RANK[DEG_CFG["floor"]], (
+            f'x{pt["load_x"]}: served below the floor'
+        )
+        deg_requant_total += pt["on"]["requantized"]
+        if pt["load_x"] >= 2.0:
+            assert (
+                pt["on"]["deadline_hit_rate"]
+                > pt["off"]["deadline_hit_rate"]
+            ), f'x{pt["load_x"]}: ladder must beat shedding'
+            assert pt["on"]["demoted"] > 0, (
+                f'x{pt["load_x"]}: the winning side must demote'
+            )
+    assert deg_requant_total > 0, "top rung never fired in the sweep"
+    degradation = {
+        "bench": "degradation",
+        "source": "scripts/gen_bench_artifacts.py",
+        "halo": "quality-ladder",
+        "config": DEG_CFG,
+        "points": deg_points,
+    }
+
     for name, obj in [
         ("BENCH_serving.json", serving),
         ("BENCH_multires.json", multires),
@@ -761,6 +954,7 @@ def main():
         ("BENCH_halo.json", halo_bench),
         ("BENCH_batching.json", batching),
         ("BENCH_federation.json", federation),
+        ("BENCH_degradation.json", degradation),
     ]:
         path = os.path.join(out_dir, name)
         with open(path, "w") as f:
