@@ -12,6 +12,8 @@
 //! `--gang-policy all|fixed:K|adaptive` turns on fleet partitioning:
 //! each request leases a policy-chosen GPU gang instead of planning
 //! over the whole cluster (default: no fleet, PR 1 behavior).
+//! `--io events|threads` picks the connection front-end: the default
+//! poll(2) event loop, or the legacy thread-per-connection path.
 
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -39,7 +41,13 @@ fn main() -> stadi::Result<()> {
              (empty = whole-cluster sessions)",
             Some(""),
         )
-        .flag("workers", "worker pool size", Some("2"));
+        .flag("workers", "worker pool size", Some("2"))
+        .flag(
+            "io",
+            "connection front-end: events (poll loop) | threads \
+             (legacy thread-per-connection)",
+            Some("events"),
+        );
     let p = cmd.parse(std::env::args().skip(1))?;
 
     let mut cfg = EngineConfig::two_gpu_default(
@@ -59,6 +67,7 @@ fn main() -> stadi::Result<()> {
         queue_capacity: 16,
         workers: p.get_parsed("workers")?,
         max_requests: 0,
+        io: stadi::config::IoMode::parse(p.get("io").unwrap())?,
         ..ServeOptions::default()
     };
     let policy_spec = p.get("gang-policy").unwrap_or("").to_string();

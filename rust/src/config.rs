@@ -332,6 +332,42 @@ pub enum ExecMode {
     Threaded,
 }
 
+/// How the serve front-end drives its connections (CLI `--io`).
+///
+/// `Events` is the default: one poll thread owns a bounded connection
+/// table (nonblocking sockets, `poll(2)`, per-connection buffers and
+/// response reordering) while workers drain the router unchanged.
+/// `Threads` keeps the pre-event-loop reader/reorder-writer thread
+/// pair per connection — selectable for one release as the
+/// byte-identical fallback, then retired (see DESIGN_SERVE.md
+/// "Event-driven serving").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IoMode {
+    #[default]
+    Events,
+    Threads,
+}
+
+impl IoMode {
+    /// `"events"` | `"threads"`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim() {
+            "events" => Ok(IoMode::Events),
+            "threads" => Ok(IoMode::Threads),
+            other => Err(Error::Config(format!(
+                "unknown io mode {other:?} (expected events | threads)"
+            ))),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            IoMode::Events => "events",
+            IoMode::Threads => "threads",
+        }
+    }
+}
+
 /// Top-level engine configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -893,5 +929,16 @@ mod tests {
         let mut bad = EngineConfig::two_gpu_default("a", &[0.0]);
         bad.halo = HaloMode::Displaced { max_staleness: 4096 };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn io_mode_parses_round_trips_and_defaults_events() {
+        assert_eq!(IoMode::default(), IoMode::Events);
+        for m in [IoMode::Events, IoMode::Threads] {
+            assert_eq!(IoMode::parse(m.as_str()).unwrap(), m);
+        }
+        assert_eq!(IoMode::parse(" events ").unwrap(), IoMode::Events);
+        assert!(IoMode::parse("epoll").is_err());
+        assert!(IoMode::parse("").is_err());
     }
 }

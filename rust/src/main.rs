@@ -218,6 +218,20 @@ fn cmd_serve(args: impl Iterator<Item = String>) -> Result<()> {
         .flag("workers", "concurrent in-flight requests", Some("2"))
         .flag("max-requests", "stop after N requests (0 = run forever)", Some("0"))
         .flag(
+            "connections",
+            "simultaneously-open client connection cap (the event \
+             loop's table size; excess connections wait in the OS \
+             accept backlog)",
+            Some("256"),
+        )
+        .flag(
+            "io",
+            "connection front-end: events (single poll-loop thread) | \
+             threads (one reader+writer thread pair per connection; \
+             kept byte-identical for one release)",
+            Some("events"),
+        )
+        .flag(
             "gang-policy",
             "fleet partitioning: all | fixed:K | adaptive | deadline | \
              batched:K (empty = whole-cluster sessions)",
@@ -321,6 +335,8 @@ fn cmd_serve(args: impl Iterator<Item = String>) -> Result<()> {
         queue_capacity: p.get_parsed("queue")?,
         workers: p.get_parsed("workers")?,
         max_requests: p.get_parsed("max-requests")?,
+        max_connections: p.get_parsed("connections")?,
+        io: stadi::config::IoMode::parse(p.get("io").unwrap())?,
         ..ServeOptions::default()
     };
     // The engine config's `batch` block is the baseline; either CLI

@@ -1,12 +1,15 @@
 //! Serving front-end: JSON-lines protocol (v2 `GenerationSpec`
-//! requests, v1 seed lines kept compatible), thread-safe bounded
-//! priority router (priority desc / earliest-deadline / FIFO, with
-//! dequeue-time deadline shedding), concurrent TCP server (accept
-//! loop + worker pool over per-request sessions, optionally
-//! fleet-partitioned via gang policies or federated across a
-//! multi-node [`FrontTier`](crate::federation::FrontTier)), and the
-//! M/G/c + gang-policy + mixed-priority + federation queueing
-//! simulations.
+//! requests, v1 seed lines kept compatible, with a lazy wire scanner
+//! on the hot path that falls back to the full tree parse on anything
+//! unusual), thread-safe bounded priority router (priority desc /
+//! earliest-deadline / FIFO, with dequeue-time deadline shedding),
+//! concurrent TCP server (a single poll(2) event loop owning a
+//! bounded connection table — `--io threads` keeps the old
+//! thread-per-connection path for one release — plus a worker pool
+//! over per-request sessions, optionally fleet-partitioned via gang
+//! policies or federated across a multi-node
+//! [`FrontTier`](crate::federation::FrontTier)), and the M/G/c +
+//! gang-policy + mixed-priority + federation queueing simulations.
 //!
 //! See rust/DESIGN_SERVE.md for the architecture diagram, the fleet
 //! lease lifecycle, and locking rules.

@@ -25,11 +25,20 @@
 //! The latent itself is summarized (sum + first values) rather than
 //! shipped — clients needing pixels use the library API; the server
 //! exists to exercise routing/queueing on the request path.
+//!
+//! **Lazy hot path.** [`parse_lazy`] scans the common request shape
+//! in place (one pass, zero allocations beyond the id) and bails to
+//! [`WireRequest::parse`] on *anything* unusual — escape sequences,
+//! unknown or duplicated fields, type surprises, trailing bytes — so
+//! the two paths are equivalent by construction: the fast scan only
+//! ever succeeds, and every error (and every odd-but-valid line) is
+//! produced by the one full-tree parser. A `QUICKCHECK_SEED` property
+//! below pins the equivalence over randomized lines.
 
 use crate::coordinator::Generation;
 use crate::error::{Error, Result};
-use crate::spec::{self, GenerationSpec};
-use crate::util::json::{self, Object, Value};
+use crate::spec::{self, GenerationSpec, Priority, Quality};
+use crate::util::json::{self, Object, Scanner, Value};
 
 /// A parsed client request: id + typed generation spec.
 #[derive(Debug, Clone, PartialEq)]
@@ -87,6 +96,145 @@ impl WireRequest {
         o.insert("seed", Value::Num(self.spec.seed as f64));
         json::to_string(&Value::Obj(o))
     }
+}
+
+/// Parse one request line on the lazy hot path: a single in-place
+/// scan over the common v1/v2 shape that never builds a JSON tree.
+/// Result-equivalent to [`WireRequest::parse`] (including the error
+/// and its wire code) — see [`parse_lazy_tracked`] for how.
+pub fn parse_lazy(line: &str) -> Result<WireRequest> {
+    parse_lazy_tracked(line).0
+}
+
+/// [`parse_lazy`] plus whether the in-place scan handled the line
+/// (`true`) or bailed to the full tree parse (`false`) — the server
+/// feeds the flag into `RouterStats`. Equivalence is by construction:
+/// the fast scan only ever *succeeds* (on the exact common shape,
+/// converted and validated through the same `spec` helpers the tree
+/// path uses), and everything else — errors included — re-parses
+/// through the one authoritative [`WireRequest::parse`].
+pub fn parse_lazy_tracked(line: &str) -> (Result<WireRequest>, bool) {
+    match fast_scan(line) {
+        Some(req) => (Ok(req), true),
+        None => (WireRequest::parse(line), false),
+    }
+}
+
+/// The conservative single-pass scan. `None` means "bail to the full
+/// parse" — taken on anything but a flat object of known keys (`id`
+/// plus either `seed` or a flat `spec` object of known spec keys)
+/// with no escapes, no duplicates and no trailing bytes.
+fn fast_scan(line: &str) -> Option<WireRequest> {
+    let mut sc = Scanner::new(line);
+    if !sc.eat(b'{') {
+        return None;
+    }
+    let mut id: Option<&str> = None;
+    let mut seed: Option<f64> = None;
+    let mut spec: Option<GenerationSpec> = None;
+    if sc.eat(b'}') {
+        return None; // empty object: the tree path reports missing id
+    }
+    loop {
+        let key = sc.raw_string()?;
+        if !sc.eat(b':') {
+            return None;
+        }
+        match key {
+            "id" if id.is_none() => id = Some(sc.raw_string()?),
+            "seed" if seed.is_none() && spec.is_none() => {
+                seed = Some(sc.number()?);
+            }
+            "spec" if spec.is_none() && seed.is_none() => {
+                spec = Some(scan_spec(&mut sc)?);
+            }
+            // Unknown key (the tree path tolerates it), duplicate
+            // (tree path is last-wins), or a v1+v2 mix (typed
+            // rejection): all routed through the full parse.
+            _ => return None,
+        }
+        if sc.eat(b',') {
+            continue;
+        }
+        if sc.eat(b'}') {
+            break;
+        }
+        return None;
+    }
+    if !sc.at_end() {
+        return None; // tree path rejects trailing characters
+    }
+    let spec = match (spec, seed) {
+        (Some(s), None) => s,
+        (None, Some(n)) => GenerationSpec::new()
+            .seed(spec::parse_seed(&Value::Num(n)).ok()?),
+        _ => return None, // neither: tree path reports the miss
+    };
+    Some(WireRequest { id: id?.to_string(), spec })
+}
+
+/// Scan the flat v2 `"spec"` object. Field conversion goes through
+/// the exact helpers the tree path uses (`spec::parse_seed`,
+/// `Value::as_usize`, `Quality::parse`, …) and ends with the same
+/// `validate()`, so an accepted spec is equal by construction and any
+/// rejection bails for the identical typed error.
+fn scan_spec(sc: &mut Scanner) -> Option<GenerationSpec> {
+    if !sc.eat(b'{') {
+        return None;
+    }
+    let mut spec = GenerationSpec::new();
+    if sc.eat(b'}') {
+        return Some(spec); // {} is a valid all-defaults spec
+    }
+    let mut seen_seed = false;
+    let mut seen_quality = false;
+    let mut seen_priority = false;
+    loop {
+        let key = sc.raw_string()?;
+        if !sc.eat(b':') {
+            return None;
+        }
+        match key {
+            "seed" if !seen_seed => {
+                seen_seed = true;
+                spec.seed =
+                    spec::parse_seed(&Value::Num(sc.number()?)).ok()?;
+            }
+            "steps" if spec.steps.is_none() => {
+                spec.steps =
+                    Some(Value::Num(sc.number()?).as_usize().ok()?);
+            }
+            "height" if spec.height_px.is_none() => {
+                spec.height_px =
+                    Some(Value::Num(sc.number()?).as_usize().ok()?);
+            }
+            "width" if spec.width_px.is_none() => {
+                spec.width_px =
+                    Some(Value::Num(sc.number()?).as_usize().ok()?);
+            }
+            "quality" if !seen_quality => {
+                seen_quality = true;
+                spec.quality = Quality::parse(sc.raw_string()?).ok()?;
+            }
+            "priority" if !seen_priority => {
+                seen_priority = true;
+                spec.priority = Priority::parse(sc.raw_string()?).ok()?;
+            }
+            "deadline_s" if spec.deadline_s.is_none() => {
+                spec.deadline_s = Some(sc.number()?);
+            }
+            _ => return None, // unknown or duplicated spec key
+        }
+        if sc.eat(b',') {
+            continue;
+        }
+        if sc.eat(b'}') {
+            break;
+        }
+        return None;
+    }
+    spec.validate().ok()?;
+    Some(spec)
 }
 
 /// Serialize a successful generation, echoing the resolved spec.
@@ -158,6 +306,7 @@ mod tests {
     use super::*;
     use crate::spec::{Priority, Quality};
     use crate::util::proptest::{ensure, forall};
+    use crate::util::rng::Pcg32;
 
     #[test]
     fn v1_request_parses_as_default_spec() {
@@ -373,6 +522,193 @@ mod tests {
                     format!("roundtrip drift: {spec:?} -> {:?}", back.spec),
                 )?;
                 Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn lazy_fast_path_covers_common_lines_and_bails_on_odd_ones() {
+        // The canonical v1 and v2 shapes take the in-place scan.
+        for line in [
+            r#"{"id":"r1","seed":42}"#,
+            r#"{"id": "r1", "seed": 42}"#,
+            concat!(
+                r#"{"id":"r1","spec":{"seed":9,"steps":28,"#,
+                r#""height":256,"width":256,"quality":"standard","#,
+                r#""priority":"normal","deadline_s":2.5}}"#,
+            ),
+            r#"{"id":"r1","spec":{}}"#,
+        ] {
+            let (r, fast) = parse_lazy_tracked(line);
+            assert!(fast, "expected fast path for {line}");
+            assert_eq!(r.unwrap(), WireRequest::parse(line).unwrap());
+        }
+        // Odd-but-valid lines fall back (and still parse identically);
+        // invalid ones fall back for the identical typed error.
+        for line in [
+            r#"{"id":"a\nb","seed":1}"#,          // escape in id
+            r#"{"id":"r1","seed":1,"zzz":2}"#,    // unknown field
+            r#"{"id":"r1","spec":{"seed":1,"future_knob":true}}"#,
+            r#"{"id":"a","id":"b","seed":1}"#,    // duplicate key
+            r#"{"id":"x","seed":1,"spec":{}}"#,   // v1+v2 mix
+            r#"{"id":"x","seed":-1}"#,            // typed bad_spec
+            "not json",
+        ] {
+            let (r, fast) = parse_lazy_tracked(line);
+            assert!(!fast, "expected fallback for {line}");
+            match (r, WireRequest::parse(line)) {
+                (Ok(a), Ok(b)) => assert_eq!(a, b, "{line}"),
+                (Err(a), Err(b)) => {
+                    assert_eq!(a.wire_code(), b.wire_code(), "{line}");
+                }
+                (a, b) => panic!("drift on {line}: {a:?} vs {b:?}"),
+            }
+        }
+    }
+
+    /// One randomized wire line (no shrinking — the reproducing line
+    /// is printed verbatim, which is already the minimal artifact).
+    #[derive(Debug, Clone)]
+    struct LineCase {
+        line: String,
+    }
+
+    impl crate::util::proptest::Shrink for LineCase {}
+
+    /// ASCII-only line soup spanning both versions and every bail
+    /// trigger: clean v1/v2, escaped ids, huge/negative/float seeds,
+    /// unknown and duplicated fields, v1+v2 mixes, stray whitespace,
+    /// truncated prefixes and plain garbage. ASCII-only keeps byte
+    /// truncation valid UTF-8.
+    fn random_wire_line(rng: &mut Pcg32) -> String {
+        let id: String = (0..1 + rng.below(8))
+            .map(|_| char::from(b'a' + rng.below(26) as u8))
+            .collect();
+        let seed_lit = match rng.below(10) {
+            0 => "2.5".to_string(),
+            1 => "1e3".to_string(),
+            2 => format!("{}", crate::spec::MAX_SEED + rng.below(3) as u64),
+            3 => format!("-{}", 1 + rng.below(100)),
+            4 => format!("{}", 1u64 << (40 + rng.below(23))),
+            _ => format!("{}", rng.below(100_000)),
+        };
+        match rng.below(10) {
+            0 => format!("{{\"id\":\"{id}\",\"seed\":{seed_lit}}}"),
+            1 | 2 => {
+                // v2 with a random field subset; some values invalid
+                // (steps 0/1, heights off the VAE grid, deadlines
+                // <= 0) so typed bad_spec errors are exercised too.
+                let mut parts = vec![format!("\"seed\":{seed_lit}")];
+                if rng.below(2) == 0 {
+                    parts.push(format!("\"steps\":{}", rng.below(60)));
+                }
+                if rng.below(2) == 0 {
+                    parts.push(format!("\"height\":{}", 4 * rng.below(80)));
+                }
+                if rng.below(2) == 0 {
+                    parts.push(format!("\"width\":{}", 8 * rng.below(40)));
+                }
+                if rng.below(2) == 0 {
+                    let q = ["draft", "standard", "high", "ultra"]
+                        [rng.below(4) as usize];
+                    parts.push(format!("\"quality\":\"{q}\""));
+                }
+                if rng.below(2) == 0 {
+                    let p = ["low", "normal", "high", "urgent"]
+                        [rng.below(4) as usize];
+                    parts.push(format!("\"priority\":\"{p}\""));
+                }
+                if rng.below(2) == 0 {
+                    parts.push(format!(
+                        "\"deadline_s\":{}",
+                        rng.below(40) as f64 / 8.0 - 1.0
+                    ));
+                }
+                format!(
+                    "{{\"id\":\"{id}\",\"spec\":{{{}}}}}",
+                    parts.join(",")
+                )
+            }
+            3 => format!("{{\"id\":\"a\\n{id}\",\"seed\":{seed_lit}}}"),
+            4 => format!(
+                "{{\"id\":\"{id}\",\"seed\":{seed_lit},\
+                 \"extra\":[1,{{\"z\":null}}]}}"
+            ),
+            5 => format!(
+                "{{\"id\":\"{id}\",\"spec\":{{\"seed\":{seed_lit},\
+                 \"future_knob\":true}}}}"
+            ),
+            6 => format!(
+                "{{\"id\":\"{id}\",\"id\":\"dup\",\"seed\":{seed_lit}}}"
+            ),
+            7 => format!(
+                "{{\"id\":\"{id}\",\"seed\":{seed_lit},\"spec\":{{}}}}"
+            ),
+            8 => format!(
+                " {{ \"id\" : \"{id}\" ,\t\"seed\" : {seed_lit} }} "
+            ),
+            _ => {
+                let base = format!("{{\"id\":\"{id}\",\"seed\":{seed_lit}}}");
+                match rng.below(3) {
+                    0 => base[..rng.below(base.len() as u32 + 1) as usize]
+                        .to_string(),
+                    1 => format!("{base} trailing"),
+                    _ => ["", "not json", "{", "[1,2]", "{\"seed\":}"]
+                        [rng.below(5) as usize]
+                        .to_string(),
+                }
+            }
+        }
+    }
+
+    /// Satellite: `parse_lazy` is equivalent to the full-tree parse —
+    /// identical structs and re-serialized bytes on success, identical
+    /// wire code and error line on failure — over randomized lines.
+    /// Any divergence prints the reproducing line verbatim.
+    #[test]
+    fn property_lazy_parse_matches_full_parse() {
+        forall(
+            59,
+            500,
+            |rng| LineCase { line: random_wire_line(rng) },
+            |LineCase { line }| {
+                let full = WireRequest::parse(line);
+                let (lazy, _fast) = parse_lazy_tracked(line);
+                match (&full, &lazy) {
+                    (Ok(a), Ok(b)) => {
+                        ensure(
+                            a == b,
+                            format!(
+                                "struct drift on {line:?}: {a:?} vs {b:?}"
+                            ),
+                        )?;
+                        ensure(
+                            a.to_line() == b.to_line(),
+                            format!("byte drift on {line:?}"),
+                        )
+                    }
+                    (Err(a), Err(b)) => {
+                        ensure(
+                            a.wire_code() == b.wire_code(),
+                            format!(
+                                "code drift on {line:?}: {} vs {}",
+                                a.wire_code(),
+                                b.wire_code()
+                            ),
+                        )?;
+                        ensure(
+                            error_line("p", a) == error_line("p", b),
+                            format!(
+                                "error-line drift on {line:?}: \
+                                 {a:?} vs {b:?}"
+                            ),
+                        )
+                    }
+                    _ => Err(format!(
+                        "ok/err drift on {line:?}: full={full:?} \
+                         lazy={lazy:?}"
+                    )),
+                }
             },
         );
     }

@@ -174,6 +174,15 @@ pub struct RouterStats {
     /// Requests whose running step suffix was re-quantized mid-flight
     /// at a sync barrier under queueing pressure.
     pub requantized: u64,
+    /// Request lines the lazy in-place scanner handled without
+    /// building a JSON tree (`serve::protocol::parse_lazy` fast path).
+    pub lazy_parsed: u64,
+    /// Request lines that bailed from the lazy scan to the full-tree
+    /// parse (escapes, unknown fields, errors — anything unusual).
+    pub fallback_parsed: u64,
+    /// Lines that blew past the event loop's line-length cap and were
+    /// answered with a typed `bad_request` (connection kept).
+    pub oversized: u64,
     pub queue_len: usize,
     /// Requests currently parked in a batching admission window
     /// (popped by a worker, not yet executing). Part of the backlog
@@ -215,6 +224,9 @@ struct Inner<T> {
     deadline_shed: u64,
     demoted: u64,
     requantized: u64,
+    lazy_parsed: u64,
+    fallback_parsed: u64,
+    oversized: u64,
     parked: usize,
     batched: u64,
     solo: u64,
@@ -248,6 +260,9 @@ impl<T: Prioritized> Router<T> {
                 deadline_shed: 0,
                 demoted: 0,
                 requantized: 0,
+                lazy_parsed: 0,
+                fallback_parsed: 0,
+                oversized: 0,
                 parked: 0,
                 batched: 0,
                 solo: 0,
@@ -482,6 +497,25 @@ impl<T: Prioritized> Router<T> {
         g.requantized += requantized;
     }
 
+    /// Record one parsed request line: `lazy` says whether the
+    /// in-place scanner handled it or it bailed to the full-tree
+    /// parse. Connection readers call this per line; the ratio is the
+    /// live measure of how much of the wire mix rides the hot path.
+    pub fn record_parse(&self, lazy: bool) {
+        let mut g = self.inner.lock().unwrap();
+        if lazy {
+            g.lazy_parsed += 1;
+        } else {
+            g.fallback_parsed += 1;
+        }
+    }
+
+    /// Record a line that exceeded the event loop's length cap and
+    /// was answered with a typed `bad_request` without buffering it.
+    pub fn record_oversized(&self) {
+        self.inner.lock().unwrap().oversized += 1;
+    }
+
     /// Record the outcome of one executed item (workers call this).
     pub fn record_outcome(&self, ok: bool, latency_s: f64) {
         let mut g = self.inner.lock().unwrap();
@@ -504,6 +538,9 @@ impl<T: Prioritized> Router<T> {
             deadline_shed: g.deadline_shed,
             demoted: g.demoted,
             requantized: g.requantized,
+            lazy_parsed: g.lazy_parsed,
+            fallback_parsed: g.fallback_parsed,
+            oversized: g.oversized,
             queue_len: g.queue.len(),
             parked: g.parked,
             batched: g.batched,
@@ -699,6 +736,21 @@ mod tests {
         let s = r.stats();
         assert_eq!(s.demoted, 3);
         assert_eq!(s.requantized, 1);
+    }
+
+    #[test]
+    fn parse_counters_accumulate_into_stats() {
+        let r: Router<u64> = Router::new(4);
+        let s = r.stats();
+        assert_eq!((s.lazy_parsed, s.fallback_parsed, s.oversized), (0, 0, 0));
+        r.record_parse(true);
+        r.record_parse(true);
+        r.record_parse(false);
+        r.record_oversized();
+        let s = r.stats();
+        assert_eq!(s.lazy_parsed, 2);
+        assert_eq!(s.fallback_parsed, 1);
+        assert_eq!(s.oversized, 1);
     }
 
     #[test]

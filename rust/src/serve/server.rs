@@ -1,19 +1,26 @@
 //! TCP JSON-lines server: the deployable front-end, truly concurrent.
 //!
-//! `stadi serve --addr 127.0.0.1:7878 --workers 4` runs three kinds of
+//! `stadi serve --addr 127.0.0.1:7878 --workers 4` runs two kinds of
 //! threads around the thread-safe bounded priority [`Router`]
 //! (priority desc, earliest deadline, FIFO; expired requests shed on
 //! dequeue with the typed `deadline` wire code):
 //!
-//! * the **accept loop** (caller's thread) — nonblocking listener
-//!   polled every few ms so a set `stop` flag interrupts it even when
-//!   no connection ever arrives;
-//! * one **connection handler** per client — a reader that parses one
-//!   request per line and enqueues it (busy rejections answered
-//!   immediately with the structured `busy` code), plus a writer that
-//!   reorders responses by per-connection sequence number so every
-//!   client sees answers in the order it sent requests (FIFO fairness
-//!   per connection) no matter which worker finished first;
+//! * the **event loop** (caller's thread) — a single `poll(2)`
+//!   readiness loop owning the nonblocking listener and a bounded
+//!   connection table ([`IoMode::Events`], the default on unix). Each
+//!   table slot carries the connection's read buffer (line framing,
+//!   oversize cap), per-connection sequence numbers, the FIFO reorder
+//!   map, and a bounded write queue — so response ordering and write
+//!   backpressure live in the table, not in two threads per
+//!   connection. Requests parse on the lazy wire hot path
+//!   ([`protocol::parse_lazy`]) and enqueue (busy rejections answered
+//!   immediately with the structured `busy` code); completions flow
+//!   back from the workers over a self-pipe that wakes `poll`. The
+//!   listener is registered only while the table has a free slot, so
+//!   at `max_connections` new clients wait in the OS accept backlog
+//!   with zero CPU spent on them. `--io threads` keeps the previous
+//!   reader/reorder-writer thread pair per connection (byte-identical
+//!   responses, pinned by the connection-scale test) for one release.
 //! * a **worker pool** draining the queue into per-request
 //!   [`Session`](crate::coordinator::Session)s on the shared
 //!   [`EngineCore`] — N in-flight requests overlap their sampler /
@@ -24,14 +31,22 @@
 //! with a stub runner; production uses [`SessionRunner`]).
 
 use std::collections::BTreeMap;
+#[cfg(unix)]
+use std::collections::VecDeque;
+#[cfg(unix)]
+use std::io::Read;
 use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::io::AsRawFd;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+#[cfg(unix)]
+use std::sync::Mutex;
 use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::config::{BatchConfig, DegradeConfig};
+use crate::config::{BatchConfig, DegradeConfig, IoMode};
 use crate::coordinator::{EngineCore, FusedJoiner, Generation};
 use crate::error::{Error, Result};
 use crate::federation::FrontTier;
@@ -48,8 +63,24 @@ const ACCEPT_POLL: Duration = Duration::from_millis(10);
 const READ_POLL: Duration = Duration::from_millis(100);
 /// Cap on how long a response write may block: a client that stops
 /// reading (full TCP send buffer) must not wedge its writer thread —
-/// and with it `serve`'s final join — indefinitely.
+/// and with it `serve`'s final join — indefinitely. The event loop
+/// applies the same bound as a stall deadline: a connection whose
+/// socket has accepted no response bytes for this long while bytes
+/// are queued is torn down.
 const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+/// Event-path cap on one request line. A line that grows past it
+/// without a newline is answered with a typed `bad_request` and
+/// discarded up to its terminating newline; the connection survives.
+/// Generous: real v2 request lines are a few hundred bytes.
+#[cfg(unix)]
+const MAX_LINE_BYTES: usize = 64 * 1024;
+/// Event-path read gate: once this many unwritten response bytes are
+/// queued on a connection (client not reading), stop reading new
+/// requests from it until the client drains — already-admitted work
+/// still answers, but a non-reading client can't grow its queue
+/// unboundedly or wedge anyone else.
+#[cfg(unix)]
+const WRITE_HIGH_WATER: usize = 256 * 1024;
 
 /// Serving knobs.
 #[derive(Debug, Clone)]
@@ -64,11 +95,18 @@ pub struct ServeOptions {
     /// jobs already in flight on other workers when the Nth completes
     /// still drain (their clients are owed responses) and are counted.
     pub max_requests: usize,
-    /// Cap on simultaneously-open client connections (each costs a
-    /// reader + writer thread). At the cap the accept loop pauses, so
-    /// further connections wait in the OS accept backlog — the job
-    /// queue bounds work, this bounds threads.
+    /// Cap on simultaneously-open client connections — the event
+    /// loop's table size (threads mode: one reader + writer thread
+    /// pair each). At the cap the listener is deregistered from the
+    /// poll set, so further connections wait in the OS accept backlog
+    /// — the job queue bounds work, this bounds table slots/threads.
     pub max_connections: usize,
+    /// Connection front-end: [`IoMode::Events`] (default) runs every
+    /// connection in the single poll-thread table; [`IoMode::Threads`]
+    /// keeps the pre-event-loop thread-per-connection path
+    /// (byte-identical responses, selectable for one release). On
+    /// non-unix targets events mode falls back to threads.
+    pub io: IoMode,
     /// Cross-request batching (fused denoise sessions). Disabled by
     /// default: the solo path is pinned byte-identical to pre-batching
     /// behavior.
@@ -87,6 +125,7 @@ impl Default for ServeOptions {
             workers: 2,
             max_requests: 0,
             max_connections: 256,
+            io: IoMode::default(),
             batch: BatchConfig::default(),
             degrade: DegradeConfig::default(),
         }
@@ -744,12 +783,173 @@ impl JobRunner for SessionRunner {
     }
 }
 
-/// A job bundled with its reply route: which connection (the channel)
-/// and where in that connection's response order (the sequence number).
+/// Thin std-only `poll(2)` / `pipe(2)` wrapper. No new dependency:
+/// std already links libc on unix, so declaring the four prototypes
+/// we need is enough.
+#[cfg(unix)]
+mod sys {
+    /// Mirror of C `struct pollfd` (identical layout on every unix
+    /// std supports: int fd, short events, short revents).
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    #[cfg(target_os = "macos")]
+    type NfdsT = u32;
+    #[cfg(not(target_os = "macos"))]
+    type NfdsT = u64;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: i32) -> i32;
+        fn pipe(fds: *mut i32) -> i32;
+        fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+        fn close(fd: i32) -> i32;
+    }
+
+    /// Block until some fd is ready or `timeout_ms` elapses; returns
+    /// the number of ready fds (0 on timeout; errors — in practice
+    /// only EINTR — read as a timeout tick, the caller re-polls).
+    pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> usize {
+        let n = unsafe {
+            poll(fds.as_mut_ptr(), fds.len() as NfdsT, timeout_ms)
+        };
+        n.max(0) as usize
+    }
+
+    /// Self-pipe for waking the poll thread from worker threads.
+    pub struct WakePipe {
+        read_fd: i32,
+        write_fd: i32,
+    }
+
+    impl WakePipe {
+        pub fn new() -> std::io::Result<WakePipe> {
+            let mut fds = [0i32; 2];
+            if unsafe { pipe(fds.as_mut_ptr()) } != 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(WakePipe { read_fd: fds[0], write_fd: fds[1] })
+        }
+
+        pub fn read_fd(&self) -> i32 {
+            self.read_fd
+        }
+
+        /// One byte per wake. A full pipe means tens of thousands of
+        /// wakes are already pending, so blocking briefly here (until
+        /// the poll thread drains) is harmless — the wake the caller
+        /// wanted is guaranteed either way.
+        pub fn wake(&self) {
+            let b = [1u8];
+            let _ = unsafe { write(self.write_fd, b.as_ptr(), 1) };
+        }
+
+        /// Drain pending wake bytes. Call only after `poll` reported
+        /// the read end readable: one read then never blocks, and any
+        /// bytes beyond the buffer just re-wake the next poll.
+        pub fn drain(&self) {
+            let mut buf = [0u8; 4096];
+            let _ = unsafe {
+                read(self.read_fd, buf.as_mut_ptr(), buf.len())
+            };
+        }
+    }
+
+    impl Drop for WakePipe {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.read_fd);
+                close(self.write_fd);
+            }
+        }
+    }
+}
+
+/// Slot + generation pair naming one live connection in the event
+/// loop's table. The generation guards completion routing: a slot
+/// reused after its connection died gets a fresh generation, so a
+/// late completion addressed to the dead connection is discarded
+/// instead of landing on the new tenant.
+#[cfg(unix)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct ConnId {
+    slot: usize,
+    generation: u64,
+}
+
+/// Completion mailbox from the worker pool back to the poll thread:
+/// push the finished line, then poke the wake pipe so a `poll` blocked
+/// on idle sockets returns immediately. Shared by `Arc` with every
+/// in-flight event-mode ticket; the pipe fds close only when the last
+/// clone drops, so a completion can never write into a reused fd.
+#[cfg(unix)]
+struct CompletionQueue {
+    items: Mutex<Vec<(ConnId, u64, String)>>,
+    pipe: sys::WakePipe,
+}
+
+#[cfg(unix)]
+impl CompletionQueue {
+    fn new() -> std::io::Result<CompletionQueue> {
+        Ok(CompletionQueue {
+            items: Mutex::new(Vec::new()),
+            pipe: sys::WakePipe::new()?,
+        })
+    }
+
+    fn push(&self, conn: ConnId, seq: u64, line: String) {
+        self.items.lock().unwrap().push((conn, seq, line));
+        self.pipe.wake();
+    }
+
+    fn drain(&self) -> Vec<(ConnId, u64, String)> {
+        std::mem::take(&mut *self.items.lock().unwrap())
+    }
+}
+
+/// Where a finished ticket's response line goes: the per-connection
+/// writer channel (threads mode) or the event loop's completion
+/// mailbox plus the connection's table id (events mode).
+enum ReplyRoute {
+    Channel(mpsc::Sender<(u64, String)>),
+    #[cfg(unix)]
+    Event { queue: Arc<CompletionQueue>, conn: ConnId },
+}
+
+impl ReplyRoute {
+    fn send(&self, seq: u64, line: String) {
+        match self {
+            // A channel send error means the connection (and its
+            // writer) died first; the response is undeliverable
+            // either way, same as an events-mode generation miss.
+            ReplyRoute::Channel(tx) => {
+                let _ = tx.send((seq, line));
+            }
+            #[cfg(unix)]
+            ReplyRoute::Event { queue, conn } => {
+                queue.push(*conn, seq, line);
+            }
+        }
+    }
+}
+
+/// A job bundled with its reply route: which connection and where in
+/// that connection's response order (the sequence number).
 struct Ticket {
     job: Job,
     seq: u64,
-    reply: mpsc::Sender<(u64, String)>,
+    reply: ReplyRoute,
 }
 
 /// Queue position comes from the request spec: priority tier, then
@@ -761,6 +961,571 @@ impl Prioritized for Ticket {
 
     fn deadline(&self) -> Option<Instant> {
         self.job.deadline()
+    }
+}
+
+/// One event-loop table slot: everything the thread-per-connection
+/// path kept in a reader thread's stack and a writer thread's reorder
+/// map, flattened into plain state the poll thread owns.
+#[cfg(unix)]
+struct Conn {
+    stream: TcpStream,
+    generation: u64,
+    /// Raw bytes read but not yet framed into lines.
+    rbuf: Vec<u8>,
+    /// Skipping the tail of an already-answered oversized line, up to
+    /// its terminating newline.
+    discarding: bool,
+    /// Client half-closed its write side (EOF): no more requests will
+    /// arrive; the connection stays in the table until every assigned
+    /// sequence number has been answered and flushed.
+    eof: bool,
+    /// Next request sequence number to assign on this connection.
+    next_seq: u64,
+    /// Next response sequence to put on the wire (per-connection FIFO).
+    next_write: u64,
+    /// Out-of-order completions parked until their turn.
+    pending: BTreeMap<u64, String>,
+    /// Encoded response bytes the socket hasn't accepted yet.
+    wbuf: VecDeque<u8>,
+    /// Last instant the socket accepted response bytes (or the write
+    /// queue went from empty to non-empty) — drives the stalled-writer
+    /// teardown at WRITE_TIMEOUT.
+    last_progress: Instant,
+}
+
+/// What one framing pass pulled out of a connection's read buffer.
+#[cfg(unix)]
+enum Frame {
+    /// A complete request line (newline stripped), or the final
+    /// unterminated line at EOF.
+    Line(String),
+    /// The buffer grew past MAX_LINE_BYTES with no newline: answer a
+    /// typed `bad_request` now and discard to the next newline.
+    Oversize,
+    /// Invalid UTF-8 on the wire — the threads-mode `read_line` dies
+    /// on this too (InvalidData), so drop the connection.
+    BadUtf8,
+    /// Nothing more to frame.
+    Done,
+}
+
+/// The readiness front-end: one thread, one `poll(2)` set, a bounded
+/// connection table. Replaces the reader/reorder-writer thread pair
+/// per connection; the worker pool is unchanged and talks back
+/// through the [`CompletionQueue`]'s wake pipe.
+#[cfg(unix)]
+struct EventLoop {
+    listener: TcpListener,
+    router: Arc<Router<Ticket>>,
+    runner: Arc<dyn JobRunner>,
+    queue: Arc<CompletionQueue>,
+    /// Slot-indexed table; `None` slots are free. Fixed size =
+    /// `max_connections`: the table never reallocates, and "table
+    /// full" is exactly "listener deregistered".
+    conns: Vec<Option<Conn>>,
+    n_open: usize,
+    next_generation: u64,
+}
+
+#[cfg(unix)]
+impl EventLoop {
+    fn new(
+        listener: TcpListener,
+        router: Arc<Router<Ticket>>,
+        runner: Arc<dyn JobRunner>,
+        max_connections: usize,
+    ) -> std::io::Result<EventLoop> {
+        let mut conns = Vec::new();
+        conns.resize_with(max_connections.max(1), || None);
+        Ok(EventLoop {
+            listener,
+            router,
+            runner,
+            queue: Arc::new(CompletionQueue::new()?),
+            conns,
+            n_open: 0,
+            next_generation: 0,
+        })
+    }
+
+    /// Run until `stop`/`done` is set or the listener fails. Returns
+    /// the fatal accept error, if any. Connections may still be open
+    /// on return; the caller drains workers and then calls
+    /// [`EventLoop::shutdown_flush`].
+    fn run(
+        &mut self,
+        stop: &Option<Arc<AtomicBool>>,
+        done: &Arc<AtomicBool>,
+    ) -> Option<std::io::Error> {
+        loop {
+            if done.load(Ordering::SeqCst) {
+                return None;
+            }
+            if let Some(s) = stop {
+                if s.load(Ordering::Relaxed) {
+                    return None;
+                }
+            }
+            self.deliver_completions();
+            self.reap_stalled();
+
+            // Build the poll set: the wake pipe always; the listener
+            // only while the table has a free slot (at the cap, new
+            // clients wait in the OS accept backlog and cost zero
+            // CPU — no busy-wait); each connection for read and/or
+            // write interest. A connection over its write high-water
+            // mark loses read interest until the client drains.
+            let mut fds = vec![sys::PollFd {
+                fd: self.queue.pipe.read_fd(),
+                events: sys::POLLIN,
+                revents: 0,
+            }];
+            let listener_at = if self.n_open < self.conns.len() {
+                fds.push(sys::PollFd {
+                    fd: self.listener.as_raw_fd(),
+                    events: sys::POLLIN,
+                    revents: 0,
+                });
+                Some(fds.len() - 1)
+            } else {
+                None
+            };
+            // (poll-set index, table slot) for every registered conn.
+            let mut conn_at: Vec<(usize, usize)> = Vec::new();
+            for (slot, c) in self.conns.iter().enumerate() {
+                let Some(c) = c else { continue };
+                let mut events = 0i16;
+                if !c.eof && c.wbuf.len() < WRITE_HIGH_WATER {
+                    events |= sys::POLLIN;
+                }
+                if !c.wbuf.is_empty() {
+                    events |= sys::POLLOUT;
+                }
+                if events == 0 {
+                    // EOF'd or gated, waiting only on worker
+                    // completions — the wake pipe covers that.
+                    continue;
+                }
+                conn_at.push((fds.len(), slot));
+                fds.push(sys::PollFd {
+                    fd: c.stream.as_raw_fd(),
+                    events,
+                    revents: 0,
+                });
+            }
+
+            // Bounded wait so `stop`/`done` are re-checked even when
+            // no fd ever becomes ready (mirrors READ_POLL).
+            if sys::poll_fds(&mut fds, READ_POLL.as_millis() as i32)
+                == 0
+            {
+                continue;
+            }
+            if fds[0].revents != 0 {
+                self.queue.pipe.drain();
+            }
+            if let Some(i) = listener_at {
+                if fds[i].revents != 0 {
+                    if let Some(e) = self.accept_ready() {
+                        return Some(e);
+                    }
+                }
+            }
+            for (i, slot) in conn_at {
+                let re = fds[i].revents;
+                if re == 0 {
+                    continue;
+                }
+                if re & (sys::POLLERR | sys::POLLNVAL) != 0 {
+                    self.drop_conn(slot);
+                    continue;
+                }
+                if re & sys::POLLOUT != 0 {
+                    self.flush_conn(slot);
+                    self.maybe_close(slot);
+                }
+                // POLLHUP without POLLIN still needs a read to
+                // observe the EOF and run the half-close path.
+                if re & (sys::POLLIN | sys::POLLHUP) != 0 {
+                    self.read_conn(slot, done);
+                }
+            }
+        }
+    }
+
+    /// Accept until the listener would block or the table fills.
+    fn accept_ready(&mut self) -> Option<std::io::Error> {
+        while self.n_open < self.conns.len() {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    crate::log_debug!("serve", "connection from {peer}");
+                    let slot = self
+                        .conns
+                        .iter()
+                        .position(|c| c.is_none())
+                        .expect("n_open < len implies a free slot");
+                    self.next_generation += 1;
+                    self.conns[slot] = Some(Conn {
+                        stream,
+                        generation: self.next_generation,
+                        rbuf: Vec::new(),
+                        discarding: false,
+                        eof: false,
+                        next_seq: 0,
+                        next_write: 0,
+                        pending: BTreeMap::new(),
+                        wbuf: VecDeque::new(),
+                        last_progress: Instant::now(),
+                    });
+                    self.n_open += 1;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    return None;
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Some(e),
+            }
+        }
+        None
+    }
+
+    /// Pull whatever the socket has ready, frame it into lines, and
+    /// process each. Bounded per call (fairness: one firehose client
+    /// can't monopolize the poll thread — level-triggered poll
+    /// reports it readable again next iteration) and gated on the
+    /// write high-water mark.
+    fn read_conn(&mut self, slot: usize, done: &Arc<AtomicBool>) {
+        let mut buf = [0u8; 4096];
+        for _ in 0..16 {
+            let res = {
+                let Some(c) = self.conns[slot].as_mut() else {
+                    return;
+                };
+                if c.eof || c.wbuf.len() >= WRITE_HIGH_WATER {
+                    return;
+                }
+                (&c.stream).read(&mut buf)
+            };
+            match res {
+                Ok(0) => {
+                    if let Some(c) = self.conns[slot].as_mut() {
+                        c.eof = true;
+                    }
+                    // A final unterminated line still parses — the
+                    // threads-mode read_line returns it too.
+                    self.process_buffer(slot, true);
+                    self.maybe_close(slot);
+                    return;
+                }
+                Ok(n) => {
+                    if let Some(c) = self.conns[slot].as_mut() {
+                        c.rbuf.extend_from_slice(&buf[..n]);
+                    }
+                    self.process_buffer(slot, false);
+                    if done.load(Ordering::SeqCst) {
+                        return;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.drop_conn(slot);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Frame complete lines out of the read buffer and process each.
+    /// `at_eof` additionally flushes a final unterminated line.
+    fn process_buffer(&mut self, slot: usize, at_eof: bool) {
+        loop {
+            let frame = {
+                let Some(c) = self.conns[slot].as_mut() else {
+                    return;
+                };
+                match c.rbuf.iter().position(|&b| b == b'\n') {
+                    Some(nl) => {
+                        let rest = c.rbuf.split_off(nl + 1);
+                        let mut head =
+                            std::mem::replace(&mut c.rbuf, rest);
+                        head.pop(); // the newline itself
+                        if c.discarding {
+                            // Tail of an answered oversized line.
+                            c.discarding = false;
+                            continue;
+                        }
+                        match String::from_utf8(head) {
+                            Ok(s) => Frame::Line(s),
+                            Err(_) => Frame::BadUtf8,
+                        }
+                    }
+                    None if c.discarding => {
+                        c.rbuf.clear();
+                        Frame::Done
+                    }
+                    None if c.rbuf.len() > MAX_LINE_BYTES => {
+                        c.discarding = true;
+                        c.rbuf.clear();
+                        Frame::Oversize
+                    }
+                    None if at_eof && !c.rbuf.is_empty() => {
+                        let bytes = std::mem::take(&mut c.rbuf);
+                        match String::from_utf8(bytes) {
+                            Ok(s) => Frame::Line(s),
+                            Err(_) => Frame::BadUtf8,
+                        }
+                    }
+                    None => Frame::Done,
+                }
+            };
+            match frame {
+                Frame::Line(s) => self.process_line(slot, &s),
+                Frame::Oversize => {
+                    let seq = {
+                        let Some(c) = self.conns[slot].as_mut() else {
+                            return;
+                        };
+                        let s = c.next_seq;
+                        c.next_seq += 1;
+                        s
+                    };
+                    self.router.record_oversized();
+                    let line = protocol::error_line(
+                        "?",
+                        &Error::Protocol(format!(
+                            "request line exceeds {MAX_LINE_BYTES} \
+                             bytes"
+                        )),
+                    );
+                    self.deliver(slot, seq, line);
+                }
+                Frame::BadUtf8 => {
+                    self.drop_conn(slot);
+                    return;
+                }
+                Frame::Done => return,
+            }
+        }
+    }
+
+    /// One request line: assign a sequence number, parse on the lazy
+    /// hot path, gate admission, enqueue — or answer the error
+    /// immediately into the connection's reorder. Mirrors the
+    /// threads-mode reader body line for line.
+    fn process_line(&mut self, slot: usize, text: &str) {
+        let text = text.trim();
+        if text.is_empty() {
+            return;
+        }
+        let (this_seq, generation) = {
+            let Some(c) = self.conns[slot].as_mut() else { return };
+            let s = c.next_seq;
+            c.next_seq += 1;
+            (s, c.generation)
+        };
+        let (parsed, lazy) = protocol::parse_lazy_tracked(text);
+        self.router.record_parse(lazy);
+        match parsed {
+            Ok(req) => {
+                // Deadlines are stamped here, at admission: queueing
+                // time counts against the SLO.
+                let job = Job::new(req.id.clone(), req.spec);
+                // Admission gate: a job the runner cannot execute
+                // (e.g. an unregistered resolution) is answered now
+                // and never queues or leases GPUs.
+                if let Err(e) = self.runner.admit(&job) {
+                    self.router.record_inadmissible();
+                    let line = protocol::error_line(&job.id, &e);
+                    self.deliver(slot, this_seq, line);
+                } else {
+                    let ticket = Ticket {
+                        job,
+                        seq: this_seq,
+                        reply: ReplyRoute::Event {
+                            queue: Arc::clone(&self.queue),
+                            conn: ConnId { slot, generation },
+                        },
+                    };
+                    if let Err(e) = self.router.submit(ticket) {
+                        let line = protocol::error_line(&req.id, &e);
+                        self.deliver(slot, this_seq, line);
+                    }
+                }
+            }
+            Err(e) => {
+                let line = protocol::error_line("?", &e);
+                self.deliver(slot, this_seq, line);
+            }
+        }
+    }
+
+    /// Route every queued completion into its connection's reorder
+    /// buffer, discarding ones whose connection died first (stale
+    /// generation) — the events-mode analogue of a send to a dropped
+    /// channel receiver.
+    fn deliver_completions(&mut self) {
+        for (conn, seq, line) in self.queue.drain() {
+            let live = matches!(
+                self.conns.get(conn.slot).and_then(|c| c.as_ref()),
+                Some(c) if c.generation == conn.generation
+            );
+            if live {
+                self.deliver(conn.slot, seq, line);
+            }
+        }
+    }
+
+    /// Park `line` at `seq` in the connection's reorder buffer, move
+    /// every now-in-order response onto the write queue, then try the
+    /// socket immediately — most responses go out without waiting for
+    /// the next POLLOUT.
+    fn deliver(&mut self, slot: usize, seq: u64, line: String) {
+        {
+            let Some(c) = self.conns[slot].as_mut() else { return };
+            c.pending.insert(seq, line);
+            while let Some(l) = c.pending.remove(&c.next_write) {
+                if c.wbuf.is_empty() {
+                    // Start the stall clock when the queue becomes
+                    // non-empty, not when bytes were last accepted
+                    // possibly long ago.
+                    c.last_progress = Instant::now();
+                }
+                c.wbuf.extend(l.as_bytes());
+                c.wbuf.push_back(b'\n');
+                c.next_write += 1;
+            }
+        }
+        self.flush_conn(slot);
+        self.maybe_close(slot);
+    }
+
+    /// Write as much of the queue as the socket accepts right now.
+    fn flush_conn(&mut self, slot: usize) {
+        let dead = {
+            let Some(c) = self.conns[slot].as_mut() else { return };
+            let mut dead = false;
+            while !c.wbuf.is_empty() {
+                let (head, _) = c.wbuf.as_slices();
+                match (&c.stream).write(head) {
+                    Ok(0) => {
+                        dead = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        c.wbuf.drain(..n);
+                        c.last_progress = Instant::now();
+                    }
+                    Err(e)
+                        if e.kind() == ErrorKind::WouldBlock =>
+                    {
+                        break
+                    }
+                    Err(e)
+                        if e.kind() == ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        dead = true;
+                        break;
+                    }
+                }
+            }
+            dead
+        };
+        if dead {
+            self.drop_conn(slot);
+        }
+    }
+
+    /// Drop a half-closed connection once every assigned sequence has
+    /// been answered and flushed (EOF alone doesn't close it: the
+    /// client is still owed its responses).
+    fn maybe_close(&mut self, slot: usize) {
+        let close = matches!(
+            self.conns[slot].as_ref(),
+            Some(c) if c.eof
+                && c.wbuf.is_empty()
+                && c.pending.is_empty()
+                && c.next_write == c.next_seq
+        );
+        if close {
+            self.drop_conn(slot);
+        }
+    }
+
+    /// Tear down connections whose socket has accepted nothing for
+    /// WRITE_TIMEOUT while responses are queued (client stopped
+    /// reading) — the table's analogue of the threads-mode write
+    /// timeout, so one non-reading client can't pin its slot forever.
+    fn reap_stalled(&mut self) {
+        for slot in 0..self.conns.len() {
+            let stalled = matches!(
+                self.conns[slot].as_ref(),
+                Some(c) if !c.wbuf.is_empty()
+                    && c.last_progress.elapsed() >= WRITE_TIMEOUT
+            );
+            if stalled {
+                self.drop_conn(slot);
+            }
+        }
+    }
+
+    fn drop_conn(&mut self, slot: usize) {
+        if self.conns[slot].take().is_some() {
+            self.n_open -= 1;
+        }
+    }
+
+    /// Final drain after the workers have joined: route the last
+    /// completions (including `close_and_answer`'s shutdown lines),
+    /// then flush every connection's write queue, polling for
+    /// writability, bounded by WRITE_TIMEOUT — the events-mode
+    /// analogue of joining the per-connection writer threads.
+    fn shutdown_flush(&mut self) {
+        let deadline = Instant::now() + WRITE_TIMEOUT;
+        loop {
+            self.deliver_completions();
+            let waiting: Vec<(usize, i32)> = self
+                .conns
+                .iter()
+                .enumerate()
+                .filter_map(|(slot, c)| {
+                    let c = c.as_ref()?;
+                    if c.wbuf.is_empty() {
+                        None
+                    } else {
+                        Some((slot, c.stream.as_raw_fd()))
+                    }
+                })
+                .collect();
+            if waiting.is_empty() {
+                // Every deliverable byte is out: each assigned seq
+                // was answered by a worker, an immediate error, or
+                // close_and_answer before this runs, so an empty
+                // write queue means nothing is still owed.
+                return;
+            }
+            if Instant::now() >= deadline {
+                return;
+            }
+            let mut fds: Vec<sys::PollFd> = waiting
+                .iter()
+                .map(|&(_, fd)| sys::PollFd {
+                    fd,
+                    events: sys::POLLOUT,
+                    revents: 0,
+                })
+                .collect();
+            sys::poll_fds(&mut fds, 100);
+            for (i, &(slot, _)) in waiting.iter().enumerate() {
+                if fds[i].revents != 0 {
+                    self.flush_conn(slot);
+                }
+            }
+        }
     }
 }
 
@@ -901,11 +1666,32 @@ pub fn serve_with_stats(
     listener.set_nonblocking(true)?;
     crate::log_info!(
         "serve",
-        "listening on {} ({} workers, queue {})",
+        "listening on {} ({} workers, queue {}, io {})",
         listener.local_addr()?,
         n_workers,
-        router.capacity()
+        router.capacity(),
+        opts.io.as_str()
     );
+
+    // Choose the connection front-end before spawning workers so a
+    // failed event-loop setup (pipe exhaustion) errors out cleanly
+    // with nothing to join. Non-unix targets have no poll(2) wrapper
+    // and always take the threads path.
+    enum FrontEnd {
+        #[cfg(unix)]
+        Events(Box<EventLoop>),
+        Threads(TcpListener),
+    }
+    let mut front = match opts.io {
+        #[cfg(unix)]
+        IoMode::Events => FrontEnd::Events(Box::new(EventLoop::new(
+            listener,
+            Arc::clone(&router),
+            Arc::clone(&runner),
+            opts.max_connections.max(1),
+        )?)),
+        _ => FrontEnd::Threads(listener),
+    };
 
     let workers: Vec<_> = (0..n_workers)
         .map(|_| {
@@ -1037,7 +1823,7 @@ pub fn serve_with_stats(
                             .record_outcome(ok, t0.elapsed().as_secs_f64());
                         // Deliver before counting so the final client
                         // gets its response before shutdown begins.
-                        let _ = c.reply.send((c.seq, line));
+                        c.reply.send(c.seq, line);
                         count_handled(1);
                     }
                 }
@@ -1047,49 +1833,61 @@ pub fn serve_with_stats(
 
     let mut conns = Vec::new();
     let mut accept_err = None;
-    loop {
-        if done.load(Ordering::SeqCst) {
-            break;
+    match &mut front {
+        #[cfg(unix)]
+        FrontEnd::Events(el) => {
+            accept_err = el.run(&stop, &done);
         }
-        if let Some(s) = &stop {
-            if s.load(Ordering::Relaxed) {
+        FrontEnd::Threads(listener) => loop {
+            if done.load(Ordering::SeqCst) {
                 break;
             }
-        }
-        // Reap finished connection handlers every iteration (not just
-        // when idle — under sustained connection churn the accept call
-        // below may never report WouldBlock) so a long-lived server
-        // doesn't hold one JoinHandle per connection ever accepted.
-        conns.retain(|c| !c.is_finished());
-        // At the connection cap, let new connections queue in the OS
-        // accept backlog instead of spawning unbounded thread pairs.
-        if conns.len() >= opts.max_connections.max(1) {
-            thread::sleep(ACCEPT_POLL);
-            continue;
-        }
-        match listener.accept() {
-            Ok((stream, _peer)) => {
-                let router = Arc::clone(&router);
-                let done = Arc::clone(&done);
-                let runner = Arc::clone(&runner);
-                conns.push(thread::spawn(move || {
-                    handle_connection(stream, &router, &done, &runner);
-                }));
+            if let Some(s) = &stop {
+                if s.load(Ordering::Relaxed) {
+                    break;
+                }
             }
-            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+            // Reap finished connection handlers every iteration (not
+            // just when idle — under sustained connection churn the
+            // accept call below may never report WouldBlock) so a
+            // long-lived server doesn't hold one JoinHandle per
+            // connection ever accepted.
+            conns.retain(|c| !c.is_finished());
+            // At the connection cap, let new connections queue in the
+            // OS accept backlog instead of spawning unbounded thread
+            // pairs.
+            if conns.len() >= opts.max_connections.max(1) {
                 thread::sleep(ACCEPT_POLL);
+                continue;
             }
-            Err(e) if e.kind() == ErrorKind::Interrupted => {}
-            Err(e) => {
-                accept_err = Some(e);
-                break;
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let router = Arc::clone(&router);
+                    let done = Arc::clone(&done);
+                    let runner = Arc::clone(&runner);
+                    conns.push(thread::spawn(move || {
+                        handle_connection(
+                            stream, &router, &done, &runner,
+                        );
+                    }));
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    thread::sleep(ACCEPT_POLL);
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => {
+                    accept_err = Some(e);
+                    break;
+                }
             }
-        }
+        },
     }
 
     // Shutdown: wake workers (in-flight jobs drain; queued ones are
     // answered with shutdown errors), unblock connection readers, join
-    // everything.
+    // everything. Events mode then flushes the table's write queues —
+    // the in-flight and shutdown answers workers routed through the
+    // completion mailbox after the poll loop exited.
     done.store(true, Ordering::SeqCst);
     let dropped = close_and_answer(&router);
     if dropped > 0 {
@@ -1097,6 +1895,10 @@ pub fn serve_with_stats(
     }
     for w in workers {
         let _ = w.join();
+    }
+    #[cfg(unix)]
+    if let FrontEnd::Events(el) = &mut front {
+        el.shutdown_flush();
     }
     for c in conns {
         let _ = c.join();
@@ -1152,7 +1954,7 @@ fn answer_expired(router: &Router<Ticket>, t: &Ticket) {
         },
     );
     router.record_outcome(false, 0.0);
-    let _ = t.reply.send((t.seq, line));
+    t.reply.send(t.seq, line);
 }
 
 /// Close the router and answer every still-queued ticket with a
@@ -1166,10 +1968,10 @@ fn close_and_answer(router: &Router<Ticket>) -> usize {
         // Count the outcome so admitted always reconciles against
         // completed + failed in the final stats line.
         router.record_outcome(false, 0.0);
-        let _ = t.reply.send((
+        t.reply.send(
             t.seq,
             protocol::error_line(&t.job.id, &Error::Shutdown),
-        ));
+        );
     }
     n
 }
@@ -1250,7 +2052,9 @@ fn handle_connection(
                                 let ticket = Ticket {
                                     job,
                                     seq: this_seq,
-                                    reply: tx.clone(),
+                                    reply: ReplyRoute::Channel(
+                                        tx.clone(),
+                                    ),
                                 };
                                 if let Err(e) = router.submit(ticket) {
                                     let _ = tx.send((

@@ -502,6 +502,121 @@ fn write_string(out: &mut String, s: &str) {
     out.push('"');
 }
 
+// ------------------------------------------------------------------ scan
+
+/// Single-pass, zero-allocation scanner over a JSON document's bytes.
+///
+/// The serve wire hot path ([`crate::serve::protocol`]'s `parse_lazy`)
+/// pulls the handful of fields the common request line carries out of
+/// the raw bytes without building a [`Value`] tree. The scanner is
+/// deliberately conservative: every method returns `None` the moment
+/// the input looks even slightly unusual (escape sequences, embedded
+/// control characters, malformed numbers), and the caller is expected
+/// to bail to the full [`parse`] — which also means every *error* a
+/// line can produce still comes from the one tree parser, so error
+/// text and offsets stay byte-identical across the two paths.
+///
+/// After any method returns `None` the scanner position is
+/// unspecified; callers must abandon the scan, not resume it.
+pub struct Scanner<'a> {
+    s: &'a str,
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Scanner<'a> {
+    pub fn new(text: &'a str) -> Self {
+        Scanner { s: text, b: text.as_bytes(), i: 0 }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    /// Skip JSON whitespace (space, tab, newline, carriage return) —
+    /// the same set the tree parser's `ws()` accepts.
+    pub fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    /// Consume `c` (after whitespace); false if the next byte differs
+    /// (position then rests on that byte).
+    pub fn eat(&mut self, c: u8) -> bool {
+        self.skip_ws();
+        if self.peek() == Some(c) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// True when only trailing whitespace remains.
+    pub fn at_end(&mut self) -> bool {
+        self.skip_ws();
+        self.i == self.b.len()
+    }
+
+    /// Scan a string literal and borrow its contents verbatim (no
+    /// unescaping, no copy). Returns `None` on a missing opening
+    /// quote, any escape sequence, an embedded control character, or
+    /// an unterminated literal. Multi-byte UTF-8 passes through
+    /// untouched — the quote bytes are ASCII, so the slice bounds
+    /// always sit on char boundaries.
+    pub fn raw_string(&mut self) -> Option<&'a str> {
+        if !self.eat(b'"') {
+            return None;
+        }
+        let start = self.i;
+        loop {
+            match self.peek() {
+                Some(b'"') => {
+                    let end = self.i;
+                    self.i += 1;
+                    return Some(&self.s[start..end]);
+                }
+                Some(b'\\') => return None,
+                Some(c) if c < 0x20 => return None,
+                Some(_) => self.i += 1,
+                None => return None,
+            }
+        }
+    }
+
+    /// Scan a number with the same span rule as the tree parser
+    /// (`-digits[.digits][eE[+-]digits]` then `str::parse::<f64>`), so
+    /// an accepted literal yields a bit-identical `f64` on both paths.
+    /// `None` if the span fails to parse.
+    pub fn number(&mut self) -> Option<f64> {
+        self.skip_ws();
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        self.s[start..self.i].parse::<f64>().ok()
+    }
+}
+
 /// Read + parse a JSON file.
 pub fn from_file(path: &std::path::Path) -> Result<Value> {
     let text = std::fs::read_to_string(path)?;
@@ -636,5 +751,53 @@ mod tests {
         assert!((xs[0] - 0.00085).abs() < 1e-12);
         assert!((xs[1] - 1e-5).abs() < 1e-12);
         assert_eq!(xs[2], 563920.0);
+    }
+
+    #[test]
+    fn scanner_walks_the_common_request_shape() {
+        let mut sc = Scanner::new(r#" {"id": "r-1", "seed": 42} "#);
+        assert!(sc.eat(b'{'));
+        assert_eq!(sc.raw_string(), Some("id"));
+        assert!(sc.eat(b':'));
+        assert_eq!(sc.raw_string(), Some("r-1"));
+        assert!(sc.eat(b','));
+        assert_eq!(sc.raw_string(), Some("seed"));
+        assert!(sc.eat(b':'));
+        assert_eq!(sc.number(), Some(42.0));
+        assert!(sc.eat(b'}'));
+        assert!(sc.at_end());
+    }
+
+    #[test]
+    fn scanner_bails_on_anything_unusual() {
+        // Escapes, control chars, unterminated strings: all None.
+        assert_eq!(Scanner::new(r#""a\nb""#).raw_string(), None);
+        assert_eq!(Scanner::new("\"a\tb\"").raw_string(), None);
+        assert_eq!(Scanner::new("\"open").raw_string(), None);
+        assert_eq!(Scanner::new("42").raw_string(), None);
+        // Malformed numbers: None. Wrong token: None.
+        assert_eq!(Scanner::new("-").number(), None);
+        assert_eq!(Scanner::new("true").number(), None);
+        assert_eq!(Scanner::new("\"5\"").number(), None);
+        // Multi-byte UTF-8 passes through verbatim.
+        assert_eq!(Scanner::new("\"héllo😀\"").raw_string(), Some("héllo😀"));
+    }
+
+    #[test]
+    fn scanner_numbers_match_tree_parser_bit_for_bit() {
+        for lit in
+            ["0", "-12", "3.5", "2.5e-2", "1e3", "9007199254740991", "-0.0"]
+        {
+            let tree = match parse(lit).unwrap() {
+                Value::Num(n) => n,
+                v => panic!("expected number, got {v:?}"),
+            };
+            let scanned = Scanner::new(lit).number().unwrap();
+            assert_eq!(
+                tree.to_bits(),
+                scanned.to_bits(),
+                "literal {lit:?} diverged"
+            );
+        }
     }
 }

@@ -1,0 +1,514 @@
+//! Adversarial-client and connection-scale tests for the event-driven
+//! serve front-end (`IoMode::Events`, the default on unix).
+//!
+//! The clients here misbehave on purpose: slow-loris drip feeding,
+//! refusing to read responses, half-closing mid-line, oversized lines,
+//! and pipelined requests whose completions finish out of order. Every
+//! test synchronizes on events (latches, blocking reads, thread
+//! joins), never on sleeps — the only sleeps below pace adversarial
+//! *stimulus* (dripping bytes), and no assertion depends on their
+//! timing. The connection-scale tests pin the event loop byte-identical
+//! to the `--io threads` path over the same request set and pin the
+//! table-full behavior (excess connections wait in the OS accept
+//! backlog; zero drops).
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use stadi::config::IoMode;
+use stadi::serve::router::{Job, RouterStats};
+use stadi::serve::server::{
+    serve_with_stats, Client, JobRunner, ServeOptions,
+};
+use stadi::util::json;
+
+type ServerHandle = thread::JoinHandle<stadi::Result<(u64, RouterStats)>>;
+
+/// Deterministic echo stub: the response is a pure function of the
+/// request (id, seed), which is what makes the events-vs-threads
+/// byte-identity comparison meaningful.
+struct EchoRunner;
+
+impl JobRunner for EchoRunner {
+    fn run(&self, job: &Job) -> (bool, String) {
+        (
+            true,
+            format!(
+                "{{\"id\": \"{}\", \"ok\": true, \"seed\": {}}}",
+                job.id,
+                job.seed()
+            ),
+        )
+    }
+}
+
+/// Echo stub with a fat payload so a non-reading client's response
+/// queue outgrows the kernel socket buffers quickly.
+struct PaddedRunner {
+    pad: usize,
+}
+
+impl JobRunner for PaddedRunner {
+    fn run(&self, job: &Job) -> (bool, String) {
+        (
+            true,
+            format!(
+                "{{\"id\": \"{}\", \"ok\": true, \"pad\": \"{}\"}}",
+                job.id,
+                "x".repeat(self.pad)
+            ),
+        )
+    }
+}
+
+/// One-shot latch (same shape as integration_serve.rs): `open()`
+/// releases every current and future `wait()`er.
+struct Latch(Mutex<bool>, Condvar);
+
+impl Latch {
+    fn shared() -> Arc<Latch> {
+        Arc::new(Latch(Mutex::new(false), Condvar::new()))
+    }
+
+    fn open(&self) {
+        *self.0.lock().unwrap() = true;
+        self.1.notify_all();
+    }
+
+    fn wait(&self) {
+        let mut open = self.0.lock().unwrap();
+        while !*open {
+            open = self.1.wait(open).unwrap();
+        }
+    }
+}
+
+fn opts(queue: usize, workers: usize, io: IoMode) -> ServeOptions {
+    ServeOptions {
+        queue_capacity: queue,
+        workers,
+        io,
+        ..ServeOptions::default()
+    }
+}
+
+fn spawn_server(
+    runner: Arc<dyn JobRunner>,
+    opts: ServeOptions,
+) -> (String, Arc<AtomicBool>, ServerHandle) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let handle = {
+        let stop = Arc::clone(&stop);
+        thread::spawn(move || {
+            serve_with_stats(runner, listener, opts, Some(stop))
+        })
+    };
+    (addr, stop, handle)
+}
+
+/// Slow-loris: one connection drips a request a few bytes at a time
+/// (its line stays unterminated for many poll ticks) while a neighbor
+/// runs normal traffic. The neighbor must complete fully *while the
+/// loris line is still open* — joined before the loris ever finishes
+/// its line — and the loris still gets its answer once it does.
+#[test]
+fn slow_loris_does_not_block_neighbor_connections() {
+    let (addr, stop, server) =
+        spawn_server(Arc::new(EchoRunner), opts(64, 2, IoMode::Events));
+
+    let mut loris = TcpStream::connect(&addr).unwrap();
+    let line = b"{\"id\": \"loris\", \"seed\": 7}\n";
+    // Drip everything except the terminating newline. The sleeps pace
+    // the drip so the fragments arrive on distinct poll ticks; no
+    // assertion below depends on their duration.
+    for chunk in line[..line.len() - 1].chunks(3) {
+        loris.write_all(chunk).unwrap();
+        loris.flush().unwrap();
+        thread::sleep(Duration::from_millis(2));
+    }
+
+    // With the loris line guaranteed still unterminated (its last
+    // byte is only sent after this join), the neighbor pipeline must
+    // run to completion.
+    let neighbor = {
+        let addr = addr.clone();
+        thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            for i in 0..20u64 {
+                let line = c.request(&format!("n{i}"), i).unwrap();
+                let v = json::parse(&line).unwrap();
+                assert!(v.get("ok").unwrap().as_bool().unwrap(), "{line}");
+                assert_eq!(
+                    v.get("id").unwrap().as_str().unwrap(),
+                    format!("n{i}")
+                );
+            }
+        })
+    };
+    neighbor.join().unwrap();
+
+    // Now finish the line; the drip-fed request parses and answers.
+    loris.write_all(b"\n").unwrap();
+    let mut reader = BufReader::new(loris.try_clone().unwrap());
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    let v = json::parse(resp.trim()).unwrap();
+    assert!(v.get("ok").unwrap().as_bool().unwrap(), "{resp}");
+    assert_eq!(v.get("id").unwrap().as_str().unwrap(), "loris");
+
+    drop(reader);
+    drop(loris);
+    stop.store(true, Ordering::SeqCst);
+    let (handled, _) = server.join().unwrap().unwrap();
+    assert_eq!(handled, 21);
+}
+
+/// A client that pipelines a pile of requests with fat responses and
+/// refuses to read fills the kernel socket buffers; its responses back
+/// up in *its own* table slot's write queue. Other connections must
+/// keep flowing, and once the hog finally reads, it gets every
+/// response, in submission order — nothing dropped, nothing wedged.
+#[test]
+fn non_reading_client_does_not_wedge_other_connections() {
+    let (addr, stop, server) = spawn_server(
+        Arc::new(PaddedRunner { pad: 8 * 1024 }),
+        opts(256, 2, IoMode::Events),
+    );
+
+    let n_hog = 200usize;
+    let mut hog = TcpStream::connect(&addr).unwrap();
+    for i in 0..n_hog {
+        writeln!(hog, "{{\"id\": \"hog{i}\", \"seed\": {i}}}").unwrap();
+    }
+    hog.flush().unwrap();
+    // ~200 * 8KiB of responses head for a client that is not reading:
+    // far past the loopback socket buffers, so the hog's write queue
+    // is stalled while the neighbor runs.
+
+    let neighbor = {
+        let addr = addr.clone();
+        thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            for i in 0..50u64 {
+                let line = c.request(&format!("n{i}"), i).unwrap();
+                let v = json::parse(&line).unwrap();
+                assert!(v.get("ok").unwrap().as_bool().unwrap(), "{line}");
+                assert_eq!(
+                    v.get("id").unwrap().as_str().unwrap(),
+                    format!("n{i}")
+                );
+            }
+        })
+    };
+    neighbor.join().unwrap();
+
+    // The hog starts reading (well before the stalled-writer reaper's
+    // WRITE_TIMEOUT): every response arrives, in per-connection FIFO.
+    let mut reader = BufReader::new(hog.try_clone().unwrap());
+    let mut line = String::new();
+    for i in 0..n_hog {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let v = json::parse(line.trim()).unwrap();
+        assert!(v.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(
+            v.get("id").unwrap().as_str().unwrap(),
+            format!("hog{i}"),
+            "hog responses out of order or dropped"
+        );
+    }
+
+    drop(reader);
+    drop(hog);
+    stop.store(true, Ordering::SeqCst);
+    let (handled, _) = server.join().unwrap().unwrap();
+    assert_eq!(handled, n_hog as u64 + 50);
+}
+
+/// Mid-line half-close: the client sends one complete request plus a
+/// final line with no trailing newline, then shuts down its write
+/// side. The final unterminated line must still parse and answer
+/// (matching the threads-mode `read_line` semantics), after which the
+/// server closes the connection cleanly.
+#[test]
+fn mid_line_half_close_still_answers_the_final_partial_line() {
+    let (addr, stop, server) =
+        spawn_server(Arc::new(EchoRunner), opts(64, 2, IoMode::Events));
+
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    writeln!(stream, "{{\"id\": \"full\", \"seed\": 1}}").unwrap();
+    // Complete JSON, missing only the newline — then half-close.
+    stream
+        .write_all(b"{\"id\": \"partial\", \"seed\": 2}")
+        .unwrap();
+    stream.flush().unwrap();
+    stream.shutdown(Shutdown::Write).unwrap();
+
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    for want in ["full", "partial"] {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let v = json::parse(line.trim()).unwrap();
+        assert!(v.get("ok").unwrap().as_bool().unwrap(), "{line}");
+        assert_eq!(v.get("id").unwrap().as_str().unwrap(), want);
+    }
+    // Both owed responses delivered; the server drops the connection.
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "expected EOF");
+
+    drop(reader);
+    drop(stream);
+    stop.store(true, Ordering::SeqCst);
+    let (handled, _) = server.join().unwrap().unwrap();
+    assert_eq!(handled, 2);
+}
+
+/// An oversized line (beyond the event path's 64 KiB frame cap) gets
+/// a typed `bad_request` answer and is discarded to its newline; the
+/// connection survives and the next request is served normally, in
+/// FIFO position behind the error.
+#[cfg(unix)]
+#[test]
+fn oversized_line_gets_bad_request_and_connection_survives() {
+    let (addr, stop, server) =
+        spawn_server(Arc::new(EchoRunner), opts(64, 2, IoMode::Events));
+
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    let junk = vec![b'x'; 80 * 1024];
+    stream.write_all(&junk).unwrap();
+    stream.write_all(b"\n").unwrap();
+    writeln!(stream, "{{\"id\": \"after\", \"seed\": 3}}").unwrap();
+    stream.flush().unwrap();
+
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = json::parse(line.trim()).unwrap();
+    assert!(!v.get("ok").unwrap().as_bool().unwrap(), "{line}");
+    assert_eq!(v.get("code").unwrap().as_str().unwrap(), "bad_request");
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let v = json::parse(line.trim()).unwrap();
+    assert!(v.get("ok").unwrap().as_bool().unwrap(), "{line}");
+    assert_eq!(v.get("id").unwrap().as_str().unwrap(), "after");
+
+    drop(reader);
+    drop(stream);
+    stop.store(true, Ordering::SeqCst);
+    let (_, stats) = server.join().unwrap().unwrap();
+    assert_eq!(stats.oversized, 1, "oversize not counted in stats");
+}
+
+/// Two pipelined requests whose completions are forced out of order
+/// (the first blocks until the second has executed) must come back in
+/// submission order — the table's per-connection reorder buffer at
+/// work, latch-gated with no sleeps.
+#[test]
+fn pipelined_out_of_order_completions_reorder_per_connection() {
+    struct HandoffRunner {
+        fast_done: Arc<Latch>,
+        exec_order: Arc<Mutex<Vec<String>>>,
+    }
+
+    impl JobRunner for HandoffRunner {
+        fn run(&self, job: &Job) -> (bool, String) {
+            if job.id == "slow" {
+                // Popped first (FIFO), finishes last: parked until
+                // "fast" has recorded its execution.
+                self.fast_done.wait();
+            } else {
+                self.exec_order.lock().unwrap().push(job.id.clone());
+                self.fast_done.open();
+            }
+            if job.id == "slow" {
+                self.exec_order.lock().unwrap().push(job.id.clone());
+            }
+            (true, format!("{{\"id\": \"{}\", \"ok\": true}}", job.id))
+        }
+    }
+
+    let fast_done = Latch::shared();
+    let exec_order = Arc::new(Mutex::new(Vec::new()));
+    let runner = Arc::new(HandoffRunner {
+        fast_done: Arc::clone(&fast_done),
+        exec_order: Arc::clone(&exec_order),
+    });
+    let (addr, stop, server) =
+        spawn_server(runner, opts(8, 2, IoMode::Events));
+
+    let mut client = Client::connect(&addr).unwrap();
+    client.send("slow", 0).unwrap();
+    client.send("fast", 1).unwrap();
+    for want in ["slow", "fast"] {
+        let line = client.read_line().unwrap();
+        let v = json::parse(&line).unwrap();
+        assert!(v.get("ok").unwrap().as_bool().unwrap(), "{line}");
+        assert_eq!(v.get("id").unwrap().as_str().unwrap(), want);
+    }
+    drop(client);
+    stop.store(true, Ordering::SeqCst);
+    server.join().unwrap().unwrap();
+    // Execution (completion) order really was inverted relative to
+    // what the client observed.
+    assert_eq!(*exec_order.lock().unwrap(), vec!["fast", "slow"]);
+}
+
+/// Connection-scale smoke: 512 concurrent clients through the event
+/// loop on the stub backend, every response correct and in
+/// per-connection FIFO order — then the same request set replayed
+/// through the `--io threads` path must produce byte-identical
+/// response lines per request.
+#[test]
+fn event_loop_512_clients_byte_identical_to_threads_path() {
+    let n_clients = 512usize;
+    let per_client = 2usize;
+
+    let collect_events = {
+        let (addr, stop, server) = spawn_server(
+            Arc::new(EchoRunner),
+            ServeOptions {
+                queue_capacity: 1024,
+                workers: 4,
+                max_connections: n_clients,
+                io: IoMode::Events,
+                ..ServeOptions::default()
+            },
+        );
+        let handles: Vec<_> = (0..n_clients)
+            .map(|c| {
+                let addr = addr.clone();
+                thread::spawn(move || {
+                    let mut client = Client::connect(&addr).unwrap();
+                    for j in 0..per_client {
+                        client
+                            .send(
+                                &format!("c{c}-{j}"),
+                                (c * 31 + j * 7) as u64,
+                            )
+                            .unwrap();
+                    }
+                    let mut out = Vec::new();
+                    for j in 0..per_client {
+                        let line = client.read_line().unwrap();
+                        let v = json::parse(&line).unwrap();
+                        // Per-connection FIFO at scale.
+                        assert_eq!(
+                            v.get("id").unwrap().as_str().unwrap(),
+                            format!("c{c}-{j}"),
+                            "client {c} out of order"
+                        );
+                        out.push((format!("c{c}-{j}"), line));
+                    }
+                    out
+                })
+            })
+            .collect();
+        let mut map = BTreeMap::new();
+        for h in handles {
+            for (id, line) in h.join().unwrap() {
+                map.insert(id, line);
+            }
+        }
+        stop.store(true, Ordering::SeqCst);
+        let (handled, stats) = server.join().unwrap().unwrap();
+        assert_eq!(handled, (n_clients * per_client) as u64);
+        #[cfg(unix)]
+        assert!(
+            stats.lazy_parsed > 0,
+            "event path never took the lazy parse: {stats:?}"
+        );
+        let _ = stats;
+        map
+    };
+
+    // Replay the identical request set through the thread-per-
+    // connection path (one sequential client is enough: the response
+    // is a pure function of the request, and this run's job is to pin
+    // the wire bytes, not concurrency).
+    let collect_threads = {
+        let (addr, stop, server) = spawn_server(
+            Arc::new(EchoRunner),
+            opts(1024, 4, IoMode::Threads),
+        );
+        let mut client = Client::connect(&addr).unwrap();
+        let mut map = BTreeMap::new();
+        for c in 0..n_clients {
+            for j in 0..per_client {
+                let id = format!("c{c}-{j}");
+                let line = client
+                    .request(&id, (c * 31 + j * 7) as u64)
+                    .unwrap();
+                map.insert(id, line);
+            }
+        }
+        drop(client);
+        stop.store(true, Ordering::SeqCst);
+        let (handled, stats) = server.join().unwrap().unwrap();
+        assert_eq!(handled, (n_clients * per_client) as u64);
+        assert_eq!(
+            stats.lazy_parsed, 0,
+            "threads path must keep the full-tree parse"
+        );
+        map
+    };
+
+    assert_eq!(
+        collect_events, collect_threads,
+        "event-loop responses diverge from the threads path"
+    );
+}
+
+/// Table-full behavior: with a 4-slot connection table and 16 clients
+/// arriving at once, the excess waits in the OS accept backlog (the
+/// event loop deregisters the listener while the table is full) and
+/// every single client is served — zero drops, zero errors.
+#[test]
+fn table_full_connections_wait_in_accept_backlog_zero_drops() {
+    let n_clients = 16usize;
+    let (addr, stop, server) = spawn_server(
+        Arc::new(EchoRunner),
+        ServeOptions {
+            queue_capacity: 64,
+            workers: 2,
+            max_connections: 4,
+            io: IoMode::Events,
+            ..ServeOptions::default()
+        },
+    );
+
+    let handles: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                // Connect, one round trip, disconnect — freeing a
+                // table slot for whoever is parked in the backlog.
+                let mut client = Client::connect(&addr).unwrap();
+                let line =
+                    client.request(&format!("q{c}"), c as u64).unwrap();
+                let v = json::parse(&line).unwrap();
+                assert!(v.get("ok").unwrap().as_bool().unwrap(), "{line}");
+                assert_eq!(
+                    v.get("id").unwrap().as_str().unwrap(),
+                    format!("q{c}")
+                );
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    stop.store(true, Ordering::SeqCst);
+    let (handled, stats) = server.join().unwrap().unwrap();
+    assert_eq!(handled, n_clients as u64, "a queued connection was dropped");
+    assert_eq!(stats.admitted, n_clients as u64);
+    assert_eq!(stats.completed, n_clients as u64);
+}

@@ -106,6 +106,16 @@ echo "== graceful degradation gate (default + xla-backend stub)"
 cargo test -q --test integration_degrade
 cargo test -q --features xla-backend --test integration_degrade
 
+# Connection-scale gate: the adversarial-client suite (slow-loris,
+# non-reading client, mid-line half-close, oversized line, pipelined
+# reordering), the 512-client event-loop smoke, the event-vs-threads
+# byte-identity pin, and the table-full zero-drop pin must hold in
+# BOTH feature configs (the serve front-end is feature-independent,
+# but this keeps it from rotting behind the gate like the others).
+echo "== connection-scale gate (default + xla-backend stub)"
+cargo test -q --test integration_connscale
+cargo test -q --features xla-backend --test integration_connscale
+
 # The committed perf-trajectory artifacts at the repo root must each
 # carry the displaced-halo pricing ("halo" key) — a re-anchor that
 # regenerates them without it silently drops the perf history this
@@ -115,10 +125,12 @@ cargo test -q --features xla-backend --test integration_degrade
 # against the in-process sweep. BENCH_federation.json likewise: it is
 # the deadline-hit frontier tests/integration_federation.rs pins.
 # BENCH_degradation.json likewise: the quality-vs-deadline frontier
-# tests/integration_degrade.rs pins.
+# tests/integration_degrade.rs pins. BENCH_protocol.json likewise:
+# the lazy-parse cost model whose >= 5x v2 speedup the generator
+# asserts (benches/bench_protocol.rs re-checks it inline).
 echo "== committed BENCH artifacts carry halo pricing"
 for req in BENCH_batching.json BENCH_federation.json \
-           BENCH_degradation.json; do
+           BENCH_degradation.json BENCH_protocol.json; do
     if [[ ! -e "$ROOT/$req" ]]; then
         echo "error: $req missing at repo root" \
              "(regenerate with scripts/gen_bench_artifacts.py)" >&2

@@ -739,6 +739,104 @@ SOURCE = (
     "geometry). cargo bench writes measured sweeps to bench_out/."
 )
 
+# --- wire-protocol parse cost model (benches/bench_protocol.rs mirror)
+# Relative per-operation costs of the two parse paths, in abstract
+# units. The full tree parse scans every byte, allocates one Value
+# node per JSON value, pushes one key entry per object member, and
+# copies every string (keys and values) into the tree. The lazy
+# scanner (serve/protocol.rs fast_scan) scans every byte in place,
+# pays a constant dispatch cost per field, and materializes exactly
+# one string: the request id. The constants weigh an allocation/copy
+# against a byte scan; bench_protocol.rs recomputes this same model
+# inline and cross-checks it against measured wall clock (warn-only —
+# wall clock is machine-dependent, the committed artifact is not).
+PROTO_SCAN_PER_BYTE = 1
+PROTO_TREE_NODE = 60
+PROTO_TREE_KEY = 40
+PROTO_STRING_COPY_PER_BYTE = 2
+PROTO_LAZY_FIELD = 6
+
+# Canonical request lines — keep byte-identical to the constants in
+# benches/bench_protocol.rs.
+PROTO_V2_LINE = (
+    '{"id":"req-000123","spec":{"seed":123456789,"steps":28,'
+    '"height":256,"width":256,"quality":"standard",'
+    '"priority":"normal","deadline_s":2.5}}'
+)
+PROTO_V1_LINE = '{"id":"req-000123","seed":123456789}'
+
+
+def proto_counts(line):
+    """(value nodes, object keys, copied string bytes) of the tree."""
+    nodes = keys = sbytes = 0
+
+    def walk(x):
+        nonlocal nodes, keys, sbytes
+        nodes += 1
+        if isinstance(x, dict):
+            for k, v in x.items():
+                keys += 1
+                sbytes += len(k.encode())
+                walk(v)
+        elif isinstance(x, list):
+            for v in x:
+                walk(v)
+        elif isinstance(x, str):
+            sbytes += len(x.encode())
+
+    walk(json.loads(line))
+    return nodes, keys, sbytes
+
+
+def proto_entry(line):
+    nodes, keys, sbytes = proto_counts(line)
+    id_bytes = len(json.loads(line)["id"].encode())
+    nbytes = len(line.encode())
+    full = (
+        nbytes * PROTO_SCAN_PER_BYTE
+        + nodes * PROTO_TREE_NODE
+        + keys * PROTO_TREE_KEY
+        + sbytes * PROTO_STRING_COPY_PER_BYTE
+    )
+    # The scanner visits each key once (keys == fields walked) and
+    # copies only the id.
+    lazy = (
+        nbytes * PROTO_SCAN_PER_BYTE
+        + keys * PROTO_LAZY_FIELD
+        + id_bytes * PROTO_STRING_COPY_PER_BYTE
+    )
+    return {
+        "line": line,
+        "bytes": nbytes,
+        "tree_nodes": nodes,
+        "tree_keys": keys,
+        "tree_string_bytes": sbytes,
+        "lazy_fields": keys,
+        "lazy_copied_bytes": id_bytes,
+        "full_cost_units": full,
+        "lazy_cost_units": lazy,
+        "speedup_lazy_vs_full": full / lazy,
+    }
+
+
+def protocol_bench():
+    return {
+        "bench": "protocol_lazy_parse",
+        "source": SOURCE,
+        "halo": "none (wire protocol only)",
+        "cost_model": {
+            "scan_per_byte": PROTO_SCAN_PER_BYTE,
+            "tree_node": PROTO_TREE_NODE,
+            "tree_key": PROTO_TREE_KEY,
+            "string_copy_per_byte": PROTO_STRING_COPY_PER_BYTE,
+            "lazy_field": PROTO_LAZY_FIELD,
+        },
+        "lines": {
+            "v2": proto_entry(PROTO_V2_LINE),
+            "v1": proto_entry(PROTO_V1_LINE),
+        },
+    }
+
 
 def halo_entry(sync, disp, mode="displaced:1"):
     return {
@@ -947,6 +1045,12 @@ def main():
         "points": deg_points,
     }
 
+    # --- BENCH_protocol: lazy vs full-tree wire parse cost model -----
+    protocol = protocol_bench()
+    assert (
+        protocol["lines"]["v2"]["speedup_lazy_vs_full"] >= 5.0
+    ), "lazy parse must model >= 5x over the full tree on the v2 line"
+
     for name, obj in [
         ("BENCH_serving.json", serving),
         ("BENCH_multires.json", multires),
@@ -955,6 +1059,7 @@ def main():
         ("BENCH_batching.json", batching),
         ("BENCH_federation.json", federation),
         ("BENCH_degradation.json", degradation),
+        ("BENCH_protocol.json", protocol),
     ]:
         path = os.path.join(out_dir, name)
         with open(path, "w") as f:
